@@ -1,0 +1,160 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! 1. DSE — explore an accelerator for the tiny-VGG model (the same
+//!    network `python/compile/model.py` exports) on an embedded board,
+//!    picking the split point and batch size.
+//! 2. Runtime — load the AOT artifacts (Pallas kernels → jax → HLO text)
+//!    through PJRT; verify the staged chain matches the whole-model
+//!    reference executable numerically.
+//! 3. Serving — run the coordinator with the explored batch size over a
+//!    stream of requests from concurrent clients; report latency and
+//!    throughput, plus the simulator's board-level estimate of the same
+//!    configuration.
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+use dnnexplorer::dnn::graph::NetworkBuilder;
+use dnnexplorer::dnn::{Network, Precision, TensorShape};
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::dse::{engine, ExplorerConfig};
+use dnnexplorer::fpga::FpgaDevice;
+use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
+use dnnexplorer::runtime::{ArtifactStore, Engine};
+use dnnexplorer::sim::{simulate_pipeline, trace::Trace, DramModel};
+
+/// The tiny-VGG of `python/compile/model.py`, as an IR Network (must be
+/// kept in sync with CONV_CFG there).
+fn tiny_vgg() -> Network {
+    NetworkBuilder::new("tiny-vgg", TensorShape::new(3, 32, 32), Precision::Int16)
+        .conv(16, 3, 1, 1)
+        .conv(16, 3, 1, 1)
+        .pool(2, 2)
+        .conv(32, 3, 1, 1)
+        .pool(2, 2)
+        .conv(64, 3, 1, 1)
+        .pool(2, 2)
+        .fc(10)
+        .build()
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---------- 1. DSE ----------
+    let net = tiny_vgg();
+    let device = FpgaDevice::zc706();
+    let cfg = ExplorerConfig {
+        fixed_batch: None, // let the DSE pick the batch (Table 4 mode)
+        pso: PsoParams { population: 16, iterations: 12, ..Default::default() },
+        ..ExplorerConfig::new(device.clone())
+    };
+    let res = engine::explore(&net, &cfg).expect("feasible design");
+    let best = &res.best;
+    println!("== 1. DSE ({} on {}) ==", net.name, device.name);
+    println!("best RAV: {}  ->  {:.1} GOP/s, {:.0} img/s (analytical)", best.rav, best.gops, best.throughput_fps);
+
+    // Board-level (simulated) check of the pipeline part.
+    if let Some(p) = &best.pipeline {
+        let layers: Vec<_> = net.layers.iter().filter(|l| l.is_compute()).collect();
+        let dram = DramModel::new(
+            device.bandwidth_gbps * best.rav.bw_frac,
+            device.freq_mhz,
+        );
+        let sim = simulate_pipeline(
+            &layers[..best.rav.sp.min(p.config.stages.len())],
+            &p.config,
+            &dram,
+            &mut Trace::disabled(),
+        )?;
+        println!(
+            "pipeline part simulated: {:.0} fps (analytical {:.0} fps)",
+            sim.fps, p.estimate.throughput_fps
+        );
+    }
+
+    // ---------- 2. Runtime: load + verify the AOT chain ----------
+    println!("\n== 2. PJRT runtime ==");
+    let dir = std::env::var("DNNEXPLORER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let store = ArtifactStore::open(&dir)?;
+    let engine_px = Engine::cpu()?;
+    println!("PJRT platform: {}", engine_px.platform());
+    let chain = ChainExecutor::load(&engine_px, &store)?;
+    let reference = engine_px.load_entry(&store, store.unique("reference_model")?)?;
+    println!(
+        "loaded {}: {} stages (split point {}), input {:?}",
+        store.manifest.network,
+        chain.stage_count(),
+        store.manifest.split_point,
+        chain.input_shape()
+    );
+    let mut frame = HostTensor::zeros(chain.input_shape());
+    for (j, v) in frame.data.iter_mut().enumerate() {
+        *v = ((j * 2654435761) % 1000) as f32 / 1000.0 - 0.5;
+    }
+    let staged = chain.run_frame(&frame)?;
+    let whole = &reference.run(std::slice::from_ref(&frame))?[0];
+    let max_err = staged
+        .data
+        .iter()
+        .zip(&whole.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("staged chain vs reference model: max |err| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "chain does not reproduce the reference");
+
+    // ---------- 3. Serving ----------
+    println!("\n== 3. Serving (batch = {} from the RAV) ==", best.rav.batch);
+    let batch = best.rav.batch.max(1);
+    let input_shape = chain.input_shape().to_vec();
+    drop(chain);
+    drop(reference);
+    let server = AcceleratorServer::spawn(
+        move || {
+            let engine = Engine::cpu()?;
+            ChainExecutor::load(&engine, &store)
+        },
+        BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
+    )?;
+    let requests = 256usize;
+    let t = Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..requests {
+        let h = server.handle();
+        let shape = input_shape.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut f = HostTensor::zeros(&shape);
+            for (j, v) in f.data.iter_mut().enumerate() {
+                *v = ((i * 131 + j * 7) % 255) as f32 / 255.0;
+            }
+            h.infer(f).is_ok()
+        }));
+    }
+    let ok = clients
+        .into_iter()
+        .map(|c| c.join().unwrap_or(false))
+        .filter(|x| *x)
+        .count();
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{requests} ok in {dt:.2}s = {:.1} req/s",
+        requests as f64 / dt
+    );
+    println!("metrics: {}", server.metrics.summary());
+    anyhow::ensure!(ok == requests, "some requests failed");
+    anyhow::ensure!(
+        server.metrics.errors.load(Ordering::Relaxed) == 0,
+        "executor errors"
+    );
+    server.shutdown();
+    println!("\nE2E OK: DSE -> artifacts -> PJRT chain -> batched serving");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Reproduce the paper's Table 3 row-by-row: DNNExplorer accelerators for
+//! VGG16 at all 12 input resolutions on KU115, batch = 1, plus the
+//! Table 4 batch-free extension for the first 4 cases.
+//!
+//! ```sh
+//! cargo run --release --example explore_vgg16          # quick search
+//! DNNEXPLORER_BENCH_FULL=1 cargo run --release --example explore_vgg16
+//! ```
+
+use dnnexplorer::report::{tables, Effort};
+use dnnexplorer::util::bench::full_mode;
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", tables::table3_full_results(effort).render());
+    println!("{}", tables::table4_batch_exploration(effort).render());
+    println!("(paper reference: Table 3 / Table 4 — see EXPERIMENTS.md for the comparison)");
+}

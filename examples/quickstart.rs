@@ -1,0 +1,67 @@
+//! Quickstart: explore an accelerator for VGG16 on a KU115 in ~a second,
+//! then inspect what the DSE chose.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dnnexplorer::dnn::{analysis, zoo, Precision, TensorShape};
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::dse::{engine, ExplorerConfig};
+use dnnexplorer::fpga::FpgaDevice;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a network and a board from the zoo / device catalogue.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let device = FpgaDevice::ku115();
+    println!(
+        "network: {} — {:.1} GOP, {} weights",
+        net.name,
+        net.total_gop(),
+        net.total_weights()
+    );
+
+    // 2. Model analysis (the paper's step 1): layer-wise CTC profile.
+    let dist = analysis::ctc_distribution(&net).expect("conv layers present");
+    println!(
+        "CTC distribution: min {:.0} / median {:.0} / max {:.0}",
+        dist.min, dist.median, dist.max
+    );
+    let hs = analysis::half_split_variance(&net);
+    println!("CTC variance first/second half: {:.1}x (paper Table 1)", hs.ratio());
+
+    // 3. Two-level DSE (steps 2-3): PSO over the RAV + local optimizers.
+    let cfg = ExplorerConfig {
+        pso: PsoParams { population: 16, iterations: 15, ..Default::default() },
+        ..ExplorerConfig::new(device)
+    };
+    let res = engine::explore(&net, &cfg).expect("feasible design");
+    let b = &res.best;
+    println!("\nbest RAV   : {}   (SP = split point, then DSP/BRAM/BW %)", b.rav);
+    println!("throughput : {:.1} GOP/s ({:.1} img/s)", b.gops, b.throughput_fps);
+    println!(
+        "resources  : {:.0} DSP ({:.1}% efficient), {:.0} BRAM18K",
+        b.dsp_used,
+        b.dsp_efficiency * 100.0,
+        b.bram_used
+    );
+    println!(
+        "search     : {} iterations, {} evaluations, {:.2}s",
+        res.stats.iterations, res.stats.evaluations, res.stats.elapsed_s
+    );
+
+    // 4. What the two structures look like.
+    if let Some(p) = &b.pipeline {
+        println!("\npipeline structure ({} stages):", p.config.stages.len());
+        for (i, s) in p.config.stages.iter().enumerate() {
+            println!("  stage {i}: CPF {} x KPF {}", s.cpf, s.kpf);
+        }
+    }
+    if let Some(g) = &b.generic {
+        println!(
+            "generic structure: {}x{} MAC array, strategy {:?}",
+            g.config.cpf, g.config.kpf, g.config.strategy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""AOT compile path: lower every accelerator stage of the tiny-VGG model
+(plus a whole-model reference) to HLO **text** and write the artifact
+manifest the rust runtime consumes.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the baked-in stage
+    weights are large f32 literals, and the default printer elides them
+    as ``constant({...})`` — which the rust-side text parser would turn
+    into zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_stage(i, weights):
+    fn = model.stage_fn(i, weights)
+    spec = jax.ShapeDtypeStruct(model.stage_input_shape(i), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_reference(weights):
+    def fn(x):
+        return (model.reference(x, weights),)
+
+    spec = jax.ShapeDtypeStruct(model.INPUT_SHAPE, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def shape_str(shape):
+    return "x".join(str(d) for d in shape)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--seed", type=int, default=0, help="synthetic weight seed")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    weights = model.init_weights(args.seed)
+    lines = [
+        f"network tiny-vgg-{shape_str(model.INPUT_SHAPE[1:])}",
+        f"split_point {model.SPLIT_POINT}",
+    ]
+
+    for i in range(model.num_stages()):
+        text = lower_stage(i, weights)
+        fname = f"stage{i}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        lines.append(
+            "entry file={} role={} index={} in={} out={}".format(
+                fname,
+                model.stage_role(i),
+                i,
+                shape_str(model.stage_input_shape(i)),
+                shape_str(model.stage_output_shape(i)),
+            )
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    ref_text = lower_reference(weights)
+    with open(os.path.join(args.out, "reference.hlo.txt"), "w") as f:
+        f.write(ref_text)
+    lines.append(
+        "entry file=reference.hlo.txt role=reference_model in={} out=1x{}".format(
+            shape_str(model.INPUT_SHAPE), model.NUM_CLASSES
+        )
+    )
+    print(f"wrote reference.hlo.txt ({len(ref_text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote manifest.txt ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

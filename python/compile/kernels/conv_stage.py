@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: one dedicated pipeline stage (paper §5.2).
+
+The FPGA pipeline stage computes a CONV layer with a ``(CPF_i, KPF_i)``
+unroll fed by a *column buffer*: the stage starts as soon as the first
+``S+1`` input columns are ready and walks the frame column by column
+(DNNBuilder's fine-grained pipeline / column-based cache).
+
+On the TPU-shaped target the column walk becomes the Pallas **grid over
+output-column strips**: grid step ``j`` reads the input column window
+``[j*bw .. j*bw + bw + S - 1]`` from HBM into VMEM (the column buffer)
+and produces one output strip. The weight tensor is small per stage and
+stays fully resident (the stage's weight buffer).
+
+``interpret=True`` — see ``mac_array.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stage_kernel(x_ref, w_ref, o_ref, *, stride):
+    """Compute one output-column strip.
+
+    ``x_ref``: (1, C, H_pad, bw_in) input column window (already padded).
+    ``w_ref``: (K, C, R, S) stage weights (fully resident).
+    ``o_ref``: (K, H_out, bw) output strip.
+    """
+    x = x_ref[...][0].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    k_out, c, r, s = w.shape
+    h_out = o_ref.shape[1]
+    bw = o_ref.shape[2]
+
+    # Unrolled kernel window: the (CPF x KPF) MAC array evaluates the
+    # C-depth dot product for every (dy, dx) tap; taps accumulate.
+    acc = jnp.zeros((k_out, h_out, bw), jnp.float32)
+    for dy in range(r):
+        for dx in range(s):
+            # strided spatial slice of the column window
+            xs = x[:, dy : dy + stride * h_out : stride, dx : dx + stride * bw : stride]
+            # (K, C) x (C, h*bw) GEMM — the per-tap MAC-array step
+            acc = acc + jnp.einsum("kc,chw->khw", w[:, :, dy, dx], xs)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_w"))
+def conv2d(x, w, stride=1, padding=1, block_w=8):
+    """Column-streamed CONV of one pipeline stage.
+
+    ``x``: (1, C, H, W) activations; ``w``: (K, C, R, S) weights.
+    ``block_w`` output columns are produced per grid step (the column
+    buffer depth). Matches ``ref.conv2d``.
+    """
+    n, c, h, wdt = x.shape
+    assert n == 1, "pipeline stages process one frame at a time"
+    k_out, c2, r, s = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    h_out = (h + 2 * padding - r) // stride + 1
+    w_out = (wdt + 2 * padding - s) // stride + 1
+
+    # Pad spatially; pad width further so w_out divides into strips.
+    strips = -(-w_out // block_w)
+    w_pad_extra = strips * block_w - w_out
+    xp = jnp.pad(
+        x[0],
+        (
+            (0, 0),
+            (padding, padding),
+            (padding, padding + w_pad_extra * stride),
+        ),
+    )  # (C, H_pad, W_pad)
+
+    # Input window per strip: block_w output columns need
+    # (block_w-1)*stride + s input columns.
+    bw_in = (block_w - 1) * stride + s
+
+    # Overlapping windows are awkward with pure BlockSpecs (block indices
+    # are multiples of the block size); stage the windows explicitly —
+    # still one HBM->VMEM copy per strip, which *is* the column-buffer
+    # refill of the FPGA design.
+    windows = jnp.stack(
+        [
+            jax.lax.dynamic_slice(
+                xp,
+                (0, 0, j * block_w * stride),
+                (c, xp.shape[1], bw_in),
+            )
+            for j in range(strips)
+        ]
+    )  # (strips, C, H_pad, bw_in)
+
+    out = pl.pallas_call(
+        functools.partial(_stage_kernel, stride=stride),
+        grid=(strips,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, c, xp.shape[1], bw_in), lambda j: (j, 0, 0, 0)
+            ),
+            pl.BlockSpec((k_out, c, r, s), lambda j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_out, h_out, block_w), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((k_out, h_out, strips * block_w), jnp.float32),
+        interpret=True,
+    )(windows, w)
+    return out[None, :, :, :w_out]

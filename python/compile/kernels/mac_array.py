@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: the generic structure's reusable MAC array.
+
+Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+generic structure is a ``CPF_g x KPF_g`` grid of FPGA DSP MACs computing
+one GEMV per cycle, fed by BRAM ping-pong buffers. On a TPU-shaped target
+the same insight — keep a weight tile stationary in fast memory and
+stream activation vectors through it — maps to a *blocked GEMM* feeding
+the MXU:
+
+* the ``(CPF, KPF)`` unroll becomes the Pallas block shape ``(bk, bn)``;
+* the feature-map / weight / accumulation BRAM buffers become VMEM blocks
+  scheduled by ``BlockSpec`` index maps (HBM<->VMEM in place of
+  DDR<->BRAM);
+* the accumulation buffer's ping-pong is the f32 VMEM accumulator that
+  persists across the ``k`` grid dimension.
+
+CONV is expressed as im2col + GEMM — exactly the generic structure's
+"one GEMV per output pixel" dataflow (paper §5.3.1).
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom calls; real-TPU performance is *estimated* in EXPERIMENTS.md §Perf
+from the block shapes' VMEM footprint and MXU occupancy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shapes: 128 matches the MXU systolic dimension; the
+# (bm, bk, bn) = (128, 128, 128) f32 working set is
+# 3 * 128*128*4 B = 192 KiB of VMEM, comfortably inside a TPU core's
+# ~16 MiB budget and leaving room for double buffering.
+BLOCK_M = 128
+BLOCK_K = 128
+BLOCK_N = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn, k) grid step: accumulate a_ref @ b_ref into o_ref.
+
+    The f32 output block doubles as the paper's accumulation buffer
+    (§5.3.1): it is zeroed on the first k step and accumulated in place
+    across the k grid dimension (the block index map pins the same
+    output tile for every k, so the tile stays resident in VMEM — the
+    ping-pong accumulation BRAM of the FPGA design).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(x, m0, m1):
+    """Zero-pad a 2-d array up to multiples of (m0, m1)."""
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def gemm(a, b, *, bm=BLOCK_M, bk=BLOCK_K, bn=BLOCK_N):
+    """Blocked GEMM ``a @ b`` via the Pallas MAC-array kernel.
+
+    Arbitrary (M, K) x (K, N) f32 inputs; internally padded to block
+    multiples (the generic structure's G_fm/G_w group padding).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    ap = _pad_to(a.astype(jnp.float32), bm, bk)
+    bp = _pad_to(b.astype(jnp.float32), bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def conv2d(x, w, stride=1, padding=1, *, bm=BLOCK_M, bk=BLOCK_K, bn=BLOCK_N):
+    """CONV on the generic structure: im2col + MAC-array GEMM.
+
+    ``x``: NCHW activations, ``w``: KCRS weights. Matches ``ref.conv2d``.
+    """
+    n, _, _, _ = x.shape
+    k_out, c, r, s = w.shape
+    cols, (h_out, w_out) = ref.im2col(x, r, stride, padding)
+    wmat = w.reshape(k_out, c * r * s).T  # (CRS, K)
+    outs = []
+    for i in range(n):
+        outs.append(gemm(cols[i], wmat, bm=bm, bk=bk, bn=bn))
+    out = jnp.stack(outs)  # (N, HW, K)
+    out = jnp.transpose(out, (0, 2, 1)).reshape(n, k_out, h_out, w_out)
+    return out

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: 2x2/s2 max pooling — the functional sub-module of
+the generic structure (paper §5.3: "a functional sub-module for
+activation and pooling operations").
+
+Grid over channels: each step reduces one channel plane in VMEM. On the
+FPGA this unit sits behind the accumulation buffer; here it consumes the
+CONV output block before it returns to HBM.
+
+``interpret=True`` — see ``mac_array.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...][0]  # (H, W)
+    h2 = o_ref.shape[1]
+    w2 = o_ref.shape[2]
+    x = x[: 2 * h2, : 2 * w2]
+    x = x.reshape(h2, 2, w2, 2)
+    o_ref[...] = jnp.max(x, axis=(1, 3))[None]
+
+
+@jax.jit
+def maxpool2(x):
+    """2x2/s2 max pool over NCHW (batch 1)."""
+    n, c, h, w = x.shape
+    assert n == 1, "pooling unit processes one frame at a time"
+    h2, w2 = h // 2, w // 2
+    out = pl.pallas_call(
+        _pool_kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, h2, w2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h2, w2), jnp.float32),
+        interpret=True,
+    )(x[0].astype(jnp.float32))
+    return out[None]

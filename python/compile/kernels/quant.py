@@ -1,0 +1,44 @@
+"""Fixed-point quantization utilities — the accelerator's datapath model.
+
+The paper evaluates 16-bit and 8-bit fixed-point accelerators (Eq. 1's
+α). This module models that datapath in jax: symmetric per-tensor
+quantization to a `bits`-wide integer grid, used to (a) validate that the
+tiny-VGG survives the accelerator's precision and (b) give the L2 model
+an int8 export mode whose numerics the rust side can check.
+
+The quantized values are *represented* in f32 (exact for |q| < 2^24), so
+the same Pallas kernels execute the quantized network unchanged — just
+like the FPGA's DSPs execute the same MACs on narrower operands.
+"""
+
+import jax.numpy as jnp
+
+
+def scale_for(x, bits):
+    """Symmetric per-tensor scale: max|x| mapped to the top code."""
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, amax / qmax, 1.0)
+
+
+def quantize(x, bits):
+    """Quantize to the integer grid; returns (codes, scale).
+
+    Codes are integers stored in f32: `x ≈ codes * scale`.
+    """
+    s = scale_for(x, bits)
+    qmax = float(2 ** (bits - 1) - 1)
+    codes = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
+    return codes, s
+
+
+def fake_quant(x, bits):
+    """Quantize-dequantize: the value the accelerator actually computes
+    with."""
+    codes, s = quantize(x, bits)
+    return codes * s
+
+
+def quantize_weights(weights, bits):
+    """Fake-quantize every tensor of a weight list (per-tensor scales)."""
+    return [fake_quant(w, bits) for w in weights]

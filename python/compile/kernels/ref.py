@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracle for the Pallas kernels and the L2 model.
+
+Everything here is straight-line jax.numpy — no Pallas, no custom calls —
+so it runs anywhere and serves as the correctness ground truth for:
+
+* ``mac_array.gemm``      vs ``ref.matmul``
+* ``mac_array.conv2d``    vs ``ref.conv2d``
+* ``conv_stage.conv2d``   vs ``ref.conv2d``
+* the staged tiny-VGG     vs ``ref`` forward composition
+
+Layout conventions: activations are NCHW, weights are KCRS (out-channels,
+in-channels, kernel-h, kernel-w) — matching the rust coordinator's
+``HostTensor`` row-major buffers.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(a, b):
+    """Plain f32 matrix multiply (the MAC-array GEMV/GEMM oracle)."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d(x, w, stride=1, padding=1):
+    """NCHW x KCRS convolution with symmetric spatial padding."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x):
+    """2x2/s2 max pooling over NCHW."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    """NCHW -> NC global average pool."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def dense(x, w):
+    """NC x CK fully-connected layer."""
+    return matmul(x, w)
+
+
+def im2col(x, kernel, stride=1, padding=1):
+    """Unfold NCHW input into (N, H_out*W_out, C*R*S) patches.
+
+    This is the layout the generic structure's MAC array consumes: each
+    output pixel becomes one GEMV against the (C*R*S, K) weight matrix.
+    """
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    h_out = (h + 2 * padding - kernel) // stride + 1
+    w_out = (w + 2 * padding - kernel) // stride + 1
+    patches = lax.conv_general_dilated_patches(
+        xp,
+        filter_shape=(kernel, kernel),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*R*S, H_out, W_out)
+    patches = patches.reshape(n, c * kernel * kernel, h_out * w_out)
+    return jnp.transpose(patches, (0, 2, 1)), (h_out, w_out)
+
+
+def conv2d_via_im2col(x, w, stride=1, padding=1):
+    """Reference conv built from im2col + matmul (the generic-structure
+    dataflow, expressed with the oracle's own pieces)."""
+    k_out, c, r, s = w.shape
+    cols, (h_out, w_out) = im2col(x, r, stride, padding)
+    wmat = w.reshape(k_out, c * r * s).T  # (C*R*S, K)
+    out = jnp.einsum("npq,qk->npk", cols, wmat)
+    out = jnp.transpose(out, (0, 2, 1)).reshape(x.shape[0], k_out, h_out, w_out)
+    return out

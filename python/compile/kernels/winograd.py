@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: Winograd F(2x2, 3x3) convolution — the HybridDNN
+baseline's fast-CONV mode (paper [2]), used by the ablation comparing
+spatial vs Winograd PEs.
+
+F(2x2, 3x3) computes each 2x2 output tile from a 4x4 input tile with 16
+multiplies instead of 36 (the 2.25x reduction modeled by
+``rust/src/baselines/hybriddnn.rs``). The transform matrices:
+
+    B^T = [[1, 0, -1, 0], [0, 1, 1, 0], [0, -1, 1, 0], [0, 1, 0, -1]]
+    G   = [[1, 0, 0], [.5, .5, .5], [.5, -.5, .5], [0, 0, 1]]
+    A^T = [[1, 1, 1, 0], [0, 1, -1, -1]]
+
+The Pallas kernel performs the element-wise multiply + channel reduction
+(the EWMM core that maps to the MXU as 16 batched GEMMs); the small
+B/G/A transforms stay in jnp (on the FPGA they are the LUT/DSP transform
+units around the array — see WINOGRAD_ARRAY_FRACTION).
+
+``interpret=True`` — see ``mac_array.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = jnp.array(
+    [[1.0, 0.0, -1.0, 0.0], [0.0, 1.0, 1.0, 0.0], [0.0, -1.0, 1.0, 0.0], [0.0, 1.0, 0.0, -1.0]],
+    jnp.float32,
+)
+G = jnp.array(
+    [[1.0, 0.0, 0.0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0.0, 0.0, 1.0]], jnp.float32
+)
+AT = jnp.array([[1.0, 1.0, 1.0, 0.0], [0.0, 1.0, -1.0, -1.0]], jnp.float32)
+
+
+def _ewmm_kernel(u_ref, v_ref, m_ref):
+    """Element-wise multiply matrix: for each of the 16 (xi, nu) tap
+    positions, contract over input channels C.
+
+    u_ref: (16, K, C) transformed weights; v_ref: (16, C, T) transformed
+    input tiles; m_ref: (16, K, T).
+    """
+    u = u_ref[...]
+    v = v_ref[...]
+    m_ref[...] = jnp.einsum("pkc,pct->pkt", u, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv2d_3x3(x, w):
+    """Winograd F(2x2,3x3) CONV, stride 1, padding 1.
+
+    ``x``: (1, C, H, W); ``w``: (K, C, 3, 3). H and W may be odd — the
+    output is computed on the ceil-to-even grid and cropped (the tile
+    quantization HybridDNN pays on odd feature maps).
+    """
+    n, c, h, wd = x.shape
+    assert n == 1
+    k_out = w.shape[0]
+    h_out, w_out = h, wd  # stride 1, pad 1
+    th, tw = -(-h_out // 2), -(-w_out // 2)  # 2x2 output tiles
+
+    # Pad input so every 4x4 tile (stride 2) is in range: need
+    # 2*th + 2 rows of padded input starting at -1.
+    xp = jnp.pad(x[0], ((0, 0), (1, 2 * th + 3 - h - 1), (1, 2 * tw + 3 - wd - 1)))
+
+    # Gather 4x4 input tiles at stride 2: (C, th, tw, 4, 4).
+    tiles = jnp.stack(
+        [
+            jnp.stack(
+                [xp[:, 2 * i : 2 * i + 4, 2 * j : 2 * j + 4] for j in range(tw)],
+                axis=1,
+            )
+            for i in range(th)
+        ],
+        axis=1,
+    )  # (C, th, tw, 4, 4)
+
+    # Input transform: V = B^T d B per tile.
+    v = jnp.einsum("ab,ctubd,de->ctuae", BT, tiles, BT.T)  # (C, th, tw, 4, 4)
+    v = v.transpose(3, 4, 0, 1, 2).reshape(16, c, th * tw)
+
+    # Weight transform: U = G g G^T.
+    u = jnp.einsum("ab,kcbd,de->kcae", G, w, G.T)  # (K, C, 4, 4)
+    u = u.transpose(2, 3, 0, 1).reshape(16, k_out, c)
+
+    # EWMM on the Pallas MAC array.
+    m = pl.pallas_call(
+        _ewmm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(u.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(v.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((16, k_out, th * tw), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, k_out, th * tw), jnp.float32),
+        interpret=True,
+    )(u, v)
+
+    # Output transform: Y = A^T m A per tile.
+    m = m.reshape(4, 4, k_out, th, tw)
+    y = jnp.einsum("ab,bdktu,de->ktuae", AT, m, AT.T)  # (K, th, tw, 2, 2)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(k_out, 2 * th, 2 * tw)
+    return y[None, :, :h_out, :w_out]

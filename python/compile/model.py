@@ -1,0 +1,133 @@
+"""L2: the tiny-VGG network served by the end-to-end example, expressed
+as the paper's accelerator would execute it.
+
+The network (3x32x32 CIFAR-scale input, 10 classes):
+
+  stage 0:  conv3x3(16) + relu                 — pipeline stage (L1 conv_stage)
+  stage 1:  conv3x3(16) + relu + maxpool2      — pipeline stage
+  layer 2:  conv3x3(32) + relu + maxpool2      — generic structure (L1 mac_array)
+  layer 3:  conv3x3(64) + relu + maxpool2      — generic structure
+  layer 4:  GAP + dense(10)                    — generic structure (GEMV)
+
+The split point (SP = 2) mirrors the paper's paradigm: the first,
+CTC-volatile high-resolution layers get dedicated stages; the rest run on
+the reusable MAC array. Weights are synthetic (seeded) — see DESIGN.md's
+substitution table.
+
+Each ``stage_fn(i)`` closure takes only the activation tensor (weights are
+baked in), which is exactly what ``aot.py`` lowers per stage and what the
+rust ``ChainExecutor`` chains at serving time. ``reference(x)`` is the
+whole-model oracle used to verify the chain composes correctly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import conv_stage, mac_array, ref
+
+SPLIT_POINT = 2
+INPUT_SHAPE = (1, 3, 32, 32)
+NUM_CLASSES = 10
+
+# (out_c, kernel, stride, pad, pool_after)
+CONV_CFG = [
+    (16, 3, 1, 1, False),
+    (16, 3, 1, 1, True),
+    (32, 3, 1, 1, True),
+    (64, 3, 1, 1, True),
+]
+
+
+def init_weights(seed=0):
+    """Synthetic trained parameters (seeded, He-scaled)."""
+    rng = np.random.default_rng(seed)
+    weights = []
+    c_in = INPUT_SHAPE[1]
+    for out_c, k, _, _, _ in CONV_CFG:
+        fan_in = c_in * k * k
+        w = rng.standard_normal((out_c, c_in, k, k)).astype(np.float32)
+        weights.append(jnp.array(w * np.sqrt(2.0 / fan_in)))
+        c_in = out_c
+    wd = rng.standard_normal((c_in, NUM_CLASSES)).astype(np.float32)
+    weights.append(jnp.array(wd * np.sqrt(2.0 / c_in)))
+    return weights
+
+
+def _apply_conv(i, x, w, conv_fn):
+    out_c, k, stride, pad, pool = CONV_CFG[i]
+    y = conv_fn(x, w, stride=stride, padding=pad)
+    y = ref.relu(y)
+    if pool:
+        y = ref.maxpool2(y)
+    return y
+
+
+def stage_fn(i, weights):
+    """The i-th accelerator stage as a single-activation-input closure.
+
+    Stages ``0 .. SPLIT_POINT-1`` use the column-streamed pipeline kernel;
+    the rest use the MAC-array (im2col GEMM) kernel; the final stage is
+    the GAP + dense head on the MAC array's GEMV path.
+    """
+    n_conv = len(CONV_CFG)
+    if i < n_conv:
+        conv_fn = conv_stage.conv2d if i < SPLIT_POINT else mac_array.conv2d
+        w = weights[i]
+
+        def fn(x):
+            return (_apply_conv(i, x, w, conv_fn),)
+
+        return fn
+    if i == n_conv:
+        wd = weights[n_conv]
+
+        def head(x):
+            pooled = ref.global_avg_pool(x)  # (1, C)
+            return (mac_array.gemm(pooled, wd, bm=8, bk=64, bn=16),)
+
+        return head
+    raise IndexError(i)
+
+
+def num_stages():
+    return len(CONV_CFG) + 1
+
+
+def stage_role(i):
+    """Manifest role of stage i."""
+    return "pipeline_stage" if i < SPLIT_POINT else "generic_layer"
+
+
+def staged_forward(x, weights):
+    """Run all stages in sequence (what the rust ChainExecutor does)."""
+    cur = x
+    for i in range(num_stages()):
+        (cur,) = stage_fn(i, weights)(cur)
+    return cur
+
+
+def reference(x, weights):
+    """Whole-model oracle on pure-jnp ops (no Pallas)."""
+    cur = x
+    for i in range(len(CONV_CFG)):
+        cur = _apply_conv(i, cur, weights[i], ref.conv2d)
+    pooled = ref.global_avg_pool(cur)
+    return ref.dense(pooled, weights[len(CONV_CFG)])
+
+
+def stage_input_shape(i):
+    """Activation shape entering stage i (batch 1)."""
+    shape = list(INPUT_SHAPE)
+    for j in range(min(i, len(CONV_CFG))):
+        out_c, _, _, _, pool = CONV_CFG[j]
+        shape[1] = out_c
+        if pool:
+            shape[2] //= 2
+            shape[3] //= 2
+    return tuple(shape)
+
+
+def stage_output_shape(i):
+    if i < len(CONV_CFG):
+        return stage_input_shape(i + 1)
+    return (1, NUM_CLASSES)

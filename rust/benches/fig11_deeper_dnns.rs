@@ -1,0 +1,23 @@
+//! Bench + regeneration for paper Fig. 11: throughput on deeper VGG-like
+//! networks (13/18/28/38 CONV layers), DNNExplorer vs the baselines.
+
+use dnnexplorer::report::{figures, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    let t = figures::fig11_deeper_dnns(effort);
+    println!("{}", t.render());
+    if let (Some(first), Some(last)) = (t.rows.first(), t.rows.last()) {
+        let ours: f64 = last[1].parse().unwrap_or(0.0);
+        let pipe: f64 = last[2].parse().unwrap_or(1.0);
+        println!(
+            "38-layer: DNNExplorer/DNNBuilder = {:.1}x (paper: 4.2x); 13-layer row: {:?}\n",
+            ours / pipe.max(1e-9),
+            first
+        );
+    }
+    bench("fig11_deeper_dnns(quick)", 0, 3, || {
+        figures::fig11_deeper_dnns(Effort::Quick)
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration for paper Fig. 1: CTC distribution of VGG16 over
+//! the 12 input-resolution cases.
+
+use dnnexplorer::report::figures;
+use dnnexplorer::util::bench::bench;
+
+fn main() {
+    let table = figures::fig1_ctc_distribution();
+    println!("{}", table.render());
+    bench("fig1_ctc_distribution", 2, 20, figures::fig1_ctc_distribution);
+}

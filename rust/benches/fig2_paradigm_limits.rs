@@ -1,0 +1,17 @@
+//! Bench + regeneration for paper Fig. 2: (a) DSP-efficiency trend of the
+//! existing paradigms over input size; (b) normalized throughput vs depth.
+
+use dnnexplorer::report::{figures, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", figures::fig2a_efficiency_trend(effort).render());
+    println!("{}", figures::fig2b_depth_scaling(effort).render());
+    bench("fig2a_efficiency_trend", 1, 5, || {
+        figures::fig2a_efficiency_trend(Effort::Quick)
+    });
+    bench("fig2b_depth_scaling", 1, 5, || {
+        figures::fig2b_depth_scaling(Effort::Quick)
+    });
+}

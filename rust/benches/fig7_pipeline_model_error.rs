@@ -1,0 +1,18 @@
+//! Bench + regeneration for paper Fig. 7: pipeline-model estimation error
+//! (analytical vs simulated board) on ZC706 and KU115.
+
+use dnnexplorer::report::figures;
+use dnnexplorer::util::bench::bench;
+
+fn main() {
+    let t = figures::fig7_pipeline_model_error();
+    println!("{}", t.render());
+    let avg: f64 = t
+        .rows
+        .iter()
+        .map(|r| r[5].parse::<f64>().unwrap_or(0.0))
+        .sum::<f64>()
+        / t.rows.len().max(1) as f64;
+    println!("average estimation error: {avg:.2}% (paper reports 1.15%)\n");
+    bench("fig7_pipeline_model_error", 1, 10, figures::fig7_pipeline_model_error);
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration for paper Fig. 8: generic-model estimation error
+//! over the CONV benchmark sweep on VU9P.
+
+use dnnexplorer::report::figures;
+use dnnexplorer::util::bench::bench;
+
+fn main() {
+    let t = figures::fig8_generic_model_error();
+    println!("{}", t.render());
+    let avg: f64 = t
+        .rows
+        .iter()
+        .map(|r| r[5].parse::<f64>().unwrap_or(0.0))
+        .sum::<f64>()
+        / t.rows.len().max(1) as f64;
+    println!("average estimation error: {avg:.2}% (paper reports 2.17%)\n");
+    bench("fig8_generic_model_error", 1, 10, figures::fig8_generic_model_error);
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration for paper Fig. 9: DSP efficiency of DNNExplorer
+//! vs DNNBuilder/HybridDNN (KU115) and the DPU (ZCU102), 12 cases.
+
+use dnnexplorer::report::{figures, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", figures::fig9_dsp_efficiency(effort).render());
+    bench("fig9_dsp_efficiency(quick)", 0, 3, || {
+        figures::fig9_dsp_efficiency(Effort::Quick)
+    });
+}

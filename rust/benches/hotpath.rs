@@ -1,0 +1,101 @@
+//! Hot-path microbenchmarks: the kernels the §Perf pass optimizes.
+//!
+//! * analytical-model evaluation (the PSO fitness inner loop),
+//! * one full PSO fitness (local optimizers + assembly),
+//! * simulator throughput (cycles modeled per second of wall clock),
+//! * PJRT end-to-end frame execution (when artifacts exist),
+//! * serving round-trip through the batcher.
+
+use std::time::Duration;
+
+use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+use dnnexplorer::dnn::{zoo, Layer, Precision, TensorShape};
+use dnnexplorer::dse::rav::Rav;
+use dnnexplorer::dse::{engine, local_pipeline, ExplorerConfig};
+use dnnexplorer::fpga::{FpgaDevice, ResourceBudget};
+use dnnexplorer::perfmodel::generic::{BufferStrategy, GenericConfig};
+use dnnexplorer::perfmodel::{generic, pipeline};
+use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
+use dnnexplorer::runtime::{ArtifactStore, Engine};
+use dnnexplorer::sim::{simulate_generic, simulate_pipeline, trace::Trace, DramModel};
+use dnnexplorer::util::bench::{bench, black_box};
+
+fn main() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    let device = FpgaDevice::ku115();
+    let budget = ResourceBudget::fraction_of(&device, 0.6, 0.6, 0.6);
+
+    // --- analytical models ---
+    let plan = local_pipeline::optimize(&layers[..8], &budget, 1, 200.0, Precision::Int16, Precision::Int16)
+        .expect("plan");
+    bench("pipeline_estimate(8 stages)", 100, 2000, || {
+        pipeline::estimate(&layers[..8], &plan.config, 11.5).unwrap()
+    });
+    let gcfg = GenericConfig::with_budget(
+        32,
+        64,
+        Precision::Int16,
+        Precision::Int16,
+        BufferStrategy::FmAccumInBram,
+        200.0,
+        1500.0,
+    );
+    bench("generic_estimate(13 layers)", 100, 2000, || {
+        generic::estimate(&layers, &gcfg, 19.2, 1)
+    });
+
+    // --- DSE fitness (the PSO inner loop) ---
+    let cfg = ExplorerConfig::new(device.clone());
+    let rav = Rav { sp: 6, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.6 };
+    bench("dse_fitness_evaluate(vgg16@224)", 10, 200, || {
+        engine::evaluate(&net, &cfg, rav)
+    });
+
+    // --- full exploration ---
+    bench("explore_full(vgg16@224, pop24 x it30)", 0, 3, || {
+        engine::explore(&net, &cfg)
+    });
+
+    // --- simulators ---
+    let dram = DramModel::new(19.2, 200.0);
+    bench("simulate_pipeline(8 stages)", 100, 2000, || {
+        simulate_pipeline(&layers[..8], &plan.config, &dram, &mut Trace::disabled()).unwrap()
+    });
+    bench("simulate_generic(13 layers)", 100, 2000, || {
+        simulate_generic(&layers, &gcfg, &dram, 1, &mut Trace::disabled()).unwrap()
+    });
+
+    // --- PJRT + serving (needs artifacts) ---
+    match ArtifactStore::open(std::path::Path::new("artifacts")) {
+        Ok(store) => {
+            let engine_px = Engine::cpu().expect("pjrt");
+            let chain = ChainExecutor::load(&engine_px, &store).expect("chain");
+            let mut frame = HostTensor::zeros(chain.input_shape());
+            for (j, v) in frame.data.iter_mut().enumerate() {
+                *v = (j % 255) as f32 / 255.0;
+            }
+            bench("pjrt_chain_frame(tiny-vgg)", 3, 50, || {
+                black_box(chain.run_frame(&frame).unwrap())
+            });
+            drop(chain);
+
+            let store2 = store.clone();
+            let server = AcceleratorServer::spawn(
+                move || {
+                    let e = Engine::cpu()?;
+                    ChainExecutor::load(&e, &store2)
+                },
+                BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(1) },
+            )
+            .expect("server");
+            let shape = frame.shape.clone();
+            bench("serving_roundtrip(batch partial)", 3, 50, || {
+                let f = HostTensor::zeros(&shape);
+                server.infer(f).unwrap()
+            });
+            server.shutdown();
+        }
+        Err(e) => println!("skipping PJRT benches: {e}"),
+    }
+}

@@ -1,0 +1,10 @@
+//! Bench + regeneration for paper Table 1: half-split CTC variance ratio
+//! across the ten-network zoo.
+
+use dnnexplorer::report::tables;
+use dnnexplorer::util::bench::bench;
+
+fn main() {
+    println!("{}", tables::table1_variance_ratio().render());
+    bench("table1_variance_ratio", 2, 20, tables::table1_variance_ratio);
+}

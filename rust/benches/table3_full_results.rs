@@ -1,0 +1,13 @@
+//! Bench + regeneration for paper Table 3: full DNNExplorer results
+//! (batch = 1) across the 12 input cases, including search time.
+
+use dnnexplorer::report::{tables, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", tables::table3_full_results(effort).render());
+    bench("table3_one_case_search(quick)", 0, 3, || {
+        tables::explore_case(224, 224, Some(1), Effort::Quick)
+    });
+}

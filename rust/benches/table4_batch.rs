@@ -1,0 +1,13 @@
+//! Bench + regeneration for paper Table 4: batch-unrestricted exploration
+//! for the small-input cases.
+
+use dnnexplorer::report::{tables, Effort};
+use dnnexplorer::util::bench::{bench, full_mode};
+
+fn main() {
+    let effort = if full_mode() { Effort::Full } else { Effort::Quick };
+    println!("{}", tables::table4_batch_exploration(effort).render());
+    bench("table4_batch_exploration(quick)", 0, 3, || {
+        tables::table4_batch_exploration(Effort::Quick)
+    });
+}

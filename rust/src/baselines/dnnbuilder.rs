@@ -1,0 +1,71 @@
+//! DNNBuilder baseline: the pure layer-wise pipeline paradigm.
+//!
+//! Every compute layer gets a dedicated pipeline stage; resource
+//! allocation follows the same CTC-based scheme as our Algorithm 2 (which
+//! is itself adopted from DNNBuilder). Deep networks fragment the DSP
+//! budget across many stages — the scalability flaw the paper's Fig. 2b
+//! and Fig. 11 demonstrate.
+
+use crate::baselines::BaselineResult;
+use crate::dnn::{Layer, Network, Precision};
+use crate::dse::local_pipeline;
+use crate::fpga::{FpgaDevice, ResourceBudget};
+use crate::perfmodel::dsp_efficiency;
+
+/// Build the DNNBuilder-style accelerator for a network on a device.
+pub fn build(
+    net: &Network,
+    device: &FpgaDevice,
+    batch: usize,
+    dw: Precision,
+    ww: Precision,
+) -> Option<BaselineResult> {
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    let budget = ResourceBudget::of_device(device);
+    let plan = local_pipeline::optimize(&layers, &budget, batch, device.freq_mhz, dw, ww)?;
+    let fps = plan.estimate.throughput_fps;
+    let ops: f64 = layers.iter().map(|l| l.ops() as f64).sum();
+    let gops = fps * ops / 1e9;
+    Some(BaselineResult {
+        framework: "DNNBuilder".into(),
+        network: net.name.clone(),
+        gops,
+        fps,
+        dsp_used: plan.estimate.resources.dsp,
+        bram_used: plan.estimate.resources.bram18k,
+        dsp_efficiency: dsp_efficiency(gops, ww, plan.estimate.resources.dsp, device.freq_mhz),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::TensorShape;
+
+    #[test]
+    fn vgg16_on_ku115() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let r = build(&net, &FpgaDevice::ku115(), 1, Precision::Int16, Precision::Int16).unwrap();
+        assert!(r.gops > 200.0, "gops {}", r.gops);
+        assert!(r.dsp_used <= 5520.0);
+        // Dedicated stages → high efficiency on the canonical case.
+        assert!(r.dsp_efficiency > 0.5, "eff {}", r.dsp_efficiency);
+    }
+
+    #[test]
+    fn deep_network_degrades() {
+        // Paper Fig. 2b: 38-layer VGG-like drops ~77.8% vs 13-layer.
+        let d = FpgaDevice::ku115();
+        let n13 = zoo::vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, 0);
+        let n38 = zoo::vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, 5);
+        let r13 = build(&n13, &d, 1, Precision::Int16, Precision::Int16).unwrap();
+        let r38 = build(&n38, &d, 1, Precision::Int16, Precision::Int16).unwrap();
+        assert!(
+            r38.gops < r13.gops * 0.6,
+            "38-layer {} should be well below 13-layer {}",
+            r38.gops,
+            r13.gops
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Reimplementations of the paper's comparators (see DESIGN.md,
+//! hardware-substitution table):
+//!
+//! * [`dnnbuilder`] — the pure layer-pipelined paradigm (paper [1]).
+//! * [`hybriddnn`] — a tuned single generic engine with spatial +
+//!   Winograd PEs (paper [2]).
+//! * [`dpu`] — a Xilinx-DPU-like fixed commercial IP (paper [3]).
+//!
+//! Each baseline returns a [`BaselineResult`] with the same metrics the
+//! figures plot (GOP/s, fps, DSP usage, Eq. 1 efficiency).
+
+pub mod dnnbuilder;
+pub mod dpu;
+pub mod hybriddnn;
+
+
+/// Common result record for baseline accelerators.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub framework: String,
+    pub network: String,
+    pub gops: f64,
+    pub fps: f64,
+    pub dsp_used: f64,
+    pub bram_used: f64,
+    pub dsp_efficiency: f64,
+}

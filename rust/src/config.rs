@@ -1,0 +1,178 @@
+//! Experiment configuration: a TOML-subset loadable description of an
+//! exploration run, with CLI-friendly overrides.
+//!
+//! The offline environment has no `toml` crate; the parser accepts the
+//! practical subset used by experiment files: `key = value` lines,
+//! strings in double quotes, integers, and `#` comments. Tables/arrays
+//! are not needed (and rejected loudly).
+
+use crate::dnn::{Network, Precision};
+use crate::dse::pso::PsoParams;
+use crate::dse::ExplorerConfig;
+use crate::fpga::FpgaDevice;
+
+/// Experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Zoo network name (see [`crate::dnn::zoo::by_name`]).
+    pub network: String,
+    /// Input height / width.
+    pub height: usize,
+    pub width: usize,
+    /// Device name: ZC706 | KU115 | VU9P | ZCU102.
+    pub device: String,
+    /// Bit width: 8 | 16.
+    pub bits: u32,
+    /// Batch size; 0 = explore freely (Table 4 mode).
+    pub batch: usize,
+    /// PSO population / iterations.
+    pub population: usize,
+    pub iterations: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            network: "vgg16_conv".into(),
+            height: 224,
+            width: 224,
+            device: "KU115".into(),
+            bits: 16,
+            batch: 1,
+            population: 24,
+            iterations: 30,
+            seed: 0xD44E,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-subset text; unknown keys are rejected.
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            anyhow::ensure!(
+                !line.starts_with('['),
+                "line {}: tables are not supported in experiment configs",
+                lineno + 1
+            );
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            let v = v.trim().trim_matches('"');
+            let parse_usize = |v: &str| -> anyhow::Result<usize> {
+                v.parse().map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))
+            };
+            match k {
+                "network" => cfg.network = v.to_string(),
+                "height" => cfg.height = parse_usize(v)?,
+                "width" => cfg.width = parse_usize(v)?,
+                "device" => cfg.device = v.to_string(),
+                "bits" => cfg.bits = parse_usize(v)? as u32,
+                "batch" => cfg.batch = parse_usize(v)?,
+                "population" => cfg.population = parse_usize(v)?,
+                "iterations" => cfg.iterations = parse_usize(v)?,
+                "seed" => {
+                    cfg.seed = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
+                }
+                other => anyhow::bail!("line {}: unknown key {other:?}", lineno + 1),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn precision(&self) -> anyhow::Result<Precision> {
+        match self.bits {
+            16 => Ok(Precision::Int16),
+            8 => Ok(Precision::Int8),
+            b => anyhow::bail!("unsupported bit width {b} (use 8 or 16)"),
+        }
+    }
+
+    pub fn resolve_device(&self) -> anyhow::Result<FpgaDevice> {
+        FpgaDevice::by_name(&self.device)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {:?}", self.device))
+    }
+
+    pub fn resolve_network(&self) -> anyhow::Result<Network> {
+        let p = self.precision()?;
+        crate::dnn::zoo::by_name(&self.network, self.height, self.width, p)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", self.network))
+    }
+
+    /// Build the explorer configuration.
+    pub fn explorer(&self) -> anyhow::Result<ExplorerConfig> {
+        let device = self.resolve_device()?;
+        let p = self.precision()?;
+        Ok(ExplorerConfig {
+            dw: p,
+            ww: p,
+            fixed_batch: if self.batch == 0 { None } else { Some(self.batch) },
+            pso: PsoParams {
+                population: self.population,
+                iterations: self.iterations,
+                ..PsoParams::default()
+            },
+            seed: self.seed,
+            ..ExplorerConfig::new(device)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subset_with_defaults() {
+        let c = ExperimentConfig::from_toml(
+            "network = \"alexnet\"\nheight = 227 # comment\nwidth = 227\n",
+        )
+        .unwrap();
+        assert_eq!(c.network, "alexnet");
+        assert_eq!(c.height, 227);
+        assert_eq!(c.device, "KU115");
+        assert!(c.resolve_device().is_ok());
+        assert!(c.resolve_network().is_ok());
+        assert!(c.explorer().is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_tables() {
+        assert!(ExperimentConfig::from_toml("bogus = 1\n").is_err());
+        assert!(ExperimentConfig::from_toml("[table]\n").is_err());
+        assert!(ExperimentConfig::from_toml("no_equals\n").is_err());
+    }
+
+    #[test]
+    fn bad_bits_rejected() {
+        let c = ExperimentConfig { bits: 12, ..Default::default() };
+        assert!(c.precision().is_err());
+    }
+
+    #[test]
+    fn batch_zero_means_explore() {
+        let c = ExperimentConfig { batch: 0, ..Default::default() };
+        assert_eq!(c.explorer().unwrap().fixed_batch, None);
+    }
+
+    #[test]
+    fn unknown_network_rejected() {
+        let c = ExperimentConfig { network: "nope".into(), ..Default::default() };
+        assert!(c.resolve_network().is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: request counters and a fixed-bucket latency
+//! histogram, lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds.
+const BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000,
+];
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub frames: AtomicU64,
+    pub errors: AtomicU64,
+    latency_buckets: [AtomicU64; 13],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, frames: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.frames.fetch_add(frames as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram, microseconds.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} frames={} errors={} p50={}us p99={}us mean={:.0}us",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.frames.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.99),
+            self.mean_latency_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_monotonic() {
+        let m = Metrics::new();
+        for us in [40u64, 80, 200, 400, 900, 2000, 40_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 100 && p50 <= 1000, "p50 {p50}");
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn batch_counters() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.frames.load(Ordering::Relaxed), 6);
+    }
+}

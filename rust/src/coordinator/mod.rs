@@ -1,0 +1,18 @@
+//! Serving coordinator (L3 hot path): a tokio request loop that drives an
+//! explored accelerator configuration over batched inference requests.
+//!
+//! The coordinator owns the compiled artifacts (pipeline-stage and
+//! generic-layer executables from [`crate::runtime`]), batches incoming
+//! frames to the RAV's batch size (dynamic batching with a deadline), and
+//! reports throughput/latency metrics. Python is never on this path —
+//! the executables were AOT-compiled at `make artifacts` time.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{AcceleratorServer, InferenceRequest, ModelExecutor};

@@ -1,0 +1,239 @@
+//! Multi-worker router: N accelerator instances (each owning its own
+//! PJRT engine + executor, like the DPU's multi-core deployments or a
+//! multi-SLR FPGA) pulling batches from one shared queue.
+//!
+//! Work distribution is pull-based (workers take the next batch when
+//! idle), which load-balances without a scheduler; ordering is restored
+//! per-request by the response channels.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{InferenceRequest, ModelExecutor};
+use crate::runtime::executable::HostTensor;
+
+/// A pool of identical accelerator workers behind one queue.
+pub struct Router {
+    tx: Option<Sender<InferenceRequest>>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    pub worker_count: usize,
+}
+
+impl Router {
+    /// Spawn `n` workers; each builds its own executor via `factory`
+    /// (PJRT handles are not Send, so construction happens in-thread).
+    /// Returns an error if any worker fails to initialize.
+    pub fn spawn<E, F>(n: usize, factory: F, batch: BatcherConfig) -> anyhow::Result<Self>
+    where
+        E: ModelExecutor,
+        F: Fn() -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        let n = n.max(1);
+        let (tx, rx): (Sender<InferenceRequest>, Receiver<InferenceRequest>) = channel();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let factory = Arc::new(factory);
+        let mut workers = Vec::with_capacity(n);
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(n);
+        for _ in 0..n {
+            let rx = shared_rx.clone();
+            let m = metrics.clone();
+            let f = factory.clone();
+            let batch = batch.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let executor = match f() {
+                    Ok(e) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // Pull a batch: lock only while collecting.
+                    let reqs = {
+                        let guard = rx.lock().expect("queue poisoned");
+                        let Ok(first) = guard.recv() else { break };
+                        let mut batch_v = Vec::with_capacity(batch.batch_size);
+                        batch_v.push(first);
+                        let deadline = Instant::now() + batch.max_wait;
+                        while batch_v.len() < batch.batch_size {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            match guard.recv_timeout(deadline - now) {
+                                Ok(item) => batch_v.push(item),
+                                Err(_) => break,
+                            }
+                        }
+                        batch_v
+                    };
+                    let frames: Vec<HostTensor> =
+                        reqs.iter().map(|r| r.input.clone()).collect();
+                    m.record_batch(frames.len());
+                    match executor.execute_batch(&frames) {
+                        Ok(outs) if outs.len() == reqs.len() => {
+                            for (req, out) in reqs.into_iter().zip(outs) {
+                                m.record_latency(req.enqueued.elapsed());
+                                let _ = req.respond.send(Ok(out));
+                            }
+                        }
+                        other => {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            let msg = match other {
+                                Ok(outs) => {
+                                    format!("arity {} != {}", outs.len(), reqs.len())
+                                }
+                                Err(e) => e.to_string(),
+                            };
+                            for req in reqs {
+                                let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..n {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+        }
+        Ok(Self { tx: Some(tx), metrics, workers, worker_count: n })
+    }
+
+    /// Submit one frame and block for its result.
+    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (respond, rx) = sync_channel(1);
+        self.tx
+            .as_ref()
+            .expect("router running")
+            .send(InferenceRequest { input, respond, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("router stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("router dropped request"))?
+    }
+
+    /// Clone-able submission side for client threads.
+    pub fn sender(&self) -> Sender<InferenceRequest> {
+        self.tx.as_ref().expect("router running").clone()
+    }
+
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    struct SlowDoubler;
+    impl ModelExecutor for SlowDoubler {
+        fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(frames
+                .iter()
+                .map(|f| HostTensor {
+                    data: f.data.iter().map(|x| x * 2.0).collect(),
+                    shape: f.shape.clone(),
+                })
+                .collect())
+        }
+    }
+
+    fn run_clients(router: &Router, n: usize) -> Vec<f32> {
+        let mut clients = Vec::new();
+        for i in 0..n {
+            let tx = router.sender();
+            let m = router.metrics.clone();
+            clients.push(std::thread::spawn(move || {
+                m.requests.fetch_add(1, Ordering::Relaxed);
+                let (respond, rx) = sync_channel(1);
+                tx.send(InferenceRequest {
+                    input: HostTensor::new(vec![i as f32], vec![1]).unwrap(),
+                    respond,
+                    enqueued: Instant::now(),
+                })
+                .unwrap();
+                rx.recv().unwrap().unwrap().data[0]
+            }));
+        }
+        let mut out: Vec<f32> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out
+    }
+
+    #[test]
+    fn routes_across_workers() {
+        let router = Router::spawn(
+            4,
+            || Ok(SlowDoubler),
+            BatcherConfig { batch_size: 2, max_wait: Duration::from_millis(2) },
+        )
+        .unwrap();
+        let outs = run_clients(&router, 16);
+        assert_eq!(outs, (0..16).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
+        assert_eq!(router.metrics.frames.load(Ordering::Relaxed), 16);
+        router.shutdown();
+    }
+
+    #[test]
+    fn more_workers_more_throughput() {
+        // 16 requests of ~5ms each: 1 worker ≈ 80ms serial, 4 workers
+        // should be at least 2x faster even with scheduling noise.
+        let time_with = |n: usize| {
+            let router = Router::spawn(
+                n,
+                || Ok(SlowDoubler),
+                BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            )
+            .unwrap();
+            let t = Instant::now();
+            run_clients(&router, 16);
+            let dt = t.elapsed();
+            router.shutdown();
+            dt
+        };
+        let t1 = time_with(1);
+        let t4 = time_with(4);
+        assert!(
+            t4 < t1 * 2 / 3,
+            "4 workers {t4:?} not faster than 1 worker {t1:?}"
+        );
+    }
+
+    #[test]
+    fn failing_factory_reported() {
+        let r = Router::spawn(
+            2,
+            || -> anyhow::Result<SlowDoubler> { anyhow::bail!("no device") },
+            BatcherConfig::default(),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! The accelerator server: request loop → dynamic batcher → staged
+//! execution (pipeline stages then generic layers) → responses.
+//!
+//! Execution goes through the [`ModelExecutor`] trait so the serving
+//! logic is testable without PJRT; the production impl is
+//! [`crate::runtime::executable::ChainExecutor`] over the artifact store.
+//! Threading model: one worker thread owns the executor; clients block on
+//! a per-request response channel (std mpsc — no tokio offline).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::executable::HostTensor;
+
+/// Anything that can run one already-batched frame set through the whole
+/// accelerator (all stages + generic part) and return per-frame outputs.
+///
+/// NOT required to be Send/Sync: the executor is *constructed inside* the
+/// worker thread (PJRT executables hold `Rc`s and cannot cross threads).
+pub trait ModelExecutor: 'static {
+    /// `frames` are per-frame input tensors; return per-frame outputs.
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>>;
+}
+
+/// One inference request: input frame + response channel.
+pub struct InferenceRequest {
+    pub input: HostTensor,
+    pub respond: SyncSender<anyhow::Result<HostTensor>>,
+    pub enqueued: Instant,
+}
+
+/// Handle to a running accelerator server. Clone-able submit side via
+/// [`AcceleratorServer::handle`].
+pub struct AcceleratorServer {
+    tx: Option<Sender<InferenceRequest>>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Cheap clone-able submission handle (for client threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<InferenceRequest>,
+    metrics: Arc<Metrics>,
+}
+
+impl AcceleratorServer {
+    /// Spawn the serving worker thread. The executor is built by
+    /// `factory` *inside* the thread (PJRT handles are not Send); a
+    /// factory error is returned here synchronously.
+    pub fn spawn<E: ModelExecutor>(
+        factory: impl FnOnce() -> anyhow::Result<E> + Send + 'static,
+        batch: BatcherConfig,
+    ) -> anyhow::Result<Self> {
+        let (tx, rx): (Sender<InferenceRequest>, Receiver<InferenceRequest>) = channel();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(1);
+        let worker = std::thread::spawn(move || {
+            let executor = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut batcher = DynamicBatcher::new(rx, batch);
+            while let Some(reqs) = batcher.next_batch() {
+                let frames: Vec<HostTensor> = reqs.iter().map(|r| r.input.clone()).collect();
+                m.record_batch(frames.len());
+                match executor.execute_batch(&frames) {
+                    Ok(outs) if outs.len() == reqs.len() => {
+                        for (req, out) in reqs.into_iter().zip(outs) {
+                            m.record_latency(req.enqueued.elapsed());
+                            let _ = req.respond.send(Ok(out));
+                        }
+                    }
+                    Ok(outs) => {
+                        m.errors.fetch_add(1, Ordering::Relaxed);
+                        let msg = format!(
+                            "batch arity: {} outputs for {} requests",
+                            outs.len(),
+                            reqs.len()
+                        );
+                        for req in reqs {
+                            let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
+                        }
+                    }
+                    Err(e) => {
+                        m.errors.fetch_add(1, Ordering::Relaxed);
+                        let msg = e.to_string();
+                        for req in reqs {
+                            let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
+                        }
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(Self { tx: Some(tx), metrics, worker: Some(worker) })
+    }
+
+    /// Get a clone-able submission handle.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Submit one frame and block for its result.
+    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
+        self.handle().infer(input)
+    }
+
+    /// Close the queue and wait for the worker to drain.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for AcceleratorServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit one frame and block for its result.
+    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (respond, rx) = sync_channel(1);
+        self.tx
+            .send(InferenceRequest { input, respond, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+}
+
+/// Staged executor: runs a frame batch through an ordered list of
+/// single-input models (pipeline stages then generic layers). Frames are
+/// executed per-frame through the stage chain; a true hardware pipeline
+/// overlaps stages, which the simulator models — here we prove functional
+/// composition.
+pub struct StagedExecutor<M> {
+    pub stages: Vec<M>,
+    /// Runs one (model, input) pair.
+    pub run: fn(&M, &HostTensor) -> anyhow::Result<HostTensor>,
+}
+
+impl<M: Send + Sync + 'static> ModelExecutor for StagedExecutor<M> {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        frames
+            .iter()
+            .map(|f| {
+                let mut cur = f.clone();
+                for m in &self.stages {
+                    cur = (self.run)(m, &cur)?;
+                }
+                Ok(cur)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Mock executor: multiplies every element by 2.
+    struct Doubler;
+    impl ModelExecutor for Doubler {
+        fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            Ok(frames
+                .iter()
+                .map(|f| HostTensor {
+                    data: f.data.iter().map(|x| x * 2.0).collect(),
+                    shape: f.shape.clone(),
+                })
+                .collect())
+        }
+    }
+
+    struct Failer;
+    impl ModelExecutor for Failer {
+        fn execute_batch(&self, _: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            anyhow::bail!("boom")
+        }
+    }
+
+    #[test]
+    fn serves_and_batches_concurrent_clients() {
+        let server = AcceleratorServer::spawn(
+            || Ok(Doubler),
+            BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(20) },
+        )
+        .unwrap();
+        let mut clients = Vec::new();
+        for i in 0..8 {
+            let h = server.handle();
+            clients.push(std::thread::spawn(move || {
+                let t = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+                h.infer(t).unwrap().data[0]
+            }));
+        }
+        let mut outs: Vec<f32> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+        outs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(outs, (0..8).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
+        assert!(server.metrics.frames.load(Ordering::Relaxed) == 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let server = AcceleratorServer::spawn(|| Ok(Failer), BatcherConfig::default()).unwrap();
+        let out = server.infer(HostTensor::zeros(&[1]));
+        assert!(out.is_err());
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn staged_executor_composes() {
+        let exec = StagedExecutor {
+            stages: vec![1.0f32, 10.0, 100.0],
+            run: |scale, t| {
+                Ok(HostTensor {
+                    data: t.data.iter().map(|x| x + scale).collect(),
+                    shape: t.shape.clone(),
+                })
+            },
+        };
+        let out = exec.execute_batch(&[HostTensor::zeros(&[2])]).unwrap();
+        assert_eq!(out[0].data, vec![111.0, 111.0]);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let server = AcceleratorServer::spawn(|| Ok(Doubler), BatcherConfig::default()).unwrap();
+        let out = server.infer(HostTensor::new(vec![3.0], vec![1]).unwrap()).unwrap();
+        assert_eq!(out.data, vec![6.0]);
+        server.shutdown(); // must not hang
+    }
+}

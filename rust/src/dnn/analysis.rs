@@ -1,0 +1,230 @@
+//! Layer-wise model analysis: the *Model/HW Analysis* step of the
+//! DNNExplorer flow (paper §4.2), plus the statistics behind Fig. 1
+//! (CTC distributions) and Table 1 (half-split CTC variance ratio).
+
+
+use super::{LayerKind, Network};
+
+/// Summary statistics of a sample (used for the Fig. 1 box plots).
+#[derive(Debug, Clone)]
+pub struct Distribution {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub variance: f64,
+}
+
+impl Distribution {
+    /// Compute distribution stats; returns `None` on an empty sample.
+    pub fn from(values: &[f64]) -> Option<Self> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let variance = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Some(Self {
+            min: v[0],
+            q1: quantile(&v, 0.25),
+            median: quantile(&v, 0.5),
+            q3: quantile(&v, 0.75),
+            max: v[n - 1],
+            mean,
+            variance,
+        })
+    }
+}
+
+/// Linear-interpolated quantile of a **sorted** slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// CTC ratios of all CONV layers of a network (the Fig. 1 sample; the
+/// paper plots "VGG-16 models (without FC layers)").
+pub fn conv_ctcs(net: &Network) -> Vec<f64> {
+    net.layers
+        .iter()
+        .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+        .map(|l| l.ctc())
+        .collect()
+}
+
+/// CTC distribution over the CONV layers of a network.
+pub fn ctc_distribution(net: &Network) -> Option<Distribution> {
+    Distribution::from(&conv_ctcs(net))
+}
+
+/// Result of the paper's Table 1 analysis for one network.
+#[derive(Debug, Clone)]
+pub struct HalfSplit {
+    pub network: String,
+    /// Index of the first layer of the second half (compute layers).
+    pub split_layer: usize,
+    /// CTC variance of the first half (≥50% of MACs, input side).
+    pub v1: f64,
+    /// CTC variance of the second half.
+    pub v2: f64,
+}
+
+impl HalfSplit {
+    pub fn ratio(&self) -> f64 {
+        if self.v2 == 0.0 {
+            f64::INFINITY
+        } else {
+            self.v1 / self.v2
+        }
+    }
+}
+
+/// Split a network's compute layers into two halves at 50% of total MACs
+/// (paper §4.1: "the first half covers the bottom part of layers ... with
+/// 50% of the total MAC operations") and compute CTC variance per half.
+pub fn half_split_variance(net: &Network) -> HalfSplit {
+    let layers: Vec<_> = net
+        .layers
+        .iter()
+        .filter(|l| l.is_compute() && l.macs() > 0)
+        .collect();
+    let total: u64 = layers.iter().map(|l| l.macs()).sum();
+    let mut acc = 0u64;
+    let mut split = layers.len();
+    for (i, l) in layers.iter().enumerate() {
+        acc += l.macs();
+        if acc * 2 >= total {
+            split = i + 1;
+            break;
+        }
+    }
+    // Ensure both halves are non-empty where possible.
+    let split = split.clamp(1, layers.len().saturating_sub(1).max(1));
+    let ctcs: Vec<f64> = layers.iter().map(|l| l.ctc()).collect();
+    let var = |s: &[f64]| -> f64 {
+        if s.is_empty() {
+            return 0.0;
+        }
+        let m = s.iter().sum::<f64>() / s.len() as f64;
+        s.iter().map(|x| (x - m).powi(2)).sum::<f64>() / s.len() as f64
+    };
+    HalfSplit {
+        network: net.name.clone(),
+        split_layer: split,
+        v1: var(&ctcs[..split]),
+        v2: var(&ctcs[split..]),
+    }
+}
+
+/// Per-layer profile record packed as "DNN info" for the DSE (paper Fig. 4).
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub name: String,
+    pub ops: u64,
+    pub macs: u64,
+    pub weights: u64,
+    pub ifm_bytes: f64,
+    pub ofm_bytes: f64,
+    pub ctc: f64,
+}
+
+/// Full model profile: the *Model Analysis* output.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub network: String,
+    pub total_gop: f64,
+    pub total_weights: u64,
+    pub layers: Vec<LayerProfile>,
+}
+
+/// Profile every compute layer of a network.
+pub fn profile(net: &Network) -> ModelProfile {
+    ModelProfile {
+        network: net.name.clone(),
+        total_gop: net.total_gop(),
+        total_weights: net.total_weights(),
+        layers: net
+            .layers
+            .iter()
+            .filter(|l| l.is_compute())
+            .map(|l| LayerProfile {
+                name: l.name.clone(),
+                ops: l.ops(),
+                macs: l.macs(),
+                weights: l.weights(),
+                ifm_bytes: l.ifm_bytes(l.precision),
+                ofm_bytes: l.ofm_bytes(l.precision),
+                ctc: l.ctc(),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::{Precision, TensorShape};
+
+    #[test]
+    fn quantiles() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&v, 0.5), 2.5);
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn distribution_empty_is_none() {
+        assert!(Distribution::from(&[]).is_none());
+    }
+
+    #[test]
+    fn fig1_ctc_median_rises_with_resolution() {
+        // Paper: from 32x32 to 512x512 the median rises by ~256x.
+        let small = zoo::vgg16_conv(TensorShape::new(3, 32, 32), Precision::Int16);
+        let large = zoo::vgg16_conv(TensorShape::new(3, 512, 512), Precision::Int16);
+        let ms = ctc_distribution(&small).unwrap().median;
+        let ml = ctc_distribution(&large).unwrap().median;
+        let ratio = ml / ms;
+        assert!(
+            ratio > 100.0 && ratio < 400.0,
+            "median CTC ratio 512/32 = {ratio}, expected ~256"
+        );
+    }
+
+    #[test]
+    fn table1_first_half_has_more_variance() {
+        // Paper Table 1: V1/V2 >> 1 for all ten networks.
+        for net in zoo::table1_networks(Precision::Int16) {
+            let hs = half_split_variance(&net);
+            assert!(
+                hs.v1 > hs.v2,
+                "{}: V1 {} should exceed V2 {}",
+                hs.network,
+                hs.v1,
+                hs.v2
+            );
+            assert!(hs.ratio() > 10.0, "{}: ratio {}", hs.network, hs.ratio());
+        }
+    }
+
+    #[test]
+    fn profile_covers_compute_layers() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let p = profile(&net);
+        assert_eq!(p.layers.len(), 13);
+        assert!((p.total_gop - 30.7).abs() < 0.3);
+    }
+}

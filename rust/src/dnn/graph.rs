@@ -1,0 +1,279 @@
+//! Network-level IR: an ordered sequence of major layers plus a builder
+//! that performs shape inference while layers are appended.
+
+
+use super::layer::{conv_out_dim, Layer, LayerKind, Precision, TensorShape};
+
+/// A DNN represented as its topologically-ordered list of major layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input: TensorShape,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total operations (2·MACs) of the whole network.
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    /// Total operations in units of GOP.
+    pub fn total_gop(&self) -> f64 {
+        self.total_ops() as f64 / 1e9
+    }
+
+    /// Total weight parameters.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    /// Number of CONV layers (the depth metric the paper uses:
+    /// "VGG-like DNN with 38 CONV layers").
+    pub fn conv_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count()
+    }
+
+    /// Compute-bearing layers (CONV + FC), in order. These are the layers
+    /// the accelerator's pipeline stages / generic iterations map onto.
+    pub fn compute_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.is_compute()).collect()
+    }
+
+    /// Sanity-check internal shape consistency: each layer's input shape
+    /// must equal the previous layer's output shape (linear networks only;
+    /// zoo networks with branches are serialized so this still holds for
+    /// the workload-equivalent linearization).
+    pub fn validate_shapes(&self) -> anyhow::Result<()> {
+        let mut cur = self.input;
+        for l in &self.layers {
+            anyhow::ensure!(
+                l.input == cur,
+                "layer {}: input {} != previous output {}",
+                l.name,
+                l.input,
+                cur
+            );
+            cur = l.output;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental network builder with shape inference.
+pub struct NetworkBuilder {
+    name: String,
+    input: TensorShape,
+    cur: TensorShape,
+    precision: Precision,
+    layers: Vec<Layer>,
+    /// true for branchy topologies where the linearized layer list is a
+    /// workload model rather than a shape-chained program.
+    linear: bool,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: &str, input: TensorShape, precision: Precision) -> Self {
+        Self {
+            name: name.to_string(),
+            input,
+            cur: input,
+            precision,
+            layers: Vec::new(),
+            linear: true,
+        }
+    }
+
+    /// Mark this network as branchy: layers are appended with explicit
+    /// input shapes and the shape chain is not enforced.
+    pub fn branchy(mut self) -> Self {
+        self.linear = false;
+        self
+    }
+
+    /// Current feature-map shape (output of last appended layer).
+    pub fn shape(&self) -> TensorShape {
+        self.cur
+    }
+
+    /// Append a dense CONV layer.
+    pub fn conv(self, out_c: usize, kernel: usize, stride: usize, pad: usize) -> Self {
+        self.conv_grouped(out_c, kernel, stride, pad, 1)
+    }
+
+    /// Append a grouped CONV layer (groups == in_c → depthwise).
+    pub fn conv_grouped(
+        mut self,
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Self {
+        let input = self.cur;
+        let output = TensorShape::new(
+            out_c,
+            conv_out_dim(input.h, kernel, stride, pad),
+            conv_out_dim(input.w, kernel, stride, pad),
+        );
+        let idx = self.layers.len();
+        self.layers.push(Layer {
+            name: format!("conv{idx}"),
+            kind: LayerKind::Conv { kernel, kernel_w: kernel, stride, pad, groups },
+            input,
+            output,
+            precision: self.precision,
+        });
+        self.cur = output;
+        self
+    }
+
+    /// Append a CONV layer at an explicit input shape (for branchy nets).
+    pub fn conv_at(
+        mut self,
+        input: TensorShape,
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Self {
+        let output = TensorShape::new(
+            out_c,
+            conv_out_dim(input.h, kernel, stride, pad),
+            conv_out_dim(input.w, kernel, stride, pad),
+        );
+        let idx = self.layers.len();
+        self.layers.push(Layer {
+            name: format!("conv{idx}"),
+            kind: LayerKind::Conv { kernel, kernel_w: kernel, stride, pad, groups },
+            input,
+            output,
+            precision: self.precision,
+        });
+        self.cur = output;
+        self
+    }
+
+    /// Append a fully-specified layer (asymmetric kernels, custom names).
+    pub fn push_raw(mut self, layer: Layer) -> Self {
+        self.cur = layer.output;
+        self.layers.push(layer);
+        self
+    }
+
+    /// Activation precision this builder stamps on layers.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Append a pooling layer.
+    pub fn pool(mut self, kernel: usize, stride: usize) -> Self {
+        let input = self.cur;
+        let output = TensorShape::new(
+            input.c,
+            conv_out_dim(input.h, kernel, stride, 0),
+            conv_out_dim(input.w, kernel, stride, 0),
+        );
+        let idx = self.layers.len();
+        self.layers.push(Layer {
+            name: format!("pool{idx}"),
+            kind: LayerKind::Pool { kernel, stride },
+            input,
+            output,
+            precision: self.precision,
+        });
+        self.cur = output;
+        self
+    }
+
+    /// Append a global average pool collapsing H×W to 1×1.
+    pub fn global_pool(mut self) -> Self {
+        let input = self.cur;
+        let output = TensorShape::new(input.c, 1, 1);
+        let idx = self.layers.len();
+        self.layers.push(Layer {
+            name: format!("gap{idx}"),
+            kind: LayerKind::Pool { kernel: input.h, stride: input.h },
+            input,
+            output,
+            precision: self.precision,
+        });
+        self.cur = output;
+        self
+    }
+
+    /// Append a fully-connected layer.
+    pub fn fc(mut self, out: usize) -> Self {
+        let input = self.cur;
+        let output = TensorShape::new(out, 1, 1);
+        let idx = self.layers.len();
+        self.layers.push(Layer {
+            name: format!("fc{idx}"),
+            kind: LayerKind::Fc,
+            input,
+            output,
+            precision: self.precision,
+        });
+        self.cur = output;
+        self
+    }
+
+    pub fn build(self) -> Network {
+        let net = Network {
+            name: self.name,
+            input: self.input,
+            layers: self.layers,
+        };
+        if self.linear {
+            net.validate_shapes()
+                .expect("builder produced inconsistent shapes");
+        }
+        net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_shape_chain() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 32, 32), Precision::Int16)
+            .conv(16, 3, 1, 1)
+            .pool(2, 2)
+            .conv(32, 3, 1, 1)
+            .global_pool()
+            .fc(10)
+            .build();
+        assert_eq!(net.layers.len(), 5);
+        assert_eq!(net.layers[1].output, TensorShape::new(16, 16, 16));
+        assert_eq!(net.layers[4].output, TensorShape::new(10, 1, 1));
+        net.validate_shapes().unwrap();
+    }
+
+    #[test]
+    fn conv_count_skips_pool_fc() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 32, 32), Precision::Int16)
+            .conv(16, 3, 1, 1)
+            .pool(2, 2)
+            .fc(10)
+            .build();
+        assert_eq!(net.conv_count(), 1);
+        assert_eq!(net.compute_layers().len(), 2);
+    }
+
+    #[test]
+    fn total_ops_sums_layers() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 8, 8), Precision::Int16)
+            .conv(4, 3, 1, 1)
+            .conv(4, 3, 1, 1)
+            .build();
+        let per: u64 = net.layers.iter().map(|l| l.ops()).sum();
+        assert_eq!(net.total_ops(), per);
+        assert!(net.total_ops() > 0);
+    }
+}

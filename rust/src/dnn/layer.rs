@@ -1,0 +1,328 @@
+//! Layer-level IR: shapes, kinds, and per-layer workload arithmetic.
+//!
+//! Workload quantities follow the paper's conventions:
+//! * one multiply-accumulate = 2 ops (so a CONV layer performs
+//!   `2·H·W·R·S·C·K` ops),
+//! * CTC (computation-to-communication) ratio = ops / bytes moved to and
+//!   from external memory, where bytes cover weights + input feature map +
+//!   output feature map at the layer's quantization width.
+
+
+/// Quantization scheme of a layer (or of a whole accelerator structure).
+///
+/// The paper evaluates 16-bit and 8-bit fixed point; `alpha()` is the
+/// number of MACs one DSP slice retires per clock cycle (Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 16-bit fixed point. One DSP48 performs one 16-bit MAC per cycle.
+    Int16,
+    /// 8-bit fixed point. DSP double-pumping packs two 8-bit MACs per DSP.
+    Int8,
+}
+
+impl Precision {
+    /// MAC operations handled by one DSP per clock cycle (paper's α).
+    pub fn alpha(self) -> f64 {
+        match self {
+            Precision::Int16 => 2.0,
+            Precision::Int8 => 4.0,
+        }
+    }
+
+    /// Width in bytes of one operand.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Int16 => 2.0,
+            Precision::Int8 => 1.0,
+        }
+    }
+
+    /// Width in bits of one operand.
+    pub fn bits(self) -> u64 {
+        match self {
+            Precision::Int16 => 16,
+            Precision::Int8 => 8,
+        }
+    }
+
+    /// DSPs consumed by one MAC unit at this precision.
+    ///
+    /// With α MACs per DSP per cycle, a parallelism of `CPF·KPF` MAC/cycle
+    /// needs `CPF·KPF·2/α` DSPs (α=2 → 1 DSP per MAC, α=4 → 0.5).
+    pub fn dsp_per_mac(self) -> f64 {
+        2.0 / self.alpha()
+    }
+}
+
+/// A 3-dim feature-map shape, channels × height × width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    /// Number of elements in the feature map.
+    pub fn elems(&self) -> u64 {
+        (self.c as u64) * (self.h as u64) * (self.w as u64)
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// Kinds of *major* layers handled by dedicated hardware. BN/activation
+/// layers are fused into the preceding major layer (paper §5.2) and carry
+/// no standalone workload here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution with a `kernel`×`kernel_w` spatial window (square for
+    /// almost all networks; Inception-v3 factorizes into 1×7/7×1),
+    /// `groups`-way grouped (groups == in_c gives a depthwise CONV).
+    Conv {
+        kernel: usize,
+        kernel_w: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Max/avg pooling (no MACs in the paper's op counting; still moves
+    /// feature maps and occupies a pipeline stage slot when major).
+    Pool { kernel: usize, stride: usize },
+    /// Fully connected layer: behaves like a 1×1 CONV over a 1×1 map.
+    Fc,
+}
+
+/// One major DNN layer instance with resolved input/output shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub input: TensorShape,
+    pub output: TensorShape,
+    /// Quantization of activations flowing through this layer.
+    pub precision: Precision,
+}
+
+impl Layer {
+    /// Convolution kernel height (R). Determines line-buffer depth.
+    pub fn kernel(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kernel, .. } | LayerKind::Pool { kernel, .. } => kernel,
+            LayerKind::Fc => 1,
+        }
+    }
+
+    /// Convolution kernel width (S). Equal to `kernel()` except for
+    /// asymmetric factorized CONVs.
+    pub fn kernel_w(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kernel_w, .. } => kernel_w,
+            LayerKind::Pool { kernel, .. } => kernel,
+            LayerKind::Fc => 1,
+        }
+    }
+
+    /// Grouping factor (1 for dense CONV/FC, `in_c` for depthwise).
+    pub fn groups(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { groups, .. } => groups,
+            _ => 1,
+        }
+    }
+
+    /// Multiply-accumulate count of this layer.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { kernel, kernel_w, groups, .. } => {
+                // H_out · W_out · R · S · (C/g) · K
+                (self.output.h as u64)
+                    * (self.output.w as u64)
+                    * (kernel as u64)
+                    * (kernel_w as u64)
+                    * (self.input.c as u64 / groups as u64)
+                    * (self.output.c as u64)
+            }
+            LayerKind::Pool { .. } => 0,
+            LayerKind::Fc => (self.input.elems()) * (self.output.c as u64),
+        }
+    }
+
+    /// Operation count (1 MAC = 2 ops, paper convention).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { kernel, kernel_w, groups, .. } => {
+                (kernel as u64)
+                    * (kernel_w as u64)
+                    * (self.input.c as u64 / groups as u64)
+                    * (self.output.c as u64)
+            }
+            LayerKind::Pool { .. } => 0,
+            LayerKind::Fc => self.input.elems() * (self.output.c as u64),
+        }
+    }
+
+    /// Bytes of weights at a given weight precision.
+    pub fn weight_bytes(&self, ww: Precision) -> f64 {
+        self.weights() as f64 * ww.bytes()
+    }
+
+    /// Bytes of the input feature map.
+    pub fn ifm_bytes(&self, dw: Precision) -> f64 {
+        self.input.elems() as f64 * dw.bytes()
+    }
+
+    /// Bytes of the output feature map.
+    pub fn ofm_bytes(&self, dw: Precision) -> f64 {
+        self.output.elems() as f64 * dw.bytes()
+    }
+
+    /// External-memory traffic of the layer (weights + ifm + ofm), in
+    /// bytes, assuming each is moved exactly once. (Worst-case traffic —
+    /// used by the memory models, *not* by the CTC metric below.)
+    pub fn memory_bytes(&self) -> f64 {
+        self.weight_bytes(self.precision)
+            + self.ifm_bytes(self.precision)
+            + self.ofm_bytes(self.precision)
+    }
+
+    /// Computation-to-communication ratio: ops per byte of *external*
+    /// traffic. In the paper's accelerator (and DNNBuilder before it)
+    /// feature maps stream between stages on-chip, so steady-state DRAM
+    /// communication is the weight stream: `CTC_i = OP_i / weight bytes`.
+    /// This reproduces Fig. 1's ~256× median growth from 32² to 512²
+    /// inputs (CTC of a CONV layer reduces to `H_out·W_out·α_bytes⁻¹·2`,
+    /// i.e. grows with the feature-map area). Pools carry no weights →
+    /// CTC 0 by convention (they are excluded from the Fig. 1 sample).
+    pub fn ctc(&self) -> f64 {
+        let wb = self.weight_bytes(self.precision);
+        if wb == 0.0 {
+            0.0
+        } else {
+            self.ops() as f64 / wb
+        }
+    }
+
+    /// Whether this layer contributes MAC workload (CONV/FC).
+    pub fn is_compute(&self) -> bool {
+        !matches!(self.kind, LayerKind::Pool { .. })
+    }
+}
+
+/// Compute the output spatial size of a windowed op.
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(
+        in_shape: (usize, usize, usize),
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Layer {
+        let input = TensorShape::new(in_shape.0, in_shape.1, in_shape.2);
+        let oh = conv_out_dim(input.h, kernel, stride, pad);
+        let ow = conv_out_dim(input.w, kernel, stride, pad);
+        Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { kernel, kernel_w: kernel, stride, pad, groups: 1 },
+            input,
+            output: TensorShape::new(out_c, oh, ow),
+            precision: Precision::Int16,
+        }
+    }
+
+    #[test]
+    fn vgg_first_layer_macs() {
+        // VGG16 conv1_1: 3x224x224 -> 64x224x224, 3x3/s1/p1
+        let l = conv((3, 224, 224), 64, 3, 1, 1);
+        assert_eq!(l.macs(), 224 * 224 * 3 * 3 * 3 * 64);
+        assert_eq!(l.ops(), 2 * l.macs());
+        assert_eq!(l.weights(), 3 * 3 * 3 * 64);
+    }
+
+    #[test]
+    fn conv_out_dim_cases() {
+        assert_eq!(conv_out_dim(224, 3, 1, 1), 224);
+        assert_eq!(conv_out_dim(224, 3, 2, 1), 112);
+        assert_eq!(conv_out_dim(227, 11, 4, 0), 55); // AlexNet conv1
+        assert_eq!(conv_out_dim(224, 7, 2, 3), 112); // ResNet conv1
+    }
+
+    #[test]
+    fn pool_has_no_macs() {
+        let input = TensorShape::new(64, 224, 224);
+        let l = Layer {
+            name: "p".into(),
+            kind: LayerKind::Pool { kernel: 2, stride: 2 },
+            input,
+            output: TensorShape::new(64, 112, 112),
+            precision: Precision::Int16,
+        };
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.ctc(), 0.0);
+    }
+
+    #[test]
+    fn depthwise_conv_macs() {
+        let input = TensorShape::new(32, 112, 112);
+        let l = Layer {
+            name: "dw".into(),
+            kind: LayerKind::Conv { kernel: 3, kernel_w: 3, stride: 1, pad: 1, groups: 32 },
+            input,
+            output: TensorShape::new(32, 112, 112),
+            precision: Precision::Int8,
+        };
+        assert_eq!(l.macs(), 112 * 112 * 3 * 3 * 32);
+        assert_eq!(l.weights(), 3 * 3 * 32);
+    }
+
+    #[test]
+    fn fc_layer_workload() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc,
+            input: TensorShape::new(512, 7, 7),
+            output: TensorShape::new(4096, 1, 1),
+            precision: Precision::Int16,
+        };
+        assert_eq!(l.macs(), 512 * 7 * 7 * 4096);
+        assert_eq!(l.weights(), 512 * 7 * 7 * 4096);
+        // FC CTC is tiny: weights dominate traffic.
+        assert!(l.ctc() < 2.5);
+    }
+
+    #[test]
+    fn ctc_grows_with_resolution() {
+        // Paper Fig. 1: CTC median rises with input resolution.
+        let small = conv((64, 32, 32), 64, 3, 1, 1);
+        let large = conv((64, 512, 512), 64, 3, 1, 1);
+        assert!(large.ctc() > small.ctc());
+    }
+
+    #[test]
+    fn precision_alpha() {
+        assert_eq!(Precision::Int16.alpha(), 2.0);
+        assert_eq!(Precision::Int8.alpha(), 4.0);
+        assert_eq!(Precision::Int16.dsp_per_mac(), 1.0);
+        assert_eq!(Precision::Int8.dsp_per_mac(), 0.5);
+    }
+}

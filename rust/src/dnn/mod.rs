@@ -1,0 +1,16 @@
+//! DNN intermediate representation and model zoo.
+//!
+//! The IR is deliberately simple: a [`graph::Network`] is an ordered list
+//! of [`layer::Layer`]s (the paper's accelerator paradigm is a linear
+//! pipeline over *major* layers; branchy networks such as ResNet or
+//! GoogLeNet are represented by their per-layer workloads for analysis
+//! purposes, with branch layers serialized in topological order — exactly
+//! what the paper's Table 1 analysis needs).
+
+pub mod analysis;
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::Network;
+pub use layer::{Layer, LayerKind, Precision, TensorShape};

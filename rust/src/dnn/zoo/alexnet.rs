@@ -1,0 +1,38 @@
+//! AlexNet (Krizhevsky et al. 2012), single-tower formulation.
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// AlexNet at its canonical 3×227×227 input. Grouped CONVs of the original
+/// two-tower model are folded into dense layers (standard single-GPU
+/// formulation used by accelerator papers).
+pub fn alexnet(input: TensorShape, p: Precision) -> Network {
+    NetworkBuilder::new("AlexNet", input, p)
+        .conv(96, 11, 4, 0)
+        .pool(3, 2)
+        .conv(256, 5, 1, 2)
+        .pool(3, 2)
+        .conv(384, 3, 1, 1)
+        .conv(384, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .pool(3, 2)
+        .fc(4096)
+        .fc(4096)
+        .fc(1000)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_structure() {
+        let net = alexnet(TensorShape::new(3, 227, 227), Precision::Int16);
+        assert_eq!(net.conv_count(), 5);
+        assert_eq!(net.layers[0].output, TensorShape::new(96, 55, 55));
+        // conv-only MACs ~ 0.66 GMAC; with FC ~ 0.72 GMAC (dense folding).
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 0.6 && gmac < 1.5, "AlexNet GMAC {gmac}");
+    }
+}

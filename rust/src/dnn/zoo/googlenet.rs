@@ -1,0 +1,87 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al. 2015), inception modules
+//! serialized branch-by-branch.
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// One inception module: four parallel branches appended at the same
+/// input shape. `(b1, r3, b3, r5, b5, pp)` follow the paper's notation:
+/// 1×1, 3×3-reduce, 3×3, 5×5-reduce, 5×5, pool-proj channel counts.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    mut b: NetworkBuilder,
+    input: TensorShape,
+    b1: usize,
+    r3: usize,
+    b3: usize,
+    r5: usize,
+    b5: usize,
+    pp: usize,
+) -> NetworkBuilder {
+    b = b.conv_at(input, b1, 1, 1, 0, 1); // branch 1: 1x1
+    b = b.conv_at(input, r3, 1, 1, 0, 1).conv(b3, 3, 1, 1); // branch 2
+    b = b.conv_at(input, r5, 1, 1, 0, 1).conv(b5, 5, 1, 2); // branch 3
+    b = b.conv_at(input, pp, 1, 1, 0, 1); // branch 4 (pool proj)
+    b
+}
+
+/// Concatenated output shape of an inception module.
+fn cat(input: TensorShape, b1: usize, b3: usize, b5: usize, pp: usize) -> TensorShape {
+    TensorShape::new(b1 + b3 + b5 + pp, input.h, input.w)
+}
+
+/// GoogLeNet at 3×224×224 (9 inception modules).
+pub fn googlenet(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("GoogLeNet", input, p)
+        .branchy()
+        .conv(64, 7, 2, 3)
+        .pool(3, 2)
+        .conv(64, 1, 1, 0)
+        .conv(192, 3, 1, 1)
+        .pool(3, 2);
+    // (b1, r3, b3, r5, b5, pp) for the 9 modules, with pools between
+    // stages 3/4 and 4/5.
+    let m3 = [(64, 96, 128, 16, 32, 32), (128, 128, 192, 32, 96, 64)];
+    let m4 = [
+        (192, 96, 208, 16, 48, 64),
+        (160, 112, 224, 24, 64, 64),
+        (128, 128, 256, 24, 64, 64),
+        (112, 144, 288, 32, 64, 64),
+        (256, 160, 320, 32, 128, 128),
+    ];
+    let m5 = [(256, 160, 320, 32, 128, 128), (384, 192, 384, 48, 128, 128)];
+
+    let mut shape = b.shape();
+    for &(b1, r3, b3, r5, b5, pp) in &m3 {
+        b = inception(b, shape, b1, r3, b3, r5, b5, pp);
+        shape = cat(shape, b1, b3, b5, pp);
+    }
+    shape = TensorShape::new(shape.c, shape.h / 2, shape.w / 2); // pool
+    for &(b1, r3, b3, r5, b5, pp) in &m4 {
+        b = inception(b, shape, b1, r3, b3, r5, b5, pp);
+        shape = cat(shape, b1, b3, b5, pp);
+    }
+    shape = TensorShape::new(shape.c, shape.h / 2, shape.w / 2); // pool
+    for &(b1, r3, b3, r5, b5, pp) in &m5 {
+        b = inception(b, shape, b1, r3, b3, r5, b5, pp);
+        shape = cat(shape, b1, b3, b5, pp);
+    }
+    // global pool + classifier (FC modeled as 1x1 CONV over the pooled map)
+    let pooled = TensorShape::new(shape.c, 1, 1);
+    b = b.conv_at(pooled, 1000, 1, 1, 0, 1);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn googlenet_workload() {
+        let net = googlenet(TensorShape::new(3, 224, 224), Precision::Int16);
+        // ~1.5 GMAC canonical (conv only, aux heads omitted)
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 1.0 && gmac < 2.5, "GoogLeNet GMAC {gmac}");
+        assert!(net.conv_count() > 50);
+    }
+}

@@ -1,0 +1,149 @@
+//! Inception-v3 (Szegedy et al. 2016) at 3×299×299, serialized.
+//!
+//! The module inventory follows the canonical torchvision structure:
+//! stem → 3×InceptionA → InceptionB → 4×InceptionC → InceptionD →
+//! 2×InceptionE → classifier. Factorized 1×7/7×1 convolutions are kept
+//! as separate layers (their asymmetric kernels matter for CTC).
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::layer::{conv_out_dim, Layer, LayerKind};
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// Helper appending an asymmetric CONV (kh×kw) at an explicit input.
+struct B {
+    b: NetworkBuilder,
+}
+
+impl B {
+    fn conv2(
+        mut self,
+        input: TensorShape,
+        out_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        ph: usize,
+        pw: usize,
+    ) -> (Self, TensorShape) {
+        let out = TensorShape::new(
+            out_c,
+            conv_out_dim(input.h, kh, stride, ph),
+            conv_out_dim(input.w, kw, stride, pw),
+        );
+        let p = self.b.precision();
+        self.b = self.b.push_raw(Layer {
+            name: format!("conv_{kh}x{kw}"),
+            kind: LayerKind::Conv { kernel: kh, kernel_w: kw, stride, pad: ph, groups: 1 },
+            input,
+            output: out,
+            precision: p,
+        });
+        (self, out)
+    }
+}
+
+/// Inception-v3. Channel configs per torchvision.
+pub fn inception_v3(input: TensorShape, p: Precision) -> Network {
+    let b = NetworkBuilder::new("Inception-V3", input, p)
+        .branchy()
+        .conv(32, 3, 2, 0)
+        .conv(32, 3, 1, 0)
+        .conv(64, 3, 1, 1)
+        .pool(3, 2)
+        .conv(80, 1, 1, 0)
+        .conv(192, 3, 1, 0)
+        .pool(3, 2);
+    let mut w = B { b };
+    let mut shape = w.b.shape();
+
+    // 3x InceptionA (pool_features: 32, 64, 64)
+    for pf in [32usize, 64, 64] {
+        let inp = shape;
+        (w, _) = w.conv2(inp, 64, 1, 1, 1, 0, 0); // 1x1
+        (w, _) = w.conv2(inp, 48, 1, 1, 1, 0, 0); // 5x5 branch
+        (w, _) = w.conv2(TensorShape::new(48, inp.h, inp.w), 64, 5, 5, 1, 2, 2);
+        (w, _) = w.conv2(inp, 64, 1, 1, 1, 0, 0); // 3x3dbl branch
+        (w, _) = w.conv2(TensorShape::new(64, inp.h, inp.w), 96, 3, 3, 1, 1, 1);
+        (w, _) = w.conv2(TensorShape::new(96, inp.h, inp.w), 96, 3, 3, 1, 1, 1);
+        (w, _) = w.conv2(inp, pf, 1, 1, 1, 0, 0); // pool proj
+        shape = TensorShape::new(64 + 64 + 96 + pf, inp.h, inp.w);
+    }
+
+    // InceptionB (grid reduction 35->17)
+    {
+        let inp = shape;
+        let oh = conv_out_dim(inp.h, 3, 2, 0);
+        let ow = conv_out_dim(inp.w, 3, 2, 0);
+        (w, _) = w.conv2(inp, 384, 3, 3, 2, 0, 0);
+        (w, _) = w.conv2(inp, 64, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(64, inp.h, inp.w), 96, 3, 3, 1, 1, 1);
+        (w, _) = w.conv2(TensorShape::new(96, inp.h, inp.w), 96, 3, 3, 2, 0, 0);
+        shape = TensorShape::new(384 + 96 + inp.c, oh, ow);
+    }
+
+    // 4x InceptionC (c7: 128, 160, 160, 192)
+    for c7 in [128usize, 160, 160, 192] {
+        let inp = shape;
+        (w, _) = w.conv2(inp, 192, 1, 1, 1, 0, 0);
+        // 7x7 branch: 1x1 -> 1x7 -> 7x1
+        (w, _) = w.conv2(inp, c7, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), c7, 1, 7, 1, 0, 3);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), 192, 7, 1, 1, 3, 0);
+        // 7x7dbl branch
+        (w, _) = w.conv2(inp, c7, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), c7, 7, 1, 1, 3, 0);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), c7, 1, 7, 1, 0, 3);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), c7, 7, 1, 1, 3, 0);
+        (w, _) = w.conv2(TensorShape::new(c7, inp.h, inp.w), 192, 1, 7, 1, 0, 3);
+        (w, _) = w.conv2(inp, 192, 1, 1, 1, 0, 0); // pool proj
+        shape = TensorShape::new(768, inp.h, inp.w);
+    }
+
+    // InceptionD (grid reduction 17->8)
+    {
+        let inp = shape;
+        let oh = conv_out_dim(inp.h, 3, 2, 0);
+        let ow = conv_out_dim(inp.w, 3, 2, 0);
+        (w, _) = w.conv2(inp, 192, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(192, inp.h, inp.w), 320, 3, 3, 2, 0, 0);
+        (w, _) = w.conv2(inp, 192, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(192, inp.h, inp.w), 192, 1, 7, 1, 0, 3);
+        (w, _) = w.conv2(TensorShape::new(192, inp.h, inp.w), 192, 7, 1, 1, 3, 0);
+        (w, _) = w.conv2(TensorShape::new(192, inp.h, inp.w), 192, 3, 3, 2, 0, 0);
+        shape = TensorShape::new(320 + 192 + inp.c, oh, ow);
+    }
+
+    // 2x InceptionE
+    for _ in 0..2 {
+        let inp = shape;
+        (w, _) = w.conv2(inp, 320, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(inp, 384, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(384, inp.h, inp.w), 384, 1, 3, 1, 0, 1);
+        (w, _) = w.conv2(TensorShape::new(384, inp.h, inp.w), 384, 3, 1, 1, 1, 0);
+        (w, _) = w.conv2(inp, 448, 1, 1, 1, 0, 0);
+        (w, _) = w.conv2(TensorShape::new(448, inp.h, inp.w), 384, 3, 3, 1, 1, 1);
+        (w, _) = w.conv2(TensorShape::new(384, inp.h, inp.w), 384, 1, 3, 1, 0, 1);
+        (w, _) = w.conv2(TensorShape::new(384, inp.h, inp.w), 384, 3, 1, 1, 1, 0);
+        (w, _) = w.conv2(inp, 192, 1, 1, 1, 0, 0);
+        shape = TensorShape::new(2048, inp.h, inp.w);
+    }
+
+    // classifier as 1x1 over pooled map
+    let pooled = TensorShape::new(shape.c, 1, 1);
+    (w, _) = w.conv2(pooled, 1000, 1, 1, 1, 0, 0);
+    w.b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inception_v3_workload() {
+        let net = inception_v3(TensorShape::new(3, 299, 299), Precision::Int16);
+        // ~5.7 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 4.0 && gmac < 8.0, "InceptionV3 GMAC {gmac}");
+        assert!(net.conv_count() > 80);
+    }
+}

@@ -1,0 +1,96 @@
+//! MobileNet v1 (Howard et al. 2017) and v2 (Sandler et al. 2018):
+//! depthwise-separable convolutions, serialized.
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// Depthwise-separable block: 3×3 depthwise + 1×1 pointwise.
+fn dw_sep(mut b: NetworkBuilder, out_c: usize, stride: usize) -> NetworkBuilder {
+    let c = b.shape().c;
+    b = b.conv_grouped(c, 3, stride, 1, c); // depthwise
+    b.conv(out_c, 1, 1, 0) // pointwise
+}
+
+/// MobileNet v1 at 3×224×224, width multiplier 1.0.
+pub fn mobilenet(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("MobileNet", input, p).conv(32, 3, 2, 1);
+    let cfg: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (out_c, stride) in cfg {
+        b = dw_sep(b, out_c, stride);
+    }
+    b.global_pool().fc(1000).build()
+}
+
+/// Inverted-residual block of MobileNet v2: 1×1 expand (×t) → 3×3
+/// depthwise → 1×1 project.
+fn inv_res(mut b: NetworkBuilder, out_c: usize, stride: usize, t: usize) -> NetworkBuilder {
+    let c = b.shape().c;
+    if t != 1 {
+        b = b.conv(c * t, 1, 1, 0);
+    }
+    let mid = b.shape().c;
+    b = b.conv_grouped(mid, 3, stride, 1, mid);
+    b.conv(out_c, 1, 1, 0)
+}
+
+/// MobileNet v2 at 3×224×224, width multiplier 1.0.
+pub fn mobilenet_v2(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("MobileNetV2", input, p).conv(32, 3, 2, 1);
+    // (t, c, n, s) per the paper
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (t, c, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            b = inv_res(b, c, stride, t);
+        }
+    }
+    b = b.conv(1280, 1, 1, 0);
+    b.global_pool().fc(1000).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_v1_workload() {
+        let net = mobilenet(TensorShape::new(3, 224, 224), Precision::Int8);
+        // ~0.57 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!((gmac - 0.57).abs() < 0.15, "MobileNet GMAC {gmac}");
+        // ~4.2M params
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((params - 4.2).abs() < 1.0, "MobileNet params {params}M");
+    }
+
+    #[test]
+    fn mobilenet_v2_workload() {
+        let net = mobilenet_v2(TensorShape::new(3, 224, 224), Precision::Int8);
+        // ~0.3 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 0.2 && gmac < 0.5, "MobileNetV2 GMAC {gmac}");
+        net.validate_shapes().unwrap();
+    }
+}

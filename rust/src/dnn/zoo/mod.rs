@@ -1,0 +1,117 @@
+//! Model zoo: the networks the paper analyzes and evaluates.
+//!
+//! All architectures are defined at the layer-shape level (the only level
+//! the paper's analysis needs). Branchy networks (ResNet, GoogLeNet,
+//! Inception, SqueezeNet) are serialized in topological order — their
+//! per-layer workloads (MACs, CTC) are exact, which is what Table 1 and
+//! the DSE consume.
+
+pub mod alexnet;
+pub mod googlenet;
+pub mod inception;
+pub mod mobilenet;
+pub mod resnet;
+pub mod squeezenet;
+pub mod vgg;
+pub mod yolo;
+pub mod zf;
+
+use crate::dnn::{Network, Precision, TensorShape};
+
+pub use vgg::{vgg16, vgg16_conv, vgg19, vgg_like};
+
+/// The 12 input-resolution cases of the paper's Fig. 1 / Fig. 9 / Table 3.
+pub const INPUT_CASES: [(usize, usize); 12] = [
+    (32, 32),
+    (64, 64),
+    (128, 128),
+    (224, 224),
+    (320, 320),
+    (384, 384),
+    (320, 480),
+    (448, 448),
+    (512, 512),
+    (480, 800),
+    (512, 1382),
+    (720, 1280),
+];
+
+/// Look a zoo network up by name at a given input resolution & precision.
+/// Unknown names return `None`.
+pub fn by_name(name: &str, h: usize, w: usize, p: Precision) -> Option<Network> {
+    let input = TensorShape::new(3, h, w);
+    Some(match name.to_ascii_lowercase().as_str() {
+        "vgg16" => vgg::vgg16(input, p),
+        "vgg16_conv" | "vgg16-conv" => vgg::vgg16_conv(input, p),
+        "vgg19" => vgg::vgg19(input, p),
+        "alexnet" => alexnet::alexnet(input, p),
+        "zf" => zf::zf(input, p),
+        "yolo" => yolo::yolo(input, p),
+        "resnet18" | "resnet-18" => resnet::resnet18(input, p),
+        "resnet50" | "resnet-50" => resnet::resnet50(input, p),
+        "googlenet" => googlenet::googlenet(input, p),
+        "inceptionv3" => inception::inception_v3(input, p),
+        "squeezenet" => squeezenet::squeezenet(input, p),
+        "mobilenet" => mobilenet::mobilenet(input, p),
+        "mobilenetv2" => mobilenet::mobilenet_v2(input, p),
+        _ => return None,
+    })
+}
+
+/// The ten networks of the paper's Table 1, at their paper input sizes.
+pub fn table1_networks(p: Precision) -> Vec<Network> {
+    vec![
+        alexnet::alexnet(TensorShape::new(3, 227, 227), p),
+        googlenet::googlenet(TensorShape::new(3, 224, 224), p),
+        inception::inception_v3(TensorShape::new(3, 299, 299), p),
+        vgg::vgg16(TensorShape::new(3, 224, 224), p),
+        vgg::vgg19(TensorShape::new(3, 224, 224), p),
+        resnet::resnet18(TensorShape::new(3, 224, 224), p),
+        resnet::resnet50(TensorShape::new(3, 224, 224), p),
+        squeezenet::squeezenet(TensorShape::new(3, 227, 227), p),
+        mobilenet::mobilenet(TensorShape::new(3, 224, 224), p),
+        mobilenet::mobilenet_v2(TensorShape::new(3, 224, 224), p),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all_zoo_networks() {
+        for n in [
+            "vgg16",
+            "vgg16_conv",
+            "vgg19",
+            "alexnet",
+            "zf",
+            "yolo",
+            "resnet18",
+            "resnet50",
+            "googlenet",
+            "inceptionv3",
+            "squeezenet",
+            "mobilenet",
+            "mobilenetv2",
+        ] {
+            let net = by_name(n, 224, 224, Precision::Int16)
+                .unwrap_or_else(|| panic!("missing zoo network {n}"));
+            assert!(net.total_ops() > 0, "{n} has zero ops");
+        }
+        assert!(by_name("nope", 224, 224, Precision::Int16).is_none());
+    }
+
+    #[test]
+    fn table1_has_ten_networks() {
+        let nets = table1_networks(Precision::Int16);
+        assert_eq!(nets.len(), 10);
+    }
+
+    #[test]
+    fn input_cases_match_paper() {
+        assert_eq!(INPUT_CASES.len(), 12);
+        assert_eq!(INPUT_CASES[3], (224, 224));
+        assert_eq!(INPUT_CASES[11], (720, 1280));
+    }
+}

@@ -1,0 +1,83 @@
+//! ResNet-18 / ResNet-50 (He et al. 2016), serialized in topological
+//! order (residual adds carry no MAC workload; 1×1 projection shortcuts
+//! are included as CONV layers since they do).
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// ResNet-18: basic blocks [2, 2, 2, 2].
+pub fn resnet18(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("ResNet-18", input, p)
+        .branchy()
+        .conv(64, 7, 2, 3)
+        .pool(3, 2);
+    let widths = [64usize, 128, 256, 512];
+    for (stage, &w) in widths.iter().enumerate() {
+        let blocks = 2;
+        for blk in 0..blocks {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            let in_shape = b.shape();
+            if stride != 1 || in_shape.c != w {
+                // projection shortcut
+                b = b.conv_at(in_shape, w, 1, stride, 0, 1);
+            }
+            b = b.conv_at(in_shape, w, 3, stride, 1, 1).conv(w, 3, 1, 1);
+        }
+    }
+    b.global_pool().fc(1000).build()
+}
+
+/// ResNet-50: bottleneck blocks [3, 4, 6, 3].
+pub fn resnet50(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("ResNet-50", input, p)
+        .branchy()
+        .conv(64, 7, 2, 3)
+        .pool(3, 2);
+    let cfg: [(usize, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+    for (stage, &(w, blocks)) in cfg.iter().enumerate() {
+        for blk in 0..blocks {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            let in_shape = b.shape();
+            if blk == 0 {
+                // projection shortcut to 4w channels
+                b = b.conv_at(in_shape, 4 * w, 1, stride, 0, 1);
+            }
+            b = b
+                .conv_at(in_shape, w, 1, 1, 0, 1)
+                .conv(w, 3, stride, 1)
+                .conv(4 * w, 1, 1, 0);
+        }
+    }
+    b.global_pool().fc(1000).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_workload() {
+        let net = resnet18(TensorShape::new(3, 224, 224), Precision::Int16);
+        // ~1.8 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!((gmac - 1.8).abs() < 0.3, "ResNet-18 GMAC {gmac}");
+    }
+
+    #[test]
+    fn resnet50_workload() {
+        let net = resnet50(TensorShape::new(3, 224, 224), Precision::Int16);
+        // ~4.1 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!((gmac - 4.1).abs() < 0.6, "ResNet-50 GMAC {gmac}");
+        // params ~25.6M
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((params - 25.5).abs() < 3.0, "ResNet-50 params {params}M");
+    }
+
+    #[test]
+    fn resnet50_conv_count() {
+        let net = resnet50(TensorShape::new(3, 224, 224), Precision::Int16);
+        // 1 stem + 16 blocks * 3 + 4 projections = 53 convs
+        assert_eq!(net.conv_count(), 53);
+    }
+}

@@ -1,0 +1,58 @@
+//! SqueezeNet 1.0 (Iandola et al. 2016): fire modules serialized.
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// One fire module: squeeze 1×1 then parallel expand 1×1 and expand 3×3.
+fn fire(mut b: NetworkBuilder, input: TensorShape, s1: usize, e1: usize, e3: usize) -> (NetworkBuilder, TensorShape) {
+    b = b.conv_at(input, s1, 1, 1, 0, 1);
+    let squeezed = TensorShape::new(s1, input.h, input.w);
+    b = b.conv_at(squeezed, e1, 1, 1, 0, 1);
+    b = b.conv_at(squeezed, e3, 3, 1, 1, 1);
+    (b, TensorShape::new(e1 + e3, input.h, input.w))
+}
+
+/// SqueezeNet at 3×227×227.
+pub fn squeezenet(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("SqueezeNet", input, p)
+        .branchy()
+        .conv(96, 7, 2, 0)
+        .pool(3, 2);
+    let mut shape = b.shape();
+    let cfg: [(usize, usize, usize); 8] = [
+        (16, 64, 64),
+        (16, 64, 64),
+        (32, 128, 128),
+        (32, 128, 128),
+        (48, 192, 192),
+        (48, 192, 192),
+        (64, 256, 256),
+        (64, 256, 256),
+    ];
+    for (i, &(s1, e1, e3)) in cfg.iter().enumerate() {
+        (b, shape) = fire(b, shape, s1, e1, e3);
+        // maxpools after fire3 and fire7 (0-indexed: 2 and 6)
+        if i == 2 || i == 6 {
+            shape = TensorShape::new(shape.c, (shape.h - 3) / 2 + 1, (shape.w - 3) / 2 + 1);
+        }
+    }
+    // final 1x1 conv classifier
+    b = b.conv_at(shape, 1000, 1, 1, 0, 1);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squeezenet_workload() {
+        let net = squeezenet(TensorShape::new(3, 227, 227), Precision::Int16);
+        // ~0.8 GMAC canonical
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 0.4 && gmac < 1.5, "SqueezeNet GMAC {gmac}");
+        // ~1.2M params
+        let params = net.total_weights() as f64 / 1e6;
+        assert!(params < 2.0, "SqueezeNet params {params}M");
+    }
+}

@@ -1,0 +1,130 @@
+//! VGG family: VGG16, VGG19 (Simonyan & Zisserman 2014), the conv-only
+//! variant used throughout the paper's evaluation, and the "VGG-like"
+//! deepened variants (13/18/28/38 CONV layers) of Fig. 2b / Fig. 11.
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// VGG16 without the last three FC layers (the paper's evaluation DNN:
+/// "12 VGG-16 (without the last three FC layers) models with different
+/// input sizes"). 13 CONV layers + 5 POOLs.
+pub fn vgg16_conv(input: TensorShape, p: Precision) -> Network {
+    vgg_like(input, p, 0)
+}
+
+/// Full VGG16: conv backbone + 3 FC layers. Only meaningful for the
+/// canonical 224×224 input (FC sizes assume a 7×7×512 tail).
+pub fn vgg16(input: TensorShape, p: Precision) -> Network {
+    let mut b = vgg_backbone(
+        NetworkBuilder::new("VGG-16", input, p),
+        &[2, 2, 3, 3, 3],
+    );
+    // FC layers only attach when the tail is the canonical 7x7; for other
+    // resolutions the conv-only model is the meaningful object (matching
+    // the paper, which drops FCs for all non-224 cases).
+    if b.shape().h == 7 && b.shape().w == 7 {
+        b = b.fc(4096).fc(4096).fc(1000);
+    }
+    b.build()
+}
+
+/// Full VGG19 (4 CONVs in groups 3-5).
+pub fn vgg19(input: TensorShape, p: Precision) -> Network {
+    let mut b = vgg_backbone(
+        NetworkBuilder::new("VGG-19", input, p),
+        &[2, 2, 4, 4, 4],
+    );
+    if b.shape().h == 7 && b.shape().w == 7 {
+        b = b.fc(4096).fc(4096).fc(1000);
+    }
+    b.build()
+}
+
+/// The paper's deepened "VGG-like" networks (Fig. 2b, Fig. 11):
+/// `extra` CONV layers are added to **each of the 5 groups**, keeping each
+/// group's kernel count. extra = 0→13, 1→18, 3→28, 5→38 CONV layers.
+pub fn vgg_like(input: TensorShape, p: Precision, extra: usize) -> Network {
+    let groups = [2 + extra, 2 + extra, 3 + extra, 3 + extra, 3 + extra];
+    let convs: usize = groups.iter().sum();
+    let name = format!("VGG-like-{convs}");
+    let b = vgg_backbone(NetworkBuilder::new(&name, input, p), &groups);
+    b.build()
+}
+
+/// Shared VGG conv backbone: 5 groups of 3×3/s1/p1 CONVs with channel
+/// widths 64/128/256/512/512, each followed by a 2×2/s2 max-pool.
+fn vgg_backbone(mut b: NetworkBuilder, group_convs: &[usize]) -> NetworkBuilder {
+    let widths = [64usize, 128, 256, 512, 512];
+    for (g, (&n, &c)) in group_convs.iter().zip(widths.iter()).enumerate() {
+        for _ in 0..n {
+            b = b.conv(c, 3, 1, 1);
+        }
+        // Pool only while the map is larger than 1x1 (guards tiny inputs).
+        if b.shape().h >= 2 && b.shape().w >= 2 {
+            b = b.pool(2, 2);
+        }
+        let _ = g;
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_conv_layer_count() {
+        let net = vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        assert_eq!(net.conv_count(), 13);
+        // 13 convs + 5 pools
+        assert_eq!(net.layers.len(), 18);
+        net.validate_shapes().unwrap();
+    }
+
+    #[test]
+    fn vgg16_conv_gop_matches_paper() {
+        // Paper Table 3 case 4: 1702.3 GOP/s at 55.4 img/s -> 30.7 GOP/img.
+        let net = vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let gop = net.total_gop();
+        assert!((gop - 30.7).abs() < 0.3, "VGG16-conv GOP {gop} != ~30.7");
+    }
+
+    #[test]
+    fn vgg16_full_has_fc() {
+        let net = vgg16(TensorShape::new(3, 224, 224), Precision::Int16);
+        assert_eq!(net.layers.len(), 21); // 13 conv + 5 pool + 3 fc
+        // total params ~138M
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((params - 138.0).abs() < 5.0, "params {params}M");
+    }
+
+    #[test]
+    fn vgg19_conv_count() {
+        let net = vgg19(TensorShape::new(3, 224, 224), Precision::Int16);
+        assert_eq!(net.conv_count(), 16);
+    }
+
+    #[test]
+    fn vgg_like_depths_match_paper() {
+        for (extra, convs) in [(0usize, 13usize), (1, 18), (3, 28), (5, 38)] {
+            let net = vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, extra);
+            assert_eq!(net.conv_count(), convs, "extra={extra}");
+        }
+    }
+
+    #[test]
+    fn vgg16_conv_works_at_all_12_input_cases() {
+        for (h, w) in crate::dnn::zoo::INPUT_CASES {
+            let net = vgg16_conv(TensorShape::new(3, h, w), Precision::Int16);
+            net.validate_shapes().unwrap();
+            assert_eq!(net.conv_count(), 13, "case {h}x{w}");
+        }
+    }
+
+    #[test]
+    fn deeper_vgg_has_more_ops() {
+        let d13 = vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, 0);
+        let d38 = vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, 5);
+        assert!(d38.total_ops() > 2 * d13.total_ops());
+    }
+}

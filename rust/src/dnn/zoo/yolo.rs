@@ -1,0 +1,57 @@
+//! YOLO (Redmon et al. 2016) conv backbone — the 24-CONV detection
+//! network, FC head folded to its conv-equivalent. Used in the paper's
+//! Fig. 7 accuracy study (networks N3/N6 on ZC706, N4/N8 on KU115).
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// YOLOv1 backbone at 3×448×448 (canonical) or any input size.
+pub fn yolo(input: TensorShape, p: Precision) -> Network {
+    let mut b = NetworkBuilder::new("YOLO", input, p)
+        .conv(64, 7, 2, 3)
+        .pool(2, 2)
+        .conv(192, 3, 1, 1)
+        .pool(2, 2)
+        .conv(128, 1, 1, 0)
+        .conv(256, 3, 1, 1)
+        .conv(256, 1, 1, 0)
+        .conv(512, 3, 1, 1)
+        .pool(2, 2);
+    // 4x (1x1x256 -> 3x3x512)
+    for _ in 0..4 {
+        b = b.conv(256, 1, 1, 0).conv(512, 3, 1, 1);
+    }
+    b = b.conv(512, 1, 1, 0).conv(1024, 3, 1, 1).pool(2, 2);
+    // 2x (1x1x512 -> 3x3x1024)
+    for _ in 0..2 {
+        b = b.conv(512, 1, 1, 0).conv(1024, 3, 1, 1);
+    }
+    b = b
+        .conv(1024, 3, 1, 1)
+        .conv(1024, 3, 2, 1)
+        .conv(1024, 3, 1, 1)
+        .conv(1024, 3, 1, 1);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yolo_structure() {
+        let net = yolo(TensorShape::new(3, 448, 448), Precision::Int16);
+        assert_eq!(net.conv_count(), 24);
+        net.validate_shapes().unwrap();
+        // ~20 GMAC at 448
+        let gmac = net.total_ops() as f64 / 2e9;
+        assert!(gmac > 10.0 && gmac < 35.0, "YOLO GMAC {gmac}");
+    }
+
+    #[test]
+    fn yolo_at_224() {
+        let net = yolo(TensorShape::new(3, 224, 224), Precision::Int8);
+        net.validate_shapes().unwrap();
+        assert_eq!(net.conv_count(), 24);
+    }
+}

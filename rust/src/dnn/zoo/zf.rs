@@ -1,0 +1,35 @@
+//! ZF-Net (Zeiler & Fergus 2013) — AlexNet-like with 7×7/s2 first layer.
+//! Used by the paper's Fig. 7 model-accuracy study (networks N2/N5).
+
+use crate::dnn::graph::NetworkBuilder;
+use crate::dnn::{Network, Precision, TensorShape};
+
+/// ZF-Net at 3×224×224.
+pub fn zf(input: TensorShape, p: Precision) -> Network {
+    NetworkBuilder::new("ZF", input, p)
+        .conv(96, 7, 2, 1)
+        .pool(3, 2)
+        .conv(256, 5, 2, 0)
+        .pool(3, 2)
+        .conv(384, 3, 1, 1)
+        .conv(384, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .pool(3, 2)
+        .fc(4096)
+        .fc(4096)
+        .fc(1000)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zf_structure() {
+        let net = zf(TensorShape::new(3, 224, 224), Precision::Int16);
+        assert_eq!(net.conv_count(), 5);
+        net.validate_shapes().unwrap();
+        assert!(net.total_ops() > 0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Accelerator-configuration emission — the "optimization file" of the
+//! paper's Fig. 4 that drives implementation.
+//!
+//! Emits the explored design as JSON: RAV, per-stage `(CPF, KPF, DW, WW)`
+//! + buffer sizing for the pipeline structure, the generic structure's
+//! array geometry / buffer strategy / capacities, and the headline
+//! estimates. A downstream HLS/RTL generator (out of scope — we have no
+//! FPGA toolchain) would consume exactly this.
+
+use crate::dse::engine::Candidate;
+use crate::perfmodel::pipeline::stage_resources;
+use crate::util::json::Json;
+use crate::Network;
+
+/// Render the explored candidate as the optimization-file JSON.
+pub fn emit(net: &Network, cand: &Candidate) -> Json {
+    let layers: Vec<_> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    let mut fields = vec![
+        ("network", Json::s(net.name.clone())),
+        (
+            "rav",
+            Json::obj(vec![
+                ("split_point", Json::n(cand.rav.sp as f64)),
+                ("batch", Json::n(cand.rav.batch as f64)),
+                ("dsp_frac", Json::n(cand.rav.dsp_frac)),
+                ("bram_frac", Json::n(cand.rav.bram_frac)),
+                ("bw_frac", Json::n(cand.rav.bw_frac)),
+            ]),
+        ),
+        (
+            "estimate",
+            Json::obj(vec![
+                ("gops", Json::n(cand.gops)),
+                ("fps", Json::n(cand.throughput_fps)),
+                ("dsp_used", Json::n(cand.dsp_used)),
+                ("bram18k_used", Json::n(cand.bram_used)),
+                ("dsp_efficiency", Json::n(cand.dsp_efficiency)),
+            ]),
+        ),
+    ];
+
+    if let Some(p) = &cand.pipeline {
+        let stages: Vec<Json> = p
+            .config
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let l = layers[i];
+                let res = stage_resources(l, s);
+                Json::obj(vec![
+                    ("index", Json::n(i as f64)),
+                    ("layer", Json::s(l.name.clone())),
+                    ("cpf", Json::n(s.cpf as f64)),
+                    ("kpf", Json::n(s.kpf as f64)),
+                    ("dw_bits", Json::n(s.dw.bits() as f64)),
+                    ("ww_bits", Json::n(s.ww.bits() as f64)),
+                    ("dsp", Json::n(res.dsp)),
+                    ("bram18k", Json::n(res.bram18k)),
+                ])
+            })
+            .collect();
+        fields.push(("pipeline_stages", Json::Arr(stages)));
+    }
+
+    if let Some(g) = &cand.generic {
+        fields.push((
+            "generic_structure",
+            Json::obj(vec![
+                ("cpf", Json::n(g.config.cpf as f64)),
+                ("kpf", Json::n(g.config.kpf as f64)),
+                (
+                    "buffer_strategy",
+                    Json::s(format!("{:?}", g.config.strategy)),
+                ),
+                ("cap_fm_bits", Json::n(g.config.cap_fm_bits)),
+                ("cap_accum_bits", Json::n(g.config.cap_accum_bits)),
+                ("cap_w_bits", Json::n(g.config.cap_w_bits)),
+                (
+                    "layer_dataflows",
+                    Json::Arr(
+                        g.estimate
+                            .layers
+                            .iter()
+                            .map(|d| Json::s(format!("{:?}", d.dataflow)))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, Precision, TensorShape};
+    use crate::dse::rav::Rav;
+    use crate::dse::{engine, ExplorerConfig};
+    use crate::fpga::FpgaDevice;
+
+    #[test]
+    fn emits_complete_config() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 };
+        let cand = engine::evaluate(&net, &cfg, rav).expect("feasible");
+        let j = emit(&net, &cand).render();
+        assert!(j.contains("\"split_point\":4"));
+        assert!(j.contains("pipeline_stages"));
+        assert!(j.contains("generic_structure"));
+        assert!(j.contains("\"cpf\""));
+        // Stage list length == SP.
+        assert_eq!(j.matches("\"index\":").count(), 4);
+    }
+
+    #[test]
+    fn pure_generic_has_no_stage_list() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+        let rav = Rav { sp: 0, batch: 1, dsp_frac: 0.1, bram_frac: 0.1, bw_frac: 0.1 };
+        let cand = engine::evaluate(&net, &cfg, rav).expect("feasible");
+        let j = emit(&net, &cand).render();
+        assert!(!j.contains("pipeline_stages"));
+        assert!(j.contains("generic_structure"));
+    }
+}

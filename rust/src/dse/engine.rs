@@ -1,0 +1,409 @@
+//! The DNNExplorer engine: fitness evaluation of one RAV (local
+//! optimizations + analytical models) and the full three-step flow
+//! (*Model Analysis → Accelerator Modeling → Architecture Exploration*).
+
+use std::time::Instant;
+
+
+use crate::dnn::{Layer, Network, Precision};
+use crate::dse::local_generic::{self, GenericPlan};
+use crate::dse::local_pipeline::{self, PipelinePlan};
+use crate::dse::pso::{self, PsoParams};
+use crate::dse::rav::{Bounds, Rav};
+use crate::fpga::{FpgaDevice, ResourceBudget};
+use crate::perfmodel::dsp_efficiency;
+
+/// Optimization objective of the DSE.
+///
+/// The paper maximizes throughput (Eq. 4); the DNNBuilder lineage also
+/// cares about end-to-end frame latency for real-time workloads, so the
+/// engine supports both. Under `Latency`, the batch is effectively
+/// pinned to 1 (batching only adds queueing delay).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Throughput,
+    Latency,
+}
+
+/// Explorer-level configuration.
+#[derive(Debug, Clone)]
+pub struct ExplorerConfig {
+    pub device: FpgaDevice,
+    /// Activation bit-width.
+    pub dw: Precision,
+    /// Weight bit-width.
+    pub ww: Precision,
+    /// Pin the batch size (paper Table 3 uses batch = 1); `None` lets the
+    /// DSE explore it (Table 4).
+    pub fixed_batch: Option<usize>,
+    pub objective: Objective,
+    pub pso: PsoParams,
+    pub seed: u64,
+}
+
+impl ExplorerConfig {
+    pub fn new(device: FpgaDevice) -> Self {
+        Self {
+            device,
+            dw: Precision::Int16,
+            ww: Precision::Int16,
+            fixed_batch: Some(1),
+            objective: Objective::Throughput,
+            pso: PsoParams::default(),
+            seed: 0xD44E,
+        }
+    }
+}
+
+/// A fully-evaluated accelerator candidate for one RAV.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub rav: Rav,
+    pub pipeline: Option<PipelinePlan>,
+    pub generic: Option<GenericPlan>,
+    /// System throughput in frames/s (steady state, includes batch).
+    pub throughput_fps: f64,
+    /// Sustained GOP/s over the whole network.
+    pub gops: f64,
+    /// Total DSPs actually used.
+    pub dsp_used: f64,
+    /// Total BRAM18K blocks actually used.
+    pub bram_used: f64,
+    /// Eq. 1 efficiency over the used DSPs.
+    pub dsp_efficiency: f64,
+    /// End-to-end single-frame latency (fill + both structures'
+    /// processing), seconds.
+    pub frame_latency_s: f64,
+}
+
+impl Candidate {
+    /// Fitness under a given objective (higher is better).
+    pub fn fitness(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Throughput => self.throughput_fps,
+            Objective::Latency => {
+                if self.frame_latency_s > 0.0 {
+                    1.0 / self.frame_latency_s
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate a RAV into a full candidate (the PSO's `FitnessScore`).
+///
+/// Implements the interplay of Algorithms 2 and 3 including the roll-back
+/// (Alg. 3 lines 11–14): if the generic structure cannot balance the
+/// pipeline within the leftover resources, the pipeline is scaled down and
+/// the generic re-grown; the best overall throughput wins.
+pub fn evaluate(net: &Network, cfg: &ExplorerConfig, rav: Rav) -> Option<Candidate> {
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    let n = layers.len();
+    let sp = rav.sp.min(n);
+    let batch = rav.batch.max(1);
+    let device = &cfg.device;
+    let freq = device.freq_mhz;
+
+    let p_budget = rav.pipeline_budget(device);
+    let total = ResourceBudget::of_device(device);
+
+    let mut best: Option<Candidate> = None;
+
+    // Initial pipeline plan (None when SP = 0).
+    let mut pipeline = if sp > 0 {
+        match local_pipeline::optimize(&layers[..sp], &p_budget, batch, freq, cfg.dw, cfg.ww) {
+            Some(p) => Some(p),
+            None => return None, // pipeline infeasible under this RAV
+        }
+    } else {
+        None
+    };
+
+    for _round in 0..24 {
+        // Generic budget: whatever the pipeline did not actually consume
+        // (Alg. 3 line 4 grows against R_total − ΣR_i), bandwidth per RAV.
+        let p_used = pipeline
+            .as_ref()
+            .map(|p| p.estimate.resources)
+            .unwrap_or_default();
+        let g_budget = ResourceBudget::new(
+            (total.dsp - p_used.dsp).max(0.0),
+            (total.bram18k - p_used.bram18k).max(0.0),
+            if sp > 0 {
+                (total.bw_gbps * (1.0 - rav.bw_frac)).max(0.0)
+            } else {
+                total.bw_gbps
+            },
+        );
+        let p_interval = pipeline
+            .as_ref()
+            .map(|p| {
+                p.estimate
+                    .stages
+                    .iter()
+                    .map(|s| s.interval_s)
+                    .fold(0.0f64, f64::max)
+            })
+            .unwrap_or(0.0);
+        let target = if sp > 0 { p_interval } else { 0.0 };
+
+        let generic = if sp < n {
+            local_generic::optimize(
+                &layers[sp..],
+                &g_budget,
+                target,
+                batch,
+                freq,
+                cfg.dw,
+                cfg.ww,
+            )
+        } else {
+            None
+        };
+        if sp < n && generic.is_none() {
+            // Generic structure mandatory but infeasible: try freeing
+            // resources by shrinking the pipeline.
+            match pipeline
+                .as_ref()
+                .and_then(|p| local_pipeline::scale_down(&layers[..sp], p, &p_budget))
+            {
+                Some(p) => {
+                    pipeline = Some(p);
+                    continue;
+                }
+                None => return best,
+            }
+        }
+
+        let cand = assemble(net, cfg, rav, pipeline.clone(), generic.clone())?;
+        let balanced = generic
+            .as_ref()
+            .map(|g| g.estimate.period_s <= target * 1.001 || sp == 0)
+            .unwrap_or(true);
+        let improved = best
+            .as_ref()
+            .map(|b| cand.fitness(cfg.objective) > b.fitness(cfg.objective))
+            .unwrap_or(true);
+        if improved {
+            best = Some(cand);
+        }
+        if balanced || sp == 0 || sp >= n {
+            break;
+        }
+        // Roll back: shrink the pipeline to feed the generic structure.
+        match pipeline
+            .as_ref()
+            .and_then(|p| local_pipeline::scale_down(&layers[..sp], p, &p_budget))
+        {
+            Some(p) => pipeline = Some(p),
+            None => break,
+        }
+    }
+    best
+}
+
+/// Combine pipeline + generic estimates into a system-level candidate.
+fn assemble(
+    net: &Network,
+    cfg: &ExplorerConfig,
+    rav: Rav,
+    pipeline: Option<PipelinePlan>,
+    generic: Option<GenericPlan>,
+) -> Option<Candidate> {
+    if pipeline.is_none() && generic.is_none() {
+        return None;
+    }
+    let batch = rav.batch.max(1) as f64;
+    let p_interval = pipeline
+        .as_ref()
+        .map(|p| {
+            p.estimate
+                .stages
+                .iter()
+                .map(|s| s.interval_s)
+                .fold(0.0f64, f64::max)
+        })
+        .unwrap_or(0.0);
+    let g_period = generic.as_ref().map(|g| g.estimate.period_s).unwrap_or(0.0);
+    // Figure 5 dataflow: P and G overlap across consecutive batches; the
+    // steady-state period is the slower of the two.
+    let period = p_interval.max(g_period);
+    if period <= 0.0 {
+        return None;
+    }
+    let fps = batch / period;
+    let total_ops: f64 = net
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| l.ops() as f64)
+        .sum();
+    let gops = fps * total_ops / 1e9;
+    let dsp_used = pipeline.as_ref().map(|p| p.estimate.resources.dsp).unwrap_or(0.0)
+        + generic.as_ref().map(|g| g.estimate.resources.dsp).unwrap_or(0.0);
+    let bram_used = pipeline
+        .as_ref()
+        .map(|p| p.estimate.resources.bram18k)
+        .unwrap_or(0.0)
+        + generic
+            .as_ref()
+            .map(|g| g.estimate.resources.bram18k)
+            .unwrap_or(0.0);
+    let eff = dsp_efficiency(gops, cfg.ww, dsp_used, cfg.device.freq_mhz);
+    // Single-frame latency: the pipeline's fill + one frame interval,
+    // then the generic structure's per-frame pass (sequential for a
+    // single frame — the Fig. 5 overlap only helps across a stream).
+    let frame_latency_s = pipeline
+        .as_ref()
+        .map(|p| p.estimate.frame_latency_s)
+        .unwrap_or(0.0)
+        + generic
+            .as_ref()
+            .map(|g| g.estimate.period_s / rav.batch.max(1) as f64)
+            .unwrap_or(0.0);
+    Some(Candidate {
+        rav,
+        pipeline,
+        generic,
+        throughput_fps: fps,
+        gops,
+        dsp_used,
+        bram_used,
+        dsp_efficiency: eff,
+        frame_latency_s,
+    })
+}
+
+/// Search statistics.
+#[derive(Debug, Clone)]
+pub struct SearchStats {
+    pub iterations: usize,
+    pub evaluations: usize,
+    pub elapsed_s: f64,
+    pub early_terminated: bool,
+}
+
+/// Result of a full exploration.
+pub struct ExplorerResult {
+    pub best: Candidate,
+    pub stats: SearchStats,
+}
+
+/// Run the full DNNExplorer flow on a network + device (paper Fig. 4).
+pub fn explore(net: &Network, cfg: &ExplorerConfig) -> Option<ExplorerResult> {
+    let start = Instant::now();
+    let n = net.layers.iter().filter(|l| l.is_compute()).count();
+    let bounds = Bounds::new(n, cfg.fixed_batch);
+    let outcome = pso::run(&cfg.pso, &bounds, cfg.seed, |rav| {
+        evaluate(net, cfg, rav).map(|c| c.fitness(cfg.objective))
+    })?;
+    let best = evaluate(net, cfg, outcome.best_rav)?;
+    Some(ExplorerResult {
+        best,
+        stats: SearchStats {
+            iterations: outcome.iterations,
+            evaluations: outcome.evaluations,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            early_terminated: outcome.early_terminated,
+        },
+    })
+}
+
+/// Like [`explore`], but with a caller-supplied global optimizer (paper
+/// §7.2's extension point; used by the optimizer ablation).
+pub fn explore_with(
+    net: &Network,
+    cfg: &ExplorerConfig,
+    optimizer: &dyn crate::dse::global::GlobalOptimizer,
+) -> Option<ExplorerResult> {
+    let start = Instant::now();
+    let n = net.layers.iter().filter(|l| l.is_compute()).count();
+    let bounds = Bounds::new(n, cfg.fixed_batch);
+    let mut fitness =
+        |rav| evaluate(net, cfg, rav).map(|c: Candidate| c.fitness(cfg.objective));
+    let outcome = optimizer.run(&bounds, cfg.seed, &mut fitness)?;
+    let best = evaluate(net, cfg, outcome.best_rav)?;
+    Some(ExplorerResult {
+        best,
+        stats: SearchStats {
+            iterations: outcome.history.len(),
+            evaluations: outcome.evaluations,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            early_terminated: false,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::TensorShape;
+
+    fn vgg224() -> Network {
+        zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16)
+    }
+
+    fn quick_cfg() -> ExplorerConfig {
+        let mut c = ExplorerConfig::new(FpgaDevice::ku115());
+        c.pso = PsoParams { population: 12, iterations: 10, ..PsoParams::default() };
+        c
+    }
+
+    #[test]
+    fn evaluate_mid_split() {
+        let net = vgg224();
+        let cfg = quick_cfg();
+        let rav = Rav { sp: 6, batch: 1, dsp_frac: 0.5, bram_frac: 0.4, bw_frac: 0.6 };
+        let c = evaluate(&net, &cfg, rav).expect("feasible");
+        assert!(c.gops > 100.0, "gops {}", c.gops);
+        assert!(c.dsp_used <= cfg.device.dsp as f64);
+        assert!(c.bram_used <= cfg.device.bram18k as f64 * 1.05);
+        assert!(c.dsp_efficiency <= 1.01);
+    }
+
+    #[test]
+    fn evaluate_pure_generic_and_pure_pipeline() {
+        let net = vgg224();
+        let cfg = quick_cfg();
+        let g = evaluate(
+            &net,
+            &cfg,
+            Rav { sp: 0, batch: 1, dsp_frac: 0.1, bram_frac: 0.1, bw_frac: 0.1 },
+        )
+        .expect("generic-only feasible");
+        assert!(g.pipeline.is_none() && g.generic.is_some());
+        let p = evaluate(
+            &net,
+            &cfg,
+            Rav { sp: 13, batch: 1, dsp_frac: 0.9, bram_frac: 0.9, bw_frac: 0.9 },
+        )
+        .expect("pipeline-only feasible");
+        assert!(p.pipeline.is_some() && p.generic.is_none());
+        assert!(g.gops > 0.0 && p.gops > 0.0);
+    }
+
+    #[test]
+    fn explore_beats_naive_extremes() {
+        // The hybrid should beat at least one of the pure paradigms and
+        // never lose to both.
+        let net = vgg224();
+        let cfg = quick_cfg();
+        let res = explore(&net, &cfg).expect("exploration succeeds");
+        let pure_g = evaluate(
+            &net,
+            &cfg,
+            Rav { sp: 0, batch: 1, dsp_frac: 0.1, bram_frac: 0.1, bw_frac: 0.1 },
+        )
+        .unwrap();
+        assert!(
+            res.best.gops >= pure_g.gops * 0.95,
+            "explored {} vs pure generic {}",
+            res.best.gops,
+            pure_g.gops
+        );
+        assert!(res.stats.evaluations > 0);
+    }
+}

@@ -1,0 +1,387 @@
+//! Pluggable global optimizers (paper §7.2: "The global optimization can
+//! be also extended to support other optimization algorithms in the
+//! future for different scenarios").
+//!
+//! All optimizers share the [`GlobalOptimizer`] interface over the RAV
+//! space and are compared head-to-head by the `ablation` bench:
+//!
+//! * [`super::pso`] — particle swarm (the paper's choice, Algorithm 1).
+//! * [`GeneticAlgorithm`] — tournament selection + blend crossover +
+//!   gaussian mutation.
+//! * [`SimulatedAnnealing`] — gaussian neighborhood, geometric cooling.
+//! * [`RandomSearch`] — uniform sampling baseline (sanity floor).
+
+use crate::dse::pso::{self, PsoOutcome, PsoParams};
+use crate::dse::rav::{Bounds, Position, Rav};
+use crate::util::rng::Rng;
+
+/// Outcome shared by all global optimizers.
+#[derive(Debug, Clone)]
+pub struct GlobalOutcome {
+    pub best_rav: Rav,
+    pub best_fitness: f64,
+    pub evaluations: usize,
+    pub history: Vec<f64>,
+}
+
+impl From<PsoOutcome> for GlobalOutcome {
+    fn from(o: PsoOutcome) -> Self {
+        Self {
+            best_rav: o.best_rav,
+            best_fitness: o.best_fitness,
+            evaluations: o.evaluations,
+            history: o.history,
+        }
+    }
+}
+
+/// A global optimizer over the RAV design space.
+pub trait GlobalOptimizer {
+    fn name(&self) -> &'static str;
+    /// Maximize `fitness` (None = infeasible) within `bounds`.
+    fn run(
+        &self,
+        bounds: &Bounds,
+        seed: u64,
+        fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    ) -> Option<GlobalOutcome>;
+}
+
+/// Axis bounds in continuous space, shared by all samplers.
+fn axes(bounds: &Bounds) -> ([f64; 5], [f64; 5]) {
+    (
+        [0.0, 1.0, bounds.frac_min, bounds.frac_min, bounds.frac_min],
+        [
+            bounds.sp_max as f64,
+            bounds.batch_max as f64,
+            bounds.frac_max,
+            bounds.frac_max,
+            bounds.frac_max,
+        ],
+    )
+}
+
+fn sample_uniform(rng: &mut Rng, lo: &[f64; 5], hi: &[f64; 5]) -> [f64; 5] {
+    std::array::from_fn(|d| rng.gen_range(lo[d], hi[d]))
+}
+
+fn eval(
+    pos: &[f64; 5],
+    bounds: &Bounds,
+    fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    evals: &mut usize,
+) -> f64 {
+    *evals += 1;
+    fitness(Position::from_array(*pos).to_rav(bounds)).unwrap_or(f64::NEG_INFINITY)
+}
+
+/// PSO behind the common interface.
+pub struct Pso(pub PsoParams);
+
+impl GlobalOptimizer for Pso {
+    fn name(&self) -> &'static str {
+        "pso"
+    }
+
+    fn run(
+        &self,
+        bounds: &Bounds,
+        seed: u64,
+        fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    ) -> Option<GlobalOutcome> {
+        pso::run(&self.0, bounds, seed, |r| fitness(r)).map(Into::into)
+    }
+}
+
+/// Genetic algorithm: tournament-2 selection, blend crossover, gaussian
+/// mutation, elitism of 1.
+pub struct GeneticAlgorithm {
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_sigma: f64,
+}
+
+impl Default for GeneticAlgorithm {
+    fn default() -> Self {
+        Self { population: 24, generations: 30, mutation_sigma: 0.15 }
+    }
+}
+
+impl GlobalOptimizer for GeneticAlgorithm {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn run(
+        &self,
+        bounds: &Bounds,
+        seed: u64,
+        fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    ) -> Option<GlobalOutcome> {
+        let (lo, hi) = axes(bounds);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6A5A);
+        let mut evals = 0usize;
+        let n = self.population.max(4);
+        let mut pop: Vec<([f64; 5], f64)> = (0..n)
+            .map(|_| {
+                let p = sample_uniform(&mut rng, &lo, &hi);
+                let f = eval(&p, bounds, fitness, &mut evals);
+                (p, f)
+            })
+            .collect();
+        let mut history = Vec::new();
+        for _gen in 0..self.generations {
+            pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            history.push(pop[0].1);
+            let mut next = vec![pop[0]]; // elitism
+            while next.len() < n {
+                // tournament-2 picks
+                let pick = |rng: &mut Rng| {
+                    let a = rng.gen_index(n);
+                    let b = rng.gen_index(n);
+                    if pop[a].1 >= pop[b].1 {
+                        pop[a].0
+                    } else {
+                        pop[b].0
+                    }
+                };
+                let pa = pick(&mut rng);
+                let pb = pick(&mut rng);
+                // blend crossover + gaussian mutation
+                let mut child = [0.0f64; 5];
+                for d in 0..5 {
+                    let alpha = rng.gen_f64();
+                    child[d] = alpha * pa[d] + (1.0 - alpha) * pb[d];
+                    // Box-Muller-ish gaussian from two uniforms
+                    let u1 = rng.gen_f64().max(1e-12);
+                    let u2 = rng.gen_f64();
+                    let gauss =
+                        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+                    child[d] += gauss * self.mutation_sigma * (hi[d] - lo[d]) * 0.3;
+                    child[d] = child[d].clamp(lo[d], hi[d]);
+                }
+                let f = eval(&child, bounds, fitness, &mut evals);
+                next.push((child, f));
+            }
+            pop = next;
+        }
+        pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let (best_pos, best_fit) = pop[0];
+        if !best_fit.is_finite() {
+            return None;
+        }
+        Some(GlobalOutcome {
+            best_rav: Position::from_array(best_pos).to_rav(bounds),
+            best_fitness: best_fit,
+            evaluations: evals,
+            history,
+        })
+    }
+}
+
+/// Simulated annealing: gaussian neighborhood scaled by temperature,
+/// geometric cooling, always tracking the global best.
+pub struct SimulatedAnnealing {
+    pub steps: usize,
+    pub t0: f64,
+    pub cooling: f64,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        Self { steps: 720, t0: 1.0, cooling: 0.995 }
+    }
+}
+
+impl GlobalOptimizer for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "annealing"
+    }
+
+    fn run(
+        &self,
+        bounds: &Bounds,
+        seed: u64,
+        fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    ) -> Option<GlobalOutcome> {
+        let (lo, hi) = axes(bounds);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5A11);
+        let mut evals = 0usize;
+        let mut cur = sample_uniform(&mut rng, &lo, &hi);
+        let mut cur_f = eval(&cur, bounds, fitness, &mut evals);
+        let mut best = cur;
+        let mut best_f = cur_f;
+        let mut t = self.t0;
+        let mut history = Vec::new();
+        // Normalize acceptance to the fitness scale once known.
+        let mut scale = cur_f.abs().max(1.0);
+        for step in 0..self.steps {
+            let mut cand = cur;
+            for d in 0..5 {
+                let u1 = rng.gen_f64().max(1e-12);
+                let u2 = rng.gen_f64();
+                let gauss = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+                cand[d] = (cand[d] + gauss * t * 0.25 * (hi[d] - lo[d])).clamp(lo[d], hi[d]);
+            }
+            let f = eval(&cand, bounds, fitness, &mut evals);
+            if f.is_finite() {
+                scale = scale.max(f.abs());
+            }
+            let accept = f >= cur_f || {
+                let delta = (f - cur_f) / scale;
+                f.is_finite() && rng.gen_f64() < (delta / t.max(1e-9)).exp()
+            };
+            if accept {
+                cur = cand;
+                cur_f = f;
+            }
+            if f > best_f {
+                best = cand;
+                best_f = f;
+            }
+            t *= self.cooling;
+            if step % 24 == 0 {
+                history.push(best_f);
+            }
+        }
+        if !best_f.is_finite() {
+            return None;
+        }
+        Some(GlobalOutcome {
+            best_rav: Position::from_array(best).to_rav(bounds),
+            best_fitness: best_f,
+            evaluations: evals,
+            history,
+        })
+    }
+}
+
+/// Uniform random search: the ablation floor.
+pub struct RandomSearch {
+    pub samples: usize,
+}
+
+impl Default for RandomSearch {
+    fn default() -> Self {
+        Self { samples: 720 }
+    }
+}
+
+impl GlobalOptimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(
+        &self,
+        bounds: &Bounds,
+        seed: u64,
+        fitness: &mut dyn FnMut(Rav) -> Option<f64>,
+    ) -> Option<GlobalOutcome> {
+        let (lo, hi) = axes(bounds);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7A4D);
+        let mut evals = 0usize;
+        let mut best: Option<([f64; 5], f64)> = None;
+        let mut history = Vec::new();
+        for i in 0..self.samples {
+            let p = sample_uniform(&mut rng, &lo, &hi);
+            let f = eval(&p, bounds, fitness, &mut evals);
+            if best.map(|(_, bf)| f > bf).unwrap_or(f.is_finite()) {
+                best = Some((p, f));
+            }
+            if i % 24 == 0 {
+                history.push(best.map(|(_, f)| f).unwrap_or(f64::NEG_INFINITY));
+            }
+        }
+        best.map(|(p, f)| GlobalOutcome {
+            best_rav: Position::from_array(p).to_rav(bounds),
+            best_fitness: f,
+            evaluations: evals,
+            history,
+        })
+    }
+}
+
+/// All optimizers at comparable evaluation budgets (for the ablation).
+pub fn all_optimizers() -> Vec<Box<dyn GlobalOptimizer>> {
+    vec![
+        Box::new(Pso(PsoParams { stale_limit: 0, ..Default::default() })),
+        Box::new(GeneticAlgorithm::default()),
+        Box::new(SimulatedAnnealing::default()),
+        Box::new(RandomSearch::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bowl(r: Rav) -> Option<f64> {
+        // Smooth unimodal test function peaked at (sp 7, batch 4, .6 .4 .5).
+        Some(
+            -((r.sp as f64 - 7.0) / 13.0).powi(2)
+                - ((r.batch as f64 - 4.0) / 16.0).powi(2)
+                - (r.dsp_frac - 0.6).powi(2)
+                - (r.bram_frac - 0.4).powi(2)
+                - (r.bw_frac - 0.5).powi(2),
+        )
+    }
+
+    #[test]
+    fn every_optimizer_finds_the_bowl() {
+        let bounds = Bounds::new(13, None);
+        for opt in all_optimizers() {
+            let mut f = bowl;
+            let out = opt
+                .run(&bounds, 99, &mut f)
+                .unwrap_or_else(|| panic!("{} failed", opt.name()));
+            assert!(
+                out.best_fitness > -0.08,
+                "{}: best {} at {:?}",
+                opt.name(),
+                out.best_fitness,
+                out.best_rav
+            );
+            assert!(out.evaluations > 50, "{}", opt.name());
+        }
+    }
+
+    #[test]
+    fn optimizers_deterministic_under_seed() {
+        let bounds = Bounds::new(13, None);
+        for opt in all_optimizers() {
+            let mut f1 = bowl;
+            let mut f2 = bowl;
+            let a = opt.run(&bounds, 5, &mut f1).unwrap();
+            let b = opt.run(&bounds, 5, &mut f2).unwrap();
+            assert_eq!(a.best_rav, b.best_rav, "{}", opt.name());
+        }
+    }
+
+    #[test]
+    fn all_infeasible_returns_none() {
+        let bounds = Bounds::new(13, None);
+        for opt in all_optimizers() {
+            let mut f = |_: Rav| -> Option<f64> { None };
+            assert!(opt.run(&bounds, 1, &mut f).is_none(), "{}", opt.name());
+        }
+    }
+
+    #[test]
+    fn ga_beats_random_on_average() {
+        let bounds = Bounds::new(13, None);
+        let ga = GeneticAlgorithm::default();
+        let rs = RandomSearch { samples: 720 };
+        let mut wins = 0;
+        for seed in 0..5 {
+            let mut f1 = bowl;
+            let mut f2 = bowl;
+            let g = ga.run(&bounds, seed, &mut f1).unwrap().best_fitness;
+            let r = rs.run(&bounds, seed, &mut f2).unwrap().best_fitness;
+            if g >= r {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 3, "GA won only {wins}/5 against random");
+    }
+}

@@ -1,0 +1,193 @@
+//! Algorithm 3: balance-oriented local optimization for the generic
+//! structure.
+//!
+//! Starting from `PF_g = 1`, double `CPF_g·KPF_g` until the generic
+//! structure's batch period is at most the pipeline's worst stage
+//! interval (balance) or resources run out. Both on-chip buffer
+//! strategies are tried and the better one kept; under strategy 2 each
+//! layer picks IS/WS itself (handled inside the model). When balance is
+//! unreachable within the device budget, the caller rolls the pipeline
+//! back (Alg. 3 lines 11–14 — implemented in [`super::engine`]).
+
+use crate::dnn::{Layer, Precision};
+use crate::fpga::ResourceBudget;
+use crate::perfmodel::generic::{estimate, BufferStrategy, GenericConfig, GenericEstimate};
+
+/// Output of the generic local optimization.
+#[derive(Debug, Clone)]
+pub struct GenericPlan {
+    pub config: GenericConfig,
+    pub estimate: GenericEstimate,
+}
+
+/// Hardware-friendly (CPF_g, KPF_g) from a combined PF (power of two).
+/// The generic array favors a square-ish aspect with KPF ≥ CPF (GEMV
+/// shape: weights matrix is CPF×KPF per cycle).
+pub fn split_pf(pf: usize) -> (usize, usize) {
+    let lg = (pf.max(1)).ilog2() as usize;
+    let c = 1usize << (lg / 2);
+    let k = pf.max(1) / c;
+    (c, k)
+}
+
+/// Run Algorithm 3's growth loop for one buffer strategy.
+fn optimize_strategy(
+    layers: &[&Layer],
+    budget: &ResourceBudget,
+    target_period_s: f64,
+    batch: usize,
+    freq_mhz: f64,
+    dw: Precision,
+    ww: Precision,
+    strategy: BufferStrategy,
+) -> Option<GenericPlan> {
+    let mut pf = 1usize;
+    let mut best: Option<GenericPlan> = None;
+    loop {
+        let (cpf, kpf) = split_pf(pf);
+        let cfg = GenericConfig::with_budget(
+            cpf,
+            kpf,
+            dw,
+            ww,
+            strategy,
+            freq_mhz,
+            budget.bram18k,
+        );
+        let res = cfg.resources();
+        if res.dsp > budget.dsp || res.bram18k > budget.bram18k {
+            break;
+        }
+        let est = estimate(layers, &cfg, budget.bw_gbps, batch);
+        let better = best
+            .as_ref()
+            .map(|b| est.period_s < b.estimate.period_s)
+            .unwrap_or(true);
+        if better {
+            best = Some(GenericPlan { config: cfg, estimate: est });
+        }
+        // Balanced: generic no slower than the pipeline's worst stage.
+        if best.as_ref().map(|b| b.estimate.period_s <= target_period_s) == Some(true) {
+            break;
+        }
+        if pf > 1 << 22 {
+            break; // hard stop
+        }
+        pf *= 2;
+    }
+    best
+}
+
+/// Run Algorithm 3 over the generic layers (layers `SP+1..N`).
+///
+/// `target_period_s` is the pipeline's worst per-batch stage interval
+/// (`L_p^max` in the paper, scaled to the batch); the generic structure
+/// grows until its batch period is ≤ that. Returns `None` when `layers`
+/// is empty (SP = N: pure pipeline) or nothing fits.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize(
+    layers: &[&Layer],
+    budget: &ResourceBudget,
+    target_period_s: f64,
+    batch: usize,
+    freq_mhz: f64,
+    dw: Precision,
+    ww: Precision,
+) -> Option<GenericPlan> {
+    if layers.is_empty() {
+        return None;
+    }
+    let s1 = optimize_strategy(
+        layers,
+        budget,
+        target_period_s,
+        batch,
+        freq_mhz,
+        dw,
+        ww,
+        BufferStrategy::FmAccumInBram,
+    );
+    let s2 = optimize_strategy(
+        layers,
+        budget,
+        target_period_s,
+        batch,
+        freq_mhz,
+        dw,
+        ww,
+        BufferStrategy::AllInBram,
+    );
+    match (s1, s2) {
+        (Some(a), Some(b)) => Some(if a.estimate.period_s <= b.estimate.period_s { a } else { b }),
+        (a, b) => a.or(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::TensorShape;
+    use crate::fpga::FpgaDevice;
+
+    fn vgg_suffix(sp: usize) -> Vec<crate::dnn::Layer> {
+        zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16)
+            .layers
+            .into_iter()
+            .filter(|l| l.is_compute())
+            .skip(sp)
+            .collect()
+    }
+
+    #[test]
+    fn split_pf_is_power_pair() {
+        for pf in [1usize, 2, 4, 64, 1024, 4096] {
+            let (c, k) = split_pf(pf);
+            assert_eq!(c * k, pf, "pf={pf}");
+            assert!(c.is_power_of_two() && k.is_power_of_two());
+            assert!(k >= c);
+        }
+    }
+
+    #[test]
+    fn grows_until_balanced() {
+        let layers = vgg_suffix(6);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.5, 0.5, 0.4);
+        // Loose target: should stop early with a small array.
+        let loose = optimize(&refs, &budget, 1.0, 1, 200.0, Precision::Int16, Precision::Int16)
+            .unwrap();
+        // Tight target: grows to budget.
+        let tight = optimize(&refs, &budget, 1e-6, 1, 200.0, Precision::Int16, Precision::Int16)
+            .unwrap();
+        assert!(
+            tight.config.cpf * tight.config.kpf >= loose.config.cpf * loose.config.kpf,
+            "tight {}x{} vs loose {}x{}",
+            tight.config.cpf,
+            tight.config.kpf,
+            loose.config.cpf,
+            loose.config.kpf
+        );
+        assert!(loose.estimate.period_s <= 1.0);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let layers = vgg_suffix(4);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.3, 0.3, 0.3);
+        let plan =
+            optimize(&refs, &budget, 1e-9, 1, 200.0, Precision::Int16, Precision::Int16).unwrap();
+        assert!(plan.estimate.resources.dsp <= budget.dsp);
+        assert!(plan.estimate.resources.bram18k <= budget.bram18k);
+    }
+
+    #[test]
+    fn empty_suffix_is_none() {
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.5, 0.5, 0.5);
+        assert!(optimize(&[], &budget, 1.0, 1, 200.0, Precision::Int16, Precision::Int16).is_none());
+    }
+}

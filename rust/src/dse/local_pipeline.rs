@@ -1,0 +1,254 @@
+//! Algorithm 2: CTC-based local optimization for the pipeline structure.
+//!
+//! Given the RAV's pipeline budget `[DSP_p, BRAM_p, BW_p]`, allocate a
+//! parallelism factor `PF_i` to each of the first `SP` layers so that the
+//! pipeline is load-balanced and the granted bandwidth is saturated:
+//!
+//! ```text
+//! BW_total_norm = Σ OP_i / CTC_i          (total bytes per frame)
+//! fps_bw        = BW_p / BW_total_norm    (bandwidth-feasible frame rate)
+//! PF_i          = MACs_i · fps_bw / FREQ  (balanced MAC/cycle per stage)
+//! ```
+//!
+//! then round each `PF_i` into hardware `(CPF_i, KPF_i)` factors and halve
+//! uniformly until DSP and BRAM budgets are met (paper Alg. 2 lines 7–10).
+
+use crate::dnn::{Layer, Precision};
+use crate::fpga::ResourceBudget;
+use crate::perfmodel::pipeline::{
+    estimate, Factorizer, PipelineConfig, PipelineEstimate, StageConfig,
+};
+
+/// Output of the pipeline local optimization.
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    pub config: PipelineConfig,
+    pub estimate: PipelineEstimate,
+}
+
+/// Run Algorithm 2 over `layers` (the first SP compute layers).
+///
+/// Returns `None` when `layers` is empty (SP = 0: no pipeline structure).
+pub fn optimize(
+    layers: &[&Layer],
+    budget: &ResourceBudget,
+    batch: usize,
+    freq_mhz: f64,
+    dw: Precision,
+    ww: Precision,
+) -> Option<PipelinePlan> {
+    if layers.is_empty() {
+        return None;
+    }
+    let freq = freq_mhz * 1e6;
+
+    // Line 4: normalized bandwidth demand (bytes per frame over the
+    // pipelined prefix; weights amortized by batch).
+    let bytes_per_frame: f64 = layers
+        .iter()
+        .map(|l| l.weight_bytes(ww) / batch.max(1) as f64)
+        .sum::<f64>()
+        + layers[0].ifm_bytes(dw);
+    let fps_bw = if bytes_per_frame > 0.0 {
+        budget.bw_bytes() / bytes_per_frame
+    } else {
+        f64::INFINITY
+    };
+
+    // Line 5–6: per-layer PF targets for a balanced, bandwidth-saturated
+    // pipeline.
+    let mut pf: Vec<f64> = layers
+        .iter()
+        .map(|l| (l.macs() as f64 * fps_bw / freq).max(1.0))
+        .collect();
+
+    // Cap the initial targets so a single stage can't demand more DSPs
+    // than the whole budget.
+    let total_pf_budget = budget.dsp / ww.dsp_per_mac();
+    let sum_pf: f64 = pf.iter().sum();
+    if sum_pf > total_pf_budget && sum_pf > 0.0 {
+        let scale = total_pf_budget / sum_pf;
+        for p in pf.iter_mut() {
+            *p = (*p * scale).max(1.0);
+        }
+    }
+
+    // Lines 7–10: round to (CPF, KPF), then halve uniformly until the
+    // budget is met. Candidate ladders are built once per layer (§Perf).
+    let factorizers: Vec<Factorizer> = layers
+        .iter()
+        .map(|l| Factorizer::new((l.input.c / l.groups()).max(1), l.output.c))
+        .collect();
+    let build = |pf: &[f64]| -> Option<PipelinePlan> {
+        let stages: Vec<StageConfig> = factorizers
+            .iter()
+            .zip(pf)
+            .map(|(f, &p)| {
+                let (cpf, kpf) = f.pick(p);
+                StageConfig { cpf, kpf, dw, ww }
+            })
+            .collect();
+        let config = PipelineConfig { stages, batch, freq_mhz };
+        let estimate = estimate(layers, &config, budget.bw_gbps).ok()?;
+        Some(PipelinePlan { config, estimate })
+    };
+    let fits = |p: &PipelinePlan| {
+        p.estimate.resources.dsp <= budget.dsp && p.estimate.resources.bram18k <= budget.bram18k
+    };
+
+    // Perf note (EXPERIMENTS.md §Perf, attempt 5): a resources-only
+    // feasibility probe in this loop was tried and REVERTED — the cost
+    // is factorize_pf, not the latency estimation, so probing doubled
+    // the factorization work (21 µs → 35 µs per fitness).
+    let mut shrink = 0;
+    let mut plan = loop {
+        let plan = build(&pf)?;
+        if fits(&plan) {
+            break plan;
+        }
+        // Scale every stage's PF down (Alg. 2 line 9 halves; a gentler
+        // 1.25 factor avoids overshooting the feasibility boundary and
+        // landing at ~50% utilization — the greedy re-grow below can
+        // only recover via the bottleneck stage).
+        let mut any = false;
+        for p in pf.iter_mut() {
+            if *p > 1.0 {
+                *p = (*p / 1.25).max(1.0);
+                any = true;
+            }
+        }
+        shrink += 1;
+        if !any || shrink > 160 {
+            // Cannot fit even at PF = 1 everywhere: infeasible budget.
+            return None;
+        }
+    };
+
+    // Refinement: the uniform halving can leave large headroom. Greedily
+    // double the bottleneck stage's PF while everything still fits —
+    // this recovers the fine-grained allocation DNNBuilder's tool
+    // performs after its coarse scale-down.
+    for _ in 0..6 * layers.len() {
+        let bott = plan.estimate.bottleneck;
+        let mut pf2 = pf.clone();
+        pf2[bott] *= 2.0;
+        match build(&pf2) {
+            Some(p2)
+                if fits(&p2)
+                    && p2.estimate.throughput_fps > plan.estimate.throughput_fps * 1.0001 =>
+            {
+                pf = pf2;
+                plan = p2;
+            }
+            _ => break,
+        }
+    }
+    Some(plan)
+}
+
+/// Uniformly halve the PFs of an existing plan (used by Algorithm 3's
+/// roll-back, lines 11–14). Returns `None` when already at minimum.
+pub fn scale_down(
+    layers: &[&Layer],
+    plan: &PipelinePlan,
+    budget: &ResourceBudget,
+) -> Option<PipelinePlan> {
+    let mut any = false;
+    let stages: Vec<StageConfig> = plan
+        .config
+        .stages
+        .iter()
+        .map(|s| {
+            let mut s = *s;
+            if s.kpf > 1 {
+                s.kpf /= 2;
+                any = true;
+            } else if s.cpf > 1 {
+                s.cpf /= 2;
+                any = true;
+            }
+            s
+        })
+        .collect();
+    if !any {
+        return None;
+    }
+    let config = PipelineConfig { stages, batch: plan.config.batch, freq_mhz: plan.config.freq_mhz };
+    let estimate = estimate(layers, &config, budget.bw_gbps).ok()?;
+    Some(PipelinePlan { config, estimate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::TensorShape;
+    use crate::fpga::FpgaDevice;
+
+    fn vgg_prefix(sp: usize) -> Vec<crate::dnn::Layer> {
+        zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16)
+            .layers
+            .into_iter()
+            .filter(|l| l.is_compute())
+            .take(sp)
+            .collect()
+    }
+
+    #[test]
+    fn fits_budget() {
+        let layers = vgg_prefix(6);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.5, 0.5, 0.6);
+        let plan = optimize(&refs, &budget, 1, 200.0, Precision::Int16, Precision::Int16)
+            .expect("feasible");
+        assert!(plan.estimate.resources.dsp <= budget.dsp);
+        assert!(plan.estimate.resources.bram18k <= budget.bram18k);
+        assert!(plan.estimate.throughput_fps > 0.0);
+    }
+
+    #[test]
+    fn empty_prefix_is_none() {
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.5, 0.5, 0.5);
+        assert!(optimize(&[], &budget, 1, 200.0, Precision::Int16, Precision::Int16).is_none());
+    }
+
+    #[test]
+    fn stages_roughly_balanced() {
+        // Alg 2's whole point: stage compute intervals within ~4x of each
+        // other (power-of-two rounding bounds the imbalance).
+        let layers = vgg_prefix(8);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.6, 0.6, 0.7);
+        let plan = optimize(&refs, &budget, 1, 200.0, Precision::Int16, Precision::Int16).unwrap();
+        let ints: Vec<f64> = plan.estimate.stages.iter().map(|s| s.compute_s).collect();
+        let max = ints.iter().cloned().fold(0.0f64, f64::max);
+        let min = ints.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 8.0, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn bigger_budget_never_slower() {
+        let layers = vgg_prefix(6);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let small = ResourceBudget::fraction_of(&d, 0.2, 0.3, 0.4);
+        let large = ResourceBudget::fraction_of(&d, 0.8, 0.8, 0.8);
+        let ps = optimize(&refs, &small, 1, 200.0, Precision::Int16, Precision::Int16).unwrap();
+        let pl = optimize(&refs, &large, 1, 200.0, Precision::Int16, Precision::Int16).unwrap();
+        assert!(pl.estimate.throughput_fps >= ps.estimate.throughput_fps * 0.99);
+    }
+
+    #[test]
+    fn scale_down_reduces_resources() {
+        let layers = vgg_prefix(4);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.6, 0.6, 0.6);
+        let plan = optimize(&refs, &budget, 1, 200.0, Precision::Int16, Precision::Int16).unwrap();
+        let down = scale_down(&refs, &plan, &budget).unwrap();
+        assert!(down.estimate.resources.dsp < plan.estimate.resources.dsp);
+    }
+}

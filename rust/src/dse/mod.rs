@@ -1,0 +1,21 @@
+//! Two-level design-space exploration (paper §7).
+//!
+//! * [`rav`] — the 5-dim Resource Allocation Vector `[SP, Batch, DSP_p,
+//!   BRAM_p, BW_p]` (Eq. 2) and the dynamic design-space bounds (Table 2).
+//! * [`local_pipeline`] — Algorithm 2: CTC-based parallelism allocation
+//!   for the pipeline structure.
+//! * [`local_generic`] — Algorithm 3: balance-oriented sizing of the
+//!   generic structure (with pipeline roll-back).
+//! * [`pso`] — Algorithm 1: global particle-swarm optimization over RAVs.
+//! * [`engine`] — ties everything into the three-step DNNExplorer flow.
+
+pub mod emit;
+pub mod engine;
+pub mod global;
+pub mod local_generic;
+pub mod local_pipeline;
+pub mod pso;
+pub mod rav;
+
+pub use engine::{explore, ExplorerConfig, ExplorerResult};
+pub use rav::Rav;

@@ -1,0 +1,232 @@
+//! Algorithm 1: global particle-swarm optimization over the RAV space.
+//!
+//! Particles move in the 5-dim continuous space `[SP, Batch, DSP_p,
+//! BRAM_p, BW_p]`; positions are rounded/clamped into [`Rav`]s before
+//! fitness evaluation. Includes the paper's early-termination feature
+//! (stop when the global best has not improved for two consecutive
+//! iterations).
+
+use crate::util::rng::Rng;
+
+use super::rav::{Bounds, Position, Rav};
+
+/// PSO hyper-parameters (paper Algorithm 1: w, c1, c2, M, N).
+#[derive(Debug, Clone)]
+pub struct PsoParams {
+    /// Swarm size M.
+    pub population: usize,
+    /// Iteration budget N.
+    pub iterations: usize,
+    /// Inertia weight w.
+    pub inertia: f64,
+    /// Cognitive acceleration c1 (pull toward the particle's local best).
+    pub c1: f64,
+    /// Social acceleration c2 (pull toward the global best).
+    pub c2: f64,
+    /// Early termination: stop after this many consecutive iterations
+    /// without global-best improvement (paper uses 2). 0 disables.
+    pub stale_limit: usize,
+}
+
+impl Default for PsoParams {
+    fn default() -> Self {
+        Self {
+            population: 24,
+            iterations: 30,
+            inertia: 0.7,
+            c1: 1.5,
+            c2: 1.5,
+            stale_limit: 2,
+        }
+    }
+}
+
+/// Outcome of a PSO run.
+#[derive(Debug, Clone)]
+pub struct PsoOutcome {
+    pub best_rav: Rav,
+    pub best_fitness: f64,
+    pub iterations: usize,
+    pub evaluations: usize,
+    pub early_terminated: bool,
+    /// Global-best fitness after each iteration (for convergence plots).
+    pub history: Vec<f64>,
+}
+
+struct Particle {
+    pos: [f64; 5],
+    vel: [f64; 5],
+    best_pos: [f64; 5],
+    best_fit: f64,
+}
+
+/// Run PSO. `fitness` returns `None` for infeasible RAVs (treated as
+/// fitness −∞ so the swarm moves away from them).
+pub fn run<F>(params: &PsoParams, bounds: &Bounds, seed: u64, mut fitness: F) -> Option<PsoOutcome>
+where
+    F: FnMut(Rav) -> Option<f64>,
+{
+    let mut rng = Rng::seed_from_u64(seed);
+    let lo = [0.0, 1.0, bounds.frac_min, bounds.frac_min, bounds.frac_min];
+    let hi = [
+        bounds.sp_max as f64,
+        bounds.batch_max as f64,
+        bounds.frac_max,
+        bounds.frac_max,
+        bounds.frac_max,
+    ];
+    let span: Vec<f64> = lo.iter().zip(&hi).map(|(l, h)| h - l).collect();
+
+    let mut evals = 0usize;
+    let eval = |pos: &[f64; 5], fit: &mut F, evals: &mut usize| -> f64 {
+        *evals += 1;
+        let rav = Position::from_array(*pos).to_rav(bounds);
+        fit(rav).unwrap_or(f64::NEG_INFINITY)
+    };
+
+    // Initialization: stratified over SP so both paradigm extremes and
+    // the hybrid interior are represented from iteration 0.
+    let mut swarm: Vec<Particle> = (0..params.population.max(2))
+        .map(|i| {
+            let frac = i as f64 / (params.population.max(2) - 1) as f64;
+            let pos = [
+                lo[0] + span[0] * frac,
+                lo[1] + span[1] * rng.gen_f64(),
+                lo[2] + span[2] * rng.gen_f64(),
+                lo[3] + span[3] * rng.gen_f64(),
+                lo[4] + span[4] * rng.gen_f64(),
+            ];
+            let vel = std::array::from_fn(|d| (rng.gen_f64() - 0.5) * 0.2 * span[d]);
+            Particle { pos, vel, best_pos: pos, best_fit: f64::NEG_INFINITY }
+        })
+        .collect();
+
+    let mut g_best_pos = swarm[0].pos;
+    let mut g_best_fit = f64::NEG_INFINITY;
+    for p in swarm.iter_mut() {
+        let f = eval(&p.pos, &mut fitness, &mut evals);
+        p.best_fit = f;
+        if f > g_best_fit {
+            g_best_fit = f;
+            g_best_pos = p.pos;
+        }
+    }
+
+    let mut history = Vec::with_capacity(params.iterations);
+    let mut stale = 0usize;
+    let mut iterations = 0usize;
+    let mut early = false;
+
+    for _itr in 0..params.iterations {
+        iterations += 1;
+        let prev_best = g_best_fit;
+        for p in swarm.iter_mut() {
+            for d in 0..5 {
+                let r1 = rng.gen_f64();
+                let r2 = rng.gen_f64();
+                p.vel[d] = params.inertia * p.vel[d]
+                    + params.c1 * r1 * (p.best_pos[d] - p.pos[d])
+                    + params.c2 * r2 * (g_best_pos[d] - p.pos[d]);
+                // velocity clamp: half the axis span
+                let vmax = 0.5 * span[d];
+                p.vel[d] = p.vel[d].clamp(-vmax, vmax);
+                p.pos[d] = (p.pos[d] + p.vel[d]).clamp(lo[d], hi[d]);
+            }
+            let f = eval(&p.pos, &mut fitness, &mut evals);
+            if f > p.best_fit {
+                p.best_fit = f;
+                p.best_pos = p.pos;
+            }
+            if f > g_best_fit {
+                g_best_fit = f;
+                g_best_pos = p.pos;
+            }
+        }
+        history.push(g_best_fit);
+        if g_best_fit <= prev_best {
+            stale += 1;
+            if params.stale_limit > 0 && stale >= params.stale_limit {
+                early = true;
+                break;
+            }
+        } else {
+            stale = 0;
+        }
+    }
+
+    if g_best_fit.is_finite() {
+        Some(PsoOutcome {
+            best_rav: Position::from_array(g_best_pos).to_rav(bounds),
+            best_fitness: g_best_fit,
+            iterations,
+            evaluations: evals,
+            early_terminated: early,
+            history,
+        })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds() -> Bounds {
+        Bounds::new(13, None)
+    }
+
+    #[test]
+    fn optimizes_simple_quadratic() {
+        // Fitness peaked at dsp_frac = 0.6, bram = 0.3, bw = 0.5, sp = 7.
+        let params = PsoParams { population: 20, iterations: 60, stale_limit: 0, ..Default::default() };
+        let out = run(&params, &bounds(), 42, |r| {
+            let d = (r.dsp_frac - 0.6).powi(2)
+                + (r.bram_frac - 0.3).powi(2)
+                + (r.bw_frac - 0.5).powi(2)
+                + ((r.sp as f64 - 7.0) / 13.0).powi(2);
+            Some(-d)
+        })
+        .unwrap();
+        assert!((out.best_rav.dsp_frac - 0.6).abs() < 0.1, "{:?}", out.best_rav);
+        assert_eq!(out.best_rav.sp, 7);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let params = PsoParams::default();
+        let f = |r: Rav| Some(-((r.dsp_frac - 0.4).powi(2)) - (r.sp as f64 - 3.0).powi(2));
+        let a = run(&params, &bounds(), 7, f).unwrap();
+        let b = run(&params, &bounds(), 7, f).unwrap();
+        assert_eq!(a.best_rav, b.best_rav);
+        assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn all_infeasible_returns_none() {
+        let params = PsoParams { population: 5, iterations: 3, ..Default::default() };
+        assert!(run(&params, &bounds(), 1, |_| None).is_none());
+    }
+
+    #[test]
+    fn early_termination_triggers() {
+        // Constant fitness: never improves -> stops after stale_limit.
+        let params = PsoParams { population: 8, iterations: 50, stale_limit: 2, ..Default::default() };
+        let out = run(&params, &bounds(), 3, |_| Some(1.0)).unwrap();
+        assert!(out.early_terminated);
+        assert!(out.iterations <= 3);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let params = PsoParams { population: 16, iterations: 20, stale_limit: 0, ..Default::default() };
+        let out = run(&params, &bounds(), 11, |r| {
+            assert!(r.sp <= 13);
+            assert!(r.batch >= 1 && r.batch <= 16);
+            assert!(r.dsp_frac >= 0.02 && r.dsp_frac <= 0.95);
+            Some(r.sp as f64)
+        })
+        .unwrap();
+        assert_eq!(out.best_rav.sp, 13);
+    }
+}

@@ -1,0 +1,156 @@
+//! The Resource Allocation Vector (paper Eq. 2) and design-space bounds.
+
+
+use crate::fpga::{FpgaDevice, ResourceBudget};
+
+/// `R = [SP, Batch, DSP_p, BRAM_p, BW_p]` — the split point, batch size,
+/// and the three resource fractions granted to the pipeline structure.
+/// Fractions are stored relative to the device budget (the paper's
+/// Table 3 reports them the same way, e.g. `[12, 63.6%, 53.7%, 67.3%]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rav {
+    /// Split point: layers `1..=sp` (compute-layer indices) are pipelined.
+    pub sp: usize,
+    pub batch: usize,
+    /// Fraction of device DSPs granted to the pipeline structure.
+    pub dsp_frac: f64,
+    /// Fraction of device BRAM granted to the pipeline structure.
+    pub bram_frac: f64,
+    /// Fraction of external bandwidth granted to the pipeline structure.
+    pub bw_frac: f64,
+}
+
+impl Rav {
+    /// Pipeline-side budget on a device.
+    pub fn pipeline_budget(&self, d: &FpgaDevice) -> ResourceBudget {
+        ResourceBudget::fraction_of(d, self.dsp_frac, self.bram_frac, self.bw_frac)
+    }
+
+    /// Generic-side budget: the device remainder.
+    pub fn generic_budget(&self, d: &FpgaDevice) -> ResourceBudget {
+        ResourceBudget::fraction_of(
+            d,
+            1.0 - self.dsp_frac,
+            1.0 - self.bram_frac,
+            1.0 - self.bw_frac,
+        )
+    }
+
+    /// Clamp into the dynamic design space bounds.
+    pub fn clamp(&self, bounds: &Bounds) -> Rav {
+        Rav {
+            sp: self.sp.min(bounds.sp_max),
+            batch: self.batch.clamp(1, bounds.batch_max),
+            dsp_frac: self.dsp_frac.clamp(bounds.frac_min, bounds.frac_max),
+            bram_frac: self.bram_frac.clamp(bounds.frac_min, bounds.frac_max),
+            bw_frac: self.bw_frac.clamp(bounds.frac_min, bounds.frac_max),
+        }
+    }
+}
+
+impl std::fmt::Display for Rav {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}, {}, {:.1}%, {:.1}%, {:.1}%]",
+            self.sp,
+            self.batch,
+            self.dsp_frac * 100.0,
+            self.bram_frac * 100.0,
+            self.bw_frac * 100.0
+        )
+    }
+}
+
+/// Dynamic design-space bounds (paper Table 2 / Algorithm 1 line 3).
+/// Derived from the DNN (layer count) and the device — hence "dynamic".
+#[derive(Debug, Clone)]
+pub struct Bounds {
+    pub sp_max: usize,
+    pub batch_max: usize,
+    pub frac_min: f64,
+    pub frac_max: f64,
+}
+
+impl Bounds {
+    /// Bounds for a network with `n_compute_layers` on any device.
+    /// When `fixed_batch` is set (Table 3 uses batch = 1), batch is pinned.
+    pub fn new(n_compute_layers: usize, fixed_batch: Option<usize>) -> Self {
+        Self {
+            sp_max: n_compute_layers,
+            batch_max: fixed_batch.unwrap_or(16),
+            frac_min: 0.02,
+            frac_max: 0.95,
+        }
+    }
+}
+
+/// A continuous-space particle position (PSO operates on floats and
+/// rounds into a [`Rav`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Position {
+    pub sp: f64,
+    pub batch: f64,
+    pub dsp: f64,
+    pub bram: f64,
+    pub bw: f64,
+}
+
+impl Position {
+    pub fn to_rav(self, bounds: &Bounds) -> Rav {
+        Rav {
+            sp: (self.sp.round().max(0.0) as usize).min(bounds.sp_max),
+            batch: (self.batch.round().max(1.0) as usize).min(bounds.batch_max),
+            dsp_frac: self.dsp,
+            bram_frac: self.bram,
+            bw_frac: self.bw,
+        }
+        .clamp(bounds)
+    }
+
+    pub fn as_array(&self) -> [f64; 5] {
+        [self.sp, self.batch, self.dsp, self.bram, self.bw]
+    }
+
+    pub fn from_array(a: [f64; 5]) -> Self {
+        Self { sp: a[0], batch: a[1], dsp: a[2], bram: a[3], bw: a[4] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_partition_device() {
+        let d = FpgaDevice::ku115();
+        let r = Rav { sp: 5, batch: 1, dsp_frac: 0.6, bram_frac: 0.5, bw_frac: 0.7 };
+        let p = r.pipeline_budget(&d);
+        let g = r.generic_budget(&d);
+        let sum = p.plus(&g);
+        assert!((sum.dsp - d.dsp as f64).abs() < 1e-6);
+        assert!((sum.bram18k - d.bram18k as f64).abs() < 1e-6);
+        assert!((sum.bw_gbps - d.bandwidth_gbps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamp_respects_bounds() {
+        let b = Bounds::new(13, Some(1));
+        let r = Rav { sp: 99, batch: 9, dsp_frac: 1.5, bram_frac: -0.2, bw_frac: 0.5 };
+        let c = r.clamp(&b);
+        assert_eq!(c.sp, 13);
+        assert_eq!(c.batch, 1);
+        assert!(c.dsp_frac <= 0.95 && c.bram_frac >= 0.02);
+    }
+
+    #[test]
+    fn position_roundtrip() {
+        let b = Bounds::new(13, None);
+        let p = Position { sp: 4.6, batch: 2.4, dsp: 0.5, bram: 0.5, bw: 0.5 };
+        let r = p.to_rav(&b);
+        assert_eq!(r.sp, 5);
+        assert_eq!(r.batch, 2);
+        let p2 = Position::from_array(p.as_array());
+        assert_eq!(p, p2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Device catalogue: the four boards of the paper's evaluation.
+//!
+//! Budgets are the *usable* fabric numbers customarily quoted for these
+//! parts. BRAM is counted in **BRAM18K blocks** (18 Kb each), matching the
+//! units of the paper's Table 3 ("Total BRAM" up to 4186 on KU115).
+
+
+/// Static description of a target FPGA board.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    pub name: String,
+    /// DSP48 slices.
+    pub dsp: u32,
+    /// BRAM18K blocks.
+    pub bram18k: u32,
+    /// Peak external memory bandwidth in GB/s (DDR subsystem).
+    pub bandwidth_gbps: f64,
+    /// Default accelerator clock in MHz.
+    pub freq_mhz: f64,
+}
+
+impl FpgaDevice {
+    /// Xilinx Zynq ZC706 (XC7Z045): the paper's embedded board (Fig. 7a).
+    pub fn zc706() -> Self {
+        Self {
+            name: "ZC706".into(),
+            dsp: 900,
+            bram18k: 1090,
+            bandwidth_gbps: 12.8,
+            freq_mhz: 200.0,
+        }
+    }
+
+    /// Xilinx Kintex UltraScale KU115: the paper's mid-range board
+    /// (Figs. 7b/9/10/11, Tables 3/4).
+    pub fn ku115() -> Self {
+        Self {
+            name: "KU115".into(),
+            dsp: 5520,
+            bram18k: 4320,
+            bandwidth_gbps: 19.2,
+            freq_mhz: 200.0,
+        }
+    }
+
+    /// Xilinx Virtex UltraScale+ VU9P: generic-model validation (Fig. 8).
+    pub fn vu9p() -> Self {
+        Self {
+            name: "VU9P".into(),
+            dsp: 6840,
+            bram18k: 4320,
+            bandwidth_gbps: 19.2,
+            freq_mhz: 200.0,
+        }
+    }
+
+    /// Xilinx Zynq UltraScale+ ZCU102: the DPU comparison board (Fig. 9).
+    pub fn zcu102() -> Self {
+        Self {
+            name: "ZCU102".into(),
+            dsp: 2520,
+            bram18k: 1824,
+            bandwidth_gbps: 19.2,
+            freq_mhz: 287.0,
+        }
+    }
+
+    /// Look up a device by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "zc706" => Self::zc706(),
+            "ku115" => Self::ku115(),
+            "vu9p" => Self::vu9p(),
+            "zcu102" => Self::zcu102(),
+            _ => return None,
+        })
+    }
+
+    /// Peak GOP/s at a given α (MACs/DSP/cycle): `α · DSP · FREQ`.
+    pub fn peak_gops(&self, alpha: f64) -> f64 {
+        alpha * self.dsp as f64 * self.freq_mhz / 1e3
+    }
+
+    /// Total on-chip buffer capacity in bits (BRAM18K only).
+    pub fn bram_bits(&self) -> f64 {
+        self.bram18k as f64 * 18.0 * 1024.0
+    }
+
+    /// Bandwidth in bytes/second.
+    pub fn bandwidth_bytes(&self) -> f64 {
+        self.bandwidth_gbps * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ku115_peak_matches_paper() {
+        // Paper context: 16-bit, 200 MHz, full fabric: 2·5520·0.2 = 2208 GOP/s.
+        let d = FpgaDevice::ku115();
+        assert!((d.peak_gops(2.0) - 2208.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["ZC706", "ku115", "VU9P", "zcu102"] {
+            assert!(FpgaDevice::by_name(n).is_some(), "{n}");
+        }
+        assert!(FpgaDevice::by_name("xyz").is_none());
+    }
+
+    #[test]
+    fn bram_bits_scale() {
+        let d = FpgaDevice::zc706();
+        assert_eq!(d.bram_bits(), 1090.0 * 18.0 * 1024.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! FPGA device specifications and resource accounting.
+
+pub mod device;
+pub mod resource;
+
+pub use device::FpgaDevice;
+pub use resource::ResourceBudget;

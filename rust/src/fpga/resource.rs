@@ -1,0 +1,135 @@
+//! Resource budgets and usage vectors: the `[DSP, BRAM, BW]` triple the
+//! paper's RAV partitions between the pipeline and generic structures.
+
+
+use super::device::FpgaDevice;
+
+/// A (DSP, BRAM18K, bandwidth) triple. Used both as a *budget*
+/// (constraint) and as a *usage* (estimate) vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceBudget {
+    pub dsp: f64,
+    pub bram18k: f64,
+    /// Bandwidth in GB/s.
+    pub bw_gbps: f64,
+}
+
+impl ResourceBudget {
+    pub fn new(dsp: f64, bram18k: f64, bw_gbps: f64) -> Self {
+        Self { dsp, bram18k, bw_gbps }
+    }
+
+    /// The full budget of a device.
+    pub fn of_device(d: &FpgaDevice) -> Self {
+        Self {
+            dsp: d.dsp as f64,
+            bram18k: d.bram18k as f64,
+            bw_gbps: d.bandwidth_gbps,
+        }
+    }
+
+    /// Fractional budget: `frac = (f_dsp, f_bram, f_bw)` of a device.
+    pub fn fraction_of(d: &FpgaDevice, f_dsp: f64, f_bram: f64, f_bw: f64) -> Self {
+        Self {
+            dsp: d.dsp as f64 * f_dsp,
+            bram18k: d.bram18k as f64 * f_bram,
+            bw_gbps: d.bandwidth_gbps * f_bw,
+        }
+    }
+
+    /// Element-wise sum.
+    pub fn plus(&self, o: &ResourceBudget) -> ResourceBudget {
+        ResourceBudget {
+            dsp: self.dsp + o.dsp,
+            bram18k: self.bram18k + o.bram18k,
+            bw_gbps: self.bw_gbps + o.bw_gbps,
+        }
+    }
+
+    /// Element-wise difference (can go negative; check with `fits_in`).
+    pub fn minus(&self, o: &ResourceBudget) -> ResourceBudget {
+        ResourceBudget {
+            dsp: self.dsp - o.dsp,
+            bram18k: self.bram18k - o.bram18k,
+            bw_gbps: self.bw_gbps - o.bw_gbps,
+        }
+    }
+
+    /// Whether this usage fits inside a budget (all axes).
+    pub fn fits_in(&self, budget: &ResourceBudget) -> bool {
+        self.dsp <= budget.dsp + 1e-9
+            && self.bram18k <= budget.bram18k + 1e-9
+            && self.bw_gbps <= budget.bw_gbps + 1e-9
+    }
+
+    /// True if any axis is negative (over-subtracted budget).
+    pub fn any_negative(&self) -> bool {
+        self.dsp < 0.0 || self.bram18k < 0.0 || self.bw_gbps < 0.0
+    }
+
+    /// Bandwidth in bytes/second.
+    pub fn bw_bytes(&self) -> f64 {
+        self.bw_gbps * 1e9
+    }
+
+    /// BRAM capacity in bits.
+    pub fn bram_bits(&self) -> f64 {
+        self.bram18k * 18.0 * 1024.0
+    }
+}
+
+/// BRAM18K blocks needed to hold `bits` with `width`-bit ports.
+///
+/// Models the Xilinx BRAM18 aspect-ratio configs (512×36, 1024×18,
+/// 2048×9): narrow buffers get deeper blocks, wide buffers tile
+/// `ceil(width/36)` blocks per 512 rows — the standard HLS allocation.
+pub fn bram18k_for(bits: f64, width_bits: f64) -> f64 {
+    if bits <= 0.0 {
+        return 0.0;
+    }
+    let w = width_bits.max(1.0);
+    let depth = (bits / w).ceil();
+    if w <= 9.0 {
+        (depth / 2048.0).ceil().max(1.0)
+    } else if w <= 18.0 {
+        (depth / 1024.0).ceil().max(1.0)
+    } else {
+        let width_blocks = (w / 36.0).ceil().max(1.0);
+        let depth_blocks = (depth / 512.0).ceil().max(1.0);
+        width_blocks * depth_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_and_arith() {
+        let b = ResourceBudget::new(100.0, 50.0, 10.0);
+        let u = ResourceBudget::new(60.0, 50.0, 5.0);
+        assert!(u.fits_in(&b));
+        assert!(!b.minus(&u).any_negative());
+        let over = ResourceBudget::new(160.0, 10.0, 5.0);
+        assert!(!over.fits_in(&b));
+        assert_eq!(b.plus(&u).dsp, 160.0);
+    }
+
+    #[test]
+    fn bram_block_estimate() {
+        // 18 Kb exactly at 36-bit width = 512 deep = 1 block.
+        assert_eq!(bram18k_for(18.0 * 1024.0, 36.0), 1.0);
+        // Wide bus costs width blocks even when shallow.
+        assert_eq!(bram18k_for(1024.0, 512.0), 15.0); // ceil(512/36)=15
+        assert_eq!(bram18k_for(0.0, 36.0), 0.0);
+    }
+
+    #[test]
+    fn fraction_of_device() {
+        let d = FpgaDevice::ku115();
+        let r = ResourceBudget::fraction_of(&d, 0.5, 0.25, 1.0);
+        assert_eq!(r.dsp, 2760.0);
+        assert_eq!(r.bram18k, 1080.0);
+        assert_eq!(r.bw_gbps, 19.2);
+    }
+}

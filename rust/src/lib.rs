@@ -1,0 +1,47 @@
+//! # DNNExplorer — reproduction of the ICCAD'20 paper
+//!
+//! A framework for modeling and exploring the hybrid **pipeline + generic**
+//! FPGA DNN accelerator paradigm proposed by DNNExplorer (Zhang et al.,
+//! ICCAD 2020).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`dnn`] — DNN layer/graph IR, the model zoo (VGG/AlexNet/ResNet/...),
+//!   and layer-wise analysis (MACs, CTC ratios, variance splits).
+//! * [`fpga`] — FPGA device specifications (DSP/BRAM/bandwidth budgets).
+//! * [`perfmodel`] — the paper's analytical performance & resource models
+//!   (Eq. 1–13): pipeline structure and generic structure, both on-chip
+//!   buffer allocation strategies, IS/WS dataflows.
+//! * [`dse`] — the two-level design-space exploration engine: global PSO
+//!   over the Resource Allocation Vector (Algorithm 1) plus the CTC-based
+//!   and balance-oriented local optimizers (Algorithms 2–3).
+//! * [`baselines`] — reimplementations of the paper's comparators:
+//!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
+//!   Xilinx-DPU-like fixed IP model.
+//! * [`sim`] — a cycle-approximate accelerator simulator standing in for
+//!   board-level measurement (see DESIGN.md, hardware substitution).
+//! * [`runtime`] — PJRT runtime loading AOT-compiled HLO artifacts
+//!   (produced by `python/compile/aot.py`) for functional execution.
+//! * [`coordinator`] — a tokio-based serving coordinator that drives an
+//!   explored accelerator configuration over batched inference requests.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation as text rows/series.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod dse;
+pub mod fpga;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use dnn::graph::Network;
+pub use dse::engine::{ExplorerConfig, ExplorerResult};
+pub use fpga::device::FpgaDevice;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,402 @@
+//! DNNExplorer CLI: explore, analyze, report, serve.
+//!
+//! Hand-rolled argument parsing (clap is unavailable offline): flags are
+//! `--key value` pairs after a subcommand.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use dnnexplorer::config::ExperimentConfig;
+use dnnexplorer::dnn::{analysis, Precision};
+use dnnexplorer::dse::engine;
+use dnnexplorer::report::{self, Effort};
+use dnnexplorer::util::json::Json;
+
+const USAGE: &str = "\
+dnnexplorer — DNNExplorer (ICCAD'20) reproduction
+
+USAGE:
+  dnnexplorer explore [--network N] [--height H] [--width W] [--device D]
+                      [--bits B] [--batch B|0] [--config FILE]
+                      [--population P] [--iterations I] [--seed S] [--json]
+  dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
+  dnnexplorer report [--csv DIR] <fig1|fig2a|fig2b|table1|fig7|fig8|fig9|fig10|fig11|table3|table4|all> [--full]
+  dnnexplorer emit    [explore flags] [--out FILE]     # optimization-file JSON
+  dnnexplorer sweep   [--network N] [--device D] [--batch B]  # all 12 input cases, JSONL
+  dnnexplorer simulate [explore flags]                 # board-level (simulated) check
+  dnnexplorer serve   [--artifacts DIR] [--requests N] [--batch B] [--workers W]
+
+Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
+          googlenet inceptionv3 squeezenet mobilenet mobilenetv2
+Devices:  ZC706 KU115 VU9P ZCU102";
+
+/// Parsed flags: positional args + `--key value` / bare `--flag` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let is_bool = matches!(key, "json" | "full");
+                if is_bool {
+                    flags.insert(key.to_string(), "true".into());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                    flags.insert(key.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "explore" => cmd_explore(rest),
+        "analyze" => cmd_analyze(rest),
+        "report" => cmd_report(rest),
+        "sweep" => cmd_sweep(rest),
+        "emit" => cmd_emit(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_explore(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::from_file(&PathBuf::from(p))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(n) = args.get("network") {
+        cfg.network = n.to_string();
+    }
+    if let Some(d) = args.get("device") {
+        cfg.device = d.to_string();
+    }
+    cfg.height = args.get_usize("height", cfg.height)?;
+    cfg.width = args.get_usize("width", cfg.width)?;
+    cfg.bits = args.get_usize("bits", cfg.bits as usize)? as u32;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.population = args.get_usize("population", cfg.population)?;
+    cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+
+    let net = cfg.resolve_network()?;
+    let ex = cfg.explorer()?;
+    let res = engine::explore(&net, &ex)
+        .ok_or_else(|| anyhow::anyhow!("no feasible design found"))?;
+    let b = &res.best;
+    if args.has("json") {
+        let j = Json::obj(vec![
+            ("network", Json::s(net.name.clone())),
+            (
+                "rav",
+                Json::obj(vec![
+                    ("sp", Json::n(b.rav.sp as f64)),
+                    ("batch", Json::n(b.rav.batch as f64)),
+                    ("dsp_frac", Json::n(b.rav.dsp_frac)),
+                    ("bram_frac", Json::n(b.rav.bram_frac)),
+                    ("bw_frac", Json::n(b.rav.bw_frac)),
+                ]),
+            ),
+            ("gops", Json::n(b.gops)),
+            ("fps", Json::n(b.throughput_fps)),
+            ("dsp_used", Json::n(b.dsp_used)),
+            ("bram_used", Json::n(b.bram_used)),
+            ("dsp_efficiency", Json::n(b.dsp_efficiency)),
+            (
+                "search",
+                Json::obj(vec![
+                    ("iterations", Json::n(res.stats.iterations as f64)),
+                    ("evaluations", Json::n(res.stats.evaluations as f64)),
+                    ("elapsed_s", Json::n(res.stats.elapsed_s)),
+                ]),
+            ),
+        ]);
+        println!("{}", j.render());
+    } else {
+        println!("network        : {} ({:.1} GOP)", net.name, net.total_gop());
+        println!("device         : {}", ex.device.name);
+        println!("best RAV       : {}", b.rav);
+        println!("throughput     : {:.1} GOP/s ({:.1} img/s)", b.gops, b.throughput_fps);
+        println!("DSP used       : {:.0} (eff {:.1}%)", b.dsp_used, b.dsp_efficiency * 100.0);
+        println!("BRAM used      : {:.0}", b.bram_used);
+        println!(
+            "search         : {} iters, {} evals, {:.1}s{}",
+            res.stats.iterations,
+            res.stats.evaluations,
+            res.stats.elapsed_s,
+            if res.stats.early_terminated { " (early term)" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let network = args.get("network").unwrap_or("vgg16_conv");
+    let height = args.get_usize("height", 224)?;
+    let width = args.get_usize("width", 224)?;
+    let bits = args.get_usize("bits", 16)?;
+    let p = if bits == 8 { Precision::Int8 } else { Precision::Int16 };
+    let net = dnnexplorer::dnn::zoo::by_name(network, height, width, p)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let prof = analysis::profile(&net);
+    println!("{} — {:.2} GOP, {} params", prof.network, prof.total_gop, prof.total_weights);
+    println!("{:<14} {:>14} {:>14} {:>10}", "layer", "MACs", "weights", "CTC");
+    for l in &prof.layers {
+        println!("{:<14} {:>14} {:>14} {:>10.1}", l.name, l.macs, l.weights, l.ctc);
+    }
+    let hs = analysis::half_split_variance(&net);
+    println!("V1/V2 variance ratio: {:.1}", hs.ratio());
+    Ok(())
+}
+
+/// Shared: resolve the experiment config + run exploration from flags.
+fn explore_from_args(args: &Args) -> anyhow::Result<(dnnexplorer::Network, dnnexplorer::dse::ExplorerConfig, dnnexplorer::ExplorerResult)> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::from_file(&PathBuf::from(p))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(n) = args.get("network") {
+        cfg.network = n.to_string();
+    }
+    if let Some(d) = args.get("device") {
+        cfg.device = d.to_string();
+    }
+    cfg.height = args.get_usize("height", cfg.height)?;
+    cfg.width = args.get_usize("width", cfg.width)?;
+    cfg.bits = args.get_usize("bits", cfg.bits as usize)? as u32;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    let net = cfg.resolve_network()?;
+    let ex = cfg.explorer()?;
+    let res = engine::explore(&net, &ex)
+        .ok_or_else(|| anyhow::anyhow!("no feasible design found"))?;
+    Ok((net, ex, res))
+}
+
+/// Emit the explored design as the optimization-file JSON (paper Fig. 4).
+fn cmd_emit(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let (net, _ex, res) = explore_from_args(&args)?;
+    let j = dnnexplorer::dse::emit::emit(&net, &res.best).render();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &j)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{j}"),
+    }
+    Ok(())
+}
+
+/// Explore then run the cycle-approximate simulator on the winner.
+fn cmd_simulate(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::sim::{simulate_candidate, trace::Trace};
+    let args = Args::parse(argv)?;
+    let (net, ex, res) = explore_from_args(&args)?;
+    let b = &res.best;
+    let mut trace = Trace::enabled(1 << 14);
+    let sim = simulate_candidate(&net, &ex.device, b, &mut trace)?;
+    println!("network      : {} on {}", net.name, ex.device.name);
+    println!("RAV          : {}", b.rav);
+    println!("analytical   : {:.1} GOP/s ({:.1} img/s)", b.gops, b.throughput_fps);
+    println!("simulated    : {:.1} GOP/s ({:.1} img/s)", sim.gops, sim.fps);
+    println!(
+        "error        : {:.2}%  bottleneck: {}  handoff fits: {}",
+        (b.gops - sim.gops).abs() / sim.gops * 100.0,
+        sim.bottleneck,
+        sim.handoff_fits
+    );
+    println!(
+        "trace        : {} events, {:.1} MB DRAM/batch, {} stalls",
+        trace.events.len(),
+        trace.dram_bytes() / 1e6,
+        trace.stalls()
+    );
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("report needs an experiment id\n{USAGE}"))?;
+    let effort = if args.has("full") { Effort::Full } else { Effort::Quick };
+    let csv_dir = args.get("csv").map(PathBuf::from);
+    for rs in report::run(id, effort)? {
+        println!("{}", rs.render());
+        if let Some(dir) = &csv_dir {
+            let p = rs.save_csv(dir)?;
+            eprintln!("wrote {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+/// Sweep a network across the 12 paper input cases (or a custom list) on
+/// one device, printing one JSON line per case — the raw data behind
+/// Figs. 9/10 for any zoo network, not just VGG16.
+fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let network = args.get("network").unwrap_or("vgg16_conv").to_string();
+    let device = args.get("device").unwrap_or("KU115").to_string();
+    let batch = args.get_usize("batch", 1)?;
+    for (i, (h, w)) in dnnexplorer::dnn::zoo::INPUT_CASES.iter().enumerate() {
+        let cfg = ExperimentConfig {
+            network: network.clone(),
+            device: device.clone(),
+            height: *h,
+            width: *w,
+            batch,
+            population: args.get_usize("population", 16)?,
+            iterations: args.get_usize("iterations", 12)?,
+            ..Default::default()
+        };
+        let Ok(net) = cfg.resolve_network() else { continue };
+        let ex = cfg.explorer()?;
+        match engine::explore(&net, &ex) {
+            Some(res) => {
+                let b = &res.best;
+                println!(
+                    "{}",
+                    Json::obj(vec![
+                        ("case", Json::n((i + 1) as f64)),
+                        ("input", Json::s(format!("3x{h}x{w}"))),
+                        ("sp", Json::n(b.rav.sp as f64)),
+                        ("batch", Json::n(b.rav.batch as f64)),
+                        ("gops", Json::n(b.gops)),
+                        ("fps", Json::n(b.throughput_fps)),
+                        ("dsp", Json::n(b.dsp_used)),
+                        ("bram", Json::n(b.bram_used)),
+                        ("efficiency", Json::n(b.dsp_efficiency)),
+                        ("latency_s", Json::n(b.frame_latency_s)),
+                    ])
+                    .render()
+                );
+            }
+            None => println!(
+                "{}",
+                Json::obj(vec![
+                    ("case", Json::n((i + 1) as f64)),
+                    ("input", Json::s(format!("3x{h}x{w}"))),
+                    ("error", Json::s("infeasible")),
+                ])
+                .render()
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+    use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
+    use dnnexplorer::runtime::{ArtifactStore, Engine};
+
+    let args = Args::parse(argv)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let requests = args.get_usize("requests", 64)?;
+    let batch = args.get_usize("batch", 4)?;
+
+    let store = ArtifactStore::open(&artifacts)?;
+    let first = store
+        .manifest
+        .entries
+        .iter()
+        .find(|e| e.role == "pipeline_stage" || e.role == "generic_layer")
+        .ok_or_else(|| anyhow::anyhow!("no stage entries in manifest"))?;
+    let input_shape = first
+        .input_shapes
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("stage entry has no input shape"))?;
+    println!("serving {} (input {:?})", store.manifest.network, input_shape);
+
+    // PJRT handles are not Send: the engine + executor are built inside
+    // the server's worker thread.
+    let server = AcceleratorServer::spawn(
+        move || {
+            let engine = Engine::cpu()?;
+            ChainExecutor::load(&engine, &store)
+        },
+        BatcherConfig {
+            batch_size: batch.max(1),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    )?;
+    let t = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..requests {
+        let h = server.handle();
+        let shape = input_shape.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut frame = HostTensor::zeros(&shape);
+            for (j, v) in frame.data.iter_mut().enumerate() {
+                *v = ((i * 31 + j) % 255) as f32 / 255.0;
+            }
+            h.infer(frame).is_ok()
+        }));
+    }
+    let ok = clients
+        .into_iter()
+        .filter(|c| matches!(c, _))
+        .map(|c| c.join().unwrap_or(false))
+        .filter(|ok| *ok)
+        .count();
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{requests} ok in {dt:.2}s = {:.1} req/s | {}",
+        requests as f64 / dt,
+        server.metrics.summary()
+    );
+    server.shutdown();
+    Ok(())
+}

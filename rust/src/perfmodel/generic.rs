@@ -1,0 +1,425 @@
+//! Generic-structure analytical model (paper §6.2, Eq. 5–13).
+//!
+//! A reusable `CPF_g × KPF_g` MAC array processes layers `SP+1..N` in a
+//! recurrent manner. Two on-chip buffer allocation strategies are
+//! modeled (paper §5.3.2):
+//!
+//! 1. **FmAccumInBram** — BRAM holds the feature-map + accumulation
+//!    buffers; the weight buffer lives in LUTs (Xilinx DPU style).
+//! 2. **AllInBram** — BRAM holds all buffers (VTA / HybridDNN style),
+//!    enabling the weight-stationary dataflow.
+//!
+//! Under strategy 2 each layer independently picks the better of the
+//! input-stationary (IS) and weight-stationary (WS) dataflows.
+
+
+use crate::dnn::{Layer, Precision};
+use crate::fpga::resource::{bram18k_for, ResourceBudget};
+
+/// On-chip buffer allocation strategy (paper §5.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferStrategy {
+    /// Strategy 1: BRAM → feature-map + accumulation buffers; LUT → weights.
+    FmAccumInBram,
+    /// Strategy 2: BRAM → all buffers.
+    AllInBram,
+}
+
+/// Dataflow of the generic structure (strategy 2 only offers the choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    InputStationary,
+    WeightStationary,
+}
+
+/// Generic-structure hardware configuration.
+#[derive(Debug, Clone)]
+pub struct GenericConfig {
+    pub cpf: usize,
+    pub kpf: usize,
+    pub dw: Precision,
+    pub ww: Precision,
+    pub strategy: BufferStrategy,
+    pub freq_mhz: f64,
+    /// Feature-map buffer capacity, bits.
+    pub cap_fm_bits: f64,
+    /// Accumulation buffer capacity, bits.
+    pub cap_accum_bits: f64,
+    /// Weight buffer capacity, bits (BRAM under strategy 2; LUT-RAM under
+    /// strategy 1, still finite).
+    pub cap_w_bits: f64,
+}
+
+impl GenericConfig {
+    /// Build a config that fills a BRAM18K block budget with the
+    /// strategy's canonical split.
+    ///
+    /// * Strategy 1: accum 1/8, feature maps 7/8 of BRAM bits; weight
+    ///   buffer gets a LUT-RAM allowance (256 Kb — typical distributed-RAM
+    ///   budget of the mid-range parts).
+    /// * Strategy 2: weights 1/2, feature maps 3/8, accum 1/8.
+    pub fn with_budget(
+        cpf: usize,
+        kpf: usize,
+        dw: Precision,
+        ww: Precision,
+        strategy: BufferStrategy,
+        freq_mhz: f64,
+        bram18k_budget: f64,
+    ) -> Self {
+        // 85% fill target: block-granularity rounding and port-width
+        // padding must not push the realized usage past the budget.
+        let bits = bram18k_budget * 18.0 * 1024.0 * 0.85;
+        let (cap_fm, cap_accum, cap_w) = match strategy {
+            BufferStrategy::FmAccumInBram => {
+                (bits * 7.0 / 8.0, bits / 8.0, 256.0 * 1024.0)
+            }
+            BufferStrategy::AllInBram => (bits * 3.0 / 8.0, bits / 8.0, bits / 2.0),
+        };
+        Self {
+            cpf,
+            kpf,
+            dw,
+            ww,
+            strategy,
+            freq_mhz,
+            cap_fm_bits: cap_fm,
+            cap_accum_bits: cap_accum,
+            cap_w_bits: cap_w,
+        }
+    }
+
+    /// Resource usage of this configuration.
+    pub fn resources(&self) -> ResourceBudget {
+        let dsp = (self.cpf * self.kpf) as f64 * self.ww.dsp_per_mac();
+        let fm_port = (self.cpf as f64 * self.dw.bits() as f64).max(18.0);
+        let acc_port = (self.kpf as f64 * self.dw.bits() as f64).max(18.0);
+        let mut bram = bram18k_for(self.cap_fm_bits, fm_port)
+            + bram18k_for(self.cap_accum_bits, acc_port);
+        if self.strategy == BufferStrategy::AllInBram {
+            let w_port = ((self.cpf * self.kpf) as f64 * self.ww.bits() as f64).min(4608.0);
+            bram += bram18k_for(self.cap_w_bits, w_port);
+        }
+        ResourceBudget::new(dsp, bram, 0.0)
+    }
+}
+
+/// Per-layer latency breakdown.
+#[derive(Debug, Clone)]
+pub struct LayerLatency {
+    /// Eq. 6 compute term, seconds (one frame).
+    pub comp_s: f64,
+    /// One weight-load pass at the weight bandwidth share, seconds.
+    pub w_s: f64,
+    /// Input / output feature-map swap terms, seconds (zero when the maps
+    /// are on-chip resident).
+    pub ifm_s: f64,
+    pub ofm_s: f64,
+    /// Eq. 5 feature-map group count.
+    pub g_fm: f64,
+    /// Eq. 12 weight group count (WS only; 1 otherwise).
+    pub g_w: f64,
+    /// Chosen dataflow.
+    pub dataflow: Dataflow,
+    /// Eq. 11/13 overall per-frame latency, seconds.
+    pub total_s: f64,
+    /// Whether the layer's feature maps fit on-chip (no DRAM swap).
+    pub fm_resident: bool,
+}
+
+/// Whole generic-structure estimate over its layer range.
+#[derive(Debug, Clone)]
+pub struct GenericEstimate {
+    pub layers: Vec<LayerLatency>,
+    /// Steady-state period to process one batch, seconds.
+    pub period_s: f64,
+    pub throughput_fps: f64,
+    pub gops: f64,
+    pub resources: ResourceBudget,
+}
+
+/// Eq. 5: feature-map group count from the accumulation-buffer capacity
+/// (ping-pong halved).
+fn group_fm(l: &Layer, dw: Precision, cap_accum_bits: f64) -> f64 {
+    let ofm_bits = l.output.elems() as f64 * dw.bits() as f64;
+    (ofm_bits / (cap_accum_bits / 2.0)).ceil().max(1.0)
+}
+
+/// Eq. 12: weight group count from the weight-buffer capacity.
+fn group_w(l: &Layer, ww: Precision, cap_w_bits: f64) -> f64 {
+    let w_bits = l.weights() as f64 * ww.bits() as f64;
+    (w_bits / (cap_w_bits / 2.0)).ceil().max(1.0)
+}
+
+/// Latency of one layer on the generic structure (per frame), given the
+/// structure's bandwidth allocation `bw_gbps` and a batch size for weight
+/// amortization.
+pub fn layer_latency(l: &Layer, cfg: &GenericConfig, bw_gbps: f64, batch: usize) -> LayerLatency {
+    let freq = cfg.freq_mhz * 1e6;
+    let batch = batch.max(1) as f64;
+    // Effective parallelism: grouped/depthwise layers cannot fill CPF
+    // beyond their per-group input depth; tiny K cannot fill KPF.
+    let eff_cpf = (l.input.c as f64 / l.groups() as f64).min(cfg.cpf as f64).max(1.0);
+    let eff_kpf = (l.output.c as f64).min(cfg.kpf as f64).max(1.0);
+    let comp_s = l.macs() as f64 / (eff_cpf * eff_kpf * freq);
+
+    let g_fm = group_fm(l, cfg.dw, cfg.cap_accum_bits);
+    let w_bytes = l.weight_bytes(cfg.ww);
+    let ifm_bytes = l.ifm_bytes(cfg.dw);
+    let ofm_bytes = l.ofm_bytes(cfg.dw);
+
+    // Residency: input and output maps both fit in ping-pong halves of the
+    // fm buffer → no DRAM swap for activations (Eq. 11 degenerates to Eq. 8).
+    let fm_resident = (ifm_bytes + ofm_bytes) * 8.0 <= cfg.cap_fm_bits / 1.0
+        && ifm_bytes * 8.0 <= cfg.cap_fm_bits / 2.0
+        && ofm_bytes * 8.0 <= cfg.cap_fm_bits / 2.0;
+
+    let bw = bw_gbps * 1e9;
+
+    // Candidate 1: input-stationary (Eq. 11). Weight traffic is fetched
+    // G_fm times per frame, amortized over the batch (the same weight
+    // group serves every frame of the batch).
+    let is_lat = {
+        let traffic_w = w_bytes * g_fm / batch;
+        let (traffic_i, traffic_o) = if fm_resident {
+            (0.0, 0.0)
+        } else {
+            (ifm_bytes, ofm_bytes)
+        };
+        let total_traffic = traffic_w + traffic_i + traffic_o;
+        if total_traffic <= 0.0 || bw <= 0.0 {
+            (comp_s, traffic_w / bw.max(1.0), 0.0, 0.0, comp_s)
+        } else {
+            // Proportional bandwidth split across the three streams
+            // (paper §6.2.1: BW divided into BW_w / BW_ifm / BW_ofm).
+            let l_w = total_traffic / bw * (traffic_w / total_traffic).max(0.0);
+            let l_i = total_traffic / bw * (traffic_i / total_traffic).max(0.0);
+            let l_o = total_traffic / bw * (traffic_o / total_traffic).max(0.0);
+            let mem = total_traffic / bw;
+            (comp_s, l_w, l_i, l_o, comp_s.max(mem))
+        }
+    };
+
+    // Candidate 2: weight-stationary (Eq. 13), strategy 2 only.
+    let ws_lat = if cfg.strategy == BufferStrategy::AllInBram {
+        let g_w = group_w(l, cfg.ww, cfg.cap_w_bits);
+        let traffic_w = w_bytes / batch; // loaded once per batch
+        let (traffic_i, traffic_o) = if fm_resident && g_w <= 1.0 {
+            (0.0, 0.0)
+        } else {
+            (ifm_bytes * g_w, ofm_bytes * g_w)
+        };
+        let total_traffic = traffic_w + traffic_i + traffic_o;
+        let mem = if bw > 0.0 { total_traffic / bw } else { f64::INFINITY };
+        Some((comp_s.max(mem), g_w, traffic_w, traffic_i, traffic_o, mem))
+    } else {
+        None
+    };
+
+    let (comp_s, w_s, ifm_s, ofm_s, total_is) = is_lat;
+    match ws_lat {
+        Some((total_ws, g_w, tw, ti, to, mem)) if total_ws < total_is => {
+            let split = |t: f64| {
+                let tt = tw + ti + to;
+                if tt > 0.0 {
+                    mem * t / tt
+                } else {
+                    0.0
+                }
+            };
+            LayerLatency {
+                comp_s,
+                w_s: split(tw),
+                ifm_s: split(ti),
+                ofm_s: split(to),
+                g_fm,
+                g_w,
+                dataflow: Dataflow::WeightStationary,
+                total_s: total_ws,
+                fm_resident,
+            }
+        }
+        _ => LayerLatency {
+            comp_s,
+            w_s,
+            ifm_s,
+            ofm_s,
+            g_fm,
+            g_w: 1.0,
+            dataflow: Dataflow::InputStationary,
+            total_s: total_is,
+            fm_resident,
+        },
+    }
+}
+
+/// Estimate the generic structure over a slice of layers.
+pub fn estimate(
+    layers: &[&Layer],
+    cfg: &GenericConfig,
+    bw_gbps: f64,
+    batch: usize,
+) -> GenericEstimate {
+    let batch_f = batch.max(1) as f64;
+    let details: Vec<LayerLatency> = layers
+        .iter()
+        .map(|l| layer_latency(l, cfg, bw_gbps, batch))
+        .collect();
+    // The generic unit is sequential: the batch period is the sum over
+    // layers of batch-scaled compute/fm terms vs once-per-batch weights.
+    let period_s: f64 = details
+        .iter()
+        .map(|d| {
+            let mem_per_batch = (d.w_s + d.ifm_s + d.ofm_s) * batch_f;
+            (d.comp_s * batch_f).max(mem_per_batch)
+        })
+        .sum();
+    let ops: f64 = layers.iter().map(|l| l.ops() as f64).sum();
+    let throughput_fps = if period_s > 0.0 { batch_f / period_s } else { 0.0 };
+    let mut resources = cfg.resources();
+    resources.bw_gbps = bw_gbps;
+    GenericEstimate {
+        layers: details,
+        period_s,
+        throughput_fps,
+        gops: throughput_fps * ops / 1e9,
+        resources,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::{conv_out_dim, LayerKind, TensorShape};
+
+    fn conv_layer(c: usize, hw: usize, k: usize, kern: usize) -> Layer {
+        let input = TensorShape::new(c, hw, hw);
+        let o = conv_out_dim(hw, kern, 1, kern / 2);
+        Layer {
+            name: "t".into(),
+            kind: LayerKind::Conv {
+                kernel: kern,
+                kernel_w: kern,
+                stride: 1,
+                pad: kern / 2,
+                groups: 1,
+            },
+            input,
+            output: TensorShape::new(k, o, o),
+            precision: Precision::Int16,
+        }
+    }
+
+    fn cfg(strategy: BufferStrategy) -> GenericConfig {
+        GenericConfig::with_budget(
+            32,
+            64,
+            Precision::Int16,
+            Precision::Int16,
+            strategy,
+            200.0,
+            1500.0,
+        )
+    }
+
+    #[test]
+    fn eq6_compute_latency() {
+        let l = conv_layer(64, 56, 64, 3);
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let d = layer_latency(&l, &c, 1000.0, 1);
+        let expect = l.macs() as f64 / (32.0 * 64.0 * 200e6);
+        assert!((d.comp_s - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn compute_bound_with_ample_bandwidth() {
+        let l = conv_layer(256, 56, 256, 3);
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let d = layer_latency(&l, &c, 10_000.0, 1);
+        assert!((d.total_s - d.comp_s).abs() / d.comp_s < 1e-6);
+    }
+
+    #[test]
+    fn memory_bound_with_scarce_bandwidth() {
+        // 1x1 conv: low CTC; tiny bandwidth must dominate.
+        let l = conv_layer(512, 14, 512, 1);
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let d = layer_latency(&l, &c, 0.1, 1);
+        assert!(d.total_s > d.comp_s * 2.0, "mem {} comp {}", d.total_s, d.comp_s);
+    }
+
+    #[test]
+    fn batch_amortizes_weights() {
+        let l = conv_layer(512, 7, 512, 3); // weight-dominated
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let b1 = layer_latency(&l, &c, 1.0, 1);
+        let b8 = layer_latency(&l, &c, 1.0, 8);
+        assert!(b8.total_s < b1.total_s, "b8 {} b1 {}", b8.total_s, b1.total_s);
+    }
+
+    #[test]
+    fn large_fm_not_resident_small_is() {
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let small = conv_layer(64, 28, 64, 3);
+        let big = conv_layer(64, 512, 64, 3);
+        assert!(layer_latency(&small, &c, 19.2, 1).fm_resident);
+        assert!(!layer_latency(&big, &c, 19.2, 1).fm_resident);
+    }
+
+    #[test]
+    fn strategy2_picks_ws_when_weight_refetch_dominates() {
+        // Large output map + big weights: IS must refetch the weights
+        // G_fm times (accum buffer too small for the map), so WS's
+        // load-weights-once schedule wins under strategy 2.
+        let l = conv_layer(512, 56, 512, 3);
+        let c = cfg(BufferStrategy::AllInBram);
+        let d = layer_latency(&l, &c, 2.0, 1);
+        assert!(d.g_fm > 1.0, "test premise: G_fm {} should exceed 1", d.g_fm);
+        assert_eq!(d.dataflow, Dataflow::WeightStationary);
+    }
+
+    #[test]
+    fn strategy2_keeps_is_when_everything_fits() {
+        // Small maps and weights: one pass either way; IS is the default.
+        let l = conv_layer(64, 14, 64, 3);
+        let c = cfg(BufferStrategy::AllInBram);
+        let d = layer_latency(&l, &c, 19.2, 1);
+        assert_eq!(d.dataflow, Dataflow::InputStationary);
+    }
+
+    #[test]
+    fn estimate_sums_layers() {
+        let l1 = conv_layer(64, 56, 64, 3);
+        let l2 = conv_layer(64, 56, 128, 3);
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let e = estimate(&[&l1, &l2], &c, 19.2, 1);
+        assert_eq!(e.layers.len(), 2);
+        assert!(e.period_s >= e.layers[0].total_s.max(e.layers[1].total_s));
+        assert!(e.throughput_fps > 0.0 && e.gops > 0.0);
+    }
+
+    #[test]
+    fn resources_include_weight_bram_only_for_strategy2() {
+        let c1 = cfg(BufferStrategy::FmAccumInBram).resources();
+        let c2 = cfg(BufferStrategy::AllInBram).resources();
+        assert!(c2.bram18k != c1.bram18k);
+        assert_eq!(c1.dsp, c2.dsp);
+    }
+
+    #[test]
+    fn depthwise_effective_parallelism() {
+        // Depthwise conv: C/groups = 1 → only 1 lane of CPF is usable.
+        let input = TensorShape::new(64, 56, 56);
+        let l = Layer {
+            name: "dw".into(),
+            kind: LayerKind::Conv { kernel: 3, kernel_w: 3, stride: 1, pad: 1, groups: 64 },
+            input,
+            output: TensorShape::new(64, 56, 56),
+            precision: Precision::Int16,
+        };
+        let c = cfg(BufferStrategy::FmAccumInBram);
+        let d = layer_latency(&l, &c, 10_000.0, 1);
+        let expect = l.macs() as f64 / (1.0 * 64.0 * 200e6);
+        assert!((d.comp_s - expect).abs() / expect < 1e-12);
+    }
+}

@@ -1,0 +1,46 @@
+//! Analytical performance & resource models (paper §6, *Accelerator
+//! Modeling*).
+//!
+//! Two families, matching the two halves of the proposed paradigm:
+//!
+//! * [`pipeline`] — the layer-dedicated pipeline structure (paper Eq. 3–4
+//!   plus a resource model for DSP / BRAM / bandwidth usage).
+//! * [`generic`] — the reusable MAC-array structure (paper Eq. 5–13, both
+//!   on-chip buffer allocation strategies and both IS/WS dataflows).
+//!
+//! Both produce latency/throughput estimates in **seconds / frames-per-
+//! second / GOP/s** and resource usage as a [`crate::fpga::ResourceBudget`].
+
+pub mod generic;
+pub mod pipeline;
+
+use crate::dnn::Precision;
+
+/// DSP efficiency per the paper's Eq. 1:
+/// `EFFI_DSP = GOPs / (α · DSP_allocated · FREQ)`.
+///
+/// `gops` in GOP/s, `freq_mhz` in MHz, `dsp` as allocated DSP count.
+pub fn dsp_efficiency(gops: f64, precision: Precision, dsp_allocated: f64, freq_mhz: f64) -> f64 {
+    if dsp_allocated <= 0.0 || freq_mhz <= 0.0 {
+        return 0.0;
+    }
+    gops / (precision.alpha() * dsp_allocated * freq_mhz / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_matches_paper_table3_row4() {
+        // Table 3 case 4: 1702.3 GOP/s, 4444 DSP, 16-bit, 200 MHz -> 95.8%.
+        let e = dsp_efficiency(1702.3, Precision::Int16, 4444.0, 200.0);
+        assert!((e - 0.958).abs() < 0.005, "eff {e}");
+    }
+
+    #[test]
+    fn eq1_degenerate_inputs() {
+        assert_eq!(dsp_efficiency(100.0, Precision::Int16, 0.0, 200.0), 0.0);
+        assert_eq!(dsp_efficiency(100.0, Precision::Int16, 100.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Regeneration harness for every table and figure of the paper's
+//! evaluation (the experiment index in DESIGN.md).
+//!
+//! Each `figN`/`tableN` function returns a [`RowSet`] — the same rows or
+//! series the paper plots — which the CLI (`dnnexplorer report <id>`) and
+//! the criterion benches print. Absolute values depend on the simulator
+//! substrate; the *shape* (who wins, by what factor, where crossovers
+//! fall) is the reproduction target (see EXPERIMENTS.md).
+
+pub mod figures;
+pub mod tables;
+
+
+/// A printable table: the common currency of the report harness.
+#[derive(Debug, Clone)]
+pub struct RowSet {
+    pub id: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl RowSet {
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as CSV (for plotting the figures).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV into `dir` as `<id>.csv`.
+    pub fn save_csv(&self, dir: &std::path::Path) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Effort level for the DSE-backed experiments: `quick` shrinks the PSO
+/// for CI/bench runs; `full` uses paper-scale search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Full,
+}
+
+impl Effort {
+    pub fn pso(self) -> crate::dse::pso::PsoParams {
+        match self {
+            Effort::Quick => crate::dse::pso::PsoParams {
+                population: 12,
+                iterations: 8,
+                ..Default::default()
+            },
+            Effort::Full => crate::dse::pso::PsoParams::default(),
+        }
+    }
+}
+
+/// Dispatch an experiment by id ("fig1", "table3", ...). `all` runs every
+/// experiment in index order.
+pub fn run(id: &str, effort: Effort) -> anyhow::Result<Vec<RowSet>> {
+    Ok(match id.to_ascii_lowercase().as_str() {
+        "fig1" => vec![figures::fig1_ctc_distribution()],
+        "fig2a" => vec![figures::fig2a_efficiency_trend(effort)],
+        "fig2b" => vec![figures::fig2b_depth_scaling(effort)],
+        "fig2" => vec![
+            figures::fig2a_efficiency_trend(effort),
+            figures::fig2b_depth_scaling(effort),
+        ],
+        "table1" => vec![tables::table1_variance_ratio()],
+        "fig7" => vec![figures::fig7_pipeline_model_error()],
+        "fig8" => vec![figures::fig8_generic_model_error()],
+        "fig9" => vec![figures::fig9_dsp_efficiency(effort)],
+        "fig10" => vec![figures::fig10_throughput(effort)],
+        "fig11" => vec![figures::fig11_deeper_dnns(effort)],
+        "table3" => vec![tables::table3_full_results(effort)],
+        "table4" => vec![tables::table4_batch_exploration(effort)],
+        "all" => {
+            let mut v = Vec::new();
+            for id in [
+                "fig1", "fig2a", "fig2b", "table1", "fig7", "fig8", "fig9", "fig10", "fig11",
+                "table3", "table4",
+            ] {
+                v.extend(run(id, effort)?);
+            }
+            v
+        }
+        other => anyhow::bail!("unknown experiment id {other:?} (see DESIGN.md index)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rowset_render_aligns() {
+        let mut r = RowSet::new("t", "demo", &["a", "bbbb"]);
+        r.push_row(vec!["xxxxx".into(), "1".into()]);
+        let s = r.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("xxxxx"));
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", Effort::Quick).is_err());
+    }
+
+    #[test]
+    fn csv_escapes_and_roundtrips() {
+        let mut r = RowSet::new("t", "demo", &["a", "b"]);
+        r.push_row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = r.to_csv();
+        assert_eq!(csv, "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn save_csv_writes_file() {
+        let dir = std::env::temp_dir().join(format!("dnnx-csv-{}", std::process::id()));
+        let mut r = RowSet::new("unit_csv", "demo", &["a"]);
+        r.push_row(vec!["1".into()]);
+        let p = r.save_csv(&dir).unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,140 @@
+//! Table 1, Table 3 and Table 4 of the paper.
+
+use std::time::Instant;
+
+use crate::dnn::{analysis, zoo, Precision, TensorShape};
+use crate::dse::{engine, ExplorerConfig};
+use crate::fpga::FpgaDevice;
+use crate::report::{Effort, RowSet};
+
+/// Table 1: ratio of CTC variances between the first and second half of
+/// ten DNNs.
+pub fn table1_variance_ratio() -> RowSet {
+    let mut out = RowSet::new(
+        "table1",
+        "Ratio of CTC variances V1/V2 (first vs second half)",
+        &["Network", "Input Size", "V1", "V2", "V1/V2"],
+    );
+    for net in zoo::table1_networks(Precision::Int16) {
+        let hs = analysis::half_split_variance(&net);
+        out.push_row(vec![
+            hs.network.clone(),
+            format!("{}", net.input),
+            format!("{:.2}", hs.v1),
+            format!("{:.4}", hs.v2),
+            format!("{:.1}", hs.ratio()),
+        ]);
+    }
+    out
+}
+
+/// Shared driver: run DNNExplorer on one VGG16 input case.
+pub fn explore_case(
+    h: usize,
+    w: usize,
+    batch: Option<usize>,
+    effort: Effort,
+) -> Option<(engine::ExplorerResult, f64)> {
+    let net = zoo::vgg16_conv(TensorShape::new(3, h, w), Precision::Int16);
+    let cfg = ExplorerConfig {
+        fixed_batch: batch,
+        pso: effort.pso(),
+        ..ExplorerConfig::new(FpgaDevice::ku115())
+    };
+    let t = Instant::now();
+    let res = engine::explore(&net, &cfg)?;
+    let secs = t.elapsed().as_secs_f64();
+    Some((res, secs))
+}
+
+/// Table 3: performance and resource overhead of the DNNExplorer-generated
+/// accelerators with batch size = 1 on KU115 (12 input cases).
+pub fn table3_full_results(effort: Effort) -> RowSet {
+    let mut out = RowSet::new(
+        "table3",
+        "DNNExplorer accelerators, batch = 1, KU115",
+        &[
+            "Case",
+            "Input Size",
+            "GOP/s",
+            "Img./s",
+            "R=[SP,DSP,BRAM,BW]",
+            "Total DSP",
+            "DSP Eff.",
+            "Total BRAM",
+            "Search Time (s)",
+        ],
+    );
+    for (i, (h, w)) in zoo::INPUT_CASES.iter().enumerate() {
+        if let Some((res, secs)) = explore_case(*h, *w, Some(1), effort) {
+            let b = &res.best;
+            out.push_row(vec![
+                format!("{}", i + 1),
+                format!("3x{h}x{w}"),
+                format!("{:.1}", b.gops),
+                format!("{:.1}", b.throughput_fps),
+                format!(
+                    "[{}, {:.1}%, {:.1}%, {:.1}%]",
+                    b.rav.sp,
+                    b.rav.dsp_frac * 100.0,
+                    b.rav.bram_frac * 100.0,
+                    b.rav.bw_frac * 100.0
+                ),
+                format!("{:.0}", b.dsp_used),
+                format!("{:.1}%", b.dsp_efficiency * 100.0),
+                format!("{:.0}", b.bram_used),
+                format!("{:.3}", secs),
+            ]);
+        }
+    }
+    out
+}
+
+/// Table 4: batch-unrestricted exploration for cases 1–4.
+pub fn table4_batch_exploration(effort: Effort) -> RowSet {
+    let mut out = RowSet::new(
+        "table4",
+        "DNNExplorer accelerators without batch restriction, KU115",
+        &["Case", "Input Size", "Batch", "GOP/s", "Img./s", "DSP", "BRAM"],
+    );
+    for (i, (h, w)) in zoo::INPUT_CASES.iter().take(4).enumerate() {
+        if let Some((res, _)) = explore_case(*h, *w, None, effort) {
+            let b = &res.best;
+            out.push_row(vec![
+                format!("{}", i + 1),
+                format!("3x{h}x{w}"),
+                format!("{}", b.rav.batch),
+                format!("{:.1}", b.gops),
+                format!("{:.1}", b.throughput_fps),
+                format!("{:.0}", b.dsp_used),
+                format!("{:.0}", b.bram_used),
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_and_ratios() {
+        let t = table1_variance_ratio();
+        assert_eq!(t.rows.len(), 10);
+        // Every ratio > 1 (paper: V1 on average 1806x higher).
+        for row in &t.rows {
+            let ratio: f64 = row[4].parse().unwrap();
+            assert!(ratio > 1.0, "{:?}", row);
+        }
+    }
+
+    #[test]
+    fn table4_explores_batch() {
+        let t = table4_batch_exploration(Effort::Quick);
+        assert!(!t.rows.is_empty());
+        // Small inputs leave room: at least one case should pick batch > 1.
+        let any_batched = t.rows.iter().any(|r| r[2].parse::<usize>().unwrap() > 1);
+        assert!(any_batched, "{:?}", t.rows);
+    }
+}

@@ -1,0 +1,268 @@
+//! Artifact discovery: `artifacts/manifest.txt` describes every HLO
+//! module `aot.py` exported (name, role, shapes), so the rust side never
+//! hard-codes python-side details.
+//!
+//! Format (line-oriented; serde is unavailable offline):
+//!
+//! ```text
+//! network tiny-vgg-3x32x32
+//! split_point 2
+//! entry file=stage0.hlo.txt role=pipeline_stage index=0 in=1x3x32x32 out=1x16x32x32
+//! entry file=ref.hlo.txt role=reference_model in=1x3x32x32 out=1x10
+//! ```
+//!
+//! Multiple inputs: `in=AxB,CxD`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Description of one exported HLO module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// File name relative to the artifacts dir, e.g. `stage0.hlo.txt`.
+    pub file: String,
+    /// Role: "pipeline_stage" | "generic_layer" | "reference_model" |
+    /// "mac_array".
+    pub role: String,
+    /// Input shapes, row-major.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output_shape: Vec<usize>,
+    /// Optional stage / layer index within the accelerator plan.
+    pub index: Option<usize>,
+}
+
+/// The parsed manifest file.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Network the artifacts implement (e.g. "tiny-vgg-3x32x32").
+    pub network: String,
+    /// Split point used when exporting per-structure executables.
+    pub split_point: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_shape(s: &str) -> anyhow::Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow::anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+fn parse_shapes(s: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    s.split(',').map(parse_shape).collect()
+}
+
+impl ArtifactManifest {
+    /// Parse the line format.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut network = String::new();
+        let mut split_point = 0usize;
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (head, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+            match head {
+                "network" => network = rest.trim().to_string(),
+                "split_point" => {
+                    split_point = rest.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("line {}: bad split_point: {e}", lineno + 1)
+                    })?
+                }
+                "entry" => {
+                    let mut file = None;
+                    let mut role = None;
+                    let mut input_shapes = Vec::new();
+                    let mut output_shape = Vec::new();
+                    let mut index = None;
+                    for kv in rest.split_whitespace() {
+                        let (k, v) = kv.split_once('=').ok_or_else(|| {
+                            anyhow::anyhow!("line {}: expected key=value, got {kv:?}", lineno + 1)
+                        })?;
+                        match k {
+                            "file" => file = Some(v.to_string()),
+                            "role" => role = Some(v.to_string()),
+                            "index" => index = Some(v.parse()?),
+                            "in" => input_shapes = parse_shapes(v)?,
+                            "out" => output_shape = parse_shape(v)?,
+                            other => {
+                                anyhow::bail!("line {}: unknown key {other:?}", lineno + 1)
+                            }
+                        }
+                    }
+                    entries.push(ArtifactEntry {
+                        file: file
+                            .ok_or_else(|| anyhow::anyhow!("line {}: missing file=", lineno + 1))?,
+                        role: role
+                            .ok_or_else(|| anyhow::anyhow!("line {}: missing role=", lineno + 1))?,
+                        input_shapes,
+                        output_shape,
+                        index,
+                    });
+                }
+                other => anyhow::bail!("line {}: unknown directive {other:?}", lineno + 1),
+            }
+        }
+        anyhow::ensure!(!network.is_empty(), "manifest missing `network` line");
+        Ok(Self { network, split_point, entries })
+    }
+
+    /// Serialize back to the line format (round-trip tested).
+    pub fn render(&self) -> String {
+        let mut out = format!("network {}\nsplit_point {}\n", self.network, self.split_point);
+        for e in &self.entries {
+            let shapes = |v: &Vec<Vec<usize>>| {
+                v.iter()
+                    .map(|s| {
+                        s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            out.push_str(&format!("entry file={} role={}", e.file, e.role));
+            if let Some(i) = e.index {
+                out.push_str(&format!(" index={i}"));
+            }
+            if !e.input_shapes.is_empty() {
+                out.push_str(&format!(" in={}", shapes(&e.input_shapes)));
+            }
+            if !e.output_shape.is_empty() {
+                out.push_str(&format!(
+                    " out={}",
+                    e.output_shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A directory of artifacts + its parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: ArtifactManifest,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = ArtifactManifest::parse(&text)?;
+        Ok(Self { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Default location: `$DNNEXPLORER_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> anyhow::Result<Self> {
+        let root = std::env::var("DNNEXPLORER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::open(&root)
+    }
+
+    /// Entries of a given role, keyed by index.
+    pub fn by_role(&self, role: &str) -> BTreeMap<usize, &ArtifactEntry> {
+        self.manifest
+            .entries
+            .iter()
+            .filter(|e| e.role == role)
+            .map(|e| (e.index.unwrap_or(0), e))
+            .collect()
+    }
+
+    /// Find the unique entry of a role.
+    pub fn unique(&self, role: &str) -> anyhow::Result<&ArtifactEntry> {
+        let all: Vec<_> =
+            self.manifest.entries.iter().filter(|e| e.role == role).collect();
+        anyhow::ensure!(
+            all.len() == 1,
+            "expected exactly one {role:?} artifact, found {}",
+            all.len()
+        );
+        Ok(all[0])
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# demo manifest
+network tiny-vgg
+split_point 2
+entry file=stage0.hlo.txt role=pipeline_stage index=0 in=1x3x32x32 out=1x16x32x32
+entry file=ref.hlo.txt role=reference_model in=1x3x32x32 out=1x10
+";
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dnnexplorer-test-{}-{}",
+            tag,
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_parse_and_queries() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.network, "tiny-vgg");
+        assert_eq!(m.split_point, 2);
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].input_shapes, vec![vec![1, 3, 32, 32]]);
+        assert_eq!(m.entries[1].output_shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        let m2 = ArtifactManifest::parse(&m.render()).unwrap();
+        assert_eq!(m.entries, m2.entries);
+        assert_eq!(m.network, m2.network);
+    }
+
+    #[test]
+    fn store_roles() {
+        let dir = tmpdir("store");
+        std::fs::write(dir.join("manifest.txt"), SAMPLE).unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.by_role("pipeline_stage").len(), 1);
+        assert!(store.unique("reference_model").is_ok());
+        assert!(store.unique("nope").is_err());
+        assert!(store.path_of(store.unique("reference_model").unwrap()).ends_with("ref.hlo.txt"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let dir = tmpdir("missing");
+        let err = ArtifactStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(ArtifactManifest::parse("bogus line\n").is_err());
+        assert!(ArtifactManifest::parse("entry file=x.hlo\n").is_err()); // no network / role
+        assert!(ArtifactManifest::parse("network n\nentry role=r\n").is_err()); // no file
+        assert!(ArtifactManifest::parse("network n\nentry file=f role=r in=3xZ\n").is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Compiled-executable wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! One [`Engine`] owns the PJRT client; [`LoadedModel`]s are compiled
+//! HLO modules ready to execute on the request path. All tensors cross
+//! the boundary as flat `f32` buffers + shape (row-major), matching what
+//! `aot.py` exports.
+
+use std::path::Path;
+
+use crate::runtime::artifacts::{ArtifactEntry, ArtifactStore};
+
+/// A host tensor: flat row-major f32 data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> anyhow::Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {:?} != data len {}", shape, data.len());
+        Ok(Self { data, shape })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The PJRT engine: owns the client and compiles artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedModel { exe, name: path.display().to_string() })
+    }
+
+    /// Load a manifest entry from a store.
+    pub fn load_entry(
+        &self,
+        store: &ArtifactStore,
+        entry: &ArtifactEntry,
+    ) -> anyhow::Result<LoadedModel> {
+        self.load_hlo_text(&store.path_of(entry))
+    }
+}
+
+/// A compiled HLO module.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl LoadedModel {
+    /// Execute with f32 host tensors; returns the (tuple-unwrapped)
+    /// outputs as host tensors.
+    ///
+    /// `aot.py` lowers with `return_tuple=True`, so the raw result is a
+    /// 1-tuple (or n-tuple) literal; we unwrap to individual tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("no output from {}", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch output: {e:?}"))?;
+        // Unwrap tuple outputs (aot.py lowers with return_tuple=True).
+        let shape = first.shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+        let list = match shape {
+            xla::Shape::Tuple(_) => first
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose tuple: {e:?}"))?,
+            _ => vec![first],
+        };
+        list.into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                HostTensor::new(data, dims)
+            })
+            .collect()
+    }
+}
+
+/// The full accelerator as a chain of compiled executables: pipeline
+/// stages (role `pipeline_stage`, by index) followed by generic layers
+/// (role `generic_layer`, by index). Weights are baked into the HLO at
+/// AOT time, so each stage takes exactly one activation tensor.
+pub struct ChainExecutor {
+    stages: Vec<LoadedModel>,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+}
+
+impl ChainExecutor {
+    /// Load every stage of the manifest through an engine.
+    pub fn load(engine: &Engine, store: &ArtifactStore) -> anyhow::Result<Self> {
+        let pipeline = store.by_role("pipeline_stage");
+        let generic = store.by_role("generic_layer");
+        anyhow::ensure!(
+            !pipeline.is_empty() || !generic.is_empty(),
+            "manifest has no pipeline_stage/generic_layer entries"
+        );
+        let mut stages = Vec::new();
+        let mut input_shape = None;
+        let mut output_shape = Vec::new();
+        for (_, entry) in pipeline.iter().chain(generic.iter()) {
+            if input_shape.is_none() {
+                input_shape = entry.input_shapes.first().cloned();
+            }
+            output_shape = entry.output_shape.clone();
+            stages.push(engine.load_entry(store, entry)?);
+        }
+        Ok(Self {
+            stages,
+            input_shape: input_shape.unwrap_or_default(),
+            output_shape,
+        })
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Run one frame through the whole chain.
+    pub fn run_frame(&self, frame: &HostTensor) -> anyhow::Result<HostTensor> {
+        let mut cur = frame.clone();
+        for m in &self.stages {
+            let outs = m.run(std::slice::from_ref(&cur))?;
+            cur = outs
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{} returned no output", m.name))?;
+        }
+        Ok(cur)
+    }
+}
+
+impl crate::coordinator::server::ModelExecutor for ChainExecutor {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        frames.iter().map(|f| self.run_frame(f)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        assert!(HostTensor::new(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(HostTensor::new(vec![0.0; 5], vec![2, 3]).is_err());
+        let z = HostTensor::zeros(&[2, 2]);
+        assert_eq!(z.elems(), 4);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need artifacts and the shared-library environment).
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::{ArtifactManifest, ArtifactStore};
+pub use executable::{Engine, LoadedModel};

@@ -1,0 +1,207 @@
+//! Transaction-granular simulation of the generic structure.
+//!
+//! Walks the layer sequence the way the real controller would: for each
+//! feature-map group (Eq. 5 partitioning) the weight groups stream
+//! through the ping-pong weight buffer while the MAC array computes;
+//! activation groups swap in/out of DRAM when the feature-map buffer
+//! cannot hold them. Double buffering overlaps the *next* transfer with
+//! the *current* compute; imperfect overlap (first group, burst
+//! inefficiency) is where the simulated time exceeds Eq. 11/13.
+
+use crate::dnn::Layer;
+use crate::perfmodel::generic::{layer_latency, Dataflow, GenericConfig};
+use crate::sim::dram::DramModel;
+use crate::sim::trace::{EventKind, Trace};
+use crate::sim::SimResult;
+
+/// Simulate one layer on the generic structure; returns cycles for one
+/// frame (weight traffic amortized over `batch`).
+pub fn simulate_layer(
+    l: &Layer,
+    cfg: &GenericConfig,
+    dram: &DramModel,
+    batch: usize,
+    trace: &mut Trace,
+) -> f64 {
+    let batch_f = batch.max(1) as f64;
+    // Reuse the estimator's partitioning decisions (groups, dataflow,
+    // residency) — the simulator times the schedule, it does not re-plan.
+    let plan = layer_latency(l, cfg, dram.peak_bytes_per_s / 1e9, batch);
+
+    let eff_cpf = (l.input.c as f64 / l.groups() as f64).min(cfg.cpf as f64).max(1.0);
+    let eff_kpf = (l.output.c as f64).min(cfg.kpf as f64).max(1.0);
+    // Integer lane quantization (the model divides real-valued).
+    let c_steps = ((l.input.c as f64 / l.groups() as f64) / eff_cpf).ceil();
+    let k_steps = (l.output.c as f64 / eff_kpf).ceil();
+    let win = (l.kernel() * l.kernel_w()) as f64;
+    let pixels = (l.output.h * l.output.w) as f64;
+    let compute_cycles = pixels * win * c_steps * k_steps + 64.0; // array drain
+
+    let w_bytes = l.weight_bytes(cfg.ww);
+    let ifm_bytes = l.ifm_bytes(cfg.dw);
+    let ofm_bytes = l.ofm_bytes(cfg.dw);
+
+    let (groups_outer, w_traffic, fm_in_traffic, fm_out_traffic) = match plan.dataflow {
+        Dataflow::InputStationary => {
+            let g = plan.g_fm.max(1.0);
+            let (fi, fo) = if plan.fm_resident { (0.0, 0.0) } else { (ifm_bytes, ofm_bytes) };
+            (g, w_bytes * g / batch_f, fi, fo)
+        }
+        Dataflow::WeightStationary => {
+            let g = plan.g_w.max(1.0);
+            let (fi, fo) = if plan.fm_resident && g <= 1.0 {
+                (0.0, 0.0)
+            } else {
+                (ifm_bytes * g, ofm_bytes * g)
+            };
+            (g, w_bytes / batch_f, fi, fo)
+        }
+    };
+
+    // Per-group compute and transfer; double buffering overlaps them but
+    // the first group's load is exposed, and each group pays burst math.
+    let per_group_compute = compute_cycles / groups_outer;
+    let w_cycles_group = dram.transfer_cycles(w_traffic / groups_outer, k_steps.max(1.0));
+    let fm_txns = (l.input.h as f64).max(1.0); // line-based partitioning
+    let fi_cycles_group = dram.transfer_cycles(fm_in_traffic / groups_outer, fm_txns);
+    let fo_cycles_group = dram.transfer_cycles(fm_out_traffic / groups_outer, fm_txns);
+    let mem_group = w_cycles_group + fi_cycles_group + fo_cycles_group;
+
+    let steady = per_group_compute.max(mem_group) * (groups_outer - 1.0).max(0.0);
+    let exposed = mem_group + per_group_compute; // first load + last compute
+    let cycles = steady + exposed;
+
+    if mem_group > per_group_compute {
+        trace.record(cycles as u64, &l.name, EventKind::Stall, 0.0);
+    }
+    trace.record(
+        cycles as u64,
+        &l.name,
+        EventKind::DramRead,
+        w_traffic + fm_in_traffic,
+    );
+    if fm_out_traffic > 0.0 {
+        trace.record(cycles as u64, &l.name, EventKind::DramWrite, fm_out_traffic);
+    }
+    cycles
+}
+
+/// Simulate the generic structure over a layer slice; returns the batch
+/// period and derived rates.
+pub fn simulate_generic(
+    layers: &[&Layer],
+    cfg: &GenericConfig,
+    dram: &DramModel,
+    batch: usize,
+    trace: &mut Trace,
+) -> anyhow::Result<SimResult> {
+    anyhow::ensure!(!layers.is_empty(), "empty generic layer range");
+    let batch_f = batch.max(1) as f64;
+    let mut total_cycles = 0.0f64;
+    let mut compute_cycles = 0.0f64;
+    let mut dram_bytes = 0.0f64;
+    for l in layers {
+        let per_frame = simulate_layer(l, cfg, dram, batch, trace);
+        total_cycles += per_frame * batch_f;
+        let eff_cpf = (l.input.c as f64 / l.groups() as f64).min(cfg.cpf as f64).max(1.0);
+        let eff_kpf = (l.output.c as f64).min(cfg.kpf as f64).max(1.0);
+        compute_cycles += l.macs() as f64 / (eff_cpf * eff_kpf) * batch_f;
+        dram_bytes += l.weight_bytes(cfg.ww);
+    }
+    let fps = batch_f / (total_cycles / dram.clock_hz);
+    let ops: f64 = layers.iter().map(|l| l.ops() as f64).sum();
+    Ok(SimResult {
+        cycles_per_batch: total_cycles as u64,
+        fps,
+        gops: fps * ops / 1e9,
+        dram_bytes,
+        compute_utilization: (compute_cycles / total_cycles).min(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::{conv_out_dim, LayerKind, TensorShape};
+    use crate::dnn::Precision;
+    use crate::perfmodel::generic::{estimate, BufferStrategy};
+
+    fn conv_layer(c: usize, hw: usize, k: usize, kern: usize) -> Layer {
+        let input = TensorShape::new(c, hw, hw);
+        let o = conv_out_dim(hw, kern, 1, kern / 2);
+        Layer {
+            name: "t".into(),
+            kind: LayerKind::Conv {
+                kernel: kern,
+                kernel_w: kern,
+                stride: 1,
+                pad: kern / 2,
+                groups: 1,
+            },
+            input,
+            output: TensorShape::new(k, o, o),
+            precision: Precision::Int16,
+        }
+    }
+
+    fn cfg() -> GenericConfig {
+        GenericConfig::with_budget(
+            32,
+            64,
+            Precision::Int16,
+            Precision::Int16,
+            BufferStrategy::FmAccumInBram,
+            200.0,
+            1500.0,
+        )
+    }
+
+    #[test]
+    fn simulated_close_to_analytical() {
+        // Fig. 8 premise: generic model error ~2% vs measurement.
+        let layers = [
+            conv_layer(64, 112, 64, 3),
+            conv_layer(128, 56, 128, 3),
+            conv_layer(256, 56, 256, 1),
+        ];
+        let refs: Vec<&Layer> = layers.iter().collect();
+        let c = cfg();
+        let dram = DramModel::new(19.2, 200.0);
+        let est = estimate(&refs, &c, 19.2, 1);
+        let sim = simulate_generic(&refs, &c, &dram, 1, &mut Trace::disabled()).unwrap();
+        let err = (est.throughput_fps - sim.fps).abs() / sim.fps;
+        assert!(err < 0.2, "err {err} est {} sim {}", est.throughput_fps, sim.fps);
+    }
+
+    #[test]
+    fn sim_slower_than_pure_compute_bound() {
+        let layers = [conv_layer(256, 56, 256, 3)];
+        let refs: Vec<&Layer> = layers.iter().collect();
+        let c = cfg();
+        let dram = DramModel::new(19.2, 200.0);
+        let sim = simulate_generic(&refs, &c, &dram, 1, &mut Trace::disabled()).unwrap();
+        let ideal = layers[0].macs() as f64 / (32.0 * 64.0) / 200e6;
+        assert!(1.0 / sim.fps >= ideal);
+    }
+
+    #[test]
+    fn batch_improves_weight_bound_layers() {
+        let layers = [conv_layer(512, 7, 512, 3)];
+        let refs: Vec<&Layer> = layers.iter().collect();
+        let c = cfg();
+        let dram = DramModel::new(2.0, 200.0);
+        let b1 = simulate_generic(&refs, &c, &dram, 1, &mut Trace::disabled()).unwrap();
+        let b8 = simulate_generic(&refs, &c, &dram, 8, &mut Trace::disabled()).unwrap();
+        assert!(b8.fps > b1.fps, "b8 {} b1 {}", b8.fps, b1.fps);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let layers = [conv_layer(64, 56, 64, 3), conv_layer(64, 56, 128, 3)];
+        let refs: Vec<&Layer> = layers.iter().collect();
+        let c = cfg();
+        let dram = DramModel::new(19.2, 200.0);
+        let sim = simulate_generic(&refs, &c, &dram, 1, &mut Trace::disabled()).unwrap();
+        assert!(sim.compute_utilization > 0.0 && sim.compute_utilization <= 1.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Whole-system simulation of a hybrid candidate: pipeline structure and
+//! generic structure running concurrently (on consecutive batches —
+//! Fig. 5's dataflow), sharing the external memory.
+//!
+//! The two structures contend for DRAM: the pipeline's weight/input
+//! streams get the RAV's `BW_p` share, the generic structure the rest
+//! (the paper's static bandwidth partitioning). The steady-state system
+//! period is the slower structure's simulated batch period; the handoff
+//! buffer (the generic structure's feature-map buffer fed by the last
+//! pipeline stage) is checked for capacity.
+
+use crate::dnn::{Layer, Network};
+use crate::dse::engine::Candidate;
+use crate::fpga::FpgaDevice;
+use crate::sim::dram::DramModel;
+use crate::sim::trace::Trace;
+use crate::sim::{simulate_generic, simulate_pipeline, SimResult};
+
+/// System-level simulated result for a hybrid candidate.
+#[derive(Debug, Clone)]
+pub struct HybridSimResult {
+    pub pipeline: Option<SimResult>,
+    pub generic: Option<SimResult>,
+    /// Steady-state frames/s of the whole accelerator.
+    pub fps: f64,
+    /// Sustained GOP/s over the whole network.
+    pub gops: f64,
+    /// Which structure bounds the system ("pipeline" | "generic").
+    pub bottleneck: &'static str,
+    /// Whether the handoff feature map fits the generic fm buffer.
+    pub handoff_fits: bool,
+}
+
+/// Simulate an explored candidate end to end on a device.
+pub fn simulate_candidate(
+    net: &Network,
+    device: &FpgaDevice,
+    cand: &Candidate,
+    trace: &mut Trace,
+) -> anyhow::Result<HybridSimResult> {
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    let sp = cand.rav.sp.min(layers.len());
+    let batch = cand.rav.batch.max(1);
+
+    let mut p_res = None;
+    let mut p_period = 0.0f64;
+    if let Some(p) = &cand.pipeline {
+        let dram = DramModel::new(
+            device.bandwidth_gbps * cand.rav.bw_frac,
+            device.freq_mhz,
+        );
+        let r = simulate_pipeline(&layers[..sp], &p.config, &dram, trace)?;
+        p_period = batch as f64 / r.fps;
+        p_res = Some(r);
+    }
+
+    let mut g_res = None;
+    let mut g_period = 0.0f64;
+    let mut handoff_fits = true;
+    if let Some(g) = &cand.generic {
+        let bw_g = if sp > 0 {
+            device.bandwidth_gbps * (1.0 - cand.rav.bw_frac)
+        } else {
+            device.bandwidth_gbps
+        };
+        let dram = DramModel::new(bw_g, device.freq_mhz);
+        let r = simulate_generic(&layers[sp..], &g.config, &dram, batch, trace)?;
+        g_period = batch as f64 / r.fps;
+        g_res = Some(r);
+        // Handoff: the first generic layer's input map must fit half the
+        // fm buffer (ping-pong against the pipeline writer).
+        if sp > 0 && sp < layers.len() {
+            let bits = layers[sp].ifm_bytes(g.config.dw) * 8.0;
+            handoff_fits = bits <= g.config.cap_fm_bits / 2.0;
+        }
+    }
+
+    let period = p_period.max(g_period);
+    anyhow::ensure!(period > 0.0, "candidate has neither structure");
+    let fps = batch as f64 / period;
+    let ops: f64 = layers.iter().map(|l| l.ops() as f64).sum();
+    Ok(HybridSimResult {
+        pipeline: p_res,
+        generic: g_res,
+        fps,
+        gops: fps * ops / 1e9,
+        bottleneck: if p_period >= g_period { "pipeline" } else { "generic" },
+        handoff_fits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, Precision, TensorShape};
+    use crate::dse::rav::Rav;
+    use crate::dse::{engine, ExplorerConfig};
+
+    fn candidate(sp: usize) -> (crate::Network, FpgaDevice, Candidate) {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+        let device = FpgaDevice::ku115();
+        let cfg = ExplorerConfig::new(device.clone());
+        let rav = Rav { sp, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 };
+        let cand = engine::evaluate(&net, &cfg, rav).expect("feasible");
+        (net, device, cand)
+    }
+
+    #[test]
+    fn simulated_close_to_analytical_system_estimate() {
+        let (net, device, cand) = candidate(6);
+        let sim =
+            simulate_candidate(&net, &device, &cand, &mut Trace::disabled()).unwrap();
+        let err = (sim.gops - cand.gops).abs() / cand.gops;
+        assert!(
+            err < 0.25,
+            "system sim {:.0} vs analytical {:.0} ({err:.2})",
+            sim.gops,
+            cand.gops
+        );
+        assert!(sim.handoff_fits);
+    }
+
+    #[test]
+    fn pure_extremes_simulate() {
+        for sp in [0usize, 13] {
+            let (net, device, cand) = candidate(sp);
+            let sim =
+                simulate_candidate(&net, &device, &cand, &mut Trace::disabled()).unwrap();
+            assert!(sim.fps > 0.0, "sp={sp}");
+            if sp == 0 {
+                assert!(sim.pipeline.is_none() && sim.generic.is_some());
+                assert_eq!(sim.bottleneck, "generic");
+            } else {
+                assert!(sim.pipeline.is_some() && sim.generic.is_none());
+                assert_eq!(sim.bottleneck, "pipeline");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_captures_both_structures() {
+        let (net, device, cand) = candidate(4);
+        let mut trace = Trace::enabled(4096);
+        simulate_candidate(&net, &device, &cand, &mut trace).unwrap();
+        assert!(trace.dram_bytes() > 0.0);
+        assert!(!trace.events.is_empty());
+    }
+}

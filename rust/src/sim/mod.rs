@@ -1,0 +1,44 @@
+//! Cycle-approximate accelerator simulator — the board-level-measurement
+//! substitute (DESIGN.md, hardware substitution).
+//!
+//! The simulator executes the same accelerator configurations the
+//! analytical models estimate ([`crate::perfmodel`]), but at DRAM-
+//! transaction and column granularity, with the second-order effects a
+//! real board shows and a closed-form model ignores:
+//!
+//! * DRAM burst efficiency: short transfers waste activate/precharge
+//!   cycles ([`dram::DramModel`]).
+//! * Pipeline fill/drain: column-granular stage start-up.
+//! * Ping-pong buffer stalls when a weight group arrives late.
+//! * Integer quantization of loop trip counts (ceil effects the models
+//!   round away).
+//!
+//! Fig. 7 / Fig. 8 compare analytical estimates against this simulator,
+//! reproducing the paper's estimation-error experiments.
+
+pub mod dram;
+pub mod generic;
+pub mod hybrid;
+pub mod pipeline;
+pub mod trace;
+
+pub use dram::DramModel;
+pub use generic::simulate_generic;
+pub use hybrid::simulate_candidate;
+pub use pipeline::simulate_pipeline;
+
+
+/// Measured (simulated) performance of an accelerator run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Cycles for one steady-state batch period.
+    pub cycles_per_batch: u64,
+    /// Frames per second at the configured clock.
+    pub fps: f64,
+    /// Sustained GOP/s.
+    pub gops: f64,
+    /// Total DRAM bytes moved per batch.
+    pub dram_bytes: f64,
+    /// Fraction of cycles the compute fabric was busy.
+    pub compute_utilization: f64,
+}

@@ -1,0 +1,177 @@
+//! Column-granular simulation of the pipeline structure.
+//!
+//! Each stage is walked column-by-column (the DNNBuilder fine-grained
+//! pipeline): a stage may compute output column `j` once its column/row
+//! buffer holds input columns `j..j+S`. Weight tiles stream from DRAM
+//! through a ping-pong buffer; a stage stalls when its next weight group
+//! has not landed. The steady-state batch period is the slowest stage's
+//! simulated interval including those stalls — the quantity the
+//! analytical model (Eq. 3–4) approximates.
+
+use crate::dnn::Layer;
+use crate::perfmodel::pipeline::PipelineConfig;
+use crate::sim::dram::DramModel;
+use crate::sim::trace::{EventKind, Trace};
+use crate::sim::SimResult;
+
+/// Simulate the pipeline structure over `layers` with config `cfg`.
+///
+/// `dram` must already be scaled to the pipeline's bandwidth share.
+pub fn simulate_pipeline(
+    layers: &[&Layer],
+    cfg: &PipelineConfig,
+    dram: &DramModel,
+    trace: &mut Trace,
+) -> anyhow::Result<SimResult> {
+    anyhow::ensure!(layers.len() == cfg.stages.len(), "stage/layer count mismatch");
+    anyhow::ensure!(!layers.is_empty(), "empty pipeline");
+    let batch = cfg.batch.max(1) as f64;
+
+    // Traffic split mirrors the estimator: input stream + per-stage weights.
+    let input_bytes = layers[0].ifm_bytes(cfg.stages[0].dw) * batch;
+    let weight_bytes: Vec<f64> = layers
+        .iter()
+        .zip(&cfg.stages)
+        .map(|(l, s)| l.weight_bytes(s.ww))
+        .collect();
+    let total_traffic = input_bytes + weight_bytes.iter().sum::<f64>();
+
+    let mut worst_cycles = 0.0f64;
+    let mut sum_compute = 0.0f64;
+    let mut dram_bytes = 0.0f64;
+
+    for (i, (l, s)) in layers.iter().zip(&cfg.stages).enumerate() {
+        // --- compute, column by column ---
+        let out_w = l.output.w.max(1) as u64;
+        let out_h = l.output.h.max(1) as u64;
+        // MACs per output column, integer-quantized over the lanes:
+        // ceil(C/g / CPF) · ceil(K / KPF) vector steps per pixel.
+        let c_steps = ((l.input.c / l.groups()) as f64 / s.cpf as f64).ceil().max(1.0);
+        let k_steps = (l.output.c as f64 / s.kpf as f64).ceil().max(1.0);
+        let win = (l.kernel() * l.kernel_w()) as f64;
+        let cycles_per_pixel = c_steps * k_steps * win;
+        // +1 cycle/column pipeline restart (line-buffer rotate).
+        let cycles_per_col = cycles_per_pixel * out_h as f64 + 1.0;
+        let compute_cycles = cycles_per_col * out_w as f64;
+
+        // --- weights, streamed as contiguous DMA chunks through the
+        // ping-pong buffer (64 KiB descriptors, the typical AXI-DMA
+        // configuration) ---
+        let dma_txns = (weight_bytes[i] / 65536.0).ceil().max(1.0);
+        let share = if total_traffic > 0.0 {
+            (weight_bytes[i] / total_traffic).max(1e-9)
+        } else {
+            1.0
+        };
+        let stage_dram = dram.with_bandwidth_share(dram.peak_bytes_per_s / 1e9 * share);
+        let weight_cycles = stage_dram.transfer_cycles(weight_bytes[i], dma_txns);
+        dram_bytes += weight_bytes[i];
+
+        // Steady state: compute for the whole batch overlaps the batch's
+        // single weight refresh; a refresh slower than compute stalls.
+        let interval = (compute_cycles * batch).max(weight_cycles);
+        if weight_cycles > compute_cycles * batch {
+            trace.record(interval as u64, &l.name, EventKind::Stall, 0.0);
+        }
+        trace.record(compute_cycles as u64, &l.name, EventKind::ComputeEnd, 0.0);
+        trace.record(weight_cycles as u64, &l.name, EventKind::DramRead, weight_bytes[i]);
+
+        sum_compute += compute_cycles * batch;
+        worst_cycles = worst_cycles.max(interval);
+    }
+
+    // Input stream constraint. Frames arrive as contiguous DMA bursts
+    // (the capture pipeline writes them sequentially), not column
+    // transactions — the column walk happens out of the on-chip buffer.
+    let in_share = if total_traffic > 0.0 { input_bytes / total_traffic } else { 1.0 };
+    let in_dram = dram.with_bandwidth_share(dram.peak_bytes_per_s / 1e9 * in_share.max(1e-9));
+    let in_txns = (input_bytes / 65536.0).ceil().max(batch);
+    let in_cycles = in_dram.transfer_cycles(input_bytes, in_txns);
+    dram_bytes += input_bytes;
+    worst_cycles = worst_cycles.max(in_cycles);
+    trace.record(in_cycles as u64, "input", EventKind::DramRead, input_bytes);
+
+    let fps = batch / (worst_cycles / dram.clock_hz);
+    let ops: f64 = layers.iter().map(|l| l.ops() as f64).sum();
+    Ok(SimResult {
+        cycles_per_batch: worst_cycles as u64,
+        fps,
+        gops: fps * ops / 1e9,
+        dram_bytes,
+        compute_utilization: (sum_compute / (worst_cycles * layers.len() as f64)).min(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::dnn::{Precision, TensorShape};
+    use crate::dse::local_pipeline;
+    use crate::fpga::{FpgaDevice, ResourceBudget};
+
+    fn setup(h: usize, w: usize, sp: usize) -> (Vec<crate::dnn::Layer>, PipelineConfig) {
+        let layers: Vec<crate::dnn::Layer> =
+            zoo::vgg16_conv(TensorShape::new(3, h, w), Precision::Int16)
+                .layers
+                .into_iter()
+                .filter(|l| l.is_compute())
+                .take(sp)
+                .collect();
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let budget = ResourceBudget::fraction_of(&d, 0.6, 0.6, 0.7);
+        let plan = local_pipeline::optimize(&refs, &budget, 1, 200.0, Precision::Int16, Precision::Int16)
+            .unwrap();
+        (layers, plan.config)
+    }
+
+    #[test]
+    fn simulated_close_to_analytical() {
+        // Fig. 7 premise: the analytical model is within a few percent of
+        // "measurement" (our simulator).
+        let (layers, cfg) = setup(224, 224, 8);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let d = FpgaDevice::ku115();
+        let bw = d.bandwidth_gbps * 0.7;
+        let est = crate::perfmodel::pipeline::estimate(&refs, &cfg, bw).unwrap();
+        let dram = DramModel::new(bw, 200.0);
+        let sim = simulate_pipeline(&refs, &cfg, &dram, &mut Trace::disabled()).unwrap();
+        let err = (est.throughput_fps - sim.fps).abs() / sim.fps;
+        assert!(err < 0.15, "estimation error {err} (est {} sim {})", est.throughput_fps, sim.fps);
+    }
+
+    #[test]
+    fn sim_never_beats_ideal() {
+        // Burst overheads and integer quantization only slow things down
+        // relative to the ideal Eq.3 compute bound.
+        let (layers, cfg) = setup(224, 224, 6);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let ideal_worst = refs
+            .iter()
+            .zip(&cfg.stages)
+            .map(|(l, s)| l.macs() as f64 / (s.pf() as f64 * 200e6))
+            .fold(0.0f64, f64::max);
+        let dram = DramModel::new(19.2, 200.0);
+        let sim = simulate_pipeline(&refs, &cfg, &dram, &mut Trace::disabled()).unwrap();
+        assert!(1.0 / sim.fps >= ideal_worst * 0.999);
+    }
+
+    #[test]
+    fn empty_pipeline_errors() {
+        let dram = DramModel::new(19.2, 200.0);
+        let cfg = PipelineConfig { stages: vec![], batch: 1, freq_mhz: 200.0 };
+        assert!(simulate_pipeline(&[], &cfg, &dram, &mut Trace::disabled()).is_err());
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let (layers, cfg) = setup(64, 64, 4);
+        let refs: Vec<&crate::dnn::Layer> = layers.iter().collect();
+        let dram = DramModel::new(19.2, 200.0);
+        let mut trace = Trace::enabled(1024);
+        simulate_pipeline(&refs, &cfg, &dram, &mut trace).unwrap();
+        assert!(trace.dram_bytes() > 0.0);
+        assert!(!trace.events.is_empty());
+    }
+}

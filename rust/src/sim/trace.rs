@@ -1,0 +1,83 @@
+//! Lightweight event trace for simulator runs (debugging + metrics).
+
+
+/// Kinds of simulator events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    ComputeStart,
+    ComputeEnd,
+    DramRead,
+    DramWrite,
+    Stall,
+    StageHandoff,
+}
+
+/// One trace record: (cycle, unit, kind, bytes-if-memory).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub cycle: u64,
+    pub unit: String,
+    pub kind: EventKind,
+    pub bytes: f64,
+}
+
+/// Bounded trace buffer; recording can be disabled for benchmarking.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    pub enabled: bool,
+    pub capacity: usize,
+}
+
+impl Trace {
+    pub fn disabled() -> Self {
+        Self { events: Vec::new(), enabled: false, capacity: 0 }
+    }
+
+    pub fn enabled(capacity: usize) -> Self {
+        Self { events: Vec::with_capacity(capacity.min(1 << 16)), enabled: true, capacity }
+    }
+
+    pub fn record(&mut self, cycle: u64, unit: &str, kind: EventKind, bytes: f64) {
+        if self.enabled && self.events.len() < self.capacity {
+            self.events.push(Event { cycle, unit: unit.to_string(), kind, bytes });
+        }
+    }
+
+    /// Total bytes across DRAM events.
+    pub fn dram_bytes(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::DramRead | EventKind::DramWrite))
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Count of stall events.
+    pub fn stalls(&self) -> usize {
+        self.events.iter().filter(|e| e.kind == EventKind::Stall).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(1, "u", EventKind::Stall, 0.0);
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn capacity_bounds_recording() {
+        let mut t = Trace::enabled(2);
+        for i in 0..5 {
+            t.record(i, "u", EventKind::DramRead, 10.0);
+        }
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.dram_bytes(), 20.0);
+        assert_eq!(t.stalls(), 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Benches under `rust/benches/` are plain `main()` binaries
+//! (`harness = false`) using [`bench`] for timed sections: warmup, then
+//! repeated timed runs, reporting min/mean/p50/p95.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3}s")
+            } else if s >= 1e-3 {
+                format!("{:.3}ms", s * 1e3)
+            } else {
+                format!("{:.1}us", s * 1e6)
+            }
+        }
+        format!(
+            "bench {:<40} iters={:<4} mean={} min={} p50={} p95={}",
+            self.name,
+            self.iters,
+            fmt(self.mean_s),
+            fmt(self.min_s),
+            fmt(self.p50_s),
+            fmt(self.p95_s),
+        )
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        min_s: samples[0],
+        p50_s: samples[n / 2],
+        p95_s: samples[(n * 95 / 100).min(n - 1)],
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Optimization barrier (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Quick-mode switch for bench binaries: `DNNEXPLORER_BENCH_FULL=1` runs
+/// paper-scale effort; default keeps bench runtime modest.
+pub fn full_mode() -> bool {
+    std::env::var("DNNEXPLORER_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.mean_s);
+        assert!(s.p50_s <= s.p95_s + 1e-12);
+        assert!(s.report().contains("noop"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities replacing crates unavailable in the
+//! offline build environment (see the note at the top of Cargo.toml).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng;

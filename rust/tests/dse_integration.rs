@@ -1,0 +1,147 @@
+//! Integration: DSE engine end-to-end across networks/devices, checking
+//! the paper's qualitative claims hold (the quantitative tables live in
+//! the report harness / EXPERIMENTS.md).
+
+use dnnexplorer::baselines::{dnnbuilder, hybriddnn};
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::dse::{engine, ExplorerConfig};
+use dnnexplorer::fpga::FpgaDevice;
+
+fn quick(device: FpgaDevice, seed: u64) -> ExplorerConfig {
+    ExplorerConfig {
+        pso: PsoParams { population: 12, iterations: 10, ..Default::default() },
+        seed,
+        ..ExplorerConfig::new(device)
+    }
+}
+
+#[test]
+fn hybrid_beats_both_pure_paradigms_on_deep_vgg() {
+    // The paper's headline (Fig. 11): on a 38-CONV VGG-like net the
+    // hybrid paradigm clearly beats the pure pipeline, and at least
+    // matches the generic engine.
+    let net = zoo::vgg_like(TensorShape::new(3, 224, 224), Precision::Int16, 5);
+    let d = FpgaDevice::ku115();
+    let ours = engine::explore(&net, &quick(d.clone(), 1)).expect("explore").best;
+    let pipe = dnnbuilder::build(&net, &d, 1, Precision::Int16, Precision::Int16).unwrap();
+    let generic = hybriddnn::build(&net, &d, 1, Precision::Int16, Precision::Int16).unwrap();
+    assert!(
+        ours.gops > pipe.gops * 1.5,
+        "hybrid {:.0} vs pure pipeline {:.0}",
+        ours.gops,
+        pipe.gops
+    );
+    assert!(
+        ours.gops > generic.gops * 0.9,
+        "hybrid {:.0} vs generic {:.0}",
+        ours.gops,
+        generic.gops
+    );
+}
+
+#[test]
+fn explored_design_respects_device_budget() {
+    for (h, w) in [(32usize, 32usize), (224, 224), (512, 512)] {
+        let net = zoo::vgg16_conv(TensorShape::new(3, h, w), Precision::Int16);
+        let d = FpgaDevice::ku115();
+        let best = engine::explore(&net, &quick(d.clone(), 2)).expect("explore").best;
+        assert!(best.dsp_used <= d.dsp as f64 + 1e-6, "{h}x{w}: DSP {}", best.dsp_used);
+        assert!(
+            best.bram_used <= d.bram18k as f64 + 1e-6,
+            "{h}x{w}: BRAM {}",
+            best.bram_used
+        );
+        assert!(best.gops > 0.0 && best.gops <= d.peak_gops(2.0) * 2.25);
+    }
+}
+
+#[test]
+fn explored_design_never_loses_to_pure_extremes() {
+    // The hybrid design space contains both pure paradigms (SP = 0 and
+    // SP = N), so a correct DSE can never end up materially below either
+    // — at any input resolution. (The paper's Table 3 additionally
+    // reports the *specific* SP chosen; on our substrate the optimum
+    // plateau is flat in SP at high resolutions, so we assert the
+    // dominance property rather than the exact split — see
+    // EXPERIMENTS.md §Table 3 for the discussion.)
+    let d = FpgaDevice::ku115();
+    for (h, w) in [(64usize, 64usize), (224, 224)] {
+        let net = zoo::vgg16_conv(TensorShape::new(3, h, w), Precision::Int16);
+        let ours = engine::explore(&net, &quick(d.clone(), 3)).unwrap().best;
+        let pipe = dnnbuilder::build(&net, &d, 1, Precision::Int16, Precision::Int16)
+            .map(|r| r.gops)
+            .unwrap_or(0.0);
+        let gen = hybriddnn::build(&net, &d, 1, Precision::Int16, Precision::Int16)
+            .map(|r| r.gops)
+            .unwrap_or(0.0);
+        assert!(
+            ours.gops >= pipe.max(gen) * 0.85,
+            "{h}x{w}: explored {:.0} vs pipeline {pipe:.0} / generic {gen:.0}",
+            ours.gops
+        );
+    }
+}
+
+#[test]
+fn works_across_devices_and_precisions() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int8);
+    for dev in [FpgaDevice::zc706(), FpgaDevice::ku115(), FpgaDevice::vu9p()] {
+        let mut cfg = quick(dev.clone(), 4);
+        cfg.dw = Precision::Int8;
+        cfg.ww = Precision::Int8;
+        let best = engine::explore(&net, &cfg)
+            .unwrap_or_else(|| panic!("explore fails on {}", dev.name))
+            .best;
+        assert!(best.gops > 0.0, "{}", dev.name);
+        assert!(best.dsp_used <= dev.dsp as f64);
+    }
+}
+
+#[test]
+fn batch_exploration_helps_small_inputs() {
+    // Table 4: small inputs leave resources for batching; freeing the
+    // batch must never hurt.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 32, 32), Precision::Int16);
+    let d = FpgaDevice::ku115();
+    let fixed = engine::explore(&net, &quick(d.clone(), 5)).unwrap().best;
+    let mut cfg = quick(d, 5);
+    cfg.fixed_batch = None;
+    let free = engine::explore(&net, &cfg).unwrap().best;
+    assert!(
+        free.gops >= fixed.gops * 0.95,
+        "free-batch {:.0} vs batch-1 {:.0}",
+        free.gops,
+        fixed.gops
+    );
+}
+
+#[test]
+fn latency_objective_prefers_low_latency_designs() {
+    use dnnexplorer::dse::engine::Objective;
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let d = FpgaDevice::ku115();
+    let tput = engine::explore(&net, &quick(d.clone(), 9)).unwrap().best;
+    let mut cfg = quick(d, 9);
+    cfg.objective = Objective::Latency;
+    let lat = engine::explore(&net, &cfg).unwrap().best;
+    assert!(lat.frame_latency_s > 0.0 && tput.frame_latency_s > 0.0);
+    // The latency-optimized design must not be slower (per frame) than
+    // the throughput-optimized one.
+    assert!(
+        lat.frame_latency_s <= tput.frame_latency_s * 1.05,
+        "latency objective {:.4}s vs throughput objective {:.4}s",
+        lat.frame_latency_s,
+        tput.frame_latency_s
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 128, 128), Precision::Int16);
+    let d = FpgaDevice::ku115();
+    let a = engine::explore(&net, &quick(d.clone(), 7)).unwrap().best;
+    let b = engine::explore(&net, &quick(d, 7)).unwrap().best;
+    assert_eq!(a.rav, b.rav);
+    assert_eq!(a.gops, b.gops);
+}

@@ -1,0 +1,489 @@
+//! Property-based tests over the coordinator-side invariants: analytical
+//! models, DSE routing/batching/state, resource accounting, and the
+//! simulator's relationship to the estimators.
+//!
+//! Uses the crate's own seeded property harness (`util::proptest::check`)
+//! — the offline environment has no proptest crate.
+
+use dnnexplorer::dnn::layer::{conv_out_dim, Layer, LayerKind, TensorShape};
+use dnnexplorer::dnn::{zoo, Precision};
+use dnnexplorer::dse::rav::{Bounds, Position, Rav};
+use dnnexplorer::dse::{engine, local_generic, local_pipeline, ExplorerConfig};
+use dnnexplorer::fpga::resource::bram18k_for;
+use dnnexplorer::fpga::{FpgaDevice, ResourceBudget};
+use dnnexplorer::perfmodel::generic::{BufferStrategy, GenericConfig};
+use dnnexplorer::perfmodel::pipeline::factorize_pf;
+use dnnexplorer::perfmodel::{generic, pipeline};
+use dnnexplorer::sim::{simulate_generic, trace::Trace, DramModel};
+use dnnexplorer::util::proptest::check;
+use dnnexplorer::util::rng::Rng;
+
+fn arb_conv(r: &mut Rng) -> Layer {
+    let c = 1 << r.gen_index(9); // 1..256
+    let k = 1 << r.gen_index(9);
+    let hw = 4 + r.gen_index(60);
+    let kern = [1usize, 3, 5, 7][r.gen_index(4)];
+    let stride = 1 + r.gen_index(2);
+    let pad = kern / 2;
+    let input = TensorShape::new(c, hw, hw);
+    Layer {
+        name: "p".into(),
+        kind: LayerKind::Conv { kernel: kern, kernel_w: kern, stride, pad, groups: 1 },
+        input,
+        output: TensorShape::new(
+            k,
+            conv_out_dim(hw, kern, stride, pad),
+            conv_out_dim(hw, kern, stride, pad),
+        ),
+        precision: Precision::Int16,
+    }
+}
+
+#[test]
+fn prop_layer_workload_identities() {
+    check(
+        "ops = 2*macs; weights>0; ctc>0 for conv",
+        11,
+        200,
+        arb_conv,
+        |l| {
+            if l.ops() != 2 * l.macs() {
+                return Err("ops != 2*macs".into());
+            }
+            if l.weights() == 0 || l.ctc() <= 0.0 {
+                return Err("conv must have weights & positive CTC".into());
+            }
+            if l.macs() == 0 {
+                return Err("conv must have macs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_factorize_within_budget_and_dims() {
+    check(
+        "factorize_pf: cpf*kpf <= budget, cpf<=next_pow(c), kpf<=next_pow(k)",
+        13,
+        300,
+        |r| {
+            (
+                r.gen_range(0.5, 5000.0),
+                1 + r.gen_index(512),
+                1 + r.gen_index(1024),
+            )
+        },
+        |&(pf, c, k)| {
+            let (cpf, kpf) = factorize_pf(pf, c, k);
+            if (cpf * kpf) as f64 > pf.max(1.0) + 1e-9 {
+                return Err(format!("budget exceeded: {cpf}x{kpf} > {pf}"));
+            }
+            if cpf > 64 || kpf > 512 {
+                return Err("dim caps violated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generic_latency_monotone_in_bandwidth() {
+    check(
+        "more bandwidth never slows a layer",
+        17,
+        120,
+        |r| (arb_conv(r), r.gen_range(0.5, 4.0)),
+        |(l, bw)| {
+            let cfg = GenericConfig::with_budget(
+                16,
+                32,
+                Precision::Int16,
+                Precision::Int16,
+                BufferStrategy::FmAccumInBram,
+                200.0,
+                1024.0,
+            );
+            let slow = generic::layer_latency(l, &cfg, *bw, 1);
+            let fast = generic::layer_latency(l, &cfg, bw * 4.0, 1);
+            if fast.total_s > slow.total_s * 1.0001 {
+                return Err(format!("fast {} > slow {}", fast.total_s, slow.total_s));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generic_latency_at_least_compute_bound() {
+    check(
+        "total >= compute term",
+        19,
+        150,
+        arb_conv,
+        |l| {
+            let cfg = GenericConfig::with_budget(
+                32,
+                32,
+                Precision::Int16,
+                Precision::Int16,
+                BufferStrategy::AllInBram,
+                200.0,
+                1024.0,
+            );
+            let d = generic::layer_latency(l, &cfg, 8.0, 1);
+            if d.total_s + 1e-15 < d.comp_s {
+                return Err(format!("total {} < comp {}", d.total_s, d.comp_s));
+            }
+            if d.g_fm < 1.0 || d.g_w < 1.0 {
+                return Err("group counts must be >= 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_never_faster_than_ideal_compute() {
+    check(
+        "sim cycles >= ideal mac cycles",
+        23,
+        60,
+        arb_conv,
+        |l| {
+            let cfg = GenericConfig::with_budget(
+                16,
+                16,
+                Precision::Int16,
+                Precision::Int16,
+                BufferStrategy::FmAccumInBram,
+                200.0,
+                512.0,
+            );
+            let dram = DramModel::new(19.2, 200.0);
+            let sim = simulate_generic(&[l], &cfg, &dram, 1, &mut Trace::disabled())
+                .map_err(|e| e.to_string())?;
+            let ideal = l.macs() as f64 / (16.0 * 16.0);
+            if (sim.cycles_per_batch as f64) < ideal * 0.999 {
+                return Err(format!("sim {} < ideal {}", sim.cycles_per_batch, ideal));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rav_budgets_partition_exactly() {
+    check(
+        "pipeline+generic budgets == device",
+        29,
+        200,
+        |r| Rav {
+            sp: r.gen_index(14),
+            batch: 1 + r.gen_index(16),
+            dsp_frac: r.gen_range(0.02, 0.95),
+            bram_frac: r.gen_range(0.02, 0.95),
+            bw_frac: r.gen_range(0.02, 0.95),
+        },
+        |rav| {
+            let d = FpgaDevice::ku115();
+            let sum = rav.pipeline_budget(&d).plus(&rav.generic_budget(&d));
+            let dev = ResourceBudget::of_device(&d);
+            if (sum.dsp - dev.dsp).abs() > 1e-6
+                || (sum.bram18k - dev.bram18k).abs() > 1e-6
+                || (sum.bw_gbps - dev.bw_gbps).abs() > 1e-9
+            {
+                return Err(format!("partition mismatch: {sum:?} vs {dev:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_position_to_rav_respects_bounds() {
+    check(
+        "PSO positions always clamp into the dynamic design space",
+        31,
+        300,
+        |r| Position {
+            sp: r.gen_range(-5.0, 40.0),
+            batch: r.gen_range(-3.0, 40.0),
+            dsp: r.gen_range(-1.0, 2.0),
+            bram: r.gen_range(-1.0, 2.0),
+            bw: r.gen_range(-1.0, 2.0),
+        },
+        |p| {
+            let b = Bounds::new(13, None);
+            let rav = p.to_rav(&b);
+            if rav.sp > 13 || rav.batch < 1 || rav.batch > b.batch_max {
+                return Err(format!("bounds violated: {rav:?}"));
+            }
+            for f in [rav.dsp_frac, rav.bram_frac, rav.bw_frac] {
+                if !(b.frac_min..=b.frac_max).contains(&f) {
+                    return Err(format!("frac out of range: {f}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_local_optimizers_respect_budgets() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    check(
+        "alg2/alg3 plans fit their budgets",
+        37,
+        40,
+        |r| {
+            (
+                1 + r.gen_index(layers.len()),
+                r.gen_range(0.1, 0.9),
+                r.gen_range(0.1, 0.9),
+                r.gen_range(0.1, 0.9),
+            )
+        },
+        |&(sp, fd, fb, fw)| {
+            let d = FpgaDevice::ku115();
+            let budget = ResourceBudget::fraction_of(&d, fd, fb, fw);
+            if let Some(plan) = local_pipeline::optimize(
+                &layers[..sp],
+                &budget,
+                1,
+                200.0,
+                Precision::Int16,
+                Precision::Int16,
+            ) {
+                let r = plan.estimate.resources;
+                if r.dsp > budget.dsp + 1e-6 || r.bram18k > budget.bram18k + 1e-6 {
+                    return Err(format!("alg2 over budget: {r:?} vs {budget:?}"));
+                }
+            }
+            if sp < layers.len() {
+                if let Some(plan) = local_generic::optimize(
+                    &layers[sp..],
+                    &budget,
+                    1e-4,
+                    1,
+                    200.0,
+                    Precision::Int16,
+                    Precision::Int16,
+                ) {
+                    let r = plan.estimate.resources;
+                    if r.dsp > budget.dsp + 1e-6 || r.bram18k > budget.bram18k + 1e-6 {
+                        return Err(format!("alg3 over budget: {r:?} vs {budget:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_candidate_efficiency_bounded() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    check(
+        "evaluate(): 0 < eff <= 1, resources within device",
+        41,
+        30,
+        |r| Rav {
+            sp: r.gen_index(14),
+            batch: 1,
+            dsp_frac: r.gen_range(0.05, 0.9),
+            bram_frac: r.gen_range(0.05, 0.9),
+            bw_frac: r.gen_range(0.05, 0.9),
+        },
+        |rav| {
+            if let Some(c) = engine::evaluate(&net, &cfg, *rav) {
+                if c.dsp_efficiency <= 0.0 || c.dsp_efficiency > 1.000001 {
+                    return Err(format!("eff out of range: {}", c.dsp_efficiency));
+                }
+                if c.dsp_used > cfg.device.dsp as f64 + 1e-6 {
+                    return Err(format!("dsp over device: {}", c.dsp_used));
+                }
+                if !c.throughput_fps.is_finite() || c.throughput_fps <= 0.0 {
+                    return Err("non-finite fps".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bram_for_monotone_in_bits() {
+    check(
+        "bram18k_for monotone in bits; zero for zero",
+        43,
+        200,
+        |r| (r.gen_range(1.0, 1e8), r.gen_range(8.0, 2048.0)),
+        |&(bits, width)| {
+            if bram18k_for(0.0, width) != 0.0 {
+                return Err("zero bits should cost zero".into());
+            }
+            let a = bram18k_for(bits, width);
+            let b = bram18k_for(bits * 2.0, width);
+            if b + 1e-9 < a {
+                return Err(format!("not monotone: {a} vs {b}"));
+            }
+            if a < 1.0 {
+                return Err("non-empty buffer needs >= 1 block".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generic_batch_never_hurts_throughput() {
+    check(
+        "batching never lowers generic-structure fps",
+        53,
+        100,
+        |r| (arb_conv(r), 1 + r.gen_index(15)),
+        |(l, batch)| {
+            let cfg = GenericConfig::with_budget(
+                16,
+                32,
+                Precision::Int16,
+                Precision::Int16,
+                BufferStrategy::FmAccumInBram,
+                200.0,
+                1024.0,
+            );
+            let refs = [l.clone()];
+            let lrefs: Vec<&Layer> = refs.iter().collect();
+            let b1 = generic::estimate(&lrefs, &cfg, 2.0, 1);
+            let bn = generic::estimate(&lrefs, &cfg, 2.0, *batch);
+            if bn.throughput_fps + 1e-9 < b1.throughput_fps * 0.999 {
+                return Err(format!(
+                    "batch {} fps {} < batch-1 fps {}",
+                    batch, bn.throughput_fps, b1.throughput_fps
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_zoo_networks_well_formed() {
+    let nets = zoo::table1_networks(Precision::Int16);
+    for net in &nets {
+        for l in net.layers.iter().filter(|l| l.is_compute()) {
+            assert!(l.macs() > 0, "{}: {} has no macs", net.name, l.name);
+            assert!(l.output.elems() > 0, "{}: {} empty output", net.name, l.name);
+            assert!(
+                l.input.c % l.groups() == 0,
+                "{}: {} groups {} don't divide C {}",
+                net.name,
+                l.name,
+                l.groups(),
+                l.input.c
+            );
+        }
+        assert!(net.total_gop() > 0.1, "{}", net.name);
+    }
+}
+
+#[test]
+fn prop_ctc_scales_with_output_area() {
+    // DESIGN.md CTC note: conv CTC ~ H_out*W_out * (2 / bytes-per-weight).
+    check(
+        "conv CTC equals 2*H_out*W_out/ww_bytes",
+        59,
+        100,
+        arb_conv,
+        |l| {
+            let expect = 2.0 * (l.output.h * l.output.w) as f64 / 2.0; // 16-bit
+            let got = l.ctc();
+            if (got - expect).abs() / expect > 1e-9 {
+                return Err(format!("ctc {got} != {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hybrid_sim_close_to_analytical() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 128, 128), Precision::Int16);
+    let cfg = engine::ExplorerConfig::new(FpgaDevice::ku115());
+    check(
+        "system simulation within 35% of the analytical candidate",
+        61,
+        10,
+        |r| Rav {
+            sp: 1 + r.gen_index(10),
+            batch: 1,
+            dsp_frac: r.gen_range(0.2, 0.8),
+            bram_frac: r.gen_range(0.2, 0.8),
+            bw_frac: r.gen_range(0.2, 0.8),
+        },
+        |rav| {
+            let Some(cand) = engine::evaluate(&net, &cfg, *rav) else {
+                return Ok(());
+            };
+            let sim = dnnexplorer::sim::simulate_candidate(
+                &net,
+                &cfg.device,
+                &cand,
+                &mut Trace::disabled(),
+            )
+            .map_err(|e| e.to_string())?;
+            let err = (sim.gops - cand.gops).abs() / cand.gops.max(1e-9);
+            if err > 0.35 {
+                return Err(format!(
+                    "sim {:.0} vs analytical {:.0} ({err:.2}) at {rav:?}",
+                    sim.gops, cand.gops
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_estimate_vs_simulator_bounded_gap() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let layers: Vec<&Layer> = net.layers.iter().filter(|l| l.is_compute()).collect();
+    check(
+        "analytical pipeline estimate within 25% of simulation",
+        47,
+        12,
+        |r| (2 + r.gen_index(8), r.gen_range(0.3, 0.8)),
+        |&(sp, frac)| {
+            let d = FpgaDevice::ku115();
+            let budget = ResourceBudget::fraction_of(&d, frac, frac, frac);
+            let Some(plan) = local_pipeline::optimize(
+                &layers[..sp],
+                &budget,
+                1,
+                200.0,
+                Precision::Int16,
+                Precision::Int16,
+            ) else {
+                return Ok(());
+            };
+            let est = pipeline::estimate(&layers[..sp], &plan.config, budget.bw_gbps)
+                .map_err(|e| e.to_string())?;
+            let dram = DramModel::new(budget.bw_gbps, 200.0);
+            let sim = dnnexplorer::sim::simulate_pipeline(
+                &layers[..sp],
+                &plan.config,
+                &dram,
+                &mut Trace::disabled(),
+            )
+            .map_err(|e| e.to_string())?;
+            let err = (est.throughput_fps - sim.fps).abs() / sim.fps;
+            if err > 0.25 {
+                return Err(format!("estimation error {err:.3}"));
+            }
+            Ok(())
+        },
+    );
+}

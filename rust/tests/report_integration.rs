@@ -1,0 +1,97 @@
+//! Integration over the report harness: every experiment id regenerates,
+//! and the paper's qualitative *shapes* hold on the quick-effort path
+//! (the quantitative record is EXPERIMENTS.md).
+
+use dnnexplorer::report::{run, Effort};
+
+fn pct(cell: &str) -> f64 {
+    cell.trim_end_matches('%').parse().unwrap_or(f64::NAN)
+}
+
+fn num(cell: &str) -> f64 {
+    cell.parse().unwrap_or(f64::NAN)
+}
+
+#[test]
+fn all_experiments_regenerate() {
+    let all = run("all", Effort::Quick).expect("all experiments run");
+    // fig1, fig2a, fig2b, table1, fig7, fig8, fig9, fig10, fig11,
+    // table3, table4 — every table/figure of the paper's evaluation.
+    assert_eq!(all.len(), 11);
+    for rs in &all {
+        assert!(!rs.rows.is_empty(), "{} has no rows", rs.id);
+        for row in &rs.rows {
+            assert_eq!(row.len(), rs.header.len(), "{} row arity", rs.id);
+        }
+    }
+}
+
+#[test]
+fn fig10_dnnexplorer_dominates_every_case() {
+    let t = &run("fig10", Effort::Quick).unwrap()[0];
+    for row in &t.rows {
+        let ours = num(&row[2]);
+        for cell in &row[3..] {
+            if cell != "-" {
+                let other = num(cell);
+                assert!(
+                    ours >= other * 0.95,
+                    "case {}: ours {} vs {}",
+                    row[0],
+                    ours,
+                    other
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig2b_pipeline_collapses_generics_hold() {
+    let t = &run("fig2b", Effort::Quick).unwrap()[0];
+    let last = t.rows.last().unwrap();
+    let dnnbuilder_38 = num(&last[1]);
+    let hybrid_38 = num(&last[2]);
+    let dpu_38 = num(&last[3]);
+    assert!(dnnbuilder_38 < 0.6, "DNNBuilder should collapse: {dnnbuilder_38}");
+    assert!(hybrid_38 > 0.8, "HybridDNN should hold: {hybrid_38}");
+    assert!(dpu_38 > 0.8, "DPU should hold: {dpu_38}");
+}
+
+#[test]
+fn fig9_efficiency_gap_closes_with_resolution() {
+    let t = &run("fig9", Effort::Quick).unwrap()[0];
+    // DNNExplorer efficiency at case 4 far above its case-1 value.
+    let e1 = pct(&t.rows[0][2]);
+    let e4 = pct(&t.rows[3][2]);
+    assert!(e4 > e1 * 2.0, "case1 {e1}% case4 {e4}%");
+    // DPU column absent for cases 10-12 (paper: unsupported inputs).
+    for row in &t.rows[9..] {
+        assert_eq!(row[5], "-");
+    }
+}
+
+#[test]
+fn table3_saturates_and_reports_search_time() {
+    let t = &run("table3", Effort::Quick).unwrap()[0];
+    assert_eq!(t.rows.len(), 12);
+    let g4 = num(&t.rows[3][2]);
+    let g9 = num(&t.rows[8][2]);
+    // Saturation: large cases within 15% of each other.
+    assert!((g4 - g9).abs() / g4 < 0.15, "case4 {g4} vs case9 {g9}");
+    // Search times recorded and sub-minute (ours are ms-scale).
+    for row in &t.rows {
+        let secs = num(&row[8]);
+        assert!(secs.is_finite() && secs < 60.0, "search time {secs}");
+    }
+}
+
+#[test]
+fn fig11_headline_ratio() {
+    let t = &run("fig11", Effort::Quick).unwrap()[0];
+    let last = t.rows.last().unwrap();
+    let ours = num(&last[1]);
+    let pipe = num(&last[2]);
+    // Paper: 4.2x at 38 layers; accept anything clearly multiple-x.
+    assert!(ours / pipe > 2.5, "38-layer ratio {}", ours / pipe);
+}

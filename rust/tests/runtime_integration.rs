@@ -1,0 +1,92 @@
+//! Integration: PJRT runtime loads the AOT artifacts and the staged chain
+//! reproduces the whole-model reference — proving L1 (Pallas kernels),
+//! L2 (jax model), and L3 (rust runtime) compose end to end.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::PathBuf;
+
+use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
+use dnnexplorer::runtime::{ArtifactStore, Engine};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn open_store() -> Option<ArtifactStore> {
+    match ArtifactStore::open(&artifacts_dir()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e}");
+            None
+        }
+    }
+}
+
+/// Deterministic pseudo-input in [0, 1).
+fn test_frame(shape: &[usize], seed: usize) -> HostTensor {
+    let mut t = HostTensor::zeros(shape);
+    for (j, v) in t.data.iter_mut().enumerate() {
+        *v = (((seed * 31 + j) * 2654435761) % 1000) as f32 / 1000.0 - 0.5;
+    }
+    t
+}
+
+#[test]
+fn chain_matches_reference_model() {
+    let Some(store) = open_store() else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let chain = ChainExecutor::load(&engine, &store).expect("load chain");
+    let reference = engine
+        .load_entry(&store, store.unique("reference_model").expect("reference entry"))
+        .expect("load reference");
+
+    for seed in 0..3 {
+        let frame = test_frame(chain.input_shape(), seed);
+        let got = chain.run_frame(&frame).expect("chain run");
+        let want = &reference.run(std::slice::from_ref(&frame)).expect("reference run")[0];
+        assert_eq!(got.shape, want.shape, "seed {seed}");
+        let max_err = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_err < 1e-3,
+            "seed {seed}: chain vs reference max err {max_err}"
+        );
+        // Output should be non-trivial.
+        assert!(got.data.iter().any(|v| v.abs() > 1e-6), "seed {seed}: all-zero logits");
+    }
+}
+
+#[test]
+fn chain_shapes_follow_manifest() {
+    let Some(store) = open_store() else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let chain = ChainExecutor::load(&engine, &store).expect("load chain");
+    assert_eq!(chain.stage_count(), store.by_role("pipeline_stage").len() + store.by_role("generic_layer").len());
+    assert_eq!(chain.input_shape(), &[1, 3, 32, 32]);
+    assert_eq!(chain.output_shape(), &[1, 10]);
+    let out = chain.run_frame(&test_frame(chain.input_shape(), 7)).unwrap();
+    assert_eq!(out.shape, chain.output_shape());
+}
+
+#[test]
+fn pipeline_and_generic_roles_split() {
+    let Some(store) = open_store() else { return };
+    let sp = store.manifest.split_point;
+    assert_eq!(store.by_role("pipeline_stage").len(), sp);
+    assert!(store.by_role("generic_layer").len() >= 1);
+}
+
+#[test]
+fn different_inputs_give_different_logits() {
+    let Some(store) = open_store() else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let chain = ChainExecutor::load(&engine, &store).expect("load chain");
+    let a = chain.run_frame(&test_frame(chain.input_shape(), 1)).unwrap();
+    let b = chain.run_frame(&test_frame(chain.input_shape(), 2)).unwrap();
+    assert_ne!(a.data, b.data);
+}

@@ -1,0 +1,124 @@
+//! Integration: the full serving stack — artifact store → PJRT chain →
+//! dynamic batcher → concurrent clients — over the real tiny-VGG
+//! artifacts. Requires `make artifacts` (skips otherwise).
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
+use dnnexplorer::runtime::{ArtifactStore, Engine};
+
+fn open_store() -> Option<ArtifactStore> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactStore::open(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping serving integration test: {e}");
+            None
+        }
+    }
+}
+
+fn spawn_server(store: ArtifactStore, batch: usize) -> AcceleratorServer {
+    AcceleratorServer::spawn(
+        move || {
+            let engine = Engine::cpu()?;
+            ChainExecutor::load(&engine, &store)
+        },
+        BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(10) },
+    )
+    .expect("server starts")
+}
+
+#[test]
+fn serves_concurrent_clients_with_batching() {
+    let Some(store) = open_store() else { return };
+    let input_shape = vec![1usize, 3, 32, 32];
+    let server = spawn_server(store, 4);
+
+    let n = 12;
+    let mut clients = Vec::new();
+    for i in 0..n {
+        let h = server.handle();
+        let shape = input_shape.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut frame = HostTensor::zeros(&shape);
+            for (j, v) in frame.data.iter_mut().enumerate() {
+                *v = ((i * 131 + j * 7) % 255) as f32 / 255.0;
+            }
+            h.infer(frame).expect("inference ok")
+        }));
+    }
+    let outs: Vec<HostTensor> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    assert_eq!(outs.len(), n);
+    for o in &outs {
+        assert_eq!(o.shape, vec![1, 10]);
+    }
+    // Different inputs -> at least two distinct outputs.
+    assert!(outs.windows(2).any(|w| w[0].data != w[1].data));
+    assert_eq!(server.metrics.frames.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    // Batching actually grouped requests.
+    assert!(
+        (server.metrics.batches.load(Ordering::Relaxed) as usize) < n,
+        "expected batches < requests"
+    );
+    let p99 = server.metrics.latency_percentile_us(0.99);
+    assert!(p99 > 0);
+    server.shutdown();
+}
+
+/// Failure injection: an executor that errors on every 3rd batch. The
+/// server must keep serving later batches and count the errors.
+struct Flaky {
+    n: std::sync::atomic::AtomicUsize,
+}
+impl dnnexplorer::coordinator::ModelExecutor for Flaky {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let i = self.n.fetch_add(1, Ordering::Relaxed);
+        if i % 3 == 2 {
+            anyhow::bail!("injected failure on batch {i}");
+        }
+        Ok(frames.to_vec())
+    }
+}
+
+#[test]
+fn server_survives_executor_failures() {
+    let server = AcceleratorServer::spawn(
+        || Ok(Flaky { n: std::sync::atomic::AtomicUsize::new(0) }),
+        BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+    )
+    .unwrap();
+    let mut ok = 0;
+    let mut err = 0;
+    for _ in 0..9 {
+        match server.infer(HostTensor::zeros(&[1])) {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+    }
+    assert_eq!(ok, 6, "2 of 3 batches succeed");
+    assert_eq!(err, 3);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 3);
+    server.shutdown();
+}
+
+#[test]
+fn same_input_is_deterministic_across_batches() {
+    let Some(store) = open_store() else { return };
+    let server = spawn_server(store, 2);
+    let frame = {
+        let mut f = HostTensor::zeros(&[1, 3, 32, 32]);
+        for (j, v) in f.data.iter_mut().enumerate() {
+            *v = (j % 97) as f32 / 97.0;
+        }
+        f
+    };
+    let a = server.infer(frame.clone()).unwrap();
+    let b = server.infer(frame).unwrap();
+    assert_eq!(a.data, b.data);
+    server.shutdown();
+}
