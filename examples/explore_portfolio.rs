@@ -1,0 +1,47 @@
+//! Portfolio exploration: four networks × two devices in one invocation,
+//! sharing one evaluation cache, with parallel swarm scoring.
+//!
+//! ```sh
+//! cargo run --release --example explore_portfolio
+//! DNNEXPLORER_BENCH_FULL=1 cargo run --release --example explore_portfolio
+//! ```
+
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::portfolio::{cross, explore_portfolio};
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::util::parallel::default_threads;
+use dnnexplorer::{ExplorerConfig, FpgaDevice};
+
+fn main() {
+    let p = Precision::Int16;
+    let networks = vec![
+        zoo::vgg16_conv(TensorShape::new(3, 224, 224), p),
+        zoo::by_name("resnet18", 224, 224, p).expect("zoo"),
+        zoo::by_name("yolo", 448, 448, p).expect("zoo"),
+        zoo::by_name("alexnet", 227, 227, p).expect("zoo"),
+    ];
+    let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+
+    let mut base = ExplorerConfig::new(FpgaDevice::ku115());
+    base.pso = if full_mode() {
+        PsoParams::default()
+    } else {
+        PsoParams { population: 12, iterations: 10, ..PsoParams::default() }
+    };
+
+    let threads = default_threads();
+    let scenarios = cross(&networks, &devices, &base);
+    println!(
+        "exploring {} scenarios ({} networks x {} devices) on {} threads...",
+        scenarios.len(),
+        networks.len(),
+        devices.len(),
+        threads
+    );
+    let result = explore_portfolio(&scenarios, threads);
+    print!("{}", result.render_table());
+    if let Some(best) = result.best() {
+        println!("winner: {}", best.label);
+    }
+}

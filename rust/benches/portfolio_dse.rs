@@ -1,0 +1,95 @@
+//! Portfolio DSE benchmark: sequential vs parallel exploration of a
+//! 4-network portfolio, plus the memo-cache effect on repeated runs.
+//!
+//! Reports:
+//! * sequential wall clock (1 thread, scenario by scenario),
+//! * parallel wall clock (8 threads through the portfolio scheduler) and
+//!   the speedup,
+//! * a warm-cache re-run (every design point answered from the cache),
+//! * a cross-check that both modes produce bit-identical winners.
+//!
+//! `DNNEXPLORER_BENCH_FULL=1` uses paper-scale PSO budgets.
+
+use std::time::Instant;
+
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::portfolio::{cross, explore_portfolio_shared, PortfolioResult, Scenario};
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::{ExplorerConfig, FpgaDevice};
+
+fn scenarios() -> Vec<Scenario> {
+    let p = Precision::Int16;
+    let networks = vec![
+        zoo::vgg16_conv(TensorShape::new(3, 224, 224), p),
+        zoo::by_name("resnet18", 224, 224, p).expect("zoo"),
+        zoo::by_name("yolo", 448, 448, p).expect("zoo"),
+        zoo::by_name("alexnet", 227, 227, p).expect("zoo"),
+    ];
+    let mut base = ExplorerConfig::new(FpgaDevice::ku115());
+    base.pso = if full_mode() {
+        PsoParams::default()
+    } else {
+        PsoParams { population: 12, iterations: 10, ..PsoParams::default() }
+    };
+    cross(&networks, &[FpgaDevice::ku115()], &base)
+}
+
+fn run(threads: usize, cache: &EvalCache) -> (PortfolioResult, f64) {
+    let s = scenarios();
+    let t = Instant::now();
+    let r = explore_portfolio_shared(&s, threads, cache);
+    (r, t.elapsed().as_secs_f64())
+}
+
+fn main() {
+    // Warmup (untimed): touch everything once so page faults and lazy
+    // allocations are off the clock; fresh caches below keep the timed
+    // runs honest.
+    let _ = run(1, &EvalCache::new());
+
+    let (seq, t_seq) = run(1, &EvalCache::new());
+    let (par, t_par) = run(8, &EvalCache::new());
+
+    // Determinism cross-check: parallel must reproduce the sequential
+    // winners bit-for-bit.
+    for (a, b) in seq.outcomes.iter().zip(&par.outcomes) {
+        let (Some(ra), Some(rb)) = (&a.result, &b.result) else {
+            assert!(a.result.is_none() && b.result.is_none(), "{}", a.label);
+            continue;
+        };
+        assert_eq!(ra.best.rav, rb.best.rav, "{}", a.label);
+        assert_eq!(ra.best.gops.to_bits(), rb.best.gops.to_bits(), "{}", a.label);
+    }
+
+    // Warm-cache re-run: same portfolio against the parallel run's cache.
+    let warm_cache = EvalCache::new();
+    let _ = run(8, &warm_cache);
+    let t0_hits = warm_cache.hits();
+    let s = scenarios();
+    let t = Instant::now();
+    let _ = explore_portfolio_shared(&s, 8, &warm_cache);
+    let t_warm = t.elapsed().as_secs_f64();
+
+    println!(
+        "bench portfolio_dse(4 networks, KU115)      seq(1t)={:.3}s par(8t)={:.3}s speedup={:.2}x",
+        t_seq,
+        t_par,
+        t_seq / t_par.max(1e-9),
+    );
+    println!(
+        "bench portfolio_dse(warm cache, 8t)         {:.3}s ({:.1}x vs cold parallel) hits+{}",
+        t_warm,
+        t_par / t_warm.max(1e-9),
+        warm_cache.hits() - t0_hits,
+    );
+    println!(
+        "cache: {} distinct points, {} hits / {} misses in the cold parallel run",
+        par.cache_len, par.cache_hits, par.cache_misses
+    );
+    println!(
+        "note: speedup is bounded by min(8, scenario count, cores); this host reports {} cores",
+        dnnexplorer::util::parallel::default_threads()
+    );
+}

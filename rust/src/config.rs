@@ -30,6 +30,9 @@ pub struct ExperimentConfig {
     pub iterations: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Swarm-evaluation worker threads (0 = machine parallelism). Purely
+    /// a wall-clock knob: results are identical at any value.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -44,6 +47,7 @@ impl Default for ExperimentConfig {
             population: 24,
             iterations: 30,
             seed: 0xD44E,
+            threads: 1,
         }
     }
 }
@@ -79,6 +83,7 @@ impl ExperimentConfig {
                 "batch" => cfg.batch = parse_usize(v)?,
                 "population" => cfg.population = parse_usize(v)?,
                 "iterations" => cfg.iterations = parse_usize(v)?,
+                "threads" => cfg.threads = parse_usize(v)?,
                 "seed" => {
                     cfg.seed = v
                         .parse()
@@ -128,8 +133,18 @@ impl ExperimentConfig {
                 ..PsoParams::default()
             },
             seed: self.seed,
+            threads: self.resolved_threads(),
             ..ExplorerConfig::new(device)
         })
+    }
+
+    /// `threads` with 0 resolved to the machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::parallel::default_threads()
+        } else {
+            self.threads
+        }
     }
 }
 

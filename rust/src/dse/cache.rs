@@ -1,0 +1,302 @@
+//! Memoized fitness evaluation for the DSE hot path.
+//!
+//! One full RAV evaluation runs both local optimizers (Algorithms 2–3
+//! with roll-back) plus the analytical models — tens of microseconds the
+//! PSO pays for *every* particle, even when the swarm revisits a design
+//! point it has already scored (common near convergence, and guaranteed
+//! across the repeated scenarios of a portfolio run). The [`EvalCache`]
+//! keys fully-evaluated [`Candidate`]s on the **quantized RAV** plus a
+//! **scenario fingerprint** and returns the stored candidate instead of
+//! re-running the optimizers.
+//!
+//! ## Invalidation rule
+//!
+//! A cached entry is valid for exactly one scenario fingerprint: the
+//! hash of the network's layer structure (kinds, shapes, groups), the
+//! device (DSP / BRAM18K / bandwidth / clock), the activation + weight
+//! precisions, and the objective (the roll-back loop keeps the
+//! best-under-objective intermediate, so the emitted candidate depends
+//! on it). Any change to those changes the fingerprint, so stale hits
+//! are impossible; PSO hyper-parameters, seed, and thread count are
+//! deliberately *not* part of the key — they steer the search but do
+//! not affect what a RAV evaluates to.
+//!
+//! ## Determinism
+//!
+//! Entries are only ever computed by the **pure** function
+//! `evaluate(net, cfg, rav.quantized())`, and the quantized RAV is an
+//! exact function of the key (fractions live on the power-of-two
+//! [`crate::dse::rav::FRAC_QUANTUM`] lattice). Two threads racing on the
+//! same key therefore compute bit-identical values, so a cache hit is
+//! indistinguishable from a recomputation no matter the interleaving —
+//! parallel and sequential searches return bit-identical results.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::dnn::{LayerKind, Network, Precision};
+use crate::dse::engine::{Candidate, ExplorerConfig, Objective};
+use crate::dse::rav::Rav;
+use crate::fpga::FpgaDevice;
+
+/// Exact cache key: scenario fingerprint + lattice coordinates of the
+/// quantized RAV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub scenario: u64,
+    pub sp: u32,
+    pub batch: u32,
+    pub dsp_q: u32,
+    pub bram_q: u32,
+    pub bw_q: u32,
+}
+
+impl CacheKey {
+    /// Key for a **quantized** RAV under a scenario fingerprint.
+    pub fn new(scenario: u64, rav: &Rav) -> Self {
+        Self {
+            scenario,
+            sp: rav.sp as u32,
+            batch: rav.batch as u32,
+            dsp_q: Rav::frac_index(rav.dsp_frac),
+            bram_q: Rav::frac_index(rav.bram_frac),
+            bw_q: Rav::frac_index(rav.bw_frac),
+        }
+    }
+
+    fn shard(&self) -> usize {
+        // Cheap spread: the fraction indices vary fastest across a swarm.
+        (self
+            .dsp_q
+            .wrapping_mul(31)
+            .wrapping_add(self.bram_q.wrapping_mul(17))
+            .wrapping_add(self.bw_q.wrapping_mul(7))
+            .wrapping_add(self.sp)
+            .wrapping_add(self.scenario as u32)) as usize
+            % SHARDS
+    }
+}
+
+const SHARDS: usize = 16;
+
+/// Sharded, thread-safe memo table for RAV evaluations.
+///
+/// Shared by reference across evaluation threads and across the
+/// scenarios of a portfolio run. Candidates are stored behind an
+/// [`Arc`] so a hit under the shard lock is a refcount bump, never a
+/// deep clone of the plan vectors. Infeasible RAVs (`None`) are cached
+/// too — re-discovering infeasibility reruns both local optimizers, so
+/// negative entries pay for themselves immediately.
+pub struct EvalCache {
+    shards: Vec<Mutex<HashMap<CacheKey, Option<Arc<Candidate>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up; on a miss run `compute` (outside any lock) and
+    /// store the result. Racing computations of the same key are
+    /// harmless: `compute` must be pure in `key`, so both produce the
+    /// same value, the first insert wins, and every caller is handed
+    /// the winning entry. Each racer counts as a miss (misses can
+    /// exceed [`Self::len`] under contention).
+    pub fn get_or_compute(
+        &self,
+        key: CacheKey,
+        compute: impl FnOnce() -> Option<Candidate>,
+    ) -> Option<Arc<Candidate>> {
+        let shard = &self.shards[key.shard()];
+        if let Some(hit) = shard.lock().expect("cache shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let value = compute().map(Arc::new);
+        shard
+            .lock()
+            .expect("cache shard poisoned")
+            .entry(key)
+            .or_insert(value)
+            .clone()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct design points stored.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario fingerprinting (FNV-1a 64).
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xCBF2_9CE4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn hash_precision(h: &mut Fnv, p: Precision) {
+    h.u64(p.bits());
+}
+
+/// Fingerprint of everything a RAV evaluation depends on besides the RAV
+/// itself: network layer structure, device budgets, precisions, and the
+/// objective steering the roll-back loop.
+pub fn scenario_fingerprint(net: &Network, cfg: &ExplorerConfig) -> u64 {
+    let mut h = Fnv::new();
+    hash_device(&mut h, &cfg.device);
+    hash_precision(&mut h, cfg.dw);
+    hash_precision(&mut h, cfg.ww);
+    h.u64(match cfg.objective {
+        Objective::Throughput => 0,
+        Objective::Latency => 1,
+    });
+    hash_network(&mut h, net);
+    h.0
+}
+
+fn hash_device(h: &mut Fnv, d: &FpgaDevice) {
+    h.u64(d.dsp as u64);
+    h.u64(d.bram18k as u64);
+    h.f64(d.bandwidth_gbps);
+    h.f64(d.freq_mhz);
+}
+
+fn hash_network(h: &mut Fnv, net: &Network) {
+    h.u64(net.layers.len() as u64);
+    for l in &net.layers {
+        match l.kind {
+            LayerKind::Conv { kernel, kernel_w, stride, pad, groups } => {
+                h.u64(1);
+                for v in [kernel, kernel_w, stride, pad, groups] {
+                    h.u64(v as u64);
+                }
+            }
+            LayerKind::Pool { kernel, stride } => {
+                h.u64(2);
+                h.u64(kernel as u64);
+                h.u64(stride as u64);
+            }
+            LayerKind::Fc => h.u64(3),
+        }
+        for v in [l.input.c, l.input.h, l.input.w, l.output.c, l.output.h, l.output.w] {
+            h.u64(v as u64);
+        }
+        hash_precision(h, l.precision);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, TensorShape};
+
+    fn net(h: usize) -> Network {
+        zoo::vgg16_conv(TensorShape::new(3, h, h), Precision::Int16)
+    }
+
+    fn cfg() -> ExplorerConfig {
+        ExplorerConfig::new(FpgaDevice::ku115())
+    }
+
+    #[test]
+    fn fingerprint_separates_scenarios() {
+        let base = scenario_fingerprint(&net(224), &cfg());
+        assert_eq!(base, scenario_fingerprint(&net(224), &cfg()));
+        // Different input resolution -> different layer shapes.
+        assert_ne!(base, scenario_fingerprint(&net(128), &cfg()));
+        // Different device.
+        let mut other = cfg();
+        other.device = FpgaDevice::zc706();
+        assert_ne!(base, scenario_fingerprint(&net(224), &other));
+        // Different precision.
+        let mut p8 = cfg();
+        p8.ww = Precision::Int8;
+        assert_ne!(base, scenario_fingerprint(&net(224), &p8));
+        // Different objective (the roll-back loop is objective-steered).
+        let mut lat = cfg();
+        lat.objective = Objective::Latency;
+        assert_ne!(base, scenario_fingerprint(&net(224), &lat));
+    }
+
+    #[test]
+    fn cache_hits_and_negative_entries() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        let key = CacheKey::new(7, &rav);
+        let mut calls = 0;
+        let a = cache.get_or_compute(key, || {
+            calls += 1;
+            None
+        });
+        let b = cache.get_or_compute(key, || {
+            calls += 1;
+            None
+        });
+        assert!(a.is_none() && b.is_none());
+        assert_eq!(calls, 1, "negative result must be memoized");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        let a = CacheKey::new(1, &rav);
+        let b = CacheKey::new(2, &rav);
+        assert_ne!(a, b);
+        let mut shifted = rav;
+        shifted.dsp_frac += crate::dse::rav::FRAC_QUANTUM;
+        assert_ne!(CacheKey::new(1, &rav), CacheKey::new(1, &shifted));
+    }
+}

@@ -1,17 +1,34 @@
 //! The DNNExplorer engine: fitness evaluation of one RAV (local
 //! optimizations + analytical models) and the full three-step flow
 //! (*Model Analysis → Accelerator Modeling → Architecture Exploration*).
+//!
+//! Fitness evaluation has two layers:
+//!
+//! * [`evaluate`] — the pure path: Algorithms 2–3 with roll-back, then
+//!   system assembly. A pure function of `(network, device, precisions,
+//!   RAV)`.
+//! * [`evaluate_cached`] — snaps the RAV onto the
+//!   [`crate::dse::rav::FRAC_QUANTUM`] lattice and memoizes through an
+//!   [`EvalCache`], so revisited design points (within a swarm, across
+//!   restarts, and across portfolio scenarios) skip the optimizers.
+//!
+//! [`explore`] scores each PSO iteration's swarm through
+//! [`crate::util::parallel::parallel_map`] with
+//! [`ExplorerConfig::threads`] workers; results are bit-identical for a
+//! fixed seed at any thread count (see [`crate::dse::pso`]).
 
+use std::sync::Arc;
 use std::time::Instant;
 
-
 use crate::dnn::{Layer, Network, Precision};
+use crate::dse::cache::{self, CacheKey, EvalCache};
 use crate::dse::local_generic::{self, GenericPlan};
 use crate::dse::local_pipeline::{self, PipelinePlan};
 use crate::dse::pso::{self, PsoParams};
 use crate::dse::rav::{Bounds, Rav};
 use crate::fpga::{FpgaDevice, ResourceBudget};
 use crate::perfmodel::dsp_efficiency;
+use crate::util::parallel::parallel_map;
 
 /// Optimization objective of the DSE.
 ///
@@ -39,6 +56,10 @@ pub struct ExplorerConfig {
     pub objective: Objective,
     pub pso: PsoParams,
     pub seed: u64,
+    /// Worker threads for swarm fitness evaluation (1 = fully inline).
+    /// Any value yields bit-identical results for the same seed; more
+    /// threads only change wall-clock time.
+    pub threads: usize,
 }
 
 impl ExplorerConfig {
@@ -51,6 +72,7 @@ impl ExplorerConfig {
             objective: Objective::Throughput,
             pso: PsoParams::default(),
             seed: 0xD44E,
+            threads: 1,
         }
     }
 }
@@ -276,6 +298,26 @@ fn assemble(
     })
 }
 
+/// Evaluate a RAV through the memo cache: the RAV is snapped onto the
+/// fraction lattice and the resulting design point is computed at most
+/// once per `(scenario, quantized RAV)` for the cache's lifetime. The
+/// candidate comes back shared (`Arc`) so cache hits never deep-copy
+/// the plans.
+///
+/// `scenario` must be `cache::scenario_fingerprint(net, cfg)`; it is a
+/// parameter (rather than recomputed here) because the fitness inner
+/// loop calls this per particle.
+pub fn evaluate_cached(
+    net: &Network,
+    cfg: &ExplorerConfig,
+    cache: &EvalCache,
+    scenario: u64,
+    rav: Rav,
+) -> Option<Arc<Candidate>> {
+    let q = rav.quantized();
+    cache.get_or_compute(CacheKey::new(scenario, &q), || evaluate(net, cfg, q))
+}
+
 /// Search statistics.
 #[derive(Debug, Clone)]
 pub struct SearchStats {
@@ -286,22 +328,40 @@ pub struct SearchStats {
 }
 
 /// Result of a full exploration.
+#[derive(Debug, Clone)]
 pub struct ExplorerResult {
     pub best: Candidate,
     pub stats: SearchStats,
 }
 
-/// Run the full DNNExplorer flow on a network + device (paper Fig. 4).
+/// Run the full DNNExplorer flow on a network + device (paper Fig. 4)
+/// with a private evaluation cache.
 pub fn explore(net: &Network, cfg: &ExplorerConfig) -> Option<ExplorerResult> {
+    explore_shared(net, cfg, &EvalCache::new())
+}
+
+/// [`explore`] against a caller-owned [`EvalCache`] — the building block
+/// of [`crate::dse::portfolio`]: scenarios that share a cache also share
+/// every design point they revisit (same network × device × precision),
+/// and a warm cache turns a repeated run into pure lookups.
+pub fn explore_shared(
+    net: &Network,
+    cfg: &ExplorerConfig,
+    cache: &EvalCache,
+) -> Option<ExplorerResult> {
     let start = Instant::now();
     let n = net.layers.iter().filter(|l| l.is_compute()).count();
     let bounds = Bounds::new(n, cfg.fixed_batch);
-    let outcome = pso::run(&cfg.pso, &bounds, cfg.seed, |rav| {
-        evaluate(net, cfg, rav).map(|c| c.fitness(cfg.objective))
+    let scenario = cache::scenario_fingerprint(net, cfg);
+    let outcome = pso::run_swarm(&cfg.pso, &bounds, cfg.seed, &mut |ravs: &[Rav]| {
+        parallel_map(ravs, cfg.threads, |rav| {
+            evaluate_cached(net, cfg, cache, scenario, *rav)
+                .map(|c| c.fitness(cfg.objective))
+        })
     })?;
-    let best = evaluate(net, cfg, outcome.best_rav)?;
+    let best = evaluate_cached(net, cfg, cache, scenario, outcome.best_rav)?;
     Some(ExplorerResult {
-        best,
+        best: (*best).clone(),
         stats: SearchStats {
             iterations: outcome.iterations,
             evaluations: outcome.evaluations,
@@ -312,7 +372,8 @@ pub fn explore(net: &Network, cfg: &ExplorerConfig) -> Option<ExplorerResult> {
 }
 
 /// Like [`explore`], but with a caller-supplied global optimizer (paper
-/// §7.2's extension point; used by the optimizer ablation).
+/// §7.2's extension point; used by the optimizer ablation). Sequential,
+/// but still memoized through a private cache.
 pub fn explore_with(
     net: &Network,
     cfg: &ExplorerConfig,
@@ -321,12 +382,15 @@ pub fn explore_with(
     let start = Instant::now();
     let n = net.layers.iter().filter(|l| l.is_compute()).count();
     let bounds = Bounds::new(n, cfg.fixed_batch);
-    let mut fitness =
-        |rav| evaluate(net, cfg, rav).map(|c: Candidate| c.fitness(cfg.objective));
+    let cache = EvalCache::new();
+    let scenario = cache::scenario_fingerprint(net, cfg);
+    let mut fitness = |rav| {
+        evaluate_cached(net, cfg, &cache, scenario, rav).map(|c| c.fitness(cfg.objective))
+    };
     let outcome = optimizer.run(&bounds, cfg.seed, &mut fitness)?;
-    let best = evaluate(net, cfg, outcome.best_rav)?;
+    let best = evaluate_cached(net, cfg, &cache, scenario, outcome.best_rav)?;
     Some(ExplorerResult {
-        best,
+        best: (*best).clone(),
         stats: SearchStats {
             iterations: outcome.history.len(),
             evaluations: outcome.evaluations,
@@ -383,6 +447,41 @@ mod tests {
         .expect("pipeline-only feasible");
         assert!(p.pipeline.is_some() && p.generic.is_none());
         assert!(g.gops > 0.0 && p.gops > 0.0);
+    }
+
+    #[test]
+    fn evaluate_cached_matches_pure_path_and_hits() {
+        let net = vgg224();
+        let cfg = quick_cfg();
+        let cache = EvalCache::new();
+        let scenario = cache::scenario_fingerprint(&net, &cfg);
+        let rav = Rav { sp: 6, batch: 1, dsp_frac: 0.51, bram_frac: 0.42, bw_frac: 0.63 };
+        let pure = evaluate(&net, &cfg, rav.quantized()).expect("feasible");
+        let cold = evaluate_cached(&net, &cfg, &cache, scenario, rav).expect("feasible");
+        let warm = evaluate_cached(&net, &cfg, &cache, scenario, rav).expect("feasible");
+        for c in [&cold, &warm] {
+            assert_eq!(c.rav, pure.rav);
+            assert_eq!(c.gops.to_bits(), pure.gops.to_bits());
+            assert_eq!(c.throughput_fps.to_bits(), pure.throughput_fps.to_bits());
+            assert_eq!(c.dsp_used.to_bits(), pure.dsp_used.to_bits());
+        }
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn explore_shared_reuses_warm_cache() {
+        let net = vgg224();
+        let cfg = quick_cfg();
+        let cache = EvalCache::new();
+        let a = explore_shared(&net, &cfg, &cache).expect("explore");
+        let cold_misses = cache.misses();
+        let b = explore_shared(&net, &cfg, &cache).expect("explore again");
+        assert_eq!(a.best.rav, b.best.rav);
+        assert_eq!(a.best.gops.to_bits(), b.best.gops.to_bits());
+        // Second identical run must be answered from the cache alone.
+        assert_eq!(cache.misses(), cold_misses, "warm run recomputed");
+        assert!(cache.hits() > 0);
     }
 
     #[test]

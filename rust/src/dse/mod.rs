@@ -6,16 +6,26 @@
 //!   for the pipeline structure.
 //! * [`local_generic`] — Algorithm 3: balance-oriented sizing of the
 //!   generic structure (with pipeline roll-back).
-//! * [`pso`] — Algorithm 1: global particle-swarm optimization over RAVs.
+//! * [`pso`] — Algorithm 1: global particle-swarm optimization over RAVs
+//!   (batch-synchronous; swarm fitness evaluates in parallel with
+//!   bit-identical results at any thread count).
+//! * [`cache`] — memoized fitness evaluation keyed on quantized RAV +
+//!   scenario fingerprint (network structure + device + precision).
 //! * [`engine`] — ties everything into the three-step DNNExplorer flow.
+//! * [`portfolio`] — N networks × M devices in one invocation over a
+//!   shared cache, returning a ranked result matrix.
 
+pub mod cache;
 pub mod emit;
 pub mod engine;
 pub mod global;
 pub mod local_generic;
 pub mod local_pipeline;
+pub mod portfolio;
 pub mod pso;
 pub mod rav;
 
+pub use cache::EvalCache;
 pub use engine::{explore, ExplorerConfig, ExplorerResult};
+pub use portfolio::{explore_portfolio, PortfolioResult, Scenario};
 pub use rav::Rav;

@@ -1,0 +1,292 @@
+//! Portfolio exploration: N networks × M devices in one invocation.
+//!
+//! The paper positions DNNExplorer as a framework that "accommodate[s]
+//! different combinations of DNN workloads and targeted FPGAs"; this
+//! module makes that a first-class API instead of a shell loop. A
+//! portfolio run:
+//!
+//! * explores every [`Scenario`] (network + explorer config) through the
+//!   standard engine,
+//! * runs scenarios concurrently with a deterministic fork-join (outer
+//!   workers × inner swarm threads, both derived from one thread
+//!   budget),
+//! * shares a single [`EvalCache`] across all scenarios, so repeated
+//!   design points — guaranteed whenever the portfolio repeats a
+//!   (network, device, precision) combination, and common within each
+//!   swarm — are evaluated once,
+//! * returns a ranked result matrix.
+//!
+//! Determinism: every scenario's result is bit-identical to running
+//! [`engine::explore`] on it alone with the same seed, regardless of
+//! `threads` (see [`crate::dse::cache`] for why shared memoization
+//! cannot perturb results).
+
+use std::time::Instant;
+
+use crate::dnn::Network;
+use crate::dse::cache::EvalCache;
+use crate::dse::engine::{self, ExplorerConfig, ExplorerResult};
+use crate::fpga::FpgaDevice;
+use crate::util::parallel::parallel_map;
+
+/// One (network, explorer-config) pair to explore.
+pub struct Scenario {
+    /// Display label, `<network>@<device>` by default.
+    pub label: String,
+    pub network: Network,
+    pub config: ExplorerConfig,
+}
+
+impl Scenario {
+    pub fn new(network: Network, config: ExplorerConfig) -> Self {
+        let label = format!("{}@{}", network.name, config.device.name);
+        Self { label, network, config }
+    }
+}
+
+/// Build the full N×M scenario matrix: every network on every device,
+/// with all other knobs (precision, batch policy, PSO budget, seed)
+/// taken from `base`.
+pub fn cross(networks: &[Network], devices: &[FpgaDevice], base: &ExplorerConfig) -> Vec<Scenario> {
+    let mut out = Vec::with_capacity(networks.len() * devices.len());
+    for net in networks {
+        for dev in devices {
+            let mut cfg = base.clone();
+            cfg.device = dev.clone();
+            out.push(Scenario::new(net.clone(), cfg));
+        }
+    }
+    out
+}
+
+/// Outcome of one scenario within a portfolio.
+pub struct ScenarioOutcome {
+    pub label: String,
+    pub network: String,
+    pub device: String,
+    /// `None` when no feasible design exists on that device.
+    pub result: Option<ExplorerResult>,
+    /// Ranking score: the best candidate's fitness under the scenario's
+    /// own objective; −∞ for infeasible scenarios.
+    pub score: f64,
+}
+
+/// Ranked result matrix of a portfolio run.
+pub struct PortfolioResult {
+    /// Outcomes in scenario input order (the matrix; index with
+    /// `i_network * n_devices + i_device` when built via [`cross`]).
+    pub outcomes: Vec<ScenarioOutcome>,
+    pub elapsed_s: f64,
+    /// Evaluation-cache counters at the end of the run (cumulative over
+    /// the cache's lifetime — equal to this run's counts for the default
+    /// fresh-cache entry point).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Distinct design points held by the cache.
+    pub cache_len: usize,
+}
+
+impl PortfolioResult {
+    /// Outcomes sorted best-first: feasible scenarios by descending
+    /// score, ties and infeasibles ordered by label (deterministic).
+    pub fn ranked(&self) -> Vec<&ScenarioOutcome> {
+        let mut v: Vec<&ScenarioOutcome> = self.outcomes.iter().collect();
+        v.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.label.cmp(&b.label))
+        });
+        v
+    }
+
+    /// The winning scenario, if any explored feasibly.
+    pub fn best(&self) -> Option<&ScenarioOutcome> {
+        self.ranked().into_iter().find(|o| o.result.is_some())
+    }
+
+    /// Aligned text table of the ranked matrix (CLI output).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<4} {:<28} {:>9} {:>9} {:>4} {:>6} {:>7} {:>7} {:>6}\n",
+            "rank", "scenario", "GOP/s", "img/s", "SP", "batch", "DSP", "BRAM", "eff%"
+        ));
+        for (i, o) in self.ranked().iter().enumerate() {
+            match &o.result {
+                Some(r) => {
+                    let b = &r.best;
+                    out.push_str(&format!(
+                        "{:<4} {:<28} {:>9.1} {:>9.1} {:>4} {:>6} {:>7.0} {:>7.0} {:>6.1}\n",
+                        i + 1,
+                        o.label,
+                        b.gops,
+                        b.throughput_fps,
+                        b.rav.sp,
+                        b.rav.batch,
+                        b.dsp_used,
+                        b.bram_used,
+                        b.dsp_efficiency * 100.0,
+                    ));
+                }
+                None => {
+                    out.push_str(&format!(
+                        "{:<4} {:<28} {:>9}\n",
+                        i + 1,
+                        o.label,
+                        "infeasible"
+                    ));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "cache: {} points, {} hits / {} misses | {:.2}s wall\n",
+            self.cache_len, self.cache_hits, self.cache_misses, self.elapsed_s
+        ));
+        out
+    }
+}
+
+/// Split one thread budget between scenario-level and swarm-level
+/// parallelism: as many outer workers as there are scenarios (capped by
+/// the budget), remaining factor to each scenario's swarm evaluation.
+fn split_threads(threads: usize, scenarios: usize) -> (usize, usize) {
+    let budget = threads.max(1);
+    let outer = budget.min(scenarios.max(1));
+    let inner = (budget / outer).max(1);
+    (outer, inner)
+}
+
+/// Explore a portfolio with a fresh shared cache.
+pub fn explore_portfolio(scenarios: &[Scenario], threads: usize) -> PortfolioResult {
+    explore_portfolio_shared(scenarios, threads, &EvalCache::new())
+}
+
+/// Explore a portfolio against a caller-owned cache (pass the cache of a
+/// previous run to make repeated invocations near-free).
+pub fn explore_portfolio_shared(
+    scenarios: &[Scenario],
+    threads: usize,
+    cache: &EvalCache,
+) -> PortfolioResult {
+    let start = Instant::now();
+    let (outer, inner) = split_threads(threads, scenarios.len());
+    let outcomes = parallel_map(scenarios, outer, |s| {
+        let mut cfg = s.config.clone();
+        // The portfolio's budget is authoritative: outer workers ×
+        // inner swarm threads never exceed `threads`, regardless of
+        // what the scenario config asked for on its own.
+        cfg.threads = inner;
+        let result = engine::explore_shared(&s.network, &cfg, cache);
+        let score = result
+            .as_ref()
+            .map(|r| r.best.fitness(cfg.objective))
+            .unwrap_or(f64::NEG_INFINITY);
+        ScenarioOutcome {
+            label: s.label.clone(),
+            network: s.network.name.clone(),
+            device: cfg.device.name.clone(),
+            result,
+            score,
+        }
+    });
+    PortfolioResult {
+        outcomes,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_len: cache.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, Precision, TensorShape};
+    use crate::dse::pso::PsoParams;
+
+    fn quick_cfg() -> ExplorerConfig {
+        let mut c = ExplorerConfig::new(FpgaDevice::ku115());
+        c.pso = PsoParams { population: 8, iterations: 5, ..PsoParams::default() };
+        c
+    }
+
+    fn nets() -> Vec<Network> {
+        vec![
+            zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16),
+            zoo::by_name("alexnet", 227, 227, Precision::Int16).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn cross_builds_full_matrix() {
+        let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+        let s = cross(&nets(), &devices, &quick_cfg());
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].label, format!("{}@KU115", nets()[0].name));
+        assert_eq!(s[1].config.device.name, "ZC706");
+    }
+
+    #[test]
+    fn portfolio_matches_individual_exploration() {
+        let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+        let scenarios = cross(&nets(), &devices, &quick_cfg());
+        let port = explore_portfolio(&scenarios, 4);
+        assert_eq!(port.outcomes.len(), scenarios.len());
+        for (s, o) in scenarios.iter().zip(&port.outcomes) {
+            let solo = engine::explore(&s.network, &s.config);
+            match (&o.result, &solo) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.best.rav, b.best.rav, "{}", o.label);
+                    assert_eq!(
+                        a.best.gops.to_bits(),
+                        b.best.gops.to_bits(),
+                        "{}",
+                        o.label
+                    );
+                }
+                (None, None) => {}
+                _ => panic!("{}: portfolio/solo feasibility disagree", o.label),
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_is_sorted_and_best_is_feasible() {
+        let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+        let scenarios = cross(&nets(), &devices, &quick_cfg());
+        let port = explore_portfolio(&scenarios, 2);
+        let ranked = port.ranked();
+        for w in ranked.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        let best = port.best().expect("at least one feasible scenario");
+        assert!(best.score.is_finite());
+        assert!(port.render_table().contains("rank"));
+    }
+
+    #[test]
+    fn repeated_scenarios_share_the_cache() {
+        // The same scenario twice: the second exploration is pure lookup,
+        // so the miss count equals a single run's.
+        let base = quick_cfg();
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let once = vec![Scenario::new(net.clone(), base.clone())];
+        let twice = vec![
+            Scenario::new(net.clone(), base.clone()),
+            Scenario::new(net, base),
+        ];
+        let solo = explore_portfolio(&once, 1);
+        let dup = explore_portfolio(&twice, 1);
+        assert_eq!(dup.cache_misses, solo.cache_misses, "duplicate recomputed");
+        assert!(dup.cache_hits > solo.cache_hits);
+    }
+
+    #[test]
+    fn thread_split_covers_budget() {
+        assert_eq!(split_threads(8, 4), (4, 2));
+        assert_eq!(split_threads(8, 16), (8, 1));
+        assert_eq!(split_threads(1, 4), (1, 1));
+        assert_eq!(split_threads(0, 0), (1, 1));
+    }
+}

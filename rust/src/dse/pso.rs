@@ -5,6 +5,19 @@
 //! fitness evaluation. Includes the paper's early-termination feature
 //! (stop when the global best has not improved for two consecutive
 //! iterations).
+//!
+//! ## Synchronous update & parallel evaluation
+//!
+//! The swarm update is **batch-synchronous**: each iteration first moves
+//! every particle against the *previous* iteration's global best (all
+//! RNG draws happen here, on one thread, in particle order), then scores
+//! the whole swarm through a batch evaluator, then folds personal/global
+//! bests back in **particle order**. Because the RNG stream and the
+//! reduction order are both independent of how the batch evaluator
+//! schedules its work, a parallel evaluator (see
+//! [`crate::util::parallel::parallel_map`]) produces bit-identical
+//! outcomes to the sequential one for the same seed — the property
+//! `rust/tests/proptests.rs` pins across 1/2/8 threads.
 
 use crate::util::rng::Rng;
 
@@ -60,11 +73,32 @@ struct Particle {
     best_fit: f64,
 }
 
-/// Run PSO. `fitness` returns `None` for infeasible RAVs (treated as
-/// fitness −∞ so the swarm moves away from them).
+/// Run PSO with a per-RAV fitness closure. `fitness` returns `None` for
+/// infeasible RAVs (treated as fitness −∞ so the swarm moves away from
+/// them). Thin sequential adapter over [`run_swarm`].
 pub fn run<F>(params: &PsoParams, bounds: &Bounds, seed: u64, mut fitness: F) -> Option<PsoOutcome>
 where
     F: FnMut(Rav) -> Option<f64>,
+{
+    run_swarm(params, bounds, seed, &mut |ravs: &[Rav]| {
+        ravs.iter().map(|r| fitness(*r)).collect::<Vec<Option<f64>>>()
+    })
+}
+
+/// Run PSO with a whole-swarm batch evaluator: `eval_swarm` receives the
+/// iteration's candidate RAVs and must return their fitness values **in
+/// input order** (`None` = infeasible). The evaluator is free to compute
+/// entries concurrently and/or through a memo cache; as long as each
+/// entry is a pure function of its RAV, the outcome is bit-identical to
+/// the sequential path.
+pub fn run_swarm<E>(
+    params: &PsoParams,
+    bounds: &Bounds,
+    seed: u64,
+    eval_swarm: &mut E,
+) -> Option<PsoOutcome>
+where
+    E: FnMut(&[Rav]) -> Vec<Option<f64>>,
 {
     let mut rng = Rng::seed_from_u64(seed);
     let lo = [0.0, 1.0, bounds.frac_min, bounds.frac_min, bounds.frac_min];
@@ -78,10 +112,17 @@ where
     let span: Vec<f64> = lo.iter().zip(&hi).map(|(l, h)| h - l).collect();
 
     let mut evals = 0usize;
-    let eval = |pos: &[f64; 5], fit: &mut F, evals: &mut usize| -> f64 {
-        *evals += 1;
-        let rav = Position::from_array(*pos).to_rav(bounds);
-        fit(rav).unwrap_or(f64::NEG_INFINITY)
+    let mut score = |swarm_pos: &[[f64; 5]], evals: &mut usize| -> Vec<f64> {
+        *evals += swarm_pos.len();
+        let ravs: Vec<Rav> = swarm_pos
+            .iter()
+            .map(|p| Position::from_array(*p).to_rav(bounds))
+            .collect();
+        let fits = eval_swarm(&ravs);
+        // Hard contract: a short vector would silently zip-truncate the
+        // swarm and corrupt the search; once per iteration this is free.
+        assert_eq!(fits.len(), ravs.len(), "batch evaluator arity");
+        fits.into_iter().map(|f| f.unwrap_or(f64::NEG_INFINITY)).collect()
     };
 
     // Initialization: stratified over SP so both paradigm extremes and
@@ -103,8 +144,8 @@ where
 
     let mut g_best_pos = swarm[0].pos;
     let mut g_best_fit = f64::NEG_INFINITY;
-    for p in swarm.iter_mut() {
-        let f = eval(&p.pos, &mut fitness, &mut evals);
+    let init_pos: Vec<[f64; 5]> = swarm.iter().map(|p| p.pos).collect();
+    for (p, f) in swarm.iter_mut().zip(score(&init_pos, &mut evals)) {
         p.best_fit = f;
         if f > g_best_fit {
             g_best_fit = f;
@@ -120,6 +161,9 @@ where
     for _itr in 0..params.iterations {
         iterations += 1;
         let prev_best = g_best_fit;
+        // Move phase: all stochastic draws, sequential in particle order,
+        // against the global best frozen at the end of the previous
+        // iteration.
         for p in swarm.iter_mut() {
             for d in 0..5 {
                 let r1 = rng.gen_f64();
@@ -132,7 +176,12 @@ where
                 p.vel[d] = p.vel[d].clamp(-vmax, vmax);
                 p.pos[d] = (p.pos[d] + p.vel[d]).clamp(lo[d], hi[d]);
             }
-            let f = eval(&p.pos, &mut fitness, &mut evals);
+        }
+        // Score phase: the whole swarm at once (parallelizable).
+        let swarm_pos: Vec<[f64; 5]> = swarm.iter().map(|p| p.pos).collect();
+        let fits = score(&swarm_pos, &mut evals);
+        // Reduce phase: deterministic particle order.
+        for (p, f) in swarm.iter_mut().zip(fits) {
             if f > p.best_fit {
                 p.best_fit = f;
                 p.best_pos = p.pos;
@@ -200,6 +249,25 @@ mod tests {
         let b = run(&params, &bounds(), 7, f).unwrap();
         assert_eq!(a.best_rav, b.best_rav);
         assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn batched_path_identical_to_sequential() {
+        // The swarm entry point with a trivial batch closure must follow
+        // the exact same trajectory as the per-RAV adapter.
+        let params = PsoParams { population: 16, iterations: 25, ..Default::default() };
+        let fit = |r: &Rav| -> Option<f64> {
+            Some(-((r.dsp_frac - 0.55).powi(2)) - ((r.sp as f64 - 9.0) / 13.0).powi(2))
+        };
+        let a = run(&params, &bounds(), 99, |r| fit(&r)).unwrap();
+        let b = run_swarm(&params, &bounds(), 99, &mut |ravs: &[Rav]| {
+            ravs.iter().map(fit).collect::<Vec<Option<f64>>>()
+        })
+        .unwrap();
+        assert_eq!(a.best_rav, b.best_rav);
+        assert_eq!(a.best_fitness.to_bits(), b.best_fitness.to_bits());
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.history.len(), b.history.len());
     }
 
     #[test]

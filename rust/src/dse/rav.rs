@@ -20,7 +20,35 @@ pub struct Rav {
     pub bw_frac: f64,
 }
 
+/// Resolution of the resource-fraction axes the engine actually
+/// evaluates at: fractions snap to multiples of `1/4096` (≈0.024%, i.e.
+/// sub-DSP granularity on every catalogued device) before fitness
+/// evaluation. Snapping makes an evaluated design point an exact
+/// function of its quantized coordinates, which is what lets the
+/// [`crate::dse::cache::EvalCache`] memoize fitness without ever
+/// returning a neighbouring point's candidate.
+pub const FRAC_QUANTUM: f64 = 1.0 / 4096.0;
+
 impl Rav {
+    /// Snap the fractional axes onto the [`FRAC_QUANTUM`] grid (nearest
+    /// multiple). Integer axes are already discrete. Idempotent.
+    pub fn quantized(&self) -> Rav {
+        let snap = |f: f64| (f / FRAC_QUANTUM).round() * FRAC_QUANTUM;
+        Rav {
+            sp: self.sp,
+            batch: self.batch,
+            dsp_frac: snap(self.dsp_frac),
+            bram_frac: snap(self.bram_frac),
+            bw_frac: snap(self.bw_frac),
+        }
+    }
+
+    /// Grid index of a fraction on the [`FRAC_QUANTUM`] lattice (used as
+    /// the exact, hashable cache-key coordinate).
+    pub fn frac_index(f: f64) -> u32 {
+        (f / FRAC_QUANTUM).round().max(0.0) as u32
+    }
+
     /// Pipeline-side budget on a device.
     pub fn pipeline_budget(&self, d: &FpgaDevice) -> ResourceBudget {
         ResourceBudget::fraction_of(d, self.dsp_frac, self.bram_frac, self.bw_frac)
@@ -141,6 +169,27 @@ mod tests {
         assert_eq!(c.sp, 13);
         assert_eq!(c.batch, 1);
         assert!(c.dsp_frac <= 0.95 && c.bram_frac >= 0.02);
+    }
+
+    #[test]
+    fn quantize_idempotent_and_close() {
+        let r = Rav { sp: 5, batch: 2, dsp_frac: 0.63601, bram_frac: 0.5372, bw_frac: 0.02 };
+        let q = r.quantized();
+        assert_eq!(q, q.quantized());
+        for (a, b) in [
+            (r.dsp_frac, q.dsp_frac),
+            (r.bram_frac, q.bram_frac),
+            (r.bw_frac, q.bw_frac),
+        ] {
+            assert!((a - b).abs() <= FRAC_QUANTUM / 2.0 + 1e-12, "{a} vs {b}");
+        }
+        assert_eq!(q.sp, r.sp);
+        assert_eq!(q.batch, r.batch);
+        // Grid indices are exact on quantized values.
+        assert_eq!(
+            Rav::frac_index(q.dsp_frac) as f64 * FRAC_QUANTUM,
+            q.dsp_frac
+        );
     }
 
     #[test]

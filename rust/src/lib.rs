@@ -14,7 +14,13 @@
 //!   buffer allocation strategies, IS/WS dataflows.
 //! * [`dse`] — the two-level design-space exploration engine: global PSO
 //!   over the Resource Allocation Vector (Algorithm 1) plus the CTC-based
-//!   and balance-oriented local optimizers (Algorithms 2–3).
+//!   and balance-oriented local optimizers (Algorithms 2–3). Swarm
+//!   fitness evaluates in parallel with deterministic (bit-identical)
+//!   results at any thread count, design points are memoized in
+//!   [`dse::cache`] (keyed on the quantized RAV plus a fingerprint of
+//!   network structure, device, precision, and objective), and
+//!   [`dse::portfolio`] explores N networks × M devices in one
+//!   invocation over a shared cache.
 //! * [`baselines`] — reimplementations of the paper's comparators:
 //!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
 //!   Xilinx-DPU-like fixed IP model.
@@ -22,8 +28,9 @@
 //!   board-level measurement (see DESIGN.md, hardware substitution).
 //! * [`runtime`] — PJRT runtime loading AOT-compiled HLO artifacts
 //!   (produced by `python/compile/aot.py`) for functional execution.
-//! * [`coordinator`] — a tokio-based serving coordinator that drives an
-//!   explored accelerator configuration over batched inference requests.
+//! * [`coordinator`] — a std-thread serving coordinator (dynamic batcher,
+//!   multi-worker router, lock-free metrics) that drives an explored
+//!   accelerator configuration over batched inference requests.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation as text rows/series.
 
@@ -41,6 +48,7 @@ pub mod util;
 
 pub use dnn::graph::Network;
 pub use dse::engine::{ExplorerConfig, ExplorerResult};
+pub use dse::portfolio::{explore_portfolio, PortfolioResult, Scenario};
 pub use fpga::device::FpgaDevice;
 
 /// Crate-wide result alias.

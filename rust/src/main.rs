@@ -17,7 +17,10 @@ dnnexplorer — DNNExplorer (ICCAD'20) reproduction
 
 USAGE:
   dnnexplorer explore [--network N] [--height H] [--width W] [--device D]
-                      [--bits B] [--batch B|0] [--config FILE]
+                      [--bits B] [--batch B|0] [--config FILE] [--threads T|0]
+                      [--population P] [--iterations I] [--seed S] [--json]
+  dnnexplorer portfolio [--networks A,B,C] [--devices D1,D2] [--height H]
+                      [--width W] [--bits B] [--batch B|0] [--threads T|0]
                       [--population P] [--iterations I] [--seed S] [--json]
   dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
   dnnexplorer report [--csv DIR] <fig1|fig2a|fig2b|table1|fig7|fig8|fig9|fig10|fig11|table3|table4|all> [--full]
@@ -88,6 +91,7 @@ fn main() {
     let rest = &argv[1..];
     let result = match cmd.as_str() {
         "explore" => cmd_explore(rest),
+        "portfolio" => cmd_portfolio(rest),
         "analyze" => cmd_analyze(rest),
         "report" => cmd_report(rest),
         "sweep" => cmd_sweep(rest),
@@ -123,6 +127,7 @@ fn cmd_explore(argv: &[String]) -> anyhow::Result<()> {
     cfg.batch = args.get_usize("batch", cfg.batch)?;
     cfg.population = args.get_usize("population", cfg.population)?;
     cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(s) = args.get("seed") {
         cfg.seed = s.parse()?;
     }
@@ -174,6 +179,90 @@ fn cmd_explore(argv: &[String]) -> anyhow::Result<()> {
             res.stats.elapsed_s,
             if res.stats.early_terminated { " (early term)" } else { "" }
         );
+    }
+    Ok(())
+}
+
+/// Explore N networks × M devices in one invocation over a shared
+/// evaluation cache, printing the ranked result matrix.
+fn cmd_portfolio(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::dse::portfolio;
+
+    let args = Args::parse(argv)?;
+    let networks = args.get("networks").unwrap_or("vgg16_conv,resnet18,yolo,alexnet");
+    let devices = args.get("devices").unwrap_or("KU115,ZC706");
+    let base = ExperimentConfig {
+        height: args.get_usize("height", 224)?,
+        width: args.get_usize("width", 224)?,
+        bits: args.get_usize("bits", 16)? as u32,
+        batch: args.get_usize("batch", 1)?,
+        population: args.get_usize("population", 16)?,
+        iterations: args.get_usize("iterations", 12)?,
+        threads: args.get_usize("threads", 0)?,
+        seed: match args.get("seed") {
+            Some(s) => s.parse()?,
+            None => ExperimentConfig::default().seed,
+        },
+        ..ExperimentConfig::default()
+    };
+    let threads = base.resolved_threads();
+
+    let mut nets = Vec::new();
+    for name in networks.split(',').filter(|s| !s.is_empty()) {
+        let cfg = ExperimentConfig { network: name.trim().to_string(), ..base.clone() };
+        nets.push(cfg.resolve_network()?);
+    }
+    let mut devs = Vec::new();
+    for name in devices.split(',').filter(|s| !s.is_empty()) {
+        let cfg = ExperimentConfig { device: name.trim().to_string(), ..base.clone() };
+        devs.push(cfg.resolve_device()?);
+    }
+    anyhow::ensure!(!nets.is_empty() && !devs.is_empty(), "empty portfolio");
+
+    let scenarios = portfolio::cross(&nets, &devs, &base.explorer()?);
+    let result = portfolio::explore_portfolio(&scenarios, threads);
+
+    if args.has("json") {
+        let rows: Vec<Json> = result
+            .ranked()
+            .iter()
+            .map(|o| match &o.result {
+                Some(r) => Json::obj(vec![
+                    ("scenario", Json::s(o.label.clone())),
+                    ("network", Json::s(o.network.clone())),
+                    ("device", Json::s(o.device.clone())),
+                    ("gops", Json::n(r.best.gops)),
+                    ("fps", Json::n(r.best.throughput_fps)),
+                    ("sp", Json::n(r.best.rav.sp as f64)),
+                    ("batch", Json::n(r.best.rav.batch as f64)),
+                    ("dsp", Json::n(r.best.dsp_used)),
+                    ("bram", Json::n(r.best.bram_used)),
+                    ("efficiency", Json::n(r.best.dsp_efficiency)),
+                    ("evaluations", Json::n(r.stats.evaluations as f64)),
+                ]),
+                None => Json::obj(vec![
+                    ("scenario", Json::s(o.label.clone())),
+                    ("error", Json::s("infeasible")),
+                ]),
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("ranked", Json::Arr(rows)),
+            ("elapsed_s", Json::n(result.elapsed_s)),
+            ("cache_hits", Json::n(result.cache_hits as f64)),
+            ("cache_misses", Json::n(result.cache_misses as f64)),
+            ("cache_points", Json::n(result.cache_len as f64)),
+            ("threads", Json::n(threads as f64)),
+        ]);
+        println!("{}", j.render());
+    } else {
+        println!(
+            "portfolio: {} networks x {} devices, {} threads",
+            nets.len(),
+            devs.len(),
+            threads
+        );
+        print!("{}", result.render_table());
     }
     Ok(())
 }

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 

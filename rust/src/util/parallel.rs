@@ -1,0 +1,109 @@
+//! Deterministic fork-join parallelism over slices (rayon is unavailable
+//! offline; `std::thread::scope` is all the DSE hot path needs).
+//!
+//! [`parallel_map`] preserves input order in its output regardless of the
+//! worker count, so any caller that combines results **by index** is
+//! bit-identical across thread counts — the property the parallel PSO
+//! and the portfolio explorer are built on. Workers only ever determine
+//! *when* an element is computed, never *which value* it produces or
+//! *where* it lands.
+
+/// Map `f` over `items`, using up to `threads` OS threads, returning the
+/// results in input order.
+///
+/// `threads <= 1` (or a short input) runs inline with no thread spawn at
+/// all, so the sequential path is literally the `Iterator::map` loop.
+/// Panics in `f` propagate to the caller.
+pub fn parallel_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = threads.max(1).min(n.max(1));
+    if workers == 1 {
+        return items.iter().map(f).collect();
+    }
+    // Contiguous chunks, one per worker; chunk boundaries depend only on
+    // (n, workers), and results are re-joined in chunk order. The first
+    // chunk runs on the calling thread — one fewer spawn, and the
+    // caller does useful work instead of blocking in join (this keeps
+    // per-call overhead low even when the work units are cheap, e.g.
+    // swarm batches against a warm EvalCache).
+    let chunk = n.div_ceil(workers);
+    let fref = &f;
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let mut chunks = items.chunks(chunk);
+        let first = chunks.next().unwrap_or(&[]);
+        let handles: Vec<_> = chunks
+            .map(|part| scope.spawn(move || part.iter().map(fref).collect::<Vec<U>>()))
+            .collect();
+        out.extend(first.iter().map(fref));
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
+    out
+}
+
+/// A sensible default worker count: the machine's available parallelism,
+/// floored at 1 (used by CLI `--threads 0`).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_every_thread_count() {
+        let items: Vec<u64> = (0..103).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let got = parallel_map(&items, threads, |x| x * x);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 8, |x| *x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 8, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::time::Duration;
+        // Two workers sleeping in parallel must overlap: peak in-flight
+        // count reaches 2 with 2+ threads on any multi-core scheduler;
+        // with threads=1 it cannot exceed 1.
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let items = [0u8; 4];
+        parallel_map(&items, 4, |_| {
+            let cur = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(cur, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(20));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 1);
+        let seq_peak = AtomicUsize::new(0);
+        let seq_flight = AtomicUsize::new(0);
+        parallel_map(&items, 1, |_| {
+            let cur = seq_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            seq_peak.fetch_max(cur, Ordering::SeqCst);
+            seq_flight.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert_eq!(seq_peak.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -145,3 +145,52 @@ fn deterministic_given_seed() {
     assert_eq!(a.rav, b.rav);
     assert_eq!(a.gops, b.gops);
 }
+
+#[test]
+fn portfolio_explores_networks_by_devices_and_ranks_them() {
+    use dnnexplorer::dse::portfolio::{cross, explore_portfolio};
+
+    let networks = vec![
+        zoo::vgg16_conv(TensorShape::new(3, 128, 128), Precision::Int16),
+        zoo::by_name("resnet18", 224, 224, Precision::Int16).unwrap(),
+    ];
+    let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+    let scenarios = cross(&networks, &devices, &quick(FpgaDevice::ku115(), 13));
+    assert_eq!(scenarios.len(), 4);
+
+    let port = explore_portfolio(&scenarios, 4);
+    assert_eq!(port.outcomes.len(), 4);
+    let feasible = port.outcomes.iter().filter(|o| o.result.is_some()).count();
+    assert!(feasible >= 2, "only {feasible} feasible scenarios");
+
+    // The big board beats the embedded board for the same network.
+    for net in &networks {
+        let score = |dev: &str| {
+            port.outcomes
+                .iter()
+                .find(|o| o.network == net.name && o.device == dev)
+                .and_then(|o| o.result.as_ref())
+                .map(|r| r.best.gops)
+        };
+        if let (Some(ku), Some(zc)) = (score("KU115"), score("ZC706")) {
+            assert!(ku > zc, "{}: KU115 {ku} should beat ZC706 {zc}", net.name);
+        }
+    }
+
+    // Ranking is consistent with the scores and the shared cache was
+    // exercised (a swarm always revisits design points).
+    let ranked = port.ranked();
+    for w in ranked.windows(2) {
+        assert!(w[0].score >= w[1].score);
+    }
+    assert!(port.cache_hits > 0, "shared cache never hit");
+    // Every distinct design point misses at least once; racing
+    // evaluator threads may count extra misses for the same key, so
+    // this is a >= invariant, not equality.
+    assert!(
+        port.cache_misses as usize >= port.cache_len && port.cache_len > 0,
+        "misses {} vs {} stored points",
+        port.cache_misses,
+        port.cache_len
+    );
+}

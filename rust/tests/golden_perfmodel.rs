@@ -1,0 +1,204 @@
+//! Golden regression tests pinning the analytical models' outputs for
+//! VGG16 on the paper's devices, so refactors cannot silently drift the
+//! perfmodel.
+//!
+//! Two kinds of pins:
+//!
+//! * **Exact goldens** — values derivable by hand from the paper's
+//!   equations with literal arithmetic written out in the test (Eq. 1,
+//!   Eq. 3, Eq. 6, device peaks, workload counts). These must match to
+//!   floating-point noise; any deviation is a model change and must be
+//!   an explicit decision (update the literal AND EXPERIMENTS.md).
+//! * **Paper-anchored bands** — end-to-end numbers the paper reports
+//!   (Table 3 / Fig. 10) with the substrate tolerance this reproduction
+//!   claims (the simulator-vs-model experiments accept up to 35% error;
+//!   end-to-end bands here use ±50% around the paper's value, which
+//!   still catches order-of-magnitude drift and accounting bugs).
+
+use dnnexplorer::dnn::{zoo, Layer, Precision, TensorShape};
+use dnnexplorer::dse::rav::Rav;
+use dnnexplorer::dse::{engine, ExplorerConfig};
+use dnnexplorer::fpga::resource::bram18k_for;
+use dnnexplorer::fpga::FpgaDevice;
+use dnnexplorer::perfmodel::dsp_efficiency;
+use dnnexplorer::perfmodel::generic::{self, BufferStrategy, GenericConfig};
+use dnnexplorer::perfmodel::pipeline::{self, PipelineConfig, StageConfig};
+
+fn vgg224() -> dnnexplorer::Network {
+    zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16)
+}
+
+fn conv1_1() -> Layer {
+    vgg224()
+        .layers
+        .into_iter()
+        .find(|l| l.is_compute())
+        .expect("vgg has a first conv")
+}
+
+#[test]
+fn golden_vgg16_workload_counts() {
+    let net = vgg224();
+    // conv1_1: 224·224·3·3·3·64 MACs = 86,704,128; 3·3·3·64 = 1,728 weights.
+    let l = conv1_1();
+    assert_eq!(l.macs(), 86_704_128);
+    assert_eq!(l.weights(), 1_728);
+    // Conv-only VGG16 parameter count, exact:
+    // 1728 + 36864 + 73728 + 147456 + 294912 + 2·589824 + 1179648
+    //      + 5·2359296 = 14,710,464.
+    assert_eq!(net.total_weights(), 14_710_464);
+    // Total workload ≈ 30.7 GOP (paper: 1702.3 GOP/s at 55.4 img/s).
+    let gop = net.total_gop();
+    assert!((30.4..=31.0).contains(&gop), "VGG16-conv GOP {gop}");
+}
+
+#[test]
+fn golden_eq1_dsp_efficiency() {
+    // Paper Table 3 case 4: 1702.3 GOP/s on 4444 DSPs at 16 bit/200 MHz.
+    // Eq. 1: 1702.3 / (2 · 4444 · 0.2) = 0.957639...  (printed as 95.8%).
+    let e = dsp_efficiency(1702.3, Precision::Int16, 4444.0, 200.0);
+    assert!((e - 0.957_639).abs() < 5e-4, "eff {e}");
+    // 8-bit doubles α, halving the efficiency at equal GOP/s.
+    let e8 = dsp_efficiency(1702.3, Precision::Int8, 4444.0, 200.0);
+    assert!((e8 - e / 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn golden_device_peaks() {
+    // α=2 (16-bit) peaks: DSP · 2 · FREQ(GHz).
+    assert!((FpgaDevice::ku115().peak_gops(2.0) - 2208.0).abs() < 1e-6);
+    assert!((FpgaDevice::zc706().peak_gops(2.0) - 360.0).abs() < 1e-6);
+    assert!((FpgaDevice::vu9p().peak_gops(2.0) - 2736.0).abs() < 1e-6);
+    assert!((FpgaDevice::zcu102().peak_gops(2.0) - 1446.48).abs() < 1e-6);
+}
+
+#[test]
+fn golden_eq3_pipeline_stage() {
+    // conv1_1 as a single stage, CPF=3 / KPF=16, 200 MHz, ample
+    // bandwidth. Lane-quantized Eq. 3:
+    //   steps/pixel = ceil(3/3)·ceil(64/16) = 4
+    //   cycles      = 224·224 · 3·3 · 4 = 1,806,336
+    //   latency     = 1,806,336 / 200e6 = 9.03168 ms
+    //   DSP         = 3·16 · 1 (16-bit) = 48
+    //   GOP/s       = (2·86,704,128) / 1,806,336 cycles · 200e6 = 19.2
+    let l = conv1_1();
+    let cfg = PipelineConfig {
+        stages: vec![StageConfig { cpf: 3, kpf: 16, dw: Precision::Int16, ww: Precision::Int16 }],
+        batch: 1,
+        freq_mhz: 200.0,
+    };
+    let est = pipeline::estimate(&[&l], &cfg, 1000.0).expect("estimate");
+    let compute = est.stages[0].compute_s;
+    assert!((compute - 9.03168e-3).abs() / 9.03168e-3 < 1e-9, "Eq.3 {compute}");
+    assert!((est.stages[0].resources.dsp - 48.0).abs() < 1e-9);
+    assert!((est.gops - 19.2).abs() < 1e-6, "pinned GOP/s {}", est.gops);
+    assert!((est.throughput_fps - 1.0 / 9.03168e-3).abs() < 1e-3);
+}
+
+#[test]
+fn golden_eq6_generic_layer() {
+    // conv1_1 on a 32×64 generic array at 200 MHz with ample bandwidth.
+    // Effective lanes: CPF capped by C=3 → 3; KPF fills 64.
+    //   cycles  = 86,704,128 / (3·64) = 451,584
+    //   latency = 451,584 / 200e6 = 2.25792 ms, compute-bound.
+    let l = conv1_1();
+    let cfg = GenericConfig::with_budget(
+        32,
+        64,
+        Precision::Int16,
+        Precision::Int16,
+        BufferStrategy::FmAccumInBram,
+        200.0,
+        1024.0,
+    );
+    let d = generic::layer_latency(&l, &cfg, 10_000.0, 1);
+    assert!((d.comp_s - 2.25792e-3).abs() / 2.25792e-3 < 1e-9, "Eq.6 {}", d.comp_s);
+    assert!(
+        (d.total_s - d.comp_s).abs() / d.comp_s < 1e-6,
+        "ample bandwidth must be compute-bound: total {} comp {}",
+        d.total_s,
+        d.comp_s
+    );
+}
+
+#[test]
+fn golden_bram18k_allocation() {
+    // 18 Kb at 36-bit ports: exactly one block.
+    assert_eq!(bram18k_for(18.0 * 1024.0, 36.0), 1.0);
+    // A 512-bit bus tiles ceil(512/36) = 15 blocks even when shallow.
+    assert_eq!(bram18k_for(1024.0, 512.0), 15.0);
+    // 1 Mb at 18-bit ports: depth 58,254 → ceil(/1024) = 57 blocks.
+    assert_eq!(bram18k_for(1024.0 * 1024.0, 18.0), 57.0);
+}
+
+/// Paper Table 3 case 4 (the headline row): VGG16 at 3×224×224 on
+/// KU115, batch 1, 16-bit, at the paper's own reported RAV
+/// `[12, 63.6%, 53.7%, 67.3%]`. Paper: 1702.3 GOP/s, 4444 DSP, 95.8%
+/// efficiency. Band: ±50% on throughput (substrate tolerance), hard
+/// structural bounds on resources/efficiency.
+#[test]
+fn golden_table3_case4_paper_rav() {
+    let net = vgg224();
+    let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    let rav = Rav { sp: 12, batch: 1, dsp_frac: 0.636, bram_frac: 0.537, bw_frac: 0.673 };
+    let c = engine::evaluate(&net, &cfg, rav)
+        .expect("the paper's own Table 3 design point must be feasible");
+    assert!(
+        (600.0..=2400.0).contains(&c.gops),
+        "Table 3 case 4: {} GOP/s vs paper 1702.3 (band ±50%)",
+        c.gops
+    );
+    assert!(c.dsp_used <= 5520.0 + 1e-6, "DSP {}", c.dsp_used);
+    assert!(c.bram_used <= 4320.0 * 1.05, "BRAM {}", c.bram_used);
+    assert!(c.dsp_efficiency > 0.0 && c.dsp_efficiency <= 1.01, "eff {}", c.dsp_efficiency);
+    // Internal accounting is exact: GOP/s == fps · total_ops, and DSPs
+    // are the sum of the two structures.
+    let ops: f64 = net
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| l.ops() as f64)
+        .sum();
+    assert!((c.gops - c.throughput_fps * ops / 1e9).abs() / c.gops < 1e-9);
+    let parts = c.pipeline.as_ref().map(|p| p.estimate.resources.dsp).unwrap_or(0.0)
+        + c.generic.as_ref().map(|g| g.estimate.resources.dsp).unwrap_or(0.0);
+    assert!((c.dsp_used - parts).abs() < 1e-9);
+}
+
+/// Fig. 10 anchor on the embedded board: VGG16 on ZC706 must land in a
+/// plausible fraction of the 360 GOP/s peak (paper's smaller-board rows
+/// run at high utilization; DNNBuilder reports ~260 GOP/s there).
+#[test]
+fn golden_zc706_vgg16_band() {
+    let net = vgg224();
+    let mut cfg = ExplorerConfig::new(FpgaDevice::zc706());
+    cfg.pso = dnnexplorer::dse::pso::PsoParams {
+        population: 12,
+        iterations: 10,
+        ..Default::default()
+    };
+    let res = engine::explore(&net, &cfg).expect("ZC706 must be explorable");
+    let peak = FpgaDevice::zc706().peak_gops(2.0);
+    assert!(
+        res.best.gops > peak * 0.10 && res.best.gops <= peak * 1.10,
+        "ZC706 {} GOP/s vs peak {peak}",
+        res.best.gops
+    );
+    assert!(res.best.dsp_used <= 900.0 + 1e-6);
+}
+
+/// The quantized evaluation path (what the DSE actually scores) agrees
+/// with the continuous path at lattice points: quantization must be a
+/// no-op for already-on-grid RAVs.
+#[test]
+fn golden_quantization_no_op_on_grid() {
+    let net = vgg224();
+    let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    let grid = 0.5; // 2048/4096: exactly on the lattice
+    let rav = Rav { sp: 6, batch: 1, dsp_frac: grid, bram_frac: grid, bw_frac: grid };
+    assert_eq!(rav.quantized(), rav);
+    let a = engine::evaluate(&net, &cfg, rav).expect("feasible");
+    let b = engine::evaluate(&net, &cfg, rav.quantized()).expect("feasible");
+    assert_eq!(a.gops.to_bits(), b.gops.to_bits());
+    assert_eq!(a.rav, b.rav);
+}

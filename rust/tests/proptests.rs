@@ -7,6 +7,8 @@
 
 use dnnexplorer::dnn::layer::{conv_out_dim, Layer, LayerKind, TensorShape};
 use dnnexplorer::dnn::{zoo, Precision};
+use dnnexplorer::dse::cache::{scenario_fingerprint, EvalCache};
+use dnnexplorer::dse::pso::PsoParams;
 use dnnexplorer::dse::rav::{Bounds, Position, Rav};
 use dnnexplorer::dse::{engine, local_generic, local_pipeline, ExplorerConfig};
 use dnnexplorer::fpga::resource::bram18k_for;
@@ -307,6 +309,144 @@ fn prop_candidate_efficiency_bounded() {
                 }
                 if !c.throughput_fps.is_finite() || c.throughput_fps <= 0.0 {
                     return Err("non-finite fps".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_candidates_respect_device_budget() {
+    // Every candidate the engine emits fits the whole device on all
+    // three axes — DSP, BRAM (block-rounding slack ≤5%), and bandwidth
+    // (sum of the two structures' allocations).
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    let dev = ResourceBudget::of_device(&cfg.device);
+    check(
+        "candidate DSP/BRAM/BW within device budget",
+        67,
+        30,
+        |r| Rav {
+            sp: r.gen_index(14),
+            batch: 1 + r.gen_index(4),
+            dsp_frac: r.gen_range(0.05, 0.9),
+            bram_frac: r.gen_range(0.05, 0.9),
+            bw_frac: r.gen_range(0.05, 0.9),
+        },
+        |rav| {
+            let Some(c) = engine::evaluate(&net, &cfg, *rav) else {
+                return Ok(());
+            };
+            if c.dsp_used > dev.dsp + 1e-6 {
+                return Err(format!("DSP over device: {}", c.dsp_used));
+            }
+            if c.bram_used > dev.bram18k * 1.05 {
+                return Err(format!("BRAM over device: {}", c.bram_used));
+            }
+            let bw = c.pipeline.as_ref().map(|p| p.estimate.resources.bw_gbps).unwrap_or(0.0)
+                + c.generic.as_ref().map(|g| g.estimate.resources.bw_gbps).unwrap_or(0.0);
+            if bw > dev.bw_gbps + 1e-6 {
+                return Err(format!("bandwidth over device: {bw}"));
+            }
+            // The pipeline structure also fits its own RAV slice.
+            if let Some(p) = &c.pipeline {
+                let budget = c.rav.pipeline_budget(&cfg.device);
+                if p.estimate.resources.dsp > budget.dsp + 1e-6 {
+                    return Err(format!(
+                        "pipeline DSP {} over its RAV share {}",
+                        p.estimate.resources.dsp, budget.dsp
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dse_identical_across_thread_counts() {
+    // The tentpole determinism guarantee: for a fixed seed the parallel
+    // swarm evaluation is bit-identical at 1, 2, and 8 threads.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+    check(
+        "explore(seed) invariant under threads in {1,2,8}",
+        71,
+        3,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut results = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let cfg = ExplorerConfig {
+                    pso: PsoParams { population: 8, iterations: 4, ..PsoParams::default() },
+                    seed,
+                    threads,
+                    ..ExplorerConfig::new(FpgaDevice::ku115())
+                };
+                let res = engine::explore(&net, &cfg)
+                    .ok_or_else(|| format!("seed {seed}: infeasible at {threads} threads"))?;
+                results.push((threads, res));
+            }
+            let (_, base) = &results[0];
+            for (threads, res) in &results[1..] {
+                if res.best.rav != base.best.rav {
+                    return Err(format!(
+                        "threads {threads}: RAV {:?} != sequential {:?}",
+                        res.best.rav, base.best.rav
+                    ));
+                }
+                for (a, b) in [
+                    (res.best.gops, base.best.gops),
+                    (res.best.throughput_fps, base.best.throughput_fps),
+                    (res.best.frame_latency_s, base.best.frame_latency_s),
+                ] {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("threads {threads}: {a} != {b} (bitwise)"));
+                    }
+                }
+                if res.stats.evaluations != base.stats.evaluations {
+                    return Err(format!(
+                        "threads {threads}: {} evals != {}",
+                        res.stats.evaluations, base.stats.evaluations
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cached_evaluation_is_pure() {
+    // evaluate_cached == evaluate(quantized), bitwise, hit or miss.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 128, 128), Precision::Int16);
+    let cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    let cache = EvalCache::new();
+    let scenario = scenario_fingerprint(&net, &cfg);
+    check(
+        "cache returns the pure evaluation bit-for-bit",
+        73,
+        25,
+        |r| Rav {
+            sp: r.gen_index(14),
+            batch: 1,
+            dsp_frac: r.gen_range(0.05, 0.9),
+            bram_frac: r.gen_range(0.05, 0.9),
+            bw_frac: r.gen_range(0.05, 0.9),
+        },
+        |rav| {
+            let pure = engine::evaluate(&net, &cfg, rav.quantized());
+            for round in 0..2 {
+                let cached = engine::evaluate_cached(&net, &cfg, &cache, scenario, *rav);
+                match (&pure, &cached) {
+                    (None, None) => {}
+                    (Some(p), Some(c)) => {
+                        if p.gops.to_bits() != c.gops.to_bits() || p.rav != c.rav {
+                            return Err(format!("round {round}: {} != {}", p.gops, c.gops));
+                        }
+                    }
+                    _ => return Err(format!("round {round}: feasibility disagrees")),
                 }
             }
             Ok(())

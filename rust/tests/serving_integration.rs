@@ -4,9 +4,10 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig, ModelExecutor, Router};
+use dnnexplorer::coordinator::server::InferenceRequest;
 use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
 use dnnexplorer::runtime::{ArtifactStore, Engine};
 
@@ -104,6 +105,107 @@ fn server_survives_executor_failures() {
     assert_eq!(err, 3);
     assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 3);
     server.shutdown();
+}
+
+/// Executor standing in for a portfolio-explored accelerator: service
+/// time derived from the candidate's analytical frame latency (capped so
+/// the test stays fast), output = input times a fixed scale so answers
+/// are checkable per request.
+struct ExploredModel {
+    service: Duration,
+    scale: f32,
+}
+
+impl ModelExecutor for ExploredModel {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        std::thread::sleep(self.service);
+        Ok(frames
+            .iter()
+            .map(|f| HostTensor {
+                data: f.data.iter().map(|x| x * self.scale).collect(),
+                shape: f.shape.clone(),
+            })
+            .collect())
+    }
+}
+
+/// End-to-end serving against a **portfolio-explored** configuration:
+/// pick the winning (network × device) scenario, configure the router's
+/// batching from its RAV, fire concurrent clients, and reconcile every
+/// metrics counter — no request may be dropped.
+#[test]
+fn portfolio_config_drives_router_without_drops() {
+    use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+    use dnnexplorer::dse::portfolio::{cross, explore_portfolio};
+    use dnnexplorer::dse::pso::PsoParams;
+    use dnnexplorer::{ExplorerConfig, FpgaDevice};
+
+    // Small inputs so the DSE can pick batch > 1 (Table 4 mode).
+    let networks = vec![
+        zoo::vgg16_conv(TensorShape::new(3, 32, 32), Precision::Int16),
+        zoo::by_name("alexnet", 227, 227, Precision::Int16).unwrap(),
+    ];
+    let devices = [FpgaDevice::ku115(), FpgaDevice::zc706()];
+    let mut base = ExplorerConfig::new(FpgaDevice::ku115());
+    base.fixed_batch = None;
+    base.pso = PsoParams { population: 8, iterations: 5, ..PsoParams::default() };
+    let scenarios = cross(&networks, &devices, &base);
+    let port = explore_portfolio(&scenarios, 2);
+    let winner = port.best().expect("portfolio finds a feasible design");
+    let best = &winner.result.as_ref().unwrap().best;
+
+    let hw_batch = best.rav.batch.max(1);
+    let service =
+        Duration::from_micros(((best.frame_latency_s * 1e6) as u64).clamp(50, 2_000));
+    let workers = 3;
+    let router = Router::spawn(
+        workers,
+        move || Ok(ExploredModel { service, scale: 2.0 }),
+        BatcherConfig { batch_size: hw_batch, max_wait: Duration::from_millis(5) },
+    )
+    .expect("router starts");
+
+    let n = 48;
+    let mut clients = Vec::new();
+    for i in 0..n {
+        let tx = router.sender();
+        let metrics = router.metrics.clone();
+        clients.push(std::thread::spawn(move || {
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            let (respond, rx) = std::sync::mpsc::sync_channel(1);
+            tx.send(InferenceRequest {
+                input: HostTensor::new(vec![i as f32], vec![1]).unwrap(),
+                respond,
+                enqueued: Instant::now(),
+            })
+            .expect("router accepts the request");
+            rx.recv().expect("router must answer every request")
+        }));
+    }
+    let outs: Vec<anyhow::Result<HostTensor>> =
+        clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+
+    // No request dropped, none failed, every answer is the model output.
+    assert_eq!(outs.len(), n);
+    let mut values: Vec<f32> = outs
+        .into_iter()
+        .map(|r| r.expect("inference ok").data[0])
+        .collect();
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let expect: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+    assert_eq!(values, expect);
+
+    // Metrics reconcile exactly.
+    let m = &router.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(m.frames.load(Ordering::Relaxed) as usize, n, "every frame served once");
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    let batches = m.batches.load(Ordering::Relaxed) as usize;
+    assert!(batches >= 1 && batches <= n, "batches {batches}");
+    assert!(batches >= n.div_ceil(hw_batch), "batches {batches} < minimum for size {hw_batch}");
+    assert!(m.latency_percentile_us(0.99) > 0);
+    assert!(m.mean_latency_us() > 0.0);
+    router.shutdown();
 }
 
 #[test]

@@ -1,0 +1,142 @@
+//! Minimal offline shim of the `anyhow` API surface this crate uses.
+//!
+//! The build environment has no crates.io access, so the real `anyhow`
+//! cannot be fetched. This shim provides the subset the codebase relies
+//! on — [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros, and a blanket `From<E: std::error::Error>` conversion so `?`
+//! works on io/parse errors — with the same call syntax, so swapping the
+//! real crate back in (when a registry is available) is a one-line
+//! Cargo.toml change.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source chain
+/// (flattened into the message at conversion time, which is all the
+/// consumers here need — `{e}` and `{e:#}` both print the full story).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket conversion below coherent (the same
+// trick the real anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/real/path")?)
+    }
+
+    fn parse_fail() -> Result<usize> {
+        Ok("not-a-number".parse::<usize>()?)
+    }
+
+    fn guard(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            bail!("x too large: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn conversions_via_question_mark() {
+        assert!(io_fail().is_err());
+        assert!(parse_fail().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 3;
+        let e = anyhow!("value {v} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        let owned = String::from("owned message");
+        let e = anyhow!(owned.clone());
+        assert_eq!(e.to_string(), "owned message");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(guard(5).unwrap(), 5);
+        assert!(guard(-1).is_err());
+        assert!(guard(101).unwrap_err().to_string().contains("too large"));
+    }
+}
