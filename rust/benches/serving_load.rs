@@ -1,30 +1,19 @@
 //! Serving under load: Poisson arrivals against the coordinator, sweeping
 //! offered load and worker count. Reports goodput and latency percentiles
-//! — the latency/throughput trade the dynamic batcher manages.
+//! — the latency/throughput trade the dynamic batcher manages — plus the
+//! shed/ok split now that admission is bounded.
 //!
 //! Needs `make artifacts`; falls back to a synthetic executor otherwise
 //! so the bench always runs.
 
-use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use dnnexplorer::coordinator::router::Router;
-use dnnexplorer::coordinator::{BatcherConfig, ModelExecutor};
+use dnnexplorer::coordinator::synthetic::SpinServiceModel;
+use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig};
 use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
 use dnnexplorer::runtime::{ArtifactStore, Engine};
 use dnnexplorer::util::rng::Rng;
-
-/// Synthetic stand-in when artifacts are absent: ~1 ms of spin per frame.
-struct SyntheticModel;
-impl ModelExecutor for SyntheticModel {
-    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
-        let t = Instant::now();
-        while t.elapsed() < Duration::from_micros(1000 * frames.len() as u64) {
-            std::hint::spin_loop();
-        }
-        Ok(frames.to_vec())
-    }
-}
 
 fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64) {
     let mut rng = Rng::seed_from_u64(seed);
@@ -34,8 +23,7 @@ fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64)
     for i in 0..n {
         // Poisson inter-arrival: -ln(U)/rate.
         arrival += -(rng.gen_f64().max(1e-12)).ln() / rate_hz;
-        let tx = router.sender();
-        let m = router.metrics.clone();
+        let h = router.handle();
         let shape = shape.to_vec();
         let wait = Duration::from_secs_f64(arrival);
         clients.push(std::thread::spawn(move || {
@@ -43,19 +31,11 @@ fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64)
             if let Some(d) = target.checked_duration_since(Instant::now()) {
                 std::thread::sleep(d);
             }
-            m.requests.fetch_add(1, Ordering::Relaxed);
-            let (respond, rx) = std::sync::mpsc::sync_channel(1);
             let mut f = HostTensor::zeros(&shape);
             for (j, v) in f.data.iter_mut().enumerate() {
                 *v = ((i * 17 + j) % 255) as f32 / 255.0;
             }
-            tx.send(dnnexplorer::coordinator::InferenceRequest {
-                input: f,
-                respond,
-                enqueued: Instant::now(),
-            })
-            .ok();
-            rx.recv().ok().and_then(|r| r.ok()).is_some()
+            h.infer(f).is_ok()
         }));
     }
     let ok = clients
@@ -69,7 +49,7 @@ fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64)
         ok as f64 / dt,
         router.metrics.latency_percentile_us(0.5),
         router.metrics.latency_percentile_us(0.99),
-        if ok == n { "OK" } else { "DROPS" },
+        if ok == n { "OK" } else { "SHED" },
     );
 }
 
@@ -86,31 +66,39 @@ fn main() {
         })
         .unwrap_or_else(|| vec![1, 4, 16, 16]);
 
+    let queue_cfg = QueueConfig {
+        batch: BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
+        capacity: 256,
+        policy: OverloadPolicy::Reject,
+    };
     for workers in [1usize, 2, 4] {
-        println!("== workers = {workers}, batch = 4 ==");
+        println!("== workers = {workers}, batch = 4, capacity = 256 (Reject) ==");
         let router: Router = match &artifacts {
             Some(store) => {
                 let store = store.clone();
-                Router::spawn(
+                Router::spawn_with(
                     workers,
                     move || {
                         let engine = Engine::cpu()?;
                         ChainExecutor::load(&engine, &store)
                     },
-                    BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
+                    queue_cfg.clone(),
                 )
                 .expect("router")
             }
-            None => Router::spawn(
+            // Synthetic fallback when artifacts are absent: 1 ms of
+            // spin per frame.
+            None => Router::spawn_with(
                 workers,
-                || Ok(SyntheticModel),
-                BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
+                || Ok(SpinServiceModel { per_frame: Duration::from_millis(1) }),
+                queue_cfg.clone(),
             )
             .expect("router"),
         };
         for rate in [50.0, 200.0, 800.0] {
             run_load(&router, &shape, rate, 120, 7 + workers as u64);
         }
+        println!("  {}", router.metrics.summary());
         router.shutdown();
     }
 }

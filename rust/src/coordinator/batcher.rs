@@ -1,13 +1,15 @@
-//! Dynamic batcher: groups incoming requests into accelerator batches.
+//! Batching policy: the shape of the accelerator batches the serving
+//! path assembles.
 //!
-//! The explored RAV fixes the hardware batch size; the batcher fills a
-//! batch up to that size or flushes on a deadline — the standard
+//! The explored RAV fixes the hardware batch size; the coordinator fills
+//! a batch up to that size or flushes on a deadline — the standard
 //! latency/throughput trade of serving systems, applied to the paper's
-//! `Batch` parameter. Built on std mpsc (the offline environment has no
-//! tokio; see Cargo.toml).
+//! `Batch` parameter. The batch *assembly* itself lives in
+//! [`crate::coordinator::queue::AdmissionQueue::next_batch`], which all
+//! workers share (the old per-consumer `DynamicBatcher` over an mpsc
+//! receiver serialized multi-worker pulls and was removed).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -21,98 +23,5 @@ pub struct BatcherConfig {
 impl Default for BatcherConfig {
     fn default() -> Self {
         Self { batch_size: 1, max_wait: Duration::from_millis(5) }
-    }
-}
-
-/// Pulls items off an mpsc receiver and yields batches.
-pub struct DynamicBatcher<T> {
-    rx: Receiver<T>,
-    cfg: BatcherConfig,
-}
-
-impl<T> DynamicBatcher<T> {
-    pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
-        Self { rx, cfg }
-    }
-
-    /// Receive the next batch (blocking). Returns `None` when the channel
-    /// is closed and drained.
-    pub fn next_batch(&mut self) -> Option<Vec<T>> {
-        // Block for the first item.
-        let first = self.rx.recv().ok()?;
-        let mut batch = Vec::with_capacity(self.cfg.batch_size);
-        batch.push(first);
-        // Fill up to batch_size within the deadline.
-        let deadline = Instant::now() + self.cfg.max_wait;
-        while batch.len() < self.cfg.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(item) => batch.push(item),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        Some(batch)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::sync::mpsc::channel;
-
-    #[test]
-    fn fills_full_batches() {
-        let (tx, rx) = channel();
-        let mut b = DynamicBatcher::new(
-            rx,
-            BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(100) },
-        );
-        for i in 0..8 {
-            tx.send(i).unwrap();
-        }
-        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
-        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
-    }
-
-    #[test]
-    fn flushes_partial_on_deadline() {
-        let (tx, rx) = channel();
-        let mut b = DynamicBatcher::new(
-            rx,
-            BatcherConfig { batch_size: 8, max_wait: Duration::from_millis(10) },
-        );
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        let batch = b.next_batch().unwrap();
-        assert_eq!(batch, vec![1, 2]);
-    }
-
-    #[test]
-    fn none_when_closed() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let mut b = DynamicBatcher::new(rx, BatcherConfig::default());
-        assert!(b.next_batch().is_none());
-    }
-
-    #[test]
-    fn late_arrivals_join_within_deadline() {
-        let (tx, rx) = channel();
-        let handle = std::thread::spawn(move || {
-            tx.send(1).unwrap();
-            std::thread::sleep(Duration::from_millis(5));
-            tx.send(2).unwrap();
-        });
-        let mut b = DynamicBatcher::new(
-            rx,
-            BatcherConfig { batch_size: 2, max_wait: Duration::from_millis(200) },
-        );
-        let batch = b.next_batch().unwrap();
-        assert_eq!(batch, vec![1, 2]);
-        handle.join().unwrap();
     }
 }

@@ -1,5 +1,12 @@
-//! Serving metrics: request counters and a fixed-bucket latency
-//! histogram, lock-free on the hot path.
+//! Serving metrics: request counters, admission-queue gauges, and a
+//! fixed-bucket latency histogram, lock-free on the hot path.
+//!
+//! Counter semantics (the reconciliation invariant the overload tests
+//! assert): every request counted in `requests` resolves into exactly
+//! one of `ok_frames` (served), `errors` (execution failure or
+//! deadline exceeded — `timed_out` is the deadline subset), or `shed`
+//! (refused/evicted at admission), so at quiescence
+//! `requests == ok_frames + errors + shed`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -12,10 +19,25 @@ const BUCKETS_US: [u64; 12] = [
 /// Shared serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Submission attempts (counted before the admission decision).
     pub requests: AtomicU64,
+    /// Batches pulled into execution.
     pub batches: AtomicU64,
+    /// Frames entering execution (success or not).
     pub frames: AtomicU64,
+    /// Requests that resolved with a served tensor.
+    pub ok_frames: AtomicU64,
+    /// Requests that resolved with an error (per request, not per
+    /// batch), including the `timed_out` subset.
     pub errors: AtomicU64,
+    /// Requests refused or evicted at admission (overload policy).
+    pub shed: AtomicU64,
+    /// Requests whose deadline passed while queued (subset of `errors`).
+    pub timed_out: AtomicU64,
+    /// Resident admission-queue depth (gauge, updated under the queue
+    /// lock so the high-water mark is exact).
+    queue_depth: AtomicU64,
+    queue_depth_max: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
@@ -30,6 +52,57 @@ impl Metrics {
         self.frames.fetch_add(frames as u64, Ordering::Relaxed);
     }
 
+    /// One request served: counts `ok_frames` and records latency.
+    pub fn record_success(&self, d: Duration) {
+        self.ok_frames.fetch_add(1, Ordering::Relaxed);
+        self.record_latency(d);
+    }
+
+    /// One request failed (execution error): counts `errors` and — the
+    /// part the old per-batch accounting dropped — records its latency.
+    pub fn record_failure(&self, d: Duration) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.record_latency(d);
+    }
+
+    /// One request expired while queued: a failure plus the `timed_out`
+    /// sub-counter.
+    pub fn record_timeout(&self, d: Duration) {
+        self.timed_out.fetch_add(1, Ordering::Relaxed);
+        self.record_failure(d);
+    }
+
+    /// One request refused or evicted at admission. Shed requests never
+    /// reach execution, so no latency sample is taken.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge (call with the queue lock held so
+    /// the high-water mark is exact, never a race artifact).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of the resident queue — the overload tests assert
+    /// this never exceeds the configured capacity.
+    pub fn queue_depth_max(&self) -> u64 {
+        self.queue_depth_max.load(Ordering::Relaxed)
+    }
+
+    /// Requests that resolved one way or another; equals `requests` at
+    /// quiescence (the reconciliation invariant).
+    pub fn accounted(&self) -> u64 {
+        self.ok_frames.load(Ordering::Relaxed)
+            + self.errors.load(Ordering::Relaxed)
+            + self.shed.load(Ordering::Relaxed)
+    }
+
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
@@ -37,9 +110,15 @@ impl Metrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Number of latency samples recorded (served + failed requests;
+    /// shed requests are excluded).
+    pub fn latency_count(&self) -> u64 {
+        self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
     /// Approximate latency percentile from the histogram, microseconds.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        let total = self.latency_count();
         if total == 0 {
             return 0;
         }
@@ -55,7 +134,7 @@ impl Metrics {
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        let total = self.latency_count();
         if total == 0 {
             0.0
         } else {
@@ -66,11 +145,17 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} frames={} errors={} p50={}us p99={}us mean={:.0}us",
+            "requests={} ok={} errors={} shed={} timed_out={} batches={} frames={} \
+             depth={}/{} p50={}us p99={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
+            self.ok_frames.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.frames.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
+            self.queue_depth(),
+            self.queue_depth_max(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.99),
             self.mean_latency_us(),
@@ -93,6 +178,7 @@ mod tests {
         assert!(p50 <= p99);
         assert!(p50 >= 100 && p50 <= 1000, "p50 {p50}");
         assert!(m.mean_latency_us() > 0.0);
+        assert_eq!(m.latency_count(), 7);
     }
 
     #[test]
@@ -110,5 +196,34 @@ mod tests {
         m.record_batch(2);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
         assert_eq!(m.frames.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn per_request_accounting_reconciles() {
+        let m = Metrics::new();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        for _ in 0..3 {
+            m.record_success(Duration::from_micros(100));
+        }
+        m.record_failure(Duration::from_micros(200));
+        m.record_timeout(Duration::from_micros(300));
+        m.record_shed();
+        m.record_shed();
+        assert_eq!(m.ok_frames.load(Ordering::Relaxed), 3);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 2, "timeout counts into errors");
+        assert_eq!(m.timed_out.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.accounted(), 7);
+        assert_eq!(m.latency_count(), 5, "failures get latency; shed does not");
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_high_water() {
+        let m = Metrics::new();
+        m.set_queue_depth(3);
+        m.set_queue_depth(8);
+        m.set_queue_depth(1);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.queue_depth_max(), 8);
     }
 }

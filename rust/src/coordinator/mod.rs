@@ -1,18 +1,39 @@
-//! Serving coordinator (L3 hot path): a tokio request loop that drives an
+//! Serving coordinator (L3 hot path): a request loop that drives an
 //! explored accelerator configuration over batched inference requests.
 //!
 //! The coordinator owns the compiled artifacts (pipeline-stage and
-//! generic-layer executables from [`crate::runtime`]), batches incoming
-//! frames to the RAV's batch size (dynamic batching with a deadline), and
-//! reports throughput/latency metrics. Python is never on this path —
-//! the executables were AOT-compiled at `make artifacts` time.
+//! generic-layer executables from [`crate::runtime`]), admits incoming
+//! frames through a bounded [`AdmissionQueue`] (overload policy:
+//! block / reject / shed-oldest, with typed [`ServeError`] rejections),
+//! batches them to the RAV's batch size (dynamic batching with a
+//! deadline), and reports throughput/latency/overload metrics. Python
+//! is never on this path — the executables were AOT-compiled at
+//! `make artifacts` time.
+//!
+//! Layout:
+//! * [`queue`] — the bounded, deadline-aware admission queue shared by
+//!   every worker; also home of [`ServeHandle`] (submission side) and
+//!   the worker loop.
+//! * [`server`] — single-worker lifecycle ([`AcceleratorServer`]) and
+//!   the [`ModelExecutor`] trait.
+//! * [`router`] — N-worker pool ([`Router`]) over one shared queue.
+//! * [`batcher`] — the batch-shape policy ([`BatcherConfig`]).
+//! * [`metrics`] — lock-free counters/gauges with an exact
+//!   `requests == ok_frames + errors + shed` accounting invariant.
+//! * [`synthetic`] — fixed-service-time executors shared by the
+//!   overload harnesses and tests.
 
 pub mod batcher;
 pub mod metrics;
+pub mod queue;
 pub mod router;
 pub mod server;
+pub mod synthetic;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::BatcherConfig;
 pub use metrics::Metrics;
+pub use queue::{
+    AdmissionQueue, InferenceRequest, OverloadPolicy, QueueConfig, ServeError, ServeHandle,
+};
 pub use router::Router;
-pub use server::{AcceleratorServer, InferenceRequest, ModelExecutor};
+pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};

@@ -1,0 +1,544 @@
+//! Bounded admission queue: the single entry point of the serving path.
+//!
+//! Both [`crate::coordinator::server::AcceleratorServer`] (one worker)
+//! and [`crate::coordinator::router::Router`] (N workers) admit requests
+//! through an [`AdmissionQueue`] and pull batches from it. The queue is
+//! what makes the coordinator overload-safe:
+//!
+//! * **Bounded residency** — at most [`QueueConfig::capacity`] requests
+//!   wait at any instant; what happens to the excess is the
+//!   [`OverloadPolicy`] (block the producer, reject the newcomer, or
+//!   shed the oldest waiter).
+//! * **Typed rejections** — a request that cannot be served resolves to
+//!   a [`ServeError`] (never a silent drop, never an unbounded wait):
+//!   [`ServeError::Overloaded`] at admission, or
+//!   [`ServeError::DeadlineExceeded`] when a request expires while
+//!   queued.
+//! * **Convoy-free batching** — workers fill a batch under a [`Condvar`],
+//!   which *releases* the queue lock while waiting for stragglers, so a
+//!   worker collecting a partial batch never blocks the other workers
+//!   from pulling. (The previous design held a `Mutex<Receiver>` across
+//!   `recv_timeout`, serializing all workers behind whichever one was
+//!   filling.) The lock is only ever held to push or pop.
+//!
+//! Accounting invariant (checked by `tests/overload.rs`): every request
+//! counted in `Metrics::requests` resolves exactly once, into
+//! `ok_frames` (success), `errors` (execution failure or deadline), or
+//! `shed` (refused or evicted at admission), so
+//! `requests == ok_frames + errors + shed` at quiescence.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::ModelExecutor;
+use crate::runtime::executable::HostTensor;
+
+/// What to do with a new request when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Block the submitter until space frees up (backpressure; the
+    /// default — matches the old unbounded-channel behavior as long as
+    /// the capacity is generous).
+    Block,
+    /// Refuse the new request with [`ServeError::Overloaded`].
+    Reject,
+    /// Evict the oldest *waiting* request (it resolves to
+    /// [`ServeError::Overloaded`]) and admit the new one — freshest-first
+    /// under overload, useful when stale frames are worthless.
+    ShedOldest,
+}
+
+/// Admission-queue policy: batching shape plus the overload bound.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    /// Batch size / flush deadline used when workers pull.
+    pub batch: BatcherConfig,
+    /// Maximum number of requests resident in the queue (waiting, not
+    /// yet pulled into a batch). Clamped to at least 1.
+    pub capacity: usize,
+    /// What happens to a request that arrives when the queue is full.
+    pub policy: OverloadPolicy,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        Self { batch: BatcherConfig::default(), capacity: 1024, policy: OverloadPolicy::Block }
+    }
+}
+
+impl QueueConfig {
+    /// The default (generous, blocking) bound with an explicit batch
+    /// shape — what [`AcceleratorServer::spawn`] and [`Router::spawn`]
+    /// use, preserving their historical signatures.
+    ///
+    /// [`AcceleratorServer::spawn`]: crate::coordinator::server::AcceleratorServer::spawn
+    /// [`Router::spawn`]: crate::coordinator::router::Router::spawn
+    pub fn with_batch(batch: BatcherConfig) -> Self {
+        Self { batch, ..Self::default() }
+    }
+}
+
+/// Why a request was not served. Every submitted request resolves to a
+/// tensor or to exactly one of these — clients never hang on overload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Refused or evicted at admission: the queue was at capacity under
+    /// a `Reject`/`ShedOldest` policy.
+    Overloaded,
+    /// The request's deadline passed while it waited in the queue.
+    DeadlineExceeded,
+    /// The coordinator is shutting down (or shut down mid-request).
+    Closed,
+    /// The executor failed the batch carrying this request.
+    Execution(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Overloaded => write!(f, "overloaded: admission queue at capacity"),
+            Self::DeadlineExceeded => write!(f, "deadline exceeded while queued"),
+            Self::Closed => write!(f, "serving coordinator closed"),
+            Self::Execution(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One inference request: input frame, response channel, and timing.
+pub struct InferenceRequest {
+    pub input: HostTensor,
+    pub respond: SyncSender<Result<HostTensor, ServeError>>,
+    pub enqueued: Instant,
+    /// Drop (with [`ServeError::DeadlineExceeded`]) instead of executing
+    /// if still queued past this instant. `None` = wait forever.
+    pub deadline: Option<Instant>,
+}
+
+struct QueueState {
+    queue: VecDeque<InferenceRequest>,
+    closed: bool,
+}
+
+/// Bounded, deadline-aware MPMC batch queue shared by all workers of a
+/// serving coordinator. See the module docs for the guarantees.
+pub struct AdmissionQueue {
+    state: Mutex<QueueState>,
+    /// Signaled on push and on close; workers (idle or batch-filling)
+    /// wait here — *releasing the lock*, so pulls never serialize.
+    not_empty: Condvar,
+    /// Signaled on pop and on close; `Block`-policy submitters wait here.
+    not_full: Condvar,
+    batch: BatcherConfig,
+    capacity: usize,
+    policy: OverloadPolicy,
+    metrics: Arc<Metrics>,
+}
+
+impl AdmissionQueue {
+    pub fn new(cfg: QueueConfig, metrics: Arc<Metrics>) -> Self {
+        let mut batch = cfg.batch;
+        batch.batch_size = batch.batch_size.max(1);
+        Self {
+            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            batch,
+            capacity: cfg.capacity.max(1),
+            policy: cfg.policy,
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// Admit one request, applying the overload policy when full.
+    ///
+    /// Returns `Ok(())` once the request is resident (its response will
+    /// arrive on `req.respond`), or a typed error if it was refused —
+    /// in which case `req` is consumed and its channel dropped, so a
+    /// client blocked on the receiver unblocks immediately.
+    pub fn submit(&self, req: InferenceRequest) -> Result<(), ServeError> {
+        let mut state = self.state.lock().expect("admission queue poisoned");
+        loop {
+            if state.closed {
+                self.metrics.record_shed();
+                return Err(ServeError::Closed);
+            }
+            if state.queue.len() < self.capacity {
+                state.queue.push_back(req);
+                self.metrics.set_queue_depth(state.queue.len());
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match self.policy {
+                OverloadPolicy::Block => {
+                    state = self.not_full.wait(state).expect("admission queue poisoned");
+                }
+                OverloadPolicy::Reject => {
+                    self.metrics.record_shed();
+                    return Err(ServeError::Overloaded);
+                }
+                OverloadPolicy::ShedOldest => {
+                    if let Some(old) = state.queue.pop_front() {
+                        self.metrics.record_shed();
+                        let _ = old.respond.send(Err(ServeError::Overloaded));
+                    }
+                    // Loop: there is room now (capacity >= 1).
+                }
+            }
+        }
+    }
+
+    /// Pop the next request that is still worth executing, resolving any
+    /// expired ones to [`ServeError::DeadlineExceeded`] along the way.
+    /// Caller holds the state lock.
+    fn pop_live(&self, state: &mut QueueState) -> Option<InferenceRequest> {
+        while let Some(req) = state.queue.pop_front() {
+            self.metrics.set_queue_depth(state.queue.len());
+            self.not_full.notify_one();
+            match req.deadline {
+                Some(d) if Instant::now() >= d => {
+                    self.metrics.record_timeout(req.enqueued.elapsed());
+                    let _ = req.respond.send(Err(ServeError::DeadlineExceeded));
+                }
+                _ => return Some(req),
+            }
+        }
+        None
+    }
+
+    /// Pull the next batch: blocks for the first live request, then
+    /// fills up to `batch_size` within `max_wait`. The returned batch is
+    /// never empty. Returns `None` once the queue is closed *and*
+    /// drained (shutdown protocol).
+    ///
+    /// While waiting for stragglers the worker sits in
+    /// `Condvar::wait_timeout`, which releases the queue lock — other
+    /// workers pull concurrently, so one slow-filling batch can never
+    /// convoy the pool.
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        let mut state = self.state.lock().expect("admission queue poisoned");
+        let first = loop {
+            if let Some(req) = self.pop_live(&mut state) {
+                break req;
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.not_empty.wait(state).expect("admission queue poisoned");
+        };
+        let mut batch = Vec::with_capacity(self.batch.batch_size);
+        batch.push(first);
+        let deadline = Instant::now() + self.batch.max_wait;
+        while batch.len() < self.batch.batch_size {
+            if let Some(req) = self.pop_live(&mut state) {
+                batch.push(req);
+                continue;
+            }
+            if state.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (s, _) = self
+                .not_empty
+                .wait_timeout(state, deadline - now)
+                .expect("admission queue poisoned");
+            state = s;
+        }
+        Some(batch)
+    }
+
+    /// Close the queue: wakes every blocked submitter (they resolve to
+    /// [`ServeError::Closed`]) and every worker. Requests already
+    /// resident are still drained and served.
+    pub fn close(&self) {
+        let mut state = self.state.lock().expect("admission queue poisoned");
+        state.closed = true;
+        drop(state);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current resident count (diagnostic; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("admission queue poisoned").queue.len()
+    }
+}
+
+/// Clone-able submission side of a serving coordinator (server or
+/// router): owns the queue reference and does request accounting.
+#[derive(Clone)]
+pub struct ServeHandle {
+    queue: Arc<AdmissionQueue>,
+    metrics: Arc<Metrics>,
+}
+
+impl ServeHandle {
+    pub fn new(queue: Arc<AdmissionQueue>, metrics: Arc<Metrics>) -> Self {
+        Self { queue, metrics }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Open-loop submission: admit one frame and return the response
+    /// channel without waiting for the result. Admission failures come
+    /// back immediately as typed errors.
+    pub fn submit_frame(
+        &self,
+        input: HostTensor,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.submit_with_deadline(input, None)
+    }
+
+    /// [`Self::submit_frame`] with a per-request deadline: if the frame
+    /// is still queued `deadline` after submission, it resolves to
+    /// [`ServeError::DeadlineExceeded`] instead of executing.
+    pub fn submit_with_deadline(
+        &self,
+        input: HostTensor,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (respond, rx) = sync_channel(1);
+        let now = Instant::now();
+        self.queue.submit(InferenceRequest {
+            input,
+            respond,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+        })?;
+        Ok(rx)
+    }
+
+    /// Closed-loop submission: submit one frame and block for its result.
+    pub fn infer(&self, input: HostTensor) -> Result<HostTensor, ServeError> {
+        match self.submit_frame(input)?.recv() {
+            Ok(result) => result,
+            // Worker dropped the request channel mid-shutdown.
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+
+    /// [`Self::infer`] with a queueing deadline.
+    pub fn infer_with_deadline(
+        &self,
+        input: HostTensor,
+        deadline: Duration,
+    ) -> Result<HostTensor, ServeError> {
+        match self.submit_with_deadline(input, Some(deadline))?.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+}
+
+/// The worker loop shared by [`AcceleratorServer`] and [`Router`]: pull
+/// batches until the queue closes, execute, and resolve every request —
+/// success and failure both counted *per request* with latency recorded,
+/// so `requests == ok_frames + errors + shed` reconciles exactly.
+///
+/// [`AcceleratorServer`]: crate::coordinator::server::AcceleratorServer
+/// [`Router`]: crate::coordinator::router::Router
+pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
+    let metrics = queue.metrics().clone();
+    while let Some(reqs) = queue.next_batch() {
+        let frames: Vec<HostTensor> = reqs.iter().map(|r| r.input.clone()).collect();
+        metrics.record_batch(frames.len());
+        match executor.execute_batch(&frames) {
+            Ok(outs) if outs.len() == reqs.len() => {
+                for (req, out) in reqs.into_iter().zip(outs) {
+                    metrics.record_success(req.enqueued.elapsed());
+                    let _ = req.respond.send(Ok(out));
+                }
+            }
+            other => {
+                let msg = match other {
+                    Ok(outs) => {
+                        format!("batch arity: {} outputs for {} requests", outs.len(), reqs.len())
+                    }
+                    Err(e) => e.to_string(),
+                };
+                for req in reqs {
+                    metrics.record_failure(req.enqueued.elapsed());
+                    let _ = req.respond.send(Err(ServeError::Execution(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::mpsc::RecvTimeoutError;
+
+    fn queue(
+        capacity: usize,
+        policy: OverloadPolicy,
+        batch_size: usize,
+        wait_ms: u64,
+    ) -> Arc<AdmissionQueue> {
+        Arc::new(AdmissionQueue::new(
+            QueueConfig {
+                batch: BatcherConfig { batch_size, max_wait: Duration::from_millis(wait_ms) },
+                capacity,
+                policy,
+            },
+            Arc::new(Metrics::new()),
+        ))
+    }
+
+    fn req(v: f32) -> (InferenceRequest, Receiver<Result<HostTensor, ServeError>>) {
+        let (respond, rx) = sync_channel(1);
+        (
+            InferenceRequest {
+                input: HostTensor::new(vec![v], vec![1]).unwrap(),
+                respond,
+                enqueued: Instant::now(),
+                deadline: None,
+            },
+            rx,
+        )
+    }
+
+    fn vals(batch: &[InferenceRequest]) -> Vec<f32> {
+        batch.iter().map(|r| r.input.data[0]).collect()
+    }
+
+    #[test]
+    fn fills_full_batches_in_order() {
+        let q = queue(64, OverloadPolicy::Block, 4, 100);
+        for i in 0..8 {
+            q.submit(req(i as f32).0).unwrap();
+        }
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn flushes_partial_on_deadline() {
+        let q = queue(64, OverloadPolicy::Block, 8, 10);
+        q.submit(req(1.0).0).unwrap();
+        q.submit(req(2.0).0).unwrap();
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn late_arrivals_join_within_deadline() {
+        let q = queue(64, OverloadPolicy::Block, 2, 200);
+        q.submit(req(1.0).0).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.submit(req(2.0).0).unwrap();
+        });
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![1.0, 2.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn reject_policy_bounds_residency() {
+        let q = queue(2, OverloadPolicy::Reject, 1, 0);
+        assert!(q.submit(req(1.0).0).is_ok());
+        assert!(q.submit(req(2.0).0).is_ok());
+        let (r, _rx) = req(3.0);
+        assert_eq!(q.submit(r), Err(ServeError::Overloaded));
+        assert_eq!(q.metrics().shed.load(Ordering::Relaxed), 1);
+        assert_eq!(q.metrics().queue_depth_max(), 2);
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn shed_oldest_evicts_the_head() {
+        let q = queue(2, OverloadPolicy::ShedOldest, 1, 0);
+        let (r1, rx1) = req(1.0);
+        q.submit(r1).unwrap();
+        q.submit(req(2.0).0).unwrap();
+        q.submit(req(3.0).0).unwrap(); // evicts 1.0
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Overloaded));
+        assert_eq!(q.metrics().shed.load(Ordering::Relaxed), 1);
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![2.0]);
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![3.0]);
+    }
+
+    #[test]
+    fn block_policy_waits_for_space() {
+        let q = queue(1, OverloadPolicy::Block, 1, 0);
+        q.submit(req(1.0).0).unwrap();
+        let q2 = q.clone();
+        let submitter = std::thread::spawn(move || q2.submit(req(2.0).0));
+        // Popping frees space, unblocking the submitter.
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![1.0]);
+        submitter.join().unwrap().unwrap();
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![2.0]);
+        assert_eq!(q.metrics().queue_depth_max(), 1, "residency never exceeded the bound");
+    }
+
+    #[test]
+    fn expired_requests_resolve_typed_not_executed() {
+        let q = queue(8, OverloadPolicy::Block, 1, 0);
+        let (mut r1, rx1) = req(1.0);
+        r1.deadline = Some(Instant::now()); // already expired at pop time
+        q.submit(r1).unwrap();
+        q.submit(req(2.0).0).unwrap();
+        // The expired request is skipped (resolved, not returned).
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![2.0]);
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        let m = q.metrics();
+        assert_eq!(m.timed_out.load(Ordering::Relaxed), 1);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1, "timeouts count as errors");
+        assert!(m.latency_count() >= 1, "failed requests get latency recorded");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = queue(8, OverloadPolicy::Block, 4, 50);
+        q.submit(req(1.0).0).unwrap();
+        q.submit(req(2.0).0).unwrap();
+        q.close();
+        // Resident requests still come out (no discard on shutdown)...
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![1.0, 2.0]);
+        // ...then the stream ends without blocking on max_wait.
+        assert!(q.next_batch().is_none());
+        // And late submitters get a typed refusal.
+        let (r, _rx) = req(3.0);
+        assert_eq!(q.submit(r), Err(ServeError::Closed));
+    }
+
+    #[test]
+    fn rejected_submitters_channel_unblocks() {
+        // A client that submitted-and-failed must not hang on recv: the
+        // request (and its sender) is dropped on rejection.
+        let q = queue(1, OverloadPolicy::Reject, 1, 0);
+        q.submit(req(1.0).0).unwrap();
+        let (r, rx) = req(2.0);
+        assert!(q.submit(r).is_err());
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Err(RecvTimeoutError::Disconnected) => {}
+            other => panic!("rejected request channel should disconnect, got {other:?}"),
+        }
+    }
+}

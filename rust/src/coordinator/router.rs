@@ -1,51 +1,62 @@
 //! Multi-worker router: N accelerator instances (each owning its own
 //! PJRT engine + executor, like the DPU's multi-core deployments or a
-//! multi-SLR FPGA) pulling batches from one shared queue.
+//! multi-SLR FPGA) pulling batches from one shared [`AdmissionQueue`].
 //!
 //! Work distribution is pull-based (workers take the next batch when
 //! idle), which load-balances without a scheduler; ordering is restored
-//! per-request by the response channels.
+//! per-request by the response channels. Batching lives in the queue —
+//! a worker filling a partial batch waits on a condvar with the queue
+//! lock *released*, so it can never convoy the other workers (the bug
+//! the old inline `Mutex<Receiver>` batching had: the lock was held
+//! across `recv_timeout` for up to `max_wait`, serializing the pool).
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::server::{InferenceRequest, ModelExecutor};
+use crate::coordinator::queue::{run_worker, AdmissionQueue, QueueConfig, ServeError, ServeHandle};
+use crate::coordinator::server::ModelExecutor;
 use crate::runtime::executable::HostTensor;
 
-/// A pool of identical accelerator workers behind one queue.
+/// A pool of identical accelerator workers behind one admission queue.
 pub struct Router {
-    tx: Option<Sender<InferenceRequest>>,
+    queue: Arc<AdmissionQueue>,
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     pub worker_count: usize,
 }
 
 impl Router {
-    /// Spawn `n` workers; each builds its own executor via `factory`
-    /// (PJRT handles are not Send, so construction happens in-thread).
-    /// Returns an error if any worker fails to initialize.
+    /// Spawn `n` workers with the default (generous, blocking) admission
+    /// bound — the historical signature. Each worker builds its own
+    /// executor via `factory` (PJRT handles are not Send, so
+    /// construction happens in-thread). Returns an error if any worker
+    /// fails to initialize.
     pub fn spawn<E, F>(n: usize, factory: F, batch: BatcherConfig) -> anyhow::Result<Self>
     where
         E: ModelExecutor,
         F: Fn() -> anyhow::Result<E> + Send + Sync + 'static,
     {
+        Self::spawn_with(n, factory, QueueConfig::with_batch(batch))
+    }
+
+    /// [`Self::spawn`] with full admission control: queue capacity and
+    /// overload policy in addition to the batch shape.
+    pub fn spawn_with<E, F>(n: usize, factory: F, cfg: QueueConfig) -> anyhow::Result<Self>
+    where
+        E: ModelExecutor,
+        F: Fn() -> anyhow::Result<E> + Send + Sync + 'static,
+    {
         let n = n.max(1);
-        let (tx, rx): (Sender<InferenceRequest>, Receiver<InferenceRequest>) = channel();
-        let shared_rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(AdmissionQueue::new(cfg, metrics.clone()));
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(n);
-        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(n);
+        let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(n);
         for _ in 0..n {
-            let rx = shared_rx.clone();
-            let m = metrics.clone();
+            let q = queue.clone();
             let f = factory.clone();
-            let batch = batch.clone();
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 let executor = match f() {
@@ -58,80 +69,39 @@ impl Router {
                         return;
                     }
                 };
-                loop {
-                    // Pull a batch: lock only while collecting.
-                    let reqs = {
-                        let guard = rx.lock().expect("queue poisoned");
-                        let Ok(first) = guard.recv() else { break };
-                        let mut batch_v = Vec::with_capacity(batch.batch_size);
-                        batch_v.push(first);
-                        let deadline = Instant::now() + batch.max_wait;
-                        while batch_v.len() < batch.batch_size {
-                            let now = Instant::now();
-                            if now >= deadline {
-                                break;
-                            }
-                            match guard.recv_timeout(deadline - now) {
-                                Ok(item) => batch_v.push(item),
-                                Err(_) => break,
-                            }
-                        }
-                        batch_v
-                    };
-                    let frames: Vec<HostTensor> =
-                        reqs.iter().map(|r| r.input.clone()).collect();
-                    m.record_batch(frames.len());
-                    match executor.execute_batch(&frames) {
-                        Ok(outs) if outs.len() == reqs.len() => {
-                            for (req, out) in reqs.into_iter().zip(outs) {
-                                m.record_latency(req.enqueued.elapsed());
-                                let _ = req.respond.send(Ok(out));
-                            }
-                        }
-                        other => {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
-                            let msg = match other {
-                                Ok(outs) => {
-                                    format!("arity {} != {}", outs.len(), reqs.len())
-                                }
-                                Err(e) => e.to_string(),
-                            };
-                            for req in reqs {
-                                let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
-                            }
-                        }
-                    }
-                }
+                run_worker(&q, &executor);
             }));
         }
         drop(ready_tx);
         for _ in 0..n {
-            ready_rx
+            let up = ready_rx
                 .recv()
-                .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+                .map_err(|_| anyhow::anyhow!("worker died during startup"));
+            match up {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => {
+                    // Unwind: stop the workers that did start.
+                    queue.close();
+                    return Err(e);
+                }
+            }
         }
-        Ok(Self { tx: Some(tx), metrics, workers, worker_count: n })
-    }
-
-    /// Submit one frame and block for its result.
-    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let (respond, rx) = sync_channel(1);
-        self.tx
-            .as_ref()
-            .expect("router running")
-            .send(InferenceRequest { input, respond, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("router stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("router dropped request"))?
+        Ok(Self { queue, metrics, workers, worker_count: n })
     }
 
     /// Clone-able submission side for client threads.
-    pub fn sender(&self) -> Sender<InferenceRequest> {
-        self.tx.as_ref().expect("router running").clone()
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle::new(self.queue.clone(), self.metrics.clone())
     }
 
+    /// Submit one frame and block for its result.
+    pub fn infer(&self, input: HostTensor) -> Result<HostTensor, ServeError> {
+        self.handle().infer(input)
+    }
+
+    /// Close admission and wait for the workers to drain the queue.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -140,7 +110,7 @@ impl Router {
 
 impl Drop for Router {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -150,7 +120,9 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use crate::coordinator::queue::OverloadPolicy;
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
 
     struct SlowDoubler;
     impl ModelExecutor for SlowDoubler {
@@ -169,18 +141,10 @@ mod tests {
     fn run_clients(router: &Router, n: usize) -> Vec<f32> {
         let mut clients = Vec::new();
         for i in 0..n {
-            let tx = router.sender();
-            let m = router.metrics.clone();
+            let h = router.handle();
             clients.push(std::thread::spawn(move || {
-                m.requests.fetch_add(1, Ordering::Relaxed);
-                let (respond, rx) = sync_channel(1);
-                tx.send(InferenceRequest {
-                    input: HostTensor::new(vec![i as f32], vec![1]).unwrap(),
-                    respond,
-                    enqueued: Instant::now(),
-                })
-                .unwrap();
-                rx.recv().unwrap().unwrap().data[0]
+                let input = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+                h.infer(input).unwrap().data[0]
             }));
         }
         let mut out: Vec<f32> = clients.into_iter().map(|c| c.join().unwrap()).collect();
@@ -199,6 +163,8 @@ mod tests {
         let outs = run_clients(&router, 16);
         assert_eq!(outs, (0..16).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
         assert_eq!(router.metrics.frames.load(Ordering::Relaxed), 16);
+        assert_eq!(router.metrics.ok_frames.load(Ordering::Relaxed), 16);
+        assert_eq!(router.metrics.accounted(), 16);
         router.shutdown();
     }
 
@@ -224,6 +190,65 @@ mod tests {
         assert!(
             t4 < t1 * 2 / 3,
             "4 workers {t4:?} not faster than 1 worker {t1:?}"
+        );
+    }
+
+    /// Regression test for the lock convoy: with `batch_size > 1` and a
+    /// long `max_wait`, the old inline batching held the shared queue
+    /// lock across `recv_timeout`, so all workers serialized behind the
+    /// one filling a batch (the old multi-worker test only passed
+    /// because it used `batch_size: 1, max_wait: 0`). Batch fill must
+    /// never block other workers from pulling: 4 workers over a
+    /// pre-queued open-loop backlog must drain it at least 2x faster
+    /// than 1 worker.
+    #[test]
+    fn batched_workers_scale_without_convoy() {
+        struct Slow20;
+        impl ModelExecutor for Slow20 {
+            fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+                std::thread::sleep(Duration::from_millis(20));
+                Ok(frames.to_vec())
+            }
+        }
+        let time_with = |workers: usize| {
+            let router = Router::spawn_with(
+                workers,
+                || Ok(Slow20),
+                QueueConfig {
+                    batch: BatcherConfig {
+                        batch_size: 4,
+                        max_wait: Duration::from_millis(50),
+                    },
+                    capacity: 128,
+                    policy: OverloadPolicy::Block,
+                },
+            )
+            .unwrap();
+            let h = router.handle();
+            let t = Instant::now();
+            // Open-loop: the whole backlog is resident within
+            // microseconds, so the only variable is how concurrently
+            // the workers can pull batches from the shared queue.
+            let pending: Vec<_> = (0..96)
+                .map(|i| {
+                    h.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap())
+                        .expect("capacity 128 admits the whole backlog")
+                })
+                .collect();
+            for rx in pending {
+                rx.recv_timeout(Duration::from_secs(30))
+                    .expect("request resolved")
+                    .expect("request served");
+            }
+            let dt = t.elapsed();
+            router.shutdown();
+            dt
+        };
+        let t1 = time_with(1); // 24 full batches x 20ms, strictly serial
+        let t4 = time_with(4); // ~6 waves of 4 concurrent batches
+        assert!(
+            t4 * 2 < t1,
+            "4 workers at batch_size 4 {t4:?} not >= 2x faster than 1 worker {t1:?} — convoy?"
         );
     }
 

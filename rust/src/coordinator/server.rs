@@ -1,21 +1,23 @@
-//! The accelerator server: request loop → dynamic batcher → staged
-//! execution (pipeline stages then generic layers) → responses.
+//! The accelerator server: admission queue → batched execution →
+//! responses, with one worker thread owning the executor.
 //!
 //! Execution goes through the [`ModelExecutor`] trait so the serving
 //! logic is testable without PJRT; the production impl is
 //! [`crate::runtime::executable::ChainExecutor`] over the artifact store.
-//! Threading model: one worker thread owns the executor; clients block on
-//! a per-request response channel (std mpsc — no tokio offline).
+//! Admission control, batching, and overload policy all live in the
+//! shared [`AdmissionQueue`] (also used by the multi-worker
+//! [`crate::coordinator::router::Router`]); this type adds only the
+//! single-worker lifecycle around it.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
-use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{run_worker, AdmissionQueue, QueueConfig, ServeError, ServeHandle};
 use crate::runtime::executable::HostTensor;
+
+pub use crate::coordinator::queue::InferenceRequest;
 
 /// Anything that can run one already-batched frame set through the whole
 /// accelerator (all stages + generic part) and return per-frame outputs.
@@ -27,40 +29,38 @@ pub trait ModelExecutor: 'static {
     fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>>;
 }
 
-/// One inference request: input frame + response channel.
-pub struct InferenceRequest {
-    pub input: HostTensor,
-    pub respond: SyncSender<anyhow::Result<HostTensor>>,
-    pub enqueued: Instant,
-}
+/// Cheap clone-able submission handle (for client threads).
+pub type ServerHandle = ServeHandle;
 
-/// Handle to a running accelerator server. Clone-able submit side via
-/// [`AcceleratorServer::handle`].
+/// Handle to a running accelerator server.
 pub struct AcceleratorServer {
-    tx: Option<Sender<InferenceRequest>>,
+    queue: Arc<AdmissionQueue>,
     pub metrics: Arc<Metrics>,
     worker: Option<JoinHandle<()>>,
 }
 
-/// Cheap clone-able submission handle (for client threads).
-#[derive(Clone)]
-pub struct ServerHandle {
-    tx: Sender<InferenceRequest>,
-    metrics: Arc<Metrics>,
-}
-
 impl AcceleratorServer {
-    /// Spawn the serving worker thread. The executor is built by
-    /// `factory` *inside* the thread (PJRT handles are not Send); a
+    /// Spawn the serving worker with the default (generous, blocking)
+    /// admission bound — the historical signature. The executor is built
+    /// by `factory` *inside* the thread (PJRT handles are not Send); a
     /// factory error is returned here synchronously.
     pub fn spawn<E: ModelExecutor>(
         factory: impl FnOnce() -> anyhow::Result<E> + Send + 'static,
         batch: BatcherConfig,
     ) -> anyhow::Result<Self> {
-        let (tx, rx): (Sender<InferenceRequest>, Receiver<InferenceRequest>) = channel();
+        Self::spawn_with(factory, QueueConfig::with_batch(batch))
+    }
+
+    /// [`Self::spawn`] with full admission control: queue capacity and
+    /// overload policy in addition to the batch shape.
+    pub fn spawn_with<E: ModelExecutor>(
+        factory: impl FnOnce() -> anyhow::Result<E> + Send + 'static,
+        cfg: QueueConfig,
+    ) -> anyhow::Result<Self> {
         let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(1);
+        let queue = Arc::new(AdmissionQueue::new(cfg, metrics.clone()));
+        let q = queue.clone();
+        let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(1);
         let worker = std::thread::spawn(move || {
             let executor = match factory() {
                 Ok(e) => {
@@ -72,60 +72,28 @@ impl AcceleratorServer {
                     return;
                 }
             };
-            let mut batcher = DynamicBatcher::new(rx, batch);
-            while let Some(reqs) = batcher.next_batch() {
-                let frames: Vec<HostTensor> = reqs.iter().map(|r| r.input.clone()).collect();
-                m.record_batch(frames.len());
-                match executor.execute_batch(&frames) {
-                    Ok(outs) if outs.len() == reqs.len() => {
-                        for (req, out) in reqs.into_iter().zip(outs) {
-                            m.record_latency(req.enqueued.elapsed());
-                            let _ = req.respond.send(Ok(out));
-                        }
-                    }
-                    Ok(outs) => {
-                        m.errors.fetch_add(1, Ordering::Relaxed);
-                        let msg = format!(
-                            "batch arity: {} outputs for {} requests",
-                            outs.len(),
-                            reqs.len()
-                        );
-                        for req in reqs {
-                            let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
-                        }
-                    }
-                    Err(e) => {
-                        m.errors.fetch_add(1, Ordering::Relaxed);
-                        let msg = e.to_string();
-                        for req in reqs {
-                            let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
-                        }
-                    }
-                }
-            }
+            run_worker(&q, &executor);
         });
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-        Ok(Self { tx: Some(tx), metrics, worker: Some(worker) })
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Self { queue, metrics, worker: Some(worker) }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(anyhow::anyhow!("server worker died during startup")),
+        }
     }
 
     /// Get a clone-able submission handle.
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle {
-            tx: self.tx.as_ref().expect("server running").clone(),
-            metrics: self.metrics.clone(),
-        }
+        ServeHandle::new(self.queue.clone(), self.metrics.clone())
     }
 
     /// Submit one frame and block for its result.
-    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
+    pub fn infer(&self, input: HostTensor) -> Result<HostTensor, ServeError> {
         self.handle().infer(input)
     }
 
-    /// Close the queue and wait for the worker to drain.
+    /// Close admission and wait for the worker to drain the queue.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -134,22 +102,10 @@ impl AcceleratorServer {
 
 impl Drop for AcceleratorServer {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-    }
-}
-
-impl ServerHandle {
-    /// Submit one frame and block for its result.
-    pub fn infer(&self, input: HostTensor) -> anyhow::Result<HostTensor> {
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let (respond, rx) = sync_channel(1);
-        self.tx
-            .send(InferenceRequest { input, respond, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 }
 
@@ -182,6 +138,8 @@ impl<M: Send + Sync + 'static> ModelExecutor for StagedExecutor<M> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::queue::OverloadPolicy;
+    use std::sync::atomic::Ordering;
     use std::time::Duration;
 
     /// Mock executor: multiplies every element by 2.
@@ -223,17 +181,64 @@ mod tests {
         let mut outs: Vec<f32> = clients.into_iter().map(|c| c.join().unwrap()).collect();
         outs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(outs, (0..8).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
-        assert!(server.metrics.frames.load(Ordering::Relaxed) == 8);
+        assert_eq!(server.metrics.frames.load(Ordering::Relaxed), 8);
+        assert_eq!(server.metrics.ok_frames.load(Ordering::Relaxed), 8);
+        assert_eq!(server.metrics.accounted(), 8);
         server.shutdown();
     }
 
     #[test]
-    fn errors_propagate() {
+    fn errors_propagate_typed_with_latency() {
         let server = AcceleratorServer::spawn(|| Ok(Failer), BatcherConfig::default()).unwrap();
         let out = server.infer(HostTensor::zeros(&[1]));
-        assert!(out.is_err());
+        match out {
+            Err(ServeError::Execution(msg)) => assert!(msg.contains("boom"), "{msg}"),
+            other => panic!("expected execution error, got {other:?}"),
+        }
         assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            server.metrics.latency_count(),
+            1,
+            "failed request must have its latency recorded"
+        );
+        assert_eq!(server.metrics.accounted(), 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn bounded_server_rejects_overflow() {
+        // Capacity 1 + Reject: with the worker wedged on a slow batch,
+        // the second queued request is refused with a typed error.
+        struct Slow;
+        impl ModelExecutor for Slow {
+            fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(frames.to_vec())
+            }
+        }
+        let server = AcceleratorServer::spawn_with(
+            || Ok(Slow),
+            QueueConfig {
+                batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+                capacity: 1,
+                policy: OverloadPolicy::Reject,
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        // First request: pulled by the worker almost immediately.
+        let rx0 = h.submit_frame(HostTensor::zeros(&[1])).unwrap();
+        std::thread::sleep(Duration::from_millis(10)); // worker now busy
+        // Fill the single queue slot, then overflow it.
+        let _rx1 = h.submit_frame(HostTensor::zeros(&[1])).unwrap();
+        let overflow = h.submit_frame(HostTensor::zeros(&[1]));
+        assert_eq!(overflow.err(), Some(ServeError::Overloaded));
+        assert_eq!(server.metrics.shed.load(Ordering::Relaxed), 1);
+        assert!(rx0.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let metrics = server.metrics.clone();
+        server.shutdown(); // drains the still-queued request
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.accounted(), 3, "every request resolved exactly once");
     }
 
     #[test]

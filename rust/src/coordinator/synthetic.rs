@@ -1,0 +1,55 @@
+//! Synthetic executors: deterministic stand-ins for an explored
+//! accelerator's service time, shared by the overload harnesses
+//! (`dnnexplorer serve-bench`, `examples/serve_overload.rs`,
+//! `benches/serving_load.rs`) and the overload integration tests so the
+//! service-time model is defined once.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::ModelExecutor;
+use crate::runtime::executable::HostTensor;
+
+/// Sleeps `per_frame` per frame: models occupancy without burning CPU —
+/// right for tests, where wall-clock behavior matters but host CPU is
+/// shared with the clients.
+pub struct FixedServiceModel {
+    pub per_frame: Duration,
+}
+
+impl ModelExecutor for FixedServiceModel {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        std::thread::sleep(self.per_frame * frames.len() as u32);
+        Ok(frames.to_vec())
+    }
+}
+
+/// Spins `per_frame` per frame: actually occupies the core, like a real
+/// executor would — right for load benches measuring contention.
+pub struct SpinServiceModel {
+    pub per_frame: Duration,
+}
+
+impl ModelExecutor for SpinServiceModel {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let t = Instant::now();
+        let budget = self.per_frame * frames.len() as u32;
+        while t.elapsed() < budget {
+            std::hint::spin_loop();
+        }
+        Ok(frames.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn models_echo_inputs() {
+        let frames = vec![HostTensor::zeros(&[2]), HostTensor::zeros(&[2])];
+        let sleep = FixedServiceModel { per_frame: Duration::from_micros(10) };
+        assert_eq!(sleep.execute_batch(&frames).unwrap(), frames);
+        let spin = SpinServiceModel { per_frame: Duration::from_micros(10) };
+        assert_eq!(spin.execute_batch(&frames).unwrap(), frames);
+    }
+}

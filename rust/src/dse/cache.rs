@@ -31,7 +31,7 @@
 //! indistinguishable from a recomputation no matter the interleaving —
 //! parallel and sequential searches return bit-identical results.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -80,6 +80,13 @@ impl CacheKey {
 
 const SHARDS: usize = 16;
 
+/// One lock-protected slice of the memo table: the entries plus their
+/// insertion order (the FIFO eviction queue when a capacity is set).
+struct Shard {
+    map: HashMap<CacheKey, Option<Arc<Candidate>>>,
+    order: VecDeque<CacheKey>,
+}
+
 /// Sharded, thread-safe memo table for RAV evaluations.
 ///
 /// Shared by reference across evaluation threads and across the
@@ -88,10 +95,32 @@ const SHARDS: usize = 16;
 /// deep clone of the plan vectors. Infeasible RAVs (`None`) are cached
 /// too — re-discovering infeasibility reruns both local optimizers, so
 /// negative entries pay for themselves immediately.
+///
+/// ## Bounded mode
+///
+/// [`EvalCache::new`] is unbounded — right for a single exploration,
+/// whose design space is finite and small. A long portfolio run over
+/// many scenarios, however, would memoize every quantized RAV it ever
+/// touches; [`EvalCache::with_capacity`] caps the resident entries
+/// (approximately `capacity`, split evenly across shards) and evicts
+/// insertion-order-first (FIFO). Eviction only ever costs a recompute,
+/// never correctness: entries are pure functions of their key.
 pub struct EvalCache {
-    shards: Vec<Mutex<HashMap<CacheKey, Option<Arc<Candidate>>>>>,
+    shards: Vec<Mutex<Shard>>,
+    /// `None` = unbounded (the historical behavior).
+    per_shard_cap: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Hit/miss/eviction counters plus resident size, for logs and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
 }
 
 impl Default for EvalCache {
@@ -101,11 +130,24 @@ impl Default for EvalCache {
 }
 
 impl EvalCache {
+    /// Unbounded cache (entries live until the cache is dropped).
     pub fn new() -> Self {
+        Self::with_capacity(None)
+    }
+
+    /// Cache holding at most ~`capacity` entries (`None` = unbounded).
+    /// The bound is enforced per shard at `ceil(capacity / SHARDS)`, so
+    /// the total resident count can round up to at most `SHARDS - 1`
+    /// above `capacity`.
+    pub fn with_capacity(capacity: Option<usize>) -> Self {
         Self {
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), order: VecDeque::new() }))
+                .collect(),
+            per_shard_cap: capacity.map(|c| c.div_ceil(SHARDS).max(1)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -121,18 +163,32 @@ impl EvalCache {
         compute: impl FnOnce() -> Option<Candidate>,
     ) -> Option<Arc<Candidate>> {
         let shard = &self.shards[key.shard()];
-        if let Some(hit) = shard.lock().expect("cache shard poisoned").get(&key) {
+        if let Some(hit) = shard.lock().expect("cache shard poisoned").map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let value = compute().map(Arc::new);
-        shard
-            .lock()
-            .expect("cache shard poisoned")
-            .entry(key)
-            .or_insert(value)
-            .clone()
+        let mut guard = shard.lock().expect("cache shard poisoned");
+        let Shard { map, order } = &mut *guard;
+        if let Some(winner) = map.get(&key) {
+            // A racer computed and inserted first: hand back its value.
+            return winner.clone();
+        }
+        map.insert(key, value.clone());
+        order.push_back(key);
+        if let Some(cap) = self.per_shard_cap {
+            // The new key sits at the back; with cap >= 1 it is never
+            // the one popped here.
+            while order.len() > cap {
+                if let Some(old) = order.pop_front() {
+                    if map.remove(&old).is_some() {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        value
     }
 
     pub fn hits(&self) -> u64 {
@@ -143,11 +199,27 @@ impl EvalCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped to stay under the capacity bound (0 when
+    /// unbounded).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Counter snapshot plus resident size.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            evictions: self.evictions(),
+            len: self.len(),
+        }
+    }
+
     /// Number of distinct design points stored.
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .map(|s| s.lock().expect("cache shard poisoned").map.len())
             .sum()
     }
 
@@ -286,6 +358,61 @@ mod tests {
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_fifo_and_recomputes() {
+        // Capacity SHARDS => 1 entry per shard. Scenarios 1 and 1+SHARDS
+        // land in the same shard (the shard index is linear in the
+        // scenario hash mod SHARDS), so the second insert evicts the
+        // first.
+        let cache = EvalCache::with_capacity(Some(SHARDS));
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        let a = CacheKey::new(1, &rav);
+        let b = CacheKey::new(1 + SHARDS as u64, &rav);
+        assert_eq!(a.shard(), b.shard(), "test requires same-shard keys");
+        let mut calls = 0;
+        cache.get_or_compute(a, || {
+            calls += 1;
+            None
+        });
+        cache.get_or_compute(b, || {
+            calls += 1;
+            None
+        });
+        assert_eq!(cache.evictions(), 1, "capacity 1/shard: b evicted a");
+        assert_eq!(cache.len(), 1);
+        // `a` is gone: looking it up again recomputes (a miss).
+        cache.get_or_compute(a, || {
+            calls += 1;
+            None
+        });
+        assert_eq!(calls, 3);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (0, 3, 2, 1));
+        // `b` survives until `a`'s reinsertion evicted it; the newest
+        // entry is always resident.
+        let mut recomputed_b = 0;
+        cache.get_or_compute(a, || {
+            recomputed_b += 1; // a is resident: must NOT run
+            None
+        });
+        assert_eq!(recomputed_b, 0, "newest entry must be resident");
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        for scenario in 0..200 {
+            cache.get_or_compute(CacheKey::new(scenario, &rav), || None);
+        }
+        assert_eq!(cache.len(), 200);
+        assert_eq!(cache.evictions(), 0);
+        assert_eq!(cache.stats().misses, 200);
     }
 
     #[test]

@@ -28,9 +28,17 @@
 //!   board-level measurement (see DESIGN.md, hardware substitution).
 //! * [`runtime`] — PJRT runtime loading AOT-compiled HLO artifacts
 //!   (produced by `python/compile/aot.py`) for functional execution.
-//! * [`coordinator`] — a std-thread serving coordinator (dynamic batcher,
-//!   multi-worker router, lock-free metrics) that drives an explored
-//!   accelerator configuration over batched inference requests.
+//! * [`coordinator`] — a std-thread serving coordinator that drives an
+//!   explored accelerator configuration over batched inference
+//!   requests. All admission goes through a bounded, deadline-aware
+//!   [`coordinator::queue::AdmissionQueue`] shared by the single-worker
+//!   server and the multi-worker router, with pluggable overload
+//!   policies (block / reject / shed-oldest), typed
+//!   [`coordinator::ServeError`] rejections, and lock-free metrics that
+//!   reconcile exactly (`requests == ok_frames + errors + shed`).
+//!   Batch fill waits on a condvar with the queue lock released, so one
+//!   filling worker can never convoy the rest. `dnnexplorer serve-bench`
+//!   and `examples/serve_overload.rs` drive the path at 2x capacity.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation as text rows/series.
 

@@ -27,7 +27,11 @@ USAGE:
   dnnexplorer emit    [explore flags] [--out FILE]     # optimization-file JSON
   dnnexplorer sweep   [--network N] [--device D] [--batch B]  # all 12 input cases, JSONL
   dnnexplorer simulate [explore flags]                 # board-level (simulated) check
-  dnnexplorer serve   [--artifacts DIR] [--requests N] [--batch B] [--workers W]
+  dnnexplorer serve   [--artifacts DIR] [--requests N] [--batch B]
+                      [--capacity Q] [--policy block|reject|shed]
+  dnnexplorer serve-bench [--workers W] [--batch B] [--capacity Q]
+                      [--policy block|reject|shed] [--requests N]
+                      [--service-us U] [--load X]   # open-loop overload harness
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
           googlenet inceptionv3 squeezenet mobilenet mobilenetv2
@@ -98,6 +102,7 @@ fn main() {
         "emit" => cmd_emit(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);
@@ -425,8 +430,19 @@ fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse an `--policy` flag value into an overload policy.
+fn parse_policy(s: Option<&str>) -> anyhow::Result<dnnexplorer::coordinator::OverloadPolicy> {
+    use dnnexplorer::coordinator::OverloadPolicy;
+    match s.unwrap_or("block") {
+        "block" => Ok(OverloadPolicy::Block),
+        "reject" => Ok(OverloadPolicy::Reject),
+        "shed" => Ok(OverloadPolicy::ShedOldest),
+        other => anyhow::bail!("unknown overload policy {other:?} (block|reject|shed)"),
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
-    use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig};
+    use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig, QueueConfig};
     use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
     use dnnexplorer::runtime::{ArtifactStore, Engine};
 
@@ -434,6 +450,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let requests = args.get_usize("requests", 64)?;
     let batch = args.get_usize("batch", 4)?;
+    let capacity = args.get_usize("capacity", 1024)?;
+    let policy = parse_policy(args.get("policy"))?;
 
     let store = ArtifactStore::open(&artifacts)?;
     let first = store
@@ -451,14 +469,18 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
 
     // PJRT handles are not Send: the engine + executor are built inside
     // the server's worker thread.
-    let server = AcceleratorServer::spawn(
+    let server = AcceleratorServer::spawn_with(
         move || {
             let engine = Engine::cpu()?;
             ChainExecutor::load(&engine, &store)
         },
-        BatcherConfig {
-            batch_size: batch.max(1),
-            max_wait: std::time::Duration::from_millis(2),
+        QueueConfig {
+            batch: BatcherConfig {
+                batch_size: batch.max(1),
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            capacity,
+            policy,
         },
     )?;
     let t = std::time::Instant::now();
@@ -476,7 +498,6 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     }
     let ok = clients
         .into_iter()
-        .filter(|c| matches!(c, _))
         .map(|c| c.join().unwrap_or(false))
         .filter(|ok| *ok)
         .count();
@@ -487,5 +508,103 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         server.metrics.summary()
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Open-loop overload harness: drive a synthetic worker pool at a
+/// multiple of its capacity and report what the admission queue did —
+/// the accepted/shed split, reconciliation, and latency percentiles.
+/// Synthetic (spin-loop) executors keep the harness runnable anywhere;
+/// `serve` exercises the same path over real artifacts.
+fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::coordinator::synthetic::SpinServiceModel;
+    use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig, Router, ServeError};
+    use dnnexplorer::runtime::executable::HostTensor;
+    use std::time::{Duration, Instant};
+
+    let args = Args::parse(argv)?;
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let batch = args.get_usize("batch", 4)?.max(1);
+    let capacity = args.get_usize("capacity", 32)?;
+    let requests = args.get_usize("requests", 512)?;
+    let service_us = args.get_usize("service-us", 1000)?.max(1) as u64;
+    let load: f64 = match args.get("load") {
+        Some(s) => s.parse()?,
+        None => 2.0,
+    };
+    anyhow::ensure!(load > 0.0, "--load must be positive");
+    let policy = parse_policy(args.get("policy").or(Some("reject")))?;
+
+    let per_frame = Duration::from_micros(service_us);
+    let router = Router::spawn_with(
+        workers,
+        move || Ok(SpinServiceModel { per_frame }),
+        QueueConfig {
+            batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
+            capacity,
+            policy,
+        },
+    )?;
+
+    // Pool capacity in frames/s (service cost is per frame), and the
+    // open-loop offered rate as a multiple of it.
+    let capacity_fps = workers as f64 * 1e6 / service_us as f64;
+    let rate_hz = load * capacity_fps;
+    println!(
+        "serve-bench: {workers} workers x {service_us}us/frame = {capacity_fps:.0} fps capacity; \
+         offering {rate_hz:.0}/s ({load:.1}x), queue bound {capacity} ({policy:?})"
+    );
+
+    let h = router.handle();
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut shed = 0u64;
+    for i in 0..requests {
+        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        match h.submit_frame(HostTensor::new(vec![i as f32], vec![1])?) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::Overloaded) => shed += 1,
+            Err(e) => anyhow::bail!("unexpected admission error: {e}"),
+        }
+    }
+    let offered_dt = start.elapsed().as_secs_f64();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for rx in pending {
+        // Bounded wait: a hung request is a reportable failure, not a
+        // wedged harness (this runs as a CI smoke step).
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => anyhow::bail!("admitted request never resolved within 60s"),
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+
+    let m = router.metrics.clone();
+    println!(
+        "offered {requests} in {offered_dt:.2}s ({:.0}/s) -> accepted {} ({ok} ok, {failed} \
+         failed), shed {shed} ({:.1}%)",
+        requests as f64 / offered_dt,
+        ok + failed,
+        100.0 * shed as f64 / requests as f64,
+    );
+    println!(
+        "goodput {:.0}/s | p50 {}us p99 {}us | queue depth max {}/{capacity}",
+        ok as f64 / dt,
+        m.latency_percentile_us(0.5),
+        m.latency_percentile_us(0.99),
+        m.queue_depth_max(),
+    );
+    println!("metrics: {}", m.summary());
+    router.shutdown();
+    anyhow::ensure!(
+        m.accounted() == m.requests.load(std::sync::atomic::Ordering::Relaxed),
+        "accounting failed to reconcile: {}",
+        m.summary()
+    );
     Ok(())
 }

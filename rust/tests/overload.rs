@@ -1,0 +1,189 @@
+//! Overload integration: open-loop load at ~2x the pool's capacity
+//! against a bounded admission queue. The contract under overload:
+//!
+//! * every submitted request resolves definitively (an output tensor or
+//!   a typed [`ServeError`]) — no hung clients;
+//! * the resident queue never exceeds the configured bound;
+//! * the counters reconcile exactly:
+//!   `requests == ok_frames + errors + shed`.
+//!
+//! `DNNX_OVERLOAD_REQUESTS` scales the load down for constrained CI
+//! runners (default 300).
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig, Router, ServeError};
+use dnnexplorer::runtime::executable::HostTensor;
+
+fn requests_from_env(default: usize) -> usize {
+    std::env::var("DNNX_OVERLOAD_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[test]
+fn reject_policy_under_2x_load_sheds_bounded_and_reconciles() {
+    const QUEUE_BOUND: usize = 8;
+    let per_frame = Duration::from_micros(500);
+    let workers = 2;
+    let router = Router::spawn_with(
+        workers,
+        move || Ok(FixedServiceModel { per_frame }),
+        QueueConfig {
+            batch: BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
+            capacity: QUEUE_BOUND,
+            policy: OverloadPolicy::Reject,
+        },
+    )
+    .expect("router starts");
+
+    // Capacity: workers / per_frame ≈ 4000 fps. Submit at ~2x that.
+    let n = requests_from_env(300);
+    let rate_hz = 2.0 * workers as f64 / per_frame.as_secs_f64();
+    let interval = Duration::from_secs_f64(1.0 / rate_hz);
+
+    let h = router.handle();
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut shed_at_submit = 0usize;
+    for i in 0..n {
+        let target = start + interval * i as u32;
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        match h.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()) {
+            Ok(rx) => pending.push((i, rx)),
+            Err(ServeError::Overloaded) => shed_at_submit += 1,
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+
+    // Every admitted request resolves; a hang fails via recv_timeout.
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (i, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(out)) => {
+                assert_eq!(out.data, vec![i as f32], "response routed to its request");
+                ok += 1;
+            }
+            Ok(Err(e)) => {
+                assert!(
+                    matches!(e, ServeError::Execution(_) | ServeError::DeadlineExceeded),
+                    "admitted requests may only fail typed: {e:?}"
+                );
+                failed += 1;
+            }
+            Err(_) => panic!("request {i} hung: no response within 30s"),
+        }
+    }
+
+    let m = router.metrics.clone();
+    assert_eq!(m.requests.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed) as usize, ok);
+    assert_eq!(m.errors.load(Ordering::Relaxed) as usize, failed);
+    assert_eq!(m.shed.load(Ordering::Relaxed) as usize, shed_at_submit);
+    assert_eq!(
+        m.accounted() as usize,
+        n,
+        "requests == ok_frames + errors + shed must reconcile exactly"
+    );
+    assert!(
+        m.queue_depth_max() as usize <= QUEUE_BOUND,
+        "resident queue {} exceeded the bound {QUEUE_BOUND}",
+        m.queue_depth_max()
+    );
+    assert!(
+        shed_at_submit > 0,
+        "2x-capacity open-loop load must overflow a {QUEUE_BOUND}-deep queue"
+    );
+    assert!(ok > 0, "the pool must still serve at capacity while shedding");
+    assert!(m.latency_percentile_us(0.99) > 0);
+    router.shutdown();
+    assert_eq!(m.queue_depth(), 0, "shutdown drains the queue");
+}
+
+#[test]
+fn shed_oldest_under_burst_keeps_freshest_and_reconciles() {
+    const QUEUE_BOUND: usize = 4;
+    let router = Router::spawn_with(
+        1,
+        || Ok(FixedServiceModel { per_frame: Duration::from_millis(2) }),
+        QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: QUEUE_BOUND,
+            policy: OverloadPolicy::ShedOldest,
+        },
+    )
+    .expect("router starts");
+
+    // Instantaneous burst far beyond the bound: ShedOldest admits every
+    // submission (no submit error) but evicts waiting requests.
+    let n = 64;
+    let h = router.handle();
+    let pending: Vec<_> = (0..n)
+        .map(|i| h.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap())
+        .collect();
+    let mut ok = 0usize;
+    let mut evicted = 0usize;
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(ServeError::Overloaded)) => evicted += 1,
+            Ok(Err(e)) => panic!("unexpected failure: {e:?}"),
+            Err(_) => panic!("request hung under ShedOldest"),
+        }
+    }
+    let m = &router.metrics;
+    assert_eq!(ok + evicted, n, "every request resolved exactly once");
+    assert_eq!(m.shed.load(Ordering::Relaxed) as usize, evicted);
+    assert_eq!(m.accounted() as usize, n);
+    assert!(m.queue_depth_max() as usize <= QUEUE_BOUND);
+    assert!(evicted > 0, "a 64-burst must evict from a 4-deep queue");
+    router.shutdown();
+}
+
+#[test]
+fn per_request_deadlines_expire_typed_while_queued() {
+    // One slow worker; the first request occupies it while the rest sit
+    // in the queue past their deadline.
+    let router = Router::spawn_with(
+        1,
+        || Ok(FixedServiceModel { per_frame: Duration::from_millis(40) }),
+        QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: 16,
+            policy: OverloadPolicy::Reject,
+        },
+    )
+    .expect("router starts");
+    let h = router.handle();
+    let first = h.submit_frame(HostTensor::zeros(&[1])).unwrap();
+    std::thread::sleep(Duration::from_millis(5)); // worker now busy ~40ms
+    let doomed: Vec<_> = (0..4)
+        .map(|_| {
+            h.submit_with_deadline(HostTensor::zeros(&[1]), Some(Duration::from_millis(10)))
+                .unwrap()
+        })
+        .collect();
+    assert!(first.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+    for rx in doomed {
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+            Err(ServeError::DeadlineExceeded)
+        );
+    }
+    let m = &router.metrics;
+    assert_eq!(m.timed_out.load(Ordering::Relaxed), 4);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 4, "timeouts count as errors");
+    assert_eq!(m.accounted(), 5);
+    assert_eq!(
+        m.latency_count(),
+        5,
+        "expired requests get their queue time recorded as latency"
+    );
+    router.shutdown();
+}

@@ -1,13 +1,14 @@
 //! Integration: the full serving stack — artifact store → PJRT chain →
-//! dynamic batcher → concurrent clients — over the real tiny-VGG
+//! admission queue → concurrent clients — over the real tiny-VGG
 //! artifacts. Requires `make artifacts` (skips otherwise).
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use dnnexplorer::coordinator::{AcceleratorServer, BatcherConfig, ModelExecutor, Router};
-use dnnexplorer::coordinator::server::InferenceRequest;
+use dnnexplorer::coordinator::{
+    AcceleratorServer, BatcherConfig, ModelExecutor, Router, ServeError,
+};
 use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
 use dnnexplorer::runtime::{ArtifactStore, Engine};
 
@@ -59,24 +60,29 @@ fn serves_concurrent_clients_with_batching() {
     }
     // Different inputs -> at least two distinct outputs.
     assert!(outs.windows(2).any(|w| w[0].data != w[1].data));
-    assert_eq!(server.metrics.frames.load(Ordering::Relaxed) as usize, n);
-    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    let m = &server.metrics;
+    assert_eq!(m.frames.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed) as usize, n);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(m.accounted() as usize, n, "requests reconcile exactly");
     // Batching actually grouped requests.
     assert!(
-        (server.metrics.batches.load(Ordering::Relaxed) as usize) < n,
+        (m.batches.load(Ordering::Relaxed) as usize) < n,
         "expected batches < requests"
     );
-    let p99 = server.metrics.latency_percentile_us(0.99);
+    let p99 = m.latency_percentile_us(0.99);
     assert!(p99 > 0);
     server.shutdown();
 }
 
 /// Failure injection: an executor that errors on every 3rd batch. The
-/// server must keep serving later batches and count the errors.
+/// server must keep serving later batches, count the errors *per
+/// request*, and record latency for the failed requests too.
 struct Flaky {
     n: std::sync::atomic::AtomicUsize,
 }
-impl dnnexplorer::coordinator::ModelExecutor for Flaky {
+impl ModelExecutor for Flaky {
     fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
         let i = self.n.fetch_add(1, Ordering::Relaxed);
         if i % 3 == 2 {
@@ -98,12 +104,63 @@ fn server_survives_executor_failures() {
     for _ in 0..9 {
         match server.infer(HostTensor::zeros(&[1])) {
             Ok(_) => ok += 1,
-            Err(_) => err += 1,
+            Err(e) => {
+                assert!(
+                    matches!(e, ServeError::Execution(_)),
+                    "executor failures must surface typed: {e:?}"
+                );
+                err += 1;
+            }
         }
     }
     assert_eq!(ok, 6, "2 of 3 batches succeed");
     assert_eq!(err, 3);
-    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 3);
+    let m = &server.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), 9);
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed), 6);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 3);
+    assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(m.accounted(), 9, "requests == ok_frames + errors + shed");
+    assert_eq!(
+        m.latency_count(),
+        9,
+        "failed requests must appear in the latency histogram too"
+    );
+    server.shutdown();
+}
+
+/// Per-request error accounting at batch size > 1: one failing batch of
+/// k requests must count k errors, not 1.
+#[test]
+fn failed_batch_counts_every_request() {
+    struct AlwaysFails;
+    impl ModelExecutor for AlwaysFails {
+        fn execute_batch(&self, _: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            anyhow::bail!("down")
+        }
+    }
+    let server = AcceleratorServer::spawn(
+        || Ok(AlwaysFails),
+        BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(50) },
+    )
+    .unwrap();
+    let n = 8;
+    let mut clients = Vec::new();
+    for _ in 0..n {
+        let h = server.handle();
+        clients.push(std::thread::spawn(move || h.infer(HostTensor::zeros(&[1]))));
+    }
+    for c in clients {
+        assert!(c.join().unwrap().is_err());
+    }
+    let m = &server.metrics;
+    assert_eq!(m.errors.load(Ordering::Relaxed) as usize, n, "one error per request");
+    assert_eq!(m.latency_count() as usize, n, "one latency sample per failed request");
+    assert!(
+        (m.batches.load(Ordering::Relaxed) as usize) < n,
+        "requests were actually batched"
+    );
+    assert_eq!(m.accounted() as usize, n);
     server.shutdown();
 }
 
@@ -131,8 +188,9 @@ impl ModelExecutor for ExploredModel {
 
 /// End-to-end serving against a **portfolio-explored** configuration:
 /// pick the winning (network × device) scenario, configure the router's
-/// batching from its RAV, fire concurrent clients, and reconcile every
-/// metrics counter — no request may be dropped.
+/// batching from its RAV, fire concurrent clients through the admission
+/// queue, and reconcile every metrics counter — no request may be
+/// dropped.
 #[test]
 fn portfolio_config_drives_router_without_drops() {
     use dnnexplorer::dnn::{zoo, Precision, TensorShape};
@@ -168,21 +226,13 @@ fn portfolio_config_drives_router_without_drops() {
     let n = 48;
     let mut clients = Vec::new();
     for i in 0..n {
-        let tx = router.sender();
-        let metrics = router.metrics.clone();
+        let h = router.handle();
         clients.push(std::thread::spawn(move || {
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            let (respond, rx) = std::sync::mpsc::sync_channel(1);
-            tx.send(InferenceRequest {
-                input: HostTensor::new(vec![i as f32], vec![1]).unwrap(),
-                respond,
-                enqueued: Instant::now(),
-            })
-            .expect("router accepts the request");
-            rx.recv().expect("router must answer every request")
+            let input = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+            h.infer(input)
         }));
     }
-    let outs: Vec<anyhow::Result<HostTensor>> =
+    let outs: Vec<Result<HostTensor, ServeError>> =
         clients.into_iter().map(|c| c.join().expect("client thread")).collect();
 
     // No request dropped, none failed, every answer is the model output.
@@ -199,7 +249,11 @@ fn portfolio_config_drives_router_without_drops() {
     let m = &router.metrics;
     assert_eq!(m.requests.load(Ordering::Relaxed) as usize, n);
     assert_eq!(m.frames.load(Ordering::Relaxed) as usize, n, "every frame served once");
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed) as usize, n);
     assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(m.accounted() as usize, n, "requests == ok_frames + errors + shed");
+    assert_eq!(m.latency_count() as usize, n);
     let batches = m.batches.load(Ordering::Relaxed) as usize;
     assert!(batches >= 1 && batches <= n, "batches {batches}");
     assert!(batches >= n.div_ceil(hw_batch), "batches {batches} < minimum for size {hw_batch}");
