@@ -42,6 +42,7 @@ fn drive(policy: OverloadPolicy, requests: usize) -> anyhow::Result<Outcome> {
             batch: BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
             capacity: CAPACITY,
             policy,
+            ..QueueConfig::default()
         },
     )?;
 

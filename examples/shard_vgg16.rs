@@ -1,0 +1,75 @@
+//! Multi-FPGA sharding quickstart: is a pair of mid-range boards worth
+//! more than one big one?
+//!
+//! Partitions VGG16 across 2× ZCU102 (linked by 100 GbE-class serdes)
+//! and compares the end-to-end model against a single VU9P running the
+//! whole network — the classic scale-out vs scale-up question the shard
+//! planner answers from the analytical models alone.
+//!
+//! ```sh
+//! cargo run --release --example shard_vgg16
+//! DNNEXPLORER_BENCH_FULL=1 cargo run --release --example shard_vgg16
+//! ```
+
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::multi::compare_board_counts;
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::report::tables;
+use dnnexplorer::shard::{partition, ShardConfig};
+use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::util::parallel::default_threads;
+use dnnexplorer::FpgaDevice;
+
+fn main() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let cfg = ShardConfig {
+        pso: if full_mode() {
+            PsoParams::default()
+        } else {
+            PsoParams { population: 10, iterations: 8, ..PsoParams::default() }
+        },
+        threads: default_threads(),
+        ..ShardConfig::default()
+    };
+    let cache = EvalCache::new();
+
+    // Scale-out: 1 vs 2 ZCU102 boards over the default link.
+    let cluster = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+    println!("exploring {} over 1..2x ZCU102 ({} link)...", net.name, cfg.link);
+    let comparison = compare_board_counts(&net, &cluster, &cfg, &cache);
+    println!("{}", tables::shard_comparison(&net.name, &comparison).render());
+    let two_boards = comparison
+        .outcomes
+        .last()
+        .and_then(|o| o.plan.as_ref())
+        .expect("2-board partition feasible");
+    print!("{}", two_boards.render());
+
+    // Scale-up: one VU9P running the whole network (a 1-board "shard").
+    let vu9p = partition(&net, &[FpgaDevice::vu9p()], &cfg, &cache)
+        .expect("single VU9P feasible");
+    println!(
+        "\n2x ZCU102 sharded : {:>8.1} GOP/s ({:.1} img/s, {:.2} ms)",
+        two_boards.gops,
+        two_boards.throughput_fps,
+        two_boards.latency_s * 1e3
+    );
+    println!(
+        "1x VU9P monolith  : {:>8.1} GOP/s ({:.1} img/s, {:.2} ms)",
+        vu9p.gops,
+        vu9p.throughput_fps,
+        vu9p.latency_s * 1e3
+    );
+    let ratio = two_boards.gops / vu9p.gops;
+    println!(
+        "verdict: two mid-range boards deliver {:.2}x the big board's throughput",
+        ratio
+    );
+    println!(
+        "cache: {} design points, {} hits / {} misses",
+        cache.len(),
+        cache.hits(),
+        cache.misses()
+    );
+}

@@ -70,6 +70,7 @@ fn main() {
         batch: BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
         capacity: 256,
         policy: OverloadPolicy::Reject,
+        ..QueueConfig::default()
     };
     for workers in [1usize, 2, 4] {
         println!("== workers = {workers}, batch = 4, capacity = 256 (Reject) ==");

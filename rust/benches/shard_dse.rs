@@ -1,0 +1,109 @@
+//! Shard-planner benchmark: cut-point DP over 2 boards, sequential vs
+//! parallel cell evaluation, chunked vs work-stealing schedules, and the
+//! shared-cache effect across board counts.
+//!
+//! The planner's (range × device) cells are heavily skewed — a 2-layer
+//! tail cell explores in a fraction of a 11-layer prefix cell's time —
+//! which is exactly the workload the work-stealing `parallel_map`
+//! schedule exists for; this bench A/Bs it against the chunked schedule
+//! (`DNNEXPLORER_SCHEDULE=chunked` flips the default the same way).
+//!
+//! `DNNEXPLORER_BENCH_FULL=1` uses paper-scale PSO budgets.
+
+use std::time::Instant;
+
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::multi::compare_board_counts;
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::shard::{partition, ShardConfig, ShardPlan};
+use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::util::parallel::{parallel_map_with, Schedule};
+use dnnexplorer::FpgaDevice;
+
+fn cfg(threads: usize) -> ShardConfig {
+    ShardConfig {
+        pso: if full_mode() {
+            PsoParams::default()
+        } else {
+            PsoParams { population: 10, iterations: 8, ..PsoParams::default() }
+        },
+        threads,
+        ..ShardConfig::default()
+    }
+}
+
+fn plan(threads: usize, cache: &EvalCache) -> (ShardPlan, f64) {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let devices = [FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+    let t = Instant::now();
+    let p = partition(&net, &devices, &cfg(threads), cache).expect("feasible");
+    (p, t.elapsed().as_secs_f64())
+}
+
+fn main() {
+    // Untimed warmup.
+    let _ = plan(1, &EvalCache::new());
+
+    let (seq, t_seq) = plan(1, &EvalCache::new());
+    let (par, t_par) = plan(8, &EvalCache::new());
+    assert_eq!(seq.throughput_fps.to_bits(), par.throughput_fps.to_bits(), "determinism");
+
+    // Warm cache: the comparison sweep re-runs the 2-board planner on
+    // top of the 1-board cells it shares.
+    let warm = EvalCache::new();
+    let _ = plan(8, &warm);
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let devices = [FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+    let t = Instant::now();
+    let _ = partition(&net, &devices, &cfg(8), &warm);
+    let t_warm = t.elapsed().as_secs_f64();
+
+    println!(
+        "bench shard_dse(vgg16, 2x zcu102)           seq(1t)={:.3}s par(8t)={:.3}s speedup={:.2}x",
+        t_seq,
+        t_par,
+        t_seq / t_par.max(1e-9)
+    );
+    println!(
+        "bench shard_dse(warm cache, 8t)             {:.3}s ({:.1}x vs cold parallel)",
+        t_warm,
+        t_par / t_warm.max(1e-9)
+    );
+    println!(
+        "plan: e2e {:.1} GOP/s over cuts {:?}, bottleneck {}",
+        par.gops,
+        par.stages.iter().map(|s| s.layer_range).collect::<Vec<_>>(),
+        par.bottleneck()
+    );
+
+    // Schedule A/B on a synthetic skewed workload shaped like the
+    // planner's cells: one item dominates, the tail is cheap.
+    let items: Vec<u64> = (0..32).collect();
+    let skewed = |x: &u64| -> u64 {
+        let spins = if *x == 0 { 4_000_000u64 } else { 125_000u64 };
+        let mut acc = *x;
+        for i in 0..spins {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        acc
+    };
+    for schedule in [Schedule::Chunked, Schedule::WorkStealing] {
+        let t = Instant::now();
+        let out = parallel_map_with(&items, 4, schedule, skewed);
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "bench parallel_map({schedule:?}, skewed 32x4t)  {:.3}s (checksum {})",
+            dt,
+            out.iter().fold(0u64, |a, b| a.wrapping_add(*b))
+        );
+    }
+
+    // Board-count sweep over one shared cache (the CLI's default view).
+    let cache = EvalCache::new();
+    let sweep = compare_board_counts(&net, &devices, &cfg(8), &cache);
+    println!(
+        "bench shard_sweep(1..2 boards, shared cache) {:.3}s, {} points {} hits/{} misses",
+        sweep.elapsed_s, sweep.cache_len, sweep.cache_hits, sweep.cache_misses
+    );
+}

@@ -17,23 +17,34 @@
 //! * [`server`] — single-worker lifecycle ([`AcceleratorServer`]) and
 //!   the [`ModelExecutor`] trait.
 //! * [`router`] — N-worker pool ([`Router`]) over one shared queue.
+//! * [`sharded`] — the multi-board chain ([`ShardedPipeline`]): one
+//!   per-board server per shard stage, linked by forwarder threads, with
+//!   per-stage *and* end-to-end metrics that both reconcile.
 //! * [`batcher`] — the batch-shape policy ([`BatcherConfig`]).
 //! * [`metrics`] — lock-free counters/gauges with an exact
 //!   `requests == ok_frames + errors + shed` accounting invariant.
 //! * [`synthetic`] — fixed-service-time executors shared by the
 //!   overload harnesses and tests.
+//!
+//! Batches are pulled earliest-deadline-first when requests carry
+//! deadlines ([`queue::QueueOrdering::Edf`], the default; FIFO when
+//! nothing has a deadline, or always under
+//! [`queue::QueueOrdering::Fifo`]).
 
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
 pub mod router;
 pub mod server;
+pub mod sharded;
 pub mod synthetic;
 
 pub use batcher::BatcherConfig;
 pub use metrics::Metrics;
 pub use queue::{
-    AdmissionQueue, InferenceRequest, OverloadPolicy, QueueConfig, ServeError, ServeHandle,
+    AdmissionQueue, InferenceRequest, OverloadPolicy, QueueConfig, QueueOrdering, ServeError,
+    ServeHandle,
 };
 pub use router::Router;
 pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};
+pub use sharded::{ShardedPipeline, StageSpec};

@@ -14,6 +14,12 @@
 //!   [`ServeError::Overloaded`] at admission, or
 //!   [`ServeError::DeadlineExceeded`] when a request expires while
 //!   queued.
+//! * **Deadline-aware ordering** — with [`QueueOrdering::Edf`] (the
+//!   default) the waiting request with the soonest deadline is pulled
+//!   first; queues where nothing carries a deadline behave exactly like
+//!   FIFO, and [`QueueOrdering::Fifo`] forces arrival order for A/B
+//!   comparison (see `tests/overload.rs`: EDF strictly reduces
+//!   `DeadlineExceeded` under mixed-deadline load).
 //! * **Convoy-free batching** — workers fill a batch under a [`Condvar`],
 //!   which *releases* the queue lock while waiting for stragglers, so a
 //!   worker collecting a partial batch never blocks the other workers
@@ -53,6 +59,22 @@ pub enum OverloadPolicy {
     ShedOldest,
 }
 
+/// In what order waiting requests are pulled into batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueOrdering {
+    /// Strict arrival order.
+    Fifo,
+    /// Earliest-deadline-first **when deadlines are present**: the
+    /// waiting request with the soonest deadline is pulled next;
+    /// deadline-less requests are only pulled once no deadlined request
+    /// waits, in arrival order. A queue where nothing carries a deadline
+    /// behaves exactly like [`QueueOrdering::Fifo`]. This is the
+    /// default: under mixed-deadline load, FIFO lets an urgent request
+    /// expire behind patient ones that would have met their (absent or
+    /// loose) deadlines either way.
+    Edf,
+}
+
 /// Admission-queue policy: batching shape plus the overload bound.
 #[derive(Debug, Clone)]
 pub struct QueueConfig {
@@ -63,11 +85,19 @@ pub struct QueueConfig {
     pub capacity: usize,
     /// What happens to a request that arrives when the queue is full.
     pub policy: OverloadPolicy,
+    /// In what order waiting requests are pulled (default EDF, which
+    /// degenerates to FIFO when no deadlines are in play).
+    pub ordering: QueueOrdering,
 }
 
 impl Default for QueueConfig {
     fn default() -> Self {
-        Self { batch: BatcherConfig::default(), capacity: 1024, policy: OverloadPolicy::Block }
+        Self {
+            batch: BatcherConfig::default(),
+            capacity: 1024,
+            policy: OverloadPolicy::Block,
+            ordering: QueueOrdering::Edf,
+        }
     }
 }
 
@@ -138,6 +168,7 @@ pub struct AdmissionQueue {
     batch: BatcherConfig,
     capacity: usize,
     policy: OverloadPolicy,
+    ordering: QueueOrdering,
     metrics: Arc<Metrics>,
 }
 
@@ -152,6 +183,7 @@ impl AdmissionQueue {
             batch,
             capacity: cfg.capacity.max(1),
             policy: cfg.policy,
+            ordering: cfg.ordering,
             metrics,
         }
     }
@@ -166,6 +198,10 @@ impl AdmissionQueue {
 
     pub fn policy(&self) -> OverloadPolicy {
         self.policy
+    }
+
+    pub fn ordering(&self) -> QueueOrdering {
+        self.ordering
     }
 
     /// Admit one request, applying the overload policy when full.
@@ -206,11 +242,42 @@ impl AdmissionQueue {
         }
     }
 
+    /// Index of the next request to pull under the configured ordering.
+    /// FIFO: the head. EDF: the earliest deadline among deadlined
+    /// waiters (ties to arrival order — the scan keeps the first), or
+    /// the head when nothing carries a deadline (FIFO-degenerate).
+    /// Caller holds the state lock; `None` iff the queue is empty.
+    ///
+    /// The EDF scan is O(resident depth) under the state lock — fine at
+    /// the default capacity (≤ 1024: a linear pass over pointers), but
+    /// a deadline-keyed heap beside the FIFO deque is the follow-on if
+    /// capacities grow by orders of magnitude (see ROADMAP).
+    fn next_index(&self, state: &QueueState) -> Option<usize> {
+        if state.queue.is_empty() {
+            return None;
+        }
+        match self.ordering {
+            QueueOrdering::Fifo => Some(0),
+            QueueOrdering::Edf => {
+                let mut best: Option<(usize, Instant)> = None;
+                for (i, r) in state.queue.iter().enumerate() {
+                    if let Some(d) = r.deadline {
+                        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                            best = Some((i, d));
+                        }
+                    }
+                }
+                Some(best.map(|(i, _)| i).unwrap_or(0))
+            }
+        }
+    }
+
     /// Pop the next request that is still worth executing, resolving any
     /// expired ones to [`ServeError::DeadlineExceeded`] along the way.
     /// Caller holds the state lock.
     fn pop_live(&self, state: &mut QueueState) -> Option<InferenceRequest> {
-        while let Some(req) = state.queue.pop_front() {
+        while let Some(i) = self.next_index(state) {
+            let req = state.queue.remove(i).expect("next_index out of range");
             self.metrics.set_queue_depth(state.queue.len());
             self.not_full.notify_one();
             match req.deadline {
@@ -406,9 +473,19 @@ mod tests {
                 batch: BatcherConfig { batch_size, max_wait: Duration::from_millis(wait_ms) },
                 capacity,
                 policy,
+                ..QueueConfig::default()
             },
             Arc::new(Metrics::new()),
         ))
+    }
+
+    fn req_deadline(
+        v: f32,
+        deadline: Duration,
+    ) -> (InferenceRequest, Receiver<Result<HostTensor, ServeError>>) {
+        let (mut r, rx) = req(v);
+        r.deadline = Some(Instant::now() + deadline);
+        (r, rx)
     }
 
     fn req(v: f32) -> (InferenceRequest, Receiver<Result<HostTensor, ServeError>>) {
@@ -526,6 +603,44 @@ mod tests {
         // And late submitters get a typed refusal.
         let (r, _rx) = req(3.0);
         assert_eq!(q.submit(r), Err(ServeError::Closed));
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first() {
+        let q = queue(64, OverloadPolicy::Block, 1, 0);
+        assert_eq!(q.ordering(), QueueOrdering::Edf);
+        q.submit(req_deadline(1.0, Duration::from_secs(20)).0).unwrap();
+        q.submit(req_deadline(2.0, Duration::from_secs(5)).0).unwrap();
+        q.submit(req(3.0).0).unwrap(); // no deadline: after all deadlined
+        q.submit(req_deadline(4.0, Duration::from_secs(10)).0).unwrap();
+        let order: Vec<f32> = (0..4).map(|_| vals(&q.next_batch().unwrap())[0]).collect();
+        assert_eq!(order, vec![2.0, 4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn edf_without_deadlines_is_fifo() {
+        let q = queue(64, OverloadPolicy::Block, 4, 100);
+        for i in 0..4 {
+            q.submit(req(i as f32).0).unwrap();
+        }
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fifo_ordering_forces_arrival_order() {
+        let q = Arc::new(AdmissionQueue::new(
+            QueueConfig {
+                batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+                capacity: 64,
+                policy: OverloadPolicy::Block,
+                ordering: QueueOrdering::Fifo,
+            },
+            Arc::new(Metrics::new()),
+        ));
+        q.submit(req_deadline(1.0, Duration::from_secs(20)).0).unwrap();
+        q.submit(req_deadline(2.0, Duration::from_secs(5)).0).unwrap();
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![1.0]);
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![2.0]);
     }
 
     #[test]

@@ -221,6 +221,7 @@ mod tests {
                     },
                     capacity: 128,
                     policy: OverloadPolicy::Block,
+                    ..QueueConfig::default()
                 },
             )
             .unwrap();

@@ -93,6 +93,13 @@ impl AcceleratorServer {
 
     /// Close admission and wait for the worker to drain the queue.
     pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    /// In-place [`Self::shutdown`]: used by composite coordinators (the
+    /// sharded pipeline) that must stop stages one by one while keeping
+    /// the collection alive. Idempotent.
+    pub fn close_and_join(&mut self) {
         self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
@@ -102,10 +109,7 @@ impl AcceleratorServer {
 
 impl Drop for AcceleratorServer {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 
@@ -222,6 +226,7 @@ mod tests {
                 batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
                 capacity: 1,
                 policy: OverloadPolicy::Reject,
+                ..QueueConfig::default()
             },
         )
         .unwrap();

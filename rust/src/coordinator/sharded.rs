@@ -1,0 +1,313 @@
+//! Sharded serving: chain per-board [`AcceleratorServer`] stages into
+//! one pipeline, mirroring a [`crate::shard::ShardPlan`] deployment.
+//!
+//! Each stage is a full single-board coordinator — its own
+//! [`AdmissionQueue`], worker thread, executor, and [`Metrics`] — so
+//! per-board admission control and accounting behave exactly as in the
+//! single-FPGA path. Between consecutive stages sits a **forwarder**
+//! thread standing in for the inter-board link: it waits for stage `i`'s
+//! result and submits it to stage `i+1`, carrying the request's response
+//! channel along.
+//!
+//! ## Accounting
+//!
+//! Two layers of metrics, both reconciling exactly at quiescence:
+//!
+//! * **per stage** — each stage's own `requests == ok_frames + errors +
+//!   shed` invariant (stage `i+1`'s `requests` counts what the forwarder
+//!   submitted to it, not what entered the pipeline);
+//! * **end-to-end** — the pipeline's [`Metrics`]: a request counts into
+//!   `shed` iff refused at first-stage admission, `ok_frames` iff the
+//!   last stage produced its tensor, `errors` otherwise (any stage
+//!   failing, expiring, or refusing mid-pipeline), so
+//!   `requests == ok_frames + errors + shed` end-to-end too
+//!   (`tests/shard_integration.rs` drives this).
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{QueueConfig, ServeError};
+use crate::coordinator::server::{AcceleratorServer, ModelExecutor, ServerHandle};
+use crate::runtime::executable::HostTensor;
+
+/// Boxed executors compose into pipelines without naming their types.
+impl ModelExecutor for Box<dyn ModelExecutor> {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        (**self).execute_batch(frames)
+    }
+}
+
+/// Builder of one pipeline stage: the executor factory (run inside the
+/// stage's worker thread, like [`AcceleratorServer::spawn_with`]) plus
+/// the stage's admission policy.
+pub struct StageSpec {
+    pub factory: Box<dyn FnOnce() -> anyhow::Result<Box<dyn ModelExecutor>> + Send + 'static>,
+    pub queue: QueueConfig,
+}
+
+impl StageSpec {
+    /// A stage from any concrete executor factory with a queue config.
+    pub fn with_queue<E, F>(factory: F, queue: QueueConfig) -> Self
+    where
+        E: ModelExecutor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        Self {
+            factory: Box::new(move || factory().map(|e| Box::new(e) as Box<dyn ModelExecutor>)),
+            queue,
+        }
+    }
+
+    /// A stage with the default (generous, blocking) admission bound.
+    pub fn new<E, F>(factory: F) -> Self
+    where
+        E: ModelExecutor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        Self::with_queue(factory, QueueConfig::default())
+    }
+}
+
+/// One in-flight request travelling the stage chain: where its current
+/// stage will answer, when it entered the pipeline, and where the final
+/// answer must go.
+struct InFlight {
+    rx: Receiver<Result<HostTensor, ServeError>>,
+    entered: Instant,
+    respond: SyncSender<Result<HostTensor, ServeError>>,
+}
+
+enum FeedMsg {
+    Job(InFlight),
+    Close,
+}
+
+/// A chain of per-board accelerator servers serving one sharded network.
+pub struct ShardedPipeline {
+    stages: Vec<AcceleratorServer>,
+    forwarders: Vec<Option<JoinHandle<()>>>,
+    /// Senders into each forwarder (index i watches stage i's results).
+    feeds: Vec<mpsc::Sender<FeedMsg>>,
+    /// End-to-end metrics (per-stage metrics live on each stage).
+    pub metrics: Arc<Metrics>,
+}
+
+impl ShardedPipeline {
+    /// Spawn one server per stage spec plus the forwarder chain between
+    /// them. At least one stage is required.
+    pub fn spawn(specs: Vec<StageSpec>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "sharded pipeline needs at least one stage");
+        let metrics = Arc::new(Metrics::new());
+        let mut stages = Vec::with_capacity(specs.len());
+        for spec in specs {
+            stages.push(AcceleratorServer::spawn_with(spec.factory, spec.queue)?);
+        }
+        let count = stages.len();
+
+        // Forwarders are built back-to-front: forwarder i needs the
+        // handle of stage i+1 and the feed of forwarder i+1.
+        let mut feeds: Vec<Option<mpsc::Sender<FeedMsg>>> = (0..count).map(|_| None).collect();
+        let mut forwarders = Vec::with_capacity(count);
+        for i in (0..count).rev() {
+            let (tx, rx) = mpsc::channel::<FeedMsg>();
+            let next_stage: Option<ServerHandle> =
+                stages.get(i + 1).map(|s: &AcceleratorServer| s.handle());
+            let next_feed = feeds.get(i + 1).and_then(|f| f.clone());
+            let e2e = metrics.clone();
+            forwarders.push(Some(std::thread::spawn(move || {
+                forward_loop(rx, next_stage, next_feed, e2e);
+            })));
+            feeds[i] = Some(tx);
+        }
+        forwarders.reverse(); // index i == forwarder of stage i
+        let feeds = feeds.into_iter().map(|f| f.expect("feed built")).collect();
+        Ok(Self { stages, forwarders, feeds, metrics })
+    }
+
+    /// Number of chained stages.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stage `i`'s own metrics (admission, batching, reconciliation).
+    pub fn stage_metrics(&self, i: usize) -> &Arc<Metrics> {
+        &self.stages[i].metrics
+    }
+
+    /// Open-loop submission: admit one frame at the first stage and
+    /// return the receiver of the **final** stage's output. A refusal at
+    /// first-stage admission counts as `shed` end-to-end and surfaces
+    /// here; anything later resolves through the receiver.
+    pub fn submit_frame(
+        &self,
+        input: HostTensor,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let entered = Instant::now();
+        let (respond, final_rx) = mpsc::sync_channel(1);
+        match self.stages[0].handle().submit_frame(input) {
+            Ok(rx) => {
+                self.feeds[0]
+                    .send(FeedMsg::Job(InFlight { rx, entered, respond }))
+                    .expect("forwarder 0 alive while pipeline open");
+                Ok(final_rx)
+            }
+            Err(e) => {
+                self.metrics.record_shed();
+                Err(e)
+            }
+        }
+    }
+
+    /// Closed-loop submission: one frame through every stage.
+    pub fn infer(&self, input: HostTensor) -> Result<HostTensor, ServeError> {
+        match self.submit_frame(input)?.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Drain and stop, front to back: close stage i's admission, let its
+    /// worker finish every resident request, let forwarder i push the
+    /// results into stage i+1, then move down the chain.
+    pub fn shutdown(mut self) {
+        for i in 0..self.stages.len() {
+            // Stop the stage: admission closes, resident requests drain,
+            // so every receiver forwarder i waits on resolves.
+            self.stages[i].close_and_join();
+            // All jobs for forwarder i are enqueued by now (its only
+            // producer — the pipeline front or forwarder i-1 — is done),
+            // so Close lands after the last job.
+            let _ = self.feeds[i].send(FeedMsg::Close);
+            if let Some(handle) = self.forwarders[i].take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// The forwarder body for stage `i`: resolve each in-flight request of
+/// stage `i` and either hand it to stage `i+1` or settle it end-to-end.
+fn forward_loop(
+    rx: Receiver<FeedMsg>,
+    next_stage: Option<ServerHandle>,
+    next_feed: Option<mpsc::Sender<FeedMsg>>,
+    e2e: Arc<Metrics>,
+) {
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            FeedMsg::Job(j) => j,
+            FeedMsg::Close => break,
+        };
+        let result = match job.rx.recv() {
+            Ok(r) => r,
+            // Stage dropped the response channel mid-shutdown.
+            Err(_) => Err(ServeError::Closed),
+        };
+        match (result, &next_stage) {
+            (Ok(tensor), Some(next)) => match next.submit_frame(tensor) {
+                Ok(next_rx) => {
+                    let fwd = InFlight { rx: next_rx, entered: job.entered, respond: job.respond };
+                    if let Some(feed) = &next_feed {
+                        if feed.send(FeedMsg::Job(fwd)).is_err() {
+                            // Next forwarder gone (shutdown race): the
+                            // dropped respond channel reads as Closed.
+                            e2e.record_failure(std::time::Duration::ZERO);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Mid-pipeline refusal: an end-to-end error (the
+                    // request was already admitted at the front).
+                    e2e.record_failure(job.entered.elapsed());
+                    let _ = job.respond.send(Err(e));
+                }
+            },
+            (Ok(tensor), None) => {
+                e2e.record_success(job.entered.elapsed());
+                let _ = job.respond.send(Ok(tensor));
+            }
+            (Err(e), _) => {
+                e2e.record_failure(job.entered.elapsed());
+                let _ = job.respond.send(Err(e));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
+
+    /// Adds a constant to every element.
+    struct AddN(f32);
+    impl ModelExecutor for AddN {
+        fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            Ok(frames
+                .iter()
+                .map(|f| HostTensor {
+                    data: f.data.iter().map(|x| x + self.0).collect(),
+                    shape: f.shape.clone(),
+                })
+                .collect())
+        }
+    }
+
+    struct Failer;
+    impl ModelExecutor for Failer {
+        fn execute_batch(&self, _: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            anyhow::bail!("stage exploded")
+        }
+    }
+
+    fn quick_queue(batch: usize) -> QueueConfig {
+        QueueConfig {
+            batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
+            ..QueueConfig::default()
+        }
+    }
+
+    #[test]
+    fn three_stages_compose_in_order() {
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::with_queue(|| Ok(AddN(1.0)), quick_queue(2)),
+            StageSpec::with_queue(|| Ok(AddN(10.0)), quick_queue(2)),
+            StageSpec::with_queue(|| Ok(AddN(100.0)), quick_queue(2)),
+        ])
+        .unwrap();
+        assert_eq!(pipe.stage_count(), 3);
+        let out = pipe.infer(HostTensor::new(vec![5.0], vec![1]).unwrap()).unwrap();
+        assert_eq!(out.data, vec![116.0]);
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn stage_failure_resolves_end_to_end_as_error() {
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::new(|| Ok(AddN(1.0))),
+            StageSpec::new(|| Ok(Failer)),
+        ])
+        .unwrap();
+        match pipe.infer(HostTensor::zeros(&[1])) {
+            Err(ServeError::Execution(msg)) => assert!(msg.contains("exploded"), "{msg}"),
+            other => panic!("expected execution error, got {other:?}"),
+        }
+        assert_eq!(pipe.metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(pipe.metrics.accounted(), 1);
+        // Stage 0 succeeded, stage 1 failed — both reconcile.
+        assert_eq!(pipe.stage_metrics(0).ok_frames.load(Ordering::Relaxed), 1);
+        assert_eq!(pipe.stage_metrics(1).errors.load(Ordering::Relaxed), 1);
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        assert!(ShardedPipeline::spawn(Vec::new()).is_err());
+    }
+}

@@ -191,6 +191,47 @@ impl EvalCache {
         value
     }
 
+    /// Insert an already-computed entry (the disk-load path of
+    /// [`crate::dse::persist`]). First write wins, mirroring
+    /// [`Self::get_or_compute`]; counts neither hit nor miss. Returns
+    /// whether the entry was stored (false = key already resident).
+    pub fn insert(&self, key: CacheKey, value: Option<Arc<Candidate>>) -> bool {
+        let shard = &self.shards[key.shard()];
+        let mut guard = shard.lock().expect("cache shard poisoned");
+        let Shard { map, order } = &mut *guard;
+        if map.contains_key(&key) {
+            return false;
+        }
+        map.insert(key, value);
+        order.push_back(key);
+        if let Some(cap) = self.per_shard_cap {
+            while order.len() > cap {
+                if let Some(old) = order.pop_front() {
+                    if map.remove(&old).is_some() {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Every resident entry, in shard-then-insertion order (the
+    /// disk-save path of [`crate::dse::persist`]). Deterministic for a
+    /// deterministically-filled cache.
+    pub fn snapshot(&self) -> Vec<(CacheKey, Option<Arc<Candidate>>)> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let guard = shard.lock().expect("cache shard poisoned");
+            for key in &guard.order {
+                if let Some(v) = guard.map.get(key) {
+                    out.push((*key, v.clone()));
+                }
+            }
+        }
+        out
+    }
+
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }

@@ -14,6 +14,11 @@
 //! * [`engine`] — ties everything into the three-step DNNExplorer flow.
 //! * [`portfolio`] — N networks × M devices in one invocation over a
 //!   shared cache, returning a ranked result matrix.
+//! * [`multi`] — the multi-FPGA mode: co-optimize cut points and
+//!   per-board RAVs over a board cluster (via [`crate::shard`]) and
+//!   compare 1/2/4/…-board configurations over one cache.
+//! * [`persist`] — the cache's on-disk format (`--cache-file`):
+//!   versioned JSON with bit-exact floats and fingerprint-checked load.
 
 pub mod cache;
 pub mod emit;
@@ -21,11 +26,14 @@ pub mod engine;
 pub mod global;
 pub mod local_generic;
 pub mod local_pipeline;
+pub mod multi;
+pub mod persist;
 pub mod portfolio;
 pub mod pso;
 pub mod rav;
 
 pub use cache::EvalCache;
 pub use engine::{explore, ExplorerConfig, ExplorerResult};
+pub use multi::{compare_board_counts, explore_multi, MultiResult};
 pub use portfolio::{explore_portfolio, PortfolioResult, Scenario};
 pub use rav::Rav;

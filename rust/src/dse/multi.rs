@@ -1,0 +1,158 @@
+//! Multi-FPGA DSE: co-optimize cut points and per-board RAVs over a
+//! board cluster, and compare board counts.
+//!
+//! This is the exploration-facing wrapper around
+//! [`crate::shard::partition`]: one call answers *"given these boards,
+//! where do I cut and what does each board build?"*, and
+//! [`compare_board_counts`] answers the capacity-planning question
+//! *"what does the second (fourth, ...) board actually buy?"* by running
+//! the planner on growing prefixes of the cluster — 1, 2, 4, ... boards
+//! — over one shared [`EvalCache`], so every RAV any configuration
+//! revisits is evaluated exactly once across the whole comparison.
+
+use std::time::Instant;
+
+use crate::dnn::Network;
+use crate::dse::cache::EvalCache;
+use crate::fpga::FpgaDevice;
+use crate::shard::{partition, ShardConfig, ShardPlan};
+
+/// One board-count configuration of a comparison.
+pub struct BoardsOutcome {
+    /// Number of boards (prefix of the cluster list).
+    pub boards: usize,
+    /// `name+name+...` label of the prefix.
+    pub label: String,
+    /// `None` when no feasible partition exists at this count.
+    pub plan: Option<ShardPlan>,
+}
+
+/// Result of a board-count comparison.
+pub struct MultiResult {
+    /// Outcomes in ascending board count.
+    pub outcomes: Vec<BoardsOutcome>,
+    pub elapsed_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_len: usize,
+}
+
+impl MultiResult {
+    /// The best feasible outcome (highest end-to-end throughput).
+    pub fn best(&self) -> Option<&BoardsOutcome> {
+        self.outcomes
+            .iter()
+            .filter(|o| o.plan.is_some())
+            .max_by(|a, b| {
+                let fa = a.plan.as_ref().map(|p| p.throughput_fps).unwrap_or(0.0);
+                let fb = b.plan.as_ref().map(|p| p.throughput_fps).unwrap_or(0.0);
+                fa.partial_cmp(&fb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// The 1-board baseline plan, if feasible (speedup denominator).
+    pub fn baseline(&self) -> Option<&ShardPlan> {
+        self.outcomes
+            .iter()
+            .find(|o| o.boards == 1)
+            .and_then(|o| o.plan.as_ref())
+    }
+}
+
+/// Explore one cluster: cut-point search + per-board RAV co-optimization.
+/// Thin, cache-sharing entry point over [`partition`].
+pub fn explore_multi(
+    net: &Network,
+    devices: &[FpgaDevice],
+    cfg: &ShardConfig,
+    cache: &EvalCache,
+) -> Option<ShardPlan> {
+    partition(net, devices, cfg, cache)
+}
+
+/// The board counts a comparison sweeps: 1, 2, 4, ... capped at the
+/// cluster size, always including the full cluster.
+pub fn sweep_counts(cluster: usize) -> Vec<usize> {
+    let mut counts = Vec::new();
+    let mut c = 1;
+    while c < cluster {
+        counts.push(c);
+        c *= 2;
+    }
+    counts.push(cluster);
+    counts
+}
+
+/// Partition `net` over growing prefixes of `devices` (1/2/4/.../N
+/// boards) with a shared cache, returning the comparison matrix.
+pub fn compare_board_counts(
+    net: &Network,
+    devices: &[FpgaDevice],
+    cfg: &ShardConfig,
+    cache: &EvalCache,
+) -> MultiResult {
+    let start = Instant::now();
+    let mut outcomes = Vec::new();
+    for count in sweep_counts(devices.len()) {
+        let prefix = &devices[..count];
+        let label = prefix
+            .iter()
+            .map(|d| d.name.clone())
+            .collect::<Vec<_>>()
+            .join("+");
+        let plan = partition(net, prefix, cfg, cache);
+        outcomes.push(BoardsOutcome { boards: count, label, plan });
+    }
+    MultiResult {
+        outcomes,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_len: cache.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, Precision, TensorShape};
+    use crate::dse::pso::PsoParams;
+
+    fn quick_cfg() -> ShardConfig {
+        ShardConfig {
+            pso: PsoParams { population: 8, iterations: 5, ..PsoParams::default() },
+            ..ShardConfig::default()
+        }
+    }
+
+    #[test]
+    fn sweep_counts_powers_plus_full() {
+        assert_eq!(sweep_counts(1), vec![1]);
+        assert_eq!(sweep_counts(2), vec![1, 2]);
+        assert_eq!(sweep_counts(4), vec![1, 2, 4]);
+        assert_eq!(sweep_counts(6), vec![1, 2, 4, 6]);
+        assert_eq!(sweep_counts(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn comparison_scales_throughput_with_boards() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let cache = EvalCache::new();
+        let res = compare_board_counts(&net, &devices, &quick_cfg(), &cache);
+        assert_eq!(res.outcomes.len(), 2);
+        let one = res.outcomes[0].plan.as_ref().expect("1 board feasible");
+        let two = res.outcomes[1].plan.as_ref().expect("2 boards feasible");
+        // The acceptance bar: two boards strictly beat the single-board
+        // result for the same network (each runs roughly half the work).
+        assert!(
+            two.gops > one.gops,
+            "2 boards {} GOP/s must beat 1 board {} GOP/s",
+            two.gops,
+            one.gops
+        );
+        assert_eq!(res.best().unwrap().boards, 2);
+        assert!(res.baseline().is_some());
+        assert!(res.cache_misses > 0);
+    }
+}

@@ -1,0 +1,620 @@
+//! On-disk persistence for the [`EvalCache`]: versioned JSON, loadable
+//! across CLI runs (`--cache-file` on `explore` / `portfolio` / `shard`).
+//!
+//! Design points are pure functions of their key — scenario fingerprint
+//! (network structure + device + precision + objective) plus quantized
+//! RAV — so a cache entry computed yesterday is exactly the entry the
+//! engine would recompute today. Persisting them turns a repeated CLI
+//! invocation into pure lookups.
+//!
+//! **Bit-exactness:** every `f64` is stored as the hex encoding of its
+//! IEEE-754 bits (not a decimal rendering), so a load-after-save cache
+//! is *bit-identical* to the in-memory one — the determinism guarantees
+//! of [`crate::dse::cache`] survive the disk round-trip.
+//!
+//! **Staleness:** the file header carries a format name + version;
+//! mismatches load nothing (reported, not fatal). When the caller knows
+//! which scenarios the coming run touches, [`load_into`] drops every
+//! entry under any other fingerprint — entries from networks or devices
+//! no longer in play don't re-accumulate run over run.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::dnn::Precision;
+use crate::dse::cache::{CacheKey, EvalCache};
+use crate::dse::engine::Candidate;
+use crate::dse::local_generic::GenericPlan;
+use crate::dse::local_pipeline::PipelinePlan;
+use crate::dse::rav::Rav;
+use crate::fpga::ResourceBudget;
+use crate::perfmodel::generic::{
+    BufferStrategy, Dataflow, GenericConfig, GenericEstimate, LayerLatency,
+};
+use crate::perfmodel::pipeline::{PipelineConfig, PipelineEstimate, StageConfig, StageEstimate};
+use crate::util::json::Json;
+
+/// Magic format name in the file header.
+pub const FORMAT: &str = "dnnexplorer-evalcache";
+/// Current format version; bump on any schema change.
+pub const VERSION: u64 = 1;
+
+/// What a [`load_into`] call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadStats {
+    /// Entries inserted into the cache.
+    pub loaded: usize,
+    /// Entries dropped as stale (fingerprint not in the keep-list).
+    pub dropped: usize,
+    /// The file was a different format version; nothing was loaded.
+    pub version_mismatch: bool,
+}
+
+// --- primitive encoders -------------------------------------------------
+
+/// f64 → hex bit pattern (bit-exact round-trip).
+fn jf(v: f64) -> Json {
+    Json::s(format!("{:016x}", v.to_bits()))
+}
+
+fn ju(v: u64) -> Json {
+    Json::s(format!("{v:016x}"))
+}
+
+fn jn(v: usize) -> Json {
+    Json::n(v as f64)
+}
+
+fn field<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow::anyhow!("cache file: missing field {k:?}"))
+}
+
+fn pf(j: &Json, k: &str) -> anyhow::Result<f64> {
+    let s = field(j, k)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("cache file: field {k:?} not a bit-string"))?;
+    Ok(f64::from_bits(u64::from_str_radix(s, 16)?))
+}
+
+fn pu(j: &Json, k: &str) -> anyhow::Result<u64> {
+    let s = field(j, k)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("cache file: field {k:?} not a hex string"))?;
+    Ok(u64::from_str_radix(s, 16)?)
+}
+
+fn pn(j: &Json, k: &str) -> anyhow::Result<usize> {
+    let v = field(j, k)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("cache file: field {k:?} not a number"))?;
+    anyhow::ensure!(v >= 0.0 && v.fract() == 0.0, "cache file: {k:?} = {v} not an index");
+    Ok(v as usize)
+}
+
+fn j_precision(p: Precision) -> Json {
+    Json::n(p.bits() as f64)
+}
+
+fn p_precision(j: &Json, k: &str) -> anyhow::Result<Precision> {
+    match pn(j, k)? {
+        16 => Ok(Precision::Int16),
+        8 => Ok(Precision::Int8),
+        b => anyhow::bail!("cache file: unknown precision {b}"),
+    }
+}
+
+// --- struct encoders ----------------------------------------------------
+
+fn j_resources(r: &ResourceBudget) -> Json {
+    Json::obj(vec![
+        ("dsp", jf(r.dsp)),
+        ("bram18k", jf(r.bram18k)),
+        ("bw_gbps", jf(r.bw_gbps)),
+    ])
+}
+
+fn p_resources(j: &Json) -> anyhow::Result<ResourceBudget> {
+    Ok(ResourceBudget {
+        dsp: pf(j, "dsp")?,
+        bram18k: pf(j, "bram18k")?,
+        bw_gbps: pf(j, "bw_gbps")?,
+    })
+}
+
+fn j_rav(r: &Rav) -> Json {
+    Json::obj(vec![
+        ("sp", jn(r.sp)),
+        ("batch", jn(r.batch)),
+        ("dsp_frac", jf(r.dsp_frac)),
+        ("bram_frac", jf(r.bram_frac)),
+        ("bw_frac", jf(r.bw_frac)),
+    ])
+}
+
+fn p_rav(j: &Json) -> anyhow::Result<Rav> {
+    Ok(Rav {
+        sp: pn(j, "sp")?,
+        batch: pn(j, "batch")?,
+        dsp_frac: pf(j, "dsp_frac")?,
+        bram_frac: pf(j, "bram_frac")?,
+        bw_frac: pf(j, "bw_frac")?,
+    })
+}
+
+fn j_pipeline(p: &PipelinePlan) -> Json {
+    Json::obj(vec![
+        (
+            "stages",
+            Json::Arr(
+                p.config
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("cpf", jn(s.cpf)),
+                            ("kpf", jn(s.kpf)),
+                            ("dw", j_precision(s.dw)),
+                            ("ww", j_precision(s.ww)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("batch", jn(p.config.batch)),
+        ("freq_mhz", jf(p.config.freq_mhz)),
+        (
+            "est_stages",
+            Json::Arr(
+                p.estimate
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("compute_s", jf(s.compute_s)),
+                            ("weight_stream_s", jf(s.weight_stream_s)),
+                            ("interval_s", jf(s.interval_s)),
+                            ("resources", j_resources(&s.resources)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("throughput_fps", jf(p.estimate.throughput_fps)),
+        ("gops", jf(p.estimate.gops)),
+        ("bottleneck", jn(p.estimate.bottleneck)),
+        ("resources", j_resources(&p.estimate.resources)),
+        ("frame_latency_s", jf(p.estimate.frame_latency_s)),
+    ])
+}
+
+fn p_pipeline(j: &Json) -> anyhow::Result<PipelinePlan> {
+    let mut stages = Vec::new();
+    for s in field(j, "stages")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("cache file: pipeline stages not an array"))?
+    {
+        stages.push(StageConfig {
+            cpf: pn(s, "cpf")?,
+            kpf: pn(s, "kpf")?,
+            dw: p_precision(s, "dw")?,
+            ww: p_precision(s, "ww")?,
+        });
+    }
+    let mut est_stages = Vec::new();
+    for s in field(j, "est_stages")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("cache file: pipeline estimates not an array"))?
+    {
+        est_stages.push(StageEstimate {
+            compute_s: pf(s, "compute_s")?,
+            weight_stream_s: pf(s, "weight_stream_s")?,
+            interval_s: pf(s, "interval_s")?,
+            resources: p_resources(field(s, "resources")?)?,
+        });
+    }
+    Ok(PipelinePlan {
+        config: PipelineConfig {
+            stages,
+            batch: pn(j, "batch")?,
+            freq_mhz: pf(j, "freq_mhz")?,
+        },
+        estimate: PipelineEstimate {
+            stages: est_stages,
+            throughput_fps: pf(j, "throughput_fps")?,
+            gops: pf(j, "gops")?,
+            bottleneck: pn(j, "bottleneck")?,
+            resources: p_resources(field(j, "resources")?)?,
+            frame_latency_s: pf(j, "frame_latency_s")?,
+        },
+    })
+}
+
+fn j_generic(g: &GenericPlan) -> Json {
+    let c = &g.config;
+    Json::obj(vec![
+        ("cpf", jn(c.cpf)),
+        ("kpf", jn(c.kpf)),
+        ("dw", j_precision(c.dw)),
+        ("ww", j_precision(c.ww)),
+        (
+            "strategy",
+            Json::s(match c.strategy {
+                BufferStrategy::FmAccumInBram => "fm_accum",
+                BufferStrategy::AllInBram => "all",
+            }),
+        ),
+        ("freq_mhz", jf(c.freq_mhz)),
+        ("cap_fm_bits", jf(c.cap_fm_bits)),
+        ("cap_accum_bits", jf(c.cap_accum_bits)),
+        ("cap_w_bits", jf(c.cap_w_bits)),
+        (
+            "layers",
+            Json::Arr(
+                g.estimate
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("comp_s", jf(l.comp_s)),
+                            ("w_s", jf(l.w_s)),
+                            ("ifm_s", jf(l.ifm_s)),
+                            ("ofm_s", jf(l.ofm_s)),
+                            ("g_fm", jf(l.g_fm)),
+                            ("g_w", jf(l.g_w)),
+                            (
+                                "dataflow",
+                                Json::s(match l.dataflow {
+                                    Dataflow::InputStationary => "is",
+                                    Dataflow::WeightStationary => "ws",
+                                }),
+                            ),
+                            ("total_s", jf(l.total_s)),
+                            ("fm_resident", Json::Bool(l.fm_resident)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("period_s", jf(g.estimate.period_s)),
+        ("throughput_fps", jf(g.estimate.throughput_fps)),
+        ("gops", jf(g.estimate.gops)),
+        ("resources", j_resources(&g.estimate.resources)),
+    ])
+}
+
+fn p_generic(j: &Json) -> anyhow::Result<GenericPlan> {
+    let strategy = match field(j, "strategy")?.as_str() {
+        Some("fm_accum") => BufferStrategy::FmAccumInBram,
+        Some("all") => BufferStrategy::AllInBram,
+        other => anyhow::bail!("cache file: unknown buffer strategy {other:?}"),
+    };
+    let dw = p_precision(j, "dw")?;
+    let ww = p_precision(j, "ww")?;
+    let mut layers = Vec::new();
+    for l in field(j, "layers")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("cache file: generic layers not an array"))?
+    {
+        let dataflow = match field(l, "dataflow")?.as_str() {
+            Some("is") => Dataflow::InputStationary,
+            Some("ws") => Dataflow::WeightStationary,
+            other => anyhow::bail!("cache file: unknown dataflow {other:?}"),
+        };
+        layers.push(LayerLatency {
+            comp_s: pf(l, "comp_s")?,
+            w_s: pf(l, "w_s")?,
+            ifm_s: pf(l, "ifm_s")?,
+            ofm_s: pf(l, "ofm_s")?,
+            g_fm: pf(l, "g_fm")?,
+            g_w: pf(l, "g_w")?,
+            dataflow,
+            total_s: pf(l, "total_s")?,
+            fm_resident: field(l, "fm_resident")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("cache file: fm_resident not a bool"))?,
+        });
+    }
+    Ok(GenericPlan {
+        config: GenericConfig {
+            cpf: pn(j, "cpf")?,
+            kpf: pn(j, "kpf")?,
+            dw,
+            ww,
+            strategy,
+            freq_mhz: pf(j, "freq_mhz")?,
+            cap_fm_bits: pf(j, "cap_fm_bits")?,
+            cap_accum_bits: pf(j, "cap_accum_bits")?,
+            cap_w_bits: pf(j, "cap_w_bits")?,
+        },
+        estimate: GenericEstimate {
+            layers,
+            period_s: pf(j, "period_s")?,
+            throughput_fps: pf(j, "throughput_fps")?,
+            gops: pf(j, "gops")?,
+            resources: p_resources(field(j, "resources")?)?,
+        },
+    })
+}
+
+fn j_candidate(c: &Candidate) -> Json {
+    Json::obj(vec![
+        ("rav", j_rav(&c.rav)),
+        (
+            "pipeline",
+            c.pipeline.as_ref().map(j_pipeline).unwrap_or(Json::Null),
+        ),
+        ("generic", c.generic.as_ref().map(j_generic).unwrap_or(Json::Null)),
+        ("throughput_fps", jf(c.throughput_fps)),
+        ("gops", jf(c.gops)),
+        ("dsp_used", jf(c.dsp_used)),
+        ("bram_used", jf(c.bram_used)),
+        ("dsp_efficiency", jf(c.dsp_efficiency)),
+        ("frame_latency_s", jf(c.frame_latency_s)),
+    ])
+}
+
+fn p_candidate(j: &Json) -> anyhow::Result<Candidate> {
+    let pipeline = match field(j, "pipeline")? {
+        Json::Null => None,
+        p => Some(p_pipeline(p)?),
+    };
+    let generic = match field(j, "generic")? {
+        Json::Null => None,
+        g => Some(p_generic(g)?),
+    };
+    Ok(Candidate {
+        rav: p_rav(field(j, "rav")?)?,
+        pipeline,
+        generic,
+        throughput_fps: pf(j, "throughput_fps")?,
+        gops: pf(j, "gops")?,
+        dsp_used: pf(j, "dsp_used")?,
+        bram_used: pf(j, "bram_used")?,
+        dsp_efficiency: pf(j, "dsp_efficiency")?,
+        frame_latency_s: pf(j, "frame_latency_s")?,
+    })
+}
+
+// --- file format --------------------------------------------------------
+
+/// Serialize the cache to its JSON document.
+pub fn to_json(cache: &EvalCache) -> Json {
+    let entries: Vec<Json> = cache
+        .snapshot()
+        .into_iter()
+        .map(|(key, value)| {
+            Json::obj(vec![
+                ("scenario", ju(key.scenario)),
+                ("sp", jn(key.sp as usize)),
+                ("batch", jn(key.batch as usize)),
+                ("dsp_q", jn(key.dsp_q as usize)),
+                ("bram_q", jn(key.bram_q as usize)),
+                ("bw_q", jn(key.bw_q as usize)),
+                (
+                    "candidate",
+                    value.as_ref().map(|c| j_candidate(c)).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("format", Json::s(FORMAT)),
+        ("version", Json::n(VERSION as f64)),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Write the cache to `path`; returns the number of entries saved.
+pub fn save(cache: &EvalCache, path: &Path) -> anyhow::Result<usize> {
+    let doc = to_json(cache);
+    let count = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .map(|a| a.len())
+        .unwrap_or(0);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.render())?;
+    Ok(count)
+}
+
+/// Load entries from `path` into `cache`.
+///
+/// * Missing file → empty stats (a first run is not an error).
+/// * Wrong format/version → nothing loaded, `version_mismatch` set.
+/// * `keep_scenarios = Some(list)` → entries under any other scenario
+///   fingerprint are dropped as stale; `None` keeps everything.
+///
+/// A corrupt file is a hard error — better loud than silently warming
+/// from garbage.
+pub fn load_into(
+    cache: &EvalCache,
+    path: &Path,
+    keep_scenarios: Option<&[u64]>,
+) -> anyhow::Result<LoadStats> {
+    let mut stats = LoadStats::default();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(stats),
+        Err(e) => return Err(e.into()),
+    };
+    let doc = Json::parse(&text)?;
+    let format_ok = doc.get("format").and_then(Json::as_str) == Some(FORMAT);
+    let version_ok = doc.get("version").and_then(Json::as_f64) == Some(VERSION as f64);
+    if !format_ok || !version_ok {
+        stats.version_mismatch = true;
+        return Ok(stats);
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("cache file: no entries array"))?;
+    for e in entries {
+        let scenario = pu(e, "scenario")?;
+        if let Some(keep) = keep_scenarios {
+            if !keep.contains(&scenario) {
+                stats.dropped += 1;
+                continue;
+            }
+        }
+        let key = CacheKey {
+            scenario,
+            sp: pn(e, "sp")? as u32,
+            batch: pn(e, "batch")? as u32,
+            dsp_q: pn(e, "dsp_q")? as u32,
+            bram_q: pn(e, "bram_q")? as u32,
+            bw_q: pn(e, "bw_q")? as u32,
+        };
+        let value = match field(e, "candidate")? {
+            Json::Null => None,
+            c => Some(Arc::new(p_candidate(c)?)),
+        };
+        if cache.insert(key, value) {
+            stats.loaded += 1;
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, TensorShape};
+    use crate::dse::cache::{self, CacheKey};
+    use crate::dse::engine::{self, ExplorerConfig};
+    use crate::dse::pso::PsoParams;
+    use crate::fpga::FpgaDevice;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dnnx-persist-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn warm_cache() -> (EvalCache, u64, crate::dnn::Network, ExplorerConfig) {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let mut cfg = ExplorerConfig::new(FpgaDevice::ku115());
+        cfg.pso = PsoParams { population: 6, iterations: 3, ..PsoParams::default() };
+        let cache = EvalCache::new();
+        engine::explore_shared(&net, &cfg, &cache).expect("explore");
+        let scen = cache::scenario_fingerprint(&net, &cfg);
+        (cache, scen, net, cfg)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let (cache, scen, net, cfg) = warm_cache();
+        let path = tmpfile("roundtrip");
+        let saved = save(&cache, &path).expect("save");
+        assert_eq!(saved, cache.len());
+        assert!(saved > 0);
+
+        let loaded = EvalCache::new();
+        let stats = load_into(&loaded, &path, Some(&[scen])).expect("load");
+        assert_eq!(stats.loaded, saved);
+        assert_eq!(stats.dropped, 0);
+        assert!(!stats.version_mismatch);
+
+        // Every entry comes back bit-identical, feasibility included.
+        let a = cache.snapshot();
+        for (key, val) in &a {
+            let got = loaded
+                .snapshot()
+                .into_iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .expect("key survived");
+            match (val, &got) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.rav, y.rav);
+                    assert_eq!(x.gops.to_bits(), y.gops.to_bits());
+                    assert_eq!(x.throughput_fps.to_bits(), y.throughput_fps.to_bits());
+                    assert_eq!(x.frame_latency_s.to_bits(), y.frame_latency_s.to_bits());
+                    assert_eq!(x.pipeline.is_some(), y.pipeline.is_some());
+                    assert_eq!(x.generic.is_some(), y.generic.is_some());
+                    if let (Some(p), Some(q)) = (&x.pipeline, &y.pipeline) {
+                        assert_eq!(p.config.stages.len(), q.config.stages.len());
+                        assert_eq!(
+                            p.estimate.throughput_fps.to_bits(),
+                            q.estimate.throughput_fps.to_bits()
+                        );
+                    }
+                    if let (Some(p), Some(q)) = (&x.generic, &y.generic) {
+                        assert_eq!(p.config.cpf, q.config.cpf);
+                        assert_eq!(p.estimate.period_s.to_bits(), q.estimate.period_s.to_bits());
+                    }
+                }
+                _ => panic!("feasibility flipped across the round-trip"),
+            }
+        }
+
+        // A warm re-exploration against the loaded cache is pure lookups
+        // and lands on the bit-identical best.
+        let fresh = engine::explore_shared(&net, &cfg, &loaded).expect("warm explore");
+        let cold = engine::explore_shared(&net, &cfg, &EvalCache::new()).expect("cold explore");
+        assert_eq!(fresh.best.rav, cold.best.rav);
+        assert_eq!(fresh.best.gops.to_bits(), cold.best.gops.to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_scenarios_are_dropped() {
+        let (cache, scen, _net, _cfg) = warm_cache();
+        let path = tmpfile("stale");
+        let saved = save(&cache, &path).expect("save");
+        let loaded = EvalCache::new();
+        // Keep-list without our fingerprint: everything is stale.
+        let stats = load_into(&loaded, &path, Some(&[scen ^ 1])).expect("load");
+        assert_eq!(stats.loaded, 0);
+        assert_eq!(stats.dropped, saved);
+        assert!(loaded.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_empty_and_version_mismatch_loads_nothing() {
+        let loaded = EvalCache::new();
+        let stats =
+            load_into(&loaded, Path::new("/nonexistent/dnnx-cache.json"), None).expect("load");
+        assert_eq!(stats, LoadStats::default());
+
+        let path = tmpfile("version");
+        std::fs::write(
+            &path,
+            r#"{"format":"dnnexplorer-evalcache","version":999,"entries":[]}"#,
+        )
+        .unwrap();
+        let stats = load_into(&loaded, &path, None).expect("load");
+        assert!(stats.version_mismatch);
+        assert_eq!(stats.loaded, 0);
+        // Corrupt JSON is a hard error.
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_into(&loaded, &path, None).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn negative_entries_survive() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 2, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }.quantized();
+        cache.get_or_compute(CacheKey::new(42, &rav), || None);
+        let path = tmpfile("negative");
+        assert_eq!(save(&cache, &path).unwrap(), 1);
+        let loaded = EvalCache::new();
+        let stats = load_into(&loaded, &path, Some(&[42])).unwrap();
+        assert_eq!(stats.loaded, 1);
+        // The negative entry answers without recomputing.
+        let mut calls = 0;
+        let v = loaded.get_or_compute(CacheKey::new(42, &rav), || {
+            calls += 1;
+            None
+        });
+        assert!(v.is_none());
+        assert_eq!(calls, 0, "negative entry must be served from disk");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -76,6 +76,36 @@ impl FpgaDevice {
         })
     }
 
+    /// Parse a comma-separated device-cluster spec into a board list.
+    ///
+    /// Each element is a catalogue name with an optional `xN` multiplier
+    /// (`zcu102x2` = two ZCU102 boards), so heterogeneous clusters read
+    /// naturally: `"zcu102x2,ku115"` → `[ZCU102, ZCU102, KU115]`.
+    pub fn parse_list(spec: &str) -> anyhow::Result<Vec<FpgaDevice>> {
+        let mut out = Vec::new();
+        for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let lower = raw.to_ascii_lowercase();
+            let (name, count) = match lower.rsplit_once('x') {
+                Some((head, tail))
+                    if !head.is_empty()
+                        && !tail.is_empty()
+                        && tail.chars().all(|c| c.is_ascii_digit()) =>
+                {
+                    (head.to_string(), tail.parse::<usize>()?)
+                }
+                _ => (lower.clone(), 1),
+            };
+            anyhow::ensure!(count >= 1, "device multiplier must be >= 1 in {raw:?}");
+            let dev = Self::by_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown device {name:?} in {spec:?}"))?;
+            for _ in 0..count {
+                out.push(dev.clone());
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "empty device list {spec:?}");
+        Ok(out)
+    }
+
     /// Peak GOP/s at a given α (MACs/DSP/cycle): `α · DSP · FREQ`.
     pub fn peak_gops(&self, alpha: f64) -> f64 {
         alpha * self.dsp as f64 * self.freq_mhz / 1e3
@@ -115,5 +145,21 @@ mod tests {
     fn bram_bits_scale() {
         let d = FpgaDevice::zc706();
         assert_eq!(d.bram_bits(), 1090.0 * 18.0 * 1024.0);
+    }
+
+    #[test]
+    fn parse_list_expands_multipliers() {
+        let devs = FpgaDevice::parse_list("zcu102x2, KU115").unwrap();
+        assert_eq!(devs.len(), 3);
+        assert_eq!(devs[0].name, "ZCU102");
+        assert_eq!(devs[1].name, "ZCU102");
+        assert_eq!(devs[2].name, "KU115");
+        // Plain names still work, including the one ending in a digit+letter.
+        let solo = FpgaDevice::parse_list("vu9p").unwrap();
+        assert_eq!(solo.len(), 1);
+        assert_eq!(solo[0].name, "VU9P");
+        assert!(FpgaDevice::parse_list("nope").is_err());
+        assert!(FpgaDevice::parse_list("").is_err());
+        assert!(FpgaDevice::parse_list("zcu102x0").is_err());
     }
 }

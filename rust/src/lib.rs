@@ -16,11 +16,19 @@
 //!   over the Resource Allocation Vector (Algorithm 1) plus the CTC-based
 //!   and balance-oriented local optimizers (Algorithms 2–3). Swarm
 //!   fitness evaluates in parallel with deterministic (bit-identical)
-//!   results at any thread count, design points are memoized in
-//!   [`dse::cache`] (keyed on the quantized RAV plus a fingerprint of
-//!   network structure, device, precision, and objective), and
-//!   [`dse::portfolio`] explores N networks × M devices in one
-//!   invocation over a shared cache.
+//!   results at any thread count and schedule (chunked or work-stealing
+//!   [`util::parallel`]), design points are memoized in [`dse::cache`]
+//!   (keyed on the quantized RAV plus a fingerprint of network
+//!   structure, device, precision, and objective) with an on-disk format
+//!   in [`dse::persist`] (`--cache-file`), [`dse::portfolio`] explores
+//!   N networks × M devices in one invocation over a shared cache, and
+//!   [`dse::multi`] co-optimizes cut points + per-board RAVs over a
+//!   board cluster.
+//! * [`shard`] — the multi-FPGA subsystem: partition one network into
+//!   contiguous per-board pipeline stages (DP cut-point planner), charge
+//!   the activation tensor crossing each cut against an inter-board link
+//!   model ([`perfmodel::link`]), and report end-to-end throughput/
+//!   latency (`dnnexplorer shard`).
 //! * [`baselines`] — reimplementations of the paper's comparators:
 //!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
 //!   Xilinx-DPU-like fixed IP model.
@@ -32,10 +40,14 @@
 //!   explored accelerator configuration over batched inference
 //!   requests. All admission goes through a bounded, deadline-aware
 //!   [`coordinator::queue::AdmissionQueue`] shared by the single-worker
-//!   server and the multi-worker router, with pluggable overload
-//!   policies (block / reject / shed-oldest), typed
-//!   [`coordinator::ServeError`] rejections, and lock-free metrics that
-//!   reconcile exactly (`requests == ok_frames + errors + shed`).
+//!   server, the multi-worker router, and the per-stage servers of the
+//!   sharded pipeline ([`coordinator::ShardedPipeline`] chains one
+//!   server per shard stage with per-stage *and* end-to-end metrics),
+//!   with pluggable overload policies (block / reject / shed-oldest),
+//!   earliest-deadline-first batch ordering when deadlines are present
+//!   ([`coordinator::QueueOrdering`]), typed [`coordinator::ServeError`]
+//!   rejections, and lock-free metrics that reconcile exactly
+//!   (`requests == ok_frames + errors + shed`).
 //!   Batch fill waits on a condvar with the queue lock released, so one
 //!   filling worker can never convoy the rest. `dnnexplorer serve-bench`
 //!   and `examples/serve_overload.rs` drive the path at 2x capacity.
@@ -51,6 +63,7 @@ pub mod fpga;
 pub mod perfmodel;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod util;
 
@@ -58,6 +71,7 @@ pub use dnn::graph::Network;
 pub use dse::engine::{ExplorerConfig, ExplorerResult};
 pub use dse::portfolio::{explore_portfolio, PortfolioResult, Scenario};
 pub use fpga::device::FpgaDevice;
+pub use shard::{ShardConfig, ShardPlan};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

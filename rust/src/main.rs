@@ -18,10 +18,17 @@ dnnexplorer — DNNExplorer (ICCAD'20) reproduction
 USAGE:
   dnnexplorer explore [--network N] [--height H] [--width W] [--device D]
                       [--bits B] [--batch B|0] [--config FILE] [--threads T|0]
-                      [--population P] [--iterations I] [--seed S] [--json]
+                      [--population P] [--iterations I] [--seed S]
+                      [--cache-file F] [--json]
   dnnexplorer portfolio [--networks A,B,C] [--devices D1,D2] [--height H]
                       [--width W] [--bits B] [--batch B|0] [--threads T|0]
-                      [--population P] [--iterations I] [--seed S] [--json]
+                      [--population P] [--iterations I] [--seed S]
+                      [--cache-file F] [--json]
+  dnnexplorer shard   [--network N] [--devices D1,D2 | DxN] [--height H]
+                      [--width W] [--bits B] [--batch B|0] [--threads T|0]
+                      [--population P] [--iterations I] [--seed S]
+                      [--link-gbps G] [--link-latency-us U]
+                      [--cache-file F] [--json]   # multi-FPGA sharding
   dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
   dnnexplorer report [--csv DIR] <fig1|fig2a|fig2b|table1|fig7|fig8|fig9|fig10|fig11|table3|table4|all> [--full]
   dnnexplorer emit    [explore flags] [--out FILE]     # optimization-file JSON
@@ -35,7 +42,7 @@ USAGE:
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
           googlenet inceptionv3 squeezenet mobilenet mobilenetv2
-Devices:  ZC706 KU115 VU9P ZCU102";
+Devices:  ZC706 KU115 VU9P ZCU102  (shard accepts zcu102x2-style multipliers)";
 
 /// Parsed flags: positional args + `--key value` / bare `--flag` pairs.
 struct Args {
@@ -96,6 +103,7 @@ fn main() {
     let result = match cmd.as_str() {
         "explore" => cmd_explore(rest),
         "portfolio" => cmd_portfolio(rest),
+        "shard" => cmd_shard(rest),
         "analyze" => cmd_analyze(rest),
         "report" => cmd_report(rest),
         "sweep" => cmd_sweep(rest),
@@ -111,6 +119,49 @@ fn main() {
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Warm `cache` from `--cache-file` (if given): entries outside
+/// `keep_scenarios` (when known) are dropped as stale; a wrong-version
+/// or corrupt file is reported and treated as empty, never fatal.
+fn cache_file_load(
+    args: &Args,
+    cache: &dnnexplorer::dse::EvalCache,
+    keep_scenarios: Option<&[u64]>,
+) -> Option<PathBuf> {
+    use dnnexplorer::dse::persist;
+    let path = PathBuf::from(args.get("cache-file")?);
+    match persist::load_into(cache, &path, keep_scenarios) {
+        Ok(stats) if stats.version_mismatch => {
+            eprintln!(
+                "cache-file: {} has a different format version; starting cold",
+                path.display()
+            );
+        }
+        Ok(stats) => {
+            eprintln!(
+                "cache-file: loaded {} entries from {} ({} stale dropped)",
+                stats.loaded,
+                path.display(),
+                stats.dropped
+            );
+        }
+        Err(e) => {
+            eprintln!("cache-file: could not load {} ({e:#}); starting cold", path.display());
+        }
+    }
+    Some(path)
+}
+
+/// Persist `cache` back to the `--cache-file` path, if one was given.
+fn cache_file_save(path: Option<PathBuf>, cache: &dnnexplorer::dse::EvalCache) {
+    use dnnexplorer::dse::persist;
+    if let Some(path) = path {
+        match persist::save(cache, &path) {
+            Ok(n) => eprintln!("cache-file: saved {} entries to {}", n, path.display()),
+            Err(e) => eprintln!("cache-file: could not save {} ({e:#})", path.display()),
+        }
     }
 }
 
@@ -139,8 +190,12 @@ fn cmd_explore(argv: &[String]) -> anyhow::Result<()> {
 
     let net = cfg.resolve_network()?;
     let ex = cfg.explorer()?;
-    let res = engine::explore(&net, &ex)
+    let cache = dnnexplorer::dse::EvalCache::new();
+    let scenario = dnnexplorer::dse::cache::scenario_fingerprint(&net, &ex);
+    let cache_path = cache_file_load(&args, &cache, Some(&[scenario]));
+    let res = engine::explore_shared(&net, &ex, &cache)
         .ok_or_else(|| anyhow::anyhow!("no feasible design found"))?;
+    cache_file_save(cache_path, &cache);
     let b = &res.best;
     if args.has("json") {
         let j = Json::obj(vec![
@@ -225,7 +280,14 @@ fn cmd_portfolio(argv: &[String]) -> anyhow::Result<()> {
     anyhow::ensure!(!nets.is_empty() && !devs.is_empty(), "empty portfolio");
 
     let scenarios = portfolio::cross(&nets, &devs, &base.explorer()?);
-    let result = portfolio::explore_portfolio(&scenarios, threads);
+    let cache = dnnexplorer::dse::EvalCache::new();
+    let fingerprints: Vec<u64> = scenarios
+        .iter()
+        .map(|s| dnnexplorer::dse::cache::scenario_fingerprint(&s.network, &s.config))
+        .collect();
+    let cache_path = cache_file_load(&args, &cache, Some(&fingerprints));
+    let result = portfolio::explore_portfolio_shared(&scenarios, threads, &cache);
+    cache_file_save(cache_path, &cache);
 
     if args.has("json") {
         let rows: Vec<Json> = result
@@ -268,6 +330,134 @@ fn cmd_portfolio(argv: &[String]) -> anyhow::Result<()> {
             threads
         );
         print!("{}", result.render_table());
+    }
+    Ok(())
+}
+
+/// Multi-FPGA sharding: partition one network across a board cluster,
+/// co-optimizing cut points and per-board RAVs, and report the
+/// 1/2/4/…-board comparison plus the full-cluster plan.
+fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::dse::multi;
+    use dnnexplorer::dse::pso::PsoParams;
+    use dnnexplorer::report::tables;
+    use dnnexplorer::shard::{LinkModel, ShardConfig};
+    use dnnexplorer::FpgaDevice;
+
+    let args = Args::parse(argv)?;
+    let network = args.get("network").unwrap_or("vgg16_conv").to_string();
+    let height = args.get_usize("height", 224)?;
+    let width = args.get_usize("width", 224)?;
+    let bits = args.get_usize("bits", 16)?;
+    let batch = args.get_usize("batch", 1)?;
+    let p = match bits {
+        16 => dnnexplorer::dnn::Precision::Int16,
+        8 => dnnexplorer::dnn::Precision::Int8,
+        b => anyhow::bail!("unsupported bit width {b} (use 8 or 16)"),
+    };
+    let net = dnnexplorer::dnn::zoo::by_name(&network, height, width, p)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let devices = FpgaDevice::parse_list(args.get("devices").unwrap_or("zcu102x2"))?;
+    let link_gbps: f64 = match args.get("link-gbps") {
+        Some(s) => s.parse()?,
+        None => LinkModel::default().bandwidth_gbps,
+    };
+    let link_latency_us: f64 = match args.get("link-latency-us") {
+        Some(s) => s.parse()?,
+        None => LinkModel::default().latency_s * 1e6,
+    };
+    anyhow::ensure!(link_gbps > 0.0, "--link-gbps must be positive");
+    anyhow::ensure!(link_latency_us >= 0.0, "--link-latency-us must be non-negative");
+    let threads = {
+        let t = args.get_usize("threads", 0)?;
+        if t == 0 { dnnexplorer::util::parallel::default_threads() } else { t }
+    };
+    let cfg = ShardConfig {
+        link: LinkModel::new(link_gbps, link_latency_us * 1e-6),
+        dw: p,
+        ww: p,
+        fixed_batch: if batch == 0 { None } else { Some(batch) },
+        pso: PsoParams {
+            population: args.get_usize("population", 16)?,
+            iterations: args.get_usize("iterations", 12)?,
+            ..PsoParams::default()
+        },
+        seed: match args.get("seed") {
+            Some(s) => s.parse()?,
+            None => 0xD44E,
+        },
+        threads,
+        ..ShardConfig::default()
+    };
+
+    let cache = dnnexplorer::dse::EvalCache::new();
+    // Sub-network fingerprints are produced inside the planner, so the
+    // keep-list is open: everything in the file stays loadable.
+    let cache_path = cache_file_load(&args, &cache, None);
+    let result = multi::compare_board_counts(&net, &devices, &cfg, &cache);
+    cache_file_save(cache_path, &cache);
+
+    if args.has("json") {
+        let rows: Vec<Json> = result
+            .outcomes
+            .iter()
+            .map(|o| match &o.plan {
+                Some(plan) => Json::obj(vec![
+                    ("boards", Json::n(o.boards as f64)),
+                    ("devices", Json::s(o.label.clone())),
+                    ("gops", Json::n(plan.gops)),
+                    ("fps", Json::n(plan.throughput_fps)),
+                    ("latency_s", Json::n(plan.latency_s)),
+                    ("bottleneck", Json::s(plan.bottleneck())),
+                    (
+                        "stages",
+                        Json::Arr(
+                            plan.stages
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("board", Json::n(s.board as f64)),
+                                        ("device", Json::s(s.device.name.clone())),
+                                        ("start", Json::n(s.layer_range.0 as f64)),
+                                        ("end", Json::n(s.layer_range.1 as f64)),
+                                        ("fps", Json::n(s.candidate.throughput_fps)),
+                                        ("gops", Json::n(s.candidate.gops)),
+                                        ("sp", Json::n(s.candidate.rav.sp as f64)),
+                                        ("dsp", Json::n(s.candidate.dsp_used)),
+                                        ("bram", Json::n(s.candidate.bram_used)),
+                                        ("egress_bytes", Json::n(s.egress_bytes)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+                None => Json::obj(vec![
+                    ("boards", Json::n(o.boards as f64)),
+                    ("devices", Json::s(o.label.clone())),
+                    ("error", Json::s("infeasible")),
+                ]),
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("network", Json::s(net.name.clone())),
+            ("link_gbps", Json::n(link_gbps)),
+            ("link_latency_us", Json::n(link_latency_us)),
+            ("configs", Json::Arr(rows)),
+            ("elapsed_s", Json::n(result.elapsed_s)),
+            ("cache_hits", Json::n(result.cache_hits as f64)),
+            ("cache_misses", Json::n(result.cache_misses as f64)),
+        ]);
+        println!("{}", j.render());
+    } else {
+        println!("{}", tables::shard_comparison(&net.name, &result).render());
+        if let Some(plan) = result.outcomes.last().and_then(|o| o.plan.as_ref()) {
+            print!("{}", plan.render());
+        }
+        println!(
+            "cache: {} points, {} hits / {} misses | {:.2}s wall",
+            result.cache_len, result.cache_hits, result.cache_misses, result.elapsed_s
+        );
     }
     Ok(())
 }
@@ -481,6 +671,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             },
             capacity,
             policy,
+            ..QueueConfig::default()
         },
     )?;
     let t = std::time::Instant::now();
@@ -543,6 +734,7 @@ fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
             batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
             capacity,
             policy,
+            ..QueueConfig::default()
         },
     )?;
 

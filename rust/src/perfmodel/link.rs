@@ -1,0 +1,101 @@
+//! Inter-board link model: the transfer cost a sharded pipeline pays for
+//! the activation tensor crossing each cut (see [`crate::shard`]).
+//!
+//! The model is the standard latency/bandwidth line: moving `B` bytes
+//! over a link costs `latency_s + B / bandwidth`. For a *pipelined*
+//! stream of frames the fixed latency overlaps with compute, so the
+//! link's throughput ceiling is set by the serialization term alone
+//! (`bandwidth / B` frames per second), while the end-to-end latency of
+//! a single frame pays the full hop cost. Both views are exposed and the
+//! shard planner charges each where it belongs: serialization bounds the
+//! pipeline's steady-state rate, the hop cost adds to frame latency.
+
+/// A point-to-point inter-board link (direction-less; each cut in a
+/// shard plan crosses one such link).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Sustained payload bandwidth in GB/s.
+    pub bandwidth_gbps: f64,
+    /// Fixed per-transfer latency in seconds (serdes + protocol + switch).
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    pub fn new(bandwidth_gbps: f64, latency_s: f64) -> Self {
+        Self { bandwidth_gbps, latency_s }
+    }
+
+    /// Bandwidth in bytes/second.
+    pub fn bandwidth_bytes(&self) -> f64 {
+        self.bandwidth_gbps * 1e9
+    }
+
+    /// Time to move one `bytes`-sized tensor across the link (one hop):
+    /// fixed latency plus serialization.
+    pub fn transfer_s(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency_s + bytes / self.bandwidth_bytes().max(1.0)
+    }
+
+    /// Steady-state frame rate the link sustains for `bytes` per frame
+    /// (pipelined transfers: only serialization limits the rate).
+    /// Infinite when the cut carries no data.
+    pub fn throughput_fps(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.bandwidth_bytes().max(1.0) / bytes
+    }
+}
+
+impl Default for LinkModel {
+    /// A 100 GbE-class board-to-board link: ~12 GB/s sustained payload,
+    /// 2 µs fixed hop latency — the common deployment for FPGA
+    /// SmartNIC/accelerator clusters.
+    fn default() -> Self {
+        Self { bandwidth_gbps: 12.0, latency_s: 2e-6 }
+    }
+}
+
+impl std::fmt::Display for LinkModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:.1} GB/s + {:.1}us/hop",
+            self.bandwidth_gbps,
+            self.latency_s * 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_is_latency_plus_serialization() {
+        let l = LinkModel::new(10.0, 5e-6);
+        let t = l.transfer_s(1e6); // 1 MB at 10 GB/s = 100us + 5us
+        assert!((t - 105e-6).abs() < 1e-9, "{t}");
+        assert_eq!(l.transfer_s(0.0), 0.0);
+    }
+
+    #[test]
+    fn pipelined_rate_ignores_fixed_latency() {
+        let fast = LinkModel::new(10.0, 1e-3); // terrible latency
+        let slow = LinkModel::new(10.0, 1e-9);
+        assert_eq!(fast.throughput_fps(1e6), slow.throughput_fps(1e6));
+        assert!((fast.throughput_fps(1e6) - 1e4).abs() < 1e-6);
+        assert!(fast.throughput_fps(0.0).is_infinite());
+    }
+
+    #[test]
+    fn faster_link_moves_data_faster() {
+        let a = LinkModel::new(5.0, 1e-6);
+        let b = LinkModel::new(50.0, 1e-6);
+        assert!(b.transfer_s(1e7) < a.transfer_s(1e7));
+        assert!(b.throughput_fps(1e7) > a.throughput_fps(1e7));
+    }
+}

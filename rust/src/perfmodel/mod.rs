@@ -7,11 +7,16 @@
 //!   plus a resource model for DSP / BRAM / bandwidth usage).
 //! * [`generic`] — the reusable MAC-array structure (paper Eq. 5–13, both
 //!   on-chip buffer allocation strategies and both IS/WS dataflows).
+//! * [`link`] — the inter-board link model extending the paradigm across
+//!   devices: a latency/bandwidth line charging the activation tensor
+//!   that crosses each cut of a [`crate::shard`] plan.
 //!
-//! Both produce latency/throughput estimates in **seconds / frames-per-
-//! second / GOP/s** and resource usage as a [`crate::fpga::ResourceBudget`].
+//! All produce latency/throughput estimates in **seconds / frames-per-
+//! second / GOP/s**; the structures report resource usage as a
+//! [`crate::fpga::ResourceBudget`].
 
 pub mod generic;
+pub mod link;
 pub mod pipeline;
 
 use crate::dnn::Precision;

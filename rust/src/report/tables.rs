@@ -114,6 +114,63 @@ pub fn table4_batch_exploration(effort: Effort) -> RowSet {
     out
 }
 
+/// Sharding comparison table: 1/2/4/… boards of one cluster against the
+/// single-board baseline (the `dnnexplorer shard` report).
+pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult) -> RowSet {
+    let mut out = RowSet::new(
+        "shard",
+        &format!("Multi-FPGA sharding of {net_name} (speedup vs 1 board)"),
+        &[
+            "Boards",
+            "Devices",
+            "GOP/s",
+            "Img./s",
+            "Latency (ms)",
+            "Speedup",
+            "Bottleneck",
+            "Cuts",
+        ],
+    );
+    let base_fps = result.baseline().map(|p| p.throughput_fps);
+    for o in &result.outcomes {
+        match &o.plan {
+            Some(p) => {
+                let speedup = base_fps
+                    .filter(|b| *b > 0.0)
+                    .map(|b| format!("{:.2}x", p.throughput_fps / b))
+                    .unwrap_or_else(|| "-".into());
+                let cuts = p
+                    .stages
+                    .iter()
+                    .map(|s| format!("{}..{}", s.layer_range.0, s.layer_range.1))
+                    .collect::<Vec<_>>()
+                    .join("|");
+                out.push_row(vec![
+                    format!("{}", o.boards),
+                    o.label.clone(),
+                    format!("{:.1}", p.gops),
+                    format!("{:.1}", p.throughput_fps),
+                    format!("{:.2}", p.latency_s * 1e3),
+                    speedup,
+                    p.bottleneck(),
+                    cuts,
+                ]);
+            }
+            None => out.push_row(vec![
+                format!("{}", o.boards),
+                o.label.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "infeasible".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +193,29 @@ mod tests {
         // Small inputs leave room: at least one case should pick batch > 1.
         let any_batched = t.rows.iter().any(|r| r[2].parse::<usize>().unwrap() > 1);
         assert!(any_batched, "{:?}", t.rows);
+    }
+
+    #[test]
+    fn shard_table_reports_speedup_over_baseline() {
+        use crate::dnn::{zoo, TensorShape};
+        use crate::dse::cache::EvalCache;
+        use crate::dse::multi::compare_board_counts;
+        use crate::dse::pso::PsoParams;
+        use crate::fpga::FpgaDevice;
+        use crate::shard::ShardConfig;
+
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let cfg = ShardConfig {
+            pso: PsoParams { population: 6, iterations: 4, ..PsoParams::default() },
+            ..ShardConfig::default()
+        };
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let res = compare_board_counts(&net, &devices, &cfg, &EvalCache::new());
+        let t = shard_comparison(&net.name, &res);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][5], "1.00x", "baseline speedup is unity");
+        let two: f64 = t.rows[1][5].trim_end_matches('x').parse().unwrap();
+        assert!(two > 1.0, "2-board speedup {two} must exceed 1");
+        assert!(t.render().contains("Bottleneck"));
     }
 }

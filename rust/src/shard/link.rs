@@ -1,0 +1,54 @@
+//! Inter-board link presets and cut-tensor accounting.
+//!
+//! The model itself ([`LinkModel`]) lives in [`crate::perfmodel::link`]
+//! next to the other analytical models; this module adds the catalogue
+//! of links a deployment would actually provision and the helper that
+//! converts a cut boundary into bytes on the wire.
+
+use crate::dnn::{Precision, TensorShape};
+pub use crate::perfmodel::link::LinkModel;
+
+/// 100 GbE NIC-to-NIC: ~12 GB/s sustained payload, 2 µs hop.
+pub fn eth_100g() -> LinkModel {
+    LinkModel::new(12.0, 2e-6)
+}
+
+/// Xilinx Aurora 64B/66B over 4 GTY lanes: ~10 GB/s, sub-µs hop — the
+/// standard FPGA-to-FPGA serial fabric for tightly-coupled boards.
+pub fn aurora_4lane() -> LinkModel {
+    LinkModel::new(10.0, 0.5e-6)
+}
+
+/// PCIe Gen3 x16 through a host root complex: ~12.8 GB/s payload but a
+/// fat 5 µs hop (two DMA traversals + host memcpy).
+pub fn pcie_gen3_host() -> LinkModel {
+    LinkModel::new(12.8, 5e-6)
+}
+
+/// Bytes of one activation tensor of shape `t` at precision `dw` — what
+/// a cut whose boundary tensor is `t` puts on the wire per frame.
+pub fn tensor_bytes(t: &TensorShape, dw: Precision) -> f64 {
+    t.elems() as f64 * dw.bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_sensibly() {
+        // Aurora has the lowest hop latency; host PCIe the highest.
+        assert!(aurora_4lane().latency_s < eth_100g().latency_s);
+        assert!(eth_100g().latency_s < pcie_gen3_host().latency_s);
+        for l in [eth_100g(), aurora_4lane(), pcie_gen3_host()] {
+            assert!(l.bandwidth_gbps > 0.0 && l.latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn tensor_bytes_counts_elements() {
+        let t = TensorShape::new(512, 28, 28);
+        assert_eq!(tensor_bytes(&t, Precision::Int16), 512.0 * 28.0 * 28.0 * 2.0);
+        assert_eq!(tensor_bytes(&t, Precision::Int8), 512.0 * 28.0 * 28.0);
+    }
+}

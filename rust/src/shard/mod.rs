@@ -1,0 +1,92 @@
+//! Multi-FPGA sharding: partition one DNN across a cluster of boards.
+//!
+//! DNNExplorer's paradigm splits a network into a layer-dedicated
+//! pipelined prefix plus a generic suffix on *one* FPGA. This subsystem
+//! lifts the paradigm to N (possibly heterogeneous) boards: the network
+//! is cut into **contiguous pipeline stages**, one per board, each board
+//! runs the full single-FPGA DSE on its sub-network (so every board gets
+//! its own RAV — pipeline prefix + generic suffix *within* its shard),
+//! and the activation tensor crossing each cut is charged against an
+//! inter-board [`LinkModel`].
+//!
+//! * [`partition`] — the cut-point planner: a dynamic program over
+//!   contiguous layer ranges that maximizes end-to-end throughput
+//!   (min over board rates and link serialization rates), reusing the
+//!   [`crate::dse::cache::EvalCache`] per (sub-network, device) so
+//!   repeated ranges — guaranteed across the DP cells and across board
+//!   counts — are explored once.
+//! * [`link`] — link presets and cut-tensor accounting on top of the
+//!   [`crate::perfmodel::link`] model.
+//!
+//! System model: boards form a linear pipeline, so steady-state
+//! throughput is `min(min_b fps_b, min_cut BW_link / bytes_cut)` and
+//! single-frame latency is `Σ_b latency_b + Σ_cut (L_link + bytes_cut /
+//! BW_link)`. The multi-FPGA DSE mode over this planner lives in
+//! [`crate::dse::multi`]; serving a plan as a chain of per-board
+//! servers lives in [`crate::coordinator::sharded`].
+
+pub mod link;
+pub mod partition;
+
+pub use crate::perfmodel::link::LinkModel;
+pub use partition::{partition, ShardPlan, ShardStage};
+
+use crate::dnn::Precision;
+use crate::dse::engine::{ExplorerConfig, Objective};
+use crate::dse::pso::PsoParams;
+use crate::fpga::FpgaDevice;
+
+/// Configuration of a sharded exploration: everything an
+/// [`ExplorerConfig`] carries except the device (one per board), plus
+/// the inter-board link.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// The board-to-board link every cut crosses.
+    pub link: LinkModel,
+    /// Activation bit-width.
+    pub dw: Precision,
+    /// Weight bit-width.
+    pub ww: Precision,
+    /// Pin the batch size (`None` lets each board's DSE explore it).
+    pub fixed_batch: Option<usize>,
+    pub objective: Objective,
+    /// PSO budget for each per-board sub-network exploration.
+    pub pso: PsoParams,
+    pub seed: u64,
+    /// Worker threads for the planner's (range × device) sweep.
+    pub threads: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            link: LinkModel::default(),
+            dw: Precision::Int16,
+            ww: Precision::Int16,
+            fixed_batch: Some(1),
+            objective: Objective::Throughput,
+            pso: PsoParams::default(),
+            seed: 0xD44E,
+            threads: 1,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// The single-board explorer configuration for one device of the
+    /// cluster. Swarm threads stay at 1 — the planner parallelizes over
+    /// (range, device) cells instead, which is both coarser-grained and
+    /// skew-tolerant under the work-stealing schedule.
+    pub fn explorer_for(&self, device: &FpgaDevice) -> ExplorerConfig {
+        ExplorerConfig {
+            device: device.clone(),
+            dw: self.dw,
+            ww: self.ww,
+            fixed_batch: self.fixed_batch,
+            objective: self.objective,
+            pso: self.pso.clone(),
+            seed: self.seed,
+            threads: 1,
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! Cut-point planner: partition a network into contiguous per-board
+//! pipeline stages with a dynamic program over (range, board) cells.
+//!
+//! Board `b` of a `B`-board cluster runs compute layers `[j_b, j_{b+1})`
+//! (plus the non-compute layers trailing them); every cell's sub-network
+//! is explored with the full single-FPGA DSE, so each board gets its own
+//! RAV. The DP maximizes end-to-end throughput — the min over board
+//! rates and link serialization rates — with latency (stage latencies
+//! plus hop costs) as the tie-breaker; under
+//! [`Objective::Latency`] the two criteria swap.
+//!
+//! Every (range, device) cell is explored at most once per call (cells
+//! repeat across DP rows whenever the cluster repeats a device), and the
+//! underlying RAV evaluations are memoized in the shared
+//! [`EvalCache`] — so comparing board counts over the same cluster
+//! (see [`crate::dse::multi`]) re-explores nothing but the PSO walk.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::dnn::Network;
+use crate::dse::cache::EvalCache;
+use crate::dse::engine::{self, Candidate, Objective};
+use crate::fpga::FpgaDevice;
+use crate::perfmodel::link::LinkModel;
+use crate::shard::link::tensor_bytes;
+use crate::shard::ShardConfig;
+use crate::util::parallel::parallel_map;
+
+/// One board's slice of a [`ShardPlan`].
+#[derive(Debug, Clone)]
+pub struct ShardStage {
+    /// Board index in the cluster (pipeline order).
+    pub board: usize,
+    pub device: FpgaDevice,
+    /// Compute-layer range `[start, end)` this board runs (indices into
+    /// the network's compute layers, in order).
+    pub layer_range: (usize, usize),
+    /// The board's explored single-FPGA design for its sub-network.
+    pub candidate: Candidate,
+    /// Activation bytes leaving this stage toward the next board per
+    /// frame (0 for the last stage).
+    pub egress_bytes: f64,
+    /// Frame rate the link sustains for that egress (∞ for the last).
+    pub egress_fps: f64,
+}
+
+/// A full multi-board partition: stages in pipeline order plus the
+/// system-level model outputs.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub network: String,
+    pub link: LinkModel,
+    pub stages: Vec<ShardStage>,
+    /// End-to-end steady-state frames/s:
+    /// `min(min_b fps_b, min_cut link_fps_cut)`.
+    pub throughput_fps: f64,
+    /// Whole-network sustained GOP/s at that frame rate.
+    pub gops: f64,
+    /// Single-frame latency: stage latencies plus hop costs, seconds.
+    pub latency_s: f64,
+}
+
+impl ShardPlan {
+    /// What limits the plan: `board<i>` or `link<i>-><i+1>`.
+    pub fn bottleneck(&self) -> String {
+        let eps = self.throughput_fps * 1e-9;
+        for s in &self.stages {
+            if s.candidate.throughput_fps <= self.throughput_fps + eps {
+                return format!("board{}", s.board);
+            }
+            if s.egress_fps <= self.throughput_fps + eps {
+                return format!("link{}->{}", s.board, s.board + 1);
+            }
+        }
+        "none".into()
+    }
+
+    /// Aligned text rendering (CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{}: {} boards over {} link\n",
+            self.network,
+            self.stages.len(),
+            self.link
+        ));
+        out.push_str(&format!(
+            "{:<6} {:<8} {:<10} {:<26} {:>9} {:>9} {:>7} {:>7} {:>10}\n",
+            "board", "device", "layers", "RAV", "fps", "GOP/s", "DSP", "BRAM", "egress"
+        ));
+        for s in &self.stages {
+            let egress = if s.egress_bytes > 0.0 {
+                format!("{:.0} KB", s.egress_bytes / 1024.0)
+            } else {
+                "-".into()
+            };
+            out.push_str(&format!(
+                "{:<6} {:<8} {:<10} {:<26} {:>9.1} {:>9.1} {:>7.0} {:>7.0} {:>10}\n",
+                s.board,
+                s.device.name,
+                format!("{}..{}", s.layer_range.0, s.layer_range.1),
+                format!("{}", s.candidate.rav),
+                s.candidate.throughput_fps,
+                s.candidate.gops,
+                s.candidate.dsp_used,
+                s.candidate.bram_used,
+                egress,
+            ));
+        }
+        out.push_str(&format!(
+            "e2e: {:.1} img/s = {:.1} GOP/s, latency {:.2} ms, bottleneck {}\n",
+            self.throughput_fps,
+            self.gops,
+            self.latency_s * 1e3,
+            self.bottleneck()
+        ));
+        out
+    }
+}
+
+/// Positions of the compute layers within `net.layers`.
+fn compute_positions(net: &Network) -> Vec<usize> {
+    net.layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.is_compute())
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Full-layer boundary of compute-layer index `c`: non-compute layers
+/// trail the compute layer they follow (a pool stays with its conv).
+fn boundary(net: &Network, comp_pos: &[usize], c: usize) -> usize {
+    if c == 0 {
+        0
+    } else if c == comp_pos.len() {
+        net.layers.len()
+    } else {
+        comp_pos[c]
+    }
+}
+
+/// The sub-network covering compute layers `[c_start, c_end)` of `net`,
+/// including the non-compute layers trailing each of them.
+pub fn subnetwork(net: &Network, c_start: usize, c_end: usize) -> Network {
+    let comp_pos = compute_positions(net);
+    assert!(c_start < c_end && c_end <= comp_pos.len(), "bad range {c_start}..{c_end}");
+    let lo = boundary(net, &comp_pos, c_start);
+    let hi = boundary(net, &comp_pos, c_end);
+    let layers = net.layers[lo..hi].to_vec();
+    Network {
+        name: format!("{}[{}..{}]", net.name, c_start, c_end),
+        input: layers[0].input,
+        layers,
+    }
+}
+
+/// Two catalogue devices with identical budgets are the same board type
+/// (the planner reuses their DSE cells).
+fn same_device(a: &FpgaDevice, b: &FpgaDevice) -> bool {
+    a.dsp == b.dsp
+        && a.bram18k == b.bram18k
+        && a.bandwidth_gbps == b.bandwidth_gbps
+        && a.freq_mhz == b.freq_mhz
+}
+
+#[derive(Clone, Copy)]
+struct Cell {
+    fps: f64,
+    latency_s: f64,
+    /// Start compute-layer index of the last stage in this cell's plan.
+    prev_j: usize,
+}
+
+/// Partition `net` across `devices` (pipeline order). Returns `None`
+/// when no feasible plan exists — fewer compute layers than boards, or
+/// some mandatory cell infeasible on its board.
+///
+/// Deterministic for a fixed [`ShardConfig::seed`] at any
+/// [`ShardConfig::threads`]: cells are explored independently (input
+/// order restored by [`parallel_map`]) and the DP scan order is fixed.
+pub fn partition(
+    net: &Network,
+    devices: &[FpgaDevice],
+    cfg: &ShardConfig,
+    cache: &EvalCache,
+) -> Option<ShardPlan> {
+    let comp_pos = compute_positions(net);
+    let n = comp_pos.len();
+    let b_count = devices.len();
+    if n == 0 || b_count == 0 || b_count > n {
+        return None;
+    }
+
+    // Canonical slot per board: boards with identical budgets share DSE
+    // cells regardless of position in the cluster.
+    let mut distinct: Vec<FpgaDevice> = Vec::new();
+    let mut slot: Vec<usize> = Vec::with_capacity(b_count);
+    for d in devices {
+        match distinct.iter().position(|e| same_device(e, d)) {
+            Some(i) => slot.push(i),
+            None => {
+                distinct.push(d.clone());
+                slot.push(distinct.len() - 1);
+            }
+        }
+    }
+
+    // Bytes on the wire at each cut `c` (the tensor entering compute
+    // layer c = output of the last full layer of the previous segment).
+    let cut_bytes: Vec<f64> = (0..=n)
+        .map(|c| {
+            if c == 0 || c == n {
+                0.0
+            } else {
+                let p = boundary(net, &comp_pos, c);
+                tensor_bytes(&net.layers[p - 1].output, cfg.dw)
+            }
+        })
+        .collect();
+
+    // Every (device-slot, range) cell any DP transition can touch, in a
+    // fixed order; explored concurrently below (work-stealing absorbs
+    // the skew between a 2-layer tail cell and a 10-layer prefix cell).
+    let mut wanted: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
+    for (b, &s) in slot.iter().enumerate() {
+        let i_max = n - (b_count - 1 - b);
+        for j in b..i_max {
+            let i_lo = (j + 1).max(b + 1);
+            for i in i_lo..=i_max {
+                if b == 0 && j != 0 {
+                    continue; // board 0 always starts at layer 0
+                }
+                if b == b_count - 1 && i != n {
+                    continue; // the last board always ends at layer n
+                }
+                wanted.insert((s, j, i));
+            }
+        }
+    }
+    let tasks: Vec<(usize, usize, usize)> = wanted.into_iter().collect();
+    let results = parallel_map(&tasks, cfg.threads, |&(s, j, i)| {
+        let sub = subnetwork(net, j, i);
+        let ex = cfg.explorer_for(&distinct[s]);
+        engine::explore_shared(&sub, &ex, cache)
+    });
+    let mut evals: HashMap<(usize, usize, usize), Option<engine::ExplorerResult>> =
+        HashMap::with_capacity(tasks.len());
+    for (k, r) in tasks.into_iter().zip(results) {
+        evals.insert(k, r);
+    }
+    let cell_of = |b: usize, j: usize, i: usize| -> Option<&Candidate> {
+        evals.get(&(slot[b], j, i)).and_then(|o| o.as_ref()).map(|r| &r.best)
+    };
+
+    // `better` under the configured objective: primary criterion strict,
+    // secondary as tie-break; scan order (ascending j) settles the rest
+    // deterministically.
+    let improves = |cand: (f64, f64), best: Option<(f64, f64)>| -> bool {
+        let Some((bf, bl)) = best else { return true };
+        match cfg.objective {
+            Objective::Throughput => cand.0 > bf || (cand.0 == bf && cand.1 < bl),
+            Objective::Latency => cand.1 < bl || (cand.1 == bl && cand.0 > bf),
+        }
+    };
+
+    // dp[b][i]: best plan putting compute layers [0, i) on boards 0..=b.
+    let mut dp: Vec<Vec<Option<Cell>>> = vec![vec![None; n + 1]; b_count];
+    let i_max0 = n - (b_count - 1);
+    for i in 1..=i_max0 {
+        if let Some(c) = cell_of(0, 0, i) {
+            dp[0][i] = Some(Cell {
+                fps: c.throughput_fps,
+                latency_s: c.frame_latency_s,
+                prev_j: 0,
+            });
+        }
+    }
+    for b in 1..b_count {
+        let i_max = n - (b_count - 1 - b);
+        for i in (b + 1)..=i_max {
+            let mut best: Option<Cell> = None;
+            for j in b..i {
+                if b == b_count - 1 && i != n {
+                    break;
+                }
+                let Some(prev) = dp[b - 1][j] else { continue };
+                let Some(stage) = cell_of(b, j, i) else { continue };
+                let link_fps = cfg.link.throughput_fps(cut_bytes[j]);
+                let hop_s = cfg.link.transfer_s(cut_bytes[j]);
+                let fps = prev.fps.min(link_fps).min(stage.throughput_fps);
+                let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
+                if improves((fps, latency_s), best.map(|c| (c.fps, c.latency_s))) {
+                    best = Some(Cell { fps, latency_s, prev_j: j });
+                }
+            }
+            dp[b][i] = best;
+        }
+    }
+
+    // Reconstruct the winning cut sequence from dp[B-1][n].
+    let final_cell = dp[b_count - 1][n]?;
+    let mut bounds = vec![n];
+    let mut i = n;
+    for b in (0..b_count).rev() {
+        let cell = dp[b][i].expect("dp chain broken");
+        bounds.push(cell.prev_j);
+        i = cell.prev_j;
+    }
+    bounds.reverse(); // [0, j_1, ..., j_{B-1}, n]
+    debug_assert_eq!(bounds[0], 0);
+    debug_assert_eq!(bounds.len(), b_count + 1);
+
+    let mut stages = Vec::with_capacity(b_count);
+    for b in 0..b_count {
+        let (j, i) = (bounds[b], bounds[b + 1]);
+        let candidate = cell_of(b, j, i).expect("winning cell vanished").clone();
+        let egress_bytes = cut_bytes[i];
+        stages.push(ShardStage {
+            board: b,
+            device: devices[b].clone(),
+            layer_range: (j, i),
+            candidate,
+            egress_bytes,
+            egress_fps: cfg.link.throughput_fps(egress_bytes),
+        });
+    }
+
+    let total_ops: f64 = net
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| l.ops() as f64)
+        .sum();
+    Some(ShardPlan {
+        network: net.name.clone(),
+        link: cfg.link,
+        stages,
+        throughput_fps: final_cell.fps,
+        gops: final_cell.fps * total_ops / 1e9,
+        latency_s: final_cell.latency_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{zoo, Precision, TensorShape};
+    use crate::dse::pso::PsoParams;
+
+    fn vgg(h: usize) -> Network {
+        zoo::vgg16_conv(TensorShape::new(3, h, h), Precision::Int16)
+    }
+
+    fn quick_cfg() -> ShardConfig {
+        ShardConfig {
+            pso: PsoParams { population: 8, iterations: 5, ..PsoParams::default() },
+            ..ShardConfig::default()
+        }
+    }
+
+    #[test]
+    fn subnetwork_slices_cover_and_chain() {
+        let net = vgg(64);
+        let n = net.compute_layers().len();
+        let a = subnetwork(&net, 0, 6);
+        let b = subnetwork(&net, 6, n);
+        assert_eq!(a.layers.len() + b.layers.len(), net.layers.len());
+        assert_eq!(a.compute_layers().len(), 6);
+        assert_eq!(b.compute_layers().len(), n - 6);
+        // The cut is shape-consistent: b's first input == a's last output.
+        assert_eq!(b.layers[0].input, a.layers.last().unwrap().output);
+        a.validate_shapes().unwrap();
+        b.validate_shapes().unwrap();
+    }
+
+    #[test]
+    fn partition_two_boards_covers_all_layers() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let cache = EvalCache::new();
+        let plan = partition(&net, &devices, &quick_cfg(), &cache).expect("feasible");
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].layer_range.0, 0);
+        assert_eq!(plan.stages[1].layer_range.1, net.compute_layers().len());
+        assert_eq!(plan.stages[0].layer_range.1, plan.stages[1].layer_range.0);
+        assert!(plan.throughput_fps > 0.0 && plan.gops > 0.0);
+        assert!(plan.latency_s > 0.0);
+        assert!(plan.stages[0].egress_bytes > 0.0);
+        assert_eq!(plan.stages[1].egress_bytes, 0.0);
+        assert!(plan.render().contains("e2e"));
+    }
+
+    #[test]
+    fn more_boards_than_layers_is_none() {
+        let net = vgg(64);
+        let n = net.compute_layers().len();
+        let devices = vec![FpgaDevice::zcu102(); n + 1];
+        let cache = EvalCache::new();
+        assert!(partition(&net, &devices, &quick_cfg(), &cache).is_none());
+    }
+
+    #[test]
+    fn partition_is_thread_invariant() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zc706()];
+        let mut c1 = quick_cfg();
+        c1.threads = 1;
+        let mut c8 = quick_cfg();
+        c8.threads = 8;
+        let a = partition(&net, &devices, &c1, &EvalCache::new()).expect("t1");
+        let b = partition(&net, &devices, &c8, &EvalCache::new()).expect("t8");
+        assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(x.layer_range, y.layer_range);
+            assert_eq!(x.candidate.rav, y.candidate.rav);
+        }
+    }
+
+    #[test]
+    fn narrow_link_becomes_the_bottleneck() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::ku115(), FpgaDevice::ku115()];
+        let mut cfg = quick_cfg();
+        // A pathological 1 MB/s link: serialization dominates any cut.
+        cfg.link = LinkModel::new(0.001, 1e-6);
+        let cache = EvalCache::new();
+        let plan = partition(&net, &devices, &cfg, &cache).expect("feasible");
+        assert!(plan.bottleneck().starts_with("link"), "{}", plan.bottleneck());
+        // And the fast-link plan is strictly faster end-to-end.
+        let fast = partition(&net, &devices, &quick_cfg(), &cache).expect("feasible");
+        assert!(fast.throughput_fps > plan.throughput_fps);
+    }
+}

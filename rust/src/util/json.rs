@@ -1,8 +1,10 @@
-//! Tiny JSON **emitter** (serde_json is unavailable offline).
+//! Tiny JSON **emitter and parser** (serde_json is unavailable offline).
 //!
-//! Only emission is needed on the rust side (CLI `--json` output and
-//! saved reports); the artifact manifest uses a line format parsed by
-//! [`crate::runtime::artifacts`].
+//! Emission serves the CLI `--json` output and saved reports; parsing
+//! serves the on-disk [`crate::dse::persist`] evaluation-cache format.
+//! The parser is a strict recursive-descent over the JSON grammar
+//! (objects, arrays, strings with escapes, numbers, literals) — enough
+//! to round-trip anything [`Json::render`] emits.
 
 /// A JSON value builder.
 #[derive(Debug, Clone)]
@@ -91,6 +93,248 @@ impl Json {
     }
 }
 
+impl Json {
+    /// Parse a JSON document. Trailing non-whitespace is an error.
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos >= bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek() == Some(b),
+            "expected {:?} at byte {}, found {:?}",
+            b as char,
+            self.pos,
+            self.peek().map(|c| c as char)
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> anyhow::Result<Json> {
+        let end = self.pos + word.len();
+        anyhow::ensure!(
+            end <= self.bytes.len() && &self.bytes[self.pos..end] == word.as_bytes(),
+            "invalid literal at byte {}",
+            self.pos
+        );
+        self.pos = end;
+        Ok(value)
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            ),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or '}}' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or ']' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => anyhow::bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| anyhow::anyhow!("dangling escape at byte {}", self.pos))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            let end = self.pos + 4;
+                            anyhow::ensure!(
+                                end <= self.bytes.len(),
+                                "truncated \\u escape at byte {}",
+                                self.pos
+                            );
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..end])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            // BMP only — all this crate ever emits.
+                            out.push(
+                                char::from_u32(code).ok_or_else(|| {
+                                    anyhow::anyhow!("invalid \\u{hex} escape")
+                                })?,
+                            );
+                            self.pos = end;
+                        }
+                        other => anyhow::bail!("unknown escape \\{}", other as char),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (multi-byte safe).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let v: f64 = text
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad number {text:?} at byte {start}: {e}"))?;
+        Ok(Json::Num(v))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +354,54 @@ mod tests {
         assert_eq!(Json::n(42.0).render(), "42");
         assert_eq!(Json::n(0.5).render(), "0.5");
         assert_eq!(Json::n(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_render() {
+        let j = Json::obj(vec![
+            ("a", Json::n(1.0)),
+            ("b", Json::Arr(vec![Json::n(1.5), Json::Bool(true), Json::Null])),
+            ("c", Json::s("x\"y\nz\\w")),
+            ("d", Json::obj(vec![("nested", Json::n(-3.25))])),
+            ("e", Json::Arr(vec![])),
+            ("f", Json::obj(vec![])),
+        ]);
+        let text = j.render();
+        let back = Json::parse(&text).expect("parse");
+        assert_eq!(back.render(), text, "render∘parse∘render is identity");
+        assert_eq!(back.get("a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(back.get("c").and_then(Json::as_str), Some("x\"y\nz\\w"));
+        assert_eq!(back.get("b").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+        assert_eq!(
+            back.get("d").and_then(|d| d.get("nested")).and_then(Json::as_f64),
+            Some(-3.25)
+        );
+        assert!(back.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_escapes() {
+        let j = Json::parse(" { \"k\" : [ 1 , \"\\u0041\\t\" , false ] } ").unwrap();
+        let arr = j.get("k").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_str(), Some("A\t"));
+        assert_eq!(arr[2].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} tail").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("01a").is_err());
+    }
+
+    #[test]
+    fn parse_numbers_exact() {
+        assert_eq!(Json::parse("-0.5").unwrap().as_f64(), Some(-0.5));
+        assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("42").unwrap().as_f64(), Some(42.0));
     }
 }

@@ -2,14 +2,57 @@
 //! offline; `std::thread::scope` is all the DSE hot path needs).
 //!
 //! [`parallel_map`] preserves input order in its output regardless of the
-//! worker count, so any caller that combines results **by index** is
-//! bit-identical across thread counts — the property the parallel PSO
-//! and the portfolio explorer are built on. Workers only ever determine
-//! *when* an element is computed, never *which value* it produces or
-//! *where* it lands.
+//! worker count or schedule, so any caller that combines results **by
+//! index** is bit-identical across thread counts — the property the
+//! parallel PSO and the portfolio explorer are built on. Workers only
+//! ever determine *when* an element is computed, never *which value* it
+//! produces or *where* it lands.
+//!
+//! Two schedules are available (see [`Schedule`]):
+//!
+//! * **Chunked** — one contiguous chunk per worker, fixed up front. Zero
+//!   coordination on the hot path, but a skewed workload (one expensive
+//!   chunk) leaves the other workers idle.
+//! * **WorkStealing** — each worker owns a deque of contiguous indices;
+//!   it pops its own front (preserving locality) and, when empty, steals
+//!   from the *back* of a victim's deque. Skewed items (e.g. one
+//!   portfolio scenario or shard segment that dwarfs the rest) no longer
+//!   serialize the pool. This is the default; set
+//!   `DNNEXPLORER_SCHEDULE=chunked` to A/B against the old path
+//!   (`benches/shard_dse.rs` does exactly that).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// How [`parallel_map`] distributes items over workers. Purely a
+/// wall-clock knob: both schedules produce identical output vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Fixed contiguous chunks, one per worker (the historical path).
+    Chunked,
+    /// Per-worker deques with back-stealing (the default).
+    WorkStealing,
+}
+
+/// The process-wide default schedule: work-stealing, unless the
+/// `DNNEXPLORER_SCHEDULE=chunked` environment switch asks for the old
+/// chunked path (read once, for A/B benching).
+pub fn default_schedule() -> Schedule {
+    static CHUNKED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    let chunked = *CHUNKED.get_or_init(|| {
+        std::env::var("DNNEXPLORER_SCHEDULE")
+            .map(|v| v.eq_ignore_ascii_case("chunked"))
+            .unwrap_or(false)
+    });
+    if chunked {
+        Schedule::Chunked
+    } else {
+        Schedule::WorkStealing
+    }
+}
 
 /// Map `f` over `items`, using up to `threads` OS threads, returning the
-/// results in input order.
+/// results in input order. Uses [`default_schedule`].
 ///
 /// `threads <= 1` (or a short input) runs inline with no thread spawn at
 /// all, so the sequential path is literally the `Iterator::map` loop.
@@ -20,17 +63,41 @@ where
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
+    parallel_map_with(items, threads, default_schedule(), f)
+}
+
+/// [`parallel_map`] with an explicit [`Schedule`] (A/B benching and the
+/// callers that know their workload shape).
+pub fn parallel_map_with<T, U, F>(items: &[T], threads: usize, schedule: Schedule, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
     let n = items.len();
     let workers = threads.max(1).min(n.max(1));
     if workers == 1 {
         return items.iter().map(f).collect();
     }
-    // Contiguous chunks, one per worker; chunk boundaries depend only on
-    // (n, workers), and results are re-joined in chunk order. The first
-    // chunk runs on the calling thread — one fewer spawn, and the
-    // caller does useful work instead of blocking in join (this keeps
-    // per-call overhead low even when the work units are cheap, e.g.
-    // swarm batches against a warm EvalCache).
+    match schedule {
+        Schedule::Chunked => chunked_map(items, workers, f),
+        Schedule::WorkStealing => stealing_map(items, workers, f),
+    }
+}
+
+/// Contiguous chunks, one per worker; chunk boundaries depend only on
+/// (n, workers), and results are re-joined in chunk order. The first
+/// chunk runs on the calling thread — one fewer spawn, and the
+/// caller does useful work instead of blocking in join (this keeps
+/// per-call overhead low even when the work units are cheap, e.g.
+/// swarm batches against a warm EvalCache).
+fn chunked_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
     let chunk = n.div_ceil(workers);
     let fref = &f;
     let mut out = Vec::with_capacity(n);
@@ -48,6 +115,79 @@ where
     out
 }
 
+/// Work-stealing: worker `w` seeds its deque with the same contiguous
+/// block the chunked schedule would give it (locality), pops its own
+/// **front**, and steals from the **back** of the next non-empty victim
+/// when dry. Each index is removed from exactly one deque exactly once,
+/// and every result carries its index, so the merged output is in input
+/// order no matter who computed what.
+fn stealing_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let chunk = n.div_ceil(workers);
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..workers)
+        .map(|w| {
+            let lo = (w * chunk).min(n);
+            let hi = ((w + 1) * chunk).min(n);
+            Mutex::new((lo..hi).collect())
+        })
+        .collect();
+    let deques = &deques;
+    let fref = &f;
+
+    let run_worker = move |w: usize| -> Vec<(usize, U)> {
+        let mut local: Vec<(usize, U)> = Vec::new();
+        loop {
+            // Own work first (front: input order, warm caches)...
+            let idx = {
+                let mut own = deques[w].lock().expect("steal deque poisoned");
+                own.pop_front()
+            };
+            let idx = match idx {
+                Some(i) => Some(i),
+                // ...then steal from the back of the first non-empty
+                // victim, scanning away from ourselves so contention
+                // spreads instead of piling on worker 0.
+                None => (1..workers).find_map(|d| {
+                    let v = (w + d) % workers;
+                    deques[v].lock().expect("steal deque poisoned").pop_back()
+                }),
+            };
+            match idx {
+                Some(i) => local.push((i, fref(&items[i]))),
+                None => break, // every deque empty: all items claimed
+            }
+        }
+        local
+    };
+    let run_worker = &run_worker;
+
+    let mut pairs: Vec<(usize, U)> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (1..workers).map(|w| scope.spawn(move || run_worker(w))).collect();
+        pairs.extend(run_worker(0));
+        for h in handles {
+            pairs.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
+    // Deterministic index-order reduction: place each result at its
+    // input slot (every index appears exactly once).
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    for (i, v) in pairs {
+        debug_assert!(slots[i].is_none(), "index {i} computed twice");
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| v.unwrap_or_else(|| panic!("index {i} never computed")))
+        .collect()
+}
+
 /// A sensible default worker count: the machine's available parallelism,
 /// floored at 1 (used by CLI `--threads 0`).
 pub fn default_threads() -> usize {
@@ -59,20 +199,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn preserves_order_at_every_thread_count() {
+    fn preserves_order_at_every_thread_count_and_schedule() {
         let items: Vec<u64> = (0..103).collect();
         let expect: Vec<u64> = items.iter().map(|x| x * x).collect();
-        for threads in [1, 2, 3, 8, 64] {
-            let got = parallel_map(&items, threads, |x| x * x);
-            assert_eq!(got, expect, "threads={threads}");
+        for schedule in [Schedule::Chunked, Schedule::WorkStealing] {
+            for threads in [1, 2, 3, 8, 64] {
+                let got = parallel_map_with(&items, threads, schedule, |x| x * x);
+                assert_eq!(got, expect, "threads={threads} schedule={schedule:?}");
+            }
         }
     }
 
     #[test]
     fn empty_and_singleton() {
         let empty: Vec<u32> = Vec::new();
-        assert!(parallel_map(&empty, 8, |x| *x).is_empty());
-        assert_eq!(parallel_map(&[7u32], 8, |x| x + 1), vec![8]);
+        for schedule in [Schedule::Chunked, Schedule::WorkStealing] {
+            assert!(parallel_map_with(&empty, 8, schedule, |x| *x).is_empty());
+            assert_eq!(parallel_map_with(&[7u32], 8, schedule, |x| x + 1), vec![8]);
+        }
     }
 
     #[test]
@@ -103,7 +247,48 @@ mod tests {
     }
 
     #[test]
+    fn stealing_rebalances_a_skewed_head() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::time::Duration;
+        // Item 0 is 50x the rest. Under work-stealing with 2 workers the
+        // tail items migrate to the idle worker, so the count of items
+        // executed while item 0 is still running must be > 0 — i.e. the
+        // pool did not serialize behind the skewed chunk.
+        let overlapped = AtomicUsize::new(0);
+        let busy = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..16).collect();
+        let out = parallel_map_with(&items, 2, Schedule::WorkStealing, |&i| {
+            if i == 0 {
+                busy.store(1, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(100));
+                busy.store(0, Ordering::SeqCst);
+            } else {
+                std::thread::sleep(Duration::from_millis(2));
+                if busy.load(Ordering::SeqCst) == 1 {
+                    overlapped.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            i * 2
+        });
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(
+            overlapped.load(Ordering::SeqCst) > 0,
+            "no overlap: the pool serialized behind the skewed item"
+        );
+    }
+
+    #[test]
+    fn schedules_agree_on_nontrivial_workload() {
+        let items: Vec<u64> = (0..257).map(|i| i * 31 + 7).collect();
+        let a = parallel_map_with(&items, 5, Schedule::Chunked, |x| x.wrapping_mul(*x));
+        let b = parallel_map_with(&items, 5, Schedule::WorkStealing, |x| x.wrapping_mul(*x));
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+        // The default schedule resolves without panicking either way.
+        let _ = default_schedule();
     }
 }

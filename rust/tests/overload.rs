@@ -14,7 +14,9 @@ use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use dnnexplorer::coordinator::synthetic::FixedServiceModel;
-use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig, Router, ServeError};
+use dnnexplorer::coordinator::{
+    BatcherConfig, OverloadPolicy, QueueConfig, QueueOrdering, Router, ServeError,
+};
 use dnnexplorer::runtime::executable::HostTensor;
 
 fn requests_from_env(default: usize) -> usize {
@@ -36,6 +38,7 @@ fn reject_policy_under_2x_load_sheds_bounded_and_reconciles() {
             batch: BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(2) },
             capacity: QUEUE_BOUND,
             policy: OverloadPolicy::Reject,
+            ..QueueConfig::default()
         },
     )
     .expect("router starts");
@@ -116,6 +119,7 @@ fn shed_oldest_under_burst_keeps_freshest_and_reconciles() {
             batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
             capacity: QUEUE_BOUND,
             policy: OverloadPolicy::ShedOldest,
+            ..QueueConfig::default()
         },
     )
     .expect("router starts");
@@ -157,6 +161,7 @@ fn per_request_deadlines_expire_typed_while_queued() {
             batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
             capacity: 16,
             policy: OverloadPolicy::Reject,
+            ..QueueConfig::default()
         },
     )
     .expect("router starts");
@@ -186,4 +191,82 @@ fn per_request_deadlines_expire_typed_while_queued() {
         "expired requests get their queue time recorded as latency"
     );
     router.shutdown();
+}
+
+/// A/B the queue orderings on an identical mixed-deadline backlog: 8
+/// patient requests submitted ahead of 4 urgent ones, served one at a
+/// time at 80 ms each. FIFO makes every urgent request wait out the
+/// whole patient backlog (≥ 640 ms » its 400 ms deadline); EDF pulls
+/// the urgent ones first (last pop at ~240 ms, 160 ms of slack for a
+/// loaded CI host). The regression bar: EDF strictly reduces
+/// `DeadlineExceeded`, and both orderings reconcile.
+fn run_mixed_deadline_backlog(ordering: QueueOrdering) -> (u64, u64) {
+    use dnnexplorer::coordinator::{AdmissionQueue, InferenceRequest, Metrics};
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let metrics = Arc::new(Metrics::new());
+    let q = AdmissionQueue::new(
+        QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: 64,
+            policy: OverloadPolicy::Block,
+            ordering,
+        },
+        metrics.clone(),
+    );
+    let mut receivers = Vec::new();
+    let mut submit = |deadline: Option<Duration>| {
+        let (respond, rx) = sync_channel(1);
+        let now = Instant::now();
+        q.submit(InferenceRequest {
+            input: HostTensor::zeros(&[1]),
+            respond,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+        })
+        .expect("capacity 64 admits the backlog");
+        receivers.push(rx);
+    };
+    for _ in 0..8 {
+        submit(Some(Duration::from_secs(30))); // patient
+    }
+    for _ in 0..4 {
+        submit(Some(Duration::from_millis(400))); // urgent
+    }
+    q.close(); // backlog fixed; next_batch drains then ends
+
+    let mut served = 0u64;
+    while let Some(batch) = q.next_batch() {
+        for req in batch {
+            let _ = req.respond.send(Ok(req.input.clone()));
+            served += 1;
+        }
+        std::thread::sleep(Duration::from_millis(80)); // service time
+    }
+    (served, metrics.timed_out.load(Ordering::Relaxed))
+}
+
+#[test]
+fn edf_ordering_reduces_deadline_misses_under_mixed_load() {
+    let (fifo_served, fifo_missed) = run_mixed_deadline_backlog(QueueOrdering::Fifo);
+    let (edf_served, edf_missed) = run_mixed_deadline_backlog(QueueOrdering::Edf);
+    // Both orderings account for all 12 requests.
+    assert_eq!(fifo_served + fifo_missed, 12);
+    assert_eq!(edf_served + edf_missed, 12);
+    // FIFO strands the urgent tail behind the patient backlog...
+    assert!(
+        fifo_missed >= 3,
+        "FIFO should expire most urgent requests, missed only {fifo_missed}"
+    );
+    // ...EDF serves it first (generous slack for a loaded CI host).
+    assert!(
+        edf_missed <= 1,
+        "EDF should meet almost all urgent deadlines, missed {edf_missed}"
+    );
+    assert!(
+        edf_missed < fifo_missed,
+        "EDF must strictly reduce DeadlineExceeded: edf {edf_missed} vs fifo {fifo_missed}"
+    );
 }

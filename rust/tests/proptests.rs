@@ -627,3 +627,160 @@ fn prop_pipeline_estimate_vs_simulator_bounded_gap() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// Multi-FPGA partitioner invariants (shard subsystem).
+
+/// A small random linear CNN: 4–9 conv layers with occasional pools,
+/// always feasible-shaped (stride-1 3x3 convs on 24–48 px inputs).
+fn arb_small_net(r: &mut Rng) -> dnnexplorer::Network {
+    use dnnexplorer::dnn::graph::NetworkBuilder;
+    let hw = 24 + 8 * r.gen_index(4); // 24..48
+    let depth = 4 + r.gen_index(6); // 4..9 convs
+    let mut b = NetworkBuilder::new("prop-net", TensorShape::new(3, hw, hw), Precision::Int16);
+    let mut c = 8usize << r.gen_index(2); // 8..16 initial width
+    for i in 0..depth {
+        b = b.conv(c, 3, 1, 1);
+        if i % 3 == 2 && b.shape().h >= 8 {
+            b = b.pool(2, 2);
+        }
+        if c < 128 {
+            c *= 2;
+        }
+    }
+    b.build()
+}
+
+fn prop_shard_cfg() -> dnnexplorer::shard::ShardConfig {
+    dnnexplorer::shard::ShardConfig {
+        pso: PsoParams { population: 6, iterations: 3, ..PsoParams::default() },
+        ..dnnexplorer::shard::ShardConfig::default()
+    }
+}
+
+#[test]
+fn prop_shard_plan_covers_layers_once_and_respects_resources() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+
+    check(
+        "shard plan: contiguous exact cover + per-board budgets",
+        211,
+        10,
+        |r| (arb_small_net(r), r.gen_index(2)),
+        |(net, hetero)| {
+            let devices = if *hetero == 1 {
+                vec![FpgaDevice::ku115(), FpgaDevice::zc706()]
+            } else {
+                vec![FpgaDevice::ku115(), FpgaDevice::ku115()]
+            };
+            let cache = EvalCache::new();
+            let Some(plan) = partition(net, &devices, &prop_shard_cfg(), &cache) else {
+                return Ok(()); // infeasible cluster for this net: allowed
+            };
+            let n = net.compute_layers().len();
+            // Exact contiguous cover: stage k starts where k-1 ended.
+            if plan.stages.len() != devices.len() {
+                return Err(format!("{} stages for {} boards", plan.stages.len(), devices.len()));
+            }
+            let mut cursor = 0usize;
+            for s in &plan.stages {
+                if s.layer_range.0 != cursor {
+                    return Err(format!(
+                        "stage {} starts at {} instead of {}",
+                        s.board, s.layer_range.0, cursor
+                    ));
+                }
+                if s.layer_range.1 <= s.layer_range.0 {
+                    return Err(format!("stage {} empty: {:?}", s.board, s.layer_range));
+                }
+                cursor = s.layer_range.1;
+            }
+            if cursor != n {
+                return Err(format!("stages cover {cursor} of {n} compute layers"));
+            }
+            // Per-board resources: every stage fits its own device
+            // (BRAM gets the engine's block-rounding tolerance).
+            for s in &plan.stages {
+                if s.candidate.dsp_used > s.device.dsp as f64 {
+                    return Err(format!(
+                        "stage {} uses {} DSP of {}",
+                        s.board, s.candidate.dsp_used, s.device.dsp
+                    ));
+                }
+                if s.candidate.bram_used > s.device.bram18k as f64 * 1.05 {
+                    return Err(format!(
+                        "stage {} uses {} BRAM of {}",
+                        s.board, s.candidate.bram_used, s.device.bram18k
+                    ));
+                }
+            }
+            // System model consistency: the e2e rate is exactly the min
+            // of stage rates and link serialization rates.
+            let mut floor = f64::INFINITY;
+            for s in &plan.stages {
+                floor = floor.min(s.candidate.throughput_fps);
+                if s.egress_bytes > 0.0 {
+                    floor = floor.min(s.egress_fps);
+                }
+            }
+            if plan.throughput_fps.to_bits() != floor.to_bits() {
+                return Err(format!(
+                    "plan fps {} != min(stage, link) {}",
+                    plan.throughput_fps, floor
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_one_board_shard_equals_single_fpga_model() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+
+    check(
+        "1-board shard plan == single-FPGA pipeline model",
+        223,
+        6,
+        arb_small_net,
+        |net| {
+            let cache = EvalCache::new();
+            let cfg = prop_shard_cfg();
+            let plan = partition(net, &[FpgaDevice::ku115()], &cfg, &cache);
+            let solo_cfg = ExplorerConfig {
+                pso: cfg.pso.clone(),
+                seed: cfg.seed,
+                ..ExplorerConfig::new(FpgaDevice::ku115())
+            };
+            let solo = engine::explore_shared(net, &solo_cfg, &cache);
+            match (plan, solo) {
+                (None, None) => Ok(()),
+                (Some(p), Some(s)) => {
+                    let tol = s.best.throughput_fps.abs() * 1e-9;
+                    if (p.throughput_fps - s.best.throughput_fps).abs() > tol {
+                        return Err(format!(
+                            "1-board plan fps {} != single-FPGA {}",
+                            p.throughput_fps, s.best.throughput_fps
+                        ));
+                    }
+                    if (p.latency_s - s.best.frame_latency_s).abs()
+                        > s.best.frame_latency_s.abs() * 1e-9
+                    {
+                        return Err(format!(
+                            "1-board plan latency {} != single-FPGA {}",
+                            p.latency_s, s.best.frame_latency_s
+                        ));
+                    }
+                    Ok(())
+                }
+                (p, s) => Err(format!(
+                    "feasibility disagrees: plan {:?} vs solo {:?}",
+                    p.is_some(),
+                    s.is_some()
+                )),
+            }
+        },
+    );
+}

@@ -1,0 +1,229 @@
+//! Multi-FPGA sharding integration: the acceptance bar of the shard
+//! subsystem.
+//!
+//! * The 2-board plan's modeled GOP/s **strictly exceeds** the best
+//!   single-board result for the same network and device (the whole
+//!   point of sharding).
+//! * A sharded coordinator drives frames end-to-end through chained
+//!   per-board stages with per-stage *and* end-to-end metrics that
+//!   reconcile exactly (`requests == ok_frames + errors + shed`).
+//! * A persisted evaluation cache warms a repeated shard run down to
+//!   pure lookups.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{
+    BatcherConfig, ModelExecutor, QueueConfig, ShardedPipeline, StageSpec,
+};
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::dse::{engine, persist};
+use dnnexplorer::runtime::executable::HostTensor;
+use dnnexplorer::shard::{partition, ShardConfig};
+use dnnexplorer::{ExplorerConfig, FpgaDevice, Network};
+
+fn vgg(h: usize) -> Network {
+    zoo::vgg16_conv(TensorShape::new(3, h, h), Precision::Int16)
+}
+
+fn quick_pso() -> PsoParams {
+    PsoParams { population: 10, iterations: 8, ..PsoParams::default() }
+}
+
+fn shard_cfg() -> ShardConfig {
+    ShardConfig { pso: quick_pso(), threads: 4, ..ShardConfig::default() }
+}
+
+#[test]
+fn two_zcu102_strictly_beat_the_best_single_zcu102() {
+    let net = vgg(224);
+    let cache = EvalCache::new();
+    let cfg = shard_cfg();
+
+    // Best single-board result: same engine, same PSO budget and seed.
+    let mut solo_cfg = ExplorerConfig::new(FpgaDevice::zcu102());
+    solo_cfg.pso = quick_pso();
+    let solo = engine::explore_shared(&net, &solo_cfg, &cache).expect("single board feasible");
+
+    let devices = [FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+    let plan = partition(&net, &devices, &cfg, &cache).expect("2-board partition feasible");
+
+    assert!(
+        plan.gops > solo.best.gops,
+        "sharded {} GOP/s must strictly exceed single-board {} GOP/s",
+        plan.gops,
+        solo.best.gops
+    );
+    assert!(plan.throughput_fps > solo.best.throughput_fps);
+    // The split is a genuine partition of the compute layers.
+    assert_eq!(plan.stages.len(), 2);
+    assert_eq!(plan.stages[0].layer_range.0, 0);
+    assert_eq!(plan.stages[1].layer_range.1, net.compute_layers().len());
+}
+
+#[test]
+fn one_board_shard_plan_matches_single_fpga_model() {
+    // Degenerate sharding: a 1-board "cluster" must reproduce the
+    // single-FPGA exploration bit-for-bit (same engine path, shared
+    // cache) — the subsystem charges no phantom link costs.
+    let net = vgg(64);
+    let cache = EvalCache::new();
+    let cfg = shard_cfg();
+    let plan = partition(&net, &[FpgaDevice::ku115()], &cfg, &cache).expect("feasible");
+    let mut solo_cfg = ExplorerConfig::new(FpgaDevice::ku115());
+    solo_cfg.pso = quick_pso();
+    let solo = engine::explore_shared(&net, &solo_cfg, &cache).expect("feasible");
+    assert_eq!(plan.stages.len(), 1);
+    assert_eq!(
+        plan.throughput_fps.to_bits(),
+        solo.best.throughput_fps.to_bits(),
+        "1-board plan fps must equal the single-FPGA model exactly"
+    );
+    assert_eq!(plan.latency_s.to_bits(), solo.best.frame_latency_s.to_bits());
+    assert!((plan.gops - solo.best.gops).abs() <= solo.best.gops * 1e-12);
+    assert_eq!(plan.stages[0].egress_bytes, 0.0, "no cut, no link traffic");
+}
+
+#[test]
+fn persisted_cache_warms_a_repeated_shard_run() {
+    let net = vgg(64);
+    let cfg = ShardConfig {
+        pso: PsoParams { population: 6, iterations: 4, ..PsoParams::default() },
+        ..ShardConfig::default()
+    };
+    let devices = [FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+
+    let mut path = std::env::temp_dir();
+    path.push(format!("dnnx-shard-cache-{}.json", std::process::id()));
+
+    // Cold run, then persist.
+    let cold = EvalCache::new();
+    let a = partition(&net, &devices, &cfg, &cold).expect("cold feasible");
+    let saved = persist::save(&cold, &path).expect("save");
+    assert!(saved > 0);
+
+    // Warm run from disk: identical plan, zero recomputation.
+    let warm = EvalCache::new();
+    let stats = persist::load_into(&warm, &path, None).expect("load");
+    assert_eq!(stats.loaded, saved);
+    let before_misses = warm.misses();
+    let b = partition(&net, &devices, &cfg, &warm).expect("warm feasible");
+    assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+    assert_eq!(a.stages[0].layer_range, b.stages[0].layer_range);
+    assert_eq!(
+        warm.misses(),
+        before_misses,
+        "warm shard run must be answered from the persisted cache alone"
+    );
+    assert!(warm.hits() > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Stage executor that scales every element — distinguishable per stage.
+struct Scale(f32);
+impl ModelExecutor for Scale {
+    fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        Ok(frames
+            .iter()
+            .map(|f| HostTensor {
+                data: f.data.iter().map(|x| x * self.0).collect(),
+                shape: f.shape.clone(),
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn sharded_pipeline_end_to_end_metrics_reconcile() {
+    // Three chained stages (≥ 2 per the acceptance bar) under concurrent
+    // load; every counter reconciles per stage and end-to-end.
+    let batch = |n| QueueConfig {
+        batch: BatcherConfig { batch_size: n, max_wait: Duration::from_millis(2) },
+        ..QueueConfig::default()
+    };
+    let pipe = ShardedPipeline::spawn(vec![
+        StageSpec::with_queue(|| Ok(Scale(2.0)), batch(4)),
+        StageSpec::with_queue(|| Ok(Scale(3.0)), batch(2)),
+        StageSpec::with_queue(|| Ok(Scale(5.0)), batch(1)),
+    ])
+    .expect("pipeline starts");
+
+    let n = 48usize;
+    let mut receivers = Vec::with_capacity(n);
+    for i in 0..n {
+        let rx = pipe
+            .submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap())
+            .expect("admission");
+        receivers.push((i, rx));
+    }
+    for (i, rx) in receivers {
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("resolves")
+            .expect("serves");
+        assert_eq!(out.data, vec![i as f32 * 30.0], "frame {i} through x2*x3*x5");
+    }
+
+    // End-to-end: everything submitted resolved ok.
+    let m = &pipe.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.accounted(), n as u64, "end-to-end reconciliation");
+    assert!(m.latency_count() >= n as u64);
+
+    // Per stage: each stage saw exactly n requests and served them all.
+    for s in 0..pipe.stage_count() {
+        let sm = pipe.stage_metrics(s);
+        assert_eq!(sm.requests.load(Ordering::Relaxed), n as u64, "stage {s} requests");
+        assert_eq!(sm.ok_frames.load(Ordering::Relaxed), n as u64, "stage {s} ok");
+        assert_eq!(
+            sm.accounted(),
+            sm.requests.load(Ordering::Relaxed),
+            "stage {s} reconciliation"
+        );
+    }
+    pipe.shutdown();
+}
+
+#[test]
+fn sharded_pipeline_under_slow_stage_still_reconciles() {
+    // A slow middle stage with a tiny queue: admitted frames back-pressure
+    // through the chain (Block policy), and the books still balance.
+    let pipe = ShardedPipeline::spawn(vec![
+        StageSpec::new(|| Ok(Scale(1.0))),
+        StageSpec::with_queue(
+            || Ok(FixedServiceModel { per_frame: Duration::from_millis(2) }),
+            QueueConfig {
+                batch: BatcherConfig { batch_size: 2, max_wait: Duration::from_millis(1) },
+                capacity: 4,
+                ..QueueConfig::default()
+            },
+        ),
+    ])
+    .expect("pipeline starts");
+
+    let n = 32usize;
+    let mut receivers = Vec::with_capacity(n);
+    for i in 0..n {
+        receivers.push(
+            pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap())
+                .expect("block policy admits"),
+        );
+    }
+    let mut ok = 0u64;
+    for rx in receivers {
+        if rx.recv_timeout(Duration::from_secs(30)).expect("resolves").is_ok() {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, n as u64);
+    assert_eq!(pipe.metrics.accounted(), n as u64);
+    assert_eq!(
+        pipe.stage_metrics(1).requests.load(Ordering::Relaxed),
+        pipe.stage_metrics(1).ok_frames.load(Ordering::Relaxed)
+    );
+    pipe.shutdown();
+}
