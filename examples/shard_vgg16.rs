@@ -1,10 +1,13 @@
 //! Multi-FPGA sharding quickstart: is a pair of mid-range boards worth
-//! more than one big one?
+//! more than one big one — and what does *replicating* a stage buy on
+//! top of cutting?
 //!
 //! Partitions VGG16 across 2× ZCU102 (linked by 100 GbE-class serdes)
 //! and compares the end-to-end model against a single VU9P running the
 //! whole network — the classic scale-out vs scale-up question the shard
-//! planner answers from the analytical models alone.
+//! planner answers from the analytical models alone. Then re-plans the
+//! pair with `max_replicas = 2`, letting the planner interleave frames
+//! across both boards instead of (or as well as) cutting between them.
 //!
 //! ```sh
 //! cargo run --release --example shard_vgg16
@@ -13,7 +16,7 @@
 
 use dnnexplorer::dnn::{zoo, Precision, TensorShape};
 use dnnexplorer::dse::cache::EvalCache;
-use dnnexplorer::dse::multi::compare_board_counts;
+use dnnexplorer::dse::multi::{compare_board_counts, compare_replication};
 use dnnexplorer::dse::pso::PsoParams;
 use dnnexplorer::report::tables;
 use dnnexplorer::shard::{partition, ShardConfig};
@@ -66,6 +69,30 @@ fn main() {
         "verdict: two mid-range boards deliver {:.2}x the big board's throughput",
         ratio
     );
+
+    // Interleave: the same pair, but stages may replicate across both
+    // boards (round-robin frames, re-ordered on the way out). The
+    // contiguous plans above are a subset of this search space, so the
+    // replicated side never models worse — the question is the margin.
+    let rep_cfg = ShardConfig { max_replicas: 2, ..cfg.clone() };
+    let outcome = compare_replication(&net, &cluster, &rep_cfg, &cache);
+    if let (Some(contig), Some(rep)) = (&outcome.contiguous, &outcome.replicated) {
+        println!(
+            "\nbest contiguous   : {:>8.1} GOP/s (bottleneck {})",
+            contig.gops,
+            contig.bottleneck()
+        );
+        println!(
+            "best w/ replicas  : {:>8.1} GOP/s (max r = {}, bottleneck {})",
+            rep.gops,
+            rep.max_replication(),
+            rep.bottleneck()
+        );
+        if let Some(gain) = outcome.gain() {
+            println!("interleaving gain : {:.2}x", gain);
+        }
+        print!("{}", rep.render());
+    }
     println!(
         "cache: {} design points, {} hits / {} misses",
         cache.len(),

@@ -18,8 +18,13 @@
 //!   the [`ModelExecutor`] trait.
 //! * [`router`] — N-worker pool ([`Router`]) over one shared queue.
 //! * [`sharded`] — the multi-board chain ([`ShardedPipeline`]): one
-//!   per-board server per shard stage, linked by forwarder threads, with
-//!   per-stage *and* end-to-end metrics that both reconcile.
+//!   replica group of per-board servers per shard stage, linked by
+//!   forwarder threads that issue frames round-robin across replicas
+//!   and re-order completions, with per-replica, per-stage, *and*
+//!   end-to-end metrics that all reconcile.
+//! * [`reorder`] — the in-order, exactly-once release buffer
+//!   ([`ReorderBuffer`]) the forwarders use to absorb arbitrary replica
+//!   completion orders.
 //! * [`batcher`] — the batch-shape policy ([`BatcherConfig`]).
 //! * [`metrics`] — lock-free counters/gauges with an exact
 //!   `requests == ok_frames + errors + shed` accounting invariant.
@@ -34,6 +39,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
+pub mod reorder;
 pub mod router;
 pub mod server;
 pub mod sharded;
@@ -45,6 +51,7 @@ pub use queue::{
     AdmissionQueue, InferenceRequest, OverloadPolicy, QueueConfig, QueueOrdering, ServeError,
     ServeHandle,
 };
+pub use reorder::ReorderBuffer;
 pub use router::Router;
 pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};
-pub use sharded::{ShardedPipeline, StageSpec};
+pub use sharded::{ShardedPipeline, StageSpec, StageTotals};

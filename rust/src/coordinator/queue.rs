@@ -19,7 +19,11 @@
 //!   first; queues where nothing carries a deadline behave exactly like
 //!   FIFO, and [`QueueOrdering::Fifo`] forces arrival order for A/B
 //!   comparison (see `tests/overload.rs`: EDF strictly reduces
-//!   `DeadlineExceeded` under mixed-deadline load).
+//!   `DeadlineExceeded` under mixed-deadline load). EDF pops come from
+//!   a deadline-keyed binary heap kept beside the FIFO deque (lazy
+//!   deletion, bounded slack), so pop cost is O(log depth) — not the
+//!   O(depth) scan it once was; `tests/queue_scale.rs` pins both the
+//!   scaling and the pop order against a reference scan.
 //! * **Convoy-free batching** — workers fill a batch under a [`Condvar`],
 //!   which *releases* the queue lock while waiting for stragglers, so a
 //!   worker collecting a partial batch never blocks the other workers
@@ -33,7 +37,8 @@
 //! `shed` (refused or evicted at admission), so
 //! `requests == ok_frames + errors + shed` at quiescence.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::fmt;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -151,9 +156,107 @@ pub struct InferenceRequest {
     pub deadline: Option<Instant>,
 }
 
+/// Resident requests plus the two orderings over them.
+///
+/// Requests live in `map` under an admission sequence number; `fifo`
+/// holds arrival order and `deadlines` is a min-heap over
+/// `(deadline, seq)` — so an EDF pop is O(log depth) instead of the
+/// O(depth) scan this used to be. Both index structures are **lazily
+/// pruned**: a pop from one leaves a stale seq in the other, skipped
+/// (and discarded) when it surfaces; [`QueueState::prune`] bounds the
+/// slack so stale entries cannot accumulate behind a long-lived head.
+///
+/// The heap key `(deadline, seq)` reproduces the scan's order exactly:
+/// earliest deadline first, arrival order on ties, and arrival order
+/// outright when no deadlined request waits.
 struct QueueState {
-    queue: VecDeque<InferenceRequest>,
+    map: HashMap<u64, InferenceRequest>,
+    fifo: VecDeque<u64>,
+    deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
+    next_seq: u64,
     closed: bool,
+}
+
+impl QueueState {
+    fn new() -> Self {
+        Self {
+            map: HashMap::new(),
+            fifo: VecDeque::new(),
+            deadlines: BinaryHeap::new(),
+            next_seq: 0,
+            closed: false,
+        }
+    }
+
+    /// Resident request count.
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn push(&mut self, req: InferenceRequest) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if let Some(d) = req.deadline {
+            self.deadlines.push(Reverse((d, seq)));
+        }
+        self.fifo.push_back(seq);
+        self.map.insert(seq, req);
+    }
+
+    /// Oldest resident request (arrival order), skipping stale seqs.
+    fn pop_fifo(&mut self) -> Option<InferenceRequest> {
+        while let Some(seq) = self.fifo.pop_front() {
+            if let Some(req) = self.map.remove(&seq) {
+                self.prune();
+                return Some(req);
+            }
+        }
+        None
+    }
+
+    /// Earliest-deadline resident request, falling back to arrival
+    /// order when nothing carries a deadline (FIFO-degenerate).
+    fn pop_edf(&mut self) -> Option<InferenceRequest> {
+        while let Some(&Reverse((_, seq))) = self.deadlines.peek() {
+            self.deadlines.pop();
+            if let Some(req) = self.map.remove(&seq) {
+                self.prune();
+                return Some(req);
+            }
+        }
+        self.pop_fifo()
+    }
+
+    fn pop_next(&mut self, ordering: QueueOrdering) -> Option<InferenceRequest> {
+        match ordering {
+            QueueOrdering::Fifo => self.pop_fifo(),
+            QueueOrdering::Edf => self.pop_edf(),
+        }
+    }
+
+    /// Bound the lazy-deletion slack: once an index structure holds
+    /// more than ~2x the live entries, sweep its stale seqs. Amortized
+    /// O(1) per pop, and memory stays proportional to residency even
+    /// when EDF keeps draining around a deadline-less head.
+    fn prune(&mut self) {
+        let live = self.map.len();
+        if self.fifo.len() > 2 * live + 64 {
+            let map = &self.map;
+            self.fifo.retain(|s| map.contains_key(s));
+        }
+        if self.deadlines.len() > 2 * live + 64 {
+            let map = &self.map;
+            let kept: Vec<Reverse<(Instant, u64)>> = self
+                .deadlines
+                .drain()
+                .filter(|r| {
+                    let Reverse((_, seq)) = r;
+                    map.contains_key(seq)
+                })
+                .collect();
+            self.deadlines = BinaryHeap::from(kept);
+        }
+    }
 }
 
 /// Bounded, deadline-aware MPMC batch queue shared by all workers of a
@@ -177,7 +280,7 @@ impl AdmissionQueue {
         let mut batch = cfg.batch;
         batch.batch_size = batch.batch_size.max(1);
         Self {
-            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState::new()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             batch,
@@ -217,9 +320,9 @@ impl AdmissionQueue {
                 self.metrics.record_shed();
                 return Err(ServeError::Closed);
             }
-            if state.queue.len() < self.capacity {
-                state.queue.push_back(req);
-                self.metrics.set_queue_depth(state.queue.len());
+            if state.len() < self.capacity {
+                state.push(req);
+                self.metrics.set_queue_depth(state.len());
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -232,7 +335,7 @@ impl AdmissionQueue {
                     return Err(ServeError::Overloaded);
                 }
                 OverloadPolicy::ShedOldest => {
-                    if let Some(old) = state.queue.pop_front() {
+                    if let Some(old) = state.pop_fifo() {
                         self.metrics.record_shed();
                         let _ = old.respond.send(Err(ServeError::Overloaded));
                     }
@@ -242,43 +345,15 @@ impl AdmissionQueue {
         }
     }
 
-    /// Index of the next request to pull under the configured ordering.
-    /// FIFO: the head. EDF: the earliest deadline among deadlined
-    /// waiters (ties to arrival order — the scan keeps the first), or
-    /// the head when nothing carries a deadline (FIFO-degenerate).
-    /// Caller holds the state lock; `None` iff the queue is empty.
-    ///
-    /// The EDF scan is O(resident depth) under the state lock — fine at
-    /// the default capacity (≤ 1024: a linear pass over pointers), but
-    /// a deadline-keyed heap beside the FIFO deque is the follow-on if
-    /// capacities grow by orders of magnitude (see ROADMAP).
-    fn next_index(&self, state: &QueueState) -> Option<usize> {
-        if state.queue.is_empty() {
-            return None;
-        }
-        match self.ordering {
-            QueueOrdering::Fifo => Some(0),
-            QueueOrdering::Edf => {
-                let mut best: Option<(usize, Instant)> = None;
-                for (i, r) in state.queue.iter().enumerate() {
-                    if let Some(d) = r.deadline {
-                        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
-                            best = Some((i, d));
-                        }
-                    }
-                }
-                Some(best.map(|(i, _)| i).unwrap_or(0))
-            }
-        }
-    }
-
     /// Pop the next request that is still worth executing, resolving any
     /// expired ones to [`ServeError::DeadlineExceeded`] along the way.
-    /// Caller holds the state lock.
+    /// Caller holds the state lock. FIFO pops the head; EDF pops the
+    /// earliest deadline (ties to arrival order) from the deadline heap,
+    /// or the head when nothing carries a deadline — O(log depth)
+    /// either way.
     fn pop_live(&self, state: &mut QueueState) -> Option<InferenceRequest> {
-        while let Some(i) = self.next_index(state) {
-            let req = state.queue.remove(i).expect("next_index out of range");
-            self.metrics.set_queue_depth(state.queue.len());
+        while let Some(req) = state.pop_next(self.ordering) {
+            self.metrics.set_queue_depth(state.len());
             self.not_full.notify_one();
             match req.deadline {
                 Some(d) if Instant::now() >= d => {
@@ -348,7 +423,7 @@ impl AdmissionQueue {
 
     /// Current resident count (diagnostic; racy by nature).
     pub fn depth(&self) -> usize {
-        self.state.lock().expect("admission queue poisoned").queue.len()
+        self.state.lock().expect("admission queue poisoned").len()
     }
 }
 

@@ -1,0 +1,192 @@
+//! Sequence re-ordering for replicated pipeline stages.
+//!
+//! A replica group serves frames concurrently, so completions arrive in
+//! arbitrary order; the dispatcher must still hand every frame to the
+//! next stage (or the client) **in admission order, exactly once**. The
+//! [`ReorderBuffer`] is that guarantee as a data structure: items are
+//! pushed under their admission sequence number in any order, and
+//! [`ReorderBuffer::pop_next`] releases them strictly sequentially —
+//! an item is held until every earlier sequence number has been pushed
+//! or explicitly [`ReorderBuffer::skip`]ped (a frame that died before
+//! reaching this point, e.g. refused at admission).
+//!
+//! Invariants (property-tested in `tests/proptests.rs` under arbitrary
+//! completion orders):
+//!
+//! * every pushed sequence number is popped exactly once;
+//! * pops come out in strictly ascending sequence order;
+//! * a sequence number is never popped before all predecessors were
+//!   pushed or skipped;
+//! * duplicate pushes/skips and regressions below the release horizon
+//!   are rejected loudly (they would mean a dispatcher bug).
+
+use std::collections::BTreeMap;
+
+/// In-order release buffer over `u64` sequence numbers.
+#[derive(Debug)]
+pub struct ReorderBuffer<T> {
+    /// Next sequence number eligible for release.
+    next: u64,
+    /// Out-of-order arrivals: `Some` = a real item, `None` = a skip.
+    pending: BTreeMap<u64, Option<T>>,
+    released: u64,
+    skipped: u64,
+}
+
+impl<T> Default for ReorderBuffer<T> {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl<T> ReorderBuffer<T> {
+    /// Buffer whose first expected sequence number is `start`.
+    pub fn new(start: u64) -> Self {
+        Self { next: start, pending: BTreeMap::new(), released: 0, skipped: 0 }
+    }
+
+    /// Register the completion of `seq`. Panics on a duplicate or on a
+    /// sequence number already released — both are dispatcher bugs, and
+    /// silently absorbing them would break exactly-once delivery.
+    pub fn push(&mut self, seq: u64, item: T) {
+        assert!(seq >= self.next, "reorder: seq {seq} already released (next {})", self.next);
+        let prev = self.pending.insert(seq, Some(item));
+        assert!(prev.is_none(), "reorder: duplicate seq {seq}");
+    }
+
+    /// Register that `seq` will never produce an item (died upstream):
+    /// later frames must not wait for it.
+    pub fn skip(&mut self, seq: u64) {
+        assert!(seq >= self.next, "reorder: seq {seq} already released (next {})", self.next);
+        let prev = self.pending.insert(seq, None);
+        assert!(prev.is_none(), "reorder: duplicate seq {seq}");
+    }
+
+    /// Release the next in-order item, if its turn has come. Skipped
+    /// sequence numbers are passed over transparently.
+    pub fn pop_next(&mut self) -> Option<(u64, T)> {
+        loop {
+            match self.pending.remove(&self.next) {
+                Some(Some(item)) => {
+                    let seq = self.next;
+                    self.next += 1;
+                    self.released += 1;
+                    return Some((seq, item));
+                }
+                Some(None) => {
+                    self.next += 1;
+                    self.skipped += 1;
+                }
+                None => return None,
+            }
+        }
+    }
+
+    /// Sequence number the buffer is waiting on.
+    pub fn awaiting(&self) -> u64 {
+        self.next
+    }
+
+    /// Completions held out of order (plus skips not yet passed).
+    pub fn held(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Items released in order so far.
+    pub fn released(&self) -> u64 {
+        self.released
+    }
+
+    /// Sequence numbers passed over as skips so far.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// True when nothing is buffered (all arrivals released).
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Abandon in-order release and hand back everything still held, in
+    /// sequence order — the shutdown escape hatch when a hole can never
+    /// fill (its frame died without a skip, e.g. a submission racing
+    /// shutdown). The buffer is empty afterwards.
+    pub fn drain(&mut self) -> Vec<(u64, T)> {
+        let pending = std::mem::take(&mut self.pending);
+        pending
+            .into_iter()
+            .filter_map(|(seq, item)| item.map(|t| (seq, t)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_in_order_despite_reversed_completions() {
+        let mut b = ReorderBuffer::new(0);
+        for seq in (0..5).rev() {
+            b.push(seq, seq * 10);
+        }
+        let mut out = Vec::new();
+        while let Some((seq, v)) = b.pop_next() {
+            out.push((seq, v));
+        }
+        assert_eq!(out, vec![(0, 0), (1, 10), (2, 20), (3, 30), (4, 40)]);
+        assert!(b.is_empty());
+        assert_eq!(b.released(), 5);
+    }
+
+    #[test]
+    fn holds_until_the_gap_fills() {
+        let mut b = ReorderBuffer::new(0);
+        b.push(1, "b");
+        b.push(2, "c");
+        assert!(b.pop_next().is_none(), "0 missing: nothing releasable");
+        assert_eq!(b.held(), 2);
+        b.push(0, "a");
+        assert_eq!(b.pop_next(), Some((0, "a")));
+        assert_eq!(b.pop_next(), Some((1, "b")));
+        assert_eq!(b.pop_next(), Some((2, "c")));
+        assert_eq!(b.pop_next(), None);
+    }
+
+    #[test]
+    fn skips_release_successors() {
+        let mut b = ReorderBuffer::new(0);
+        b.push(2, "c");
+        b.skip(0);
+        assert_eq!(b.pop_next(), None, "1 still missing");
+        b.skip(1);
+        assert_eq!(b.pop_next(), Some((2, "c")));
+        assert_eq!(b.skipped(), 2);
+        assert_eq!(b.awaiting(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_push_panics() {
+        let mut b = ReorderBuffer::new(0);
+        b.push(3, 1);
+        b.push(3, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already released")]
+    fn regressing_below_the_horizon_panics() {
+        let mut b = ReorderBuffer::new(0);
+        b.push(0, 1);
+        b.pop_next();
+        b.push(0, 2);
+    }
+
+    #[test]
+    fn nonzero_start() {
+        let mut b = ReorderBuffer::new(100);
+        b.push(100, ());
+        assert_eq!(b.pop_next(), Some((100, ())));
+        assert_eq!(b.awaiting(), 101);
+    }
+}

@@ -1,35 +1,45 @@
-//! Sharded serving: chain per-board [`AcceleratorServer`] stages into
-//! one pipeline, mirroring a [`crate::shard::ShardPlan`] deployment.
+//! Sharded serving: chain per-board [`AcceleratorServer`] stages —
+//! each optionally a **replica group** — into one pipeline, mirroring a
+//! [`crate::shard::ShardPlan`] deployment.
 //!
-//! Each stage is a full single-board coordinator — its own
+//! Each replica is a full single-board coordinator — its own
 //! [`AdmissionQueue`], worker thread, executor, and [`Metrics`] — so
 //! per-board admission control and accounting behave exactly as in the
 //! single-FPGA path. Between consecutive stages sits a **forwarder**
-//! thread standing in for the inter-board link: it waits for stage `i`'s
-//! result and submits it to stage `i+1`, carrying the request's response
-//! channel along.
+//! thread standing in for the inter-board links: it harvests stage
+//! `i`'s completions (which arrive in arbitrary order across the
+//! replicas), re-orders them through a [`ReorderBuffer`], and issues
+//! them **round-robin** (`seq % replicas`) into stage `i+1`, carrying
+//! each request's response channel along. Frames therefore leave every
+//! stage — and the pipeline — in admission order, exactly once,
+//! regardless of replica completion order.
 //!
 //! ## Accounting
 //!
-//! Two layers of metrics, both reconciling exactly at quiescence:
+//! Three layers of metrics, all reconciling exactly at quiescence:
 //!
-//! * **per stage** — each stage's own `requests == ok_frames + errors +
-//!   shed` invariant (stage `i+1`'s `requests` counts what the forwarder
-//!   submitted to it, not what entered the pipeline);
+//! * **per replica** — each server's own `requests == ok_frames +
+//!   errors + shed` invariant;
+//! * **per stage** — [`ShardedPipeline::stage_totals`] sums the
+//!   replicas; a stage's `requests` counts what the dispatcher issued
+//!   to it (not what entered the pipeline);
 //! * **end-to-end** — the pipeline's [`Metrics`]: a request counts into
 //!   `shed` iff refused at first-stage admission, `ok_frames` iff the
 //!   last stage produced its tensor, `errors` otherwise (any stage
 //!   failing, expiring, or refusing mid-pipeline), so
 //!   `requests == ok_frames + errors + shed` end-to-end too
-//!   (`tests/shard_integration.rs` drives this).
+//!   (`tests/shard_integration.rs` and `tests/sim_vs_model.rs` drive
+//!   this).
 
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{QueueConfig, ServeError};
+use crate::coordinator::reorder::ReorderBuffer;
 use crate::coordinator::server::{AcceleratorServer, ModelExecutor, ServerHandle};
 use crate::runtime::executable::HostTensor;
 
@@ -40,28 +50,35 @@ impl ModelExecutor for Box<dyn ModelExecutor> {
     }
 }
 
-/// Builder of one pipeline stage: the executor factory (run inside the
-/// stage's worker thread, like [`AcceleratorServer::spawn_with`]) plus
-/// the stage's admission policy.
+type ExecFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ModelExecutor>> + Send + 'static>;
+
+/// Builder of one pipeline stage: one executor factory per replica
+/// (each run inside its server's worker thread, like
+/// [`AcceleratorServer::spawn_with`]) plus the stage's admission policy
+/// (applied to every replica's queue).
 pub struct StageSpec {
-    pub factory: Box<dyn FnOnce() -> anyhow::Result<Box<dyn ModelExecutor>> + Send + 'static>,
+    factories: Vec<ExecFactory>,
     pub queue: QueueConfig,
 }
 
 impl StageSpec {
-    /// A stage from any concrete executor factory with a queue config.
+    /// A single-replica stage from any concrete executor factory with a
+    /// queue config.
     pub fn with_queue<E, F>(factory: F, queue: QueueConfig) -> Self
     where
         E: ModelExecutor,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
         Self {
-            factory: Box::new(move || factory().map(|e| Box::new(e) as Box<dyn ModelExecutor>)),
+            factories: vec![Box::new(move || {
+                factory().map(|e| Box::new(e) as Box<dyn ModelExecutor>)
+            }) as ExecFactory],
             queue,
         }
     }
 
-    /// A stage with the default (generous, blocking) admission bound.
+    /// A single-replica stage with the default (generous, blocking)
+    /// admission bound.
     pub fn new<E, F>(factory: F) -> Self
     where
         E: ModelExecutor,
@@ -69,12 +86,56 @@ impl StageSpec {
     {
         Self::with_queue(factory, QueueConfig::default())
     }
+
+    /// A stage replicated across `replicas` boards: `make(k)` builds
+    /// replica `k`'s executor (inside that replica's worker thread).
+    /// Frames are issued round-robin by admission sequence number and
+    /// re-ordered on the way out.
+    pub fn replicated<E, F>(replicas: usize, make: F, queue: QueueConfig) -> Self
+    where
+        E: ModelExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Clone + Send + 'static,
+    {
+        assert!(replicas >= 1, "a stage needs at least one replica");
+        let factories = (0..replicas)
+            .map(|k| {
+                let make = make.clone();
+                Box::new(move || make(k).map(|e| Box::new(e) as Box<dyn ModelExecutor>))
+                    as ExecFactory
+            })
+            .collect();
+        Self { factories, queue }
+    }
+
+    /// Number of replicas this stage will spawn.
+    pub fn replicas(&self) -> usize {
+        self.factories.len()
+    }
 }
 
-/// One in-flight request travelling the stage chain: where its current
-/// stage will answer, when it entered the pipeline, and where the final
-/// answer must go.
+/// Per-stage counter roll-up over a replica group (loads are relaxed;
+/// exact at quiescence).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTotals {
+    pub requests: u64,
+    pub ok_frames: u64,
+    pub errors: u64,
+    pub shed: u64,
+}
+
+impl StageTotals {
+    /// `ok_frames + errors + shed`; equals `requests` at quiescence.
+    pub fn accounted(&self) -> u64 {
+        self.ok_frames + self.errors + self.shed
+    }
+}
+
+/// One in-flight request travelling the stage chain: its admission
+/// sequence number (the reorder key), where its current stage will
+/// answer, when it entered the pipeline, and where the final answer
+/// must go.
 struct InFlight {
+    seq: u64,
     rx: Receiver<Result<HostTensor, ServeError>>,
     entered: Instant,
     respond: SyncSender<Result<HostTensor, ServeError>>,
@@ -82,49 +143,76 @@ struct InFlight {
 
 enum FeedMsg {
     Job(InFlight),
+    /// `seq` died upstream (settled as an error): the reorder buffer
+    /// must not wait for it.
+    Skip(u64),
     Close,
 }
 
-/// A chain of per-board accelerator servers serving one sharded network.
+/// A chain of (replica groups of) per-board accelerator servers serving
+/// one sharded network.
 pub struct ShardedPipeline {
-    stages: Vec<AcceleratorServer>,
+    /// `stages[i]` = stage `i`'s replica servers, in board order.
+    stages: Vec<Vec<AcceleratorServer>>,
     forwarders: Vec<Option<JoinHandle<()>>>,
     /// Senders into each forwarder (index i watches stage i's results).
     feeds: Vec<mpsc::Sender<FeedMsg>>,
-    /// End-to-end metrics (per-stage metrics live on each stage).
+    /// Replica round-robin cursor for first-stage admission.
+    rr: AtomicU64,
+    /// Admission sequence numbers (assigned to *admitted* frames only,
+    /// so the sequence space is contiguous).
+    next_seq: AtomicU64,
+    /// End-to-end metrics (per-replica metrics live on each server).
     pub metrics: Arc<Metrics>,
 }
 
 impl ShardedPipeline {
-    /// Spawn one server per stage spec plus the forwarder chain between
-    /// them. At least one stage is required.
+    /// Spawn every stage's replica servers plus the forwarder chain
+    /// between stages. At least one stage is required.
     pub fn spawn(specs: Vec<StageSpec>) -> anyhow::Result<Self> {
         anyhow::ensure!(!specs.is_empty(), "sharded pipeline needs at least one stage");
         let metrics = Arc::new(Metrics::new());
-        let mut stages = Vec::with_capacity(specs.len());
+        let mut stages: Vec<Vec<AcceleratorServer>> = Vec::with_capacity(specs.len());
         for spec in specs {
-            stages.push(AcceleratorServer::spawn_with(spec.factory, spec.queue)?);
+            let mut group = Vec::with_capacity(spec.factories.len());
+            for factory in spec.factories {
+                group.push(AcceleratorServer::spawn_with(factory, spec.queue.clone())?);
+            }
+            anyhow::ensure!(!group.is_empty(), "a stage needs at least one replica");
+            stages.push(group);
         }
         let count = stages.len();
 
         // Forwarders are built back-to-front: forwarder i needs the
-        // handle of stage i+1 and the feed of forwarder i+1.
+        // handles of stage i+1's replicas and the feed of forwarder i+1.
         let mut feeds: Vec<Option<mpsc::Sender<FeedMsg>>> = (0..count).map(|_| None).collect();
         let mut forwarders = Vec::with_capacity(count);
         for i in (0..count).rev() {
             let (tx, rx) = mpsc::channel::<FeedMsg>();
-            let next_stage: Option<ServerHandle> =
-                stages.get(i + 1).map(|s: &AcceleratorServer| s.handle());
-            let next_feed = feeds.get(i + 1).and_then(|f| f.clone());
+            let next = if i + 1 < count {
+                let handles: Vec<ServerHandle> =
+                    stages[i + 1].iter().map(|s| s.handle()).collect();
+                let feed = feeds[i + 1].clone().expect("next feed built");
+                Some((handles, feed))
+            } else {
+                None
+            };
             let e2e = metrics.clone();
             forwarders.push(Some(std::thread::spawn(move || {
-                forward_loop(rx, next_stage, next_feed, e2e);
+                forward_loop(rx, next, e2e);
             })));
             feeds[i] = Some(tx);
         }
         forwarders.reverse(); // index i == forwarder of stage i
         let feeds = feeds.into_iter().map(|f| f.expect("feed built")).collect();
-        Ok(Self { stages, forwarders, feeds, metrics })
+        Ok(Self {
+            stages,
+            forwarders,
+            feeds,
+            rr: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            metrics,
+        })
     }
 
     /// Number of chained stages.
@@ -132,27 +220,67 @@ impl ShardedPipeline {
         self.stages.len()
     }
 
-    /// Stage `i`'s own metrics (admission, batching, reconciliation).
-    pub fn stage_metrics(&self, i: usize) -> &Arc<Metrics> {
-        &self.stages[i].metrics
+    /// Number of replicas serving stage `i`.
+    pub fn replica_count(&self, stage: usize) -> usize {
+        self.stages[stage].len()
     }
 
-    /// Open-loop submission: admit one frame at the first stage and
-    /// return the receiver of the **final** stage's output. A refusal at
-    /// first-stage admission counts as `shed` end-to-end and surfaces
-    /// here; anything later resolves through the receiver.
+    /// Replica `k` of stage `i`'s own metrics (admission, batching,
+    /// reconciliation).
+    pub fn replica_metrics(&self, stage: usize, replica: usize) -> &Arc<Metrics> {
+        &self.stages[stage][replica].metrics
+    }
+
+    /// Stage `i`'s counters summed over its replicas.
+    pub fn stage_totals(&self, stage: usize) -> StageTotals {
+        let mut t = StageTotals::default();
+        for s in &self.stages[stage] {
+            t.requests += s.metrics.requests.load(Ordering::Relaxed);
+            t.ok_frames += s.metrics.ok_frames.load(Ordering::Relaxed);
+            t.errors += s.metrics.errors.load(Ordering::Relaxed);
+            t.shed += s.metrics.shed.load(Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Open-loop submission: admit one frame at the first stage
+    /// (round-robin across its replicas) and return the receiver of the
+    /// **final** stage's output. A refusal at first-stage admission
+    /// counts as `shed` end-to-end and surfaces here; anything later
+    /// resolves through the receiver — in admission order, the reorder
+    /// buffers guarantee.
+    ///
+    /// Round-robin is *strict*: each frame's replica is fixed by the
+    /// cursor and the overload policy applies to that replica's queue
+    /// alone — deliberately the discipline the planner models
+    /// (`perfmodel::interleave` assumes even spreading). Under `Reject`
+    /// a stalled replica therefore sheds its share of frames even if a
+    /// sibling has room; spilling to siblings (which would break the
+    /// even-spread assumption under sustained skew) is a ROADMAP
+    /// follow-on.
     pub fn submit_frame(
         &self,
         input: HostTensor,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
-        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let entered = Instant::now();
         let (respond, final_rx) = mpsc::sync_channel(1);
-        match self.stages[0].handle().submit_frame(input) {
+        let group = &self.stages[0];
+        let replica = (self.rr.fetch_add(1, Ordering::Relaxed) % group.len() as u64) as usize;
+        match group[replica].handle().submit_frame(input) {
             Ok(rx) => {
-                self.feeds[0]
-                    .send(FeedMsg::Job(InFlight { rx, entered, respond }))
-                    .expect("forwarder 0 alive while pipeline open");
+                // The sequence number is taken *after* admission, so
+                // refused frames leave no hole in the reorder space.
+                let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+                if self.feeds[0]
+                    .send(FeedMsg::Job(InFlight { seq, rx, entered, respond }))
+                    .is_err()
+                {
+                    // Forwarder gone (shutdown race): the dropped
+                    // respond channel reads as Closed; account the
+                    // admitted request so the books still balance.
+                    self.metrics.record_failure(entered.elapsed());
+                }
                 Ok(final_rx)
             }
             Err(e) => {
@@ -170,14 +298,17 @@ impl ShardedPipeline {
         }
     }
 
-    /// Drain and stop, front to back: close stage i's admission, let its
-    /// worker finish every resident request, let forwarder i push the
-    /// results into stage i+1, then move down the chain.
+    /// Drain and stop, front to back: close stage i's replicas, let
+    /// their workers finish every resident request, let forwarder i
+    /// re-order and push the results into stage i+1, then move down the
+    /// chain.
     pub fn shutdown(mut self) {
         for i in 0..self.stages.len() {
             // Stop the stage: admission closes, resident requests drain,
             // so every receiver forwarder i waits on resolves.
-            self.stages[i].close_and_join();
+            for server in &mut self.stages[i] {
+                server.close_and_join();
+            }
             // All jobs for forwarder i are enqueued by now (its only
             // producer — the pipeline front or forwarder i-1 — is done),
             // so Close lands after the last job.
@@ -189,52 +320,158 @@ impl ShardedPipeline {
     }
 }
 
-/// The forwarder body for stage `i`: resolve each in-flight request of
-/// stage `i` and either hand it to stage `i+1` or settle it end-to-end.
-fn forward_loop(
-    rx: Receiver<FeedMsg>,
-    next_stage: Option<ServerHandle>,
-    next_feed: Option<mpsc::Sender<FeedMsg>>,
-    e2e: Arc<Metrics>,
+/// Hand one re-ordered result to the next stage (round-robin by
+/// sequence number) or settle it end-to-end.
+fn deliver(
+    job: InFlight,
+    result: Result<HostTensor, ServeError>,
+    next: &Option<(Vec<ServerHandle>, mpsc::Sender<FeedMsg>)>,
+    e2e: &Metrics,
 ) {
-    while let Ok(msg) = rx.recv() {
-        let job = match msg {
-            FeedMsg::Job(j) => j,
-            FeedMsg::Close => break,
-        };
-        let result = match job.rx.recv() {
-            Ok(r) => r,
-            // Stage dropped the response channel mid-shutdown.
-            Err(_) => Err(ServeError::Closed),
-        };
-        match (result, &next_stage) {
-            (Ok(tensor), Some(next)) => match next.submit_frame(tensor) {
-                Ok(next_rx) => {
-                    let fwd = InFlight { rx: next_rx, entered: job.entered, respond: job.respond };
-                    if let Some(feed) = &next_feed {
-                        if feed.send(FeedMsg::Job(fwd)).is_err() {
-                            // Next forwarder gone (shutdown race): the
-                            // dropped respond channel reads as Closed.
-                            e2e.record_failure(std::time::Duration::ZERO);
-                        }
+    match (result, next) {
+        (Ok(tensor), Some((handles, next_feed))) => {
+            let replica = (job.seq % handles.len() as u64) as usize;
+            match handles[replica].submit_frame(tensor) {
+                Ok(rx) => {
+                    let fwd =
+                        InFlight { seq: job.seq, rx, entered: job.entered, respond: job.respond };
+                    if next_feed.send(FeedMsg::Job(fwd)).is_err() {
+                        // Next forwarder gone (shutdown race): the
+                        // dropped respond channel reads as Closed.
+                        e2e.record_failure(Duration::ZERO);
                     }
                 }
                 Err(e) => {
                     // Mid-pipeline refusal: an end-to-end error (the
-                    // request was already admitted at the front).
+                    // request was already admitted at the front). The
+                    // next reorder buffer must not wait for this seq.
                     e2e.record_failure(job.entered.elapsed());
+                    let _ = next_feed.send(FeedMsg::Skip(job.seq));
                     let _ = job.respond.send(Err(e));
                 }
-            },
-            (Ok(tensor), None) => {
-                e2e.record_success(job.entered.elapsed());
-                let _ = job.respond.send(Ok(tensor));
-            }
-            (Err(e), _) => {
-                e2e.record_failure(job.entered.elapsed());
-                let _ = job.respond.send(Err(e));
             }
         }
+        (Ok(tensor), None) => {
+            e2e.record_success(job.entered.elapsed());
+            let _ = job.respond.send(Ok(tensor));
+        }
+        (Err(e), next) => {
+            e2e.record_failure(job.entered.elapsed());
+            if let Some((_, next_feed)) = next {
+                let _ = next_feed.send(FeedMsg::Skip(job.seq));
+            }
+            let _ = job.respond.send(Err(e));
+        }
+    }
+}
+
+/// The forwarder body for stage `i`: harvest the stage's completions
+/// (in whatever order the replicas finish), re-order them, and deliver
+/// strictly in admission order.
+fn forward_loop(
+    feed: Receiver<FeedMsg>,
+    next: Option<(Vec<ServerHandle>, mpsc::Sender<FeedMsg>)>,
+    e2e: Arc<Metrics>,
+) {
+    use std::collections::BTreeMap;
+
+    let mut pending: BTreeMap<u64, InFlight> = BTreeMap::new();
+    let mut buffer: ReorderBuffer<(InFlight, Result<HostTensor, ServeError>)> =
+        ReorderBuffer::new(0);
+    let mut closing = false;
+
+    let ingest = |msg: FeedMsg,
+                  pending: &mut BTreeMap<u64, InFlight>,
+                  buffer: &mut ReorderBuffer<(InFlight, Result<HostTensor, ServeError>)>|
+     -> bool {
+        match msg {
+            FeedMsg::Job(j) => {
+                pending.insert(j.seq, j);
+                false
+            }
+            FeedMsg::Skip(seq) => {
+                buffer.skip(seq);
+                false
+            }
+            FeedMsg::Close => true,
+        }
+    };
+
+    'run: loop {
+        // Make sure there is work; block on the feed when idle.
+        while pending.is_empty() {
+            if closing {
+                break 'run;
+            }
+            match feed.recv() {
+                Ok(msg) => closing |= ingest(msg, &mut pending, &mut buffer),
+                Err(_) => break 'run, // all producers gone
+            }
+        }
+        // Opportunistically drain the feed, then emit anything a skip
+        // just released.
+        loop {
+            match feed.try_recv() {
+                Ok(msg) => closing |= ingest(msg, &mut pending, &mut buffer),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closing = true;
+                    break;
+                }
+            }
+        }
+        while let Some((_, (job, result))) = buffer.pop_next() {
+            deliver(job, result, &next, &e2e);
+        }
+        let Some((seq, job)) = pending.pop_first() else { continue };
+        // Block on the earliest outstanding completion. Later frames
+        // may already have finished — their results wait in their own
+        // response slots — but nothing can be *delivered* before this
+        // seq anyway, so harvesting them early would buy no latency,
+        // only an O(pending) poll per frame.
+        let result = match job.rx.recv() {
+            Ok(r) => r,
+            // Replica dropped the response channel mid-shutdown.
+            Err(_) => Err(ServeError::Closed),
+        };
+        buffer.push(seq, (job, result));
+        // Emit everything now releasable, strictly in order (the push
+        // above plus anything a skip unblocked).
+        while let Some((_, (job, result))) = buffer.pop_next() {
+            deliver(job, result, &next, &e2e);
+        }
+    }
+
+    // Closing: producers are done. Resolve the stragglers in order.
+    loop {
+        while let Ok(msg) = feed.try_recv() {
+            ingest(msg, &mut pending, &mut buffer);
+        }
+        while let Some((_, (job, result))) = buffer.pop_next() {
+            deliver(job, result, &next, &e2e);
+        }
+        match pending.pop_first() {
+            Some((seq, job)) => {
+                let result = match job.rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => Err(ServeError::Closed),
+                };
+                buffer.push(seq, (job, result));
+            }
+            None => break,
+        }
+    }
+    while let Some((_, (job, result))) = buffer.pop_next() {
+        deliver(job, result, &next, &e2e);
+    }
+    // Anything still held is stuck behind a hole (a submission racing
+    // shutdown): settle as Closed so the end-to-end books balance.
+    for (_, (job, _)) in buffer.drain() {
+        e2e.record_failure(job.entered.elapsed());
+        if let Some((_, next_feed)) = &next {
+            let _ = next_feed.send(FeedMsg::Skip(job.seq));
+        }
+        let _ = job.respond.send(Err(ServeError::Closed));
     }
 }
 
@@ -242,7 +479,6 @@ fn forward_loop(
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatcherConfig;
-    use std::sync::atomic::Ordering;
     use std::time::Duration;
 
     /// Adds a constant to every element.
@@ -266,6 +502,15 @@ mod tests {
         }
     }
 
+    /// Sleeps a per-replica time, so replicas finish out of order.
+    struct JitterSleep(Duration);
+    impl ModelExecutor for JitterSleep {
+        fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            std::thread::sleep(self.0 * frames.len() as u32);
+            Ok(frames.to_vec())
+        }
+    }
+
     fn quick_queue(batch: usize) -> QueueConfig {
         QueueConfig {
             batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
@@ -282,6 +527,7 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(pipe.stage_count(), 3);
+        assert_eq!(pipe.replica_count(1), 1);
         let out = pipe.infer(HostTensor::new(vec![5.0], vec![1]).unwrap()).unwrap();
         assert_eq!(out.data, vec![116.0]);
         pipe.shutdown();
@@ -301,13 +547,100 @@ mod tests {
         assert_eq!(pipe.metrics.errors.load(Ordering::Relaxed), 1);
         assert_eq!(pipe.metrics.accounted(), 1);
         // Stage 0 succeeded, stage 1 failed — both reconcile.
-        assert_eq!(pipe.stage_metrics(0).ok_frames.load(Ordering::Relaxed), 1);
-        assert_eq!(pipe.stage_metrics(1).errors.load(Ordering::Relaxed), 1);
+        assert_eq!(pipe.stage_totals(0).ok_frames, 1);
+        assert_eq!(pipe.stage_totals(1).errors, 1);
         pipe.shutdown();
     }
 
     #[test]
     fn empty_pipeline_rejected() {
         assert!(ShardedPipeline::spawn(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn replicated_stage_preserves_order_and_spreads_load() {
+        // A 3-wide replicated middle stage whose replicas run at very
+        // different speeds: completions arrive wildly out of order, yet
+        // every frame leaves in admission order with the right value.
+        let delays = [1u64, 7, 3];
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::with_queue(|| Ok(AddN(1.0)), quick_queue(1)),
+            StageSpec::replicated(
+                3,
+                move |k| Ok(JitterSleep(Duration::from_millis(delays[k]))),
+                quick_queue(1),
+            ),
+            StageSpec::with_queue(|| Ok(AddN(100.0)), quick_queue(1)),
+        ])
+        .unwrap();
+        assert_eq!(pipe.replica_count(1), 3);
+
+        let n = 24usize;
+        let mut receivers = Vec::with_capacity(n);
+        for i in 0..n {
+            receivers
+                .push(pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap());
+        }
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let out = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("resolves")
+                .expect("serves");
+            assert_eq!(out.data, vec![i as f32 + 101.0], "frame {i}");
+        }
+
+        // Every replica of the middle stage served some frames, and the
+        // stage totals reconcile to the full load.
+        let totals = pipe.stage_totals(1);
+        assert_eq!(totals.requests, n as u64);
+        assert_eq!(totals.ok_frames, n as u64);
+        assert_eq!(totals.accounted(), totals.requests);
+        for k in 0..3 {
+            let served = pipe.replica_metrics(1, k).ok_frames.load(Ordering::Relaxed);
+            assert_eq!(served, (n / 3) as u64, "replica {k} share");
+        }
+        assert_eq!(pipe.metrics.ok_frames.load(Ordering::Relaxed), n as u64);
+        assert_eq!(pipe.metrics.accounted(), n as u64);
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn replicated_failures_skip_without_stalling_successors() {
+        // Replica 1 of the first stage always fails: frames 1, 3, 5, ...
+        // err while the others flow through, in order, past the reorder
+        // point.
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::replicated(
+                2,
+                |k| if k == 1 { Ok(Box::new(Failer) as Box<dyn ModelExecutor>) } else { Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>) },
+                quick_queue(1),
+            ),
+            StageSpec::with_queue(|| Ok(AddN(10.0)), quick_queue(1)),
+        ])
+        .unwrap();
+        let n = 10usize;
+        let mut receivers = Vec::with_capacity(n);
+        for i in 0..n {
+            receivers
+                .push(pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap());
+        }
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        for (i, rx) in receivers.into_iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("resolves") {
+                Ok(out) => {
+                    assert_eq!(out.data, vec![i as f32 + 11.0], "frame {i}");
+                    ok += 1;
+                }
+                Err(ServeError::Execution(_)) => failed += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(ok, 5);
+        assert_eq!(failed, 5);
+        assert_eq!(pipe.metrics.ok_frames.load(Ordering::Relaxed), 5);
+        assert_eq!(pipe.metrics.errors.load(Ordering::Relaxed), 5);
+        assert_eq!(pipe.metrics.accounted(), n as u64);
+        pipe.shutdown();
     }
 }

@@ -80,10 +80,31 @@ impl CacheKey {
 
 const SHARDS: usize = 16;
 
+/// Per-entry usage counters, carried through disk round-trips so a
+/// long-lived cache file can be compacted by recency
+/// (see [`crate::dse::persist`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EntryStats {
+    /// Times this entry answered a lookup.
+    pub hits: u64,
+    /// Logical clock tick of the last hit (or of insertion, if never
+    /// hit). Ticks are process-wide and monotone; under concurrency the
+    /// stamping order is best-effort, which only ever blurs *recency
+    /// ranking*, never correctness.
+    pub last_hit: u64,
+}
+
+/// One stored entry: the candidate (None = memoized infeasibility) plus
+/// its usage counters.
+struct Slot {
+    value: Option<Arc<Candidate>>,
+    stats: EntryStats,
+}
+
 /// One lock-protected slice of the memo table: the entries plus their
 /// insertion order (the FIFO eviction queue when a capacity is set).
 struct Shard {
-    map: HashMap<CacheKey, Option<Arc<Candidate>>>,
+    map: HashMap<CacheKey, Slot>,
     order: VecDeque<CacheKey>,
 }
 
@@ -112,6 +133,8 @@ pub struct EvalCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Logical clock for per-entry recency stamps.
+    clock: AtomicU64,
 }
 
 /// Hit/miss/eviction counters plus resident size, for logs and tests.
@@ -148,7 +171,13 @@ impl EvalCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
         }
+    }
+
+    /// Next logical tick for recency stamping.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Look `key` up; on a miss run `compute` (outside any lock) and
@@ -163,19 +192,28 @@ impl EvalCache {
         compute: impl FnOnce() -> Option<Candidate>,
     ) -> Option<Arc<Candidate>> {
         let shard = &self.shards[key.shard()];
-        if let Some(hit) = shard.lock().expect("cache shard poisoned").map.get(&key) {
+        let now = self.tick();
+        if let Some(hit) = shard.lock().expect("cache shard poisoned").map.get_mut(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+            hit.stats.hits += 1;
+            hit.stats.last_hit = now;
+            return hit.value.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let value = compute().map(Arc::new);
         let mut guard = shard.lock().expect("cache shard poisoned");
         let Shard { map, order } = &mut *guard;
-        if let Some(winner) = map.get(&key) {
-            // A racer computed and inserted first: hand back its value.
-            return winner.clone();
+        if let Some(winner) = map.get_mut(&key) {
+            // A racer computed and inserted first: hand back its value
+            // (and count the lookup as a use of it).
+            winner.stats.hits += 1;
+            winner.stats.last_hit = now;
+            return winner.value.clone();
         }
-        map.insert(key, value.clone());
+        map.insert(
+            key,
+            Slot { value: value.clone(), stats: EntryStats { hits: 0, last_hit: now } },
+        );
         order.push_back(key);
         if let Some(cap) = self.per_shard_cap {
             // The new key sits at the back; with cap >= 1 it is never
@@ -196,13 +234,28 @@ impl EvalCache {
     /// [`Self::get_or_compute`]; counts neither hit nor miss. Returns
     /// whether the entry was stored (false = key already resident).
     pub fn insert(&self, key: CacheKey, value: Option<Arc<Candidate>>) -> bool {
+        let now = self.tick();
+        self.insert_with_stats(key, value, EntryStats { hits: 0, last_hit: now })
+    }
+
+    /// [`Self::insert`] with usage counters restored from disk. The
+    /// logical clock is advanced past the restored stamp so entries
+    /// touched *this* run always rank as more recent than anything
+    /// merely loaded.
+    pub fn insert_with_stats(
+        &self,
+        key: CacheKey,
+        value: Option<Arc<Candidate>>,
+        stats: EntryStats,
+    ) -> bool {
+        self.clock.fetch_max(stats.last_hit.saturating_add(1), Ordering::Relaxed);
         let shard = &self.shards[key.shard()];
         let mut guard = shard.lock().expect("cache shard poisoned");
         let Shard { map, order } = &mut *guard;
         if map.contains_key(&key) {
             return false;
         }
-        map.insert(key, value);
+        map.insert(key, Slot { value, stats });
         order.push_back(key);
         if let Some(cap) = self.per_shard_cap {
             while order.len() > cap {
@@ -220,12 +273,18 @@ impl EvalCache {
     /// disk-save path of [`crate::dse::persist`]). Deterministic for a
     /// deterministically-filled cache.
     pub fn snapshot(&self) -> Vec<(CacheKey, Option<Arc<Candidate>>)> {
+        self.snapshot_stats().into_iter().map(|(k, v, _)| (k, v)).collect()
+    }
+
+    /// [`Self::snapshot`] with each entry's usage counters (the
+    /// compaction input of [`crate::dse::persist`]).
+    pub fn snapshot_stats(&self) -> Vec<(CacheKey, Option<Arc<Candidate>>, EntryStats)> {
         let mut out = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let guard = shard.lock().expect("cache shard poisoned");
             for key in &guard.order {
-                if let Some(v) = guard.map.get(key) {
-                    out.push((*key, v.clone()));
+                if let Some(slot) = guard.map.get(key) {
+                    out.push((*key, slot.value.clone(), slot.stats));
                 }
             }
         }
@@ -441,6 +500,37 @@ mod tests {
         });
         assert_eq!(recomputed_b, 0, "newest entry must be resident");
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn entry_stats_track_hits_and_recency() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        let a = CacheKey::new(1, &rav);
+        let b = CacheKey::new(2, &rav);
+        cache.get_or_compute(a, || None);
+        cache.get_or_compute(b, || None);
+        cache.get_or_compute(a, || None); // hit: a is now the most recent
+        let stats = cache.snapshot_stats();
+        let sa = stats.iter().find(|(k, _, _)| *k == a).expect("a resident").2;
+        let sb = stats.iter().find(|(k, _, _)| *k == b).expect("b resident").2;
+        assert_eq!(sa.hits, 1);
+        assert_eq!(sb.hits, 0);
+        assert!(sa.last_hit > sb.last_hit, "hit entry must rank more recent");
+        // Restored stats survive and keep the clock ahead of them.
+        let restored = EvalCache::new();
+        assert!(restored.insert_with_stats(a, None, sa));
+        let got = restored.snapshot_stats();
+        assert_eq!(got[0].2, sa);
+        restored.get_or_compute(b, || None);
+        let later = restored
+            .snapshot_stats()
+            .into_iter()
+            .find(|(k, _, _)| *k == b)
+            .expect("b resident")
+            .2;
+        assert!(later.last_hit > sa.last_hit, "fresh activity outranks loaded stats");
     }
 
     #[test]

@@ -14,11 +14,15 @@
 //! * [`engine`] — ties everything into the three-step DNNExplorer flow.
 //! * [`portfolio`] — N networks × M devices in one invocation over a
 //!   shared cache, returning a ranked result matrix.
-//! * [`multi`] — the multi-FPGA mode: co-optimize cut points and
-//!   per-board RAVs over a board cluster (via [`crate::shard`]) and
-//!   compare 1/2/4/…-board configurations over one cache.
+//! * [`multi`] — the multi-FPGA mode: co-optimize cut points,
+//!   per-board RAVs, and stage replication over a board cluster (via
+//!   [`crate::shard`]), compare 1/2/4/…-board configurations over one
+//!   cache, and quantify the contiguous-vs-replicated gap
+//!   ([`multi::compare_replication`]).
 //! * [`persist`] — the cache's on-disk format (`--cache-file`):
-//!   versioned JSON with bit-exact floats and fingerprint-checked load.
+//!   versioned JSON with bit-exact floats, fingerprint-checked load,
+//!   per-entry hit stats, and recency compaction
+//!   (`--cache-max-entries`).
 
 pub mod cache;
 pub mod emit;
@@ -32,8 +36,8 @@ pub mod portfolio;
 pub mod pso;
 pub mod rav;
 
-pub use cache::EvalCache;
+pub use cache::{EntryStats, EvalCache};
 pub use engine::{explore, ExplorerConfig, ExplorerResult};
-pub use multi::{compare_board_counts, explore_multi, MultiResult};
+pub use multi::{compare_board_counts, compare_replication, explore_multi, MultiResult};
 pub use portfolio::{explore_portfolio, PortfolioResult, Scenario};
 pub use rav::Rav;

@@ -9,6 +9,10 @@
 //! the planner on growing prefixes of the cluster — 1, 2, 4, ... boards
 //! — over one shared [`EvalCache`], so every RAV any configuration
 //! revisits is evaluated exactly once across the whole comparison.
+//! [`compare_replication`] answers the sibling question *"what does
+//! frame interleaving buy over a pure contiguous cut?"* by planning the
+//! same cluster with and without the replication allowance
+//! ([`ShardConfig::max_replicas`]).
 
 use std::time::Instant;
 
@@ -68,6 +72,43 @@ pub fn explore_multi(
     cache: &EvalCache,
 ) -> Option<ShardPlan> {
     partition(net, devices, cfg, cache)
+}
+
+/// Best contiguous plan vs best replication-enabled plan over the same
+/// cluster — the "what does interleaving buy" question.
+pub struct ReplicationOutcome {
+    /// Best plan with `max_replicas` forced to 1.
+    pub contiguous: Option<ShardPlan>,
+    /// Best plan at the configured [`ShardConfig::max_replicas`].
+    pub replicated: Option<ShardPlan>,
+}
+
+impl ReplicationOutcome {
+    /// Modeled GOP/s gain of replication over the contiguous plan
+    /// (1.0 = no gain; `None` when either side is infeasible).
+    pub fn gain(&self) -> Option<f64> {
+        match (&self.contiguous, &self.replicated) {
+            (Some(c), Some(r)) if c.gops > 0.0 => Some(r.gops / c.gops),
+            _ => None,
+        }
+    }
+}
+
+/// Run the planner twice over one shared cache — once restricted to
+/// contiguous plans, once with the configured replication allowance.
+/// The search spaces nest, so the replicated side never models worse;
+/// the DSE cells are shared, so the second run re-explores nothing.
+pub fn compare_replication(
+    net: &Network,
+    devices: &[FpgaDevice],
+    cfg: &ShardConfig,
+    cache: &EvalCache,
+) -> ReplicationOutcome {
+    let contiguous_cfg = ShardConfig { max_replicas: 1, ..cfg.clone() };
+    ReplicationOutcome {
+        contiguous: partition(net, devices, &contiguous_cfg, cache),
+        replicated: partition(net, devices, cfg, cache),
+    }
 }
 
 /// The board counts a comparison sweeps: 1, 2, 4, ... capped at the
@@ -154,5 +195,25 @@ mod tests {
         assert_eq!(res.best().unwrap().boards, 2);
         assert!(res.baseline().is_some());
         assert!(res.cache_misses > 0);
+    }
+
+    #[test]
+    fn replication_comparison_never_models_worse() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let cfg = ShardConfig { max_replicas: 2, ..quick_cfg() };
+        let cache = EvalCache::new();
+        let out = compare_replication(&net, &devices, &cfg, &cache);
+        let c = out.contiguous.as_ref().expect("contiguous feasible");
+        let r = out.replicated.as_ref().expect("replicated feasible");
+        // Contiguous plans are a subset of the replicated search space.
+        assert!(
+            r.throughput_fps >= c.throughput_fps,
+            "replicated {} fps must not model below contiguous {}",
+            r.throughput_fps,
+            c.throughput_fps
+        );
+        assert!(out.gain().expect("both feasible") >= 1.0 - 1e-12);
+        assert_eq!(c.max_replication(), 1);
     }
 }

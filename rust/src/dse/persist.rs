@@ -17,12 +17,19 @@
 //! which scenarios the coming run touches, [`load_into`] drops every
 //! entry under any other fingerprint — entries from networks or devices
 //! no longer in play don't re-accumulate run over run.
+//!
+//! **Compaction:** each entry carries its usage counters
+//! ([`EntryStats`]: hit count + last-hit tick), which round-trip
+//! through the file. [`save_compacted`] bounds the file to the N
+//! most-recently-hit entries (`--cache-max-entries` on the CLI), so a
+//! long-lived cache file ages out cold design points instead of growing
+//! forever; surviving entries stay bit-exact.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::dnn::Precision;
-use crate::dse::cache::{CacheKey, EvalCache};
+use crate::dse::cache::{CacheKey, EntryStats, EvalCache};
 use crate::dse::engine::Candidate;
 use crate::dse::local_generic::GenericPlan;
 use crate::dse::local_pipeline::PipelinePlan;
@@ -37,7 +44,8 @@ use crate::util::json::Json;
 /// Magic format name in the file header.
 pub const FORMAT: &str = "dnnexplorer-evalcache";
 /// Current format version; bump on any schema change.
-pub const VERSION: u64 = 1;
+/// v2: per-entry usage counters (`hits`, `last_hit`) for compaction.
+pub const VERSION: u64 = 2;
 
 /// What a [`load_into`] call did.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -377,12 +385,12 @@ fn p_candidate(j: &Json) -> anyhow::Result<Candidate> {
 
 // --- file format --------------------------------------------------------
 
-/// Serialize the cache to its JSON document.
-pub fn to_json(cache: &EvalCache) -> Json {
-    let entries: Vec<Json> = cache
-        .snapshot()
-        .into_iter()
-        .map(|(key, value)| {
+type StatEntry = (CacheKey, Option<Arc<Candidate>>, EntryStats);
+
+fn entries_doc(entries: &[StatEntry]) -> Json {
+    let rows: Vec<Json> = entries
+        .iter()
+        .map(|(key, value, stats)| {
             Json::obj(vec![
                 ("scenario", ju(key.scenario)),
                 ("sp", jn(key.sp as usize)),
@@ -390,6 +398,8 @@ pub fn to_json(cache: &EvalCache) -> Json {
                 ("dsp_q", jn(key.dsp_q as usize)),
                 ("bram_q", jn(key.bram_q as usize)),
                 ("bw_q", jn(key.bw_q as usize)),
+                ("hits", ju(stats.hits)),
+                ("last_hit", ju(stats.last_hit)),
                 (
                     "candidate",
                     value.as_ref().map(|c| j_candidate(c)).unwrap_or(Json::Null),
@@ -400,25 +410,67 @@ pub fn to_json(cache: &EvalCache) -> Json {
     Json::obj(vec![
         ("format", Json::s(FORMAT)),
         ("version", Json::n(VERSION as f64)),
-        ("entries", Json::Arr(entries)),
+        ("entries", Json::Arr(rows)),
     ])
+}
+
+/// Serialize the cache to its JSON document.
+pub fn to_json(cache: &EvalCache) -> Json {
+    entries_doc(&cache.snapshot_stats())
+}
+
+/// What a [`save_compacted`] call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SaveStats {
+    /// Entries written to the file.
+    pub saved: usize,
+    /// Entries aged out to respect the bound (least recently hit).
+    pub aged_out: usize,
+}
+
+/// Deterministic total order for the compaction cut: key coordinates.
+fn key_tuple(k: &CacheKey) -> (u64, u32, u32, u32, u32, u32) {
+    (k.scenario, k.sp, k.batch, k.dsp_q, k.bram_q, k.bw_q)
 }
 
 /// Write the cache to `path`; returns the number of entries saved.
 pub fn save(cache: &EvalCache, path: &Path) -> anyhow::Result<usize> {
-    let doc = to_json(cache);
-    let count = doc
-        .get("entries")
-        .and_then(Json::as_arr)
-        .map(|a| a.len())
-        .unwrap_or(0);
+    Ok(save_compacted(cache, path, None)?.saved)
+}
+
+/// [`save`] with a residency bound: when the cache holds more than
+/// `max_entries`, the least-recently-hit entries are aged out of the
+/// file (ties broken by hit count, then key order, so the cut is
+/// deterministic). Surviving entries are written bit-exactly, usage
+/// counters included. `None` keeps everything.
+pub fn save_compacted(
+    cache: &EvalCache,
+    path: &Path,
+    max_entries: Option<usize>,
+) -> anyhow::Result<SaveStats> {
+    let mut entries = cache.snapshot_stats();
+    let mut aged_out = 0usize;
+    if let Some(max) = max_entries {
+        if entries.len() > max {
+            // Most recently hit first; age out the tail.
+            entries.sort_by(|a, b| {
+                b.2.last_hit
+                    .cmp(&a.2.last_hit)
+                    .then(b.2.hits.cmp(&a.2.hits))
+                    .then(key_tuple(&a.0).cmp(&key_tuple(&b.0)))
+            });
+            aged_out = entries.len() - max;
+            entries.truncate(max);
+        }
+    }
+    let doc = entries_doc(&entries);
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
     std::fs::write(path, doc.render())?;
-    Ok(count)
+    Ok(SaveStats { saved: entries.len(), aged_out })
 }
 
 /// Load entries from `path` into `cache`.
@@ -472,7 +524,8 @@ pub fn load_into(
             Json::Null => None,
             c => Some(Arc::new(p_candidate(c)?)),
         };
-        if cache.insert(key, value) {
+        let entry_stats = EntryStats { hits: pu(e, "hits")?, last_hit: pu(e, "last_hit")? };
+        if cache.insert_with_stats(key, value, entry_stats) {
             stats.loaded += 1;
         }
     }
@@ -594,6 +647,76 @@ mod tests {
         // Corrupt JSON is a hard error.
         std::fs::write(&path, "{not json").unwrap();
         assert!(load_into(&loaded, &path, None).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_ages_out_least_recently_hit_and_persists_stats() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 2, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }.quantized();
+        for s in 0..6u64 {
+            cache.get_or_compute(CacheKey::new(s, &rav), || None);
+        }
+        // Hit scenarios 3..6: they become the most recently used.
+        for s in 3..6u64 {
+            cache.get_or_compute(CacheKey::new(s, &rav), || None);
+        }
+        let path = tmpfile("compact");
+        let st = save_compacted(&cache, &path, Some(3)).expect("save");
+        assert_eq!(st, SaveStats { saved: 3, aged_out: 3 });
+
+        let loaded = EvalCache::new();
+        let ls = load_into(&loaded, &path, None).expect("load");
+        assert_eq!(ls.loaded, 3);
+        let got = loaded.snapshot_stats();
+        let mut scens: Vec<u64> = got.iter().map(|(k, _, _)| k.scenario).collect();
+        scens.sort_unstable();
+        assert_eq!(scens, vec![3, 4, 5], "survivors must be the recently-hit entries");
+        // Usage counters persist bit-exactly.
+        let orig = cache.snapshot_stats();
+        for (k, v, s) in got {
+            assert!(v.is_none(), "negative entries stay negative");
+            let o = orig.iter().find(|(ok, _, _)| *ok == k).expect("survivor existed").2;
+            assert_eq!(s, o, "stats must round-trip");
+            assert_eq!(s.hits, 1);
+        }
+        // An unbounded save keeps everything.
+        let st = save_compacted(&cache, &path, None).expect("save");
+        assert_eq!(st, SaveStats { saved: 6, aged_out: 0 });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compacted_candidates_stay_bit_exact() {
+        let (cache, scen, _net, _cfg) = warm_cache();
+        let total = cache.len();
+        assert!(total > 2, "warm cache too small for a meaningful bound");
+        let bound = total / 2;
+        let path = tmpfile("compact-bits");
+        let st = save_compacted(&cache, &path, Some(bound)).expect("save");
+        assert_eq!(st.saved, bound);
+        assert_eq!(st.aged_out, total - bound);
+
+        let loaded = EvalCache::new();
+        let ls = load_into(&loaded, &path, Some(&[scen])).expect("load");
+        assert_eq!(ls.loaded, bound);
+        let orig = cache.snapshot_stats();
+        for (k, v, s) in loaded.snapshot_stats() {
+            let (_, ov, os) = orig
+                .iter()
+                .find(|(ok, _, _)| *ok == k)
+                .expect("survivor came from the original cache");
+            assert_eq!(s, *os, "stats must round-trip");
+            match (v, ov) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.gops.to_bits(), y.gops.to_bits());
+                    assert_eq!(x.throughput_fps.to_bits(), y.throughput_fps.to_bits());
+                    assert_eq!(x.rav, y.rav);
+                }
+                _ => panic!("feasibility flipped across compaction"),
+            }
+        }
         let _ = std::fs::remove_file(&path);
     }
 

@@ -11,7 +11,11 @@
 //! * [`fpga`] — FPGA device specifications (DSP/BRAM/bandwidth budgets).
 //! * [`perfmodel`] — the paper's analytical performance & resource models
 //!   (Eq. 1–13): pipeline structure and generic structure, both on-chip
-//!   buffer allocation strategies, IS/WS dataflows.
+//!   buffer allocation strategies, IS/WS dataflows; plus the
+//!   cross-board models — [`perfmodel::link`] (latency/bandwidth line
+//!   per cut) and [`perfmodel::interleave`] (closed form for replicated
+//!   stages: `r×` effective rates, `min(r_from, r_to)` cut ceilings,
+//!   replication-invariant frame latency).
 //! * [`dse`] — the two-level design-space exploration engine: global PSO
 //!   over the Resource Allocation Vector (Algorithm 1) plus the CTC-based
 //!   and balance-oriented local optimizers (Algorithms 2–3). Swarm
@@ -25,10 +29,17 @@
 //!   [`dse::multi`] co-optimizes cut points + per-board RAVs over a
 //!   board cluster.
 //! * [`shard`] — the multi-FPGA subsystem: partition one network into
-//!   contiguous per-board pipeline stages (DP cut-point planner), charge
-//!   the activation tensor crossing each cut against an inter-board link
-//!   model ([`perfmodel::link`]), and report end-to-end throughput/
-//!   latency (`dnnexplorer shard`).
+//!   contiguous pipeline stages, each mapped to one board or
+//!   **replicated across r identical boards with round-robin frame
+//!   interleaving** (`--max-replicas`; the DP plans over
+//!   `(layer range, device, replication)` cells), charge the activation
+//!   tensor crossing each cut against an inter-board link model
+//!   ([`perfmodel::link`], fan-aware), and report end-to-end
+//!   throughput/latency (`dnnexplorer shard`). Because plan quality now
+//!   rests on the interleaving model, `tests/sim_vs_model.rs`
+//!   cross-validates the analytic [`perfmodel::interleave`] closed form
+//!   against the discrete-event [`sim::shard`] simulator and the live
+//!   [`coordinator::ShardedPipeline`] on every plan shape.
 //! * [`baselines`] — reimplementations of the paper's comparators:
 //!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
 //!   Xilinx-DPU-like fixed IP model.
@@ -42,12 +53,16 @@
 //!   [`coordinator::queue::AdmissionQueue`] shared by the single-worker
 //!   server, the multi-worker router, and the per-stage servers of the
 //!   sharded pipeline ([`coordinator::ShardedPipeline`] chains one
-//!   server per shard stage with per-stage *and* end-to-end metrics),
-//!   with pluggable overload policies (block / reject / shed-oldest),
-//!   earliest-deadline-first batch ordering when deadlines are present
-//!   ([`coordinator::QueueOrdering`]), typed [`coordinator::ServeError`]
-//!   rejections, and lock-free metrics that reconcile exactly
-//!   (`requests == ok_frames + errors + shed`).
+//!   replica group per shard stage — round-robin issue, completions
+//!   re-ordered through [`coordinator::ReorderBuffer`] so frames leave
+//!   in admission order exactly once — with per-replica, per-stage,
+//!   *and* end-to-end metrics), with pluggable overload policies
+//!   (block / reject / shed-oldest), earliest-deadline-first batch
+//!   ordering when deadlines are present
+//!   ([`coordinator::QueueOrdering`], backed by a deadline-keyed binary
+//!   heap: O(log depth) pops at any capacity), typed
+//!   [`coordinator::ServeError`] rejections, and lock-free metrics that
+//!   reconcile exactly (`requests == ok_frames + errors + shed`).
 //!   Batch fill waits on a condvar with the queue lock released, so one
 //!   filling worker can never convoy the rest. `dnnexplorer serve-bench`
 //!   and `examples/serve_overload.rs` drive the path at 2x capacity.

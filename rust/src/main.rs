@@ -19,16 +19,17 @@ USAGE:
   dnnexplorer explore [--network N] [--height H] [--width W] [--device D]
                       [--bits B] [--batch B|0] [--config FILE] [--threads T|0]
                       [--population P] [--iterations I] [--seed S]
-                      [--cache-file F] [--json]
+                      [--cache-file F] [--cache-max-entries N] [--json]
   dnnexplorer portfolio [--networks A,B,C] [--devices D1,D2] [--height H]
                       [--width W] [--bits B] [--batch B|0] [--threads T|0]
                       [--population P] [--iterations I] [--seed S]
-                      [--cache-file F] [--json]
+                      [--cache-file F] [--cache-max-entries N] [--json]
   dnnexplorer shard   [--network N] [--devices D1,D2 | DxN] [--height H]
                       [--width W] [--bits B] [--batch B|0] [--threads T|0]
                       [--population P] [--iterations I] [--seed S]
                       [--link-gbps G] [--link-latency-us U]
-                      [--cache-file F] [--json]   # multi-FPGA sharding
+                      [--max-replicas R]           # replicate a stage
+                      [--cache-file F] [--cache-max-entries N] [--json]
   dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
   dnnexplorer report [--csv DIR] <fig1|fig2a|fig2b|table1|fig7|fig8|fig9|fig10|fig11|table3|table4|all> [--full]
   dnnexplorer emit    [explore flags] [--out FILE]     # optimization-file JSON
@@ -154,14 +155,33 @@ fn cache_file_load(
     Some(path)
 }
 
-/// Persist `cache` back to the `--cache-file` path, if one was given.
-fn cache_file_save(path: Option<PathBuf>, cache: &dnnexplorer::dse::EvalCache) {
+/// Persist `cache` back to the `--cache-file` path, if one was given,
+/// aging out least-recently-hit entries past `--cache-max-entries`.
+fn cache_file_save(path: Option<PathBuf>, cache: &dnnexplorer::dse::EvalCache, max: Option<usize>) {
     use dnnexplorer::dse::persist;
     if let Some(path) = path {
-        match persist::save(cache, &path) {
-            Ok(n) => eprintln!("cache-file: saved {} entries to {}", n, path.display()),
+        match persist::save_compacted(cache, &path, max) {
+            Ok(st) if st.aged_out > 0 => eprintln!(
+                "cache-file: saved {} entries to {} ({} aged out)",
+                st.saved,
+                path.display(),
+                st.aged_out
+            ),
+            Ok(st) => eprintln!("cache-file: saved {} entries to {}", st.saved, path.display()),
             Err(e) => eprintln!("cache-file: could not save {} ({e:#})", path.display()),
         }
+    }
+}
+
+/// Parse the optional `--cache-max-entries` bound.
+fn cache_max_entries(args: &Args) -> anyhow::Result<Option<usize>> {
+    match args.get("cache-max-entries") {
+        Some(v) => {
+            let n: usize = v.parse()?;
+            anyhow::ensure!(n > 0, "--cache-max-entries must be positive");
+            Ok(Some(n))
+        }
+        None => Ok(None),
     }
 }
 
@@ -190,12 +210,14 @@ fn cmd_explore(argv: &[String]) -> anyhow::Result<()> {
 
     let net = cfg.resolve_network()?;
     let ex = cfg.explorer()?;
+    // Validate before the exploration: a bad bound must not cost a run.
+    let cache_max = cache_max_entries(&args)?;
     let cache = dnnexplorer::dse::EvalCache::new();
     let scenario = dnnexplorer::dse::cache::scenario_fingerprint(&net, &ex);
     let cache_path = cache_file_load(&args, &cache, Some(&[scenario]));
     let res = engine::explore_shared(&net, &ex, &cache)
         .ok_or_else(|| anyhow::anyhow!("no feasible design found"))?;
-    cache_file_save(cache_path, &cache);
+    cache_file_save(cache_path, &cache, cache_max);
     let b = &res.best;
     if args.has("json") {
         let j = Json::obj(vec![
@@ -280,6 +302,7 @@ fn cmd_portfolio(argv: &[String]) -> anyhow::Result<()> {
     anyhow::ensure!(!nets.is_empty() && !devs.is_empty(), "empty portfolio");
 
     let scenarios = portfolio::cross(&nets, &devs, &base.explorer()?);
+    let cache_max = cache_max_entries(&args)?;
     let cache = dnnexplorer::dse::EvalCache::new();
     let fingerprints: Vec<u64> = scenarios
         .iter()
@@ -287,7 +310,7 @@ fn cmd_portfolio(argv: &[String]) -> anyhow::Result<()> {
         .collect();
     let cache_path = cache_file_load(&args, &cache, Some(&fingerprints));
     let result = portfolio::explore_portfolio_shared(&scenarios, threads, &cache);
-    cache_file_save(cache_path, &cache);
+    cache_file_save(cache_path, &cache, cache_max);
 
     if args.has("json") {
         let rows: Vec<Json> = result
@@ -372,6 +395,8 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
         let t = args.get_usize("threads", 0)?;
         if t == 0 { dnnexplorer::util::parallel::default_threads() } else { t }
     };
+    let max_replicas = args.get_usize("max-replicas", 1)?;
+    anyhow::ensure!(max_replicas >= 1, "--max-replicas must be >= 1");
     let cfg = ShardConfig {
         link: LinkModel::new(link_gbps, link_latency_us * 1e-6),
         dw: p,
@@ -387,15 +412,17 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
             None => 0xD44E,
         },
         threads,
+        max_replicas,
         ..ShardConfig::default()
     };
 
+    let cache_max = cache_max_entries(&args)?;
     let cache = dnnexplorer::dse::EvalCache::new();
     // Sub-network fingerprints are produced inside the planner, so the
     // keep-list is open: everything in the file stays loadable.
     let cache_path = cache_file_load(&args, &cache, None);
     let result = multi::compare_board_counts(&net, &devices, &cfg, &cache);
-    cache_file_save(cache_path, &cache);
+    cache_file_save(cache_path, &cache, cache_max);
 
     if args.has("json") {
         let rows: Vec<Json> = result
@@ -409,6 +436,7 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
                     ("fps", Json::n(plan.throughput_fps)),
                     ("latency_s", Json::n(plan.latency_s)),
                     ("bottleneck", Json::s(plan.bottleneck())),
+                    ("max_replication", Json::n(plan.max_replication() as f64)),
                     (
                         "stages",
                         Json::Arr(
@@ -416,11 +444,22 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
                                 .iter()
                                 .map(|s| {
                                     Json::obj(vec![
-                                        ("board", Json::n(s.board as f64)),
+                                        ("stage", Json::n(s.stage as f64)),
+                                        ("replicas", Json::n(s.replicas() as f64)),
+                                        (
+                                            "boards",
+                                            Json::Arr(
+                                                s.boards
+                                                    .iter()
+                                                    .map(|&b| Json::n(b as f64))
+                                                    .collect(),
+                                            ),
+                                        ),
                                         ("device", Json::s(s.device.name.clone())),
                                         ("start", Json::n(s.layer_range.0 as f64)),
                                         ("end", Json::n(s.layer_range.1 as f64)),
                                         ("fps", Json::n(s.candidate.throughput_fps)),
+                                        ("stage_fps", Json::n(s.stage_fps)),
                                         ("gops", Json::n(s.candidate.gops)),
                                         ("sp", Json::n(s.candidate.rav.sp as f64)),
                                         ("dsp", Json::n(s.candidate.dsp_used)),

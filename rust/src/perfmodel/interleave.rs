@@ -1,0 +1,147 @@
+//! Analytic model of a replicated, frame-interleaved pipeline.
+//!
+//! A [`crate::shard`] plan is a chain of stages; stage `s` may be
+//! replicated across `r_s` boards, with frames issued round-robin to the
+//! replicas and re-ordered on the way out. This module is the *single
+//! source of truth* for what that buys:
+//!
+//! * **Throughput** — a replicated stage serves `r_s` frames per stage
+//!   interval, so its effective rate is `r_s · f_s`. The cut between
+//!   stages `s` and `s+1` runs over `min(r_s, r_{s+1})` parallel links
+//!   ([`LinkModel::fan_throughput_fps`]). Steady state is the min over
+//!   both families ([`steady_state_fps`]).
+//! * **Latency** — a single frame traverses exactly one replica per
+//!   stage and one link per cut, so replication leaves the frame latency
+//!   untouched: `Σ_s latency_s + Σ_cut hop_s` ([`frame_latency_s`]).
+//!   (The reorder buffer adds no steady-state delay for deterministic
+//!   service times: frames issued in order to identical replicas
+//!   complete in order per replica.)
+//!
+//! The shard planner's DP computes the same quantities incrementally;
+//! `tests/sim_vs_model.rs` cross-validates this closed form against the
+//! discrete-event simulator ([`crate::sim::shard`]) and the live
+//! [`crate::coordinator::ShardedPipeline`] on every plan shape.
+
+use crate::perfmodel::link::LinkModel;
+
+/// One stage of a replicated pipeline, as the analytic model sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageRate {
+    /// Boards running this stage (round-robin interleaved); >= 1.
+    pub replicas: usize,
+    /// Per-replica steady-state frame rate.
+    pub fps: f64,
+    /// Per-replica single-frame latency, seconds.
+    pub latency_s: f64,
+}
+
+impl StageRate {
+    pub fn new(replicas: usize, fps: f64, latency_s: f64) -> Self {
+        Self { replicas, fps, latency_s }
+    }
+
+    /// Effective stage rate: `replicas × fps` (exactly `fps` at r = 1).
+    pub fn effective_fps(&self) -> f64 {
+        self.replicas.max(1) as f64 * self.fps
+    }
+}
+
+/// Steady-state frame rate of the whole chain: the min over effective
+/// stage rates and cut ceilings. `cut_bytes[s]` is the tensor crossing
+/// the cut between stages `s` and `s+1` (`cut_bytes.len() ==
+/// stages.len() - 1`); an empty chain rates 0.
+pub fn steady_state_fps(stages: &[StageRate], link: &LinkModel, cut_bytes: &[f64]) -> f64 {
+    debug_assert_eq!(cut_bytes.len() + 1, stages.len().max(1));
+    let mut fps = f64::INFINITY;
+    for (s, stage) in stages.iter().enumerate() {
+        fps = fps.min(stage.effective_fps());
+        if s + 1 < stages.len() {
+            fps = fps.min(link.fan_throughput_fps(
+                cut_bytes[s],
+                stage.replicas,
+                stages[s + 1].replicas,
+            ));
+        }
+    }
+    if fps.is_finite() {
+        fps
+    } else {
+        0.0
+    }
+}
+
+/// Single-frame latency of the chain: per-stage latencies plus the hop
+/// cost of each cut, in pipeline order (replication-invariant).
+pub fn frame_latency_s(stages: &[StageRate], link: &LinkModel, cut_bytes: &[f64]) -> f64 {
+    debug_assert_eq!(cut_bytes.len() + 1, stages.len().max(1));
+    let mut latency = 0.0f64;
+    for (s, stage) in stages.iter().enumerate() {
+        if s > 0 {
+            latency += link.transfer_s(cut_bytes[s - 1]);
+        }
+        latency += stage.latency_s;
+    }
+    latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkModel {
+        LinkModel::new(10.0, 2e-6)
+    }
+
+    #[test]
+    fn unreplicated_chain_is_the_plain_min() {
+        let stages = [
+            StageRate::new(1, 100.0, 1e-3),
+            StageRate::new(1, 80.0, 2e-3),
+            StageRate::new(1, 120.0, 5e-4),
+        ];
+        let cuts = [1e6, 2e6];
+        let fps = steady_state_fps(&stages, &link(), &cuts);
+        // Board 1 (80 fps) is slower than both links (1e4 and 5e3 fps).
+        assert_eq!(fps, 80.0);
+        let lat = frame_latency_s(&stages, &link(), &cuts);
+        let expect = 1e-3 + link().transfer_s(1e6) + 2e-3 + link().transfer_s(2e6) + 5e-4;
+        assert!((lat - expect).abs() < 1e-12, "{lat} vs {expect}");
+    }
+
+    #[test]
+    fn replication_multiplies_the_stage_rate_not_the_latency() {
+        let solo = [StageRate::new(1, 50.0, 1e-3)];
+        let duo = [StageRate::new(2, 50.0, 1e-3)];
+        assert_eq!(steady_state_fps(&solo, &link(), &[]), 50.0);
+        assert_eq!(steady_state_fps(&duo, &link(), &[]), 100.0);
+        assert_eq!(
+            frame_latency_s(&solo, &link(), &[]),
+            frame_latency_s(&duo, &link(), &[])
+        );
+    }
+
+    #[test]
+    fn cut_ceiling_uses_the_narrow_side() {
+        // Fast stages; a 1->2 cut leaves the producer's single egress
+        // link as the bottleneck even though the consumers could take 2x.
+        let stages = [StageRate::new(1, 1e6, 0.0), StageRate::new(2, 1e6, 0.0)];
+        let bytes = 1e6; // 10 GB/s / 1 MB = 1e4 fps per link
+        let fps = steady_state_fps(&stages, &link(), &[bytes]);
+        assert_eq!(fps, link().throughput_fps(bytes));
+        // 2->2 doubles the cut.
+        let stages2 = [StageRate::new(2, 1e6, 0.0), StageRate::new(2, 1e6, 0.0)];
+        assert_eq!(
+            steady_state_fps(&stages2, &link(), &[bytes]),
+            2.0 * link().throughput_fps(bytes)
+        );
+    }
+
+    #[test]
+    fn empty_and_zero_cut_edge_cases() {
+        assert_eq!(steady_state_fps(&[], &link(), &[]), 0.0);
+        assert_eq!(frame_latency_s(&[], &link(), &[]), 0.0);
+        // A zero-byte cut never bounds the chain.
+        let stages = [StageRate::new(1, 10.0, 0.0), StageRate::new(1, 20.0, 0.0)];
+        assert_eq!(steady_state_fps(&stages, &link(), &[0.0]), 10.0);
+    }
+}

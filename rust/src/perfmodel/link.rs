@@ -48,6 +48,25 @@ impl LinkModel {
         }
         self.bandwidth_bytes().max(1.0) / bytes
     }
+
+    /// Steady-state ceiling of a cut between a stage replicated on
+    /// `r_from` boards and one replicated on `r_to` boards, with frames
+    /// interleaved round-robin on both sides.
+    ///
+    /// Each board has one link of this model. A frame crosses the cut
+    /// exactly once, occupying one producer egress link and one consumer
+    /// ingress link for its serialization time. Round-robin spreads the
+    /// stream evenly, so the busiest side is the one with fewer boards:
+    /// with `r_from < r_to` every producer link still carries
+    /// `1/r_from` of all frames (and symmetrically for fan-in), giving a
+    /// cut ceiling of `min(r_from, r_to)` parallel serializations.
+    ///
+    /// `r = 1` on both sides reduces bit-exactly to
+    /// [`Self::throughput_fps`] (the multiplier is `1.0`).
+    pub fn fan_throughput_fps(&self, bytes: f64, r_from: usize, r_to: usize) -> f64 {
+        let lanes = r_from.min(r_to).max(1) as f64;
+        lanes * self.throughput_fps(bytes)
+    }
 }
 
 impl Default for LinkModel {
@@ -89,6 +108,22 @@ mod tests {
         assert_eq!(fast.throughput_fps(1e6), slow.throughput_fps(1e6));
         assert!((fast.throughput_fps(1e6) - 1e4).abs() < 1e-6);
         assert!(fast.throughput_fps(0.0).is_infinite());
+    }
+
+    #[test]
+    fn fan_throughput_scales_with_the_narrow_side() {
+        let l = LinkModel::new(10.0, 1e-6);
+        let base = l.throughput_fps(1e6);
+        // 1->1 is bit-exactly the plain serialization rate.
+        assert_eq!(l.fan_throughput_fps(1e6, 1, 1).to_bits(), base.to_bits());
+        // The narrow side bounds the cut: one producer can only fill one
+        // egress link no matter how many consumers wait.
+        assert_eq!(l.fan_throughput_fps(1e6, 1, 4), base);
+        assert_eq!(l.fan_throughput_fps(1e6, 4, 1), base);
+        assert_eq!(l.fan_throughput_fps(1e6, 2, 3), 2.0 * base);
+        assert_eq!(l.fan_throughput_fps(1e6, 3, 3), 3.0 * base);
+        // Empty cuts stay unbounded at any fan shape.
+        assert!(l.fan_throughput_fps(0.0, 2, 2).is_infinite());
     }
 
     #[test]

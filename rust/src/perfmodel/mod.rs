@@ -10,12 +10,18 @@
 //! * [`link`] — the inter-board link model extending the paradigm across
 //!   devices: a latency/bandwidth line charging the activation tensor
 //!   that crosses each cut of a [`crate::shard`] plan.
+//! * [`interleave`] — the closed form for a *replicated* pipeline:
+//!   effective stage rates (`r × fps`), fan-out/fan-in cut ceilings
+//!   (`min(r_from, r_to)` parallel links), and replication-invariant
+//!   frame latency — cross-validated against [`crate::sim::shard`] and
+//!   the live pipeline by `tests/sim_vs_model.rs`.
 //!
 //! All produce latency/throughput estimates in **seconds / frames-per-
 //! second / GOP/s**; the structures report resource usage as a
 //! [`crate::fpga::ResourceBudget`].
 
 pub mod generic;
+pub mod interleave;
 pub mod link;
 pub mod pipeline;
 

@@ -115,7 +115,8 @@ pub fn table4_batch_exploration(effort: Effort) -> RowSet {
 }
 
 /// Sharding comparison table: 1/2/4/… boards of one cluster against the
-/// single-board baseline (the `dnnexplorer shard` report).
+/// single-board baseline (the `dnnexplorer shard` report). A stage
+/// replicated r-wide renders as `j..i x r` in the stage map.
 pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult) -> RowSet {
     let mut out = RowSet::new(
         "shard",
@@ -123,6 +124,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
         &[
             "Boards",
             "Devices",
+            "Stages",
             "GOP/s",
             "Img./s",
             "Latency (ms)",
@@ -142,12 +144,19 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
                 let cuts = p
                     .stages
                     .iter()
-                    .map(|s| format!("{}..{}", s.layer_range.0, s.layer_range.1))
+                    .map(|s| {
+                        if s.replicas() > 1 {
+                            format!("{}..{}x{}", s.layer_range.0, s.layer_range.1, s.replicas())
+                        } else {
+                            format!("{}..{}", s.layer_range.0, s.layer_range.1)
+                        }
+                    })
                     .collect::<Vec<_>>()
                     .join("|");
                 out.push_row(vec![
                     format!("{}", o.boards),
                     o.label.clone(),
+                    format!("{}", p.stages.len()),
                     format!("{:.1}", p.gops),
                     format!("{:.1}", p.throughput_fps),
                     format!("{:.2}", p.latency_s * 1e3),
@@ -159,6 +168,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
             None => out.push_row(vec![
                 format!("{}", o.boards),
                 o.label.clone(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -213,9 +223,10 @@ mod tests {
         let res = compare_board_counts(&net, &devices, &cfg, &EvalCache::new());
         let t = shard_comparison(&net.name, &res);
         assert_eq!(t.rows.len(), 2);
-        assert_eq!(t.rows[0][5], "1.00x", "baseline speedup is unity");
-        let two: f64 = t.rows[1][5].trim_end_matches('x').parse().unwrap();
+        assert_eq!(t.rows[0][6], "1.00x", "baseline speedup is unity");
+        let two: f64 = t.rows[1][6].trim_end_matches('x').parse().unwrap();
         assert!(two > 1.0, "2-board speedup {two} must exceed 1");
+        assert_eq!(t.rows[1][2], "2", "two stages at two boards, r=1");
         assert!(t.render().contains("Bottleneck"));
     }
 }

@@ -3,27 +3,36 @@
 //! DNNExplorer's paradigm splits a network into a layer-dedicated
 //! pipelined prefix plus a generic suffix on *one* FPGA. This subsystem
 //! lifts the paradigm to N (possibly heterogeneous) boards: the network
-//! is cut into **contiguous pipeline stages**, one per board, each board
-//! runs the full single-FPGA DSE on its sub-network (so every board gets
-//! its own RAV — pipeline prefix + generic suffix *within* its shard),
-//! and the activation tensor crossing each cut is charged against an
-//! inter-board [`LinkModel`].
+//! is cut into **contiguous pipeline stages**, each stage mapped to one
+//! board — or *replicated* across `r` identical boards with round-robin
+//! frame interleaving ([`ShardConfig::max_replicas`]) — each board runs
+//! the full single-FPGA DSE on its stage's sub-network (so every board
+//! gets its own RAV — pipeline prefix + generic suffix *within* its
+//! shard), and the activation tensor crossing each cut is charged
+//! against an inter-board [`LinkModel`].
 //!
 //! * [`partition`] — the cut-point planner: a dynamic program over
-//!   contiguous layer ranges that maximizes end-to-end throughput
-//!   (min over board rates and link serialization rates), reusing the
-//!   [`crate::dse::cache::EvalCache`] per (sub-network, device) so
-//!   repeated ranges — guaranteed across the DP cells and across board
-//!   counts — are explored once.
+//!   `(layer range, device, replication)` cells that maximizes
+//!   end-to-end throughput (min over effective stage rates and cut
+//!   ceilings), reusing the [`crate::dse::cache::EvalCache`] per
+//!   (sub-network, device) so repeated ranges — guaranteed across the
+//!   DP cells, replication factors, and board counts — are explored
+//!   once. Replicas of a stage run the *same* explored design, so the
+//!   replication dimension adds no DSE cost.
 //! * [`link`] — link presets and cut-tensor accounting on top of the
 //!   [`crate::perfmodel::link`] model.
 //!
-//! System model: boards form a linear pipeline, so steady-state
-//! throughput is `min(min_b fps_b, min_cut BW_link / bytes_cut)` and
-//! single-frame latency is `Σ_b latency_b + Σ_cut (L_link + bytes_cut /
-//! BW_link)`. The multi-FPGA DSE mode over this planner lives in
-//! [`crate::dse::multi`]; serving a plan as a chain of per-board
-//! servers lives in [`crate::coordinator::sharded`].
+//! System model ([`crate::perfmodel::interleave`]): a stage replicated
+//! `r_s`-wide runs at `r_s · fps_s`; the cut between stages `s` and
+//! `s+1` runs over `min(r_s, r_{s+1})` parallel links; steady-state
+//! throughput is the min over both families, and single-frame latency —
+//! replication-invariant — is `Σ_s latency_s + Σ_cut (L_link +
+//! bytes_cut / BW_link)`. The multi-FPGA DSE mode over this planner
+//! lives in [`crate::dse::multi`]; serving a plan as a chain of
+//! (replica groups of) per-board servers lives in
+//! [`crate::coordinator::sharded`]; `tests/sim_vs_model.rs`
+//! cross-validates the analytic model against the discrete-event
+//! simulator ([`crate::sim::shard`]) and the live pipeline.
 
 pub mod link;
 pub mod partition;
@@ -55,6 +64,12 @@ pub struct ShardConfig {
     pub seed: u64,
     /// Worker threads for the planner's (range × device) sweep.
     pub threads: usize,
+    /// Maximum boards one stage may be replicated across (round-robin
+    /// frame interleaving). `1` (the default) restricts the planner to
+    /// classic contiguous plans — bit-identical to the pre-replication
+    /// planner; replicas must run on identical boards (a contiguous
+    /// same-device run of the cluster list).
+    pub max_replicas: usize,
 }
 
 impl Default for ShardConfig {
@@ -68,6 +83,7 @@ impl Default for ShardConfig {
             pso: PsoParams::default(),
             seed: 0xD44E,
             threads: 1,
+            max_replicas: 1,
         }
     }
 }

@@ -1,19 +1,30 @@
-//! Cut-point planner: partition a network into contiguous per-board
-//! pipeline stages with a dynamic program over (range, board) cells.
+//! Cut-point planner: partition a network into contiguous pipeline
+//! stages — optionally replicated across identical boards — with a
+//! dynamic program over `(layer range, device, replication)` cells.
 //!
-//! Board `b` of a `B`-board cluster runs compute layers `[j_b, j_{b+1})`
-//! (plus the non-compute layers trailing them); every cell's sub-network
-//! is explored with the full single-FPGA DSE, so each board gets its own
-//! RAV. The DP maximizes end-to-end throughput — the min over board
-//! rates and link serialization rates — with latency (stage latencies
-//! plus hop costs) as the tie-breaker; under
+//! A stage covers compute layers `[j, i)` (plus the non-compute layers
+//! trailing them) and occupies a contiguous run of `r` identical boards
+//! of the cluster; frames are issued round-robin across the replicas, so
+//! the stage's effective rate is `r × fps` while the cut to the next
+//! stage runs over `min(r, r_next)` parallel links (see
+//! [`crate::perfmodel::interleave`]). Every cell's sub-network is
+//! explored with the full single-FPGA DSE, so each board gets its own
+//! RAV; replicas of a stage run the *same* explored design, so the
+//! replication dimension costs no extra DSE. The DP maximizes
+//! end-to-end throughput with latency as the tie-breaker; under
 //! [`Objective::Latency`] the two criteria swap.
 //!
+//! With [`ShardConfig::max_replicas`] `= 1` the planner reduces
+//! bit-exactly to the classic contiguous cut-point DP (one stage per
+//! board): the DP scan order, tie-breaks, and arithmetic are identical
+//! (multiplying a rate by `1.0` is exact).
+//!
 //! Every (range, device) cell is explored at most once per call (cells
-//! repeat across DP rows whenever the cluster repeats a device), and the
-//! underlying RAV evaluations are memoized in the shared
-//! [`EvalCache`] — so comparing board counts over the same cluster
-//! (see [`crate::dse::multi`]) re-explores nothing but the PSO walk.
+//! repeat across DP rows whenever the cluster repeats a device and
+//! across replication factors), and the underlying RAV evaluations are
+//! memoized in the shared [`EvalCache`] — so comparing board counts
+//! over the same cluster (see [`crate::dse::multi`]) re-explores
+//! nothing but the PSO walk.
 
 use std::collections::{BTreeSet, HashMap};
 
@@ -21,27 +32,42 @@ use crate::dnn::Network;
 use crate::dse::cache::EvalCache;
 use crate::dse::engine::{self, Candidate, Objective};
 use crate::fpga::FpgaDevice;
+use crate::perfmodel::interleave::{self, StageRate};
 use crate::perfmodel::link::LinkModel;
 use crate::shard::link::tensor_bytes;
 use crate::shard::ShardConfig;
 use crate::util::parallel::parallel_map;
 
-/// One board's slice of a [`ShardPlan`].
+/// One stage of a [`ShardPlan`]: a layer range on a replica group.
 #[derive(Debug, Clone)]
 pub struct ShardStage {
-    /// Board index in the cluster (pipeline order).
-    pub board: usize,
+    /// Stage index in pipeline order.
+    pub stage: usize,
+    /// Cluster board indices running this stage's replicas: a
+    /// contiguous ascending run of identical boards (len >= 1 is the
+    /// replication factor; frames interleave round-robin across them).
+    pub boards: Vec<usize>,
     pub device: FpgaDevice,
-    /// Compute-layer range `[start, end)` this board runs (indices into
+    /// Compute-layer range `[start, end)` this stage runs (indices into
     /// the network's compute layers, in order).
     pub layer_range: (usize, usize),
-    /// The board's explored single-FPGA design for its sub-network.
+    /// The explored single-FPGA design every replica of this stage runs.
     pub candidate: Candidate,
-    /// Activation bytes leaving this stage toward the next board per
+    /// Effective stage rate: `replicas × candidate fps`.
+    pub stage_fps: f64,
+    /// Activation bytes leaving this stage toward the next stage per
     /// frame (0 for the last stage).
     pub egress_bytes: f64,
-    /// Frame rate the link sustains for that egress (∞ for the last).
+    /// Steady-state ceiling of the egress cut over its
+    /// `min(r, r_next)` parallel links (∞ for the last stage).
     pub egress_fps: f64,
+}
+
+impl ShardStage {
+    /// Replication factor of this stage.
+    pub fn replicas(&self) -> usize {
+        self.boards.len()
+    }
 }
 
 /// A full multi-board partition: stages in pipeline order plus the
@@ -52,24 +78,60 @@ pub struct ShardPlan {
     pub link: LinkModel,
     pub stages: Vec<ShardStage>,
     /// End-to-end steady-state frames/s:
-    /// `min(min_b fps_b, min_cut link_fps_cut)`.
+    /// `min(min_s r_s·fps_s, min_cut min(r_s, r_s+1)·link_fps_cut)`.
     pub throughput_fps: f64,
     /// Whole-network sustained GOP/s at that frame rate.
     pub gops: f64,
-    /// Single-frame latency: stage latencies plus hop costs, seconds.
+    /// Single-frame latency: stage latencies plus hop costs, seconds
+    /// (replication-invariant: a frame visits one replica per stage).
     pub latency_s: f64,
 }
 
 impl ShardPlan {
-    /// What limits the plan: `board<i>` or `link<i>-><i+1>`.
+    /// Total boards occupied by the plan (Σ replicas).
+    pub fn board_count(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas()).sum()
+    }
+
+    /// Largest replication factor of any stage (1 = pure contiguous).
+    pub fn max_replication(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas()).max().unwrap_or(1)
+    }
+
+    /// The per-stage rates/latencies as the analytic interleave model
+    /// sees them (the differential suite's entry point).
+    pub fn stage_rates(&self) -> Vec<StageRate> {
+        self.stages
+            .iter()
+            .map(|s| {
+                StageRate::new(
+                    s.replicas(),
+                    s.candidate.throughput_fps,
+                    s.candidate.frame_latency_s,
+                )
+            })
+            .collect()
+    }
+
+    /// Bytes on the wire at each internal cut, in pipeline order
+    /// (`stages.len() - 1` entries).
+    pub fn cut_bytes(&self) -> Vec<f64> {
+        self.stages
+            .iter()
+            .take(self.stages.len().saturating_sub(1))
+            .map(|s| s.egress_bytes)
+            .collect()
+    }
+
+    /// What limits the plan: `stage<i>` or `link<i>-><i+1>`.
     pub fn bottleneck(&self) -> String {
         let eps = self.throughput_fps * 1e-9;
         for s in &self.stages {
-            if s.candidate.throughput_fps <= self.throughput_fps + eps {
-                return format!("board{}", s.board);
+            if s.stage_fps <= self.throughput_fps + eps {
+                return format!("stage{}", s.stage);
             }
             if s.egress_fps <= self.throughput_fps + eps {
-                return format!("link{}->{}", s.board, s.board + 1);
+                return format!("link{}->{}", s.stage, s.stage + 1);
             }
         }
         "none".into()
@@ -79,14 +141,15 @@ impl ShardPlan {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{}: {} boards over {} link\n",
+            "{}: {} stages on {} boards over {} link\n",
             self.network,
             self.stages.len(),
+            self.board_count(),
             self.link
         ));
         out.push_str(&format!(
-            "{:<6} {:<8} {:<10} {:<26} {:>9} {:>9} {:>7} {:>7} {:>10}\n",
-            "board", "device", "layers", "RAV", "fps", "GOP/s", "DSP", "BRAM", "egress"
+            "{:<6} {:<8} {:<8} {:<10} {:<26} {:>9} {:>9} {:>7} {:>7} {:>10}\n",
+            "stage", "boards", "device", "layers", "RAV", "fps", "GOP/s", "DSP", "BRAM", "egress"
         ));
         for s in &self.stages {
             let egress = if s.egress_bytes > 0.0 {
@@ -94,14 +157,20 @@ impl ShardPlan {
             } else {
                 "-".into()
             };
+            let boards = if s.replicas() == 1 {
+                format!("{}", s.boards[0])
+            } else {
+                format!("{}-{}x{}", s.boards[0], s.boards[s.boards.len() - 1], s.replicas())
+            };
             out.push_str(&format!(
-                "{:<6} {:<8} {:<10} {:<26} {:>9.1} {:>9.1} {:>7.0} {:>7.0} {:>10}\n",
-                s.board,
+                "{:<6} {:<8} {:<8} {:<10} {:<26} {:>9.1} {:>9.1} {:>7.0} {:>7.0} {:>10}\n",
+                s.stage,
+                boards,
                 s.device.name,
                 format!("{}..{}", s.layer_range.0, s.layer_range.1),
                 format!("{}", s.candidate.rav),
-                s.candidate.throughput_fps,
-                s.candidate.gops,
+                s.stage_fps,
+                s.candidate.gops * s.replicas() as f64,
                 s.candidate.dsp_used,
                 s.candidate.bram_used,
                 egress,
@@ -156,7 +225,8 @@ pub fn subnetwork(net: &Network, c_start: usize, c_end: usize) -> Network {
 }
 
 /// Two catalogue devices with identical budgets are the same board type
-/// (the planner reuses their DSE cells).
+/// (the planner reuses their DSE cells, and a replica group may span
+/// them).
 fn same_device(a: &FpgaDevice, b: &FpgaDevice) -> bool {
     a.dsp == b.dsp
         && a.bram18k == b.bram18k
@@ -169,12 +239,16 @@ struct Cell {
     fps: f64,
     latency_s: f64,
     /// Start compute-layer index of the last stage in this cell's plan.
-    prev_j: usize,
+    start_j: usize,
+    /// Replication factor of the *previous* stage (0 for the first).
+    prev_r: usize,
 }
 
-/// Partition `net` across `devices` (pipeline order). Returns `None`
-/// when no feasible plan exists — fewer compute layers than boards, or
-/// some mandatory cell infeasible on its board.
+/// Partition `net` across `devices` (pipeline order), replicating
+/// stages up to [`ShardConfig::max_replicas`]-wide where the cluster
+/// has contiguous identical boards. Every board is used. Returns `None`
+/// when no feasible plan exists — more mandatory stages than compute
+/// layers, or some mandatory cell infeasible on its board.
 ///
 /// Deterministic for a fixed [`ShardConfig::seed`] at any
 /// [`ShardConfig::threads`]: cells are explored independently (input
@@ -188,7 +262,10 @@ pub fn partition(
     let comp_pos = compute_positions(net);
     let n = comp_pos.len();
     let b_count = devices.len();
-    if n == 0 || b_count == 0 || b_count > n {
+    let maxr = cfg.max_replicas.max(1).min(b_count.max(1));
+    // Minimum stages needed to cover `boards` boards at <= maxr each.
+    let min_stages = |boards: usize| boards.div_ceil(maxr);
+    if n == 0 || b_count == 0 || min_stages(b_count) > n {
         return None;
     }
 
@@ -203,6 +280,14 @@ pub fn partition(
                 distinct.push(d.clone());
                 slot.push(distinct.len() - 1);
             }
+        }
+    }
+    // run_len[b]: length of the same-device run ending at board b — the
+    // widest replica group that may end there.
+    let mut run_len = vec![1usize; b_count];
+    for b in 1..b_count {
+        if slot[b] == slot[b - 1] {
+            run_len[b] = run_len[b - 1] + 1;
         }
     }
 
@@ -222,19 +307,34 @@ pub fn partition(
     // Every (device-slot, range) cell any DP transition can touch, in a
     // fixed order; explored concurrently below (work-stealing absorbs
     // the skew between a 2-layer tail cell and a 10-layer prefix cell).
+    // Replication widens the reachable set: a group ending at board b
+    // with r replicas leaves only `b+1-r` boards (>= min_stages of them
+    // stages) in front of it.
     let mut wanted: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
-    for (b, &s) in slot.iter().enumerate() {
-        let i_max = n - (b_count - 1 - b);
-        for j in b..i_max {
-            let i_lo = (j + 1).max(b + 1);
-            for i in i_lo..=i_max {
-                if b == 0 && j != 0 {
-                    continue; // board 0 always starts at layer 0
+    for b in 0..b_count {
+        let rmax = maxr.min(run_len[b]).min(b + 1);
+        for r in 1..=rmax {
+            let before = b + 1 - r;
+            let after = b_count - 1 - b;
+            if min_stages(after) >= n {
+                continue;
+            }
+            let i_max = n - min_stages(after);
+            let j_lo = min_stages(before);
+            for j in j_lo..i_max {
+                if before == 0 && j != 0 {
+                    break; // the first stage always starts at layer 0
                 }
-                if b == b_count - 1 && i != n {
-                    continue; // the last board always ends at layer n
+                if b == b_count - 1 {
+                    // The last stage always ends at layer n.
+                    if n > j {
+                        wanted.insert((slot[b], j, n));
+                    }
+                } else {
+                    for i in (j + 1)..=i_max {
+                        wanted.insert((slot[b], j, i));
+                    }
                 }
-                wanted.insert((s, j, i));
             }
         }
     }
@@ -254,8 +354,8 @@ pub fn partition(
     };
 
     // `better` under the configured objective: primary criterion strict,
-    // secondary as tie-break; scan order (ascending j) settles the rest
-    // deterministically.
+    // secondary as tie-break; scan order settles the rest
+    // deterministically (first candidate wins ties).
     let improves = |cand: (f64, f64), best: Option<(f64, f64)>| -> bool {
         let Some((bf, bl)) = best else { return true };
         match cfg.objective {
@@ -264,65 +364,102 @@ pub fn partition(
         }
     };
 
-    // dp[b][i]: best plan putting compute layers [0, i) on boards 0..=b.
-    let mut dp: Vec<Vec<Option<Cell>>> = vec![vec![None; n + 1]; b_count];
-    let i_max0 = n - (b_count - 1);
-    for i in 1..=i_max0 {
-        if let Some(c) = cell_of(0, 0, i) {
-            dp[0][i] = Some(Cell {
-                fps: c.throughput_fps,
-                latency_s: c.frame_latency_s,
-                prev_j: 0,
-            });
-        }
-    }
-    for b in 1..b_count {
-        let i_max = n - (b_count - 1 - b);
-        for i in (b + 1)..=i_max {
-            let mut best: Option<Cell> = None;
-            for j in b..i {
-                if b == b_count - 1 && i != n {
-                    break;
-                }
-                let Some(prev) = dp[b - 1][j] else { continue };
-                let Some(stage) = cell_of(b, j, i) else { continue };
-                let link_fps = cfg.link.throughput_fps(cut_bytes[j]);
-                let hop_s = cfg.link.transfer_s(cut_bytes[j]);
-                let fps = prev.fps.min(link_fps).min(stage.throughput_fps);
-                let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
-                if improves((fps, latency_s), best.map(|c| (c.fps, c.latency_s))) {
-                    best = Some(Cell { fps, latency_s, prev_j: j });
-                }
-            }
-            dp[b][i] = best;
-        }
-    }
-
-    // Reconstruct the winning cut sequence from dp[B-1][n].
-    let final_cell = dp[b_count - 1][n]?;
-    let mut bounds = vec![n];
-    let mut i = n;
-    for b in (0..b_count).rev() {
-        let cell = dp[b][i].expect("dp chain broken");
-        bounds.push(cell.prev_j);
-        i = cell.prev_j;
-    }
-    bounds.reverse(); // [0, j_1, ..., j_{B-1}, n]
-    debug_assert_eq!(bounds[0], 0);
-    debug_assert_eq!(bounds.len(), b_count + 1);
-
-    let mut stages = Vec::with_capacity(b_count);
+    // dp[b][i][r]: best plan putting compute layers [0, i) on boards
+    // 0..=b with the last stage replicated r-wide (boards b-r+1..=b).
+    let mut dp: Vec<Vec<Vec<Option<Cell>>>> = vec![vec![vec![None; maxr + 1]; n + 1]; b_count];
     for b in 0..b_count {
-        let (j, i) = (bounds[b], bounds[b + 1]);
-        let candidate = cell_of(b, j, i).expect("winning cell vanished").clone();
+        let rmax = maxr.min(run_len[b]).min(b + 1);
+        let after = b_count - 1 - b;
+        if min_stages(after) >= n {
+            continue;
+        }
+        let i_max = n - min_stages(after);
+        for i in 1..=i_max {
+            if b == b_count - 1 && i != n {
+                continue;
+            }
+            for r in 1..=rmax {
+                let before = b + 1 - r;
+                if before == 0 {
+                    // First stage: layers [0, i) on boards 0..=b, r-wide.
+                    if let Some(c) = cell_of(b, 0, i) {
+                        dp[b][i][r] = Some(Cell {
+                            fps: r as f64 * c.throughput_fps,
+                            latency_s: c.frame_latency_s,
+                            start_j: 0,
+                            prev_r: 0,
+                        });
+                    }
+                    continue;
+                }
+                let pb = before - 1; // last board of the previous stage
+                let mut best: Option<Cell> = None;
+                for j in min_stages(before).max(1)..i {
+                    let Some(stage) = cell_of(b, j, i) else { continue };
+                    for r_prev in 1..=maxr {
+                        let Some(prev) = dp[pb][j][r_prev] else { continue };
+                        let link_fps = cfg.link.fan_throughput_fps(cut_bytes[j], r_prev, r);
+                        let hop_s = cfg.link.transfer_s(cut_bytes[j]);
+                        let eff = r as f64 * stage.throughput_fps;
+                        let fps = prev.fps.min(link_fps).min(eff);
+                        let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
+                        if improves((fps, latency_s), best.map(|c| (c.fps, c.latency_s))) {
+                            best = Some(Cell { fps, latency_s, start_j: j, prev_r: r_prev });
+                        }
+                    }
+                }
+                dp[b][i][r] = best;
+            }
+        }
+    }
+
+    // Pick the winning replication of the final stage, then walk the
+    // chain back to the front.
+    let mut chosen: Option<(usize, Cell)> = None;
+    for r in 1..=maxr.min(run_len[b_count - 1]).min(b_count) {
+        if let Some(c) = dp[b_count - 1][n][r] {
+            if improves((c.fps, c.latency_s), chosen.map(|(_, b)| (b.fps, b.latency_s))) {
+                chosen = Some((r, c));
+            }
+        }
+    }
+    let (final_r, final_cell) = chosen?;
+
+    // Reconstruct (start layer, end layer, last board, replicas) per
+    // stage, back to front.
+    let mut rev: Vec<(usize, usize, usize, usize)> = Vec::new();
+    let mut i_cur = n;
+    let mut b_cur = b_count - 1;
+    let mut r_cur = final_r;
+    loop {
+        let cell = dp[b_cur][i_cur][r_cur].expect("dp chain broken");
+        rev.push((cell.start_j, i_cur, b_cur, r_cur));
+        if cell.start_j == 0 {
+            debug_assert_eq!(b_cur + 1, r_cur, "first stage must start at board 0");
+            break;
+        }
+        let next_b = b_cur - r_cur;
+        i_cur = cell.start_j;
+        r_cur = cell.prev_r;
+        b_cur = next_b;
+    }
+    rev.reverse();
+
+    let mut stages = Vec::with_capacity(rev.len());
+    for (s_idx, &(j, i, b_end, r)) in rev.iter().enumerate() {
+        let candidate = cell_of(b_end, j, i).expect("winning cell vanished").clone();
         let egress_bytes = cut_bytes[i];
+        let r_next = rev.get(s_idx + 1).map(|&(_, _, _, rn)| rn).unwrap_or(1);
+        let stage_fps = r as f64 * candidate.throughput_fps;
         stages.push(ShardStage {
-            board: b,
-            device: devices[b].clone(),
+            stage: s_idx,
+            boards: (b_end + 1 - r..=b_end).collect(),
+            device: devices[b_end].clone(),
             layer_range: (j, i),
             candidate,
+            stage_fps,
             egress_bytes,
-            egress_fps: cfg.link.throughput_fps(egress_bytes),
+            egress_fps: cfg.link.fan_throughput_fps(egress_bytes, r, r_next),
         });
     }
 
@@ -332,19 +469,33 @@ pub fn partition(
         .filter(|l| l.is_compute())
         .map(|l| l.ops() as f64)
         .sum();
-    Some(ShardPlan {
+    let plan = ShardPlan {
         network: net.name.clone(),
         link: cfg.link,
         stages,
         throughput_fps: final_cell.fps,
         gops: final_cell.fps * total_ops / 1e9,
         latency_s: final_cell.latency_s,
-    })
+    };
+    // The DP's incremental mins/sums must agree with the closed-form
+    // interleave model bit-for-bit (same operations, same order).
+    debug_assert_eq!(
+        plan.throughput_fps.to_bits(),
+        interleave::steady_state_fps(&plan.stage_rates(), &plan.link, &plan.cut_bytes()).to_bits(),
+        "DP throughput disagrees with the interleave model"
+    );
+    debug_assert_eq!(
+        plan.latency_s.to_bits(),
+        interleave::frame_latency_s(&plan.stage_rates(), &plan.link, &plan.cut_bytes()).to_bits(),
+        "DP latency disagrees with the interleave model"
+    );
+    Some(plan)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dnn::graph::NetworkBuilder;
     use crate::dnn::{zoo, Precision, TensorShape};
     use crate::dse::pso::PsoParams;
 
@@ -357,6 +508,17 @@ mod tests {
             pso: PsoParams { population: 8, iterations: 5, ..PsoParams::default() },
             ..ShardConfig::default()
         }
+    }
+
+    /// A network dominated by one heavy layer: a contiguous split can
+    /// never balance it, which is exactly where replication pays.
+    fn bottleneck_net() -> Network {
+        NetworkBuilder::new("hotspot", TensorShape::new(3, 64, 64), Precision::Int16)
+            .conv(16, 3, 1, 1)
+            .conv(256, 3, 1, 1) // the hot layer
+            .conv(16, 3, 1, 1)
+            .conv(16, 3, 1, 1)
+            .build()
     }
 
     #[test]
@@ -381,9 +543,13 @@ mod tests {
         let cache = EvalCache::new();
         let plan = partition(&net, &devices, &quick_cfg(), &cache).expect("feasible");
         assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.board_count(), 2);
+        assert_eq!(plan.max_replication(), 1);
         assert_eq!(plan.stages[0].layer_range.0, 0);
         assert_eq!(plan.stages[1].layer_range.1, net.compute_layers().len());
         assert_eq!(plan.stages[0].layer_range.1, plan.stages[1].layer_range.0);
+        assert_eq!(plan.stages[0].boards, vec![0]);
+        assert_eq!(plan.stages[1].boards, vec![1]);
         assert!(plan.throughput_fps > 0.0 && plan.gops > 0.0);
         assert!(plan.latency_s > 0.0);
         assert!(plan.stages[0].egress_bytes > 0.0);
@@ -392,12 +558,19 @@ mod tests {
     }
 
     #[test]
-    fn more_boards_than_layers_is_none() {
+    fn more_boards_than_layers_is_none_without_replication() {
         let net = vgg(64);
         let n = net.compute_layers().len();
         let devices = vec![FpgaDevice::zcu102(); n + 1];
         let cache = EvalCache::new();
         assert!(partition(&net, &devices, &quick_cfg(), &cache).is_none());
+        // Replication makes the same cluster feasible: stages can share
+        // their layer range across boards.
+        let mut cfg = quick_cfg();
+        cfg.max_replicas = 2;
+        let plan = partition(&net, &devices, &cfg, &cache).expect("replication feasible");
+        assert_eq!(plan.board_count(), n + 1);
+        assert!(plan.max_replication() >= 2);
     }
 
     #[test]
@@ -414,6 +587,7 @@ mod tests {
         assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
         for (x, y) in a.stages.iter().zip(&b.stages) {
             assert_eq!(x.layer_range, y.layer_range);
+            assert_eq!(x.boards, y.boards);
             assert_eq!(x.candidate.rav, y.candidate.rav);
         }
     }
@@ -431,5 +605,66 @@ mod tests {
         // And the fast-link plan is strictly faster end-to-end.
         let fast = partition(&net, &devices, &quick_cfg(), &cache).expect("feasible");
         assert!(fast.throughput_fps > plan.throughput_fps);
+    }
+
+    #[test]
+    fn replication_beats_contiguous_on_a_hotspot() {
+        let net = bottleneck_net();
+        let devices = vec![FpgaDevice::zcu102(); 4];
+        let cache = EvalCache::new();
+        let contiguous =
+            partition(&net, &devices, &quick_cfg(), &cache).expect("contiguous feasible");
+        let mut cfg = quick_cfg();
+        cfg.max_replicas = 4;
+        let replicated = partition(&net, &devices, &cfg, &cache).expect("replicated feasible");
+        assert!(replicated.max_replication() > 1, "planner must actually replicate");
+        assert!(
+            replicated.gops > contiguous.gops,
+            "replicated {} GOP/s must beat contiguous {} GOP/s on a hotspot net",
+            replicated.gops,
+            contiguous.gops
+        );
+        // The replica groups tile the cluster exactly, in order.
+        let mut next_board = 0usize;
+        let mut next_layer = 0usize;
+        for s in &replicated.stages {
+            assert_eq!(s.boards[0], next_board);
+            for (k, &bd) in s.boards.iter().enumerate() {
+                assert_eq!(bd, next_board + k);
+            }
+            next_board += s.replicas();
+            assert_eq!(s.layer_range.0, next_layer);
+            next_layer = s.layer_range.1;
+        }
+        assert_eq!(next_board, devices.len());
+        assert_eq!(next_layer, net.compute_layers().len());
+    }
+
+    #[test]
+    fn heterogeneous_boards_never_share_a_replica_group() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::ku115(), FpgaDevice::zc706()];
+        let mut cfg = quick_cfg();
+        cfg.max_replicas = 2;
+        let cache = EvalCache::new();
+        let plan = partition(&net, &devices, &cfg, &cache).expect("feasible");
+        assert_eq!(plan.max_replication(), 1, "distinct devices cannot replicate");
+        assert_eq!(plan.stages.len(), 2);
+    }
+
+    #[test]
+    fn max_replicas_one_matches_default_bitwise() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let a = partition(&net, &devices, &quick_cfg(), &EvalCache::new()).expect("default");
+        let mut cfg = quick_cfg();
+        cfg.max_replicas = 1;
+        let b = partition(&net, &devices, &cfg, &EvalCache::new()).expect("explicit r=1");
+        assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(x.layer_range, y.layer_range);
+            assert_eq!(x.boards, y.boards);
+        }
     }
 }

@@ -14,18 +14,25 @@
 //!   round away).
 //!
 //! Fig. 7 / Fig. 8 compare analytical estimates against this simulator,
-//! reproducing the paper's estimation-error experiments.
+//! reproducing the paper's estimation-error experiments. [`shard`]
+//! extends the family across boards: a discrete-event walk of a
+//! replicated, frame-interleaved shard plan (per-replica servers,
+//! per-board links, in-order departures) that `tests/sim_vs_model.rs`
+//! differences against [`crate::perfmodel::interleave`] and the live
+//! [`crate::coordinator::ShardedPipeline`].
 
 pub mod dram;
 pub mod generic;
 pub mod hybrid;
 pub mod pipeline;
+pub mod shard;
 pub mod trace;
 
 pub use dram::DramModel;
 pub use generic::simulate_generic;
 pub use hybrid::simulate_candidate;
 pub use pipeline::simulate_pipeline;
+pub use shard::{simulate_shard, ShardSimResult, ShardSimSpec, SimStage};
 
 
 /// Measured (simulated) performance of an accelerator run.

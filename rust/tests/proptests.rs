@@ -658,6 +658,94 @@ fn prop_shard_cfg() -> dnnexplorer::shard::ShardConfig {
     }
 }
 
+/// Structural invariants every plan must satisfy: exact contiguous
+/// layer cover, exact replica-group tiling of the cluster, per-board
+/// budgets, and fps == min(effective stage rates, cut ceilings).
+fn check_plan_invariants(
+    plan: &dnnexplorer::ShardPlan,
+    net: &dnnexplorer::Network,
+    devices: &[FpgaDevice],
+    max_replicas: usize,
+) -> Result<(), String> {
+    let n = net.compute_layers().len();
+    let mut layer_cursor = 0usize;
+    let mut board_cursor = 0usize;
+    for (idx, s) in plan.stages.iter().enumerate() {
+        if s.stage != idx {
+            return Err(format!("stage index {} at position {idx}", s.stage));
+        }
+        if s.layer_range.0 != layer_cursor {
+            return Err(format!(
+                "stage {} starts at {} instead of {}",
+                s.stage, s.layer_range.0, layer_cursor
+            ));
+        }
+        if s.layer_range.1 <= s.layer_range.0 {
+            return Err(format!("stage {} empty: {:?}", s.stage, s.layer_range));
+        }
+        layer_cursor = s.layer_range.1;
+        // Replica group: non-empty, bounded, contiguous ascending run
+        // starting where the previous group ended.
+        if s.replicas() == 0 || s.replicas() > max_replicas {
+            return Err(format!(
+                "stage {} has {} replicas (max {max_replicas})",
+                s.stage,
+                s.replicas()
+            ));
+        }
+        for (k, &b) in s.boards.iter().enumerate() {
+            if b != board_cursor + k {
+                return Err(format!(
+                    "stage {} boards {:?} not a contiguous run at {}",
+                    s.stage, s.boards, board_cursor
+                ));
+            }
+            if b >= devices.len() {
+                return Err(format!("stage {} uses board {b} of {}", s.stage, devices.len()));
+            }
+        }
+        board_cursor += s.replicas();
+        // Effective rate bookkeeping.
+        let eff = s.replicas() as f64 * s.candidate.throughput_fps;
+        if s.stage_fps.to_bits() != eff.to_bits() {
+            return Err(format!("stage {} fps {} != r x {}", s.stage, s.stage_fps, eff));
+        }
+        // Per-board resources: every replica fits its own device
+        // (BRAM gets the engine's block-rounding tolerance).
+        if s.candidate.dsp_used > s.device.dsp as f64 {
+            return Err(format!(
+                "stage {} uses {} DSP of {}",
+                s.stage, s.candidate.dsp_used, s.device.dsp
+            ));
+        }
+        if s.candidate.bram_used > s.device.bram18k as f64 * 1.05 {
+            return Err(format!(
+                "stage {} uses {} BRAM of {}",
+                s.stage, s.candidate.bram_used, s.device.bram18k
+            ));
+        }
+    }
+    if layer_cursor != n {
+        return Err(format!("stages cover {layer_cursor} of {n} compute layers"));
+    }
+    if board_cursor != devices.len() {
+        return Err(format!("replica groups tile {board_cursor} of {} boards", devices.len()));
+    }
+    // System model consistency: the e2e rate is exactly the min of
+    // effective stage rates and cut ceilings.
+    let mut floor = f64::INFINITY;
+    for s in &plan.stages {
+        floor = floor.min(s.stage_fps);
+        if s.egress_bytes > 0.0 {
+            floor = floor.min(s.egress_fps);
+        }
+    }
+    if plan.throughput_fps.to_bits() != floor.to_bits() {
+        return Err(format!("plan fps {} != min(stage, link) {}", plan.throughput_fps, floor));
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_shard_plan_covers_layers_once_and_respects_resources() {
     use dnnexplorer::dse::EvalCache;
@@ -678,57 +766,196 @@ fn prop_shard_plan_covers_layers_once_and_respects_resources() {
             let Some(plan) = partition(net, &devices, &prop_shard_cfg(), &cache) else {
                 return Ok(()); // infeasible cluster for this net: allowed
             };
-            let n = net.compute_layers().len();
-            // Exact contiguous cover: stage k starts where k-1 ended.
             if plan.stages.len() != devices.len() {
-                return Err(format!("{} stages for {} boards", plan.stages.len(), devices.len()));
-            }
-            let mut cursor = 0usize;
-            for s in &plan.stages {
-                if s.layer_range.0 != cursor {
-                    return Err(format!(
-                        "stage {} starts at {} instead of {}",
-                        s.board, s.layer_range.0, cursor
-                    ));
-                }
-                if s.layer_range.1 <= s.layer_range.0 {
-                    return Err(format!("stage {} empty: {:?}", s.board, s.layer_range));
-                }
-                cursor = s.layer_range.1;
-            }
-            if cursor != n {
-                return Err(format!("stages cover {cursor} of {n} compute layers"));
-            }
-            // Per-board resources: every stage fits its own device
-            // (BRAM gets the engine's block-rounding tolerance).
-            for s in &plan.stages {
-                if s.candidate.dsp_used > s.device.dsp as f64 {
-                    return Err(format!(
-                        "stage {} uses {} DSP of {}",
-                        s.board, s.candidate.dsp_used, s.device.dsp
-                    ));
-                }
-                if s.candidate.bram_used > s.device.bram18k as f64 * 1.05 {
-                    return Err(format!(
-                        "stage {} uses {} BRAM of {}",
-                        s.board, s.candidate.bram_used, s.device.bram18k
-                    ));
-                }
-            }
-            // System model consistency: the e2e rate is exactly the min
-            // of stage rates and link serialization rates.
-            let mut floor = f64::INFINITY;
-            for s in &plan.stages {
-                floor = floor.min(s.candidate.throughput_fps);
-                if s.egress_bytes > 0.0 {
-                    floor = floor.min(s.egress_fps);
-                }
-            }
-            if plan.throughput_fps.to_bits() != floor.to_bits() {
                 return Err(format!(
-                    "plan fps {} != min(stage, link) {}",
-                    plan.throughput_fps, floor
+                    "{} stages for {} boards at r=1",
+                    plan.stages.len(),
+                    devices.len()
                 ));
+            }
+            check_plan_invariants(&plan, net, &devices, 1)
+        },
+    );
+}
+
+#[test]
+fn prop_replicated_plans_cover_boards_and_layers_exactly() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+
+    check(
+        "replica groups tile the cluster; layers covered once; budgets hold",
+        227,
+        8,
+        |r| (arb_small_net(r), 1 + r.gen_index(3), 2 + r.gen_index(3)),
+        |(net, maxr, boards)| {
+            let devices = vec![FpgaDevice::ku115(); *boards];
+            let mut cfg = prop_shard_cfg();
+            cfg.max_replicas = *maxr;
+            let cache = EvalCache::new();
+            let Some(plan) = partition(net, &devices, &cfg, &cache) else {
+                return Ok(()); // infeasible cluster for this net: allowed
+            };
+            check_plan_invariants(&plan, net, &devices, *maxr)?;
+            // Latency is replication-invariant per stage: sum of stage
+            // latencies + hops must reproduce the plan latency exactly.
+            let rates = plan.stage_rates();
+            let again = dnnexplorer::perfmodel::interleave::frame_latency_s(
+                &rates,
+                &plan.link,
+                &plan.cut_bytes(),
+            );
+            if plan.latency_s.to_bits() != again.to_bits() {
+                return Err(format!("latency {} != interleave {}", plan.latency_s, again));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_max_replicas_one_is_bit_identical_to_contiguous_planner() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+
+    check(
+        "r=1 plans are bit-identical to the default (contiguous) planner",
+        229,
+        6,
+        arb_small_net,
+        |net| {
+            let devices = vec![FpgaDevice::ku115(), FpgaDevice::ku115()];
+            let default_plan = partition(net, &devices, &prop_shard_cfg(), &EvalCache::new());
+            let mut cfg = prop_shard_cfg();
+            cfg.max_replicas = 1;
+            let explicit = partition(net, &devices, &cfg, &EvalCache::new());
+            match (default_plan, explicit) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    if a.throughput_fps.to_bits() != b.throughput_fps.to_bits()
+                        || a.latency_s.to_bits() != b.latency_s.to_bits()
+                        || a.gops.to_bits() != b.gops.to_bits()
+                    {
+                        return Err(format!(
+                            "metrics diverge: {} vs {} fps",
+                            a.throughput_fps, b.throughput_fps
+                        ));
+                    }
+                    for (x, y) in a.stages.iter().zip(&b.stages) {
+                        if x.layer_range != y.layer_range || x.boards != y.boards {
+                            return Err(format!(
+                                "structure diverges: {:?}/{:?} vs {:?}/{:?}",
+                                x.layer_range, x.boards, y.layer_range, y.boards
+                            ));
+                        }
+                        if x.replicas() != 1 {
+                            return Err(format!("stage {} replicated at maxr=1", x.stage));
+                        }
+                        if x.candidate.rav != y.candidate.rav {
+                            return Err("RAV diverges".into());
+                        }
+                    }
+                    Ok(())
+                }
+                (a, b) => Err(format!(
+                    "feasibility disagrees: default {:?} vs explicit {:?}",
+                    a.is_some(),
+                    b.is_some()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_replication_allowance_never_models_worse() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+
+    check(
+        "fps(max_replicas=2) >= fps(max_replicas=1): the search spaces nest",
+        233,
+        5,
+        arb_small_net,
+        |net| {
+            let devices = vec![FpgaDevice::ku115(); 3];
+            let cache = EvalCache::new();
+            let narrow = partition(net, &devices, &prop_shard_cfg(), &cache);
+            let mut cfg = prop_shard_cfg();
+            cfg.max_replicas = 2;
+            let wide = partition(net, &devices, &cfg, &cache);
+            match (narrow, wide) {
+                (Some(n1), Some(w)) => {
+                    if w.throughput_fps < n1.throughput_fps {
+                        return Err(format!(
+                            "replication allowance lost throughput: {} < {}",
+                            w.throughput_fps, n1.throughput_fps
+                        ));
+                    }
+                    Ok(())
+                }
+                (Some(_), None) => Err("wide search lost feasibility".into()),
+                // A 3-board r=1 plan may be infeasible (too few layers)
+                // while replication makes it feasible — fine.
+                (None, _) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_reorder_buffer_exactly_once_in_order() {
+    use dnnexplorer::coordinator::ReorderBuffer;
+
+    check(
+        "reorder buffer: every frame exactly once, in order, any completion order",
+        239,
+        300,
+        |r| {
+            let n = 1 + r.gen_index(40);
+            // Arbitrary completion order: a Fisher-Yates shuffle.
+            let mut order: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = r.gen_index(i + 1);
+                order.swap(i, j);
+            }
+            // Arbitrary subset of frames that die upstream (skips).
+            let skips: Vec<bool> = (0..n).map(|_| r.gen_index(5) == 0).collect();
+            (order, skips)
+        },
+        |(order, skips)| {
+            let n = order.len();
+            let mut buf: ReorderBuffer<u64> = ReorderBuffer::new(0);
+            let mut released: Vec<u64> = Vec::new();
+            let mut arrived = vec![false; n];
+            for &seq in order {
+                if skips[seq] {
+                    buf.skip(seq as u64);
+                } else {
+                    buf.push(seq as u64, seq as u64);
+                }
+                arrived[seq] = true;
+                while let Some((s, v)) = buf.pop_next() {
+                    if s != v {
+                        return Err(format!("payload mixed up: {s} vs {v}"));
+                    }
+                    // Nothing may be released before every predecessor
+                    // arrived (pushed or skipped).
+                    if !arrived[..=s as usize].iter().all(|&a| a) {
+                        return Err(format!("{s} released before a predecessor arrived"));
+                    }
+                    released.push(s);
+                }
+            }
+            let expect: Vec<u64> = (0..n as u64).filter(|&s| !skips[s as usize]).collect();
+            if released != expect {
+                return Err(format!("released {released:?} != expected {expect:?}"));
+            }
+            if !buf.is_empty() {
+                return Err("buffer retained items after full release".into());
+            }
+            if buf.released() != expect.len() as u64 {
+                return Err("release counter wrong".into());
             }
             Ok(())
         },

@@ -176,14 +176,10 @@ fn sharded_pipeline_end_to_end_metrics_reconcile() {
 
     // Per stage: each stage saw exactly n requests and served them all.
     for s in 0..pipe.stage_count() {
-        let sm = pipe.stage_metrics(s);
-        assert_eq!(sm.requests.load(Ordering::Relaxed), n as u64, "stage {s} requests");
-        assert_eq!(sm.ok_frames.load(Ordering::Relaxed), n as u64, "stage {s} ok");
-        assert_eq!(
-            sm.accounted(),
-            sm.requests.load(Ordering::Relaxed),
-            "stage {s} reconciliation"
-        );
+        let sm = pipe.stage_totals(s);
+        assert_eq!(sm.requests, n as u64, "stage {s} requests");
+        assert_eq!(sm.ok_frames, n as u64, "stage {s} ok");
+        assert_eq!(sm.accounted(), sm.requests, "stage {s} reconciliation");
     }
     pipe.shutdown();
 }
@@ -221,9 +217,7 @@ fn sharded_pipeline_under_slow_stage_still_reconciles() {
     }
     assert_eq!(ok, n as u64);
     assert_eq!(pipe.metrics.accounted(), n as u64);
-    assert_eq!(
-        pipe.stage_metrics(1).requests.load(Ordering::Relaxed),
-        pipe.stage_metrics(1).ok_frames.load(Ordering::Relaxed)
-    );
+    let slow = pipe.stage_totals(1);
+    assert_eq!(slow.requests, slow.ok_frames);
     pipe.shutdown();
 }

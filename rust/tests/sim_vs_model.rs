@@ -1,0 +1,303 @@
+//! Differential suite: the analytic interleave model
+//! (`perfmodel::interleave`), the discrete-event shard simulator
+//! (`sim::shard`), and the live coordinator (`ShardedPipeline`) must
+//! agree on steady-state throughput for every plan shape — 1-board,
+//! contiguous 2/4-board, and replicated stages.
+//!
+//! The acceptance bar rides along: on a bottleneck-heavy network over
+//! 4x ZCU102, the best replicated plan strictly beats the best
+//! contiguous plan in modeled GOP/s, and all three layers agree on it
+//! within tolerance.
+
+use std::time::{Duration, Instant};
+
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{BatcherConfig, QueueConfig, ShardedPipeline, StageSpec};
+use dnnexplorer::dnn::graph::NetworkBuilder;
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::multi::compare_replication;
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::perfmodel::interleave::{self, StageRate};
+use dnnexplorer::perfmodel::link::LinkModel;
+use dnnexplorer::runtime::executable::HostTensor;
+use dnnexplorer::shard::{partition, ShardConfig, ShardPlan};
+use dnnexplorer::sim::shard::{simulate_shard, ShardSimSpec, SimStage};
+use dnnexplorer::{FpgaDevice, Network};
+
+fn quick_cfg() -> ShardConfig {
+    ShardConfig {
+        pso: PsoParams { population: 6, iterations: 3, ..PsoParams::default() },
+        threads: 2,
+        ..ShardConfig::default()
+    }
+}
+
+/// One heavy layer between light ones: contiguous cuts cannot balance
+/// it, so replication is where the throughput lives.
+fn hotspot_net() -> Network {
+    NetworkBuilder::new("hotspot", TensorShape::new(3, 48, 48), Precision::Int16)
+        .conv(16, 3, 1, 1)
+        .conv(128, 3, 1, 1) // the hot pair: wide in/out channels
+        .conv(16, 3, 1, 1)
+        .conv(16, 3, 1, 1)
+        .build()
+}
+
+/// Relative gap |a - b| / b.
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+// ---------------------------------------------------------------------
+// Synthetic grid: DES vs closed form on hand-built plan shapes.
+
+#[test]
+fn synthetic_grid_sim_matches_model() {
+    let fast = LinkModel::default();
+    let narrow = LinkModel::new(0.002, 1e-6); // 2 MB/s: the cut binds
+    let s = |replicas: usize, ms: f64| SimStage { replicas, service_s: ms * 1e-3 };
+    let grid: Vec<(&str, ShardSimSpec)> = vec![
+        ("1-board", ShardSimSpec { stages: vec![s(1, 1.0)], link: fast, cut_bytes: vec![] }),
+        (
+            "contiguous-2",
+            ShardSimSpec { stages: vec![s(1, 0.8), s(1, 1.3)], link: fast, cut_bytes: vec![4e4] },
+        ),
+        (
+            "contiguous-4",
+            ShardSimSpec {
+                stages: vec![s(1, 0.5), s(1, 1.1), s(1, 0.7), s(1, 0.9)],
+                link: fast,
+                cut_bytes: vec![4e4, 2e4, 1e4],
+            },
+        ),
+        (
+            "replicated-mid",
+            ShardSimSpec {
+                stages: vec![s(1, 0.6), s(3, 1.5), s(1, 0.7)],
+                link: fast,
+                cut_bytes: vec![4e4, 4e4],
+            },
+        ),
+        (
+            "replicated-head",
+            ShardSimSpec {
+                stages: vec![s(2, 1.6), s(1, 0.9)],
+                link: fast,
+                cut_bytes: vec![3e4],
+            },
+        ),
+        (
+            "pure-replication",
+            ShardSimSpec { stages: vec![s(4, 2.0)], link: fast, cut_bytes: vec![] },
+        ),
+        (
+            "link-bound-fan",
+            ShardSimSpec {
+                stages: vec![s(2, 0.1), s(2, 0.1)],
+                link: narrow,
+                cut_bytes: vec![2e3], // 1000 fps/link, 2 lanes
+            },
+        ),
+    ];
+    for (name, spec) in grid {
+        let predicted =
+            interleave::steady_state_fps(&spec.stage_rates(), &spec.link, &spec.cut_bytes);
+        let sim = simulate_shard(&spec, 600, 100).expect("simulates");
+        assert!(
+            rel(sim.throughput_fps, predicted) < 0.03,
+            "{name}: sim {} vs model {} diverge",
+            sim.throughput_fps,
+            predicted
+        );
+        for w in sim.departures_s.windows(2) {
+            assert!(w[1] >= w[0], "{name}: departures out of order");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Planned shapes: planner DP == closed form (exact), DES close.
+
+fn check_plan_against_sim(plan: &ShardPlan, label: &str) {
+    // The DP's throughput must equal the closed-form interleave model
+    // bit-for-bit: same mins, same order.
+    let analytic =
+        interleave::steady_state_fps(&plan.stage_rates(), &plan.link, &plan.cut_bytes());
+    assert_eq!(
+        plan.throughput_fps.to_bits(),
+        analytic.to_bits(),
+        "{label}: planner fps {} != analytic {}",
+        plan.throughput_fps,
+        analytic
+    );
+    let latency =
+        interleave::frame_latency_s(&plan.stage_rates(), &plan.link, &plan.cut_bytes());
+    assert_eq!(plan.latency_s.to_bits(), latency.to_bits(), "{label}: latency mismatch");
+    // The discrete-event walk of the same plan lands on the same rate.
+    let spec = ShardSimSpec::from_plan(plan);
+    let sim = simulate_shard(&spec, 600, 100).expect("simulates");
+    assert!(
+        rel(sim.throughput_fps, plan.throughput_fps) < 0.05,
+        "{label}: sim {} vs plan {} diverge",
+        sim.throughput_fps,
+        plan.throughput_fps
+    );
+}
+
+#[test]
+fn planned_shapes_agree_sim_vs_model() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+    let cache = EvalCache::new();
+    let cfg = quick_cfg();
+
+    let pair = vec![FpgaDevice::zcu102(); 2];
+    let quad = vec![FpgaDevice::zcu102(); 4];
+
+    let one = partition(&net, &[FpgaDevice::zcu102()], &cfg, &cache).expect("1 board");
+    check_plan_against_sim(&one, "1-board");
+
+    let two = partition(&net, &pair, &cfg, &cache).expect("2 boards");
+    check_plan_against_sim(&two, "contiguous-2");
+
+    let four = partition(&net, &quad, &cfg, &cache).expect("4 boards");
+    check_plan_against_sim(&four, "contiguous-4");
+
+    let mut rcfg = quick_cfg();
+    rcfg.max_replicas = 2;
+    let rep2 = partition(&net, &quad, &rcfg, &cache).expect("r<=2");
+    check_plan_against_sim(&rep2, "replicated-2");
+}
+
+// ---------------------------------------------------------------------
+// Live pipeline: synthetic executors clocked from the plan.
+
+/// Serve `frames` frames through a `ShardedPipeline` whose executors
+/// sleep the plan's (scaled) per-replica intervals; returns measured
+/// steady-state fps and the stage-only analytic prediction at the same
+/// scale (the live chain has no link serialization).
+fn live_vs_model(plan: &ShardPlan, frames: usize, warmup: usize) -> (f64, f64) {
+    // Scale services so the predicted end-to-end rate is ~800 fps:
+    // large enough to finish fast, slow enough for sleep() fidelity.
+    let min_eff: f64 = plan
+        .stages
+        .iter()
+        .map(|s| s.stage_fps)
+        .fold(f64::INFINITY, f64::min);
+    let scale = min_eff / 800.0;
+    let scaled_rates: Vec<StageRate> = plan
+        .stages
+        .iter()
+        .map(|s| StageRate::new(s.replicas(), s.candidate.throughput_fps / scale, 0.0))
+        .collect();
+    let zero_cuts = vec![0.0; scaled_rates.len().saturating_sub(1)];
+    let predicted =
+        interleave::steady_state_fps(&scaled_rates, &LinkModel::default(), &zero_cuts);
+
+    let queue = QueueConfig {
+        batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+        ..QueueConfig::default()
+    };
+    let specs: Vec<StageSpec> = plan
+        .stages
+        .iter()
+        .map(|s| {
+            let per_frame = Duration::from_secs_f64(scale / s.candidate.throughput_fps);
+            StageSpec::replicated(
+                s.replicas(),
+                move |_| Ok(FixedServiceModel { per_frame }),
+                queue.clone(),
+            )
+        })
+        .collect();
+    let pipe = ShardedPipeline::spawn(specs).expect("pipeline starts");
+
+    let mut receivers = Vec::with_capacity(frames);
+    for i in 0..frames {
+        receivers.push(
+            pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap())
+                .expect("admission (block policy)"),
+        );
+    }
+    let mut t_warm = None;
+    let mut t_last = Instant::now();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let out = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("resolves")
+            .expect("serves");
+        // Exactly-once, in-order: the i-th receiver carries frame i.
+        assert_eq!(out.data, vec![i as f32], "frame {i} out of order");
+        t_last = Instant::now();
+        if i + 1 == warmup {
+            t_warm = Some(t_last);
+        }
+    }
+    let span = t_last.duration_since(t_warm.expect("warmup reached")).as_secs_f64();
+    let measured = (frames - warmup) as f64 / span.max(1e-9);
+
+    // Books balance end-to-end and per stage.
+    assert_eq!(pipe.metrics.ok_frames.load(std::sync::atomic::Ordering::Relaxed), frames as u64);
+    assert_eq!(pipe.metrics.accounted(), frames as u64);
+    for s in 0..pipe.stage_count() {
+        let t = pipe.stage_totals(s);
+        assert_eq!(t.requests, frames as u64, "stage {s} requests");
+        assert_eq!(t.accounted(), t.requests, "stage {s} reconciliation");
+    }
+    pipe.shutdown();
+    (measured, predicted)
+}
+
+// ---------------------------------------------------------------------
+// The acceptance bar: replication wins, and all three layers agree.
+
+#[test]
+fn replicated_plan_beats_contiguous_and_all_layers_agree() {
+    let net = hotspot_net();
+    let devices = vec![FpgaDevice::zcu102(); 4];
+    let cache = EvalCache::new();
+    let mut cfg = quick_cfg();
+    cfg.max_replicas = 4;
+
+    let outcome = compare_replication(&net, &devices, &cfg, &cache);
+    let contiguous = outcome.contiguous.as_ref().expect("contiguous feasible");
+    let replicated = outcome.replicated.as_ref().expect("replicated feasible");
+
+    // The headline claim: interleaving recovers the throughput a
+    // contiguous cut leaves on the table.
+    assert!(replicated.max_replication() > 1, "planner must replicate the hot stage");
+    assert!(
+        replicated.gops > contiguous.gops,
+        "replicated {} GOP/s must strictly beat contiguous {} GOP/s",
+        replicated.gops,
+        contiguous.gops
+    );
+
+    // Model vs DES on both plans.
+    check_plan_against_sim(contiguous, "best-contiguous");
+    check_plan_against_sim(replicated, "best-replicated");
+
+    // Live pipeline vs model on the winning plan. Sleep-based executors
+    // are noisy; the bound is loose but would catch any structural
+    // mis-model (a lost replica, a serialized group, a stalled reorder).
+    let (measured, predicted) = live_vs_model(replicated, 240, 40);
+    assert!(
+        measured > predicted * 0.6 && measured < predicted * 1.3,
+        "live pipeline {measured:.0} fps vs predicted {predicted:.0} fps out of tolerance"
+    );
+}
+
+#[test]
+fn live_pipeline_matches_model_on_contiguous_chain() {
+    // The r = 1 baseline of the live differential: a plain 2-stage
+    // chain must also track its prediction.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+    let cache = EvalCache::new();
+    let pair = vec![FpgaDevice::zcu102(); 2];
+    let plan = partition(&net, &pair, &quick_cfg(), &cache).expect("2 boards");
+    let (measured, predicted) = live_vs_model(&plan, 200, 30);
+    assert!(
+        measured > predicted * 0.6 && measured < predicted * 1.3,
+        "live pipeline {measured:.0} fps vs predicted {predicted:.0} fps out of tolerance"
+    );
+}
