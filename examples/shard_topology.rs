@@ -1,0 +1,110 @@
+//! Topology-aware sharding quickstart: the same four boards, three
+//! different wirings — what does the interconnect choice cost, and what
+//! does *planning for it* recover?
+//!
+//! Partitions VGG16 across 4× ZCU102 under three fabrics:
+//!
+//! * `p2p`  — a dedicated cable per cut (the optimistic classic model);
+//! * `ring` — boards chained in slot order: every cut collapses to one
+//!   boundary segment, hop latency grows with replica span;
+//! * `star` — per-board uplinks into a switch with finite bisection
+//!   bandwidth shared by all concurrent cut traffic.
+//!
+//! For the star it also runs the topology-awareness comparison: the
+//! p2p-planned ("blind") structure re-priced on the switch against the
+//! plan the fabric-aware DP picks — the gap is what ignoring the
+//! interconnect costs at deployment.
+//!
+//! ```sh
+//! cargo run --release --example shard_topology
+//! DNNEXPLORER_BENCH_FULL=1 cargo run --release --example shard_topology
+//! ```
+
+use dnnexplorer::dnn::{zoo, Precision, TensorShape};
+use dnnexplorer::dse::cache::EvalCache;
+use dnnexplorer::dse::multi::compare_topology_awareness;
+use dnnexplorer::dse::pso::PsoParams;
+use dnnexplorer::shard::{partition, ShardConfig};
+use dnnexplorer::sim::shard::{simulate_shard, ShardSimSpec};
+use dnnexplorer::topo::FabricKind;
+use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::util::parallel::default_threads;
+use dnnexplorer::FpgaDevice;
+
+fn main() {
+    let net = zoo::vgg16_conv(TensorShape::new(3, 224, 224), Precision::Int16);
+    let base = ShardConfig {
+        pso: if full_mode() {
+            PsoParams::default()
+        } else {
+            PsoParams { population: 10, iterations: 8, ..PsoParams::default() }
+        },
+        threads: default_threads(),
+        max_replicas: 2,
+        ..ShardConfig::default()
+    };
+    let cluster = vec![FpgaDevice::zcu102(); 4];
+    let cache = EvalCache::new();
+
+    // One cluster, three wirings. The star's bisection is deliberately
+    // modest (4 GB/s shared) so concurrent cuts actually contend.
+    let fabrics = [
+        FabricKind::PointToPoint,
+        FabricKind::Ring,
+        FabricKind::Star { bisection_gbps: 4.0 },
+    ];
+    println!(
+        "{} over 4x ZCU102 ({} per-port link), planned per fabric:\n",
+        net.name, base.link
+    );
+    println!(
+        "{:<10} {:>9} {:>9} {:>12} {:>7} {:>12}",
+        "fabric", "img/s", "GOP/s", "latency", "max r", "bottleneck"
+    );
+    for fabric in fabrics {
+        let cfg = ShardConfig { fabric, ..base.clone() };
+        let plan = partition(&net, &cluster, &cfg, &cache).expect("feasible");
+        // Cross-check the analytic number with the discrete-event walk.
+        let sim = simulate_shard(&ShardSimSpec::from_plan(&plan), 600, 100).expect("simulates");
+        println!(
+            "{:<10} {:>9.1} {:>9.1} {:>9.2} ms {:>7} {:>12}   (sim {:.1} img/s)",
+            format!("{fabric}"),
+            plan.throughput_fps,
+            plan.gops,
+            plan.latency_s * 1e3,
+            plan.max_replication(),
+            plan.bottleneck(),
+            sim.throughput_fps,
+        );
+    }
+
+    // What does *knowing* the topology buy on the constrained switch?
+    let starved = ShardConfig {
+        fabric: FabricKind::Star { bisection_gbps: 0.5 },
+        ..base.clone()
+    };
+    let outcome = compare_topology_awareness(&net, &cluster, &starved, &cache);
+    if let (Some(blind), Some(aware)) = (&outcome.blind, &outcome.aware) {
+        println!("\ntopology awareness on a starved star ({}):", starved.fabric);
+        println!(
+            "  blind (p2p-planned, deployed on the star): {:>8.1} img/s, {} through the switch",
+            blind.throughput_fps,
+            format!("{:.0} KB/frame", blind.cut_bytes().iter().sum::<f64>() / 1024.0),
+        );
+        println!(
+            "  aware (fabric-priced DP):                  {:>8.1} img/s, {} through the switch",
+            aware.throughput_fps,
+            format!("{:.0} KB/frame", aware.cut_bytes().iter().sum::<f64>() / 1024.0),
+        );
+        if let Some(gain) = outcome.gain() {
+            println!("  awareness gain: {gain:.2}x");
+        }
+        print!("\n{}", aware.render());
+    }
+    println!(
+        "cache: {} design points, {} hits / {} misses",
+        cache.len(),
+        cache.hits(),
+        cache.misses()
+    );
+}

@@ -28,6 +28,10 @@
 //! * [`batcher`] — the batch-shape policy ([`BatcherConfig`]).
 //! * [`metrics`] — lock-free counters/gauges with an exact
 //!   `requests == ok_frames + errors + shed` accounting invariant.
+//! * [`scrape`] — the scrapeable metrics endpoint
+//!   ([`MetricsExporter`]): a Prometheus-style text dump over a plain
+//!   `TcpListener` (`dnnexplorer serve --metrics-port`), including the
+//!   sharded pipeline's per-link occupancy series.
 //! * [`synthetic`] — fixed-service-time executors shared by the
 //!   overload harnesses and tests.
 //!
@@ -41,6 +45,7 @@ pub mod metrics;
 pub mod queue;
 pub mod reorder;
 pub mod router;
+pub mod scrape;
 pub mod server;
 pub mod sharded;
 pub mod synthetic;
@@ -53,5 +58,6 @@ pub use queue::{
 };
 pub use reorder::ReorderBuffer;
 pub use router::Router;
+pub use scrape::MetricsExporter;
 pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};
-pub use sharded::{ShardedPipeline, StageSpec, StageTotals};
+pub use sharded::{LinkOccupancy, ShardedPipeline, StageSpec, StageTotals};

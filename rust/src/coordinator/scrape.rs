@@ -1,0 +1,179 @@
+//! Scrapeable metrics endpoint: a Prometheus-style text dump of
+//! [`Metrics`] counters/gauges over a plain [`TcpListener`] — no HTTP
+//! library, no new dependencies.
+//!
+//! [`MetricsExporter::spawn`] binds a loopback port (0 = ephemeral) and
+//! serves every connection the current output of a render closure, so
+//! any metrics source — a single [`crate::coordinator::
+//! AcceleratorServer`], a [`crate::coordinator::Router`], or a
+//! [`crate::coordinator::ShardedPipeline`] with its per-stage,
+//! per-replica, and per-link occupancy series — can expose itself with
+//! one line. The CLI wires it as `dnnexplorer serve --metrics-port P`
+//! (and `serve-bench --metrics-port P` for an artifact-free smoke).
+//!
+//! The exposition format is Prometheus-style text: bare
+//! `name{labels} value` lines (no `# TYPE`/`# HELP` metadata — untyped
+//! metrics, which scrapers and `curl` both accept). The responder
+//! answers any request on the socket with a `200` and the dump — it
+//! does not parse paths — which is exactly what a scrape target needs
+//! and nothing more.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+
+/// Append one metric line: `<prefix>_<name>{<labels>} <value>`.
+fn line(out: &mut String, prefix: &str, name: &str, labels: &str, value: f64) {
+    if labels.is_empty() {
+        out.push_str(&format!("{prefix}_{name} {value}\n"));
+    } else {
+        out.push_str(&format!("{prefix}_{name}{{{labels}}} {value}\n"));
+    }
+}
+
+/// Render one [`Metrics`] block as Prometheus text under `prefix` with
+/// an optional shared label set (e.g. `stage="1",replica="0"`).
+pub fn metrics_text(out: &mut String, prefix: &str, labels: &str, m: &Metrics) {
+    let load = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed) as f64;
+    line(out, prefix, "requests_total", labels, load(&m.requests));
+    line(out, prefix, "ok_frames_total", labels, load(&m.ok_frames));
+    line(out, prefix, "errors_total", labels, load(&m.errors));
+    line(out, prefix, "shed_total", labels, load(&m.shed));
+    line(out, prefix, "timed_out_total", labels, load(&m.timed_out));
+    line(out, prefix, "batches_total", labels, load(&m.batches));
+    line(out, prefix, "frames_total", labels, load(&m.frames));
+    line(out, prefix, "queue_depth", labels, m.queue_depth() as f64);
+    line(out, prefix, "queue_depth_max", labels, m.queue_depth_max() as f64);
+    line(out, prefix, "latency_p50_us", labels, m.latency_percentile_us(0.5) as f64);
+    line(out, prefix, "latency_p99_us", labels, m.latency_percentile_us(0.99) as f64);
+    line(out, prefix, "latency_mean_us", labels, m.mean_latency_us());
+}
+
+/// A background thread serving the render closure's output on a
+/// loopback TCP port until shutdown.
+pub struct MetricsExporter {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    /// Bind `127.0.0.1:port` (0 picks an ephemeral port — read it back
+    /// with [`Self::port`]) and serve `render()` to every connection.
+    pub fn spawn(
+        port: u16,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| anyhow::anyhow!("metrics endpoint bind failed on port {port}: {e}"))?;
+        let bound = listener.local_addr()?.port();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(mut stream) = conn else { continue };
+                // Consume the request line(s) politely, then answer.
+                // Parsing is unnecessary: every path gets the dump, so
+                // the number of bytes read is irrelevant.
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                let mut scratch = [0u8; 1024];
+                let _request_bytes = stream.read(&mut scratch).unwrap_or(0);
+                let body = render();
+                let _ = stream.write_all(
+                    format!(
+                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                         Content-Length: {}\r\n\r\n{}",
+                        body.len(),
+                        body
+                    )
+                    .as_bytes(),
+                );
+            }
+        });
+        Ok(Self { port: bound, stop, thread: Some(thread) })
+    }
+
+    /// The port actually bound (useful with `port = 0`).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Stop accepting and join the serving thread (also what dropping
+    /// the exporter does; this just makes the teardown explicit).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(port: u16) -> String {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+            .expect("request");
+        let mut out = String::new();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .expect("timeout");
+        stream.read_to_string(&mut out).expect("response");
+        out
+    }
+
+    #[test]
+    fn serves_current_counters_over_tcp() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.requests.fetch_add(3, Ordering::Relaxed);
+        metrics.record_success(Duration::from_micros(120));
+        let m = metrics.clone();
+        let exporter = MetricsExporter::spawn(
+            0,
+            Arc::new(move || {
+                let mut out = String::new();
+                metrics_text(&mut out, "dnnx", "scope=\"test\"", &m);
+                out
+            }),
+        )
+        .expect("exporter binds");
+        let body = scrape(exporter.port());
+        assert!(body.starts_with("HTTP/1.0 200 OK"), "{body}");
+        assert!(body.contains("dnnx_requests_total{scope=\"test\"} 3"), "{body}");
+        assert!(body.contains("dnnx_ok_frames_total{scope=\"test\"} 1"), "{body}");
+        assert!(body.contains("Content-Type: text/plain"), "{body}");
+        // A second scrape sees updated counters (the render is live).
+        metrics.requests.fetch_add(2, Ordering::Relaxed);
+        let body = scrape(exporter.port());
+        assert!(body.contains("dnnx_requests_total{scope=\"test\"} 5"), "{body}");
+        exporter.shutdown();
+    }
+
+    #[test]
+    fn unlabeled_lines_render_bare() {
+        let m = Metrics::new();
+        let mut out = String::new();
+        metrics_text(&mut out, "p", "", &m);
+        assert!(out.contains("p_requests_total 0\n"), "{out}");
+        assert!(!out.contains("{}"), "{out}");
+    }
+}

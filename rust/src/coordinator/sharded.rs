@@ -23,6 +23,11 @@
 //! * **per stage** — [`ShardedPipeline::stage_totals`] sums the
 //!   replicas; a stage's `requests` counts what the dispatcher issued
 //!   to it (not what entered the pipeline);
+//! * **per link** — each forwarder records how many frames it pushed
+//!   into every consumer replica lane of the next stage
+//!   ([`LinkOccupancy`]; the serving-side analogue of the per-cut link
+//!   occupancy the topology model prices), plus the sequence holes it
+//!   propagated;
 //! * **end-to-end** — the pipeline's [`Metrics`]: a request counts into
 //!   `shed` iff refused at first-stage admission, `ok_frames` iff the
 //!   last stage produced its tensor, `errors` otherwise (any stage
@@ -30,6 +35,27 @@
 //!   `requests == ok_frames + errors + shed` end-to-end too
 //!   (`tests/shard_integration.rs` and `tests/sim_vs_model.rs` drive
 //!   this).
+//!
+//! ## Bounding the reorder window
+//!
+//! Completed frames can only leave in admission order, so one stalled
+//! replica makes every later frame pile up in the forwarders' reorder
+//! buffers. [`ShardedPipeline::spawn_with_window`] spills that bound
+//! into admission: with at most `w` frames in flight (admitted but not
+//! yet settled), no reorder buffer can ever hold more than `w` frames —
+//! the excess is refused at the front with
+//! [`ServeError::Overloaded`] instead of accumulating.
+//!
+//! ## Sibling failover
+//!
+//! Replica issue is round-robin by admission sequence — the even
+//! spreading the planner models. Under a `Reject` admission policy a
+//! stalled replica used to shed its whole share even when a sibling had
+//! room; the dispatcher now retries the *next* replica once before
+//! giving up (a bounded spill that keeps the round-robin discipline in
+//! the common case). The retry clones the frame only when the stage
+//! actually has siblings; a no-copy retry path through the queue stays
+//! a ROADMAP follow-on.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
@@ -130,6 +156,48 @@ impl StageTotals {
     }
 }
 
+/// Occupancy counters of one inter-stage link (the cut between stages
+/// `i` and `i+1`): frames forwarded per consumer replica lane, plus the
+/// sequence holes propagated for frames that died upstream. Exact at
+/// quiescence; scraped by the metrics endpoint.
+#[derive(Debug)]
+pub struct LinkOccupancy {
+    lanes: Vec<AtomicU64>,
+    skipped: AtomicU64,
+}
+
+impl LinkOccupancy {
+    fn new(lanes: usize) -> Self {
+        Self {
+            lanes: (0..lanes.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            skipped: AtomicU64::new(0),
+        }
+    }
+
+    fn record_forward(&self, lane: usize) {
+        self.lanes[lane].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_skip(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Frames forwarded into each consumer replica, by lane.
+    pub fn lane_counts(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total frames this link carried.
+    pub fn forwarded(&self) -> u64 {
+        self.lanes.iter().map(|l| l.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sequence holes propagated (frames settled before this cut).
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+}
+
 /// One in-flight request travelling the stage chain: its admission
 /// sequence number (the reorder key), where its current stage will
 /// answer, when it entered the pipeline, and where the final answer
@@ -157,21 +225,56 @@ pub struct ShardedPipeline {
     forwarders: Vec<Option<JoinHandle<()>>>,
     /// Senders into each forwarder (index i watches stage i's results).
     feeds: Vec<mpsc::Sender<FeedMsg>>,
+    /// Occupancy of the link between stages `i` and `i+1`
+    /// (`stage_count() - 1` entries).
+    links: Vec<Arc<LinkOccupancy>>,
     /// Replica round-robin cursor for first-stage admission.
     rr: AtomicU64,
     /// Admission sequence numbers (assigned to *admitted* frames only,
     /// so the sequence space is contiguous).
     next_seq: AtomicU64,
+    /// Cap on frames in flight (admitted, not yet settled): bounds every
+    /// reorder buffer, since held frames are a subset of in-flight ones.
+    max_in_flight: Option<usize>,
+    /// Whether the first stage's admission can refuse (`Reject` policy)
+    /// — gates sibling failover at the pipeline front.
+    front_refusable: bool,
     /// End-to-end metrics (per-replica metrics live on each server).
     pub metrics: Arc<Metrics>,
 }
 
 impl ShardedPipeline {
     /// Spawn every stage's replica servers plus the forwarder chain
-    /// between stages. At least one stage is required.
+    /// between stages. At least one stage is required. The reorder
+    /// window is unbounded; see [`Self::spawn_with_window`].
     pub fn spawn(specs: Vec<StageSpec>) -> anyhow::Result<Self> {
+        Self::spawn_with_window(specs, None)
+    }
+
+    /// [`Self::spawn`] with a bound on frames in flight: once
+    /// `max_in_flight` admitted frames are unsettled, further
+    /// submissions are refused with [`ServeError::Overloaded`] (counted
+    /// as `shed`). Because every frame held out-of-order in a reorder
+    /// buffer is in flight, this caps each buffer at `max_in_flight`
+    /// even when one replica stalls completely.
+    pub fn spawn_with_window(
+        specs: Vec<StageSpec>,
+        max_in_flight: Option<usize>,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(!specs.is_empty(), "sharded pipeline needs at least one stage");
+        anyhow::ensure!(
+            max_in_flight != Some(0),
+            "max_in_flight = 0 would refuse every frame"
+        );
         let metrics = Arc::new(Metrics::new());
+        // Sibling failover only matters where admission can refuse the
+        // newcomer: a `Reject` queue. `Block` waits and `ShedOldest`
+        // evicts a waiter instead, so those stages keep the clone-free
+        // direct submission path.
+        let refusable: Vec<bool> = specs
+            .iter()
+            .map(|s| s.queue.policy == crate::coordinator::queue::OverloadPolicy::Reject)
+            .collect();
         let mut stages: Vec<Vec<AcceleratorServer>> = Vec::with_capacity(specs.len());
         for spec in specs {
             let mut group = Vec::with_capacity(spec.factories.len());
@@ -182,6 +285,9 @@ impl ShardedPipeline {
             stages.push(group);
         }
         let count = stages.len();
+        let links: Vec<Arc<LinkOccupancy>> = (0..count.saturating_sub(1))
+            .map(|i| Arc::new(LinkOccupancy::new(stages[i + 1].len())))
+            .collect();
 
         // Forwarders are built back-to-front: forwarder i needs the
         // handles of stage i+1's replicas and the feed of forwarder i+1.
@@ -190,10 +296,12 @@ impl ShardedPipeline {
         for i in (0..count).rev() {
             let (tx, rx) = mpsc::channel::<FeedMsg>();
             let next = if i + 1 < count {
-                let handles: Vec<ServerHandle> =
-                    stages[i + 1].iter().map(|s| s.handle()).collect();
-                let feed = feeds[i + 1].clone().expect("next feed built");
-                Some((handles, feed))
+                Some(Downstream {
+                    handles: stages[i + 1].iter().map(|s| s.handle()).collect(),
+                    refusable: refusable[i + 1],
+                    feed: feeds[i + 1].clone().expect("next feed built"),
+                    link: links[i].clone(),
+                })
             } else {
                 None
             };
@@ -209,8 +317,11 @@ impl ShardedPipeline {
             stages,
             forwarders,
             feeds,
+            links,
             rr: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
+            max_in_flight,
+            front_refusable: refusable[0],
             metrics,
         })
     }
@@ -243,6 +354,57 @@ impl ShardedPipeline {
         t
     }
 
+    /// Occupancy of the link between stages `cut` and `cut + 1`.
+    pub fn link_occupancy(&self, cut: usize) -> &LinkOccupancy {
+        &self.links[cut]
+    }
+
+    /// Number of inter-stage links (`stage_count() - 1`).
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Frames currently in flight: admitted at the front but not yet
+    /// settled (approximate under concurrent submitters).
+    pub fn in_flight(&self) -> u64 {
+        self.metrics
+            .requests
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.metrics.accounted())
+    }
+
+    /// Prometheus-style dump of the whole pipeline: end-to-end metrics,
+    /// per-replica metrics, and per-link occupancy (lane counts +
+    /// propagated skips) — the body the scrape endpoint serves.
+    pub fn prometheus_text(&self) -> String {
+        use crate::coordinator::scrape::metrics_text;
+        let mut out = String::new();
+        metrics_text(&mut out, "dnnx_pipeline", "scope=\"e2e\"", &self.metrics);
+        for (s, group) in self.stages.iter().enumerate() {
+            for (k, server) in group.iter().enumerate() {
+                metrics_text(
+                    &mut out,
+                    "dnnx_stage",
+                    &format!("stage=\"{s}\",replica=\"{k}\""),
+                    &server.metrics,
+                );
+            }
+        }
+        for (c, link) in self.links.iter().enumerate() {
+            for (lane, count) in link.lane_counts().into_iter().enumerate() {
+                out.push_str(&format!(
+                    "dnnx_link_forwarded_total{{cut=\"{c}\",lane=\"{lane}\"}} {count}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "dnnx_link_skipped_total{{cut=\"{c}\"}} {}\n",
+                link.skipped()
+            ));
+        }
+        out.push_str(&format!("dnnx_pipeline_in_flight {}\n", self.in_flight()));
+        out
+    }
+
     /// Open-loop submission: admit one frame at the first stage
     /// (round-robin across its replicas) and return the receiver of the
     /// **final** stage's output. A refusal at first-stage admission
@@ -250,25 +412,38 @@ impl ShardedPipeline {
     /// resolves through the receiver — in admission order, the reorder
     /// buffers guarantee.
     ///
-    /// Round-robin is *strict*: each frame's replica is fixed by the
-    /// cursor and the overload policy applies to that replica's queue
-    /// alone — deliberately the discipline the planner models
-    /// (`perfmodel::interleave` assumes even spreading). Under `Reject`
-    /// a stalled replica therefore sheds its share of frames even if a
-    /// sibling has room; spilling to siblings (which would break the
-    /// even-spread assumption under sustained skew) is a ROADMAP
-    /// follow-on.
+    /// Round-robin fixes each frame's replica by the cursor — the even
+    /// spreading the planner models (`perfmodel::interleave`). When
+    /// that replica refuses admission the dispatcher retries the *next*
+    /// replica once (sibling failover) before shedding, so a stalled
+    /// replica under `Reject` no longer drops its share while a sibling
+    /// has room. With [`Self::spawn_with_window`] set, frames beyond
+    /// the in-flight bound are refused before touching any queue.
     pub fn submit_frame(
         &self,
         input: HostTensor,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = self.max_in_flight {
+            // Counting this request, more than `w` unsettled frames
+            // means the reorder window is full: refuse at the front.
+            if self.in_flight() > w as u64 {
+                self.metrics.record_shed();
+                return Err(ServeError::Overloaded);
+            }
+        }
         let entered = Instant::now();
         let (respond, final_rx) = mpsc::sync_channel(1);
         let group = &self.stages[0];
         let replica = (self.rr.fetch_add(1, Ordering::Relaxed) % group.len() as u64) as usize;
-        match group[replica].handle().submit_frame(input) {
-            Ok(rx) => {
+        match submit_with_failover(
+            |k, t| group[k].handle().submit_frame(t),
+            group.len(),
+            self.front_refusable,
+            replica,
+            input,
+        ) {
+            Ok((_, rx)) => {
                 // The sequence number is taken *after* admission, so
                 // refused frames leave no hole in the reorder space.
                 let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
@@ -320,33 +495,87 @@ impl ShardedPipeline {
     }
 }
 
+/// What one replica admission returns: the response receiver, or a
+/// typed refusal.
+type AdmitResult = Result<Receiver<Result<HostTensor, ServeError>>, ServeError>;
+
+/// Submit a frame to the chosen replica, retrying its next sibling once
+/// on an admission refusal. The retry (and the tensor clone it needs)
+/// only engages when the stage can actually refuse — a `Reject`-policy
+/// queue with a sibling to spill to; `Block`/`ShedOldest` stages never
+/// return `Overloaded` at admission, so they keep the clone-free direct
+/// path. Returns the lane that actually admitted the frame; a double
+/// refusal reports the *first* replica's error.
+fn submit_with_failover(
+    submit: impl Fn(usize, HostTensor) -> AdmitResult,
+    replicas: usize,
+    refusable: bool,
+    replica: usize,
+    input: HostTensor,
+) -> Result<(usize, Receiver<Result<HostTensor, ServeError>>), ServeError> {
+    if replicas <= 1 || !refusable {
+        return submit(replica, input).map(|rx| (replica, rx));
+    }
+    match submit(replica, input.clone()) {
+        Ok(rx) => Ok((replica, rx)),
+        Err(first) => {
+            let alt = (replica + 1) % replicas;
+            match submit(alt, input) {
+                Ok(rx) => Ok((alt, rx)),
+                Err(_) => Err(first),
+            }
+        }
+    }
+}
+
+/// Everything a forwarder knows about its downstream side: the next
+/// stage's replica handles, whether that stage's admission can refuse
+/// (`Reject` policy — gates sibling failover), the next forwarder's
+/// feed, and the occupancy counters of the link in between.
+struct Downstream {
+    handles: Vec<ServerHandle>,
+    refusable: bool,
+    feed: mpsc::Sender<FeedMsg>,
+    link: Arc<LinkOccupancy>,
+}
+
 /// Hand one re-ordered result to the next stage (round-robin by
-/// sequence number) or settle it end-to-end.
+/// sequence number, sibling failover on refusal) or settle it
+/// end-to-end.
 fn deliver(
     job: InFlight,
     result: Result<HostTensor, ServeError>,
-    next: &Option<(Vec<ServerHandle>, mpsc::Sender<FeedMsg>)>,
+    next: &Option<Downstream>,
     e2e: &Metrics,
 ) {
     match (result, next) {
-        (Ok(tensor), Some((handles, next_feed))) => {
-            let replica = (job.seq % handles.len() as u64) as usize;
-            match handles[replica].submit_frame(tensor) {
-                Ok(rx) => {
+        (Ok(tensor), Some(down)) => {
+            let replica = (job.seq % down.handles.len() as u64) as usize;
+            match submit_with_failover(
+                |k, t| down.handles[k].submit_frame(t),
+                down.handles.len(),
+                down.refusable,
+                replica,
+                tensor,
+            ) {
+                Ok((lane, rx)) => {
+                    down.link.record_forward(lane);
                     let fwd =
                         InFlight { seq: job.seq, rx, entered: job.entered, respond: job.respond };
-                    if next_feed.send(FeedMsg::Job(fwd)).is_err() {
+                    if down.feed.send(FeedMsg::Job(fwd)).is_err() {
                         // Next forwarder gone (shutdown race): the
                         // dropped respond channel reads as Closed.
                         e2e.record_failure(Duration::ZERO);
                     }
                 }
                 Err(e) => {
-                    // Mid-pipeline refusal: an end-to-end error (the
-                    // request was already admitted at the front). The
-                    // next reorder buffer must not wait for this seq.
+                    // Mid-pipeline refusal (both siblings): an
+                    // end-to-end error (the request was already
+                    // admitted at the front). The next reorder buffer
+                    // must not wait for this seq.
                     e2e.record_failure(job.entered.elapsed());
-                    let _ = next_feed.send(FeedMsg::Skip(job.seq));
+                    down.link.record_skip();
+                    let _ = down.feed.send(FeedMsg::Skip(job.seq));
                     let _ = job.respond.send(Err(e));
                 }
             }
@@ -357,8 +586,9 @@ fn deliver(
         }
         (Err(e), next) => {
             e2e.record_failure(job.entered.elapsed());
-            if let Some((_, next_feed)) = next {
-                let _ = next_feed.send(FeedMsg::Skip(job.seq));
+            if let Some(down) = next {
+                down.link.record_skip();
+                let _ = down.feed.send(FeedMsg::Skip(job.seq));
             }
             let _ = job.respond.send(Err(e));
         }
@@ -368,11 +598,7 @@ fn deliver(
 /// The forwarder body for stage `i`: harvest the stage's completions
 /// (in whatever order the replicas finish), re-order them, and deliver
 /// strictly in admission order.
-fn forward_loop(
-    feed: Receiver<FeedMsg>,
-    next: Option<(Vec<ServerHandle>, mpsc::Sender<FeedMsg>)>,
-    e2e: Arc<Metrics>,
-) {
+fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metrics>) {
     use std::collections::BTreeMap;
 
     let mut pending: BTreeMap<u64, InFlight> = BTreeMap::new();
@@ -468,8 +694,9 @@ fn forward_loop(
     // shutdown): settle as Closed so the end-to-end books balance.
     for (_, (job, _)) in buffer.drain() {
         e2e.record_failure(job.entered.elapsed());
-        if let Some((_, next_feed)) = &next {
-            let _ = next_feed.send(FeedMsg::Skip(job.seq));
+        if let Some(down) = &next {
+            down.link.record_skip();
+            let _ = down.feed.send(FeedMsg::Skip(job.seq));
         }
         let _ = job.respond.send(Err(ServeError::Closed));
     }
@@ -601,6 +828,219 @@ mod tests {
         }
         assert_eq!(pipe.metrics.ok_frames.load(Ordering::Relaxed), n as u64);
         assert_eq!(pipe.metrics.accounted(), n as u64);
+        pipe.shutdown();
+    }
+
+    /// Never completes: parks the replica's worker forever (the stalled
+    /// board in the reorder-window and failover regressions).
+    struct Stall;
+    impl ModelExecutor for Stall {
+        fn execute_batch(&self, frames: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+            std::thread::sleep(Duration::from_secs(3600));
+            Ok(frames.to_vec())
+        }
+    }
+
+    #[test]
+    fn in_flight_window_caps_the_reorder_buffer() {
+        // Stage 0 has a stalled replica: every frame routed to it wedges,
+        // and every *later* completed frame would pile up in the reorder
+        // buffer waiting for it. The window spills that bound into
+        // admission: past `w` unsettled frames, submissions are shed.
+        let w = 6usize;
+        let pipe = ShardedPipeline::spawn_with_window(
+            vec![StageSpec::replicated(
+                2,
+                |k| {
+                    if k == 0 {
+                        Ok(Box::new(Stall) as Box<dyn ModelExecutor>)
+                    } else {
+                        Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>)
+                    }
+                },
+                quick_queue(1),
+            )],
+            Some(w),
+        )
+        .unwrap();
+        // Give the stalled worker time to pull its first frame.
+        let mut shed = 0usize;
+        for i in 0..32 {
+            match pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()) {
+                Ok(_rx) => {}
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(other) => panic!("unexpected admission error {other:?}"),
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(shed > 0, "window must refuse past the in-flight bound");
+        assert!(
+            pipe.in_flight() <= w as u64,
+            "in flight {} exceeds window {w}",
+            pipe.in_flight()
+        );
+        // Books stay balanced: every submission is admitted or shed.
+        assert_eq!(
+            pipe.metrics.requests.load(Ordering::Relaxed),
+            32,
+            "every submission counted"
+        );
+        assert_eq!(pipe.metrics.shed.load(Ordering::Relaxed), shed as u64);
+        // Shutdown leaves the stalled frames unresolved (the worker
+        // sleeps for an hour), so don't join it: drop the pipeline's
+        // servers without shutdown() and let the process-exit reap the
+        // detached sleeper — this is a test-only teardown.
+        std::mem::forget(pipe);
+    }
+
+    #[test]
+    fn zero_window_is_rejected_at_spawn() {
+        assert!(
+            ShardedPipeline::spawn_with_window(vec![StageSpec::new(|| Ok(AddN(1.0)))], Some(0))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn sibling_failover_rescues_a_stalled_replicas_share() {
+        // Replica 0 stalls with a capacity-1 Reject queue: under strict
+        // round-robin, half the frames (those assigned to replica 0)
+        // would shed once its single slot is taken. With sibling
+        // failover they spill to replica 1 instead, so far fewer — in
+        // this deterministic single-submitter sequence, at most one
+        // pending frame per replica-0 slot — are rejected.
+        let reject_queue = QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: 1,
+            policy: crate::coordinator::queue::OverloadPolicy::Reject,
+            ..QueueConfig::default()
+        };
+        let pipe = ShardedPipeline::spawn(vec![StageSpec::replicated(
+            2,
+            |k| {
+                if k == 0 {
+                    Ok(Box::new(Stall) as Box<dyn ModelExecutor>)
+                } else {
+                    Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>)
+                }
+            },
+            reject_queue,
+        )])
+        .unwrap();
+        let n = 16usize;
+        let mut receivers = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..n {
+            match pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()) {
+                Ok(rx) => receivers.push(rx),
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+            // Let replica 1 drain its queue so failover always finds room.
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Strict round-robin would shed replica 0's whole share — 6
+        // frames here (every even sequence once its worker + queue slot
+        // are taken). Failover spills them to replica 1 instead; allow
+        // timing slack (a momentarily full sibling) but pin the count
+        // strictly below the strict-round-robin figure. In practice
+        // this lands at 0.
+        assert!(
+            shed < 5,
+            "failover should rescue replica 0's share, shed {shed} of {n} (strict RR sheds 6)"
+        );
+        // Replica 1 absorbed the spilled share at its own admission
+        // level (end-to-end delivery is gated by the stalled seq 0, so
+        // assert on replica metrics, not the receivers). Strict
+        // round-robin admits it exactly n/2; the stalled sibling can
+        // absorb at most 2 frames (worker + single queue slot), so with
+        // failover replica 1 always lands strictly above its share.
+        let r1 = pipe.replica_metrics(0, 1).requests.load(Ordering::Relaxed);
+        assert!(
+            r1 > (n as u64) / 2,
+            "replica 1 admitted only {r1} of {n} ({shed} shed) — failover not spilling"
+        );
+        drop(receivers); // never resolve: seq 0 is wedged on the stall
+        std::mem::forget(pipe); // the stalled worker never joins
+    }
+
+    #[test]
+    fn link_occupancy_counts_forwards_and_skips() {
+        // Stage 0: replica 1 fails every frame -> odd seqs die upstream
+        // of the cut and must show up as skips; even seqs cross it.
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::replicated(
+                2,
+                |k| {
+                    if k == 1 {
+                        Ok(Box::new(Failer) as Box<dyn ModelExecutor>)
+                    } else {
+                        Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>)
+                    }
+                },
+                quick_queue(1),
+            ),
+            StageSpec::replicated(2, |_| Ok(AddN(10.0)), quick_queue(1)),
+        ])
+        .unwrap();
+        assert_eq!(pipe.link_count(), 1);
+        let n = 12usize;
+        let mut receivers = Vec::new();
+        for i in 0..n {
+            receivers
+                .push(pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap());
+        }
+        let mut ok = 0;
+        for rx in receivers {
+            if matches!(rx.recv_timeout(Duration::from_secs(30)), Ok(Ok(_))) {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, n / 2);
+        // Every receiver resolved, so the cut's counters are final:
+        // even sequences (replica 0, AddN) crossed it; odd sequences
+        // (replica 1, Failer) died upstream and propagated as skips.
+        let link = pipe.link_occupancy(0);
+        assert_eq!(link.forwarded(), (n / 2) as u64);
+        assert_eq!(link.skipped(), (n / 2) as u64);
+        // Surviving sequences are all even, so they all land on lane 0
+        // of the next stage (seq % 2).
+        assert_eq!(link.lane_counts(), vec![(n / 2) as u64, 0]);
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn prometheus_text_includes_links_and_stages() {
+        let pipe = ShardedPipeline::spawn(vec![
+            StageSpec::with_queue(|| Ok(AddN(1.0)), quick_queue(1)),
+            StageSpec::replicated(2, |_| Ok(AddN(10.0)), quick_queue(1)),
+        ])
+        .unwrap();
+        let n = 6usize;
+        for i in 0..n {
+            let out = pipe.infer(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap();
+            assert_eq!(out.data, vec![i as f32 + 11.0]);
+        }
+        let link = pipe.link_occupancy(0);
+        assert_eq!(link.forwarded(), n as u64);
+        assert_eq!(link.skipped(), 0);
+        // Round-robin by sequence: the two lanes split the stream evenly.
+        assert_eq!(link.lane_counts(), vec![(n / 2) as u64, (n / 2) as u64]);
+        let text = pipe.prometheus_text();
+        assert!(
+            text.contains("dnnx_pipeline_requests_total{scope=\"e2e\"} 6"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dnnx_link_forwarded_total{cut=\"0\",lane=\"0\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("dnnx_link_skipped_total{cut=\"0\"} 0"), "{text}");
+        assert!(
+            text.contains("dnnx_stage_ok_frames_total{stage=\"1\",replica=\"0\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("dnnx_pipeline_in_flight 0"), "{text}");
         pipe.shutdown();
     }
 

@@ -20,6 +20,7 @@ use crate::dnn::Network;
 use crate::dse::cache::EvalCache;
 use crate::fpga::FpgaDevice;
 use crate::shard::{partition, ShardConfig, ShardPlan};
+use crate::topo::FabricKind;
 
 /// One board-count configuration of a comparison.
 pub struct BoardsOutcome {
@@ -111,6 +112,54 @@ pub fn compare_replication(
     }
 }
 
+/// What knowing the topology buys: the plan a topology-*blind* planner
+/// (uniform point-to-point pricing) picks, re-priced on the real
+/// fabric, next to the plan the topology-*aware* planner picks on that
+/// fabric directly. Both sides run over one shared cache, so the DSE
+/// cells are explored once.
+pub struct TopologyOutcome {
+    /// Planned as if every cut had a dedicated cable, then evaluated on
+    /// the real fabric — what deploying a blind plan actually delivers.
+    pub blind: Option<ShardPlan>,
+    /// Planned against the real fabric.
+    pub aware: Option<ShardPlan>,
+}
+
+impl TopologyOutcome {
+    /// Modeled throughput gain of topology awareness (1.0 = none;
+    /// `None` when either side is infeasible). Never below 1 up to
+    /// float noise: the blind plan's structure is in the aware search
+    /// space and both are priced identically.
+    pub fn gain(&self) -> Option<f64> {
+        match (&self.blind, &self.aware) {
+            (Some(b), Some(a)) if b.throughput_fps > 0.0 => {
+                Some(a.throughput_fps / b.throughput_fps)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Run the planner twice over one shared cache: once blind (forced
+/// point-to-point pricing, then re-priced on `cfg.fabric`), once aware
+/// (priced on `cfg.fabric` inside the DP). On constrained fabrics —
+/// e.g. a star whose bisection bandwidth sits below the sum of cut
+/// demands — the aware side picks cuts that move less traffic through
+/// the shared switch and models strictly faster (the acceptance bar in
+/// `tests/sim_vs_model.rs`).
+pub fn compare_topology_awareness(
+    net: &Network,
+    devices: &[FpgaDevice],
+    cfg: &ShardConfig,
+    cache: &EvalCache,
+) -> TopologyOutcome {
+    let blind_cfg = ShardConfig { fabric: FabricKind::PointToPoint, ..cfg.clone() };
+    TopologyOutcome {
+        blind: partition(net, devices, &blind_cfg, cache).map(|p| p.repriced_on(cfg.fabric)),
+        aware: partition(net, devices, cfg, cache),
+    }
+}
+
 /// The board counts a comparison sweeps: 1, 2, 4, ... capped at the
 /// cluster size, always including the full cluster.
 pub fn sweep_counts(cluster: usize) -> Vec<usize> {
@@ -195,6 +244,31 @@ mod tests {
         assert_eq!(res.best().unwrap().boards, 2);
         assert!(res.baseline().is_some());
         assert!(res.cache_misses > 0);
+    }
+
+    #[test]
+    fn topology_awareness_never_models_worse() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        // A switch tight enough that the fabric term governs the plan.
+        let cfg = ShardConfig {
+            fabric: FabricKind::Star { bisection_gbps: 0.05 },
+            ..quick_cfg()
+        };
+        let cache = EvalCache::new();
+        let out = compare_topology_awareness(&net, &devices, &cfg, &cache);
+        let blind = out.blind.as_ref().expect("blind feasible");
+        let aware = out.aware.as_ref().expect("aware feasible");
+        assert_eq!(blind.fabric, cfg.fabric, "blind plan is re-priced on the real fabric");
+        assert_eq!(aware.fabric, cfg.fabric);
+        // The blind structure lives inside the aware search space.
+        assert!(
+            aware.throughput_fps >= blind.throughput_fps,
+            "aware {} fps must not model below blind {}",
+            aware.throughput_fps,
+            blind.throughput_fps
+        );
+        assert!(out.gain().expect("both feasible") >= 1.0 - 1e-12);
     }
 
     #[test]

@@ -28,18 +28,32 @@
 //!   N networks × M devices in one invocation over a shared cache, and
 //!   [`dse::multi`] co-optimizes cut points + per-board RAVs over a
 //!   board cluster.
+//! * [`topo`] — the board-interconnect subsystem: a [`topo::Topology`]
+//!   graph (`p2p` / `ring` / `star:<gbps>` switch with finite bisection
+//!   bandwidth / `mesh`) resolves every shard cut and replica fan to a
+//!   *per-cut* effective link given where the groups sit in the cluster
+//!   ([`topo::SlotRun`]s), and a shared-fabric contention model charges
+//!   the sum of concurrent cut traffic against a switch's aggregate
+//!   bandwidth. `p2p`/`mesh` reduce bit-exactly to the uniform
+//!   [`perfmodel::link`] path (pinned by proptest); contention is
+//!   monotone — adding concurrent traffic never raises any cut's
+//!   effective throughput.
 //! * [`shard`] — the multi-FPGA subsystem: partition one network into
 //!   contiguous pipeline stages, each mapped to one board or
 //!   **replicated across r identical boards with round-robin frame
 //!   interleaving** (`--max-replicas`; the DP plans over
 //!   `(layer range, device, replication)` cells), charge the activation
-//!   tensor crossing each cut against an inter-board link model
-//!   ([`perfmodel::link`], fan-aware), and report end-to-end
-//!   throughput/latency (`dnnexplorer shard`). Because plan quality now
-//!   rests on the interleaving model, `tests/sim_vs_model.rs`
-//!   cross-validates the analytic [`perfmodel::interleave`] closed form
-//!   against the discrete-event [`sim::shard`] simulator and the live
-//!   [`coordinator::ShardedPipeline`] on every plan shape.
+//!   tensor crossing each cut against the topology-resolved link
+//!   ([`topo`]; `--topology ring|star:<gbps>|mesh|p2p`), price the
+//!   shared-fabric ceiling over accumulated cut bytes (per-cell Pareto
+//!   frontiers on switch fabrics; single-cell DP elsewhere), and report
+//!   end-to-end throughput/latency (`dnnexplorer shard`). Because plan
+//!   quality now rests on the interleaving + topology model,
+//!   `tests/sim_vs_model.rs` cross-validates the analytic
+//!   [`perfmodel::interleave`] closed form against the discrete-event
+//!   [`sim::shard`] simulator (joint fabric occupancy) and the live
+//!   [`coordinator::ShardedPipeline`] on every plan shape, on ring and
+//!   star fabrics as well as p2p.
 //! * [`baselines`] — reimplementations of the paper's comparators:
 //!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
 //!   Xilinx-DPU-like fixed IP model.
@@ -80,6 +94,7 @@ pub mod report;
 pub mod runtime;
 pub mod shard;
 pub mod sim;
+pub mod topo;
 pub mod util;
 
 pub use dnn::graph::Network;

@@ -28,6 +28,7 @@ USAGE:
                       [--width W] [--bits B] [--batch B|0] [--threads T|0]
                       [--population P] [--iterations I] [--seed S]
                       [--link-gbps G] [--link-latency-us U]
+                      [--topology p2p|ring|star:<gbps>|mesh]  # board wiring
                       [--max-replicas R]           # replicate a stage
                       [--cache-file F] [--cache-max-entries N] [--json]
   dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
@@ -37,9 +38,10 @@ USAGE:
   dnnexplorer simulate [explore flags]                 # board-level (simulated) check
   dnnexplorer serve   [--artifacts DIR] [--requests N] [--batch B]
                       [--capacity Q] [--policy block|reject|shed]
+                      [--metrics-port P]   # Prometheus text endpoint (0 = ephemeral)
   dnnexplorer serve-bench [--workers W] [--batch B] [--capacity Q]
                       [--policy block|reject|shed] [--requests N]
-                      [--service-us U] [--load X]   # open-loop overload harness
+                      [--service-us U] [--load X] [--metrics-port P]
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
           googlenet inceptionv3 squeezenet mobilenet mobilenetv2
@@ -391,6 +393,10 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
     };
     anyhow::ensure!(link_gbps > 0.0, "--link-gbps must be positive");
     anyhow::ensure!(link_latency_us >= 0.0, "--link-latency-us must be non-negative");
+    let fabric = match args.get("topology") {
+        Some(spec) => dnnexplorer::topo::FabricKind::parse(spec)?,
+        None => dnnexplorer::topo::FabricKind::PointToPoint,
+    };
     let threads = {
         let t = args.get_usize("threads", 0)?;
         if t == 0 { dnnexplorer::util::parallel::default_threads() } else { t }
@@ -399,6 +405,7 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
     anyhow::ensure!(max_replicas >= 1, "--max-replicas must be >= 1");
     let cfg = ShardConfig {
         link: LinkModel::new(link_gbps, link_latency_us * 1e-6),
+        fabric,
         dw: p,
         ww: p,
         fixed_batch: if batch == 0 { None } else { Some(batch) },
@@ -482,6 +489,7 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
             ("network", Json::s(net.name.clone())),
             ("link_gbps", Json::n(link_gbps)),
             ("link_latency_us", Json::n(link_latency_us)),
+            ("topology", Json::s(format!("{fabric}"))),
             ("configs", Json::Arr(rows)),
             ("elapsed_s", Json::n(result.elapsed_s)),
             ("cache_hits", Json::n(result.cache_hits as f64)),
@@ -659,6 +667,28 @@ fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Spawn the scrapeable metrics endpoint when `--metrics-port` is given
+/// (0 binds an ephemeral port; the actual URL is printed either way).
+fn spawn_metrics_exporter(
+    args: &Args,
+    metrics: std::sync::Arc<dnnexplorer::coordinator::Metrics>,
+) -> anyhow::Result<Option<dnnexplorer::coordinator::MetricsExporter>> {
+    let Some(p) = args.get("metrics-port") else {
+        return Ok(None);
+    };
+    let port: u16 = p.parse()?;
+    let exporter = dnnexplorer::coordinator::MetricsExporter::spawn(
+        port,
+        std::sync::Arc::new(move || {
+            let mut out = String::new();
+            dnnexplorer::coordinator::scrape::metrics_text(&mut out, "dnnx_serve", "", &metrics);
+            out
+        }),
+    )?;
+    println!("metrics: http://127.0.0.1:{}/metrics", exporter.port());
+    Ok(Some(exporter))
+}
+
 /// Parse an `--policy` flag value into an overload policy.
 fn parse_policy(s: Option<&str>) -> anyhow::Result<dnnexplorer::coordinator::OverloadPolicy> {
     use dnnexplorer::coordinator::OverloadPolicy;
@@ -713,6 +743,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             ..QueueConfig::default()
         },
     )?;
+    let exporter = spawn_metrics_exporter(&args, server.metrics.clone())?;
     let t = std::time::Instant::now();
     let mut clients = Vec::new();
     for i in 0..requests {
@@ -737,6 +768,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         requests as f64 / dt,
         server.metrics.summary()
     );
+    if let Some(e) = exporter {
+        e.shutdown();
+    }
     server.shutdown();
     Ok(())
 }
@@ -776,6 +810,8 @@ fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
             ..QueueConfig::default()
         },
     )?;
+
+    let exporter = spawn_metrics_exporter(&args, router.metrics.clone())?;
 
     // Pool capacity in frames/s (service cost is per frame), and the
     // open-loop offered rate as a multiple of it.
@@ -831,6 +867,9 @@ fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
         m.queue_depth_max(),
     );
     println!("metrics: {}", m.summary());
+    if let Some(e) = exporter {
+        e.shutdown();
+    }
     router.shutdown();
     anyhow::ensure!(
         m.accounted() == m.requests.load(std::sync::atomic::Ordering::Relaxed),

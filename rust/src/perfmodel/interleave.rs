@@ -23,6 +23,7 @@
 //! [`crate::coordinator::ShardedPipeline`] on every plan shape.
 
 use crate::perfmodel::link::LinkModel;
+use crate::topo::{SlotRun, Topology};
 
 /// One stage of a replicated pipeline, as the analytic model sees it.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -84,6 +85,75 @@ pub fn frame_latency_s(stages: &[StageRate], link: &LinkModel, cut_bytes: &[f64]
     latency
 }
 
+/// Topology-aware steady state: the min over effective stage rates and
+/// *per-cut* topology-resolved ceilings, then the shared-fabric ceiling
+/// (`bisection / Σ cut_bytes` on a switch; a no-op elsewhere).
+/// `slots[s]` is where stage `s`'s replica group sits in the cluster.
+///
+/// On a [`crate::topo::FabricKind::PointToPoint`] topology this is
+/// bit-exactly [`steady_state_fps`]: the per-cut resolution degenerates
+/// to [`LinkModel::fan_throughput_fps`] and the fabric term to `+∞`
+/// (pinned by proptest).
+pub fn steady_state_fps_on(
+    topo: &Topology,
+    stages: &[StageRate],
+    slots: &[SlotRun],
+    cut_bytes: &[f64],
+) -> f64 {
+    debug_assert_eq!(cut_bytes.len() + 1, stages.len().max(1));
+    debug_assert_eq!(slots.len(), stages.len());
+    let mut fps = f64::INFINITY;
+    let mut total_bytes = 0.0f64;
+    for (s, stage) in stages.iter().enumerate() {
+        fps = fps.min(stage.effective_fps());
+        if s + 1 < stages.len() {
+            fps = fps.min(topo.cut_throughput_fps(cut_bytes[s], slots[s], slots[s + 1]));
+            total_bytes += cut_bytes[s];
+        }
+    }
+    fps = fps.min(topo.fabric_fps(total_bytes));
+    if fps.is_finite() {
+        fps
+    } else {
+        0.0
+    }
+}
+
+/// Topology-aware single-frame latency: stage latencies plus each cut's
+/// topology-resolved hop cost, in pipeline order. Bit-exactly
+/// [`frame_latency_s`] on a point-to-point topology.
+pub fn frame_latency_s_on(
+    topo: &Topology,
+    stages: &[StageRate],
+    slots: &[SlotRun],
+    cut_bytes: &[f64],
+) -> f64 {
+    debug_assert_eq!(cut_bytes.len() + 1, stages.len().max(1));
+    debug_assert_eq!(slots.len(), stages.len());
+    let mut latency = 0.0f64;
+    for (s, stage) in stages.iter().enumerate() {
+        if s > 0 {
+            latency += topo.cut_transfer_s(cut_bytes[s - 1], slots[s - 1], slots[s]);
+        }
+        latency += stage.latency_s;
+    }
+    latency
+}
+
+/// Stage-order board placement for a chain of replica groups: stage `s`
+/// occupies the next `replicas` slots — exactly how the shard planner
+/// tiles a cluster (and how hand-built sim specs are interpreted).
+pub fn chain_slots(stages: &[StageRate]) -> Vec<SlotRun> {
+    let mut slots = Vec::with_capacity(stages.len());
+    let mut first = 0usize;
+    for s in stages {
+        let len = s.replicas.max(1);
+        slots.push(SlotRun::new(first, len));
+        first += len;
+    }
+    slots
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +213,73 @@ mod tests {
         // A zero-byte cut never bounds the chain.
         let stages = [StageRate::new(1, 10.0, 0.0), StageRate::new(1, 20.0, 0.0)];
         assert_eq!(steady_state_fps(&stages, &link(), &[0.0]), 10.0);
+    }
+
+    #[test]
+    fn p2p_topology_closed_form_is_bit_identical() {
+        let topo = Topology::point_to_point(link());
+        let stages = [
+            StageRate::new(1, 100.0, 1e-3),
+            StageRate::new(2, 80.0, 2e-3),
+            StageRate::new(1, 120.0, 5e-4),
+        ];
+        let slots = chain_slots(&stages);
+        let cuts = [1e6, 2e6];
+        assert_eq!(
+            steady_state_fps_on(&topo, &stages, &slots, &cuts).to_bits(),
+            steady_state_fps(&stages, &link(), &cuts).to_bits()
+        );
+        assert_eq!(
+            frame_latency_s_on(&topo, &stages, &slots, &cuts).to_bits(),
+            frame_latency_s(&stages, &link(), &cuts).to_bits()
+        );
+    }
+
+    #[test]
+    fn star_fabric_ceiling_binds_the_chain() {
+        // Fast stages and fat cuts through a 1 GB/s switch: the fabric
+        // term (1e9 / 2e6 = 500 fps) governs, below every per-cut lane
+        // ceiling (10 GB/s / 1 MB = 1e4 fps each).
+        let topo = Topology::star(link(), 1.0);
+        let stages = [
+            StageRate::new(1, 1e6, 0.0),
+            StageRate::new(1, 1e6, 0.0),
+            StageRate::new(1, 1e6, 0.0),
+        ];
+        let slots = chain_slots(&stages);
+        let cuts = [1e6, 1e6];
+        let fps = steady_state_fps_on(&topo, &stages, &slots, &cuts);
+        assert!((fps - 500.0).abs() < 1e-9, "{fps}");
+        // Removing one cut's traffic relaxes the shared ceiling.
+        let relaxed = steady_state_fps_on(&topo, &stages, &slots, &[1e6, 0.0]);
+        assert!((relaxed - 1000.0).abs() < 1e-9, "{relaxed}");
+    }
+
+    #[test]
+    fn ring_cut_stays_single_lane() {
+        let topo = Topology::ring(link());
+        let stages = [StageRate::new(2, 1e6, 0.0), StageRate::new(2, 1e6, 0.0)];
+        let slots = chain_slots(&stages);
+        let bytes = 1e6;
+        // p2p would give 2 lanes; the ring boundary link gives 1.
+        let fps = steady_state_fps_on(&topo, &stages, &slots, &[bytes]);
+        assert_eq!(fps, link().throughput_fps(bytes));
+        // And the frame pays 3 hops of latency (slot span 0..3).
+        let lat = frame_latency_s_on(&topo, &stages, &slots, &[bytes]);
+        let expect = topo.cut_transfer_s(bytes, slots[0], slots[1]);
+        assert_eq!(lat.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn chain_slots_tile_in_stage_order() {
+        let stages = [
+            StageRate::new(1, 1.0, 0.0),
+            StageRate::new(3, 1.0, 0.0),
+            StageRate::new(2, 1.0, 0.0),
+        ];
+        let slots = chain_slots(&stages);
+        assert_eq!(slots[0], SlotRun::new(0, 1));
+        assert_eq!(slots[1], SlotRun::new(1, 3));
+        assert_eq!(slots[2], SlotRun::new(4, 2));
     }
 }

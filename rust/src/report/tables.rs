@@ -116,7 +116,8 @@ pub fn table4_batch_exploration(effort: Effort) -> RowSet {
 
 /// Sharding comparison table: 1/2/4/… boards of one cluster against the
 /// single-board baseline (the `dnnexplorer shard` report). A stage
-/// replicated r-wide renders as `j..i x r` in the stage map.
+/// replicated r-wide renders as `j..i x r` in the stage map; the
+/// Topology column shows the fabric each plan was priced against.
 pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult) -> RowSet {
     let mut out = RowSet::new(
         "shard",
@@ -131,6 +132,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
             "Speedup",
             "Bottleneck",
             "Cuts",
+            "Topology",
         ],
     );
     let base_fps = result.baseline().map(|p| p.throughput_fps);
@@ -163,6 +165,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
                     speedup,
                     p.bottleneck(),
                     cuts,
+                    format!("{}", p.fabric),
                 ]);
             }
             None => out.push_row(vec![
@@ -174,6 +177,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
                 "-".into(),
                 "-".into(),
                 "infeasible".into(),
+                "-".into(),
                 "-".into(),
             ]),
         }
@@ -228,5 +232,6 @@ mod tests {
         assert!(two > 1.0, "2-board speedup {two} must exceed 1");
         assert_eq!(t.rows[1][2], "2", "two stages at two boards, r=1");
         assert!(t.render().contains("Bottleneck"));
+        assert_eq!(t.rows[0][9], "p2p", "topology column shows the fabric");
     }
 }

@@ -13,14 +13,22 @@
 //!
 //! * [`partition`] — the cut-point planner: a dynamic program over
 //!   `(layer range, device, replication)` cells that maximizes
-//!   end-to-end throughput (min over effective stage rates and cut
-//!   ceilings), reusing the [`crate::dse::cache::EvalCache`] per
+//!   end-to-end throughput (min over effective stage rates, per-cut
+//!   topology ceilings, and — on switch fabrics — the shared bisection
+//!   term), reusing the [`crate::dse::cache::EvalCache`] per
 //!   (sub-network, device) so repeated ranges — guaranteed across the
 //!   DP cells, replication factors, and board counts — are explored
 //!   once. Replicas of a stage run the *same* explored design, so the
 //!   replication dimension adds no DSE cost.
 //! * [`link`] — link presets and cut-tensor accounting on top of the
 //!   [`crate::perfmodel::link`] model.
+//!
+//! Cuts are priced through the configured board interconnect
+//! ([`ShardConfig::fabric`] + [`ShardConfig::link`] via
+//! [`crate::topo::Topology`]): `p2p`/`mesh` reduce bit-exactly to the
+//! uniform link, a `ring` collapses every cut to its single boundary
+//! segment, and a `star:<gbps>` switch charges the sum of concurrent
+//! cut traffic against its bisection bandwidth.
 //!
 //! System model ([`crate::perfmodel::interleave`]): a stage replicated
 //! `r_s`-wide runs at `r_s · fps_s`; the cut between stages `s` and
@@ -44,14 +52,21 @@ use crate::dnn::Precision;
 use crate::dse::engine::{ExplorerConfig, Objective};
 use crate::dse::pso::PsoParams;
 use crate::fpga::FpgaDevice;
+use crate::topo::{FabricKind, Topology};
 
 /// Configuration of a sharded exploration: everything an
 /// [`ExplorerConfig`] carries except the device (one per board), plus
-/// the inter-board link.
+/// the inter-board link and how the boards are wired together.
 #[derive(Debug, Clone)]
 pub struct ShardConfig {
-    /// The board-to-board link every cut crosses.
+    /// The per-port board-to-board link (cable, ring segment, or switch
+    /// uplink, per [`ShardConfig::fabric`]).
     pub link: LinkModel,
+    /// How the cluster is wired: the planner resolves every cut through
+    /// [`crate::topo::Topology`] built from this kind over
+    /// [`ShardConfig::link`]. The default ([`FabricKind::PointToPoint`])
+    /// reduces bit-exactly to the uniform-link planner.
+    pub fabric: FabricKind,
     /// Activation bit-width.
     pub dw: Precision,
     /// Weight bit-width.
@@ -76,6 +91,7 @@ impl Default for ShardConfig {
     fn default() -> Self {
         Self {
             link: LinkModel::default(),
+            fabric: FabricKind::PointToPoint,
             dw: Precision::Int16,
             ww: Precision::Int16,
             fixed_batch: Some(1),
@@ -89,6 +105,12 @@ impl Default for ShardConfig {
 }
 
 impl ShardConfig {
+    /// The interconnect graph the planner prices cuts against:
+    /// [`ShardConfig::fabric`] wired with [`ShardConfig::link`] ports.
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.link, self.fabric)
+    }
+
     /// The single-board explorer configuration for one device of the
     /// cluster. Swarm threads stay at 1 — the planner parallelizes over
     /// (range, device) cells instead, which is both coarser-grained and

@@ -25,6 +25,22 @@
 //! memoized in the shared [`EvalCache`] — so comparing board counts
 //! over the same cluster (see [`crate::dse::multi`]) re-explores
 //! nothing but the PSO walk.
+//!
+//! ## Topology pricing
+//!
+//! Every transition is priced through the configured
+//! [`crate::topo::Topology`]: the cut ceiling and hop cost come from
+//! [`Topology::cut_throughput_fps`] / [`Topology::cut_transfer_s`] at
+//! the two replica groups' board slots (stage order maps to slots). On
+//! a switch fabric the steady state is additionally capped by
+//! `bisection / Σ cut_bytes` — a term that couples *all* cuts, so each
+//! DP cell keeps a small Pareto frontier over `(throughput-so-far,
+//! accumulated cut bytes, latency)` instead of a single winner; two
+//! partial plans are incomparable when one is faster so far but has
+//! pushed more traffic into the shared switch. On fabrics without a
+//! shared ceiling (`p2p`/`ring`/`mesh`) the frontier degenerates to one
+//! entry chosen by exactly the old predicate, keeping the planner
+//! bit-identical to the uniform-link DP (pinned by proptest).
 
 use std::collections::{BTreeSet, HashMap};
 
@@ -36,6 +52,7 @@ use crate::perfmodel::interleave::{self, StageRate};
 use crate::perfmodel::link::LinkModel;
 use crate::shard::link::tensor_bytes;
 use crate::shard::ShardConfig;
+use crate::topo::{FabricKind, SlotRun, Topology};
 use crate::util::parallel::parallel_map;
 
 /// One stage of a [`ShardPlan`]: a layer range on a replica group.
@@ -75,7 +92,10 @@ impl ShardStage {
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
     pub network: String,
+    /// Per-port link of the interconnect (see [`ShardPlan::fabric`]).
     pub link: LinkModel,
+    /// The wiring pattern the plan was priced against.
+    pub fabric: FabricKind,
     pub stages: Vec<ShardStage>,
     /// End-to-end steady-state frames/s:
     /// `min(min_s r_s·fps_s, min_cut min(r_s, r_s+1)·link_fps_cut)`.
@@ -123,7 +143,68 @@ impl ShardPlan {
             .collect()
     }
 
-    /// What limits the plan: `stage<i>` or `link<i>-><i+1>`.
+    /// The interconnect this plan was priced against.
+    pub fn topo(&self) -> Topology {
+        Topology::new(self.link, self.fabric)
+    }
+
+    /// Where each stage's replica group sits in the cluster, in stage
+    /// order (the topology resolution input).
+    pub fn slot_runs(&self) -> Vec<SlotRun> {
+        self.stages
+            .iter()
+            .map(|s| SlotRun::new(s.boards[0], s.boards.len()))
+            .collect()
+    }
+
+    /// The shared-fabric ceiling over this plan's total cut traffic
+    /// (`∞` off switch fabrics or with no cut bytes).
+    pub fn fabric_fps(&self) -> f64 {
+        self.topo().fabric_fps(self.cut_bytes().iter().sum())
+    }
+
+    /// Re-price this plan's structure (same cuts, replicas, and
+    /// per-board designs) on a different fabric over the same per-port
+    /// link — what a topology-*blind* plan actually delivers when
+    /// deployed on a switch or ring. Stage rates are unchanged; cut
+    /// ceilings, the fabric term, and hop latencies are re-resolved.
+    pub fn repriced_on(&self, fabric: FabricKind) -> ShardPlan {
+        let topo = Topology::new(self.link, fabric);
+        let rates = self.stage_rates();
+        let slots = self.slot_runs();
+        let cuts = self.cut_bytes();
+        let mut stages = self.stages.clone();
+        for (s_idx, s) in stages.iter_mut().enumerate() {
+            let cur = slots[s_idx];
+            let next = slots
+                .get(s_idx + 1)
+                .copied()
+                .unwrap_or_else(|| SlotRun::new(cur.first + cur.len, 1));
+            s.egress_fps = topo.cut_throughput_fps(s.egress_bytes, cur, next);
+        }
+        let throughput_fps = interleave::steady_state_fps_on(&topo, &rates, &slots, &cuts);
+        // Scale GOP/s with the new rate; an identity repricing (same
+        // fabric, same ceilings) keeps the stored value bit-for-bit.
+        let gops = if throughput_fps.to_bits() == self.throughput_fps.to_bits() {
+            self.gops
+        } else if self.throughput_fps > 0.0 {
+            throughput_fps * (self.gops / self.throughput_fps)
+        } else {
+            0.0
+        };
+        ShardPlan {
+            network: self.network.clone(),
+            link: self.link,
+            fabric,
+            stages,
+            throughput_fps,
+            gops,
+            latency_s: interleave::frame_latency_s_on(&topo, &rates, &slots, &cuts),
+        }
+    }
+
+    /// What limits the plan: `stage<i>`, `link<i>-><i+1>`, or the
+    /// shared switch (`fabric`).
     pub fn bottleneck(&self) -> String {
         let eps = self.throughput_fps * 1e-9;
         for s in &self.stages {
@@ -134,6 +215,9 @@ impl ShardPlan {
                 return format!("link{}->{}", s.stage, s.stage + 1);
             }
         }
+        if self.fabric_fps() <= self.throughput_fps + eps {
+            return "fabric".into();
+        }
         "none".into()
     }
 
@@ -141,11 +225,12 @@ impl ShardPlan {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{}: {} stages on {} boards over {} link\n",
+            "{}: {} stages on {} boards over {} link, {} fabric\n",
             self.network,
             self.stages.len(),
             self.board_count(),
-            self.link
+            self.link,
+            self.fabric
         ));
         out.push_str(&format!(
             "{:<6} {:<8} {:<8} {:<10} {:<26} {:>9} {:>9} {:>7} {:>7} {:>10}\n",
@@ -238,11 +323,24 @@ fn same_device(a: &FpgaDevice, b: &FpgaDevice) -> bool {
 struct Cell {
     fps: f64,
     latency_s: f64,
+    /// Total activation bytes this partial plan pushes across cuts per
+    /// frame — the shared-fabric demand accumulated so far (priced at
+    /// the end as `bisection / cut_sum` on switch fabrics).
+    cut_sum: f64,
     /// Start compute-layer index of the last stage in this cell's plan.
     start_j: usize,
     /// Replication factor of the *previous* stage (0 for the first).
     prev_r: usize,
+    /// Index into the previous cell's frontier (0 off switch fabrics,
+    /// where frontiers hold a single entry).
+    prev_idx: usize,
 }
+
+/// Frontier bound on switch fabrics: cells keep at most this many
+/// Pareto-incomparable partial plans. Small clusters never hit it; on
+/// deep clusters it acts as a deterministic beam (worst entries by the
+/// fabric-priced score are dropped first).
+const FABRIC_FRONTIER_CAP: usize = 128;
 
 /// Partition `net` across `devices` (pipeline order), replicating
 /// stages up to [`ShardConfig::max_replicas`]-wide where the cluster
@@ -364,9 +462,65 @@ pub fn partition(
         }
     };
 
-    // dp[b][i][r]: best plan putting compute layers [0, i) on boards
-    // 0..=b with the last stage replicated r-wide (boards b-r+1..=b).
-    let mut dp: Vec<Vec<Vec<Option<Cell>>>> = vec![vec![vec![None; maxr + 1]; n + 1]; b_count];
+    let topo = cfg.topology();
+    let fabric = topo.has_fabric();
+    // Admit a candidate into a cell's frontier. Off switch fabrics the
+    // frontier holds one entry picked by `improves` — bit-identical to
+    // the single-cell DP. On a switch, accumulated cut bytes decide the
+    // final fabric term, so Pareto-incomparable entries (faster-so-far
+    // vs less switch traffic vs lower latency) must coexist.
+    let admit = |front: &mut Vec<Cell>, cand: Cell| {
+        if !fabric {
+            if improves(
+                (cand.fps, cand.latency_s),
+                front.first().map(|c| (c.fps, c.latency_s)),
+            ) {
+                front.clear();
+                front.push(cand);
+            }
+            return;
+        }
+        for c in front.iter() {
+            if c.fps >= cand.fps && c.latency_s <= cand.latency_s && c.cut_sum <= cand.cut_sum {
+                return; // dominated (equal on all axes keeps the first seen)
+            }
+        }
+        front.retain(|c| {
+            !(cand.fps >= c.fps && cand.latency_s <= c.latency_s && cand.cut_sum <= c.cut_sum)
+        });
+        front.push(cand);
+        if front.len() > FABRIC_FRONTIER_CAP {
+            // Deterministic beam prune: drop the worst fabric-priced
+            // entry (ties: higher latency, then more switch traffic).
+            let worst = front
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let sa = a.fps.min(topo.fabric_fps(a.cut_sum));
+                    let sb = b.fps.min(topo.fabric_fps(b.cut_sum));
+                    sa.partial_cmp(&sb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(
+                            b.latency_s
+                                .partial_cmp(&a.latency_s)
+                                .unwrap_or(std::cmp::Ordering::Equal),
+                        )
+                        .then(
+                            b.cut_sum
+                                .partial_cmp(&a.cut_sum)
+                                .unwrap_or(std::cmp::Ordering::Equal),
+                        )
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            front.swap_remove(worst);
+        }
+    };
+
+    // dp[b][i][r]: frontier of plans putting compute layers [0, i) on
+    // boards 0..=b with the last stage replicated r-wide (boards
+    // b-r+1..=b). One entry off switch fabrics; a Pareto set on them.
+    let mut dp = vec![vec![vec![Vec::<Cell>::new(); maxr + 1]; n + 1]; b_count];
     for b in 0..b_count {
         let rmax = maxr.min(run_len[b]).min(b + 1);
         let after = b_count - 1 - b;
@@ -383,28 +537,47 @@ pub fn partition(
                 if before == 0 {
                     // First stage: layers [0, i) on boards 0..=b, r-wide.
                     if let Some(c) = cell_of(b, 0, i) {
-                        dp[b][i][r] = Some(Cell {
+                        dp[b][i][r].push(Cell {
                             fps: r as f64 * c.throughput_fps,
                             latency_s: c.frame_latency_s,
+                            cut_sum: 0.0,
                             start_j: 0,
                             prev_r: 0,
+                            prev_idx: 0,
                         });
                     }
                     continue;
                 }
                 let pb = before - 1; // last board of the previous stage
-                let mut best: Option<Cell> = None;
+                let cur_run = SlotRun::new(before, r);
+                let mut best: Vec<Cell> = Vec::new();
                 for j in min_stages(before).max(1)..i {
                     let Some(stage) = cell_of(b, j, i) else { continue };
                     for r_prev in 1..=maxr {
-                        let Some(prev) = dp[pb][j][r_prev] else { continue };
-                        let link_fps = cfg.link.fan_throughput_fps(cut_bytes[j], r_prev, r);
-                        let hop_s = cfg.link.transfer_s(cut_bytes[j]);
+                        let frontier = &dp[pb][j][r_prev];
+                        if frontier.is_empty() {
+                            continue;
+                        }
+                        // A non-empty frontier implies r_prev fits at
+                        // board pb, so the run start cannot underflow.
+                        let prev_run = SlotRun::new(before - r_prev, r_prev);
+                        let link_fps = topo.cut_throughput_fps(cut_bytes[j], prev_run, cur_run);
+                        let hop_s = topo.cut_transfer_s(cut_bytes[j], prev_run, cur_run);
                         let eff = r as f64 * stage.throughput_fps;
-                        let fps = prev.fps.min(link_fps).min(eff);
-                        let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
-                        if improves((fps, latency_s), best.map(|c| (c.fps, c.latency_s))) {
-                            best = Some(Cell { fps, latency_s, start_j: j, prev_r: r_prev });
+                        for (pi, prev) in frontier.iter().enumerate() {
+                            let fps = prev.fps.min(link_fps).min(eff);
+                            let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
+                            admit(
+                                &mut best,
+                                Cell {
+                                    fps,
+                                    latency_s,
+                                    cut_sum: prev.cut_sum + cut_bytes[j],
+                                    start_j: j,
+                                    prev_r: r_prev,
+                                    prev_idx: pi,
+                                },
+                            );
                         }
                     }
                 }
@@ -413,17 +586,19 @@ pub fn partition(
         }
     }
 
-    // Pick the winning replication of the final stage, then walk the
-    // chain back to the front.
-    let mut chosen: Option<(usize, Cell)> = None;
+    // Pick the winning final cell — the shared-fabric ceiling is priced
+    // here, over each candidate's accumulated cut traffic — then walk
+    // the chain back to the front.
+    let mut chosen: Option<(usize, usize, f64, f64)> = None; // (r, idx, fps, latency)
     for r in 1..=maxr.min(run_len[b_count - 1]).min(b_count) {
-        if let Some(c) = dp[b_count - 1][n][r] {
-            if improves((c.fps, c.latency_s), chosen.map(|(_, b)| (b.fps, b.latency_s))) {
-                chosen = Some((r, c));
+        for (idx, c) in dp[b_count - 1][n][r].iter().enumerate() {
+            let scored = c.fps.min(topo.fabric_fps(c.cut_sum));
+            if improves((scored, c.latency_s), chosen.map(|(_, _, f, l)| (f, l))) {
+                chosen = Some((r, idx, scored, c.latency_s));
             }
         }
     }
-    let (final_r, final_cell) = chosen?;
+    let (final_r, final_idx, final_fps, final_latency) = chosen?;
 
     // Reconstruct (start layer, end layer, last board, replicas) per
     // stage, back to front.
@@ -431,8 +606,9 @@ pub fn partition(
     let mut i_cur = n;
     let mut b_cur = b_count - 1;
     let mut r_cur = final_r;
+    let mut idx_cur = final_idx;
     loop {
-        let cell = dp[b_cur][i_cur][r_cur].expect("dp chain broken");
+        let cell = dp[b_cur][i_cur][r_cur][idx_cur];
         rev.push((cell.start_j, i_cur, b_cur, r_cur));
         if cell.start_j == 0 {
             debug_assert_eq!(b_cur + 1, r_cur, "first stage must start at board 0");
@@ -441,6 +617,7 @@ pub fn partition(
         let next_b = b_cur - r_cur;
         i_cur = cell.start_j;
         r_cur = cell.prev_r;
+        idx_cur = cell.prev_idx;
         b_cur = next_b;
     }
     rev.reverse();
@@ -451,6 +628,8 @@ pub fn partition(
         let egress_bytes = cut_bytes[i];
         let r_next = rev.get(s_idx + 1).map(|&(_, _, _, rn)| rn).unwrap_or(1);
         let stage_fps = r as f64 * candidate.throughput_fps;
+        let this_run = SlotRun::new(b_end + 1 - r, r);
+        let next_run = SlotRun::new(b_end + 1, r_next);
         stages.push(ShardStage {
             stage: s_idx,
             boards: (b_end + 1 - r..=b_end).collect(),
@@ -459,7 +638,7 @@ pub fn partition(
             candidate,
             stage_fps,
             egress_bytes,
-            egress_fps: cfg.link.fan_throughput_fps(egress_bytes, r, r_next),
+            egress_fps: topo.cut_throughput_fps(egress_bytes, this_run, next_run),
         });
     }
 
@@ -472,23 +651,28 @@ pub fn partition(
     let plan = ShardPlan {
         network: net.name.clone(),
         link: cfg.link,
+        fabric: cfg.fabric,
         stages,
-        throughput_fps: final_cell.fps,
-        gops: final_cell.fps * total_ops / 1e9,
-        latency_s: final_cell.latency_s,
+        throughput_fps: final_fps,
+        gops: final_fps * total_ops / 1e9,
+        latency_s: final_latency,
     };
     // The DP's incremental mins/sums must agree with the closed-form
     // interleave model bit-for-bit (same operations, same order).
-    debug_assert_eq!(
-        plan.throughput_fps.to_bits(),
-        interleave::steady_state_fps(&plan.stage_rates(), &plan.link, &plan.cut_bytes()).to_bits(),
-        "DP throughput disagrees with the interleave model"
-    );
-    debug_assert_eq!(
-        plan.latency_s.to_bits(),
-        interleave::frame_latency_s(&plan.stage_rates(), &plan.link, &plan.cut_bytes()).to_bits(),
-        "DP latency disagrees with the interleave model"
-    );
+    #[cfg(debug_assertions)]
+    {
+        let (rates, slots, cuts) = (plan.stage_rates(), plan.slot_runs(), plan.cut_bytes());
+        debug_assert_eq!(
+            plan.throughput_fps.to_bits(),
+            interleave::steady_state_fps_on(&topo, &rates, &slots, &cuts).to_bits(),
+            "DP throughput disagrees with the interleave model"
+        );
+        debug_assert_eq!(
+            plan.latency_s.to_bits(),
+            interleave::frame_latency_s_on(&topo, &rates, &slots, &cuts).to_bits(),
+            "DP latency disagrees with the interleave model"
+        );
+    }
     Some(plan)
 }
 
@@ -650,6 +834,68 @@ mod tests {
         let plan = partition(&net, &devices, &cfg, &cache).expect("feasible");
         assert_eq!(plan.max_replication(), 1, "distinct devices cannot replicate");
         assert_eq!(plan.stages.len(), 2);
+    }
+
+    #[test]
+    fn explicit_p2p_fabric_is_the_default_planner_bitwise() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let a = partition(&net, &devices, &quick_cfg(), &EvalCache::new()).expect("default");
+        let mut cfg = quick_cfg();
+        cfg.fabric = FabricKind::PointToPoint;
+        let b = partition(&net, &devices, &cfg, &EvalCache::new()).expect("explicit p2p");
+        assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(a.fabric, FabricKind::PointToPoint);
+        // Repricing a p2p plan on p2p is the identity.
+        let again = b.repriced_on(FabricKind::PointToPoint);
+        assert_eq!(again.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+        assert_eq!(again.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(again.gops.to_bits(), b.gops.to_bits());
+    }
+
+    #[test]
+    fn tight_star_bisection_becomes_the_fabric_bottleneck() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let mut cfg = quick_cfg();
+        // A 1 MB/s switch: any cut's traffic saturates the fabric.
+        cfg.fabric = FabricKind::Star { bisection_gbps: 0.001 };
+        let cache = EvalCache::new();
+        let plan = partition(&net, &devices, &cfg, &cache).expect("feasible");
+        assert_eq!(plan.fabric, cfg.fabric);
+        assert_eq!(plan.bottleneck(), "fabric", "{}", plan.bottleneck());
+        // The fabric ceiling is exactly bisection / total cut bytes
+        // (same resolution path, bit-for-bit).
+        let total: f64 = plan.cut_bytes().iter().sum();
+        assert!(total > 0.0);
+        assert_eq!(plan.throughput_fps.to_bits(), plan.topo().fabric_fps(total).to_bits());
+        assert_eq!(plan.throughput_fps.to_bits(), plan.fabric_fps().to_bits());
+        // An unconstrained switch on the same structure is faster.
+        let fast = plan.repriced_on(FabricKind::Star { bisection_gbps: 100.0 });
+        assert!(fast.throughput_fps > plan.throughput_fps);
+    }
+
+    #[test]
+    fn ring_fabric_single_lane_caps_replicated_cuts() {
+        // On a ring, a replicated fan still crosses one boundary link,
+        // so repricing a p2p plan with a wide fan onto a ring can only
+        // lower (never raise) the modeled rate.
+        let net = bottleneck_net();
+        let devices = vec![FpgaDevice::zcu102(); 4];
+        let mut cfg = quick_cfg();
+        cfg.max_replicas = 4;
+        let cache = EvalCache::new();
+        let p2p = partition(&net, &devices, &cfg, &cache).expect("p2p feasible");
+        let on_ring = p2p.repriced_on(FabricKind::Ring);
+        assert!(on_ring.throughput_fps <= p2p.throughput_fps);
+        // Hop latency grows with slot span, so latency never shrinks.
+        assert!(on_ring.latency_s >= p2p.latency_s);
+        // And the ring-aware planner never models below the repriced
+        // blind plan (its search space contains that structure).
+        cfg.fabric = FabricKind::Ring;
+        let aware = partition(&net, &devices, &cfg, &cache).expect("ring feasible");
+        assert!(aware.throughput_fps >= on_ring.throughput_fps);
     }
 
     #[test]

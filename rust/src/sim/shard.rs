@@ -2,16 +2,21 @@
 //! plan — the independent check on [`crate::perfmodel::interleave`].
 //!
 //! Where the analytic model reasons in closed form (`min` over effective
-//! stage rates and cut ceilings), this simulator walks every frame
-//! through every resource it occupies:
+//! stage rates, per-cut topology ceilings, and the shared-fabric term),
+//! this simulator walks every frame through every resource it occupies:
 //!
 //! * each **replica** is a serial server (one frame at a time, service
 //!   time = the stage's per-frame interval), frames assigned round-robin
 //!   by global frame index;
-//! * each cut crossing occupies the producer replica's **egress link**
-//!   and the consumer replica's **ingress link** jointly for the
-//!   serialization time, then adds the link's fixed hop latency as pure
-//!   delay;
+//! * each cut crossing occupies the links its [`Topology`] resolves:
+//!   on `p2p`/`mesh`/`star` the producer replica's **egress link** and
+//!   the consumer replica's **ingress link** jointly for the
+//!   serialization time; on a **ring** the cut's single shared boundary
+//!   segment; on a **star** additionally the switch — one shared
+//!   store-and-forward station whose busy time per crossing is
+//!   `bytes / bisection`, so concurrent cuts jointly saturate at the
+//!   aggregate bandwidth (the fabric-contention term of the analytic
+//!   model). The fabric's fixed hop latency is then added as pure delay;
 //! * departures are **re-ordered**: frame `k` leaves the pipeline only
 //!   after every frame `< k` has left (exactly what the coordinator's
 //!   reorder buffer does).
@@ -19,12 +24,12 @@
 //! Everything is deterministic, so the steady state is exact up to the
 //! warm-up transient; `tests/sim_vs_model.rs` asserts the measured rate
 //! matches the analytic prediction within a small tolerance for a grid
-//! of plan shapes, and that the live [`crate::coordinator::
-//! ShardedPipeline`] agrees with both.
+//! of plan shapes *and fabrics* (p2p, ring, star), and that the live
+//! [`crate::coordinator::ShardedPipeline`] agrees with both.
 
 use crate::perfmodel::interleave::StageRate;
-use crate::perfmodel::link::LinkModel;
 use crate::shard::ShardPlan;
+use crate::topo::{FabricKind, SlotRun, Topology};
 
 /// One simulated stage: `replicas` identical serial servers.
 #[derive(Debug, Clone, Copy)]
@@ -35,19 +40,22 @@ pub struct SimStage {
     pub service_s: f64,
 }
 
-/// A simulated plan: stages in pipeline order, the link every cut
-/// crosses, and the bytes on the wire at each internal cut
-/// (`cut_bytes.len() == stages.len() - 1`).
+/// A simulated plan: stages in pipeline order, the interconnect every
+/// cut resolves against, and the bytes on the wire at each internal cut
+/// (`cut_bytes.len() == stages.len() - 1`). Replica groups are placed
+/// in stage order (stage 0 on the lowest board slots), exactly as the
+/// shard planner tiles a cluster.
 #[derive(Debug, Clone)]
 pub struct ShardSimSpec {
     pub stages: Vec<SimStage>,
-    pub link: LinkModel,
+    pub topo: Topology,
     pub cut_bytes: Vec<f64>,
 }
 
 impl ShardSimSpec {
     /// Derive the simulation spec from a planned [`ShardPlan`]: each
-    /// replica serves at the candidate's modeled interval.
+    /// replica serves at the candidate's modeled interval, over the
+    /// plan's own topology.
     pub fn from_plan(plan: &ShardPlan) -> Self {
         Self {
             stages: plan
@@ -58,7 +66,7 @@ impl ShardSimSpec {
                     service_s: 1.0 / s.candidate.throughput_fps.max(1e-12),
                 })
                 .collect(),
-            link: plan.link,
+            topo: plan.topo(),
             cut_bytes: plan.cut_bytes(),
         }
     }
@@ -70,6 +78,13 @@ impl ShardSimSpec {
             .iter()
             .map(|s| StageRate::new(s.replicas, 1.0 / s.service_s.max(1e-12), s.service_s))
             .collect()
+    }
+
+    /// Stage-order board placement: stage `s` occupies the next
+    /// `replicas` slots (the same tiling the analytic model and the
+    /// planner use — one source of truth in `interleave::chain_slots`).
+    pub fn slot_runs(&self) -> Vec<SlotRun> {
+        crate::perfmodel::interleave::chain_slots(&self.stage_rates())
     }
 }
 
@@ -94,6 +109,20 @@ pub struct ShardSimResult {
     pub frames: usize,
 }
 
+/// Per-cut resources as the topology resolves them, precomputed once.
+struct CutRes {
+    bytes: f64,
+    /// Per-lane serialization time of one crossing.
+    ser_s: f64,
+    /// Pure delay added after serialization (hop latency, per fabric).
+    hop_s: f64,
+    /// Store-and-forward busy time on the shared switch (0 off star).
+    fabric_ser_s: f64,
+    /// Ring: all crossings share the cut's single boundary segment
+    /// instead of per-replica endpoint links.
+    shared_boundary: bool,
+}
+
 /// Simulate `frames` frames through `spec` with an always-full input
 /// queue (saturation — the steady-state throughput measurement), using
 /// the first `warmup` frames to fill the pipeline before measuring.
@@ -114,16 +143,40 @@ pub fn simulate_shard(
         anyhow::ensure!(s.replicas >= 1 && s.service_s > 0.0, "degenerate stage {s:?}");
     }
 
+    let topo = &spec.topo;
+    let slots = spec.slot_runs();
+    let link_bytes_per_s = topo.link.bandwidth_bytes().max(1.0);
+    let fabric_bytes_per_s = topo.fabric_bytes_per_s();
+    let cuts: Vec<CutRes> = spec
+        .cut_bytes
+        .iter()
+        .enumerate()
+        .map(|(s, &bytes)| CutRes {
+            bytes,
+            ser_s: bytes / link_bytes_per_s,
+            hop_s: topo.cut_hop_s(slots[s], slots[s + 1]),
+            fabric_ser_s: fabric_bytes_per_s.map(|b| bytes / b).unwrap_or(0.0),
+            shared_boundary: matches!(topo.kind, FabricKind::Ring),
+        })
+        .collect();
+
     // Per-resource next-free times. Round-robin by global frame index
     // fixes each frame's replica at every stage, so every resource
     // serves its frames in ascending frame order — a greedy in-order
-    // pass over frames is an exact discrete-event schedule.
+    // pass over frames is an exact discrete-event schedule. (The shared
+    // switch also serves crossings in ascending frame order under this
+    // pass; its busy time per frame is the frame's total switched
+    // bytes / bisection, so the saturated rate matches the analytic
+    // `bisection / Σ cut_bytes` ceiling.)
     let mut replica_free: Vec<Vec<f64>> =
         spec.stages.iter().map(|s| vec![0.0; s.replicas]).collect();
     let mut egress_free: Vec<Vec<f64>> =
         spec.stages.iter().map(|s| vec![0.0; s.replicas]).collect();
     let mut ingress_free: Vec<Vec<f64>> =
         spec.stages.iter().map(|s| vec![0.0; s.replicas]).collect();
+    // Ring boundary segment per cut, and the star's shared switch.
+    let mut boundary_free: Vec<f64> = vec![0.0; cuts.len()];
+    let mut fabric_free = 0.0f64;
 
     let mut completions = Vec::with_capacity(frames);
     for k in 0..frames {
@@ -136,18 +189,34 @@ pub fn simulate_shard(
             t = start + stage.service_s;
             replica_free[s][q] = t;
             // Cross the cut to the next stage, if any. A zero-byte cut
-            // costs nothing, matching `LinkModel::transfer_s(0) == 0`.
+            // costs nothing, matching `Topology::cut_transfer_s(0) == 0`.
             if s + 1 < spec.stages.len() {
-                let bytes = spec.cut_bytes[s];
-                if bytes > 0.0 {
-                    let c = k % spec.stages[s + 1].replicas;
-                    let ser = bytes / spec.link.bandwidth_bytes().max(1.0);
-                    // The transfer occupies both endpoints jointly.
-                    let start = t.max(egress_free[s][q]).max(ingress_free[s + 1][c]);
-                    let end = start + ser;
-                    egress_free[s][q] = end;
-                    ingress_free[s + 1][c] = end;
-                    t = end + spec.link.latency_s;
+                let cut = &cuts[s];
+                if cut.bytes > 0.0 {
+                    let mut end = if cut.shared_boundary {
+                        // Ring: one boundary segment carries the whole
+                        // cut regardless of the replica fan.
+                        let start = t.max(boundary_free[s]);
+                        let end = start + cut.ser_s;
+                        boundary_free[s] = end;
+                        end
+                    } else {
+                        // The transfer occupies both endpoints jointly.
+                        let c = k % spec.stages[s + 1].replicas;
+                        let start = t.max(egress_free[s][q]).max(ingress_free[s + 1][c]);
+                        let end = start + cut.ser_s;
+                        egress_free[s][q] = end;
+                        ingress_free[s + 1][c] = end;
+                        end
+                    };
+                    if cut.fabric_ser_s > 0.0 {
+                        // Store-and-forward through the shared switch:
+                        // its busy time accumulates across all cuts.
+                        let fstart = end.max(fabric_free);
+                        fabric_free = fstart + cut.fabric_ser_s;
+                        end = fabric_free;
+                    }
+                    t = end + cut.hop_s;
                 }
             }
         }
@@ -185,13 +254,22 @@ pub fn simulate_shard(
 mod tests {
     use super::*;
     use crate::perfmodel::interleave;
+    use crate::perfmodel::link::LinkModel;
 
-    fn run(stages: Vec<SimStage>, cut_bytes: Vec<f64>, link: LinkModel) -> (f64, f64) {
-        let spec = ShardSimSpec { stages, link, cut_bytes };
+    fn run(stages: Vec<SimStage>, cut_bytes: Vec<f64>, topo: Topology) -> (f64, f64) {
+        let spec = ShardSimSpec { stages, topo, cut_bytes };
         let sim = simulate_shard(&spec, 600, 100).expect("simulates");
-        let predicted =
-            interleave::steady_state_fps(&spec.stage_rates(), &spec.link, &spec.cut_bytes);
+        let predicted = interleave::steady_state_fps_on(
+            &spec.topo,
+            &spec.stage_rates(),
+            &spec.slot_runs(),
+            &spec.cut_bytes,
+        );
         (sim.throughput_fps, predicted)
+    }
+
+    fn p2p(link: LinkModel) -> Topology {
+        Topology::point_to_point(link)
     }
 
     #[test]
@@ -199,7 +277,7 @@ mod tests {
         let (sim, pred) = run(
             vec![SimStage { replicas: 1, service_s: 1e-3 }],
             vec![],
-            LinkModel::default(),
+            p2p(LinkModel::default()),
         );
         assert!((sim - 1000.0).abs() / 1000.0 < 0.01, "sim {sim}");
         assert!((sim - pred).abs() / pred < 0.01);
@@ -210,12 +288,12 @@ mod tests {
         let (solo, _) = run(
             vec![SimStage { replicas: 1, service_s: 1e-3 }],
             vec![],
-            LinkModel::default(),
+            p2p(LinkModel::default()),
         );
         let (trio, pred) = run(
             vec![SimStage { replicas: 3, service_s: 1e-3 }],
             vec![],
-            LinkModel::default(),
+            p2p(LinkModel::default()),
         );
         assert!((trio / solo - 3.0).abs() < 0.1, "trio {trio} solo {solo}");
         assert!((trio - pred).abs() / pred < 0.02);
@@ -230,7 +308,7 @@ mod tests {
                 SimStage { replicas: 1, service_s: 1e-3 },
             ],
             vec![1e3, 1e3],
-            LinkModel::default(),
+            p2p(LinkModel::default()),
         );
         assert!((sim - 500.0).abs() / 500.0 < 0.02, "sim {sim}");
         assert!((sim - pred).abs() / pred < 0.02);
@@ -246,7 +324,7 @@ mod tests {
                 SimStage { replicas: 2, service_s: 2e-3 },
             ],
             vec![1e3],
-            LinkModel::default(),
+            p2p(LinkModel::default()),
         );
         assert!((sim - 1000.0).abs() / 1000.0 < 0.02, "sim {sim}");
         assert!((sim - pred).abs() / pred < 0.02);
@@ -264,7 +342,7 @@ mod tests {
                 SimStage { replicas: 1, service_s: 1e-4 },
             ],
             vec![bytes],
-            link,
+            p2p(link),
         );
         assert!((pred - 1000.0).abs() < 1e-6, "pred {pred}");
         assert!((sim - pred).abs() / pred < 0.05, "sim {sim} pred {pred}");
@@ -280,9 +358,47 @@ mod tests {
                 SimStage { replicas: 2, service_s: 1e-4 },
             ],
             vec![bytes],
-            link,
+            p2p(link),
         );
         assert!((pred - 2000.0).abs() < 1e-6, "pred {pred}");
+        assert!((sim - pred).abs() / pred < 0.05, "sim {sim} pred {pred}");
+    }
+
+    #[test]
+    fn ring_boundary_serializes_a_wide_fan() {
+        // The same 2->2 fan that gets 2 lanes on p2p collapses to the
+        // single boundary segment on a ring — half the cut ceiling.
+        let link = LinkModel::new(0.001, 1e-6);
+        let bytes = 1e3;
+        let (sim, pred) = run(
+            vec![
+                SimStage { replicas: 2, service_s: 1e-4 },
+                SimStage { replicas: 2, service_s: 1e-4 },
+            ],
+            vec![bytes],
+            Topology::ring(link),
+        );
+        assert!((pred - 1000.0).abs() < 1e-6, "pred {pred}");
+        assert!((sim - pred).abs() / pred < 0.05, "sim {sim} pred {pred}");
+    }
+
+    #[test]
+    fn star_switch_caps_concurrent_cuts_jointly() {
+        // Two cuts of 1 KB each through a 1 MB/s switch with fast
+        // uplinks: each cut alone could do 1e4 fps on its uplinks, but
+        // the shared switch sustains only 1e6 / 2e3 = 500 fps.
+        let link = LinkModel::new(0.01, 1e-6); // 10 MB/s uplinks
+        let topo = Topology::star(link, 0.001); // 1 MB/s bisection
+        let (sim, pred) = run(
+            vec![
+                SimStage { replicas: 1, service_s: 1e-4 },
+                SimStage { replicas: 1, service_s: 1e-4 },
+                SimStage { replicas: 1, service_s: 1e-4 },
+            ],
+            vec![1e3, 1e3],
+            topo,
+        );
+        assert!((pred - 500.0).abs() < 1e-6, "pred {pred}");
         assert!((sim - pred).abs() / pred < 0.05, "sim {sim} pred {pred}");
     }
 
@@ -293,7 +409,7 @@ mod tests {
                 SimStage { replicas: 3, service_s: 1e-3 },
                 SimStage { replicas: 2, service_s: 0.7e-3 },
             ],
-            link: LinkModel::default(),
+            topo: p2p(LinkModel::default()),
             cut_bytes: vec![4e4],
         };
         let sim = simulate_shard(&spec, 200, 20).expect("simulates");
@@ -307,9 +423,9 @@ mod tests {
 
     #[test]
     fn rejects_degenerate_specs() {
-        let link = LinkModel::default();
+        let topo = p2p(LinkModel::default());
         assert!(simulate_shard(
-            &ShardSimSpec { stages: vec![], link, cut_bytes: vec![] },
+            &ShardSimSpec { stages: vec![], topo, cut_bytes: vec![] },
             100,
             10
         )
@@ -317,7 +433,7 @@ mod tests {
         assert!(simulate_shard(
             &ShardSimSpec {
                 stages: vec![SimStage { replicas: 1, service_s: 1e-3 }],
-                link,
+                topo,
                 cut_bytes: vec![1.0],
             },
             100,
@@ -327,7 +443,7 @@ mod tests {
         assert!(simulate_shard(
             &ShardSimSpec {
                 stages: vec![SimStage { replicas: 0, service_s: 1e-3 }],
-                link,
+                topo,
                 cut_bytes: vec![],
             },
             100,

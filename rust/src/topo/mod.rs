@@ -1,0 +1,362 @@
+//! Board-interconnect topology: how a cluster's boards are actually
+//! wired, and what each shard cut pays for it.
+//!
+//! The shard planner (PRs 3–4) charged every cut against one uniform
+//! point-to-point [`LinkModel`] — correct for dedicated cables, but
+//! over-promising on switch-attached or ring-connected clusters where
+//! cuts share fabric. This module makes the interconnect a first-class
+//! input: a [`Topology`] resolves each cut — given *where* the two
+//! replica groups sit in the cluster ([`SlotRun`]s; stage order maps to
+//! board slots) — to a per-cut effective link, and a shared-fabric
+//! contention model charges the *sum* of concurrent cut traffic
+//! crossing a switch against its aggregate bisection bandwidth.
+//!
+//! Fabrics ([`FabricKind`]):
+//!
+//! * **`PointToPoint`** — a dedicated cable per cut (the PR 3–4 model).
+//!   Every resolution reduces *bit-exactly* to the uniform
+//!   [`LinkModel`] path: same calls, same arithmetic (pinned by
+//!   proptest).
+//! * **`Ring`** — boards chained in slot order, frames forwarded around
+//!   the (unidirectional) ring. All of a cut's traffic crosses the
+//!   single boundary link between the groups, so the cut ceiling stays
+//!   **one lane** no matter how wide the replica fan; hop latency
+//!   scales with the worst-case slot distance between paired replicas.
+//! * **`Star`** — every board has one full-duplex uplink into a switch
+//!   with finite bisection bandwidth. Per-cut ceilings keep the
+//!   `min(r_from, r_to)` uplink lanes, a frame pays two serdes
+//!   traversals plus store-and-forward through the switch, and — the
+//!   contention model — steady-state throughput is additionally capped
+//!   by `bisection / Σ cut_bytes` across *all* concurrent cuts
+//!   ([`Topology::fabric_fps`]).
+//! * **`FullMesh`** — a dedicated link between every board pair;
+//!   resolves identically to `PointToPoint` for the chain-shaped
+//!   traffic a shard plan generates (pinned bit-exact by proptest).
+//!
+//! Consumers: `shard::partition` prices every DP transition through
+//! [`Topology::cut_throughput_fps`] / [`Topology::cut_transfer_s`] and
+//! tracks accumulated cut bytes for the fabric ceiling,
+//! [`crate::perfmodel::interleave`] exposes the topology-aware closed
+//! forms, [`crate::sim::shard`] simulates joint fabric occupancy, and
+//! the CLI grows `shard --topology ring|star:<gbps>|mesh|p2p`.
+
+use crate::perfmodel::link::LinkModel;
+
+/// A contiguous run of cluster board slots — where one replica group
+/// sits. Stage order maps to ascending slot order (stage 0 occupies the
+/// lowest slots), which is exactly how the shard planner tiles boards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotRun {
+    /// First board slot of the run.
+    pub first: usize,
+    /// Number of boards in the run (the replication factor; >= 1).
+    pub len: usize,
+}
+
+impl SlotRun {
+    pub fn new(first: usize, len: usize) -> Self {
+        Self { first, len: len.max(1) }
+    }
+
+    /// Last board slot of the run.
+    pub fn last(&self) -> usize {
+        self.first + self.len - 1
+    }
+}
+
+/// How the cluster's boards are wired together.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FabricKind {
+    /// A dedicated cable per cut (the uniform-link model).
+    #[default]
+    PointToPoint,
+    /// Unidirectional ring in slot order: one boundary link per cut,
+    /// hop latency grows with slot distance.
+    Ring,
+    /// Per-board uplinks into a switch with this much aggregate
+    /// bisection bandwidth (GB/s) shared by all concurrent cut traffic.
+    Star {
+        bisection_gbps: f64,
+    },
+    /// A dedicated link between every board pair.
+    FullMesh,
+}
+
+impl FabricKind {
+    /// Parse a CLI spec: `p2p`, `ring`, `mesh`, or `star:<gbps>`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        match spec {
+            "p2p" => Ok(Self::PointToPoint),
+            "ring" => Ok(Self::Ring),
+            "mesh" => Ok(Self::FullMesh),
+            other => match other.strip_prefix("star:") {
+                Some(gbps) => {
+                    let b: f64 = gbps
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad star bisection {gbps:?} (GB/s)"))?;
+                    anyhow::ensure!(b > 0.0, "star bisection bandwidth must be positive");
+                    Ok(Self::Star { bisection_gbps: b })
+                }
+                None => anyhow::bail!("unknown topology {spec:?} (p2p|ring|star:<gbps>|mesh)"),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for FabricKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::PointToPoint => write!(f, "p2p"),
+            Self::Ring => write!(f, "ring"),
+            Self::Star { bisection_gbps } => write!(f, "star:{bisection_gbps}"),
+            Self::FullMesh => write!(f, "mesh"),
+        }
+    }
+}
+
+/// A board-interconnect graph: one per-port/per-hop [`LinkModel`] plus
+/// the wiring pattern. All cut resolution goes through this type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    /// The per-port (p2p/mesh: per-cable; ring: per-segment; star:
+    /// per-uplink) link model.
+    pub link: LinkModel,
+    pub kind: FabricKind,
+}
+
+impl Topology {
+    pub fn new(link: LinkModel, kind: FabricKind) -> Self {
+        Self { link, kind }
+    }
+
+    /// Dedicated cable per cut — the uniform-link model.
+    pub fn point_to_point(link: LinkModel) -> Self {
+        Self::new(link, FabricKind::PointToPoint)
+    }
+
+    /// Unidirectional ring in board-slot order.
+    pub fn ring(link: LinkModel) -> Self {
+        Self::new(link, FabricKind::Ring)
+    }
+
+    /// Switch fabric: per-board uplinks of `link`'s shape sharing
+    /// `bisection_gbps` GB/s of aggregate switching bandwidth.
+    pub fn star(link: LinkModel, bisection_gbps: f64) -> Self {
+        Self::new(link, FabricKind::Star { bisection_gbps })
+    }
+
+    /// Dedicated link between every board pair.
+    pub fn full_mesh(link: LinkModel) -> Self {
+        Self::new(link, FabricKind::FullMesh)
+    }
+
+    /// Worst-case forward hop count between any producer replica in
+    /// `from` and any consumer replica in `to` on the ring: the span
+    /// from the earliest producer slot to the latest consumer slot.
+    /// Adjacent unreplicated stages give exactly 1 hop.
+    fn ring_hops(&self, from: SlotRun, to: SlotRun) -> usize {
+        to.last().saturating_sub(from.first).max(1)
+    }
+
+    /// Parallel serialization lanes the cut between groups `from` and
+    /// `to` runs over: `min(r_from, r_to)` per-board links on
+    /// p2p/mesh/star, a single boundary link on the ring.
+    pub fn cut_lanes(&self, from: SlotRun, to: SlotRun) -> usize {
+        match self.kind {
+            FabricKind::Ring => 1,
+            _ => from.len.min(to.len).max(1),
+        }
+    }
+
+    /// Steady-state frame-rate ceiling of one cut: lanes × per-lane
+    /// serialization rate. Bit-exactly [`LinkModel::fan_throughput_fps`]
+    /// on `PointToPoint`/`FullMesh`.
+    pub fn cut_throughput_fps(&self, bytes: f64, from: SlotRun, to: SlotRun) -> f64 {
+        match self.kind {
+            FabricKind::PointToPoint | FabricKind::FullMesh | FabricKind::Star { .. } => {
+                self.link.fan_throughput_fps(bytes, from.len, to.len)
+            }
+            FabricKind::Ring => self.link.throughput_fps(bytes),
+        }
+    }
+
+    /// Single-frame cost of crossing one cut (adds to frame latency):
+    /// hop latency plus serialization, per fabric. Bit-exactly
+    /// [`LinkModel::transfer_s`] on `PointToPoint`/`FullMesh`; the ring
+    /// pays one hop latency per slot crossed; the star pays two serdes
+    /// traversals plus store-and-forward through the switch.
+    pub fn cut_transfer_s(&self, bytes: f64, from: SlotRun, to: SlotRun) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let ser = bytes / self.link.bandwidth_bytes().max(1.0);
+        match self.kind {
+            FabricKind::PointToPoint | FabricKind::FullMesh => self.link.transfer_s(bytes),
+            FabricKind::Ring => self.ring_hops(from, to) as f64 * self.link.latency_s + ser,
+            FabricKind::Star { bisection_gbps } => {
+                2.0 * self.link.latency_s + ser + bytes / (bisection_gbps * 1e9).max(1.0)
+            }
+        }
+    }
+
+    /// Single-frame latency of crossing one cut as the ring simulator
+    /// charges it *after* serialization (the pure-delay part of
+    /// [`Self::cut_transfer_s`]).
+    pub fn cut_hop_s(&self, from: SlotRun, to: SlotRun) -> f64 {
+        match self.kind {
+            FabricKind::PointToPoint | FabricKind::FullMesh => self.link.latency_s,
+            FabricKind::Ring => self.ring_hops(from, to) as f64 * self.link.latency_s,
+            FabricKind::Star { .. } => 2.0 * self.link.latency_s,
+        }
+    }
+
+    /// Aggregate switching bandwidth shared by all concurrent cut
+    /// traffic, bytes/second — `Some` only on a switch fabric.
+    pub fn fabric_bytes_per_s(&self) -> Option<f64> {
+        match self.kind {
+            FabricKind::Star { bisection_gbps } => Some((bisection_gbps * 1e9).max(1.0)),
+            _ => None,
+        }
+    }
+
+    /// Whether a shared-fabric ceiling applies (switch fabrics only).
+    pub fn has_fabric(&self) -> bool {
+        self.fabric_bytes_per_s().is_some()
+    }
+
+    /// Steady-state ceiling the shared fabric imposes when every cut of
+    /// a plan carries the same frame rate and `total_cut_bytes` is the
+    /// sum of bytes crossing the switch per frame: `bisection / Σ`.
+    /// Unbounded on fabrics without shared switching (and for plans
+    /// with no cut traffic) — `min`-ing it in is then a no-op.
+    pub fn fabric_fps(&self, total_cut_bytes: f64) -> f64 {
+        match self.fabric_bytes_per_s() {
+            Some(b) if total_cut_bytes > 0.0 => b / total_cut_bytes,
+            _ => f64::INFINITY,
+        }
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Self::point_to_point(LinkModel::default())
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} over {}", self.kind, self.link)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkModel {
+        LinkModel::new(10.0, 2e-6)
+    }
+
+    fn run(first: usize, len: usize) -> SlotRun {
+        SlotRun::new(first, len)
+    }
+
+    #[test]
+    fn parse_round_trips_the_catalogue() {
+        assert_eq!(FabricKind::parse("p2p").unwrap(), FabricKind::PointToPoint);
+        assert_eq!(FabricKind::parse("ring").unwrap(), FabricKind::Ring);
+        assert_eq!(FabricKind::parse("mesh").unwrap(), FabricKind::FullMesh);
+        assert_eq!(
+            FabricKind::parse("star:8").unwrap(),
+            FabricKind::Star { bisection_gbps: 8.0 }
+        );
+        assert!(FabricKind::parse("star:-1").is_err());
+        assert!(FabricKind::parse("star:x").is_err());
+        assert!(FabricKind::parse("torus").is_err());
+        for s in ["p2p", "ring", "mesh", "star:8"] {
+            assert_eq!(format!("{}", FabricKind::parse(s).unwrap()), s);
+        }
+    }
+
+    #[test]
+    fn p2p_and_mesh_reduce_to_the_uniform_link_bitwise() {
+        let l = link();
+        for topo in [Topology::point_to_point(l), Topology::full_mesh(l)] {
+            for (rf, rt) in [(1, 1), (1, 3), (2, 2), (4, 2)] {
+                let f = run(0, rf);
+                let t = run(rf, rt);
+                assert_eq!(
+                    topo.cut_throughput_fps(1e6, f, t).to_bits(),
+                    l.fan_throughput_fps(1e6, rf, rt).to_bits()
+                );
+                assert_eq!(
+                    topo.cut_transfer_s(1e6, f, t).to_bits(),
+                    l.transfer_s(1e6).to_bits()
+                );
+                assert_eq!(topo.cut_lanes(f, t), rf.min(rt));
+            }
+            assert_eq!(topo.fabric_fps(1e9), f64::INFINITY);
+            assert!(!topo.has_fabric());
+        }
+    }
+
+    #[test]
+    fn ring_keeps_one_lane_and_scales_hops_with_span() {
+        let topo = Topology::ring(link());
+        // Unreplicated adjacent stages: identical to p2p.
+        let p2p = Topology::point_to_point(link());
+        let a = run(0, 1);
+        let b = run(1, 1);
+        assert_eq!(
+            topo.cut_throughput_fps(1e6, a, b).to_bits(),
+            p2p.cut_throughput_fps(1e6, a, b).to_bits()
+        );
+        assert_eq!(
+            topo.cut_transfer_s(1e6, a, b).to_bits(),
+            p2p.cut_transfer_s(1e6, a, b).to_bits()
+        );
+        // A 2->2 fan: p2p gets 2 lanes, the ring still 1 — all traffic
+        // crosses the single boundary segment.
+        let f = run(0, 2);
+        let t = run(2, 2);
+        assert_eq!(topo.cut_lanes(f, t), 1);
+        assert_eq!(
+            topo.cut_throughput_fps(1e6, f, t),
+            0.5 * p2p.cut_throughput_fps(1e6, f, t)
+        );
+        // Worst-case span 0..3 = 3 hops of latency.
+        let hop3 = topo.cut_transfer_s(1e6, f, t) - 1e6 / link().bandwidth_bytes();
+        assert!((hop3 - 3.0 * link().latency_s).abs() < 1e-15, "{hop3}");
+    }
+
+    #[test]
+    fn star_caps_the_sum_of_cut_traffic() {
+        let topo = Topology::star(link(), 2.0); // 2 GB/s switch
+        assert!(topo.has_fabric());
+        // Per-cut lanes behave like per-board uplinks.
+        assert_eq!(topo.cut_lanes(run(0, 2), run(2, 3)), 2);
+        // The fabric ceiling divides bisection by total bytes...
+        assert!((topo.fabric_fps(2e6) - 1000.0).abs() < 1e-9);
+        // ...is monotone in traffic...
+        assert!(topo.fabric_fps(4e6) < topo.fabric_fps(2e6));
+        // ...and never binds with no cut traffic.
+        assert_eq!(topo.fabric_fps(0.0), f64::INFINITY);
+        // Transfer pays two serdes hops plus switch store-and-forward.
+        let t = topo.cut_transfer_s(1e6, run(0, 1), run(1, 1));
+        let expect = 2.0 * link().latency_s + 1e6 / link().bandwidth_bytes() + 1e6 / 2e9;
+        assert!((t - expect).abs() < 1e-15, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn zero_byte_cuts_cost_nothing_everywhere() {
+        for topo in [
+            Topology::point_to_point(link()),
+            Topology::ring(link()),
+            Topology::star(link(), 1.0),
+            Topology::full_mesh(link()),
+        ] {
+            assert_eq!(topo.cut_transfer_s(0.0, run(0, 1), run(1, 1)), 0.0);
+            assert!(topo.cut_throughput_fps(0.0, run(0, 1), run(1, 1)).is_infinite());
+        }
+    }
+}

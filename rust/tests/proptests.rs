@@ -962,6 +962,153 @@ fn prop_reorder_buffer_exactly_once_in_order() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Topology invariants (topo subsystem).
+
+/// Random chain shape for the closed-form topology checks: 1–5 stages
+/// with replica widths 1–4, positive rates/latencies, random cut bytes.
+fn arb_chain(
+    r: &mut Rng,
+) -> (
+    Vec<dnnexplorer::perfmodel::interleave::StageRate>,
+    Vec<f64>,
+    dnnexplorer::perfmodel::link::LinkModel,
+) {
+    use dnnexplorer::perfmodel::interleave::StageRate;
+    use dnnexplorer::perfmodel::link::LinkModel;
+    let stages: Vec<StageRate> = (0..1 + r.gen_index(5))
+        .map(|_| {
+            StageRate::new(
+                1 + r.gen_index(4),
+                r.gen_range(10.0, 5000.0),
+                r.gen_range(1e-5, 1e-2),
+            )
+        })
+        .collect();
+    let cuts: Vec<f64> = (0..stages.len() - 1)
+        .map(|_| if r.gen_index(8) == 0 { 0.0 } else { r.gen_range(1e2, 1e7) })
+        .collect();
+    let link = LinkModel::new(r.gen_range(0.001, 20.0), r.gen_range(1e-7, 1e-4));
+    (stages, cuts, link)
+}
+
+#[test]
+fn prop_p2p_and_mesh_topologies_reduce_to_uniform_link_bitwise() {
+    use dnnexplorer::perfmodel::interleave;
+    use dnnexplorer::topo::Topology;
+
+    check(
+        "p2p/mesh closed forms == uniform LinkModel path, bit-for-bit",
+        241,
+        200,
+        arb_chain,
+        |(stages, cuts, link)| {
+            let uniform_fps = interleave::steady_state_fps(stages, link, cuts);
+            let uniform_lat = interleave::frame_latency_s(stages, link, cuts);
+            for topo in [Topology::point_to_point(*link), Topology::full_mesh(*link)] {
+                let slots = interleave::chain_slots(stages);
+                let fps = interleave::steady_state_fps_on(&topo, stages, &slots, cuts);
+                if fps.to_bits() != uniform_fps.to_bits() {
+                    return Err(format!("fps {fps} != uniform {uniform_fps} on {topo}"));
+                }
+                let lat = interleave::frame_latency_s_on(&topo, stages, &slots, cuts);
+                if lat.to_bits() != uniform_lat.to_bits() {
+                    return Err(format!("latency {lat} != uniform {uniform_lat} on {topo}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fabric_contention_is_monotone() {
+    use dnnexplorer::perfmodel::interleave;
+    use dnnexplorer::topo::Topology;
+
+    check(
+        "adding concurrent cut traffic never raises any cut's throughput",
+        251,
+        200,
+        |r| {
+            let (stages, cuts, link) = arb_chain(r);
+            let bisection = r.gen_range(0.0001, 2.0);
+            let cut_idx = if cuts.is_empty() { 0 } else { r.gen_index(cuts.len()) };
+            let extra = r.gen_range(1.0, 1e7);
+            (stages, cuts, link, bisection, cut_idx, extra)
+        },
+        |(stages, cuts, link, bisection, cut_idx, extra)| {
+            let topo = Topology::star(*link, *bisection);
+            // The raw fabric ceiling is non-increasing in total traffic.
+            let base: f64 = cuts.iter().sum();
+            if topo.fabric_fps(base + *extra) > topo.fabric_fps(base) {
+                return Err("fabric_fps rose with more traffic".into());
+            }
+            if cuts.is_empty() {
+                return Ok(());
+            }
+            // Inflating any one cut never raises end-to-end throughput.
+            let slots = interleave::chain_slots(stages);
+            let before = interleave::steady_state_fps_on(&topo, stages, &slots, cuts);
+            let mut fatter = cuts.clone();
+            fatter[*cut_idx] += *extra;
+            let after = interleave::steady_state_fps_on(&topo, stages, &slots, &fatter);
+            if after > before {
+                return Err(format!("throughput rose {before} -> {after} with fatter cut"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_on_p2p_and_mesh_is_bit_identical() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::partition;
+    use dnnexplorer::topo::FabricKind;
+
+    check(
+        "the planner is fabric-blind between p2p and mesh (both dedicated)",
+        257,
+        5,
+        arb_small_net,
+        |net| {
+            let devices = vec![FpgaDevice::ku115(), FpgaDevice::ku115()];
+            let base = partition(net, &devices, &prop_shard_cfg(), &EvalCache::new());
+            let mut cfg = prop_shard_cfg();
+            cfg.fabric = FabricKind::FullMesh;
+            let mesh = partition(net, &devices, &cfg, &EvalCache::new());
+            match (base, mesh) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    if a.throughput_fps.to_bits() != b.throughput_fps.to_bits()
+                        || a.latency_s.to_bits() != b.latency_s.to_bits()
+                    {
+                        return Err(format!(
+                            "mesh diverged: {} vs {} fps",
+                            b.throughput_fps, a.throughput_fps
+                        ));
+                    }
+                    for (x, y) in a.stages.iter().zip(&b.stages) {
+                        if x.layer_range != y.layer_range
+                            || x.boards != y.boards
+                            || x.candidate.rav != y.candidate.rav
+                        {
+                            return Err("plan structure diverged between p2p and mesh".into());
+                        }
+                    }
+                    Ok(())
+                }
+                (a, b) => Err(format!(
+                    "feasibility disagrees: p2p {:?} vs mesh {:?}",
+                    a.is_some(),
+                    b.is_some()
+                )),
+            }
+        },
+    );
+}
+
 #[test]
 fn prop_one_board_shard_equals_single_fpga_model() {
     use dnnexplorer::dse::EvalCache;

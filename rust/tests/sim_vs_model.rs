@@ -2,12 +2,15 @@
 //! (`perfmodel::interleave`), the discrete-event shard simulator
 //! (`sim::shard`), and the live coordinator (`ShardedPipeline`) must
 //! agree on steady-state throughput for every plan shape — 1-board,
-//! contiguous 2/4-board, and replicated stages.
+//! contiguous 2/4-board, replicated stages — and every fabric (p2p,
+//! ring, star).
 //!
-//! The acceptance bar rides along: on a bottleneck-heavy network over
+//! Two acceptance bars ride along: on a bottleneck-heavy network over
 //! 4x ZCU102, the best replicated plan strictly beats the best
-//! contiguous plan in modeled GOP/s, and all three layers agree on it
-//! within tolerance.
+//! contiguous plan in modeled GOP/s; and on a star fabric whose
+//! bisection bandwidth sits below the cut demand, the topology-aware
+//! planner strictly beats the topology-blind plan evaluated on the same
+//! fabric — in both the model and the simulator.
 
 use std::time::{Duration, Instant};
 
@@ -16,13 +19,14 @@ use dnnexplorer::coordinator::{BatcherConfig, QueueConfig, ShardedPipeline, Stag
 use dnnexplorer::dnn::graph::NetworkBuilder;
 use dnnexplorer::dnn::{zoo, Precision, TensorShape};
 use dnnexplorer::dse::cache::EvalCache;
-use dnnexplorer::dse::multi::compare_replication;
+use dnnexplorer::dse::multi::{compare_replication, compare_topology_awareness};
 use dnnexplorer::dse::pso::PsoParams;
 use dnnexplorer::perfmodel::interleave::{self, StageRate};
 use dnnexplorer::perfmodel::link::LinkModel;
 use dnnexplorer::runtime::executable::HostTensor;
 use dnnexplorer::shard::{partition, ShardConfig, ShardPlan};
 use dnnexplorer::sim::shard::{simulate_shard, ShardSimSpec, SimStage};
+use dnnexplorer::topo::{FabricKind, Topology};
 use dnnexplorer::{FpgaDevice, Network};
 
 fn quick_cfg() -> ShardConfig {
@@ -54,20 +58,24 @@ fn rel(a: f64, b: f64) -> f64 {
 
 #[test]
 fn synthetic_grid_sim_matches_model() {
-    let fast = LinkModel::default();
-    let narrow = LinkModel::new(0.002, 1e-6); // 2 MB/s: the cut binds
+    let fast = Topology::point_to_point(LinkModel::default());
+    // 2 MB/s links: the cut binds.
+    let narrow = Topology::point_to_point(LinkModel::new(0.002, 1e-6));
+    let narrow_ring = Topology::ring(LinkModel::new(0.002, 1e-6));
+    // Fast uplinks into a 1 MB/s switch: the shared fabric binds.
+    let tight_star = Topology::star(LinkModel::new(0.02, 1e-6), 0.001);
     let s = |replicas: usize, ms: f64| SimStage { replicas, service_s: ms * 1e-3 };
     let grid: Vec<(&str, ShardSimSpec)> = vec![
-        ("1-board", ShardSimSpec { stages: vec![s(1, 1.0)], link: fast, cut_bytes: vec![] }),
+        ("1-board", ShardSimSpec { stages: vec![s(1, 1.0)], topo: fast, cut_bytes: vec![] }),
         (
             "contiguous-2",
-            ShardSimSpec { stages: vec![s(1, 0.8), s(1, 1.3)], link: fast, cut_bytes: vec![4e4] },
+            ShardSimSpec { stages: vec![s(1, 0.8), s(1, 1.3)], topo: fast, cut_bytes: vec![4e4] },
         ),
         (
             "contiguous-4",
             ShardSimSpec {
                 stages: vec![s(1, 0.5), s(1, 1.1), s(1, 0.7), s(1, 0.9)],
-                link: fast,
+                topo: fast,
                 cut_bytes: vec![4e4, 2e4, 1e4],
             },
         ),
@@ -75,7 +83,7 @@ fn synthetic_grid_sim_matches_model() {
             "replicated-mid",
             ShardSimSpec {
                 stages: vec![s(1, 0.6), s(3, 1.5), s(1, 0.7)],
-                link: fast,
+                topo: fast,
                 cut_bytes: vec![4e4, 4e4],
             },
         ),
@@ -83,26 +91,46 @@ fn synthetic_grid_sim_matches_model() {
             "replicated-head",
             ShardSimSpec {
                 stages: vec![s(2, 1.6), s(1, 0.9)],
-                link: fast,
+                topo: fast,
                 cut_bytes: vec![3e4],
             },
         ),
         (
             "pure-replication",
-            ShardSimSpec { stages: vec![s(4, 2.0)], link: fast, cut_bytes: vec![] },
+            ShardSimSpec { stages: vec![s(4, 2.0)], topo: fast, cut_bytes: vec![] },
         ),
         (
             "link-bound-fan",
             ShardSimSpec {
                 stages: vec![s(2, 0.1), s(2, 0.1)],
-                link: narrow,
+                topo: narrow,
                 cut_bytes: vec![2e3], // 1000 fps/link, 2 lanes
+            },
+        ),
+        (
+            "ring-boundary-fan",
+            ShardSimSpec {
+                stages: vec![s(2, 0.1), s(2, 0.1)],
+                topo: narrow_ring,
+                cut_bytes: vec![2e3], // same fan, single boundary lane
+            },
+        ),
+        (
+            "star-shared-fabric",
+            ShardSimSpec {
+                stages: vec![s(1, 0.1), s(2, 0.15), s(1, 0.1)],
+                topo: tight_star,
+                cut_bytes: vec![1e3, 1e3], // 1e6 / 2e3 = 500 fps fabric
             },
         ),
     ];
     for (name, spec) in grid {
-        let predicted =
-            interleave::steady_state_fps(&spec.stage_rates(), &spec.link, &spec.cut_bytes);
+        let predicted = interleave::steady_state_fps_on(
+            &spec.topo,
+            &spec.stage_rates(),
+            &spec.slot_runs(),
+            &spec.cut_bytes,
+        );
         let sim = simulate_shard(&spec, 600, 100).expect("simulates");
         assert!(
             rel(sim.throughput_fps, predicted) < 0.03,
@@ -121,9 +149,14 @@ fn synthetic_grid_sim_matches_model() {
 
 fn check_plan_against_sim(plan: &ShardPlan, label: &str) {
     // The DP's throughput must equal the closed-form interleave model
-    // bit-for-bit: same mins, same order.
-    let analytic =
-        interleave::steady_state_fps(&plan.stage_rates(), &plan.link, &plan.cut_bytes());
+    // bit-for-bit: same mins, same order — on the plan's own topology.
+    let topo = plan.topo();
+    let analytic = interleave::steady_state_fps_on(
+        &topo,
+        &plan.stage_rates(),
+        &plan.slot_runs(),
+        &plan.cut_bytes(),
+    );
     assert_eq!(
         plan.throughput_fps.to_bits(),
         analytic.to_bits(),
@@ -131,9 +164,20 @@ fn check_plan_against_sim(plan: &ShardPlan, label: &str) {
         plan.throughput_fps,
         analytic
     );
-    let latency =
-        interleave::frame_latency_s(&plan.stage_rates(), &plan.link, &plan.cut_bytes());
+    let latency = interleave::frame_latency_s_on(
+        &topo,
+        &plan.stage_rates(),
+        &plan.slot_runs(),
+        &plan.cut_bytes(),
+    );
     assert_eq!(plan.latency_s.to_bits(), latency.to_bits(), "{label}: latency mismatch");
+    // The p2p topology must also be bit-identical through the legacy
+    // uniform-link closed form (the reduction the proptests pin).
+    if plan.fabric == FabricKind::PointToPoint {
+        let uniform =
+            interleave::steady_state_fps(&plan.stage_rates(), &plan.link, &plan.cut_bytes());
+        assert_eq!(plan.throughput_fps.to_bits(), uniform.to_bits(), "{label}: p2p reduction");
+    }
     // The discrete-event walk of the same plan lands on the same rate.
     let spec = ShardSimSpec::from_plan(plan);
     let sim = simulate_shard(&spec, 600, 100).expect("simulates");
@@ -167,6 +211,33 @@ fn planned_shapes_agree_sim_vs_model() {
     rcfg.max_replicas = 2;
     let rep2 = partition(&net, &quad, &rcfg, &cache).expect("r<=2");
     check_plan_against_sim(&rep2, "replicated-2");
+}
+
+#[test]
+fn planned_shapes_agree_on_ring_and_star() {
+    // The same analytic-vs-DES bar, on non-trivial fabrics: a ring
+    // (single-lane cuts, span-scaled hops) with replication in play,
+    // and a star switch both generous and tight.
+    let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+    let cache = EvalCache::new();
+    let quad = vec![FpgaDevice::zcu102(); 4];
+
+    let mut ring_cfg = quick_cfg();
+    ring_cfg.fabric = FabricKind::Ring;
+    ring_cfg.max_replicas = 2;
+    let ring = partition(&net, &quad, &ring_cfg, &cache).expect("ring feasible");
+    check_plan_against_sim(&ring, "ring-4-boards");
+
+    let mut star_cfg = quick_cfg();
+    star_cfg.fabric = FabricKind::Star { bisection_gbps: 12.0 };
+    let star = partition(&net, &quad, &star_cfg, &cache).expect("star feasible");
+    check_plan_against_sim(&star, "star-generous");
+
+    let mut tight_cfg = quick_cfg();
+    tight_cfg.fabric = FabricKind::Star { bisection_gbps: 0.002 };
+    let tight = partition(&net, &quad, &tight_cfg, &cache).expect("tight star feasible");
+    assert_eq!(tight.bottleneck(), "fabric", "{}", tight.bottleneck());
+    check_plan_against_sim(&tight, "star-tight");
 }
 
 // ---------------------------------------------------------------------
@@ -284,6 +355,89 @@ fn replicated_plan_beats_contiguous_and_all_layers_agree() {
     assert!(
         measured > predicted * 0.6 && measured < predicted * 1.3,
         "live pipeline {measured:.0} fps vs predicted {predicted:.0} fps out of tolerance"
+    );
+}
+
+/// A network whose compute-balanced cut and bytes-minimal cut disagree
+/// hard: the balanced boundary (after the second heavy conv) carries a
+/// 512 KB tensor, while the pooled boundary before the featherweight
+/// tail carries 32 KB. A topology-blind planner cuts for balance; on a
+/// bisection-starved switch that choice costs ~16x.
+fn fat_cut_net() -> Network {
+    NetworkBuilder::new("fat-cut", TensorShape::new(3, 64, 64), Precision::Int16)
+        .conv(64, 3, 1, 1) // light (3 in-channels), 512 KB egress
+        .conv(64, 3, 1, 1) // heavy, 512 KB egress — the balanced cut
+        .conv(64, 3, 1, 1) // heavy, 512 KB egress
+        .conv(16, 3, 1, 1)
+        .pool(2, 2) // pooled egress: 32 KB — the cheap cut
+        .conv(16, 3, 1, 1) // featherweight tail (16ch at 32x32)
+        .build()
+}
+
+#[test]
+fn topology_aware_planner_beats_blind_on_a_starved_star() {
+    // The tentpole acceptance bar: on a star fabric whose bisection
+    // bandwidth sits below the cut demand, the aware planner must pick
+    // a measurably better plan — higher modeled AND simulated fps —
+    // than the blind (p2p-priced) plan evaluated on the same fabric.
+    let net = fat_cut_net();
+    let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+    let cache = EvalCache::new();
+    // 0.5 MB/s of switching: a 512 KB cut sustains ~0.95 fps, the
+    // 32 KB pooled cut ~15 — both far below any stage rate, so the
+    // fabric term governs whichever cut is chosen.
+    let cfg = ShardConfig {
+        fabric: FabricKind::Star { bisection_gbps: 0.0005 },
+        ..quick_cfg()
+    };
+    let outcome = compare_topology_awareness(&net, &devices, &cfg, &cache);
+    let blind = outcome.blind.as_ref().expect("blind feasible");
+    let aware = outcome.aware.as_ref().expect("aware feasible");
+
+    // Both plans are priced on the same star fabric.
+    assert_eq!(blind.fabric, cfg.fabric);
+    assert_eq!(aware.fabric, cfg.fabric);
+    // The aware planner routes less traffic through the switch...
+    let blind_bytes: f64 = blind.cut_bytes().iter().sum();
+    let aware_bytes: f64 = aware.cut_bytes().iter().sum();
+    assert!(
+        aware_bytes < blind_bytes,
+        "aware must cut cheaper: {aware_bytes} vs {blind_bytes} bytes"
+    );
+    // ...and models strictly (comfortably) faster on it. The blind cut
+    // is fabric-bound near 1 fps; the aware plan runs at min(stage
+    // rate, ~15 fps fabric) — an order of magnitude either way.
+    assert!(
+        aware.throughput_fps > blind.throughput_fps * 1.5,
+        "aware {} fps must beat blind {} fps on the starved star",
+        aware.throughput_fps,
+        blind.throughput_fps
+    );
+    assert_eq!(blind.bottleneck(), "fabric", "{}", blind.bottleneck());
+
+    // The simulator confirms the gap: both structures walked on the
+    // same star fabric, the aware plan departs frames strictly faster.
+    let sim_blind =
+        simulate_shard(&ShardSimSpec::from_plan(blind), 600, 100).expect("blind sims");
+    let sim_aware =
+        simulate_shard(&ShardSimSpec::from_plan(aware), 600, 100).expect("aware sims");
+    assert!(
+        rel(sim_blind.throughput_fps, blind.throughput_fps) < 0.05,
+        "blind sim {} vs model {}",
+        sim_blind.throughput_fps,
+        blind.throughput_fps
+    );
+    assert!(
+        rel(sim_aware.throughput_fps, aware.throughput_fps) < 0.05,
+        "aware sim {} vs model {}",
+        sim_aware.throughput_fps,
+        aware.throughput_fps
+    );
+    assert!(
+        sim_aware.throughput_fps > sim_blind.throughput_fps * 1.5,
+        "simulated gap vanished: aware {} vs blind {}",
+        sim_aware.throughput_fps,
+        sim_blind.throughput_fps
     );
 }
 
