@@ -1,0 +1,201 @@
+//! AIMD adaptation of the pipeline's in-flight window.
+//!
+//! `spawn_with_window` caps the reorder buffer with a fixed in-flight
+//! window; picking that number by hand bakes one machine's service
+//! curve into the deployment. [`AimdWindow`] tunes it online from the
+//! observed end-to-end latency: every `epoch` settled frames it
+//! computes the epoch's p99 and applies the classic congestion rule —
+//! **additive increase** while p99 meets the target, **multiplicative
+//! decrease** on a breach. The window converges near the knee of the
+//! latency/throughput curve and re-tracks it when the service rate
+//! shifts (e.g. a replica is ejected).
+//!
+//! Reads are a single atomic load on the submit path; observation
+//! takes a short mutex on the settle path (amortized: the sort only
+//! happens once per epoch).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Tuning for one [`AimdWindow`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AimdConfig {
+    /// p99 latency target; an epoch breaching it shrinks the window.
+    pub target_p99: Duration,
+    pub min_window: usize,
+    pub max_window: usize,
+    /// Starting window.
+    pub initial: usize,
+    /// Samples per adaptation epoch.
+    pub epoch: usize,
+    /// Additive step on a healthy epoch.
+    pub increase: usize,
+    /// Multiplicative factor on a breached epoch (0 < f < 1).
+    pub decrease: f64,
+}
+
+impl Default for AimdConfig {
+    fn default() -> Self {
+        Self {
+            target_p99: Duration::from_millis(50),
+            min_window: 1,
+            max_window: 4096,
+            initial: 16,
+            epoch: 32,
+            increase: 2,
+            decrease: 0.5,
+        }
+    }
+}
+
+/// The adaptive in-flight cap. Shared (`Arc`) between the submit path
+/// (reads [`window`](Self::window)) and the settle path (feeds
+/// [`observe`](Self::observe)).
+#[derive(Debug)]
+pub struct AimdWindow {
+    cfg: AimdConfig,
+    window: AtomicU64,
+    samples: Mutex<Vec<u64>>,
+    epochs: AtomicU64,
+    increases: AtomicU64,
+    decreases: AtomicU64,
+}
+
+impl AimdWindow {
+    pub fn new(cfg: AimdConfig) -> Self {
+        let initial = cfg.initial.clamp(cfg.min_window.max(1), cfg.max_window.max(1));
+        Self {
+            window: AtomicU64::new(initial as u64),
+            samples: Mutex::new(Vec::with_capacity(cfg.epoch.max(1))),
+            epochs: AtomicU64::new(0),
+            increases: AtomicU64::new(0),
+            decreases: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Current in-flight cap (always ≥ 1).
+    pub fn window(&self) -> usize {
+        self.window.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn config(&self) -> &AimdConfig {
+        &self.cfg
+    }
+
+    /// Feed one settled frame's end-to-end latency. At each epoch
+    /// boundary the buffered samples are sorted once, the epoch p99 is
+    /// compared to the target, and the window is adjusted.
+    pub fn observe(&self, latency: Duration) {
+        let epoch = self.cfg.epoch.max(1);
+        let full = {
+            let mut samples = self.samples.lock().unwrap();
+            samples.push(latency.as_micros() as u64);
+            if samples.len() >= epoch {
+                Some(std::mem::take(&mut *samples))
+            } else {
+                None
+            }
+        };
+        let Some(mut batch) = full else { return };
+        batch.sort_unstable();
+        let idx = ((batch.len() - 1) as f64 * 0.99).ceil() as usize;
+        let p99_us = batch[idx.min(batch.len() - 1)];
+        self.epochs.fetch_add(1, Ordering::Relaxed);
+        let current = self.window();
+        let next = if p99_us > self.cfg.target_p99.as_micros() as u64 {
+            self.decreases.fetch_add(1, Ordering::Relaxed);
+            ((current as f64 * self.cfg.decrease).floor() as usize).max(self.cfg.min_window.max(1))
+        } else {
+            self.increases.fetch_add(1, Ordering::Relaxed);
+            (current + self.cfg.increase.max(1)).min(self.cfg.max_window.max(1))
+        };
+        self.window.store(next as u64, Ordering::Relaxed);
+    }
+
+    /// Completed adaptation epochs.
+    pub fn epochs(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
+    pub fn increases(&self) -> u64 {
+        self.increases.load(Ordering::Relaxed)
+    }
+
+    pub fn decreases(&self) -> u64 {
+        self.decreases.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AimdConfig {
+        AimdConfig {
+            target_p99: Duration::from_millis(10),
+            min_window: 1,
+            max_window: 64,
+            initial: 16,
+            epoch: 4,
+            increase: 2,
+            decrease: 0.5,
+        }
+    }
+
+    #[test]
+    fn fast_epochs_grow_the_window_to_the_cap() {
+        let w = AimdWindow::new(cfg());
+        for _ in 0..200 {
+            w.observe(Duration::from_millis(1));
+        }
+        assert_eq!(w.window(), 64, "healthy epochs climb to max_window");
+        assert_eq!(w.epochs(), 50);
+        assert_eq!(w.decreases(), 0);
+    }
+
+    #[test]
+    fn slow_epochs_shrink_multiplicatively_to_the_floor() {
+        let w = AimdWindow::new(cfg());
+        for _ in 0..4 {
+            w.observe(Duration::from_millis(100));
+        }
+        assert_eq!(w.window(), 8, "one breach halves 16 to 8");
+        for _ in 0..64 {
+            w.observe(Duration::from_millis(100));
+        }
+        assert_eq!(w.window(), 1, "sustained breach bottoms at min_window");
+        assert!(w.decreases() >= 5);
+        assert_eq!(w.increases(), 0);
+    }
+
+    #[test]
+    fn one_slow_tail_sample_breaches_the_epoch_p99() {
+        // 3 fast + 1 slow in a 4-sample epoch: p99 is the slow one.
+        let w = AimdWindow::new(cfg());
+        for _ in 0..3 {
+            w.observe(Duration::from_millis(1));
+        }
+        w.observe(Duration::from_millis(500));
+        assert_eq!(w.window(), 8, "tail latency drives the decision");
+    }
+
+    #[test]
+    fn partial_epochs_leave_the_window_untouched() {
+        let w = AimdWindow::new(cfg());
+        for _ in 0..3 {
+            w.observe(Duration::from_millis(100));
+        }
+        assert_eq!(w.window(), 16);
+        assert_eq!(w.epochs(), 0);
+    }
+
+    #[test]
+    fn initial_window_is_clamped_into_bounds() {
+        let w = AimdWindow::new(AimdConfig { initial: 1000, max_window: 32, ..cfg() });
+        assert_eq!(w.window(), 32);
+        let w = AimdWindow::new(AimdConfig { initial: 0, min_window: 2, ..cfg() });
+        assert_eq!(w.window(), 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Content-keyed dedup/coalescing of identical in-flight frames.
+//!
+//! Retry storms and fan-in traffic frequently put byte-identical
+//! frames in flight at once; running each through the pipeline buys
+//! nothing. The coalescer keys every frame by an FNV-1a hash of its
+//! shape and exact f32 bit patterns. The first frame with a given key
+//! becomes the **primary** and actually enters the pipeline; any frame
+//! arriving while the primary is still in flight is **coalesced** — its
+//! response channel is parked under the key and the primary's
+//! completion fans out to every waiter.
+//!
+//! Invariant: one primary per entry lifetime. [`admit`](
+//! DedupCoalescer::admit) inserts the entry and [`take`](
+//! DedupCoalescer::take) removes it under the same lock, so a key
+//! re-submitted after completion simply starts a new entry. Coalesced
+//! requests still count into `requests` (and settle as ok/error at
+//! fan-out), so the reconciliation invariant is unaffected.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::queue::ServeError;
+use crate::runtime::executable::HostTensor;
+
+/// A parked duplicate: where to send the fanned-out result, plus the
+/// bookkeeping to settle it under the right tenant with its own
+/// queue-time latency.
+#[derive(Debug)]
+pub struct Waiter {
+    pub respond: SyncSender<Result<HostTensor, ServeError>>,
+    pub entered: Instant,
+    pub tenant: usize,
+}
+
+/// Outcome of [`DedupCoalescer::admit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// First in-flight frame with this key: caller must run it (and
+    /// eventually [`take`](DedupCoalescer::take) + fan out).
+    Primary,
+    /// Identical frame already in flight: the waiter was parked; the
+    /// caller is done.
+    Coalesced,
+}
+
+/// In-flight table of content keys → parked duplicate waiters.
+#[derive(Debug, Default)]
+pub struct DedupCoalescer {
+    inflight: Mutex<HashMap<u64, Vec<Waiter>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// FNV-1a over the tensor's shape then the exact bit patterns of its
+/// data. Bit-exact: `-0.0` vs `0.0` or different NaN payloads are
+/// distinct keys, which errs on the side of not coalescing.
+pub fn key_of(t: &HostTensor) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut eat = |word: u64| {
+        for byte in word.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for &d in &t.shape {
+        eat(d as u64);
+    }
+    for &v in &t.data {
+        eat(v.to_bits() as u64);
+    }
+    h
+}
+
+impl DedupCoalescer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a frame under `key`. If an identical frame is already in
+    /// flight the waiter built by `waiter` is parked and `Coalesced`
+    /// is returned; otherwise a fresh entry is opened and the caller
+    /// owns the `Primary`.
+    pub fn admit(&self, key: u64, waiter: impl FnOnce() -> Waiter) -> Admission {
+        let mut inflight = self.inflight.lock().unwrap();
+        match inflight.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().push(waiter());
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Admission::Coalesced
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(Vec::new());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Admission::Primary
+            }
+        }
+    }
+
+    /// Close the entry for `key`, returning every parked waiter for
+    /// fan-out (completion or abort). The key is free for a new
+    /// primary from this point on.
+    pub fn take(&self, key: u64) -> Vec<Waiter> {
+        self.inflight.lock().unwrap().remove(&key).unwrap_or_default()
+    }
+
+    /// Frames coalesced onto an in-flight primary.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Frames that became primaries.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn waiter() -> (Waiter, std::sync::mpsc::Receiver<Result<HostTensor, ServeError>>) {
+        let (respond, rx) = sync_channel(1);
+        (Waiter { respond, entered: Instant::now(), tenant: 0 }, rx)
+    }
+
+    #[test]
+    fn key_is_content_not_identity() {
+        let a = HostTensor::new(vec![1.0, 2.0], vec![2]).unwrap();
+        let b = HostTensor::new(vec![1.0, 2.0], vec![2]).unwrap();
+        let c = HostTensor::new(vec![1.0, 2.5], vec![2]).unwrap();
+        assert_eq!(key_of(&a), key_of(&b));
+        assert_ne!(key_of(&a), key_of(&c));
+    }
+
+    #[test]
+    fn shape_participates_in_the_key() {
+        let flat = HostTensor::new(vec![1.0, 2.0], vec![2]).unwrap();
+        let col = HostTensor::new(vec![1.0, 2.0], vec![2, 1]).unwrap();
+        assert_ne!(key_of(&flat), key_of(&col));
+    }
+
+    #[test]
+    fn second_admit_coalesces_and_take_fans_out() {
+        let d = DedupCoalescer::new();
+        let key = 42;
+        assert_eq!(d.admit(key, || unreachable!("primary parks no waiter")), Admission::Primary);
+        let (w, rx) = waiter();
+        assert_eq!(d.admit(key, || w), Admission::Coalesced);
+        assert_eq!((d.hits(), d.misses()), (1, 1));
+        let waiters = d.take(key);
+        assert_eq!(waiters.len(), 1);
+        for w in waiters {
+            w.respond.send(Ok(HostTensor::zeros(&[1]))).unwrap();
+        }
+        assert!(rx.try_recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn taken_key_starts_a_fresh_entry() {
+        let d = DedupCoalescer::new();
+        assert_eq!(d.admit(7, || unreachable!()), Admission::Primary);
+        assert!(d.take(7).is_empty());
+        assert_eq!(d.admit(7, || unreachable!()), Admission::Primary, "entry lifetime ended");
+        assert_eq!(d.misses(), 2);
+    }
+}

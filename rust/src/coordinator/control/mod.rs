@@ -1,0 +1,57 @@
+//! Fleet-scale serving control plane over the sharded pipeline.
+//!
+//! Four mechanisms, each usable on its own and wired together by
+//! [`crate::coordinator::ShardedPipeline::spawn_with_control`]:
+//!
+//! * [`registry`] — heartbeat-driven replica health: stale boards are
+//!   ejected from the round-robin interleave set and readmitted when
+//!   their beats resume.
+//! * [`quota`] — per-tenant QoS classes (priority bands, weighted-fair
+//!   shares, resident quotas) plus per-tenant metrics blocks.
+//! * [`dedup`] — content-keyed coalescing of identical in-flight
+//!   frames with completion fan-out.
+//! * [`aimd`] — additive-increase/multiplicative-decrease adaptation
+//!   of the in-flight window from observed p99 latency.
+//!
+//! [`ControlConfig`] bundles the per-pipeline selections.
+
+pub mod aimd;
+pub mod dedup;
+pub mod quota;
+pub mod registry;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use aimd::{AimdConfig, AimdWindow};
+pub use dedup::{key_of, Admission, DedupCoalescer, Waiter};
+pub use quota::{QosClass, TenantId, TenantTable};
+pub use registry::ReplicaRegistry;
+
+/// How the pipeline caps in-flight frames.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum WindowPolicy {
+    /// No cap (reorder buffer bounded only by admission).
+    #[default]
+    None,
+    /// Hand-picked fixed cap (the old `spawn_with_window` behavior).
+    Fixed(usize),
+    /// AIMD-tuned cap driven by observed p99.
+    Aimd(AimdConfig),
+}
+
+/// Control-plane selections for one pipeline. `Default` turns
+/// everything off, which reproduces the plain `spawn` behavior.
+#[derive(Debug, Clone, Default)]
+pub struct ControlConfig {
+    /// Tenant classes; `None` = single implicit class, no per-tenant
+    /// scheduling or accounting.
+    pub tenants: Option<Arc<TenantTable>>,
+    /// Liveness timeout for the replica registry; `None` = no
+    /// heartbeat tracking (all replicas always live).
+    pub heartbeat_timeout: Option<Duration>,
+    /// Coalesce identical in-flight frames.
+    pub dedup: bool,
+    /// In-flight window policy.
+    pub window: WindowPolicy,
+}

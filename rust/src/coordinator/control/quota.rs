@@ -1,0 +1,213 @@
+//! Per-tenant QoS: classes, weights, priority bands, and resident
+//! quotas, plus the per-tenant metrics blocks the scrape endpoint
+//! exposes.
+//!
+//! A [`TenantTable`] is shared between the admission queue (which uses
+//! the classes to schedule pops) and whoever does the per-tenant
+//! accounting (the queue itself for a single server/router, the
+//! pipeline front + settle path for [`crate::coordinator::
+//! ShardedPipeline`]). Each class gets its own [`Metrics`] block, so
+//! the reconciliation invariant `requests == ok_frames + errors + shed`
+//! is pinned *per tenant* as well as globally.
+//!
+//! Scheduling semantics (implemented by the queue):
+//!
+//! * **Bands** are strict priorities: a lower band number is served
+//!   first whenever it has a resident request, and under a `Reject`
+//!   policy a full queue admits a better-band newcomer by evicting the
+//!   oldest waiter of the worst resident band.
+//! * **Weights** are weighted-fair shares *within* a band (stride
+//!   scheduling: each pop advances the tenant's virtual pass by
+//!   `1/weight`, and the lowest pass goes next).
+//! * **Quotas** cap one tenant's resident requests regardless of global
+//!   capacity, so a single tenant cannot monopolize the queue.
+//!
+//! The scrape endpoint renders each class as a `dnnx_tenant_*` series
+//! labelled `tenant="<name>"` (see
+//! [`crate::coordinator::ShardedPipeline::prometheus_text`]).
+
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+
+/// Tenant identifier: an index into the [`TenantTable`]. Out-of-range
+/// ids clamp to the last class, so a missing table degenerates to one
+/// shared class.
+pub type TenantId = usize;
+
+/// One QoS class: a named tenant tier with scheduling parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosClass {
+    pub name: String,
+    /// Weighted-fair share within the band (higher = more pops).
+    /// Clamped to a small positive floor.
+    pub weight: f64,
+    /// Strict priority band; **lower is higher priority**.
+    pub band: u8,
+    /// Cap on this tenant's resident requests in one admission queue
+    /// (`None` = bounded only by the global capacity).
+    pub quota: Option<usize>,
+}
+
+impl QosClass {
+    pub fn new(name: impl Into<String>, weight: f64, band: u8, quota: Option<usize>) -> Self {
+        Self { name: name.into(), weight: weight.max(1e-6), band, quota }
+    }
+}
+
+/// The fleet's tenant classes plus one [`Metrics`] block per class.
+#[derive(Debug)]
+pub struct TenantTable {
+    classes: Vec<QosClass>,
+    metrics: Vec<Arc<Metrics>>,
+}
+
+impl TenantTable {
+    pub fn new(classes: Vec<QosClass>) -> Self {
+        assert!(!classes.is_empty(), "a tenant table needs at least one class");
+        let metrics = classes.iter().map(|_| Arc::new(Metrics::new())).collect();
+        Self { classes, metrics }
+    }
+
+    /// `n` tiers `t0..t{n-1}`: class `i` gets weight `n-i` and band `i`,
+    /// so `t0` is the paid/priority tier and `t{n-1}` the free tier —
+    /// the shape the `serve-bench --tenants N` smoke asserts
+    /// (differential shed under overload).
+    pub fn tiered(n: usize) -> Self {
+        let n = n.max(1);
+        Self::new(
+            (0..n)
+                .map(|i| QosClass::new(format!("t{i}"), (n - i) as f64, i as u8, None))
+                .collect(),
+        )
+    }
+
+    /// Parse a `--tenants` spec. Either an integer (`3` →
+    /// [`Self::tiered`]) or a comma list of `name:weight[:band[:quota]]`
+    /// entries, e.g. `gold:3,bronze:1` or `paid:4:0:64,free:1:1:16`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        if let Ok(n) = spec.trim().parse::<usize>() {
+            anyhow::ensure!(n >= 1, "--tenants needs at least one class");
+            return Ok(Self::tiered(n));
+        }
+        let mut classes = Vec::new();
+        for entry in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let parts: Vec<&str> = entry.trim().split(':').collect();
+            anyhow::ensure!(
+                (2..=4).contains(&parts.len()),
+                "tenant entry {entry:?} is not name:weight[:band[:quota]]"
+            );
+            let weight: f64 = parts[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad weight in tenant entry {entry:?}"))?;
+            anyhow::ensure!(weight > 0.0, "tenant {entry:?} needs a positive weight");
+            let band: u8 = match parts.get(2) {
+                Some(b) => b
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad band in tenant entry {entry:?}"))?,
+                None => 0,
+            };
+            let quota = match parts.get(3) {
+                Some(q) => Some(
+                    q.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad quota in tenant entry {entry:?}"))?,
+                ),
+                None => None,
+            };
+            classes.push(QosClass::new(parts[0], weight, band, quota));
+        }
+        anyhow::ensure!(!classes.is_empty(), "empty tenant spec");
+        Ok(Self::new(classes))
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // constructor guarantees at least one class
+    }
+
+    /// Clamp an id into range (unknown tenants land in the last class).
+    pub fn clamp(&self, t: TenantId) -> TenantId {
+        t.min(self.classes.len() - 1)
+    }
+
+    pub fn class(&self, t: TenantId) -> &QosClass {
+        &self.classes[self.clamp(t)]
+    }
+
+    pub fn classes(&self) -> &[QosClass] {
+        &self.classes
+    }
+
+    /// The per-tenant metrics block (reconciles exactly per tenant).
+    pub fn metrics(&self, t: TenantId) -> &Arc<Metrics> {
+        &self.metrics[self.clamp(t)]
+    }
+
+    /// One-line per-tenant accounting summary for logs.
+    pub fn summary(&self) -> String {
+        use std::sync::atomic::Ordering;
+        self.classes
+            .iter()
+            .zip(&self.metrics)
+            .map(|(c, m)| {
+                format!(
+                    "{}[w={} b={}]: req={} ok={} err={} shed={}",
+                    c.name,
+                    c.weight,
+                    c.band,
+                    m.requests.load(Ordering::Relaxed),
+                    m.ok_frames.load(Ordering::Relaxed),
+                    m.errors.load(Ordering::Relaxed),
+                    m.shed.load(Ordering::Relaxed),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_spec_builds_tiers() {
+        let t = TenantTable::parse("3").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.class(0).weight, 3.0);
+        assert_eq!(t.class(0).band, 0);
+        assert_eq!(t.class(2).weight, 1.0);
+        assert_eq!(t.class(2).band, 2);
+    }
+
+    #[test]
+    fn named_spec_parses_all_fields() {
+        let t = TenantTable::parse("gold:3,free:1:2:16").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.class(0).name, "gold");
+        assert_eq!(t.class(0).band, 0);
+        assert_eq!(t.class(0).quota, None);
+        assert_eq!(t.class(1).band, 2);
+        assert_eq!(t.class(1).quota, Some(16));
+    }
+
+    #[test]
+    fn out_of_range_tenants_clamp() {
+        let t = TenantTable::tiered(2);
+        assert_eq!(t.clamp(7), 1);
+        assert_eq!(t.class(7).name, "t1");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(TenantTable::parse("").is_err());
+        assert!(TenantTable::parse("0").is_err());
+        assert!(TenantTable::parse("solo").is_err());
+        assert!(TenantTable::parse("a:nope").is_err());
+        assert!(TenantTable::parse("a:-1").is_err());
+        assert!(TenantTable::parse("a:1:2:3:4").is_err());
+    }
+}

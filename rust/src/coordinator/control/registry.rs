@@ -1,0 +1,217 @@
+//! Board/replica registry with heartbeat-driven health.
+//!
+//! Every stage replica in a [`crate::coordinator::ShardedPipeline`] has
+//! a slot here. Boards (or the in-process harness standing in for them)
+//! post heartbeats; dispatch asks for the **live set** of a stage and
+//! round-robins over that instead of the full replica list. A replica
+//! whose last beat is older than the liveness timeout is *ejected* from
+//! the interleave set; a later beat *readmits* it. This replaces
+//! one-shot sibling failover as the only degradation mode: failover
+//! still rescues the occasional refused frame, but a dead board stops
+//! receiving traffic entirely until it proves itself alive again.
+//!
+//! Concurrency contract: [`heartbeat`](ReplicaRegistry::heartbeat) is
+//! store-only (cheap enough for a per-request path). All
+//! eject/readmit *transitions* — and their counters — happen inside
+//! [`live_replicas`](ReplicaRegistry::live_replicas) via an atomic
+//! swap, so each transition is counted exactly once no matter how many
+//! threads observe it concurrently.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct ReplicaHealth {
+    /// Nanoseconds since the registry epoch of the most recent beat.
+    last_beat_ns: AtomicU64,
+    ejected: AtomicBool,
+}
+
+/// Heartbeat-driven liveness for every `(stage, replica)` slot.
+#[derive(Debug)]
+pub struct ReplicaRegistry {
+    epoch: Instant,
+    timeout: Duration,
+    stages: Vec<Vec<ReplicaHealth>>,
+    ejections: AtomicU64,
+    readmissions: AtomicU64,
+}
+
+impl ReplicaRegistry {
+    /// All replicas start live with a beat stamped at construction.
+    pub fn new(replicas_per_stage: &[usize], timeout: Duration) -> Self {
+        Self {
+            epoch: Instant::now(),
+            timeout,
+            stages: replicas_per_stage
+                .iter()
+                .map(|&n| {
+                    (0..n)
+                        .map(|_| ReplicaHealth {
+                            last_beat_ns: AtomicU64::new(0),
+                            ejected: AtomicBool::new(false),
+                        })
+                        .collect()
+                })
+                .collect(),
+            ejections: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+        }
+    }
+
+    fn ns_since_epoch(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Record a beat for one replica (store-only; never transitions).
+    pub fn heartbeat(&self, stage: usize, replica: usize) {
+        self.heartbeat_at(stage, replica, Instant::now());
+    }
+
+    /// [`heartbeat`](Self::heartbeat) with an explicit clock, for
+    /// deterministic tests.
+    pub fn heartbeat_at(&self, stage: usize, replica: usize, now: Instant) {
+        if let Some(h) = self.stages.get(stage).and_then(|s| s.get(replica)) {
+            h.last_beat_ns.fetch_max(self.ns_since_epoch(now), Ordering::Relaxed);
+        }
+    }
+
+    /// Beat every slot at once (harness convenience).
+    pub fn heartbeat_all(&self) {
+        let now = Instant::now();
+        for (s, replicas) in self.stages.iter().enumerate() {
+            for r in 0..replicas.len() {
+                self.heartbeat_at(s, r, now);
+            }
+        }
+    }
+
+    /// The live replica indices for a stage, applying any pending
+    /// eject/readmit transitions. Never empty for a non-empty stage:
+    /// if every replica is stale the full set is returned as a
+    /// fallback (shedding everything because heartbeats lapsed
+    /// fleet-wide would be strictly worse than trying).
+    pub fn live_replicas(&self, stage: usize) -> Vec<usize> {
+        self.live_replicas_at(stage, Instant::now())
+    }
+
+    /// [`live_replicas`](Self::live_replicas) with an explicit clock.
+    pub fn live_replicas_at(&self, stage: usize, now: Instant) -> Vec<usize> {
+        let Some(replicas) = self.stages.get(stage) else {
+            return Vec::new();
+        };
+        let now_ns = self.ns_since_epoch(now);
+        let horizon = now_ns.saturating_sub(self.timeout.as_nanos() as u64);
+        let mut live = Vec::with_capacity(replicas.len());
+        for (i, h) in replicas.iter().enumerate() {
+            let fresh = h.last_beat_ns.load(Ordering::Relaxed) >= horizon;
+            if fresh {
+                if h.ejected.swap(false, Ordering::Relaxed) {
+                    self.readmissions.fetch_add(1, Ordering::Relaxed);
+                }
+                live.push(i);
+            } else if !h.ejected.swap(true, Ordering::Relaxed) {
+                self.ejections.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if live.is_empty() {
+            (0..replicas.len()).collect()
+        } else {
+            live
+        }
+    }
+
+    /// Whether a slot is currently marked ejected (as of the last
+    /// `live_replicas` evaluation).
+    pub fn is_ejected(&self, stage: usize, replica: usize) -> bool {
+        self.stages
+            .get(stage)
+            .and_then(|s| s.get(replica))
+            .map(|h| h.ejected.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn replicas(&self, stage: usize) -> usize {
+        self.stages.get(stage).map(|s| s.len()).unwrap_or(0)
+    }
+
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Total live→ejected transitions observed so far.
+    pub fn ejections(&self) -> u64 {
+        self.ejections.load(Ordering::Relaxed)
+    }
+
+    /// Total ejected→live transitions observed so far.
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_replicas_start_live() {
+        let r = ReplicaRegistry::new(&[2, 3], Duration::from_millis(50));
+        assert_eq!(r.live_replicas(0), vec![0, 1]);
+        assert_eq!(r.live_replicas(1), vec![0, 1, 2]);
+        assert_eq!(r.ejections(), 0);
+    }
+
+    #[test]
+    fn stale_replica_is_ejected_then_readmitted_counted_once() {
+        let r = ReplicaRegistry::new(&[2], Duration::from_millis(50));
+        let t0 = Instant::now();
+        r.heartbeat_at(0, 0, t0);
+        r.heartbeat_at(0, 1, t0);
+        // Replica 1 goes silent; replica 0 keeps beating.
+        let t1 = t0 + Duration::from_millis(200);
+        r.heartbeat_at(0, 0, t1);
+        assert_eq!(r.live_replicas_at(0, t1), vec![0]);
+        assert_eq!(r.live_replicas_at(0, t1), vec![0], "stable across calls");
+        assert_eq!(r.ejections(), 1, "transition counted once");
+        assert!(r.is_ejected(0, 1));
+        // Replica 1 recovers.
+        r.heartbeat_at(0, 1, t1);
+        assert_eq!(r.live_replicas_at(0, t1), vec![0, 1]);
+        assert_eq!(r.readmissions(), 1);
+        assert!(!r.is_ejected(0, 1));
+        assert_eq!(r.live_replicas_at(0, t1), vec![0, 1]);
+        assert_eq!(r.readmissions(), 1, "no double count on re-evaluation");
+    }
+
+    #[test]
+    fn fully_stale_stage_falls_back_to_all_replicas() {
+        let r = ReplicaRegistry::new(&[3], Duration::from_millis(10));
+        let later = Instant::now() + Duration::from_secs(5);
+        assert_eq!(r.live_replicas_at(0, later), vec![0, 1, 2]);
+        assert_eq!(r.ejections(), 3, "all three still counted as ejected");
+    }
+
+    #[test]
+    fn out_of_range_slots_are_ignored() {
+        let r = ReplicaRegistry::new(&[1], Duration::from_millis(10));
+        r.heartbeat(5, 5); // no panic
+        assert!(r.live_replicas(7).is_empty());
+        assert!(!r.is_ejected(5, 5));
+    }
+
+    #[test]
+    fn old_beats_cannot_rewind_a_fresh_one() {
+        let r = ReplicaRegistry::new(&[1], Duration::from_millis(50));
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(100);
+        r.heartbeat_at(0, 0, t1);
+        r.heartbeat_at(0, 0, t0); // late-arriving stale beat
+        assert_eq!(r.live_replicas_at(0, t1 + Duration::from_millis(25)), vec![0]);
+        assert_eq!(r.ejections(), 0);
+    }
+}

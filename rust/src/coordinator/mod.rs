@@ -25,6 +25,9 @@
 //! * [`reorder`] — the in-order, exactly-once release buffer
 //!   ([`ReorderBuffer`]) the forwarders use to absorb arbitrary replica
 //!   completion orders.
+//! * [`control`] — the fleet control plane: heartbeat-driven replica
+//!   registry (eject/readmit), per-tenant QoS classes and quotas,
+//!   content-keyed dedup/coalescing, and AIMD window adaptation.
 //! * [`batcher`] — the batch-shape policy ([`BatcherConfig`]).
 //! * [`metrics`] — lock-free counters/gauges with an exact
 //!   `requests == ok_frames + errors + shed` accounting invariant.
@@ -41,6 +44,7 @@
 //! [`queue::QueueOrdering::Fifo`]).
 
 pub mod batcher;
+pub mod control;
 pub mod metrics;
 pub mod queue;
 pub mod reorder;
@@ -51,6 +55,10 @@ pub mod sharded;
 pub mod synthetic;
 
 pub use batcher::BatcherConfig;
+pub use control::{
+    AimdConfig, AimdWindow, ControlConfig, DedupCoalescer, QosClass, ReplicaRegistry, TenantId,
+    TenantTable, WindowPolicy,
+};
 pub use metrics::Metrics;
 pub use queue::{
     AdmissionQueue, InferenceRequest, OverloadPolicy, QueueConfig, QueueOrdering, ServeError,

@@ -21,9 +21,20 @@
 //!   comparison (see `tests/overload.rs`: EDF strictly reduces
 //!   `DeadlineExceeded` under mixed-deadline load). EDF pops come from
 //!   a deadline-keyed binary heap kept beside the FIFO deque (lazy
-//!   deletion, bounded slack), so pop cost is O(log depth) — not the
-//!   O(depth) scan it once was; `tests/queue_scale.rs` pins both the
-//!   scaling and the pop order against a reference scan.
+//!   deletion with **exact stale counters**, swept from the pop side
+//!   the moment slack exceeds `live/8 + 64` — so the skip loops stay
+//!   O(1) amortized even behind a long-lived Block-policy head);
+//!   `tests/queue_scale.rs` pins both the scaling and the pop order
+//!   against a reference scan, and bounds [`AdmissionQueue::
+//!   index_slack`] under sustained EDF churn.
+//! * **Per-tenant QoS** — with a [`TenantTable`]
+//!   ([`QueueConfig::tenants`]) each class gets its own *lane*:
+//!   strict priority **bands** (lower band pops first; under `Reject` a
+//!   full queue admits a better-band newcomer by evicting the worst
+//!   band's oldest waiter), **weighted-fair** pops within a band
+//!   (stride scheduling over a per-lane virtual pass), and optional
+//!   per-tenant **quotas** on resident requests. A single-class table
+//!   (or none) reproduces the classic single-lane behavior bit-exactly.
 //! * **Convoy-free batching** — workers fill a batch under a [`Condvar`],
 //!   which *releases* the queue lock while waiting for stragglers, so a
 //!   worker collecting a partial batch never blocks the other workers
@@ -31,11 +42,13 @@
 //!   `recv_timeout`, serializing all workers behind whichever one was
 //!   filling.) The lock is only ever held to push or pop.
 //!
-//! Accounting invariant (checked by `tests/overload.rs`): every request
-//! counted in `Metrics::requests` resolves exactly once, into
-//! `ok_frames` (success), `errors` (execution failure or deadline), or
-//! `shed` (refused or evicted at admission), so
-//! `requests == ok_frames + errors + shed` at quiescence.
+//! Accounting invariant (checked by `tests/overload.rs` and
+//! `tests/control_plane.rs`): every request counted in
+//! `Metrics::requests` resolves exactly once, into `ok_frames`
+//! (success), `errors` (execution failure or deadline), or `shed`
+//! (refused or evicted at admission), so
+//! `requests == ok_frames + errors + shed` at quiescence — globally
+//! *and* per tenant when a table is attached with accounting on.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -45,6 +58,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::control::quota::TenantTable;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::ModelExecutor;
 use crate::runtime::executable::HostTensor;
@@ -56,11 +70,15 @@ pub enum OverloadPolicy {
     /// default — matches the old unbounded-channel behavior as long as
     /// the capacity is generous).
     Block,
-    /// Refuse the new request with [`ServeError::Overloaded`].
+    /// Refuse the new request with [`ServeError::Overloaded`]. With
+    /// multiple priority bands, a newcomer from a strictly better
+    /// (lower) band preempts instead: the worst resident band's oldest
+    /// waiter is evicted to make room.
     Reject,
     /// Evict the oldest *waiting* request (it resolves to
     /// [`ServeError::Overloaded`]) and admit the new one — freshest-first
-    /// under overload, useful when stale frames are worthless.
+    /// under overload, useful when stale frames are worthless. With
+    /// multiple bands the victim comes from the worst resident band.
     ShedOldest,
 }
 
@@ -93,6 +111,14 @@ pub struct QueueConfig {
     /// In what order waiting requests are pulled (default EDF, which
     /// degenerates to FIFO when no deadlines are in play).
     pub ordering: QueueOrdering,
+    /// Per-tenant QoS classes: one scheduling lane per class. `None`
+    /// (the default) = one implicit class, classic behavior.
+    pub tenants: Option<Arc<TenantTable>>,
+    /// Whether this queue records per-tenant counters on the table's
+    /// metrics blocks (shed at admission, timeouts, worker results).
+    /// On by default; the sharded pipeline turns it off for its stage
+    /// queues because it settles per-tenant accounting end-to-end.
+    pub tenant_accounting: bool,
 }
 
 impl Default for QueueConfig {
@@ -102,6 +128,8 @@ impl Default for QueueConfig {
             capacity: 1024,
             policy: OverloadPolicy::Block,
             ordering: QueueOrdering::Edf,
+            tenants: None,
+            tenant_accounting: true,
         }
     }
 }
@@ -123,7 +151,7 @@ impl QueueConfig {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// Refused or evicted at admission: the queue was at capacity under
-    /// a `Reject`/`ShedOldest` policy.
+    /// a `Reject`/`ShedOldest` policy (or a tenant quota was hit).
     Overloaded,
     /// The request's deadline passed while it waited in the queue.
     DeadlineExceeded,
@@ -146,7 +174,8 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// One inference request: input frame, response channel, and timing.
+/// One inference request: input frame, response channel, timing, and
+/// the tenant class it bills to.
 pub struct InferenceRequest {
     pub input: HostTensor,
     pub respond: SyncSender<Result<HostTensor, ServeError>>,
@@ -154,98 +183,111 @@ pub struct InferenceRequest {
     /// Drop (with [`ServeError::DeadlineExceeded`]) instead of executing
     /// if still queued past this instant. `None` = wait forever.
     pub deadline: Option<Instant>,
+    /// Index into the queue's [`TenantTable`] (clamped at admission;
+    /// irrelevant — use 0 — when the queue has no table).
+    pub tenant: usize,
 }
 
-/// Resident requests plus the two orderings over them.
+/// One tenant class's scheduling lane: its own FIFO + deadline heap
+/// over the shared request map, plus the stride-scheduling state.
 ///
-/// Requests live in `map` under an admission sequence number; `fifo`
-/// holds arrival order and `deadlines` is a min-heap over
-/// `(deadline, seq)` — so an EDF pop is O(log depth) instead of the
-/// O(depth) scan this used to be. Both index structures are **lazily
-/// pruned**: a pop from one leaves a stale seq in the other, skipped
-/// (and discarded) when it surfaces; [`QueueState::prune`] bounds the
-/// slack so stale entries cannot accumulate behind a long-lived head.
-///
-/// The heap key `(deadline, seq)` reproduces the scan's order exactly:
-/// earliest deadline first, arrival order on ties, and arrival order
-/// outright when no deadlined request waits.
-struct QueueState {
-    map: HashMap<u64, InferenceRequest>,
+/// Lazy-deletion bookkeeping is **exact**: `fifo_stale` / `heap_stale`
+/// count precisely the dead seqs each index structure holds
+/// (`fifo.len() == live + fifo_stale` always), so a sweep triggers the
+/// moment slack crosses `live/8 + 64` — from the pop side, where the
+/// staleness is created — instead of waiting for the old ~2x-live
+/// length bound that a long-lived Block-policy head could sit under
+/// while `oldest()`-style skip loops degraded to O(stale).
+struct Lane {
     fifo: VecDeque<u64>,
     deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
-    next_seq: u64,
-    closed: bool,
+    /// Live (still-mapped) requests resident in this lane.
+    live: usize,
+    /// Dead seqs currently in `fifo` (popped via the heap).
+    fifo_stale: usize,
+    /// Dead seqs currently in `deadlines` (popped via the fifo, or
+    /// belonging to requests that left another way).
+    heap_stale: usize,
+    /// Stride-scheduling virtual time: lowest pass (within the best
+    /// band) pops next; each pop advances by `stride`.
+    pass: f64,
+    /// `1 / weight`.
+    stride: f64,
+    /// Strict priority band (lower pops first).
+    band: u8,
+    /// Cap on this lane's resident requests.
+    quota: Option<usize>,
 }
 
-impl QueueState {
-    fn new() -> Self {
+impl Lane {
+    fn new(weight: f64, band: u8, quota: Option<usize>) -> Self {
         Self {
-            map: HashMap::new(),
             fifo: VecDeque::new(),
             deadlines: BinaryHeap::new(),
-            next_seq: 0,
-            closed: false,
+            live: 0,
+            fifo_stale: 0,
+            heap_stale: 0,
+            pass: 0.0,
+            stride: 1.0 / weight.max(1e-6),
+            band,
+            quota,
         }
     }
 
-    /// Resident request count.
-    fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    fn push(&mut self, req: InferenceRequest) {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        if let Some(d) = req.deadline {
-            self.deadlines.push(Reverse((d, seq)));
-        }
-        self.fifo.push_back(seq);
-        self.map.insert(seq, req);
-    }
-
-    /// Oldest resident request (arrival order), skipping stale seqs.
-    fn pop_fifo(&mut self) -> Option<InferenceRequest> {
+    /// Oldest live request of this lane (arrival order), discarding
+    /// stale seqs on the way. `charge_pass` distinguishes service pops
+    /// (which advance the stride clock) from evictions (which must not
+    /// penalize the victim's lane).
+    fn pop_fifo(
+        &mut self,
+        map: &mut HashMap<u64, InferenceRequest>,
+        charge_pass: bool,
+    ) -> Option<InferenceRequest> {
         while let Some(seq) = self.fifo.pop_front() {
-            if let Some(req) = self.map.remove(&seq) {
-                self.prune();
+            if let Some(req) = map.remove(&seq) {
+                self.live -= 1;
+                if req.deadline.is_some() {
+                    self.heap_stale += 1;
+                }
+                if charge_pass {
+                    self.pass += self.stride;
+                }
+                self.maybe_sweep(map);
                 return Some(req);
             }
+            self.fifo_stale = self.fifo_stale.saturating_sub(1);
         }
         None
     }
 
-    /// Earliest-deadline resident request, falling back to arrival
-    /// order when nothing carries a deadline (FIFO-degenerate).
-    fn pop_edf(&mut self) -> Option<InferenceRequest> {
+    /// Earliest-deadline live request of this lane, falling back to
+    /// arrival order when nothing carries a deadline (FIFO-degenerate).
+    fn pop_edf(&mut self, map: &mut HashMap<u64, InferenceRequest>) -> Option<InferenceRequest> {
         while let Some(&Reverse((_, seq))) = self.deadlines.peek() {
             self.deadlines.pop();
-            if let Some(req) = self.map.remove(&seq) {
-                self.prune();
+            if let Some(req) = map.remove(&seq) {
+                self.live -= 1;
+                self.fifo_stale += 1; // its fifo entry is now dead
+                self.pass += self.stride;
+                self.maybe_sweep(map);
                 return Some(req);
             }
+            self.heap_stale = self.heap_stale.saturating_sub(1);
         }
-        self.pop_fifo()
+        self.pop_fifo(map, true)
     }
 
-    fn pop_next(&mut self, ordering: QueueOrdering) -> Option<InferenceRequest> {
-        match ordering {
-            QueueOrdering::Fifo => self.pop_fifo(),
-            QueueOrdering::Edf => self.pop_edf(),
-        }
-    }
-
-    /// Bound the lazy-deletion slack: once an index structure holds
-    /// more than ~2x the live entries, sweep its stale seqs. Amortized
-    /// O(1) per pop, and memory stays proportional to residency even
-    /// when EDF keeps draining around a deadline-less head.
-    fn prune(&mut self) {
-        let live = self.map.len();
-        if self.fifo.len() > 2 * live + 64 {
-            let map = &self.map;
+    /// Sweep an index structure as soon as its *exact* stale count
+    /// exceeds `live/8 + 64`. Amortized O(1) per pop; both skip loops
+    /// stay short no matter how long a Block-policy head pins the
+    /// residency.
+    fn maybe_sweep(&mut self, map: &HashMap<u64, InferenceRequest>) {
+        let bound = self.live / 8 + 64;
+        if self.fifo_stale > bound {
             self.fifo.retain(|s| map.contains_key(s));
+            self.fifo_stale = 0;
         }
-        if self.deadlines.len() > 2 * live + 64 {
-            let map = &self.map;
+        if self.heap_stale > bound {
             let kept: Vec<Reverse<(Instant, u64)>> = self
                 .deadlines
                 .drain()
@@ -255,7 +297,150 @@ impl QueueState {
                 })
                 .collect();
             self.deadlines = BinaryHeap::from(kept);
+            self.heap_stale = 0;
         }
+    }
+}
+
+/// Resident requests plus the per-lane orderings over them.
+///
+/// Requests live in `map` under an admission sequence number; each
+/// tenant lane holds its own arrival order and `(deadline, seq)`
+/// min-heap, so an EDF pop is O(log depth) instead of the O(depth)
+/// scan this used to be. Both index structures are lazily pruned with
+/// exact slack counters (see [`Lane`]).
+///
+/// The heap key `(deadline, seq)` reproduces the scan's order exactly
+/// *within a lane*: earliest deadline first, arrival order on ties,
+/// and arrival order outright when no deadlined request waits. With a
+/// single lane (no tenant table) the whole queue is one lane and the
+/// historical pop order is preserved bit-exactly
+/// (`tests/queue_scale.rs` pins this).
+struct QueueState {
+    map: HashMap<u64, InferenceRequest>,
+    lanes: Vec<Lane>,
+    next_seq: u64,
+    closed: bool,
+}
+
+impl QueueState {
+    fn new(tenants: Option<&TenantTable>) -> Self {
+        let lanes = match tenants {
+            Some(table) => table
+                .classes()
+                .iter()
+                .map(|c| Lane::new(c.weight, c.band, c.quota))
+                .collect(),
+            None => vec![Lane::new(1.0, 0, None)],
+        };
+        Self { map: HashMap::new(), lanes, next_seq: 0, closed: false }
+    }
+
+    /// Resident request count.
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn push(&mut self, req: InferenceRequest) {
+        let lane_idx = req.tenant;
+        // A lane going active adopts the minimum active pass, so an
+        // idle tenant cannot bank scheduling credit and then starve
+        // the others on return.
+        if self.lanes[lane_idx].live == 0 {
+            let min_pass = self
+                .lanes
+                .iter()
+                .filter(|l| l.live > 0)
+                .map(|l| l.pass)
+                .fold(f64::INFINITY, f64::min);
+            if min_pass.is_finite() {
+                let lane = &mut self.lanes[lane_idx];
+                lane.pass = lane.pass.max(min_pass);
+            }
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let lane = &mut self.lanes[lane_idx];
+        if let Some(d) = req.deadline {
+            lane.deadlines.push(Reverse((d, seq)));
+        }
+        lane.fifo.push_back(seq);
+        lane.live += 1;
+        self.map.insert(seq, req);
+    }
+
+    /// The lane to serve next: best (lowest) band, then lowest stride
+    /// pass, then lowest index — among lanes with live requests.
+    fn pick_lane(&self) -> Option<usize> {
+        let mut best: Option<(u8, f64, usize)> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.live == 0 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((b, p, _)) => lane.band < b || (lane.band == b && lane.pass < p),
+            };
+            if better {
+                best = Some((lane.band, lane.pass, i));
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    fn pop_next(&mut self, ordering: QueueOrdering) -> Option<InferenceRequest> {
+        let lane = self.pick_lane()?;
+        let req = match ordering {
+            QueueOrdering::Fifo => self.lanes[lane].pop_fifo(&mut self.map, true),
+            QueueOrdering::Edf => self.lanes[lane].pop_edf(&mut self.map),
+        };
+        // Global idle point: reset the stride clocks so pass values
+        // stay small over arbitrarily long serving runs.
+        if self.map.is_empty() {
+            for l in &mut self.lanes {
+                l.pass = 0.0;
+            }
+        }
+        req
+    }
+
+    /// Oldest live seq of one lane (non-destructive).
+    fn front_live_seq(&self, lane: usize) -> Option<u64> {
+        self.lanes[lane].fifo.iter().copied().find(|s| self.map.contains_key(s))
+    }
+
+    /// The lane an overload eviction should victimize: worst (highest)
+    /// band among occupied lanes; ties go to the lane holding the
+    /// globally oldest waiter — which, with one lane (or one band of
+    /// equal-age lanes), reproduces the historical evict-global-oldest
+    /// behavior.
+    fn worst_band_victim(&self) -> Option<usize> {
+        let mut best: Option<(u8, u64, usize)> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.live == 0 {
+                continue;
+            }
+            let front = self.front_live_seq(i).expect("live lane has a front");
+            let better = match best {
+                None => true,
+                Some((b, f, _)) => lane.band > b || (lane.band == b && front < f),
+            };
+            if better {
+                best = Some((lane.band, front, i));
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Evict one lane's oldest live request (no pass charge: an
+    /// eviction is not service).
+    fn evict_oldest(&mut self, lane: usize) -> Option<InferenceRequest> {
+        self.lanes[lane].pop_fifo(&mut self.map, false)
+    }
+
+    /// Total dead seqs currently held by the index structures.
+    fn index_slack(&self) -> usize {
+        self.lanes.iter().map(|l| l.fifo_stale + l.heap_stale).sum()
     }
 }
 
@@ -272,6 +457,8 @@ pub struct AdmissionQueue {
     capacity: usize,
     policy: OverloadPolicy,
     ordering: QueueOrdering,
+    tenants: Option<Arc<TenantTable>>,
+    tenant_accounting: bool,
     metrics: Arc<Metrics>,
 }
 
@@ -280,13 +467,15 @@ impl AdmissionQueue {
         let mut batch = cfg.batch;
         batch.batch_size = batch.batch_size.max(1);
         Self {
-            state: Mutex::new(QueueState::new()),
+            state: Mutex::new(QueueState::new(cfg.tenants.as_deref())),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             batch,
             capacity: cfg.capacity.max(1),
             policy: cfg.policy,
             ordering: cfg.ordering,
+            tenant_accounting: cfg.tenant_accounting,
+            tenants: cfg.tenants,
             metrics,
         }
     }
@@ -307,37 +496,148 @@ impl AdmissionQueue {
         self.ordering
     }
 
+    /// The tenant table this queue schedules by, if any.
+    pub fn tenants(&self) -> Option<&Arc<TenantTable>> {
+        self.tenants.as_ref()
+    }
+
+    /// The metrics block a tenant's outcomes bill to — `Some` only when
+    /// a table is attached *and* this queue does tenant accounting.
+    pub fn tenant_metrics(&self, tenant: usize) -> Option<&Arc<Metrics>> {
+        if !self.tenant_accounting {
+            return None;
+        }
+        self.tenants.as_ref().map(|t| t.metrics(tenant))
+    }
+
+    /// Dead seqs currently held by the lazy-deletion index structures
+    /// (diagnostic; `tests/queue_scale.rs` bounds it under churn).
+    pub fn index_slack(&self) -> usize {
+        self.state.lock().expect("admission queue poisoned").index_slack()
+    }
+
+    fn notify_not_full(&self) {
+        // With several lanes a freed slot may unblock any submitter
+        // (quota vs global capacity), so wake them all; a single lane
+        // keeps the cheaper historical one-waiter wakeup.
+        if self.tenants.is_some() {
+            self.not_full.notify_all();
+        } else {
+            self.not_full.notify_one();
+        }
+    }
+
+    /// Record a shed on the global block and — when this queue does the
+    /// per-tenant books — on the tenant's block.
+    fn record_shed_for(&self, tenant: usize) {
+        self.metrics.record_shed();
+        if let Some(tm) = self.tenant_metrics(tenant) {
+            tm.record_shed();
+        }
+    }
+
+    /// Evict accounting: the victim was admitted earlier, so it always
+    /// sheds, regardless of how its evictor was admitted.
+    fn shed_victim(&self, victim: InferenceRequest) {
+        self.record_shed_for(victim.tenant);
+        let _ = victim.respond.send(Err(ServeError::Overloaded));
+    }
+
     /// Admit one request, applying the overload policy when full.
     ///
     /// Returns `Ok(())` once the request is resident (its response will
     /// arrive on `req.respond`), or a typed error if it was refused —
     /// in which case `req` is consumed and its channel dropped, so a
-    /// client blocked on the receiver unblocks immediately.
+    /// client blocked on the receiver unblocks immediately. A refusal
+    /// is recorded as `shed`.
     pub fn submit(&self, req: InferenceRequest) -> Result<(), ServeError> {
+        self.admit(req, true)
+    }
+
+    /// [`Self::submit`] **without accounting on refusal**: the caller
+    /// owns the decision of where (or whether) a refusal is charged.
+    /// This is the sibling-failover primitive — an attempt that will be
+    /// retried elsewhere must not count as this queue's `shed`, or the
+    /// same frame double-counts across replicas. Evicted *victims* are
+    /// still recorded here (they were admitted normally).
+    pub fn offer(&self, req: InferenceRequest) -> Result<(), ServeError> {
+        self.admit(req, false)
+    }
+
+    fn admit(&self, mut req: InferenceRequest, account: bool) -> Result<(), ServeError> {
         let mut state = self.state.lock().expect("admission queue poisoned");
+        req.tenant = req.tenant.min(state.lanes.len() - 1);
         loop {
             if state.closed {
-                self.metrics.record_shed();
+                if account {
+                    self.record_shed_for(req.tenant);
+                }
                 return Err(ServeError::Closed);
             }
-            if state.len() < self.capacity {
+            let over_quota = {
+                let lane = &state.lanes[req.tenant];
+                match lane.quota {
+                    Some(q) => lane.live >= q,
+                    None => false,
+                }
+            };
+            if !over_quota && state.len() < self.capacity {
                 state.push(req);
                 self.metrics.set_queue_depth(state.len());
                 self.not_empty.notify_one();
                 return Ok(());
+            }
+            if over_quota {
+                match self.policy {
+                    OverloadPolicy::Block => {
+                        state = self.not_full.wait(state).expect("admission queue poisoned");
+                    }
+                    OverloadPolicy::Reject => {
+                        if account {
+                            self.record_shed_for(req.tenant);
+                        }
+                        return Err(ServeError::Overloaded);
+                    }
+                    OverloadPolicy::ShedOldest => {
+                        // The quota is the tenant's own bound: evict its
+                        // own oldest waiter, never a neighbor's.
+                        if let Some(old) = state.evict_oldest(req.tenant) {
+                            self.shed_victim(old);
+                        }
+                        // Loop: the lane has room now (quota >= 1).
+                    }
+                }
+                continue;
             }
             match self.policy {
                 OverloadPolicy::Block => {
                     state = self.not_full.wait(state).expect("admission queue poisoned");
                 }
                 OverloadPolicy::Reject => {
-                    self.metrics.record_shed();
-                    return Err(ServeError::Overloaded);
+                    // Band preemption: a strictly better-band newcomer
+                    // takes a slot from the worst resident band instead
+                    // of being refused.
+                    let newcomer_band = state.lanes[req.tenant].band;
+                    match state.worst_band_victim() {
+                        Some(lane) if state.lanes[lane].band > newcomer_band => {
+                            if let Some(old) = state.evict_oldest(lane) {
+                                self.shed_victim(old);
+                            }
+                            // Loop: there is room now.
+                        }
+                        _ => {
+                            if account {
+                                self.record_shed_for(req.tenant);
+                            }
+                            return Err(ServeError::Overloaded);
+                        }
+                    }
                 }
                 OverloadPolicy::ShedOldest => {
-                    if let Some(old) = state.pop_fifo() {
-                        self.metrics.record_shed();
-                        let _ = old.respond.send(Err(ServeError::Overloaded));
+                    if let Some(lane) = state.worst_band_victim() {
+                        if let Some(old) = state.evict_oldest(lane) {
+                            self.shed_victim(old);
+                        }
                     }
                     // Loop: there is room now (capacity >= 1).
                 }
@@ -350,14 +650,18 @@ impl AdmissionQueue {
     /// Caller holds the state lock. FIFO pops the head; EDF pops the
     /// earliest deadline (ties to arrival order) from the deadline heap,
     /// or the head when nothing carries a deadline — O(log depth)
-    /// either way.
+    /// either way. With several lanes the lane is chosen first (best
+    /// band, then lowest stride pass).
     fn pop_live(&self, state: &mut QueueState) -> Option<InferenceRequest> {
         while let Some(req) = state.pop_next(self.ordering) {
             self.metrics.set_queue_depth(state.len());
-            self.not_full.notify_one();
+            self.notify_not_full();
             match req.deadline {
                 Some(d) if Instant::now() >= d => {
                     self.metrics.record_timeout(req.enqueued.elapsed());
+                    if let Some(tm) = self.tenant_metrics(req.tenant) {
+                        tm.record_timeout(req.enqueued.elapsed());
+                    }
                     let _ = req.respond.send(Err(ServeError::DeadlineExceeded));
                 }
                 _ => return Some(req),
@@ -444,6 +748,11 @@ impl ServeHandle {
         &self.metrics
     }
 
+    /// The queue this handle submits into.
+    pub fn queue(&self) -> &Arc<AdmissionQueue> {
+        &self.queue
+    }
+
     /// Open-loop submission: admit one frame and return the response
     /// channel without waiting for the result. Admission failures come
     /// back immediately as typed errors.
@@ -451,7 +760,16 @@ impl ServeHandle {
         &self,
         input: HostTensor,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
-        self.submit_with_deadline(input, None)
+        self.submit_with_deadline_for(0, input, None)
+    }
+
+    /// [`Self::submit_frame`] billed to a tenant class.
+    pub fn submit_frame_for(
+        &self,
+        tenant: usize,
+        input: HostTensor,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.submit_with_deadline_for(tenant, input, None)
     }
 
     /// [`Self::submit_frame`] with a per-request deadline: if the frame
@@ -462,7 +780,22 @@ impl ServeHandle {
         input: HostTensor,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.submit_with_deadline_for(0, input, deadline)
+    }
+
+    /// [`Self::submit_with_deadline`] billed to a tenant class: the
+    /// request counts on the global block *and* the tenant's block, so
+    /// both reconcile.
+    pub fn submit_with_deadline_for(
+        &self,
+        tenant: usize,
+        input: HostTensor,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if let Some(tm) = self.queue.tenant_metrics(tenant) {
+            tm.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
         let (respond, rx) = sync_channel(1);
         let now = Instant::now();
         self.queue.submit(InferenceRequest {
@@ -470,8 +803,43 @@ impl ServeHandle {
             respond,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
+            tenant,
         })?;
         Ok(rx)
+    }
+
+    /// Failover-aware submission: admit one frame **counting `requests`
+    /// only on success** and recording nothing on refusal — the caller
+    /// decides which replica a refused-then-retried frame is ultimately
+    /// charged to (see [`Self::record_refused`]). This is what keeps
+    /// `requests == ok_frames + errors + shed` exact per replica under
+    /// Reject-policy sibling failover: the old path counted every
+    /// *attempt* as a request and every refusal as a shed, so one
+    /// spilled frame inflated two replicas' books.
+    pub fn offer_frame_for(
+        &self,
+        tenant: usize,
+        input: HostTensor,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        let (respond, rx) = sync_channel(1);
+        let now = Instant::now();
+        self.queue.offer(InferenceRequest {
+            input,
+            respond,
+            enqueued: now,
+            deadline: None,
+            tenant,
+        })?;
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(rx)
+    }
+
+    /// Charge one definitively refused frame to this replica: a request
+    /// that resolved as shed. The failover dispatcher calls this
+    /// exactly once per frame that every candidate refused.
+    pub fn record_refused(&self) {
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.record_shed();
     }
 
     /// Closed-loop submission: submit one frame and block for its result.
@@ -498,7 +866,8 @@ impl ServeHandle {
 
 /// The worker loop shared by [`AcceleratorServer`] and [`Router`]: pull
 /// batches until the queue closes, execute, and resolve every request —
-/// success and failure both counted *per request* with latency recorded,
+/// success and failure both counted *per request* with latency recorded
+/// (on the tenant's block too, when the queue keeps per-tenant books),
 /// so `requests == ok_frames + errors + shed` reconciles exactly.
 ///
 /// [`AcceleratorServer`]: crate::coordinator::server::AcceleratorServer
@@ -512,6 +881,9 @@ pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
             Ok(outs) if outs.len() == reqs.len() => {
                 for (req, out) in reqs.into_iter().zip(outs) {
                     metrics.record_success(req.enqueued.elapsed());
+                    if let Some(tm) = queue.tenant_metrics(req.tenant) {
+                        tm.record_success(req.enqueued.elapsed());
+                    }
                     let _ = req.respond.send(Ok(out));
                 }
             }
@@ -524,6 +896,9 @@ pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
                 };
                 for req in reqs {
                     metrics.record_failure(req.enqueued.elapsed());
+                    if let Some(tm) = queue.tenant_metrics(req.tenant) {
+                        tm.record_failure(req.enqueued.elapsed());
+                    }
                     let _ = req.respond.send(Err(ServeError::Execution(msg.clone())));
                 }
             }
@@ -534,6 +909,7 @@ pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::control::quota::QosClass;
     use std::sync::atomic::Ordering;
     use std::sync::mpsc::RecvTimeoutError;
 
@@ -554,6 +930,23 @@ mod tests {
         ))
     }
 
+    fn tenant_queue(
+        capacity: usize,
+        policy: OverloadPolicy,
+        classes: Vec<QosClass>,
+    ) -> Arc<AdmissionQueue> {
+        Arc::new(AdmissionQueue::new(
+            QueueConfig {
+                batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+                capacity,
+                policy,
+                tenants: Some(Arc::new(TenantTable::new(classes))),
+                ..QueueConfig::default()
+            },
+            Arc::new(Metrics::new()),
+        ))
+    }
+
     fn req_deadline(
         v: f32,
         deadline: Duration,
@@ -564,6 +957,13 @@ mod tests {
     }
 
     fn req(v: f32) -> (InferenceRequest, Receiver<Result<HostTensor, ServeError>>) {
+        req_for(0, v)
+    }
+
+    fn req_for(
+        tenant: usize,
+        v: f32,
+    ) -> (InferenceRequest, Receiver<Result<HostTensor, ServeError>>) {
         let (respond, rx) = sync_channel(1);
         (
             InferenceRequest {
@@ -571,6 +971,7 @@ mod tests {
                 respond,
                 enqueued: Instant::now(),
                 deadline: None,
+                tenant,
             },
             rx,
         )
@@ -709,6 +1110,7 @@ mod tests {
                 capacity: 64,
                 policy: OverloadPolicy::Block,
                 ordering: QueueOrdering::Fifo,
+                ..QueueConfig::default()
             },
             Arc::new(Metrics::new()),
         ));
@@ -730,5 +1132,131 @@ mod tests {
             Err(RecvTimeoutError::Disconnected) => {}
             other => panic!("rejected request channel should disconnect, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn weighted_fair_pop_interleaves_by_weight() {
+        // Tenant 0 at weight 3, tenant 1 at weight 1, same band: out of
+        // every 4 pops, 3 belong to tenant 0 — regardless of arrival
+        // interleaving.
+        let q = tenant_queue(
+            64,
+            OverloadPolicy::Block,
+            vec![QosClass::new("heavy", 3.0, 0, None), QosClass::new("light", 1.0, 0, None)],
+        );
+        let mut keep = Vec::new();
+        for i in 0..12 {
+            let (r, rx) = req_for(i % 2, i as f32);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        let popped: Vec<usize> =
+            (0..12).map(|_| q.next_batch().unwrap().remove(0).tenant).collect();
+        let heavy_in_first_8 = popped.iter().take(8).filter(|&&t| t == 0).count();
+        assert_eq!(heavy_in_first_8, 6, "3:1 weights → 6 of the first 8 pops: {popped:?}");
+        drop(keep);
+    }
+
+    #[test]
+    fn lower_band_pops_strictly_first() {
+        let q = tenant_queue(
+            64,
+            OverloadPolicy::Block,
+            vec![QosClass::new("paid", 1.0, 0, None), QosClass::new("free", 100.0, 1, None)],
+        );
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req_for(1, i as f32);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        for i in 0..3 {
+            let (r, rx) = req_for(0, 10.0 + i as f32);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        let order: Vec<usize> = (0..6).map(|_| q.next_batch().unwrap().remove(0).tenant).collect();
+        assert_eq!(order, vec![0, 0, 0, 1, 1, 1], "band 0 drains before band 1, any weight");
+        drop(keep);
+    }
+
+    #[test]
+    fn better_band_newcomer_preempts_a_full_reject_queue() {
+        let q = tenant_queue(
+            2,
+            OverloadPolicy::Reject,
+            vec![QosClass::new("paid", 1.0, 0, None), QosClass::new("free", 1.0, 1, None)],
+        );
+        let (r, free_rx) = req_for(1, 1.0);
+        q.submit(r).unwrap();
+        q.submit(req_for(1, 2.0).0).unwrap();
+        // A free newcomer is refused outright...
+        assert_eq!(q.submit(req_for(1, 3.0).0), Err(ServeError::Overloaded));
+        // ...but a paid newcomer evicts the oldest free waiter.
+        q.submit(req_for(0, 4.0).0).unwrap();
+        assert_eq!(free_rx.recv().unwrap(), Err(ServeError::Overloaded));
+        let m = q.metrics();
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2, "one refusal + one eviction");
+        // Per-tenant books: both sheds bill to the free class.
+        let table = q.tenants().unwrap();
+        assert_eq!(table.metrics(1).shed.load(Ordering::Relaxed), 2);
+        assert_eq!(table.metrics(0).shed.load(Ordering::Relaxed), 0);
+        // Band 0 pops first, then the surviving free waiter.
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![4.0]);
+        assert_eq!(vals(&q.next_batch().unwrap()), vec![2.0]);
+    }
+
+    #[test]
+    fn quota_caps_one_tenant_without_filling_the_queue() {
+        let q = tenant_queue(
+            64,
+            OverloadPolicy::Reject,
+            vec![QosClass::new("capped", 1.0, 0, Some(2)), QosClass::new("open", 1.0, 0, None)],
+        );
+        q.submit(req_for(0, 1.0).0).unwrap();
+        q.submit(req_for(0, 2.0).0).unwrap();
+        assert_eq!(
+            q.submit(req_for(0, 3.0).0),
+            Err(ServeError::Overloaded),
+            "quota of 2 refuses the third resident"
+        );
+        // The other tenant still has the whole queue.
+        q.submit(req_for(1, 4.0).0).unwrap();
+        assert_eq!(q.depth(), 3);
+    }
+
+    #[test]
+    fn offer_refusal_records_nothing_but_victims_still_shed() {
+        let q = queue(1, OverloadPolicy::Reject, 1, 0);
+        q.submit(req(1.0).0).unwrap();
+        let (r, _rx) = req(2.0);
+        assert_eq!(q.offer(r), Err(ServeError::Overloaded));
+        assert_eq!(
+            q.metrics().shed.load(Ordering::Relaxed),
+            0,
+            "an offer refusal is the failover dispatcher's to account"
+        );
+        // ShedOldest eviction under offer: the victim sheds here.
+        let q = queue(1, OverloadPolicy::ShedOldest, 1, 0);
+        let (r1, rx1) = req(1.0);
+        q.submit(r1).unwrap();
+        q.offer(req(2.0).0).unwrap();
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Overloaded));
+        assert_eq!(q.metrics().shed.load(Ordering::Relaxed), 1, "victims always shed");
+    }
+
+    #[test]
+    fn single_lane_stays_bit_exact_under_mixed_pops() {
+        // EDF pops interleaved with FIFO-degenerate pops around a
+        // deadline-less head: exact order preserved (lanes are a no-op
+        // with one class).
+        let q = queue(64, OverloadPolicy::Block, 1, 0);
+        q.submit(req(0.0).0).unwrap();
+        q.submit(req_deadline(1.0, Duration::from_secs(10)).0).unwrap();
+        q.submit(req_deadline(2.0, Duration::from_secs(5)).0).unwrap();
+        q.submit(req(3.0).0).unwrap();
+        let order: Vec<f32> = (0..4).map(|_| vals(&q.next_batch().unwrap())[0]).collect();
+        assert_eq!(order, vec![2.0, 1.0, 0.0, 3.0]);
+        assert_eq!(q.index_slack(), 0, "fully drained queue holds no stale seqs");
     }
 }

@@ -17,6 +17,14 @@
 //! answers any request on the socket with a `200` and the dump — it
 //! does not parse paths — which is exactly what a scrape target needs
 //! and nothing more.
+//!
+//! Each accepted connection is served on its own detached thread with
+//! both a read and a write timeout, so a scraper that connects and then
+//! stalls (never sends, or never drains the response) wedges only its
+//! own connection — the accept loop keeps serving everyone else. (The
+//! original exporter answered connections serially on the accept
+//! thread: one stalled scraper blocked every subsequent scrape for its
+//! whole timeout, and a short write silently truncated the dump.)
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -79,23 +87,12 @@ impl MetricsExporter {
                 if stop_flag.load(Ordering::Relaxed) {
                     break;
                 }
-                let Ok(mut stream) = conn else { continue };
-                // Consume the request line(s) politely, then answer.
-                // Parsing is unnecessary: every path gets the dump, so
-                // the number of bytes read is irrelevant.
-                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-                let mut scratch = [0u8; 1024];
-                let _request_bytes = stream.read(&mut scratch).unwrap_or(0);
-                let body = render();
-                let _ = stream.write_all(
-                    format!(
-                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
-                         Content-Length: {}\r\n\r\n{}",
-                        body.len(),
-                        body
-                    )
-                    .as_bytes(),
-                );
+                let Ok(stream) = conn else { continue };
+                // One detached thread per connection: a stalled or
+                // dead-slow scraper wedges only itself, never the
+                // accept loop.
+                let render = render.clone();
+                std::thread::spawn(move || serve_one(stream, &render));
             }
         });
         Ok(Self { port: bound, stop, thread: Some(thread) })
@@ -106,11 +103,51 @@ impl MetricsExporter {
         self.port
     }
 
-    /// Stop accepting and join the serving thread (also what dropping
+    /// Stop accepting and join the accept thread (also what dropping
     /// the exporter does; this just makes the teardown explicit).
+    /// Detached per-connection threads finish on their own timeouts.
     pub fn shutdown(self) {
         drop(self);
     }
+}
+
+/// Answer one scrape connection, bounded in both directions: a client
+/// that never sends is cut off by the read timeout, one that never
+/// drains the response by the write timeout. Either way the
+/// connection's thread exits instead of wedging the exporter.
+fn serve_one(mut stream: TcpStream, render: &(dyn Fn() -> String + Send + Sync)) {
+    // Consume the request line(s) politely, then answer. Parsing is
+    // unnecessary: every path gets the dump, so the number of bytes
+    // read is irrelevant.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut scratch = [0u8; 1024];
+    let _request_bytes = stream.read(&mut scratch).unwrap_or(0);
+    let body = render();
+    let response = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = write_fully(&mut stream, response.as_bytes());
+}
+
+/// `write_all` that survives short writes and `Interrupted` but gives
+/// up on any other error — including `WouldBlock`/`TimedOut` from the
+/// socket's write timeout, which on a blocking socket may land after a
+/// *partial* write that plain `write_all` would mishandle as fatal
+/// while leaving the number of bytes sent unknowable.
+fn write_fully(stream: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match stream.write(buf) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 impl Drop for MetricsExporter {
@@ -165,6 +202,31 @@ mod tests {
         metrics.requests.fetch_add(2, Ordering::Relaxed);
         let body = scrape(exporter.port());
         assert!(body.contains("dnnx_requests_total{scope=\"test\"} 5"), "{body}");
+        exporter.shutdown();
+    }
+
+    #[test]
+    fn stalled_scraper_does_not_block_others() {
+        // Regression: the exporter used to answer connections serially
+        // on the accept thread, so one scraper that connected and went
+        // silent stalled every later scrape behind its read timeout.
+        let exporter =
+            MetricsExporter::spawn(0, Arc::new(|| "stall_test 1\n".to_string())).unwrap();
+        // Several connections that never send a request...
+        let stalled: Vec<TcpStream> = (0..5)
+            .map(|_| TcpStream::connect(("127.0.0.1", exporter.port())).expect("connect"))
+            .collect();
+        // ...must not delay a real scrape (serially they would cost
+        // 5 x 200ms of read timeout before this connection is served).
+        let start = std::time::Instant::now();
+        let body = scrape(exporter.port());
+        assert!(body.contains("stall_test 1"), "{body}");
+        assert!(
+            start.elapsed() < Duration::from_millis(500),
+            "scrape took {:?} behind stalled connections",
+            start.elapsed()
+        );
+        drop(stalled);
         exporter.shutdown();
     }
 

@@ -9,32 +9,52 @@
 //! thread standing in for the inter-board links: it harvests stage
 //! `i`'s completions (which arrive in arbitrary order across the
 //! replicas), re-orders them through a [`ReorderBuffer`], and issues
-//! them **round-robin** (`seq % replicas`) into stage `i+1`, carrying
-//! each request's response channel along. Frames therefore leave every
-//! stage — and the pipeline — in admission order, exactly once,
-//! regardless of replica completion order.
+//! them **round-robin** (`seq % live replicas`) into stage `i+1`,
+//! carrying each request's response channel along. Frames therefore
+//! leave every stage — and the pipeline — in admission order, exactly
+//! once, regardless of replica completion order.
+//!
+//! ## Control plane
+//!
+//! [`ShardedPipeline::spawn_with_control`] layers the fleet control
+//! plane ([`crate::coordinator::control`]) over the chain:
+//!
+//! * a heartbeat-driven [`ReplicaRegistry`]: dispatch (front and every
+//!   forwarder) round-robins over each stage's **live** replica set, so
+//!   a board whose beats lapse is ejected from the interleave and
+//!   readmitted when it recovers;
+//! * per-tenant QoS via a [`TenantTable`]: the first stage's queue
+//!   schedules by class (bands / weighted-fair / quotas) and the
+//!   pipeline keeps a per-tenant metrics block that reconciles exactly
+//!   (`requests == ok_frames + errors + shed` per class);
+//! * content-keyed [`DedupCoalescer`]: an identical in-flight frame
+//!   rides its primary and fans out at settlement instead of consuming
+//!   a pipeline slot;
+//! * an [`AimdWindow`]: the in-flight cap adapts to observed latency
+//!   instead of being hand-picked.
 //!
 //! ## Accounting
 //!
 //! Three layers of metrics, all reconciling exactly at quiescence:
 //!
 //! * **per replica** — each server's own `requests == ok_frames +
-//!   errors + shed` invariant;
+//!   errors + shed` invariant; dispatch uses *offer* semantics
+//!   ([`ServeHandle::offer_frame_for`]), so a frame refused here and
+//!   admitted by a sibling is charged to the sibling only, and a frame
+//!   every candidate refused is charged (`requests` + `shed`) exactly
+//!   once, to its first-choice replica;
 //! * **per stage** — [`ShardedPipeline::stage_totals`] sums the
-//!   replicas; a stage's `requests` counts what the dispatcher issued
-//!   to it (not what entered the pipeline);
+//!   replicas; a stage's `requests` equals the frames the dispatcher
+//!   resolved against it — not the attempts (the old failover path
+//!   double-counted a refused-then-rescued frame on two replicas);
 //! * **per link** — each forwarder records how many frames it pushed
 //!   into every consumer replica lane of the next stage
-//!   ([`LinkOccupancy`]; the serving-side analogue of the per-cut link
-//!   occupancy the topology model prices), plus the sequence holes it
-//!   propagated;
+//!   ([`LinkOccupancy`]), plus the sequence holes it propagated;
 //! * **end-to-end** — the pipeline's [`Metrics`]: a request counts into
-//!   `shed` iff refused at first-stage admission, `ok_frames` iff the
-//!   last stage produced its tensor, `errors` otherwise (any stage
-//!   failing, expiring, or refusing mid-pipeline), so
-//!   `requests == ok_frames + errors + shed` end-to-end too
-//!   (`tests/shard_integration.rs` and `tests/sim_vs_model.rs` drive
-//!   this).
+//!   `shed` iff refused at first-stage admission (or by the in-flight
+//!   window), `ok_frames` iff the last stage produced its tensor,
+//!   `errors` otherwise, so `requests == ok_frames + errors + shed`
+//!   end-to-end too — and per tenant, when a table is attached.
 //!
 //! ## Bounding the reorder window
 //!
@@ -43,26 +63,31 @@
 //! buffers. [`ShardedPipeline::spawn_with_window`] spills that bound
 //! into admission: with at most `w` frames in flight (admitted but not
 //! yet settled), no reorder buffer can ever hold more than `w` frames —
-//! the excess is refused at the front with
-//! [`ServeError::Overloaded`] instead of accumulating.
+//! the excess is refused at the front with [`ServeError::Overloaded`]
+//! instead of accumulating. Under [`WindowPolicy::Aimd`] the cap `w`
+//! itself tracks the observed latency.
 //!
 //! ## Sibling failover
 //!
 //! Replica issue is round-robin by admission sequence — the even
 //! spreading the planner models. Under a `Reject` admission policy a
 //! stalled replica used to shed its whole share even when a sibling had
-//! room; the dispatcher now retries the *next* replica once before
+//! room; the dispatcher retries the *next live* replica once before
 //! giving up (a bounded spill that keeps the round-robin discipline in
 //! the common case). The retry clones the frame only when the stage
-//! actually has siblings; a no-copy retry path through the queue stays
-//! a ROADMAP follow-on.
+//! actually has live siblings; a no-copy retry path through the queue
+//! stays a ROADMAP follow-on.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
+use crate::coordinator::control::{
+    key_of, Admission, AimdWindow, ControlConfig, DedupCoalescer, ReplicaRegistry, TenantTable,
+    Waiter, WindowPolicy,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{QueueConfig, ServeError};
 use crate::coordinator::reorder::ReorderBuffer;
@@ -200,13 +225,16 @@ impl LinkOccupancy {
 
 /// One in-flight request travelling the stage chain: its admission
 /// sequence number (the reorder key), where its current stage will
-/// answer, when it entered the pipeline, and where the final answer
-/// must go.
+/// answer, when it entered the pipeline, where the final answer must
+/// go, which tenant it bills to, and — when dedup is on — the content
+/// key whose parked duplicates settle with it.
 struct InFlight {
     seq: u64,
     rx: Receiver<Result<HostTensor, ServeError>>,
     entered: Instant,
     respond: SyncSender<Result<HostTensor, ServeError>>,
+    tenant: usize,
+    key: Option<u64>,
 }
 
 enum FeedMsg {
@@ -217,11 +245,39 @@ enum FeedMsg {
     Close,
 }
 
+/// The pipeline's resolved in-flight cap.
+enum Window {
+    Unbounded,
+    Fixed(usize),
+    Aimd(Arc<AimdWindow>),
+}
+
+impl Window {
+    fn current(&self) -> Option<usize> {
+        match self {
+            Window::Unbounded => None,
+            Window::Fixed(w) => Some(*w),
+            Window::Aimd(a) => Some(a.window()),
+        }
+    }
+}
+
+/// The control-plane pieces every dispatcher (front + forwarders)
+/// shares. All fields optional: a default pipeline carries none.
+struct PipelineControl {
+    tenants: Option<Arc<TenantTable>>,
+    registry: Option<Arc<ReplicaRegistry>>,
+    dedup: Option<Arc<DedupCoalescer>>,
+    aimd: Option<Arc<AimdWindow>>,
+}
+
 /// A chain of (replica groups of) per-board accelerator servers serving
 /// one sharded network.
 pub struct ShardedPipeline {
     /// `stages[i]` = stage `i`'s replica servers, in board order.
     stages: Vec<Vec<AcceleratorServer>>,
+    /// First-stage submission handles (offer semantics).
+    front: Vec<ServerHandle>,
     forwarders: Vec<Option<JoinHandle<()>>>,
     /// Senders into each forwarder (index i watches stage i's results).
     feeds: Vec<mpsc::Sender<FeedMsg>>,
@@ -235,10 +291,11 @@ pub struct ShardedPipeline {
     next_seq: AtomicU64,
     /// Cap on frames in flight (admitted, not yet settled): bounds every
     /// reorder buffer, since held frames are a subset of in-flight ones.
-    max_in_flight: Option<usize>,
+    window: Window,
     /// Whether the first stage's admission can refuse (`Reject` policy)
     /// — gates sibling failover at the pipeline front.
     front_refusable: bool,
+    control: Arc<PipelineControl>,
     /// End-to-end metrics (per-replica metrics live on each server).
     pub metrics: Arc<Metrics>,
 }
@@ -246,9 +303,10 @@ pub struct ShardedPipeline {
 impl ShardedPipeline {
     /// Spawn every stage's replica servers plus the forwarder chain
     /// between stages. At least one stage is required. The reorder
-    /// window is unbounded; see [`Self::spawn_with_window`].
+    /// window is unbounded; see [`Self::spawn_with_window`] and
+    /// [`Self::spawn_with_control`].
     pub fn spawn(specs: Vec<StageSpec>) -> anyhow::Result<Self> {
-        Self::spawn_with_window(specs, None)
+        Self::spawn_with_control(specs, ControlConfig::default())
     }
 
     /// [`Self::spawn`] with a bound on frames in flight: once
@@ -261,11 +319,34 @@ impl ShardedPipeline {
         specs: Vec<StageSpec>,
         max_in_flight: Option<usize>,
     ) -> anyhow::Result<Self> {
+        let window = match max_in_flight {
+            Some(w) => WindowPolicy::Fixed(w),
+            None => WindowPolicy::None,
+        };
+        Self::spawn_with_control(specs, ControlConfig { window, ..ControlConfig::default() })
+    }
+
+    /// [`Self::spawn`] with the fleet control plane: tenant classes
+    /// (the first stage's queue schedules by class; per-tenant metrics
+    /// reconcile end-to-end), a heartbeat registry (dispatch follows
+    /// each stage's live set), content-keyed dedup, and a fixed or
+    /// AIMD-adaptive in-flight window.
+    pub fn spawn_with_control(
+        mut specs: Vec<StageSpec>,
+        cfg: ControlConfig,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(!specs.is_empty(), "sharded pipeline needs at least one stage");
         anyhow::ensure!(
-            max_in_flight != Some(0),
+            cfg.window != WindowPolicy::Fixed(0),
             "max_in_flight = 0 would refuse every frame"
         );
+        if let Some(table) = &cfg.tenants {
+            // The first stage's queue schedules pops by class; outcome
+            // accounting stays end-to-end (the settle path), so stage
+            // queues must not double-book the per-tenant blocks.
+            specs[0].queue.tenants = Some(table.clone());
+            specs[0].queue.tenant_accounting = false;
+        }
         let metrics = Arc::new(Metrics::new());
         // Sibling failover only matters where admission can refuse the
         // newcomer: a `Reject` queue. `Block` waits and `ShedOldest`
@@ -289,6 +370,25 @@ impl ShardedPipeline {
             .map(|i| Arc::new(LinkOccupancy::new(stages[i + 1].len())))
             .collect();
 
+        let replica_counts: Vec<usize> = stages.iter().map(|g| g.len()).collect();
+        let registry = cfg
+            .heartbeat_timeout
+            .map(|timeout| Arc::new(ReplicaRegistry::new(&replica_counts, timeout)));
+        let (window, aimd) = match cfg.window {
+            WindowPolicy::None => (Window::Unbounded, None),
+            WindowPolicy::Fixed(w) => (Window::Fixed(w), None),
+            WindowPolicy::Aimd(acfg) => {
+                let a = Arc::new(AimdWindow::new(acfg));
+                (Window::Aimd(a.clone()), Some(a))
+            }
+        };
+        let control = Arc::new(PipelineControl {
+            tenants: cfg.tenants,
+            registry,
+            dedup: if cfg.dedup { Some(Arc::new(DedupCoalescer::new())) } else { None },
+            aimd,
+        });
+
         // Forwarders are built back-to-front: forwarder i needs the
         // handles of stage i+1's replicas and the feed of forwarder i+1.
         let mut feeds: Vec<Option<mpsc::Sender<FeedMsg>>> = (0..count).map(|_| None).collect();
@@ -298,6 +398,7 @@ impl ShardedPipeline {
             let next = if i + 1 < count {
                 Some(Downstream {
                     handles: stages[i + 1].iter().map(|s| s.handle()).collect(),
+                    stage: i + 1,
                     refusable: refusable[i + 1],
                     feed: feeds[i + 1].clone().expect("next feed built"),
                     link: links[i].clone(),
@@ -306,22 +407,26 @@ impl ShardedPipeline {
                 None
             };
             let e2e = metrics.clone();
+            let ctl = control.clone();
             forwarders.push(Some(std::thread::spawn(move || {
-                forward_loop(rx, next, e2e);
+                forward_loop(rx, next, ctl, e2e);
             })));
             feeds[i] = Some(tx);
         }
         forwarders.reverse(); // index i == forwarder of stage i
         let feeds = feeds.into_iter().map(|f| f.expect("feed built")).collect();
+        let front = stages[0].iter().map(|s| s.handle()).collect();
         Ok(Self {
             stages,
+            front,
             forwarders,
             feeds,
             links,
             rr: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
-            max_in_flight,
+            window,
             front_refusable: refusable[0],
+            control,
             metrics,
         })
     }
@@ -364,6 +469,37 @@ impl ShardedPipeline {
         self.links.len()
     }
 
+    /// The heartbeat registry, when [`ControlConfig::heartbeat_timeout`]
+    /// was set. Boards (or the harness standing in for them) post beats
+    /// here; dispatch follows its live sets.
+    pub fn registry(&self) -> Option<&Arc<ReplicaRegistry>> {
+        self.control.registry.as_ref()
+    }
+
+    /// The tenant table, when [`ControlConfig::tenants`] was set.
+    pub fn tenants(&self) -> Option<&Arc<TenantTable>> {
+        self.control.tenants.as_ref()
+    }
+
+    /// The AIMD window controller, under [`WindowPolicy::Aimd`].
+    pub fn aimd(&self) -> Option<&Arc<AimdWindow>> {
+        self.control.aimd.as_ref()
+    }
+
+    /// The dedup/coalescing table, when [`ControlConfig::dedup`] is on.
+    pub fn dedup(&self) -> Option<&Arc<DedupCoalescer>> {
+        self.control.dedup.as_ref()
+    }
+
+    /// The in-flight cap currently in force (`None` = unbounded).
+    pub fn current_window(&self) -> Option<usize> {
+        self.window.current()
+    }
+
+    fn tenant_metrics(&self, tenant: usize) -> Option<&Arc<Metrics>> {
+        self.control.tenants.as_ref().map(|t| t.metrics(tenant))
+    }
+
     /// Frames currently in flight: admitted at the front but not yet
     /// settled (approximate under concurrent submitters).
     pub fn in_flight(&self) -> u64 {
@@ -374,8 +510,12 @@ impl ShardedPipeline {
     }
 
     /// Prometheus-style dump of the whole pipeline: end-to-end metrics,
-    /// per-replica metrics, and per-link occupancy (lane counts +
-    /// propagated skips) — the body the scrape endpoint serves.
+    /// per-replica metrics, per-link occupancy (lane counts +
+    /// propagated skips), and — when the control plane is on —
+    /// per-tenant series (`dnnx_tenant_*{tenant="<class>"}`), registry
+    /// transitions and per-replica liveness, dedup hit/miss counters,
+    /// and the in-flight window gauge. This is the body the scrape
+    /// endpoint serves.
     pub fn prometheus_text(&self) -> String {
         use crate::coordinator::scrape::metrics_text;
         let mut out = String::new();
@@ -401,67 +541,147 @@ impl ShardedPipeline {
                 link.skipped()
             ));
         }
+        if let Some(table) = &self.control.tenants {
+            for (i, class) in table.classes().iter().enumerate() {
+                metrics_text(
+                    &mut out,
+                    "dnnx_tenant",
+                    &format!("tenant=\"{}\"", class.name),
+                    table.metrics(i),
+                );
+            }
+        }
+        if let Some(reg) = &self.control.registry {
+            out.push_str(&format!("dnnx_registry_ejections_total {}\n", reg.ejections()));
+            out.push_str(&format!(
+                "dnnx_registry_readmissions_total {}\n",
+                reg.readmissions()
+            ));
+            for s in 0..reg.stages() {
+                for k in 0..reg.replicas(s) {
+                    let live = if reg.is_ejected(s, k) { 0 } else { 1 };
+                    out.push_str(&format!(
+                        "dnnx_replica_live{{stage=\"{s}\",replica=\"{k}\"}} {live}\n"
+                    ));
+                }
+            }
+        }
+        if let Some(d) = &self.control.dedup {
+            out.push_str(&format!("dnnx_dedup_hits_total {}\n", d.hits()));
+            out.push_str(&format!("dnnx_dedup_misses_total {}\n", d.misses()));
+        }
+        if let Some(w) = self.window.current() {
+            out.push_str(&format!("dnnx_pipeline_window {w}\n"));
+        }
         out.push_str(&format!("dnnx_pipeline_in_flight {}\n", self.in_flight()));
         out
     }
 
+    /// Record a front refusal — window shed or first-stage refusal — on
+    /// the e2e and tenant books, aborting any dedup waiters already
+    /// parked under this frame's key (each was counted as a request and
+    /// settles as shed, so every book still reconciles). Returns the
+    /// error for the caller to propagate.
+    fn shed_front(&self, tenant: usize, key: Option<u64>, err: ServeError) -> ServeError {
+        self.metrics.record_shed();
+        if let Some(tm) = self.tenant_metrics(tenant) {
+            tm.record_shed();
+        }
+        if let (Some(key), Some(d)) = (key, &self.control.dedup) {
+            for w in d.take(key) {
+                self.metrics.record_shed();
+                if let Some(tm) = self.tenant_metrics(w.tenant) {
+                    tm.record_shed();
+                }
+                let _ = w.respond.send(Err(err.clone()));
+            }
+        }
+        err
+    }
+
     /// Open-loop submission: admit one frame at the first stage
-    /// (round-robin across its replicas) and return the receiver of the
-    /// **final** stage's output. A refusal at first-stage admission
-    /// counts as `shed` end-to-end and surfaces here; anything later
-    /// resolves through the receiver — in admission order, the reorder
-    /// buffers guarantee.
+    /// (round-robin across its live replicas) and return the receiver
+    /// of the **final** stage's output. A refusal at first-stage
+    /// admission counts as `shed` end-to-end and surfaces here;
+    /// anything later resolves through the receiver — in admission
+    /// order, the reorder buffers guarantee.
     ///
     /// Round-robin fixes each frame's replica by the cursor — the even
     /// spreading the planner models (`perfmodel::interleave`). When
     /// that replica refuses admission the dispatcher retries the *next*
-    /// replica once (sibling failover) before shedding, so a stalled
-    /// replica under `Reject` no longer drops its share while a sibling
-    /// has room. With [`Self::spawn_with_window`] set, frames beyond
-    /// the in-flight bound are refused before touching any queue.
+    /// live replica once (sibling failover) before shedding, so a
+    /// stalled replica under `Reject` no longer drops its share while a
+    /// sibling has room. With an in-flight window set, frames beyond
+    /// the bound are refused before touching any queue.
     pub fn submit_frame(
         &self,
         input: HostTensor,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.submit_frame_for(0, input)
+    }
+
+    /// [`Self::submit_frame`] billed to a tenant class (clamped into
+    /// the table; index 0 when no table is attached). With dedup on, a
+    /// frame byte-identical to one already in flight coalesces onto it:
+    /// the returned receiver resolves when the primary settles, and no
+    /// new pipeline slot is consumed.
+    pub fn submit_frame_for(
+        &self,
+        tenant: usize,
+        input: HostTensor,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        let tenant = match &self.control.tenants {
+            Some(t) => t.clamp(tenant),
+            None => 0,
+        };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        if let Some(w) = self.max_in_flight {
-            // Counting this request, more than `w` unsettled frames
-            // means the reorder window is full: refuse at the front.
-            if self.in_flight() > w as u64 {
-                self.metrics.record_shed();
-                return Err(ServeError::Overloaded);
-            }
+        if let Some(tm) = self.tenant_metrics(tenant) {
+            tm.requests.fetch_add(1, Ordering::Relaxed);
         }
         let entered = Instant::now();
         let (respond, final_rx) = mpsc::sync_channel(1);
-        let group = &self.stages[0];
-        let replica = (self.rr.fetch_add(1, Ordering::Relaxed) % group.len() as u64) as usize;
-        match submit_with_failover(
-            |k, t| group[k].handle().submit_frame(t),
-            group.len(),
-            self.front_refusable,
-            replica,
-            input,
-        ) {
+        let key = match &self.control.dedup {
+            Some(d) => {
+                let key = key_of(&input);
+                let parked = respond.clone();
+                match d.admit(key, move || Waiter { respond: parked, entered, tenant }) {
+                    Admission::Coalesced => return Ok(final_rx),
+                    Admission::Primary => Some(key),
+                }
+            }
+            None => None,
+        };
+        if let Some(w) = self.window.current() {
+            // Counting this request, more than `w` unsettled frames
+            // means the reorder window is full: refuse at the front.
+            if self.in_flight() > w as u64 {
+                return Err(self.shed_front(tenant, key, ServeError::Overloaded));
+            }
+        }
+        let live: Vec<usize> = match &self.control.registry {
+            Some(reg) => reg.live_replicas(0),
+            None => (0..self.front.len()).collect(),
+        };
+        let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
+        let offered =
+            offer_with_failover(&self.front, &live, self.front_refusable, cursor, tenant, input);
+        match offered {
             Ok((_, rx)) => {
                 // The sequence number is taken *after* admission, so
                 // refused frames leave no hole in the reorder space.
                 let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-                if self.feeds[0]
-                    .send(FeedMsg::Job(InFlight { seq, rx, entered, respond }))
-                    .is_err()
+                let job = InFlight { seq, rx, entered, respond, tenant, key };
+                if let Err(mpsc::SendError(FeedMsg::Job(job))) =
+                    self.feeds[0].send(FeedMsg::Job(job))
                 {
-                    // Forwarder gone (shutdown race): the dropped
-                    // respond channel reads as Closed; account the
-                    // admitted request so the books still balance.
-                    self.metrics.record_failure(entered.elapsed());
+                    // Forwarder gone (shutdown race): settle the
+                    // admitted frame as Closed so the books balance —
+                    // dedup waiters included.
+                    settle(job, Err(ServeError::Closed), &self.control, &self.metrics);
                 }
                 Ok(final_rx)
             }
-            Err(e) => {
-                self.metrics.record_shed();
-                Err(e)
-            }
+            Err(e) => Err(self.shed_front(tenant, key, e)),
         }
     }
 
@@ -495,102 +715,169 @@ impl ShardedPipeline {
     }
 }
 
-/// What one replica admission returns: the response receiver, or a
-/// typed refusal.
-type AdmitResult = Result<Receiver<Result<HostTensor, ServeError>>, ServeError>;
-
-/// Submit a frame to the chosen replica, retrying its next sibling once
-/// on an admission refusal. The retry (and the tensor clone it needs)
-/// only engages when the stage can actually refuse — a `Reject`-policy
-/// queue with a sibling to spill to; `Block`/`ShedOldest` stages never
-/// return `Overloaded` at admission, so they keep the clone-free direct
-/// path. Returns the lane that actually admitted the frame; a double
-/// refusal reports the *first* replica's error.
-fn submit_with_failover(
-    submit: impl Fn(usize, HostTensor) -> AdmitResult,
-    replicas: usize,
+/// Offer a frame to the cursor's replica within the live set, retrying
+/// the next live sibling once on an admission refusal. Offer semantics
+/// keep per-replica books exact: an admission counts `requests` on the
+/// admitting replica only, and a frame every candidate refused is
+/// charged — `requests` + `shed`, exactly once — to its first-choice
+/// replica via [`ServeHandle::record_refused`]. (The old submit-based
+/// path counted every *attempt* as a request and every refusal as a
+/// shed, so one spilled frame inflated two replicas' books; the
+/// `failover_counts_each_frame_exactly_once_per_stage` regression pins
+/// the fix.) The retry — and the tensor clone it needs — only engages
+/// when the stage can actually refuse (`Reject` policy) and has a live
+/// sibling to spill to. Returns the lane that admitted the frame; a
+/// double refusal reports the *first* replica's error.
+fn offer_with_failover(
+    handles: &[ServerHandle],
+    live: &[usize],
     refusable: bool,
-    replica: usize,
+    cursor: u64,
+    tenant: usize,
     input: HostTensor,
 ) -> Result<(usize, Receiver<Result<HostTensor, ServeError>>), ServeError> {
-    if replicas <= 1 || !refusable {
-        return submit(replica, input).map(|rx| (replica, rx));
+    let k0 = live[(cursor % live.len() as u64) as usize];
+    if live.len() <= 1 || !refusable {
+        return match handles[k0].offer_frame_for(tenant, input) {
+            Ok(rx) => Ok((k0, rx)),
+            Err(e) => {
+                handles[k0].record_refused();
+                Err(e)
+            }
+        };
     }
-    match submit(replica, input.clone()) {
-        Ok(rx) => Ok((replica, rx)),
+    match handles[k0].offer_frame_for(tenant, input.clone()) {
+        Ok(rx) => Ok((k0, rx)),
         Err(first) => {
-            let alt = (replica + 1) % replicas;
-            match submit(alt, input) {
-                Ok(rx) => Ok((alt, rx)),
-                Err(_) => Err(first),
+            let k1 = live[((cursor + 1) % live.len() as u64) as usize];
+            match handles[k1].offer_frame_for(tenant, input) {
+                Ok(rx) => Ok((k1, rx)),
+                Err(_) => {
+                    handles[k0].record_refused();
+                    Err(first)
+                }
             }
         }
     }
 }
 
 /// Everything a forwarder knows about its downstream side: the next
-/// stage's replica handles, whether that stage's admission can refuse
-/// (`Reject` policy — gates sibling failover), the next forwarder's
-/// feed, and the occupancy counters of the link in between.
+/// stage's replica handles and index (for the registry's live set),
+/// whether that stage's admission can refuse (`Reject` policy — gates
+/// sibling failover), the next forwarder's feed, and the occupancy
+/// counters of the link in between.
 struct Downstream {
     handles: Vec<ServerHandle>,
+    stage: usize,
     refusable: bool,
     feed: mpsc::Sender<FeedMsg>,
     link: Arc<LinkOccupancy>,
 }
 
-/// Hand one re-ordered result to the next stage (round-robin by
-/// sequence number, sibling failover on refusal) or settle it
-/// end-to-end.
+/// Book one settled outcome: e2e and per-tenant success/failure with
+/// the frame's own latency, feeding the AIMD controller on success.
+fn record_outcome(
+    ctl: &PipelineControl,
+    e2e: &Metrics,
+    tenant: usize,
+    entered: Instant,
+    result: &Result<HostTensor, ServeError>,
+) {
+    let elapsed = entered.elapsed();
+    match result {
+        Ok(_) => {
+            e2e.record_success(elapsed);
+            if let Some(table) = &ctl.tenants {
+                table.metrics(tenant).record_success(elapsed);
+            }
+            if let Some(aimd) = &ctl.aimd {
+                aimd.observe(elapsed);
+            }
+        }
+        Err(_) => {
+            e2e.record_failure(elapsed);
+            if let Some(table) = &ctl.tenants {
+                table.metrics(tenant).record_failure(elapsed);
+            }
+        }
+    }
+}
+
+/// Settle one frame end-to-end: book it, fan the result out to every
+/// dedup waiter parked under its key (each books under its own tenant
+/// with its own latency), and answer the submitter. This is the single
+/// exit point of the pipeline — every admitted frame passes through
+/// exactly once, which is what keeps the reconciliation invariant
+/// exact.
+fn settle(
+    job: InFlight,
+    result: Result<HostTensor, ServeError>,
+    ctl: &PipelineControl,
+    e2e: &Metrics,
+) {
+    record_outcome(ctl, e2e, job.tenant, job.entered, &result);
+    if let (Some(key), Some(d)) = (job.key, &ctl.dedup) {
+        for w in d.take(key) {
+            record_outcome(ctl, e2e, w.tenant, w.entered, &result);
+            let _ = w.respond.send(result.clone());
+        }
+    }
+    let _ = job.respond.send(result);
+}
+
+/// Hand one re-ordered result to the next stage (round-robin over its
+/// live replicas by sequence number, sibling failover on refusal) or
+/// settle it end-to-end.
 fn deliver(
     job: InFlight,
     result: Result<HostTensor, ServeError>,
     next: &Option<Downstream>,
+    ctl: &PipelineControl,
     e2e: &Metrics,
 ) {
     match (result, next) {
         (Ok(tensor), Some(down)) => {
-            let replica = (job.seq % down.handles.len() as u64) as usize;
-            match submit_with_failover(
-                |k, t| down.handles[k].submit_frame(t),
-                down.handles.len(),
+            let live: Vec<usize> = match &ctl.registry {
+                Some(reg) => reg.live_replicas(down.stage),
+                None => (0..down.handles.len()).collect(),
+            };
+            match offer_with_failover(
+                &down.handles,
+                &live,
                 down.refusable,
-                replica,
+                job.seq,
+                job.tenant,
                 tensor,
             ) {
                 Ok((lane, rx)) => {
                     down.link.record_forward(lane);
-                    let fwd =
-                        InFlight { seq: job.seq, rx, entered: job.entered, respond: job.respond };
-                    if down.feed.send(FeedMsg::Job(fwd)).is_err() {
-                        // Next forwarder gone (shutdown race): the
-                        // dropped respond channel reads as Closed.
-                        e2e.record_failure(Duration::ZERO);
+                    let fwd = InFlight { rx, ..job };
+                    if let Err(mpsc::SendError(FeedMsg::Job(fwd))) =
+                        down.feed.send(FeedMsg::Job(fwd))
+                    {
+                        // Next forwarder gone (shutdown race): settle
+                        // with the frame's real latency.
+                        settle(fwd, Err(ServeError::Closed), ctl, e2e);
                     }
                 }
                 Err(e) => {
-                    // Mid-pipeline refusal (both siblings): an
+                    // Mid-pipeline refusal (every live candidate): an
                     // end-to-end error (the request was already
                     // admitted at the front). The next reorder buffer
                     // must not wait for this seq.
-                    e2e.record_failure(job.entered.elapsed());
                     down.link.record_skip();
                     let _ = down.feed.send(FeedMsg::Skip(job.seq));
-                    let _ = job.respond.send(Err(e));
+                    settle(job, Err(e), ctl, e2e);
                 }
             }
         }
-        (Ok(tensor), None) => {
-            e2e.record_success(job.entered.elapsed());
-            let _ = job.respond.send(Ok(tensor));
-        }
+        (Ok(tensor), None) => settle(job, Ok(tensor), ctl, e2e),
         (Err(e), next) => {
-            e2e.record_failure(job.entered.elapsed());
             if let Some(down) = next {
                 down.link.record_skip();
                 let _ = down.feed.send(FeedMsg::Skip(job.seq));
             }
-            let _ = job.respond.send(Err(e));
+            settle(job, Err(e), ctl, e2e);
         }
     }
 }
@@ -598,7 +885,12 @@ fn deliver(
 /// The forwarder body for stage `i`: harvest the stage's completions
 /// (in whatever order the replicas finish), re-order them, and deliver
 /// strictly in admission order.
-fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metrics>) {
+fn forward_loop(
+    feed: Receiver<FeedMsg>,
+    next: Option<Downstream>,
+    ctl: Arc<PipelineControl>,
+    e2e: Arc<Metrics>,
+) {
     use std::collections::BTreeMap;
 
     let mut pending: BTreeMap<u64, InFlight> = BTreeMap::new();
@@ -647,7 +939,7 @@ fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metr
             }
         }
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &e2e);
+            deliver(job, result, &next, &ctl, &e2e);
         }
         let Some((seq, job)) = pending.pop_first() else { continue };
         // Block on the earliest outstanding completion. Later frames
@@ -664,7 +956,7 @@ fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metr
         // Emit everything now releasable, strictly in order (the push
         // above plus anything a skip unblocked).
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &e2e);
+            deliver(job, result, &next, &ctl, &e2e);
         }
     }
 
@@ -674,7 +966,7 @@ fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metr
             ingest(msg, &mut pending, &mut buffer);
         }
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &e2e);
+            deliver(job, result, &next, &ctl, &e2e);
         }
         match pending.pop_first() {
             Some((seq, job)) => {
@@ -688,17 +980,17 @@ fn forward_loop(feed: Receiver<FeedMsg>, next: Option<Downstream>, e2e: Arc<Metr
         }
     }
     while let Some((_, (job, result))) = buffer.pop_next() {
-        deliver(job, result, &next, &e2e);
+        deliver(job, result, &next, &ctl, &e2e);
     }
     // Anything still held is stuck behind a hole (a submission racing
-    // shutdown): settle as Closed so the end-to-end books balance.
+    // shutdown): settle as Closed so the end-to-end books balance —
+    // including any dedup waiters riding those frames.
     for (_, (job, _)) in buffer.drain() {
-        e2e.record_failure(job.entered.elapsed());
         if let Some(down) = &next {
             down.link.record_skip();
             let _ = down.feed.send(FeedMsg::Skip(job.seq));
         }
-        let _ = job.respond.send(Err(ServeError::Closed));
+        settle(job, Err(ServeError::Closed), &ctl, &e2e);
     }
 }
 
@@ -809,10 +1101,7 @@ mod tests {
                 .push(pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap());
         }
         for (i, rx) in receivers.into_iter().enumerate() {
-            let out = rx
-                .recv_timeout(Duration::from_secs(30))
-                .expect("resolves")
-                .expect("serves");
+            let out = rx.recv_timeout(Duration::from_secs(30)).expect("resolves").expect("serves");
             assert_eq!(out.data, vec![i as f32 + 101.0], "frame {i}");
         }
 
@@ -863,6 +1152,7 @@ mod tests {
             Some(w),
         )
         .unwrap();
+        assert_eq!(pipe.current_window(), Some(w));
         // Give the stalled worker time to pull its first frame.
         let mut shed = 0usize;
         for i in 0..32 {
@@ -880,11 +1170,7 @@ mod tests {
             pipe.in_flight()
         );
         // Books stay balanced: every submission is admitted or shed.
-        assert_eq!(
-            pipe.metrics.requests.load(Ordering::Relaxed),
-            32,
-            "every submission counted"
-        );
+        assert_eq!(pipe.metrics.requests.load(Ordering::Relaxed), 32, "every submission counted");
         assert_eq!(pipe.metrics.shed.load(Ordering::Relaxed), shed as u64);
         // Shutdown leaves the stalled frames unresolved (the worker
         // sleeps for an hour), so don't join it: drop the pipeline's
@@ -965,6 +1251,102 @@ mod tests {
     }
 
     #[test]
+    fn failover_counts_each_frame_exactly_once_per_stage() {
+        // Regression for the failover double-count: replica 0 is slow
+        // (30ms per frame, capacity-1 Reject queue) but *not* stalled,
+        // replica 1 is instant. Many frames aimed at replica 0 spill to
+        // replica 1; with offer semantics each such frame must appear
+        // in exactly one replica's `requests`. The old submit-based
+        // path charged the refusing replica a request *and* a shed per
+        // rescued frame, so the stage books read
+        // `requests > frames issued` and `shed > 0` even though nothing
+        // was lost end-to-end.
+        let reject_queue = QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: 1,
+            policy: crate::coordinator::queue::OverloadPolicy::Reject,
+            ..QueueConfig::default()
+        };
+        let pipe = ShardedPipeline::spawn(vec![StageSpec::replicated(
+            2,
+            |k| {
+                if k == 0 {
+                    Ok(Box::new(JitterSleep(Duration::from_millis(30))) as Box<dyn ModelExecutor>)
+                } else {
+                    Ok(Box::new(AddN(0.0)) as Box<dyn ModelExecutor>)
+                }
+            },
+            reject_queue,
+        )])
+        .unwrap();
+        let n = 12usize;
+        let mut receivers = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..n {
+            match pipe.submit_frame(HostTensor::new(vec![i as f32], vec![1]).unwrap()) {
+                Ok(rx) => receivers.push(rx),
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Replica 0 is merely slow, so every admitted frame resolves.
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(30)).expect("resolves").expect("serves");
+        }
+        let totals = pipe.stage_totals(0);
+        assert_eq!(
+            totals.requests,
+            n as u64,
+            "each frame charged to exactly one replica (double-count regression)"
+        );
+        assert_eq!(totals.accounted(), totals.requests, "stage books reconcile");
+        assert_eq!(totals.shed, shed, "stage shed is exactly the frames both replicas refused");
+        assert_eq!(pipe.metrics.accounted(), n as u64, "e2e books reconcile");
+        assert_eq!(pipe.metrics.shed.load(Ordering::Relaxed), shed);
+        // The spill really happened: replica 1 served beyond its strict
+        // round-robin share.
+        let r1 = pipe.replica_metrics(0, 1).requests.load(Ordering::Relaxed);
+        assert!(r1 > (n as u64) / 2, "replica 1 admitted only {r1} of {n}");
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn identical_frames_coalesce_in_flight() {
+        // One slow replica, dedup on: six byte-identical frames submitted
+        // while the first is in flight produce one stage execution, and
+        // the primary's completion fans out to every duplicate.
+        let pipe = ShardedPipeline::spawn_with_control(
+            vec![StageSpec::with_queue(
+                || Ok(JitterSleep(Duration::from_millis(20))),
+                quick_queue(1),
+            )],
+            ControlConfig { dedup: true, ..ControlConfig::default() },
+        )
+        .unwrap();
+        let n = 6usize;
+        let frame = HostTensor::new(vec![1.0, 2.0, 3.0], vec![3]).unwrap();
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            receivers.push(pipe.submit_frame(frame.clone()).unwrap());
+        }
+        for rx in receivers {
+            let out = rx.recv_timeout(Duration::from_secs(30)).expect("resolves").expect("serves");
+            assert_eq!(out.data, frame.data);
+        }
+        let dedup = pipe.dedup().expect("dedup on");
+        assert!(dedup.hits() >= 3, "duplicates should coalesce, hits = {}", dedup.hits());
+        // The stage only saw the primaries; the pipeline books all six.
+        let stage = pipe.stage_totals(0);
+        assert!(stage.requests < n as u64, "stage ran {} of {n} frames", stage.requests);
+        assert_eq!(stage.requests, dedup.misses());
+        assert_eq!(pipe.metrics.requests.load(Ordering::Relaxed), n as u64);
+        assert_eq!(pipe.metrics.ok_frames.load(Ordering::Relaxed), n as u64);
+        assert_eq!(pipe.metrics.accounted(), n as u64, "coalesced frames settle exactly once");
+        pipe.shutdown();
+    }
+
+    #[test]
     fn link_occupancy_counts_forwards_and_skips() {
         // Stage 0: replica 1 fails every frame -> odd seqs die upstream
         // of the cut and must show up as skips; even seqs cross it.
@@ -1027,20 +1409,92 @@ mod tests {
         // Round-robin by sequence: the two lanes split the stream evenly.
         assert_eq!(link.lane_counts(), vec![(n / 2) as u64, (n / 2) as u64]);
         let text = pipe.prometheus_text();
-        assert!(
-            text.contains("dnnx_pipeline_requests_total{scope=\"e2e\"} 6"),
-            "{text}"
-        );
-        assert!(
-            text.contains("dnnx_link_forwarded_total{cut=\"0\",lane=\"0\"} 3"),
-            "{text}"
-        );
+        assert!(text.contains("dnnx_pipeline_requests_total{scope=\"e2e\"} 6"), "{text}");
+        assert!(text.contains("dnnx_link_forwarded_total{cut=\"0\",lane=\"0\"} 3"), "{text}");
         assert!(text.contains("dnnx_link_skipped_total{cut=\"0\"} 0"), "{text}");
-        assert!(
-            text.contains("dnnx_stage_ok_frames_total{stage=\"1\",replica=\"0\"} 3"),
-            "{text}"
-        );
+        assert!(text.contains("dnnx_stage_ok_frames_total{stage=\"1\",replica=\"0\"} 3"), "{text}");
         assert!(text.contains("dnnx_pipeline_in_flight 0"), "{text}");
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn control_plane_series_render_when_enabled() {
+        let pipe = ShardedPipeline::spawn_with_control(
+            vec![StageSpec::replicated(2, |_| Ok(AddN(1.0)), quick_queue(1))],
+            ControlConfig {
+                tenants: Some(Arc::new(TenantTable::tiered(2))),
+                heartbeat_timeout: Some(Duration::from_secs(60)),
+                dedup: true,
+                window: WindowPolicy::Aimd(crate::coordinator::control::AimdConfig::default()),
+            },
+        )
+        .unwrap();
+        let out = pipe
+            .submit_frame_for(1, HostTensor::new(vec![4.0], vec![1]).unwrap())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .expect("resolves")
+            .expect("serves");
+        assert_eq!(out.data, vec![5.0]);
+        // Tenant 1's books carry the frame; tenant 0's stay empty.
+        let table = pipe.tenants().unwrap();
+        assert_eq!(table.metrics(1).requests.load(Ordering::Relaxed), 1);
+        assert_eq!(table.metrics(1).ok_frames.load(Ordering::Relaxed), 1);
+        assert_eq!(table.metrics(0).requests.load(Ordering::Relaxed), 0);
+        let text = pipe.prometheus_text();
+        assert!(text.contains("dnnx_tenant_requests_total{tenant=\"t1\"} 1"), "{text}");
+        assert!(text.contains("dnnx_registry_ejections_total 0"), "{text}");
+        assert!(text.contains("dnnx_replica_live{stage=\"0\",replica=\"1\"} 1"), "{text}");
+        assert!(text.contains("dnnx_dedup_misses_total 1"), "{text}");
+        assert!(text.contains("dnnx_pipeline_window "), "{text}");
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn ejected_replica_receives_no_traffic_until_readmitted() {
+        // Two instant replicas behind a heartbeat registry: beat
+        // replica 0 far into the future (so it stays fresh on the real
+        // clock dispatch uses) and let replica 1's construction beat go
+        // stale; its share of traffic must land on replica 0 until it
+        // beats again.
+        let timeout = Duration::from_millis(50);
+        let pipe = ShardedPipeline::spawn_with_control(
+            vec![StageSpec::replicated(2, |_| Ok(AddN(1.0)), quick_queue(1))],
+            ControlConfig {
+                heartbeat_timeout: Some(timeout),
+                ..ControlConfig::default()
+            },
+        )
+        .unwrap();
+        let reg = pipe.registry().expect("registry on").clone();
+        let fresh = Instant::now() + Duration::from_secs(60);
+        reg.heartbeat_at(0, 0, fresh);
+        std::thread::sleep(timeout + Duration::from_millis(30));
+        assert_eq!(reg.live_replicas(0), vec![0]);
+        assert_eq!(reg.ejections(), 1);
+        assert!(reg.is_ejected(0, 1));
+        let n = 6usize;
+        for i in 0..n {
+            let out = pipe.infer(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap();
+            assert_eq!(out.data, vec![i as f32 + 1.0]);
+        }
+        assert_eq!(
+            pipe.replica_metrics(0, 0).requests.load(Ordering::Relaxed),
+            n as u64,
+            "all traffic lands on the one live replica"
+        );
+        assert_eq!(pipe.replica_metrics(0, 1).requests.load(Ordering::Relaxed), 0);
+        // Recovery: replica 1 beats again and rejoins the interleave.
+        reg.heartbeat_at(0, 1, fresh);
+        for i in 0..n {
+            pipe.infer(HostTensor::new(vec![i as f32], vec![1]).unwrap()).unwrap();
+        }
+        assert_eq!(reg.readmissions(), 1);
+        assert!(
+            pipe.replica_metrics(0, 1).requests.load(Ordering::Relaxed) > 0,
+            "readmitted replica rejoins the interleave"
+        );
+        assert_eq!(pipe.metrics.accounted(), 2 * n as u64);
         pipe.shutdown();
     }
 
@@ -1052,7 +1506,13 @@ mod tests {
         let pipe = ShardedPipeline::spawn(vec![
             StageSpec::replicated(
                 2,
-                |k| if k == 1 { Ok(Box::new(Failer) as Box<dyn ModelExecutor>) } else { Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>) },
+                |k| {
+                    if k == 1 {
+                        Ok(Box::new(Failer) as Box<dyn ModelExecutor>)
+                    } else {
+                        Ok(Box::new(AddN(1.0)) as Box<dyn ModelExecutor>)
+                    }
+                },
                 quick_queue(1),
             ),
             StageSpec::with_queue(|| Ok(AddN(10.0)), quick_queue(1)),

@@ -78,8 +78,17 @@
 //!   [`coordinator::ServeError`] rejections, and lock-free metrics that
 //!   reconcile exactly (`requests == ok_frames + errors + shed`).
 //!   Batch fill waits on a condvar with the queue lock released, so one
-//!   filling worker can never convoy the rest. `dnnexplorer serve-bench`
-//!   and `examples/serve_overload.rs` drive the path at 2x capacity.
+//!   filling worker can never convoy the rest. On top sits the fleet
+//!   control plane ([`coordinator::control`]): a heartbeat-driven
+//!   replica registry (stale boards are ejected from the round-robin
+//!   interleave and readmitted on recovery), per-tenant QoS classes
+//!   (strict priority bands, stride weighted-fair shares, resident
+//!   quotas — scheduled inside the admission queue, accounted per
+//!   tenant in the scrape output), content-keyed dedup/coalescing of
+//!   identical in-flight frames, and AIMD adaptation of the in-flight
+//!   window from observed p99 latency. `dnnexplorer serve-bench`
+//!   and `examples/serve_overload.rs` drive the path at 2x capacity,
+//!   including multi-tenant + AIMD + eject/readmit smokes.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation as text rows/series.
 

@@ -38,10 +38,15 @@ USAGE:
   dnnexplorer simulate [explore flags]                 # board-level (simulated) check
   dnnexplorer serve   [--artifacts DIR] [--requests N] [--batch B]
                       [--capacity Q] [--policy block|reject|shed]
+                      [--tenants SPEC]     # QoS classes: N or name:weight[:band[:quota]],...
                       [--metrics-port P]   # Prometheus text endpoint (0 = ephemeral)
   dnnexplorer serve-bench [--workers W] [--batch B] [--capacity Q]
                       [--policy block|reject|shed] [--requests N]
                       [--service-us U] [--load X] [--metrics-port P]
+                      [--tenants SPEC] [--stages S] [--window N] [--aimd]
+                      [--aimd-p99-us U] [--heartbeat-ms MS] [--eject FROM:TO]
+                      # any control-plane flag switches the bench from the
+                      # worker-pool router to the sharded pipeline + control plane
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
           googlenet inceptionv3 squeezenet mobilenet mobilenetv2
@@ -61,7 +66,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let is_bool = matches!(key, "json" | "full");
+                let is_bool = matches!(key, "json" | "full" | "aimd");
                 if is_bool {
                     flags.insert(key.to_string(), "true".into());
                 } else {
@@ -711,6 +716,16 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 4)?;
     let capacity = args.get_usize("capacity", 1024)?;
     let policy = parse_policy(args.get("policy"))?;
+    let tenants = match args.get("tenants") {
+        Some(spec) => {
+            Some(std::sync::Arc::new(dnnexplorer::coordinator::TenantTable::parse(spec)?))
+        }
+        None => None,
+    };
+    let classes = match &tenants {
+        Some(t) => t.len(),
+        None => 1,
+    };
 
     let store = ArtifactStore::open(&artifacts)?;
     let first = store
@@ -740,6 +755,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             },
             capacity,
             policy,
+            tenants: tenants.clone(),
             ..QueueConfig::default()
         },
     )?;
@@ -754,7 +770,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             for (j, v) in frame.data.iter_mut().enumerate() {
                 *v = ((i * 31 + j) % 255) as f32 / 255.0;
             }
-            h.infer(frame).is_ok()
+            match h.submit_frame_for(i % classes, frame) {
+                Ok(rx) => matches!(rx.recv(), Ok(Ok(_))),
+                Err(_) => false,
+            }
         }));
     }
     let ok = clients
@@ -768,6 +787,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         requests as f64 / dt,
         server.metrics.summary()
     );
+    if let Some(t) = &tenants {
+        println!("tenants: {}", t.summary());
+    }
     if let Some(e) = exporter {
         e.shutdown();
     }
@@ -775,18 +797,34 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Open-loop overload harness: drive a synthetic worker pool at a
-/// multiple of its capacity and report what the admission queue did —
-/// the accepted/shed split, reconciliation, and latency percentiles.
-/// Synthetic (spin-loop) executors keep the harness runnable anywhere;
-/// `serve` exercises the same path over real artifacts.
+/// Open-loop overload harness. Two shapes share the flag set: the
+/// classic worker-pool [`Router`] bench, and — when any control-plane
+/// flag is present (`--tenants`, `--stages`, `--window`, `--aimd`,
+/// `--aimd-p99-us`, `--heartbeat-ms`, `--eject`) — a sharded pipeline
+/// driven through the fleet control plane, with built-in
+/// reconciliation, QoS-differentiation, and eject/readmit checks so
+/// the CI smoke fails loudly on regression.
 fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    let control = ["tenants", "stages", "window", "aimd", "aimd-p99-us", "heartbeat-ms", "eject"];
+    if control.iter().any(|k| args.has(k)) {
+        serve_bench_pipeline(&args)
+    } else {
+        serve_bench_router(&args)
+    }
+}
+
+/// The classic bench: a synthetic worker pool at a multiple of its
+/// capacity, reporting what the admission queue did — the accepted/shed
+/// split, reconciliation, and latency percentiles. Synthetic
+/// (spin-loop) executors keep the harness runnable anywhere; `serve`
+/// exercises the same path over real artifacts.
+fn serve_bench_router(args: &Args) -> anyhow::Result<()> {
     use dnnexplorer::coordinator::synthetic::SpinServiceModel;
-    use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig, Router, ServeError};
+    use dnnexplorer::coordinator::{BatcherConfig, QueueConfig, Router, ServeError};
     use dnnexplorer::runtime::executable::HostTensor;
     use std::time::{Duration, Instant};
 
-    let args = Args::parse(argv)?;
     let workers = args.get_usize("workers", 2)?.max(1);
     let batch = args.get_usize("batch", 4)?.max(1);
     let capacity = args.get_usize("capacity", 32)?;
@@ -876,5 +914,244 @@ fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
         "accounting failed to reconcile: {}",
         m.summary()
     );
+    Ok(())
+}
+
+/// Control-plane bench: `--stages` x `--workers` replicated pipeline
+/// stages under open-loop load, with tenant classes (`--tenants`), a
+/// heartbeat registry (`--heartbeat-ms`, plus a forced silence window
+/// via `--eject FROM:TO` request indices), and a fixed (`--window`) or
+/// AIMD (`--aimd`) in-flight cap. Ends with hard checks: global and
+/// per-tenant books reconcile, the best class drops less than the
+/// worst, and a forced eject window must eject *and* readmit.
+fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
+    use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+    use dnnexplorer::coordinator::{
+        AimdConfig, BatcherConfig, ControlConfig, MetricsExporter, QueueConfig, ServeError,
+        ShardedPipeline, StageSpec, TenantTable, WindowPolicy,
+    };
+    use dnnexplorer::runtime::executable::HostTensor;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let stages = args.get_usize("stages", 2)?.max(1);
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let batch = args.get_usize("batch", 4)?.max(1);
+    let capacity = args.get_usize("capacity", 32)?;
+    let requests = args.get_usize("requests", 512)?;
+    let service_us = args.get_usize("service-us", 1000)?.max(1) as u64;
+    let load: f64 = match args.get("load") {
+        Some(s) => s.parse()?,
+        None => 2.0,
+    };
+    anyhow::ensure!(load > 0.0, "--load must be positive");
+    let policy = parse_policy(args.get("policy").or(Some("reject")))?;
+    let tenants = match args.get("tenants") {
+        Some(spec) => Some(Arc::new(TenantTable::parse(spec)?)),
+        None => None,
+    };
+    let window = if args.has("aimd") || args.has("aimd-p99-us") {
+        let target_us = args.get_usize("aimd-p99-us", 50_000)?.max(1) as u64;
+        WindowPolicy::Aimd(AimdConfig {
+            target_p99: Duration::from_micros(target_us),
+            ..AimdConfig::default()
+        })
+    } else {
+        match args.get("window") {
+            Some(w) => WindowPolicy::Fixed(w.parse()?),
+            None => WindowPolicy::None,
+        }
+    };
+    let heartbeat_ms = match args.get("heartbeat-ms") {
+        Some(v) => Some(v.parse::<u64>()?),
+        None => None,
+    };
+    let eject = match args.get("eject") {
+        Some(spec) => {
+            let (from, to) = spec
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--eject wants FROM:TO request indices"))?;
+            let (from, to): (usize, usize) = (from.parse()?, to.parse()?);
+            anyhow::ensure!(from < to, "--eject FROM must be below TO");
+            Some((from, to))
+        }
+        None => None,
+    };
+    anyhow::ensure!(
+        eject.is_none() || heartbeat_ms.is_some(),
+        "--eject needs --heartbeat-ms to enable the registry"
+    );
+
+    let per_frame = Duration::from_micros(service_us);
+    let queue = QueueConfig {
+        batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
+        capacity,
+        policy,
+        ..QueueConfig::default()
+    };
+    let specs: Vec<StageSpec> = (0..stages)
+        .map(|_| {
+            StageSpec::replicated(
+                workers,
+                move |_| Ok(FixedServiceModel { per_frame }),
+                queue.clone(),
+            )
+        })
+        .collect();
+    let ctl = ControlConfig {
+        tenants: tenants.clone(),
+        heartbeat_timeout: heartbeat_ms.map(Duration::from_millis),
+        dedup: false,
+        window,
+    };
+    let pipe = Arc::new(ShardedPipeline::spawn_with_control(specs, ctl)?);
+
+    let exporter = match args.get("metrics-port") {
+        Some(p) => {
+            let port: u16 = p.parse()?;
+            let scraped = pipe.clone();
+            let e = MetricsExporter::spawn(port, Arc::new(move || scraped.prometheus_text()))?;
+            println!("metrics: http://127.0.0.1:{}/metrics", e.port());
+            Some(e)
+        }
+        None => None,
+    };
+
+    // One stage's replica pool bounds the pipeline's capacity; the
+    // open-loop offered rate is a multiple of that.
+    let capacity_fps = workers as f64 * 1e6 / service_us as f64;
+    let rate_hz = load * capacity_fps;
+    let classes = match &tenants {
+        Some(t) => t.len(),
+        None => 1,
+    };
+    println!(
+        "serve-bench[pipeline]: {stages} stages x {workers} replicas, {service_us}us/frame \
+         = {capacity_fps:.0} fps/stage; offering {rate_hz:.0}/s ({load:.1}x), \
+         queue bound {capacity} ({policy:?}), {classes} tenant class(es)"
+    );
+
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut shed = 0u64;
+    for i in 0..requests {
+        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        // The harness doubles as the fleet's heartbeat source; during
+        // the forced window the victim (last replica of stage 0) goes
+        // silent so the registry must eject it, then readmit when its
+        // beats resume.
+        if let Some(reg) = pipe.registry() {
+            let silenced = match eject {
+                Some((from, to)) => i >= from && i < to,
+                None => false,
+            };
+            for s in 0..reg.stages() {
+                for r in 0..reg.replicas(s) {
+                    let victim = silenced && s == 0 && r == reg.replicas(0) - 1;
+                    if !victim {
+                        reg.heartbeat(s, r);
+                    }
+                }
+            }
+        }
+        match pipe.submit_frame_for(i % classes, HostTensor::new(vec![i as f32], vec![1])?) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::Overloaded) => shed += 1,
+            Err(e) => anyhow::bail!("unexpected admission error: {e}"),
+        }
+    }
+    let offered_dt = start.elapsed().as_secs_f64();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for rx in pending {
+        // Bounded wait: a hung request is a reportable failure, not a
+        // wedged harness (this runs as a CI smoke step).
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => anyhow::bail!("admitted request never resolved within 60s"),
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+
+    let m = pipe.metrics.clone();
+    println!(
+        "offered {requests} in {offered_dt:.2}s ({:.0}/s) -> accepted {} ({ok} ok, {failed} \
+         failed), shed {shed} ({:.1}%)",
+        requests as f64 / offered_dt,
+        ok + failed,
+        100.0 * shed as f64 / requests as f64,
+    );
+    println!(
+        "goodput {:.0}/s | p50 {}us p99 {}us",
+        ok as f64 / dt,
+        m.latency_percentile_us(0.5),
+        m.latency_percentile_us(0.99),
+    );
+    println!("metrics: {}", m.summary());
+    if let Some(a) = pipe.aimd() {
+        println!(
+            "aimd: window {} after {} epochs (+{}/-{})",
+            a.window(),
+            a.epochs(),
+            a.increases(),
+            a.decreases()
+        );
+    }
+    if let Some(reg) = pipe.registry() {
+        println!("registry: {} ejections, {} readmissions", reg.ejections(), reg.readmissions());
+        if eject.is_some() {
+            anyhow::ensure!(reg.ejections() >= 1, "eject window produced no ejection");
+            anyhow::ensure!(reg.readmissions() >= 1, "silenced replica was never readmitted");
+        }
+    }
+    anyhow::ensure!(
+        m.accounted() == m.requests.load(Ordering::Relaxed),
+        "pipeline accounting failed to reconcile: {}",
+        m.summary()
+    );
+    if let Some(table) = pipe.tenants() {
+        println!("tenants: {}", table.summary());
+        for (t, class) in table.classes().iter().enumerate() {
+            let tm = table.metrics(t);
+            anyhow::ensure!(
+                tm.accounted() == tm.requests.load(Ordering::Relaxed),
+                "tenant {} failed to reconcile: {}",
+                class.name,
+                table.summary()
+            );
+        }
+        if table.len() >= 2 {
+            // Offered load is spread evenly (tenant = i % classes), so
+            // drop *counts* compare directly. Refusals land as shed and
+            // in-queue evictions as errors; both are capacity drops.
+            let dropped = |t: usize| {
+                let tm = table.metrics(t);
+                tm.shed.load(Ordering::Relaxed) + tm.errors.load(Ordering::Relaxed)
+            };
+            let best = dropped(0);
+            let worst = dropped(table.len() - 1);
+            anyhow::ensure!(
+                best <= worst,
+                "priority inversion: best class dropped {best}, worst class {worst}"
+            );
+            if worst >= 20 {
+                anyhow::ensure!(
+                    best < worst,
+                    "no QoS differentiation: best class dropped {best}, worst class {worst}"
+                );
+            }
+        }
+    }
+    if let Some(e) = exporter {
+        e.shutdown();
+    }
+    if let Ok(pipe) = Arc::try_unwrap(pipe) {
+        pipe.shutdown();
+    }
     Ok(())
 }

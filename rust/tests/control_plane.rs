@@ -1,0 +1,259 @@
+//! Control-plane integration: the sharded pipeline driven through the
+//! fleet control plane under open-loop overload. Covers the four
+//! control features end-to-end:
+//!
+//! * AIMD window adaptation — goodput must track the best hand-picked
+//!   fixed window (within 10%) without being told the right cap;
+//! * weighted-fair scheduling across tenant classes — pop shares track
+//!   class weights — with per-tenant books that reconcile exactly;
+//! * heartbeat-driven ejection and readmission mid-run, every admitted
+//!   frame still resolving exactly once;
+//! * content-keyed coalescing attributing one execution to every
+//!   waiter's tenant.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{
+    AdmissionQueue, AimdConfig, BatcherConfig, ControlConfig, InferenceRequest, Metrics,
+    OverloadPolicy, QosClass, QueueConfig, ShardedPipeline, StageSpec, TenantTable, WindowPolicy,
+};
+use dnnexplorer::runtime::executable::HostTensor;
+
+fn reject_queue(capacity: usize, batch: usize) -> QueueConfig {
+    QueueConfig {
+        batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(1) },
+        capacity,
+        policy: OverloadPolicy::Reject,
+        ..QueueConfig::default()
+    }
+}
+
+/// Open-loop run: `n` frames over `classes` round-robin tenants at
+/// `rate_hz`. Returns `(ok, failed, shed_at_submit)`; every admitted
+/// frame must resolve (a hang fails the test via `recv_timeout`).
+fn drive(pipe: &ShardedPipeline, n: usize, classes: usize, rate_hz: f64) -> (u64, u64, u64) {
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    let mut shed = 0u64;
+    for i in 0..n {
+        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        let frame = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+        match pipe.submit_frame_for(i % classes, frame) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for rx in pending {
+        let result = rx.recv_timeout(Duration::from_secs(30)).expect("admitted frame resolves");
+        match result {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    (ok, failed, shed)
+}
+
+/// One overloaded run per window policy, identical load each time. The
+/// adaptive window must land within 10% of the best fixed window's
+/// goodput without knowing the right cap a priori.
+#[test]
+fn aimd_goodput_tracks_the_best_fixed_window() {
+    let run = |window: WindowPolicy| {
+        let per_frame = Duration::from_micros(500);
+        let pipe = ShardedPipeline::spawn_with_control(
+            vec![StageSpec::with_queue(
+                move || Ok(FixedServiceModel { per_frame }),
+                reject_queue(8, 4),
+            )],
+            ControlConfig { window, ..ControlConfig::default() },
+        )
+        .expect("pipeline starts");
+        let (ok, _failed, _shed) = drive(&pipe, 300, 1, 4000.0);
+        let m = pipe.metrics.clone();
+        assert_eq!(m.accounted(), m.requests.load(Ordering::Relaxed), "{}", m.summary());
+        pipe.shutdown();
+        ok
+    };
+    let fixed: Vec<u64> = [1usize, 8, 64].iter().map(|&w| run(WindowPolicy::Fixed(w))).collect();
+    let best = *fixed.iter().max().expect("three runs");
+    let aimd = run(WindowPolicy::Aimd(AimdConfig::default()));
+    assert!(
+        aimd as f64 >= 0.9 * best as f64,
+        "adaptive window lost goodput: {aimd} ok vs best fixed {best} (fixed runs {fixed:?})"
+    );
+    // A window of 1 must actually throttle, or the comparison is vacuous.
+    assert!(fixed[0] < best, "window=1 should underperform the best window: {fixed:?}");
+}
+
+/// Stride scheduling across two same-band classes: over any pop window
+/// the shares must track the 3:1 weight ratio (±15%).
+#[test]
+fn weighted_fair_pops_track_class_weights() {
+    let table = Arc::new(TenantTable::new(vec![
+        QosClass::new("gold", 3.0, 0, None),
+        QosClass::new("best_effort", 1.0, 0, None),
+    ]));
+    let q = AdmissionQueue::new(
+        QueueConfig {
+            batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(0) },
+            capacity: 512,
+            policy: OverloadPolicy::Block,
+            tenants: Some(table),
+            ..QueueConfig::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let mut keep = Vec::new();
+    for i in 0..400usize {
+        let (respond, rx) = std::sync::mpsc::sync_channel(1);
+        q.submit(InferenceRequest {
+            input: HostTensor::new(vec![i as f32], vec![1]).unwrap(),
+            respond,
+            enqueued: Instant::now(),
+            deadline: None,
+            tenant: i % 2,
+        })
+        .expect("capacity 512 admits the backlog");
+        keep.push(rx);
+    }
+    // Both lanes stay deep for all 100 pops (200 resident each), so the
+    // service shares are pure stride scheduling.
+    let mut gold = 0usize;
+    for _ in 0..100 {
+        let batch = q.next_batch().expect("backlog non-empty");
+        if batch[0].tenant == 0 {
+            gold += 1;
+        }
+    }
+    assert!((60..=90).contains(&gold), "gold popped {gold}/100; want ~75 for 3:1 weights");
+    drop(keep);
+}
+
+/// Two tenant classes under 2x-capacity overload: books reconcile
+/// exactly per tenant and the paid class drops less than best-effort.
+#[test]
+fn two_tenant_overload_prefers_the_paid_class() {
+    let table = Arc::new(TenantTable::tiered(2));
+    let per_frame = Duration::from_micros(500);
+    let pipe = ShardedPipeline::spawn_with_control(
+        vec![StageSpec::with_queue(
+            move || Ok(FixedServiceModel { per_frame }),
+            reject_queue(8, 4),
+        )],
+        ControlConfig { tenants: Some(table.clone()), ..ControlConfig::default() },
+    )
+    .expect("pipeline starts");
+    let (ok, failed, shed) = drive(&pipe, 400, 2, 4000.0);
+    let m = pipe.metrics.clone();
+    assert_eq!(m.requests.load(Ordering::Relaxed), 400);
+    assert_eq!(m.accounted(), 400, "{}", m.summary());
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed), ok);
+    assert_eq!(m.errors.load(Ordering::Relaxed) + m.shed.load(Ordering::Relaxed), failed + shed);
+    let dropped = |t: usize| {
+        let tm = table.metrics(t);
+        assert_eq!(tm.accounted(), tm.requests.load(Ordering::Relaxed), "tenant {t} books");
+        assert_eq!(tm.requests.load(Ordering::Relaxed), 200, "tenant {t} offered half");
+        tm.shed.load(Ordering::Relaxed) + tm.errors.load(Ordering::Relaxed)
+    };
+    let (paid, free) = (dropped(0), dropped(1));
+    assert!(free > 0, "2x load on an 8-deep queue must drop best-effort frames");
+    assert!(
+        paid < free,
+        "band scheduling must protect the paid class: t0 dropped {paid}, t1 dropped {free}"
+    );
+    pipe.shutdown();
+}
+
+/// Kill one replica's heartbeat mid-run: the registry must eject it,
+/// readmit it once beats resume, and every admitted frame must still
+/// resolve with books that reconcile exactly.
+#[test]
+fn heartbeat_ejection_and_readmission_mid_run() {
+    let per_frame = Duration::from_millis(1);
+    let timeout = Duration::from_millis(40);
+    let pipe = ShardedPipeline::spawn_with_control(
+        vec![StageSpec::replicated(
+            2,
+            move |_| Ok(FixedServiceModel { per_frame }),
+            reject_queue(16, 2),
+        )],
+        ControlConfig { heartbeat_timeout: Some(timeout), ..ControlConfig::default() },
+    )
+    .expect("pipeline starts");
+    let reg = pipe.registry().expect("registry enabled").clone();
+
+    let n = 300usize;
+    let rate_hz = 1500.0;
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..n {
+        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        reg.heartbeat(0, 0);
+        // Replica 1 goes silent for a third of the run: ~66ms of paced
+        // submissions, past the 40ms liveness timeout.
+        if !(100..200).contains(&i) {
+            reg.heartbeat(0, 1);
+        }
+        let frame = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+        match pipe.submit_frame_for(0, frame) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv_timeout(Duration::from_secs(30)).expect("admitted frame resolves");
+    }
+    assert!(reg.ejections() >= 1, "a 66ms silence must trip the 40ms liveness timeout");
+    assert!(reg.readmissions() >= 1, "resumed beats must readmit the replica");
+    let m = &pipe.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.accounted(), n as u64, "{}", m.summary());
+    assert_eq!(m.shed.load(Ordering::Relaxed), shed);
+    pipe.shutdown();
+}
+
+/// Coalescing with tenants: a second tenant's identical in-flight frame
+/// rides the primary's execution — one stage-level request — and both
+/// tenants' books record the outcome.
+#[test]
+fn coalesced_frame_settles_both_tenants_books() {
+    let table = Arc::new(TenantTable::tiered(2));
+    let per_frame = Duration::from_millis(20);
+    let pipe = ShardedPipeline::spawn_with_control(
+        vec![StageSpec::with_queue(
+            move || Ok(FixedServiceModel { per_frame }),
+            reject_queue(8, 1),
+        )],
+        ControlConfig { tenants: Some(table.clone()), dedup: true, ..ControlConfig::default() },
+    )
+    .expect("pipeline starts");
+    let frame = HostTensor::new(vec![7.0, 7.0], vec![2]).unwrap();
+    let rx0 = pipe.submit_frame_for(0, frame.clone()).expect("primary admitted");
+    let rx1 = pipe.submit_frame_for(1, frame).expect("identical frame coalesces");
+    assert!(rx0.recv_timeout(Duration::from_secs(10)).expect("resolves").is_ok());
+    assert!(rx1.recv_timeout(Duration::from_secs(10)).expect("resolves").is_ok());
+    let d = pipe.dedup().expect("dedup enabled");
+    assert_eq!((d.hits(), d.misses()), (1, 1));
+    assert_eq!(pipe.stage_totals(0).requests, 1, "one execution serves both waiters");
+    let m = &pipe.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(m.ok_frames.load(Ordering::Relaxed), 2);
+    for t in 0..2 {
+        let tm = table.metrics(t);
+        assert_eq!(tm.requests.load(Ordering::Relaxed), 1, "tenant {t} books one request");
+        assert_eq!(tm.ok_frames.load(Ordering::Relaxed), 1, "tenant {t} books one success");
+    }
+    pipe.shutdown();
+}

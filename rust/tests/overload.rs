@@ -213,6 +213,7 @@ fn run_mixed_deadline_backlog(ordering: QueueOrdering) -> (u64, u64) {
             capacity: 64,
             policy: OverloadPolicy::Block,
             ordering,
+            ..QueueConfig::default()
         },
         metrics.clone(),
     );
@@ -225,6 +226,7 @@ fn run_mixed_deadline_backlog(ordering: QueueOrdering) -> (u64, u64) {
             respond,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
+            tenant: 0,
         })
         .expect("capacity 64 admits the backlog");
         receivers.push(rx);

@@ -962,6 +962,140 @@ fn prop_reorder_buffer_exactly_once_in_order() {
     );
 }
 
+/// Control-plane dispatch must preserve the reorder buffer's
+/// exactly-once in-order contract under *arbitrary* heartbeat-loss
+/// schedules: frames are admitted through a window cap (shed frames
+/// never get a sequence number), issued round-robin over the
+/// registry's live set as replicas get ejected and readmitted, and
+/// completed per-replica in FIFO order with failures skipped — exactly
+/// the sharded pipeline's dispatch/settle shape.
+#[test]
+fn prop_control_dispatch_preserves_reorder_exactly_once() {
+    use dnnexplorer::coordinator::{ReorderBuffer, ReplicaRegistry};
+    use std::collections::VecDeque;
+    use std::time::{Duration, Instant};
+
+    check(
+        "eject/readmit + window shedding keep reorder delivery exactly-once in-order",
+        241,
+        200,
+        |r| {
+            let replicas = 1 + r.gen_index(4);
+            let timeout_ms = 5 + r.gen_index(46) as u64;
+            let window = 1 + r.gen_index(8);
+            // (kind, arg) events: 0-3 submit, 4 beat, 5 complete,
+            // 6 small clock advance, 7 advance past the timeout.
+            let events: Vec<(usize, usize)> =
+                (0..40 + r.gen_index(160)).map(|_| (r.gen_index(8), r.gen_index(64))).collect();
+            (replicas, timeout_ms, window, events)
+        },
+        |&(replicas, timeout_ms, window, ref events)| {
+            let epoch = Instant::now();
+            let timeout = Duration::from_millis(timeout_ms);
+            let reg = ReplicaRegistry::new(&[replicas], timeout);
+            let mut buf: ReorderBuffer<u64> = ReorderBuffer::new(0);
+            let mut fifos: Vec<VecDeque<u64>> = vec![VecDeque::new(); replicas];
+            let mut clock_ms = 0u64;
+            let mut next_seq = 0u64;
+            let mut outstanding = 0usize;
+            let mut cursor = 0u64;
+            let mut expect: Vec<u64> = Vec::new();
+            let mut released: Vec<u64> = Vec::new();
+            let fails = |seq: u64| seq % 5 == 3;
+            let mut drain = |buf: &mut ReorderBuffer<u64>, released: &mut Vec<u64>| {
+                while let Some((s, v)) = buf.pop_next() {
+                    if s != v {
+                        return Err(format!("payload mixed up: {s} vs {v}"));
+                    }
+                    released.push(s);
+                }
+                Ok(())
+            };
+            let mut complete = |k: usize,
+                                fifos: &mut Vec<VecDeque<u64>>,
+                                buf: &mut ReorderBuffer<u64>,
+                                outstanding: &mut usize| {
+                if let Some(seq) = fifos[k].pop_front() {
+                    if fails(seq) {
+                        buf.skip(seq);
+                    } else {
+                        buf.push(seq, seq);
+                    }
+                    *outstanding -= 1;
+                }
+            };
+            for &(kind, arg) in events {
+                match kind {
+                    0..=3 => {
+                        if outstanding >= window {
+                            continue; // shed before admission: no seq
+                        }
+                        let now = epoch + Duration::from_millis(clock_ms);
+                        let live = reg.live_replicas_at(0, now);
+                        if live.is_empty() {
+                            return Err("live set empty despite full-set fallback".into());
+                        }
+                        let k = live[(cursor % live.len() as u64) as usize];
+                        cursor += 1;
+                        fifos[k].push_back(next_seq);
+                        if !fails(next_seq) {
+                            expect.push(next_seq);
+                        }
+                        next_seq += 1;
+                        outstanding += 1;
+                    }
+                    4 => {
+                        let now = epoch + Duration::from_millis(clock_ms);
+                        reg.heartbeat_at(0, arg % replicas, now);
+                    }
+                    5 => {
+                        complete(arg % replicas, &mut fifos, &mut buf, &mut outstanding);
+                        drain(&mut buf, &mut released)?;
+                    }
+                    6 => clock_ms += 1 + (arg % 5) as u64,
+                    _ => clock_ms += timeout_ms + 1 + (arg % 7) as u64,
+                }
+            }
+            // Close-out: every admitted frame still in flight completes,
+            // replicas interleaved round-robin.
+            while fifos.iter().any(|f| !f.is_empty()) {
+                for k in 0..replicas {
+                    complete(k, &mut fifos, &mut buf, &mut outstanding);
+                }
+                drain(&mut buf, &mut released)?;
+            }
+            if released != expect {
+                return Err(format!("released {released:?} != expected {expect:?}"));
+            }
+            if !buf.is_empty() {
+                return Err("buffer retained items after full release".into());
+            }
+            if buf.released() != expect.len() as u64 {
+                return Err(format!(
+                    "release counter {} != expected {}",
+                    buf.released(),
+                    expect.len()
+                ));
+            }
+            if buf.released() + buf.skipped() != next_seq {
+                return Err(format!(
+                    "released {} + skipped {} != admitted {next_seq}",
+                    buf.released(),
+                    buf.skipped()
+                ));
+            }
+            if reg.readmissions() > reg.ejections() {
+                return Err(format!(
+                    "readmissions {} exceed ejections {}",
+                    reg.readmissions(),
+                    reg.ejections()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------
 // Topology invariants (topo subsystem).
 

@@ -1,6 +1,7 @@
 //! EDF admission-queue regression: the deadline-keyed heap must pop in
-//! exactly the order the old O(depth) scan did, and pop cost must stop
-//! scaling with queue depth.
+//! exactly the order the old O(depth) scan did, pop cost must stop
+//! scaling with queue depth, and the lazy-deletion slack in the index
+//! structures must stay bounded under sustained churn.
 
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
@@ -20,6 +21,7 @@ fn edf_queue(capacity: usize) -> AdmissionQueue {
             capacity,
             policy: OverloadPolicy::Block,
             ordering: QueueOrdering::Edf,
+            ..QueueConfig::default()
         },
         Arc::new(Metrics::new()),
     )
@@ -38,6 +40,7 @@ fn push(
         respond,
         enqueued: Instant::now(),
         deadline,
+        tenant: 0,
     })
     .expect("capacity sized for the test");
     rx
@@ -92,6 +95,48 @@ fn heap_pop_order_is_identical_to_the_scan_at_10k_depth() {
         );
     }
     assert_eq!(q.depth(), 0);
+    drop(keep);
+}
+
+/// Lazy-deletion slack must stay bounded under sustained churn: a deep
+/// deadline-less backlog sits resident while urgent deadlined requests
+/// stream through ahead of it. Every urgent pop leaves a dead FIFO
+/// index entry behind; without the stale-counter sweep those dead
+/// entries would accumulate without bound (12_800 by the end of this
+/// test) and FIFO-side operations would degrade toward O(dead + live).
+#[test]
+fn index_slack_stays_bounded_under_deadline_churn() {
+    let backlog = 4_096usize;
+    let rounds = 200usize;
+    let burst = 64usize;
+    let q = edf_queue(backlog + burst);
+    let base = Instant::now() + Duration::from_secs(3600);
+    let mut keep = Vec::with_capacity(backlog + rounds * burst);
+    for i in 0..backlog {
+        keep.push(push(&q, i as f32, None)); // patient, FIFO-only
+    }
+    for round in 0..rounds {
+        for b in 0..burst {
+            let id = 1_000_000 + (round * burst + b);
+            let deadline = Some(base + Duration::from_micros((round * burst + b) as u64));
+            keep.push(push(&q, id as f32, deadline));
+        }
+        for _ in 0..burst {
+            let batch = q.next_batch().expect("queue non-empty");
+            assert!(
+                batch[0].input.data[0] >= 1_000_000.0,
+                "EDF must drain deadlined requests before the patient backlog"
+            );
+        }
+        // Sweep threshold is ~live/8 + a constant; anything near the
+        // total pop count means dead entries are never being reclaimed.
+        let slack = q.index_slack();
+        assert!(
+            slack <= backlog / 4 + 2 * burst,
+            "round {round}: {slack} dead index entries left unswept"
+        );
+    }
+    assert_eq!(q.depth(), backlog, "the patient backlog never moved");
     drop(keep);
 }
 
