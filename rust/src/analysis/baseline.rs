@@ -1,0 +1,168 @@
+//! Lint baselines: grandfather pre-existing findings so the `--deny`
+//! gate can be adopted before every historical site is fixed.
+//!
+//! A baseline waives up to `count` findings of one rule in one file —
+//! deliberately coarse (no line numbers), so unrelated edits that shift
+//! lines don't churn the file, while any *new* finding in a baselined
+//! file still trips the gate once the per-file budget is spent. The
+//! repo's shipped `lint-baseline.json` is empty: the tree is clean, and
+//! the file exists to document the format and keep the CI wiring
+//! honest.
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+use super::{Finding, RuleId};
+
+/// Waived finding counts, keyed by `(rule, file)`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: HashMap<(RuleId, String), usize>,
+}
+
+impl Baseline {
+    /// A baseline that waives nothing.
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    /// Parse the JSON baseline format:
+    /// `{"version":1,"entries":[{"rule":"L005","file":"src/x.rs","count":2}]}`.
+    pub fn parse(text: &str) -> anyhow::Result<Baseline> {
+        let doc = Json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+        anyhow::ensure!(version == 1, "unsupported baseline version {version} (want 1)");
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing `entries` array"))?;
+        let mut map = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            let rule_str = e
+                .get("rule")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing `rule`"))?;
+            let rule = RuleId::parse(rule_str)
+                .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: unknown rule {rule_str}"))?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing `file`"))?;
+            let count = e.get("count").and_then(Json::as_f64).unwrap_or(1.0);
+            anyhow::ensure!(count >= 1.0, "baseline entry {i}: count must be >= 1");
+            *map.entry((rule, file.to_string())).or_insert(0) += count as usize;
+        }
+        Ok(Baseline { entries: map })
+    }
+
+    /// Load a baseline file from disk.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read baseline {}: {e}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    /// Render findings as a baseline document (for `--write-baseline`).
+    pub fn render(findings: &[Finding]) -> String {
+        let mut counts: HashMap<(RuleId, &str), usize> = HashMap::new();
+        for f in findings {
+            *counts.entry((f.rule, f.file.as_str())).or_insert(0) += 1;
+        }
+        let mut keys: Vec<_> = counts.keys().cloned().collect();
+        keys.sort();
+        let entries: Vec<Json> = keys
+            .into_iter()
+            .map(|(rule, file)| {
+                let count = counts[&(rule, file)];
+                Json::obj(vec![
+                    ("rule", Json::s(rule.code())),
+                    ("file", Json::s(file)),
+                    ("count", Json::n(count as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("version", Json::n(1.0)), ("entries", Json::Arr(entries))]).render()
+    }
+
+    /// Split findings into `(fresh, suppressed_count)`: per `(rule,
+    /// file)`, the first `count` findings in order are suppressed, the
+    /// rest stay live.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, usize) {
+        let mut budget: HashMap<(RuleId, &str), usize> = HashMap::new();
+        for ((rule, file), count) in &self.entries {
+            budget.insert((*rule, file.as_str()), *count);
+        }
+        let mut fresh = Vec::new();
+        let mut suppressed = 0usize;
+        for f in findings {
+            let spent = match budget.get_mut(&(f.rule, f.file.as_str())) {
+                Some(left) if *left > 0 => {
+                    *left -= 1;
+                    true
+                }
+                _ => false,
+            };
+            if spent {
+                suppressed += 1;
+            } else {
+                fresh.push(f);
+            }
+        }
+        (fresh, suppressed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: RuleId, file: &str, line: u32) -> Finding {
+        Finding { rule, file: file.to_string(), line, message: String::new() }
+    }
+
+    #[test]
+    fn round_trip_and_apply() {
+        let findings = vec![
+            f(RuleId::L005, "src/a.rs", 3),
+            f(RuleId::L005, "src/a.rs", 9),
+            f(RuleId::L007, "src/b.rs", 1),
+        ];
+        let doc = Baseline::render(&findings);
+        let base = Baseline::parse(&doc).expect("baseline parses");
+        let (fresh, suppressed) = base.apply(findings.clone());
+        assert!(fresh.is_empty(), "{fresh:?}");
+        assert_eq!(suppressed, 3);
+
+        // A new finding beyond the budget stays live.
+        let mut more = findings;
+        more.push(f(RuleId::L005, "src/a.rs", 20));
+        let (fresh, suppressed) = base.apply(more);
+        assert_eq!(suppressed, 3);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].line, 20);
+    }
+
+    #[test]
+    fn empty_baseline_waives_nothing() {
+        let (fresh, suppressed) =
+            Baseline::empty().apply(vec![f(RuleId::L001, "src/a.rs", 1)]);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(suppressed, 0);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Baseline::parse("{}").is_err());
+        assert!(Baseline::parse(r#"{"version":2,"entries":[]}"#).is_err());
+        let unknown = r#"{"version":1,"entries":[{"rule":"L999","file":"x","count":1}]}"#;
+        assert!(Baseline::parse(unknown).is_err());
+    }
+
+    #[test]
+    fn empty_entries_document_parses() {
+        let base = Baseline::parse(r#"{"version":1,"entries":[]}"#).expect("parses");
+        let (fresh, _) = base.apply(vec![f(RuleId::L006, "src/c.rs", 2)]);
+        assert_eq!(fresh.len(), 1);
+    }
+}

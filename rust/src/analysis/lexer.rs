@@ -1,0 +1,469 @@
+//! Hand-rolled Rust lexer for the repo lint engine.
+//!
+//! The rules in [`super::rules`] match on *token* patterns, so the lexer
+//! only has to be faithful about the things that would otherwise corrupt
+//! a match: comments (including nested block comments), string literals
+//! (including raw strings, where `//` and `"` are just bytes), char
+//! literals vs lifetimes (`'a'` vs `'a`), and float literals vs ranges
+//! (`1.5` vs `0..10`). It does not need to classify keywords, resolve
+//! paths, or get numeric suffixes perfectly right — tokens carry their
+//! raw text and the rules match on it.
+//!
+//! Every token records the source line it *starts* on, which is the line
+//! findings are reported at and the line allow-annotations attach to.
+
+/// Lexical class of a token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`state`, `fn`, `loop`, ...).
+    Ident,
+    /// Numeric literal, raw text preserved (`10`, `0.3`, `1e-6`, `0xff`).
+    Num,
+    /// String or byte-string literal, quotes included.
+    Str,
+    /// Raw (byte-)string literal: `r"..."`, `r#"..."#`, `br#"..."#`.
+    RawStr,
+    /// Char or byte-char literal: `'x'`, `'\n'`, `b'q'`.
+    Char,
+    /// Lifetime: `'a`, `'static` (also loop labels: `'run`).
+    Lifetime,
+    /// Operator / punctuation. Multi-char operators the rules depend on
+    /// (`==`, `!=`, `::`, `..`, `->`, ...) are kept as single tokens.
+    Punct,
+    /// `// ...` to end of line.
+    LineComment,
+    /// `/* ... */`, nesting-aware.
+    BlockComment,
+}
+
+/// One lexed token: kind, raw text, and 1-based start line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// True for comment tokens (stripped before rule matching).
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    /// True when this is an [`TokKind::Ident`] with exactly this text.
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+
+    /// True when this is a [`TokKind::Punct`] with exactly this text.
+    pub fn is_punct(&self, text: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == text
+    }
+}
+
+/// Two-char operators kept atomic. `..=` is handled as an extension of
+/// `..`; triples like `<<=` split into `<<` + `=`, which no rule cares
+/// about.
+const TWO_CHAR_OPS: &[&str] = &[
+    "==", "!=", "<=", ">=", "::", "->", "=>", "&&", "||", "..", "+=", "-=", "*=", "/=", "%=",
+    "<<", ">>", "&=", "|=", "^=",
+];
+
+/// Lex `src` into a flat token stream. Never fails: malformed input
+/// degrades to stray `Punct` tokens rather than panicking, so the lint
+/// engine stays usable on half-edited files.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let collect = |lo: usize, hi: usize| -> String { chars[lo..hi].iter().collect() };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::LineComment, text: collect(start, i), line });
+            continue;
+        }
+
+        // Block comment, nesting-aware.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::BlockComment,
+                text: collect(start, i),
+                line: start_line,
+            });
+            continue;
+        }
+
+        // Raw strings: r"..." / r#"..."# / br"..." — checked before
+        // identifiers because a bare `r` is a valid ident start.
+        if c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                let start = i;
+                let start_line = line;
+                j += 1;
+                while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if chars[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::RawStr, text: collect(start, j), line: start_line });
+                i = j;
+                continue;
+            }
+            // Not a raw string (`rx`, `break`, ...): fall through.
+        }
+
+        // String / byte-string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && chars[i + 1] == '"') {
+            let start = i;
+            let start_line = line;
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                match chars[i] {
+                    '\\' => {
+                        // Skip the escaped char; a `\` before a newline
+                        // is a line continuation — keep the line count.
+                        if i + 1 < n && chars[i + 1] == '\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: collect(start, i), line: start_line });
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' || (c == 'b' && i + 1 < n && chars[i + 1] == '\'') {
+            let start = i;
+            let is_byte = c == 'b';
+            let q = if is_byte { i + 1 } else { i };
+            let mut j = q + 1;
+            if j < n && chars[j] == '\\' {
+                // Escaped char: '\n', '\\', '\u{1F600}'.
+                j += 2;
+                if j > 0 && j - 1 < n && chars[j - 1] == 'u' && j < n && chars[j] == '{' {
+                    while j < n && chars[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                if j < n && chars[j] == '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Char, text: collect(start, j), line });
+                i = j;
+                continue;
+            }
+            if j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                let mut k = j;
+                while k < n && (chars[k].is_alphanumeric() || chars[k] == '_') {
+                    k += 1;
+                }
+                if k == j + 1 && k < n && chars[k] == '\'' {
+                    // Exactly one ident-ish char then a closing quote:
+                    // a char literal like 'x' or '_'.
+                    toks.push(Tok { kind: TokKind::Char, text: collect(start, k + 1), line });
+                    i = k + 1;
+                } else {
+                    // An ident run with no closing quote: a lifetime.
+                    toks.push(Tok { kind: TokKind::Lifetime, text: collect(start, k), line });
+                    i = k;
+                }
+                continue;
+            }
+            // Non-ident char like '+' or ' '.
+            if j + 1 < n && chars[j + 1] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: collect(start, j + 2), line });
+                i = j + 2;
+                continue;
+            }
+            // Stray quote in malformed input: degrade to punct.
+            toks.push(Tok { kind: TokKind::Punct, text: "'".to_string(), line });
+            i = q + 1;
+            continue;
+        }
+
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            if c == '0'
+                && i + 1 < n
+                && (chars[i + 1] == 'x' || chars[i + 1] == 'b' || chars[i + 1] == 'o')
+            {
+                i += 2;
+                while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                    i += 1;
+                }
+                // A dot continues the literal only when it is a real
+                // fractional part — not `0..10`, not `1.to_string()`.
+                if i < n && chars[i] == '.' {
+                    let frac = match chars.get(i + 1).copied() {
+                        Some(d) if d.is_ascii_digit() => true,
+                        Some('.') => false,
+                        Some(ch) if ch.is_alphabetic() || ch == '_' => false,
+                        _ => true, // trailing `1.`
+                    };
+                    if frac {
+                        i += 1;
+                        while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                if i < n && (chars[i] == 'e' || chars[i] == 'E') {
+                    let mut j = i + 1;
+                    if j < n && (chars[j] == '+' || chars[j] == '-') {
+                        j += 1;
+                    }
+                    if j < n && chars[j].is_ascii_digit() {
+                        i = j;
+                        while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // Type suffix (f64, u32, usize, ...).
+                while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: collect(start, i), line });
+            continue;
+        }
+
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: collect(start, i), line });
+            continue;
+        }
+
+        // Punctuation, multi-char ops combined.
+        if i + 1 < n {
+            let pair: String = chars[i..i + 2].iter().collect();
+            if TWO_CHAR_OPS.contains(&pair.as_str()) {
+                if pair == ".." && i + 2 < n && chars[i + 2] == '=' {
+                    toks.push(Tok { kind: TokKind::Punct, text: "..=".to_string(), line });
+                    i += 3;
+                    continue;
+                }
+                toks.push(Tok { kind: TokKind::Punct, text: pair, line });
+                i += 2;
+                continue;
+            }
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+
+    toks
+}
+
+/// Whether a [`TokKind::Num`] token's text denotes a float literal.
+/// `0usize` must not count (the `e` in `usize` is not an exponent), and
+/// neither must hex literals like `0x1e5`.
+pub fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0b") || text.starts_with("0o") {
+        return false;
+    }
+    if text.ends_with("f32") || text.ends_with("f64") || text.contains('.') {
+        return true;
+    }
+    let bytes = text.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if (b == b'e' || b == b'E') && i > 0 {
+            if let Some(&next) = bytes.get(i + 1) {
+                if next.is_ascii_digit() || next == b'+' || next == b'-' {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn nested_block_comments_are_one_token() {
+        let toks = kinds("/* a /* b */ c */ x");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].0, TokKind::BlockComment);
+        assert_eq!(toks[0].1, "/* a /* b */ c */");
+        assert_eq!(toks[1], (TokKind::Ident, "x".to_string()));
+    }
+
+    #[test]
+    fn block_comment_line_counting() {
+        let toks = lex("/* one\ntwo\nthree */ after");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 3);
+        assert_eq!(toks[1].text, "after");
+    }
+
+    #[test]
+    fn raw_strings_swallow_comment_markers_and_quotes() {
+        let toks = kinds(r###"r#"thread::spawn // "quoted""# x"###);
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].0, TokKind::RawStr);
+        assert_eq!(toks[1], (TokKind::Ident, "x".to_string()));
+    }
+
+    #[test]
+    fn byte_raw_string_and_byte_string() {
+        let toks = kinds(r#"br"raw" b"bytes" b'q'"#);
+        assert_eq!(
+            toks.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec![TokKind::RawStr, TokKind::Str, TokKind::Char]
+        );
+    }
+
+    #[test]
+    fn comment_marker_inside_string_is_not_a_comment() {
+        let toks = kinds(r#""http://x" // real"#);
+        assert_eq!(toks[0].0, TokKind::Str);
+        assert_eq!(toks[0].1, r#""http://x""#);
+        assert_eq!(toks[1].0, TokKind::LineComment);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("<'a, 'static> 'x' '\\n' '_' 'run: loop");
+        let lifetimes: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, t)| t.clone())
+            .collect();
+        let chars: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Char)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'static", "'run"]);
+        assert_eq!(chars, vec!["'x'", "'\\n'", "'_'"]);
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let toks = kinds("0..10 1.5 1..=3 2.0f64 7.max(1)");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "1.5", "1", "3", "2.0f64", "7", "1"]);
+        assert!(toks.contains(&(TokKind::Punct, "..".to_string())));
+        assert!(toks.contains(&(TokKind::Punct, "..=".to_string())));
+    }
+
+    #[test]
+    fn float_literal_classification() {
+        assert!(is_float_literal("1.5"));
+        assert!(is_float_literal("2.0f64"));
+        assert!(is_float_literal("3f32"));
+        assert!(is_float_literal("1e-6"));
+        assert!(is_float_literal("1E+9"));
+        assert!(!is_float_literal("10"));
+        assert!(!is_float_literal("0usize"));
+        assert!(!is_float_literal("0x1e5"));
+        assert!(!is_float_literal("1_000"));
+    }
+
+    #[test]
+    fn multi_char_operators_stay_atomic() {
+        let toks = kinds("a == b != c :: d -> e => f");
+        let puncts: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Punct)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(puncts, vec!["==", "!=", "::", "->", "=>"]);
+    }
+
+    #[test]
+    fn attribute_tokens() {
+        let toks = kinds("#[cfg(test)]");
+        let texts: Vec<_> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["#", "[", "cfg", "(", "test", ")", "]"]);
+    }
+}

@@ -1,0 +1,359 @@
+//! Repo-native static analysis: machine-checked invariants distilled
+//! from bugs that earlier PRs found by hand.
+//!
+//! Each rule encodes one historical failure mode of this codebase (the
+//! PR 2 admission-lock convoy, the PR 6 sibling-failover double-count,
+//! EDF slack-index leak, and metrics-exporter hang), so a regression
+//! trips the linter instead of a 2 a.m. pager. The engine is
+//! deliberately self-contained — a hand-rolled lexer ([`lexer`]) plus
+//! token-pattern rules ([`rules`]) — so it adds no dependencies and
+//! runs in the ordinary test/CI loop via `dnnexplorer lint`.
+//!
+//! Suppression is explicit and auditable:
+//! * `// lint: allow(L00N, reason)` on (or directly above) a line
+//!   waives one rule there; the reason is part of the grammar.
+//! * A JSON baseline file ([`baseline`]) waives pre-existing findings
+//!   per `(rule, file)` so the gate can be adopted incrementally.
+//! * Code under `#[cfg(test)]` / `#[test]` is exempt wholesale — tests
+//!   do sketchy things on purpose.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Tok};
+
+/// Identifier of one lint rule. Every rule corresponds to a bug class
+/// this repo has actually shipped (see [`RuleId::summary`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// Mutex guard held across a blocking call (PR 2 lock convoy).
+    L001,
+    /// Metrics counter mutated outside its helper (PR 6 double-count).
+    L002,
+    /// Unbounded collection growth in a worker loop (PR 6 slack leak).
+    L003,
+    /// Socket I/O without timeouts (PR 6 exporter hang).
+    L004,
+    /// `unwrap`/`expect` on the serving path.
+    L005,
+    /// Raw floating-point equality (RAV cache-key drift).
+    L006,
+    /// Unnamed spawned thread.
+    L007,
+}
+
+impl RuleId {
+    /// Every rule, in reporting order.
+    pub fn all() -> [RuleId; 7] {
+        [
+            RuleId::L001,
+            RuleId::L002,
+            RuleId::L003,
+            RuleId::L004,
+            RuleId::L005,
+            RuleId::L006,
+            RuleId::L007,
+        ]
+    }
+
+    /// Stable textual code (`"L001"`), as used in CLI flags, allow
+    /// annotations, and baseline files.
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::L001 => "L001",
+            RuleId::L002 => "L002",
+            RuleId::L003 => "L003",
+            RuleId::L004 => "L004",
+            RuleId::L005 => "L005",
+            RuleId::L006 => "L006",
+            RuleId::L007 => "L007",
+        }
+    }
+
+    /// Parse a textual code back into a rule id.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::all().into_iter().find(|r| r.code() == s)
+    }
+
+    /// One-line statement of the invariant the rule checks.
+    pub fn summary(self) -> &'static str {
+        match self {
+            RuleId::L001 => "mutex guard held across a blocking call",
+            RuleId::L002 => "metrics counter mutated outside its helpers",
+            RuleId::L003 => "unbounded collection growth in a worker loop",
+            RuleId::L004 => "socket I/O without read/write timeouts",
+            RuleId::L005 => "unwrap/expect on the serving path",
+            RuleId::L006 => "raw floating-point equality",
+            RuleId::L007 => "unnamed spawned thread",
+        }
+    }
+}
+
+impl std::fmt::Display for RuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.code())
+    }
+}
+
+/// One lint finding: where, which rule, and why it matters.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Path as given to the analyzer (repo-relative in CLI use).
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub message: String,
+}
+
+/// Lexed view of one source file plus the suppression state the rules
+/// consult: allow-annotations and `#[cfg(test)]` line ranges.
+pub struct FileContext {
+    /// Path the file was given as (used for path-scoped rules).
+    pub path: String,
+    /// Final component of the path (used for file-scoped exemptions).
+    pub file_name: String,
+    /// Token stream with comments stripped.
+    pub code: Vec<Tok>,
+    allowed: HashSet<(RuleId, u32)>,
+    test_ranges: Vec<(u32, u32)>,
+}
+
+impl FileContext {
+    /// Lex `src` and precompute suppression state.
+    pub fn build(path: &str, src: &str) -> FileContext {
+        let toks = lex(src);
+
+        // `// lint: allow(L00N, reason)` waives the rule on the
+        // comment's own line and on the next code line after it (the
+        // annotation conventionally sits directly above the finding).
+        let mut allowed = HashSet::new();
+        for (i, t) in toks.iter().enumerate() {
+            if !t.is_comment() {
+                continue;
+            }
+            let Some(rule) = parse_allow(&t.text) else { continue };
+            allowed.insert((rule, t.line));
+            if let Some(next) = toks[i + 1..].iter().find(|u| !u.is_comment()) {
+                allowed.insert((rule, next.line));
+            }
+        }
+
+        let code: Vec<Tok> = toks.into_iter().filter(|t| !t.is_comment()).collect();
+        let test_ranges = test_ranges(&code);
+        let file_name = path.rsplit(['/', '\\']).next().unwrap_or(path).to_string();
+        FileContext { path: path.to_string(), file_name, code, allowed, test_ranges }
+    }
+
+    /// Whether `line` falls inside a `#[cfg(test)]` / `#[test]` item.
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Whether an allow-annotation waives `rule` on `line`.
+    pub fn is_allowed(&self, rule: RuleId, line: u32) -> bool {
+        self.allowed.contains(&(rule, line))
+    }
+}
+
+/// Extract the rule id from a `lint: allow(...)` comment, if any.
+fn parse_allow(comment: &str) -> Option<RuleId> {
+    let idx = comment.find("lint: allow(")?;
+    let rest = &comment[idx + "lint: allow(".len()..];
+    let end = rest.find(|c: char| c == ',' || c == ')')?;
+    RuleId::parse(rest[..end].trim())
+}
+
+/// Index of the token closing the group opened at `open_idx`, matching
+/// `open`/`close` punct texts by depth. Token-level, so delimiters
+/// inside string/char literals cannot unbalance it.
+pub(crate) fn matching(code: &[Tok], open_idx: usize, open: &str, close: &str) -> Option<usize> {
+    let mut depth = 0i32;
+    for (k, t) in code.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Line ranges covered by test-only items: any `#[...]` attribute whose
+/// tokens include the ident `test` (`#[test]`, `#[cfg(test)]`,
+/// `#[cfg(all(test, ...))]`), extended over the annotated item — up to
+/// the matching `}` of its body, or the `;` of a body-less item.
+fn test_ranges(code: &[Tok]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if !(code[i].is_punct("#")
+            && matches!(code.get(i + 1), Some(t) if t.is_punct("[")))
+        {
+            i += 1;
+            continue;
+        }
+        let Some(close) = matching(code, i + 1, "[", "]") else {
+            i += 1;
+            continue;
+        };
+        let is_test = code[i + 2..close].iter().any(|t| t.is_ident("test"));
+        if !is_test {
+            i = close + 1;
+            continue;
+        }
+        let attr_line = code[i].line;
+        // Skip any further attributes on the same item.
+        let mut j = close + 1;
+        while matches!(code.get(j), Some(t) if t.is_punct("#"))
+            && matches!(code.get(j + 1), Some(t) if t.is_punct("["))
+        {
+            match matching(code, j + 1, "[", "]") {
+                Some(c) => j = c + 1,
+                None => break,
+            }
+        }
+        // The annotated item ends at its body's `}` or at a `;`.
+        let mut end_line = code.last().map_or(attr_line, |t| t.line);
+        while j < code.len() {
+            if code[j].is_punct(";") {
+                end_line = code[j].line;
+                break;
+            }
+            if code[j].is_punct("{") {
+                if let Some(c) = matching(code, j, "{", "}") {
+                    end_line = code[c].line;
+                }
+                break;
+            }
+            j += 1;
+        }
+        ranges.push((attr_line, end_line));
+        i = close + 1;
+    }
+    ranges
+}
+
+/// Analyze one file's source text. Findings in test regions or waived
+/// by allow-annotations are already filtered; the result is sorted by
+/// line and deduplicated per `(rule, line)`.
+pub fn analyze_source(path: &str, src: &str, active: &[RuleId]) -> Vec<Finding> {
+    let ctx = FileContext::build(path, src);
+    let mut findings = Vec::new();
+    for &rule in active {
+        findings.extend(rules::run(rule, &ctx));
+    }
+    findings.retain(|f| !ctx.is_test_line(f.line) && !ctx.is_allowed(f.rule, f.line));
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+    findings
+}
+
+/// Result of analyzing a file tree.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Analyze every `.rs` file under `root` (or `root` itself if it is a
+/// file), skipping `target/`, `vendor/`, and hidden directories.
+/// Findings come back sorted by `(file, line, rule)`.
+pub fn analyze_tree(root: &Path, active: &[RuleId]) -> anyhow::Result<Report> {
+    let mut files = Vec::new();
+    if root.is_file() {
+        files.push(root.to_path_buf());
+    } else {
+        collect_rs_files(root, &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let display = path.to_string_lossy().replace('\\', "/");
+        findings.extend(analyze_source(&display, &src, active));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "target" || name == "vendor" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_annotation_covers_comment_and_next_code_line() {
+        let src = "fn f(v: Option<u64>) -> u64 {\n\
+                   // lint: allow(L005, justified)\n\
+                   v.unwrap()\n\
+                   }\n";
+        let ctx = FileContext::build("src/coordinator/x.rs", src);
+        assert!(ctx.is_allowed(RuleId::L005, 2));
+        assert!(ctx.is_allowed(RuleId::L005, 3));
+        assert!(!ctx.is_allowed(RuleId::L005, 4));
+        assert!(!ctx.is_allowed(RuleId::L001, 3));
+        let findings = analyze_source("src/coordinator/x.rs", src, &RuleId::all());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_detected() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn helper() {}\n\
+                   #[test]\n\
+                   fn t() {}\n\
+                   }\n\
+                   fn live2() {}\n";
+        let ctx = FileContext::build("src/x.rs", src);
+        assert!(!ctx.is_test_line(1));
+        assert!(ctx.is_test_line(2));
+        assert!(ctx.is_test_line(4));
+        assert!(ctx.is_test_line(6));
+        assert!(ctx.is_test_line(7));
+        assert!(!ctx.is_test_line(8));
+    }
+
+    #[test]
+    fn cfg_test_on_bodyless_item_spans_to_semicolon() {
+        let src = "#[cfg(test)]\nuse std::sync::Mutex;\nfn live() {}\n";
+        let ctx = FileContext::build("src/x.rs", src);
+        assert!(ctx.is_test_line(2));
+        assert!(!ctx.is_test_line(3));
+    }
+
+    #[test]
+    fn rule_id_round_trips() {
+        for r in RuleId::all() {
+            assert_eq!(RuleId::parse(r.code()), Some(r));
+        }
+        assert_eq!(RuleId::parse("L999"), None);
+    }
+}

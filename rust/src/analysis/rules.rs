@@ -1,0 +1,502 @@
+//! The lint rules: token-pattern checks, one per historical bug class.
+//!
+//! All rules are intraprocedural — they look at one function body (or
+//! one token window) at a time and do not follow calls. That blindness
+//! is deliberate: every one of the seed bugs was visible within a
+//! single function, and an intraprocedural check has a false-positive
+//! rate low enough to run under `--deny`. Where a heuristic needs
+//! scoping to stay quiet (L003/L005 apply only under `coordinator/`,
+//! L002/L006 exempt their blessed helper files), the scoping is part of
+//! the rule and documented on it.
+//!
+//! Findings in `#[cfg(test)]` regions and on allow-annotated lines are
+//! filtered by the caller ([`super::analyze_source`]); rules just
+//! report every raw match.
+
+use super::lexer::{is_float_literal, Tok, TokKind};
+use super::{matching, FileContext, Finding, RuleId};
+
+/// Method/function names treated as potentially blocking for L001.
+/// `Condvar::wait` is deliberately absent: waiting on a condvar
+/// *releases* the mutex, which is the fix for a convoy, not the bug.
+const BLOCKING: &[&str] = &[
+    "recv",
+    "recv_timeout",
+    "recv_deadline",
+    "send",
+    "join",
+    "sleep",
+    "accept",
+    "connect",
+    "read",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "write",
+    "write_all",
+    "flush",
+    "park",
+    "park_timeout",
+];
+
+/// `Metrics` counter fields whose raw mutation L002 flags.
+const COUNTER_FIELDS: &[&str] =
+    &["requests", "batches", "frames", "ok_frames", "errors", "shed", "timed_out"];
+
+/// Atomic mutators that count as writes for L002.
+const COUNTER_MUTATORS: &[&str] = &["fetch_add", "fetch_sub", "store"];
+
+/// Collection-growing calls L003 looks for inside loops.
+const GROWTH_CALLS: &[&str] = &["push", "push_back", "push_front", "insert"];
+
+/// Identifier substrings that count as capping/sweeping evidence for
+/// L003: if the enclosing function mentions any of these, growth is
+/// assumed bounded.
+const CAP_HINTS: &[&str] = &[
+    "pop", "remove", "clear", "drain", "retain", "truncate", "sweep", "evict", "take",
+    "split_off", "dedup", "shrink",
+];
+
+/// Calls that *obtain* a socket, putting the function in scope for L004.
+const SOCKET_OBTAIN: &[&str] = &["accept", "incoming", "connect", "bind"];
+
+/// Raw I/O calls L004 treats as hang-prone without a timeout.
+const SOCKET_IO: &[&str] =
+    &["read", "read_exact", "read_to_end", "read_to_string", "write", "write_all", "flush"];
+
+/// Run one rule over one file.
+pub fn run(rule: RuleId, ctx: &FileContext) -> Vec<Finding> {
+    match rule {
+        RuleId::L001 => l001_guard_across_blocking(ctx),
+        RuleId::L002 => l002_counter_outside_helpers(ctx),
+        RuleId::L003 => l003_unbounded_loop_growth(ctx),
+        RuleId::L004 => l004_socket_without_timeout(ctx),
+        RuleId::L005 => l005_unwrap_on_serving_path(ctx),
+        RuleId::L006 => l006_float_equality(ctx),
+        RuleId::L007 => l007_unnamed_thread(ctx),
+    }
+}
+
+fn finding(ctx: &FileContext, rule: RuleId, line: u32, message: String) -> Finding {
+    Finding { rule, file: ctx.path.clone(), line, message }
+}
+
+/// `name` called as a method or path fn: `.name(` or `::name(`.
+fn is_call_of(code: &[Tok], i: usize, names: &[&str]) -> bool {
+    code[i].kind == TokKind::Ident
+        && names.contains(&code[i].text.as_str())
+        && i > 0
+        && (code[i - 1].is_punct(".") || code[i - 1].is_punct("::"))
+        && matches!(code.get(i + 1), Some(t) if t.is_punct("("))
+}
+
+/// Token index ranges `(open_brace, close_brace)` of every `fn` body.
+/// Nested fns yield nested ranges; the caller's per-line dedup absorbs
+/// any double reporting.
+fn fn_bodies(code: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if code[i].is_ident("fn") {
+            let mut j = i + 1;
+            while j < code.len() && !code[j].is_punct("{") && !code[j].is_punct(";") {
+                j += 1;
+            }
+            if j < code.len() && code[j].is_punct("{") {
+                if let Some(close) = matching(code, j, "{", "}") {
+                    out.push((j, close));
+                }
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// L001 — a `MutexGuard` bound by `let ... = ....lock(...)` is still
+/// live when a blocking call runs (PR 2: the admission lock was held
+/// across `respond.send`, convoying every submitter behind one slow
+/// receiver). Tracks guard bindings per brace depth, releases them on
+/// `drop(name)` or scope exit, and understands that the scrutinee
+/// temporary of `if let`/`while let` lives for the whole block.
+fn l001_guard_across_blocking(ctx: &FileContext) -> Vec<Finding> {
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for &(open, close) in &fn_bodies(code) {
+        // Live guards: (binding name, brace depth, lock line).
+        let mut guards: Vec<(String, i32, u32)> = Vec::new();
+        // Guards that become live once their `let` statement ends:
+        // (first token index past the statement, guard).
+        let mut pending: Vec<(usize, (String, i32, u32))> = Vec::new();
+        let mut depth = 0i32;
+        let mut i = open + 1;
+        while i < close {
+            let mut k = 0;
+            while k < pending.len() {
+                if pending[k].0 == i {
+                    guards.push(pending.remove(k).1);
+                } else {
+                    k += 1;
+                }
+            }
+            let t = &code[i];
+            if t.is_punct("{") {
+                depth += 1;
+            } else if t.is_punct("}") {
+                depth -= 1;
+                guards.retain(|g| g.1 <= depth);
+            } else if t.is_ident("let") {
+                let conditional =
+                    i > open && (code[i - 1].is_ident("if") || code[i - 1].is_ident("while"));
+                if conditional {
+                    // `if let` / `while let`: a `.lock(` in the
+                    // scrutinee produces a temporary guard that lives
+                    // for the whole block (the classic temporary-
+                    // lifetime extension gotcha).
+                    let mut d = 0i32;
+                    let mut lock_line = None;
+                    let mut j = i + 1;
+                    while j < close {
+                        let u = &code[j];
+                        if u.is_punct("{") && d == 0 {
+                            break;
+                        }
+                        if u.is_punct("(") || u.is_punct("[") || u.is_punct("{") {
+                            d += 1;
+                        } else if u.is_punct(")") || u.is_punct("]") || u.is_punct("}") {
+                            d -= 1;
+                        } else if is_call_of(code, j, &["lock"]) {
+                            lock_line = Some(u.line);
+                        }
+                        j += 1;
+                    }
+                    if let Some(line) = lock_line {
+                        if j < close {
+                            let g = ("<scrutinee temporary>".to_string(), depth + 1, line);
+                            pending.push((j, g));
+                        }
+                    }
+                } else {
+                    // Plain `let`: scan the statement. Within it, a
+                    // blocking call after `.lock(` is already a convoy
+                    // (`q.lock().unwrap().rx.recv()`); after it, the
+                    // binding becomes a live guard.
+                    let mut name = String::new();
+                    let mut j = i + 1;
+                    if j < close && code[j].is_ident("mut") {
+                        j += 1;
+                    }
+                    if j < close && code[j].kind == TokKind::Ident {
+                        name = code[j].text.clone();
+                    }
+                    let mut d = 0i32;
+                    let mut lock_line = None;
+                    let mut k = i + 1;
+                    let stmt_end = loop {
+                        if k >= close {
+                            break close;
+                        }
+                        let u = &code[k];
+                        if u.is_punct(";") && d == 0 {
+                            break k;
+                        }
+                        if u.is_punct("{") || u.is_punct("[") {
+                            d += 1;
+                        } else if u.is_punct("}") || u.is_punct("]") {
+                            if d == 0 {
+                                break k;
+                            }
+                            d -= 1;
+                        } else if is_call_of(code, k, &["lock"]) {
+                            lock_line = Some(u.line);
+                        } else if lock_line.is_some() && is_call_of(code, k, BLOCKING) {
+                            out.push(finding(
+                                ctx,
+                                RuleId::L001,
+                                u.line,
+                                format!(
+                                    "`{}()` may block while this statement's `.lock(` guard \
+                                     is live (PR 2 convoy); split the statement and drop first",
+                                    u.text
+                                ),
+                            ));
+                        }
+                        k += 1;
+                    };
+                    if let Some(line) = lock_line {
+                        let g = if name.is_empty() { "<unnamed>".to_string() } else { name };
+                        pending.push((stmt_end + 1, (g, depth, line)));
+                    }
+                }
+            } else if t.is_ident("drop")
+                && matches!(code.get(i + 1), Some(u) if u.is_punct("("))
+                && matches!(code.get(i + 3), Some(u) if u.is_punct(")"))
+            {
+                if let Some(arg) = code.get(i + 2) {
+                    if arg.kind == TokKind::Ident {
+                        guards.retain(|g| g.0 != arg.text);
+                    }
+                }
+            } else if is_call_of(code, i, BLOCKING) {
+                if let Some(g) = guards.last() {
+                    out.push(finding(
+                        ctx,
+                        RuleId::L001,
+                        t.line,
+                        format!(
+                            "`{}()` may block while guard `{}` (locked on line {}) is held \
+                             (PR 2 convoy); drop the guard or bound the wait",
+                            t.text, g.0, g.2
+                        ),
+                    ));
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// L002 — a `Metrics` counter field mutated outside `metrics.rs` /
+/// `quota.rs` helpers (PR 6: sibling failover bumped `requests` at two
+/// call sites and double-counted; the reconciliation identity
+/// `requests == ok_frames + errors + shed` only holds when every bump
+/// goes through one audited helper).
+fn l002_counter_outside_helpers(ctx: &FileContext) -> Vec<Finding> {
+    if ctx.file_name == "metrics.rs" || ctx.file_name == "quota.rs" {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && COUNTER_FIELDS.contains(&t.text.as_str())
+            && i > 0
+            && code[i - 1].is_punct(".")
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("."))
+            && matches!(code.get(i + 2),
+                Some(u) if u.kind == TokKind::Ident
+                    && COUNTER_MUTATORS.contains(&u.text.as_str()))
+            && matches!(code.get(i + 3), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L002,
+                t.line,
+                format!(
+                    "raw `{}.{}` outside metrics.rs helpers; route it through a \
+                     `Metrics::record_*` method (PR 6 double-count)",
+                    t.text,
+                    code[i + 2].text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// L003 — `push`/`insert` into a collection inside a `loop`/`while`
+/// body, in a function with no capping evidence (PR 6: the EDF slack
+/// index grew one entry per admission and was never swept). Scoped to
+/// `coordinator/` paths — that is where long-lived worker loops live;
+/// parser loops elsewhere grow their output by design. `for` loops are
+/// exempt: they are bounded by their iterator.
+fn l003_unbounded_loop_growth(ctx: &FileContext) -> Vec<Finding> {
+    if !ctx.path.contains("coordinator") {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for &(open, close) in &fn_bodies(code) {
+        let capped = code[open..=close].iter().any(|t| {
+            t.kind == TokKind::Ident && CAP_HINTS.iter().any(|h| t.text.contains(h))
+        });
+        if capped {
+            continue;
+        }
+        // Collect `loop`/`while` body spans, then flag growth inside.
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        let mut i = open + 1;
+        while i < close {
+            if code[i].is_ident("loop")
+                && matches!(code.get(i + 1), Some(t) if t.is_punct("{"))
+            {
+                if let Some(c) = matching(code, i + 1, "{", "}") {
+                    spans.push((i + 1, c));
+                }
+            } else if code[i].is_ident("while") {
+                let mut d = 0i32;
+                let mut j = i + 1;
+                while j < close {
+                    if code[j].is_punct("{") && d == 0 {
+                        break;
+                    }
+                    if code[j].is_punct("(") || code[j].is_punct("[") || code[j].is_punct("{") {
+                        d += 1;
+                    } else if code[j].is_punct(")")
+                        || code[j].is_punct("]")
+                        || code[j].is_punct("}")
+                    {
+                        d -= 1;
+                    }
+                    j += 1;
+                }
+                if j < close {
+                    if let Some(c) = matching(code, j, "{", "}") {
+                        spans.push((j, c));
+                    }
+                }
+            }
+            i += 1;
+        }
+        for k in open + 1..close {
+            if is_call_of(code, k, GROWTH_CALLS)
+                && spans.iter().any(|&(a, b)| k > a && k < b)
+            {
+                out.push(finding(
+                    ctx,
+                    RuleId::L003,
+                    code[k].line,
+                    format!(
+                        "`{}` grows a collection inside a worker loop and this fn never \
+                         pops/sweeps/evicts (PR 6 EDF slack leak); cap it or sweep it",
+                        code[k].text
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// L004 — a function that *obtains* a socket (`accept`, `incoming`,
+/// `connect`, `bind`) and then does raw `read*`/`write*` I/O without
+/// ever calling `set_read_timeout`/`set_write_timeout` (PR 6: a stalled
+/// scrape client hung the metrics exporter forever). One finding per
+/// function, on the first I/O call.
+fn l004_socket_without_timeout(ctx: &FileContext) -> Vec<Finding> {
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for &(open, close) in &fn_bodies(code) {
+        let body = open + 1..close;
+        let obtains = body.clone().any(|k| is_call_of(code, k, SOCKET_OBTAIN));
+        if !obtains {
+            continue;
+        }
+        let sets_timeout = body.clone().any(|k| {
+            code[k].is_ident("set_read_timeout") || code[k].is_ident("set_write_timeout")
+        });
+        if sets_timeout {
+            continue;
+        }
+        if let Some(k) = body.clone().find(|&k| is_call_of(code, k, SOCKET_IO)) {
+            out.push(finding(
+                ctx,
+                RuleId::L004,
+                code[k].line,
+                format!(
+                    "`{}()` on a socket this fn obtained, with no set_read_timeout/\
+                     set_write_timeout anywhere in it (PR 6 exporter hang)",
+                    code[k].text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// L005 — `.unwrap()` / `.expect(` on the serving path (any file under
+/// `coordinator/`). A panic there takes a worker thread, and with it
+/// every queued request it owed a response. Fix the error path, or
+/// state the safety argument inline: `// lint: allow(L005, reason)`.
+fn l005_unwrap_on_serving_path(ctx: &FileContext) -> Vec<Finding> {
+    if !ctx.path.contains("coordinator") {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && code[i - 1].is_punct(".")
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L005,
+                t.line,
+                format!(
+                    "`.{}()` on the serving path; handle the error, or justify it with \
+                     `// lint: allow(L005, reason)`",
+                    t.text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// L006 — `==`/`!=` against a floating-point literal. The RAV cache
+/// keys floats by quantized buckets precisely because raw equality
+/// drifts; `dse/rav.rs` and `dse/cache.rs` (the blessed quantizers) are
+/// exempt. Exact-zero sentinels elsewhere carry an allow-annotation
+/// stating why the value is exact.
+fn l006_float_equality(ctx: &FileContext) -> Vec<Finding> {
+    if ctx.file_name == "rav.rs" || ctx.file_name == "cache.rs" {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if !(t.is_punct("==") || t.is_punct("!=")) {
+            continue;
+        }
+        let float_neighbor = [i.wrapping_sub(1), i + 1].into_iter().any(|k| {
+            matches!(code.get(k),
+                Some(u) if u.kind == TokKind::Num && is_float_literal(&u.text))
+        });
+        if float_neighbor {
+            out.push(finding(
+                ctx,
+                RuleId::L006,
+                t.line,
+                format!(
+                    "float `{}` against a literal; compare quantized keys or use an \
+                     epsilon (RAV cache-key drift), or annotate why the value is exact",
+                    t.text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// L007 — `thread::spawn` (anonymous thread). Unnamed threads make
+/// panics, profiles, and `/proc` inspection unattributable; spawn via
+/// `thread::Builder::new().name(...)` instead. The Builder's `.spawn(`
+/// method form is inherently not matched by the `thread :: spawn`
+/// token pattern.
+fn l007_unnamed_thread(ctx: &FileContext) -> Vec<Finding> {
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.is_ident("thread")
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("::"))
+            && matches!(code.get(i + 2), Some(u) if u.is_ident("spawn"))
+            && matches!(code.get(i + 3), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L007,
+                t.line,
+                "unnamed thread; spawn via thread::Builder::new().name(...) so panics \
+                 and profiles are attributable"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}

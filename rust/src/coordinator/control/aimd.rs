@@ -15,8 +15,9 @@
 //! happens once per epoch).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::util::ordlock::{rank, OrdMutex};
 
 /// Tuning for one [`AimdWindow`].
 #[derive(Debug, Clone, PartialEq)]
@@ -56,7 +57,9 @@ impl Default for AimdConfig {
 pub struct AimdWindow {
     cfg: AimdConfig,
     window: AtomicU64,
-    samples: Mutex<Vec<u64>>,
+    /// Rank-checked settle-path lock (latest in the coordinator lock
+    /// order) — see [`crate::util::ordlock`].
+    samples: OrdMutex<Vec<u64>>,
     epochs: AtomicU64,
     increases: AtomicU64,
     decreases: AtomicU64,
@@ -67,7 +70,11 @@ impl AimdWindow {
         let initial = cfg.initial.clamp(cfg.min_window.max(1), cfg.max_window.max(1));
         Self {
             window: AtomicU64::new(initial as u64),
-            samples: Mutex::new(Vec::with_capacity(cfg.epoch.max(1))),
+            samples: OrdMutex::new(
+                rank::AIMD_SAMPLES,
+                "AimdWindow::samples",
+                Vec::with_capacity(cfg.epoch.max(1)),
+            ),
             epochs: AtomicU64::new(0),
             increases: AtomicU64::new(0),
             decreases: AtomicU64::new(0),
@@ -90,7 +97,7 @@ impl AimdWindow {
     pub fn observe(&self, latency: Duration) {
         let epoch = self.cfg.epoch.max(1);
         let full = {
-            let mut samples = self.samples.lock().unwrap();
+            let mut samples = self.samples.lock();
             samples.push(latency.as_micros() as u64);
             if samples.len() >= epoch {
                 Some(std::mem::take(&mut *samples))

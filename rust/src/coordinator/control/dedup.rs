@@ -19,11 +19,11 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::SyncSender;
-use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::coordinator::queue::ServeError;
 use crate::runtime::executable::HostTensor;
+use crate::util::ordlock::{rank, OrdMutex};
 
 /// A parked duplicate: where to send the fanned-out result, plus the
 /// bookkeeping to settle it under the right tenant with its own
@@ -47,11 +47,19 @@ pub enum Admission {
 }
 
 /// In-flight table of content keys → parked duplicate waiters.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct DedupCoalescer {
-    inflight: Mutex<HashMap<u64, Vec<Waiter>>>,
+    /// Rank-checked (front-of-pipeline: acquired before any admission
+    /// queue) and poison-recovering — see [`crate::util::ordlock`].
+    inflight: OrdMutex<HashMap<u64, Vec<Waiter>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Default for DedupCoalescer {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// FNV-1a over the tensor's shape then the exact bit patterns of its
@@ -78,7 +86,15 @@ pub fn key_of(t: &HostTensor) -> u64 {
 
 impl DedupCoalescer {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            inflight: OrdMutex::new(
+                rank::DEDUP_INFLIGHT,
+                "DedupCoalescer::inflight",
+                HashMap::new(),
+            ),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
     /// Admit a frame under `key`. If an identical frame is already in
@@ -86,7 +102,7 @@ impl DedupCoalescer {
     /// is returned; otherwise a fresh entry is opened and the caller
     /// owns the `Primary`.
     pub fn admit(&self, key: u64, waiter: impl FnOnce() -> Waiter) -> Admission {
-        let mut inflight = self.inflight.lock().unwrap();
+        let mut inflight = self.inflight.lock();
         match inflight.entry(key) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 e.get_mut().push(waiter());
@@ -105,7 +121,7 @@ impl DedupCoalescer {
     /// fan-out (completion or abort). The key is free for a new
     /// primary from this point on.
     pub fn take(&self, key: u64) -> Vec<Waiter> {
-        self.inflight.lock().unwrap().remove(&key).unwrap_or_default()
+        self.inflight.lock().remove(&key).unwrap_or_default()
     }
 
     /// Frames coalesced onto an in-flight primary.

@@ -47,6 +47,15 @@ impl Metrics {
         Self::default()
     }
 
+    /// One submission attempt (count *before* the admission decision,
+    /// so `requests == ok_frames + errors + shed` reconciles). The only
+    /// sanctioned way to bump `requests` outside this module — lint
+    /// rule L002 flags raw `requests.fetch_add` at other call sites
+    /// (the PR 6 sibling-failover double-count entered that way).
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_batch(&self, frames: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.frames.fetch_add(frames as u64, Ordering::Relaxed);

@@ -54,7 +54,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::fmt;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::BatcherConfig;
@@ -62,6 +62,7 @@ use crate::coordinator::control::quota::TenantTable;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::ModelExecutor;
 use crate::runtime::executable::HostTensor;
+use crate::util::ordlock::{rank, OrdMutex};
 
 /// What to do with a new request when the queue is at capacity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -420,6 +421,7 @@ impl QueueState {
             if lane.live == 0 {
                 continue;
             }
+            // lint: allow(L005, lane.live > 0 guarantees a live front entry)
             let front = self.front_live_seq(i).expect("live lane has a front");
             let better = match best {
                 None => true,
@@ -447,7 +449,9 @@ impl QueueState {
 /// Bounded, deadline-aware MPMC batch queue shared by all workers of a
 /// serving coordinator. See the module docs for the guarantees.
 pub struct AdmissionQueue {
-    state: Mutex<QueueState>,
+    /// Rank-checked (see [`crate::util::ordlock`]): acquiring this
+    /// while holding a later-ranked coordinator lock panics in tests.
+    state: OrdMutex<QueueState>,
     /// Signaled on push and on close; workers (idle or batch-filling)
     /// wait here — *releasing the lock*, so pulls never serialize.
     not_empty: Condvar,
@@ -467,7 +471,11 @@ impl AdmissionQueue {
         let mut batch = cfg.batch;
         batch.batch_size = batch.batch_size.max(1);
         Self {
-            state: Mutex::new(QueueState::new(cfg.tenants.as_deref())),
+            state: OrdMutex::new(
+                rank::QUEUE_STATE,
+                "AdmissionQueue::state",
+                QueueState::new(cfg.tenants.as_deref()),
+            ),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             batch,
@@ -513,7 +521,7 @@ impl AdmissionQueue {
     /// Dead seqs currently held by the lazy-deletion index structures
     /// (diagnostic; `tests/queue_scale.rs` bounds it under churn).
     pub fn index_slack(&self) -> usize {
-        self.state.lock().expect("admission queue poisoned").index_slack()
+        self.state.lock().index_slack()
     }
 
     fn notify_not_full(&self) {
@@ -565,7 +573,7 @@ impl AdmissionQueue {
     }
 
     fn admit(&self, mut req: InferenceRequest, account: bool) -> Result<(), ServeError> {
-        let mut state = self.state.lock().expect("admission queue poisoned");
+        let mut state = self.state.lock();
         req.tenant = req.tenant.min(state.lanes.len() - 1);
         loop {
             if state.closed {
@@ -590,7 +598,7 @@ impl AdmissionQueue {
             if over_quota {
                 match self.policy {
                     OverloadPolicy::Block => {
-                        state = self.not_full.wait(state).expect("admission queue poisoned");
+                        state = self.state.wait(&self.not_full, state);
                     }
                     OverloadPolicy::Reject => {
                         if account {
@@ -611,7 +619,7 @@ impl AdmissionQueue {
             }
             match self.policy {
                 OverloadPolicy::Block => {
-                    state = self.not_full.wait(state).expect("admission queue poisoned");
+                    state = self.state.wait(&self.not_full, state);
                 }
                 OverloadPolicy::Reject => {
                     // Band preemption: a strictly better-band newcomer
@@ -680,7 +688,7 @@ impl AdmissionQueue {
     /// workers pull concurrently, so one slow-filling batch can never
     /// convoy the pool.
     pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
-        let mut state = self.state.lock().expect("admission queue poisoned");
+        let mut state = self.state.lock();
         let first = loop {
             if let Some(req) = self.pop_live(&mut state) {
                 break req;
@@ -688,7 +696,7 @@ impl AdmissionQueue {
             if state.closed {
                 return None;
             }
-            state = self.not_empty.wait(state).expect("admission queue poisoned");
+            state = self.state.wait(&self.not_empty, state);
         };
         let mut batch = Vec::with_capacity(self.batch.batch_size);
         batch.push(first);
@@ -705,10 +713,7 @@ impl AdmissionQueue {
             if now >= deadline {
                 break;
             }
-            let (s, _) = self
-                .not_empty
-                .wait_timeout(state, deadline - now)
-                .expect("admission queue poisoned");
+            let (s, _) = self.state.wait_timeout(&self.not_empty, state, deadline - now);
             state = s;
         }
         Some(batch)
@@ -718,7 +723,7 @@ impl AdmissionQueue {
     /// [`ServeError::Closed`]) and every worker. Requests already
     /// resident are still drained and served.
     pub fn close(&self) {
-        let mut state = self.state.lock().expect("admission queue poisoned");
+        let mut state = self.state.lock();
         state.closed = true;
         drop(state);
         self.not_empty.notify_all();
@@ -727,7 +732,7 @@ impl AdmissionQueue {
 
     /// Current resident count (diagnostic; racy by nature).
     pub fn depth(&self) -> usize {
-        self.state.lock().expect("admission queue poisoned").len()
+        self.state.lock().len()
     }
 }
 
@@ -792,9 +797,9 @@ impl ServeHandle {
         input: HostTensor,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
-        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.record_request();
         if let Some(tm) = self.queue.tenant_metrics(tenant) {
-            tm.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            tm.record_request();
         }
         let (respond, rx) = sync_channel(1);
         let now = Instant::now();
@@ -830,7 +835,7 @@ impl ServeHandle {
             deadline: None,
             tenant,
         })?;
-        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.record_request();
         Ok(rx)
     }
 
@@ -838,7 +843,7 @@ impl ServeHandle {
     /// that resolved as shed. The failover dispatcher calls this
     /// exactly once per frame that every candidate refused.
     pub fn record_refused(&self) {
-        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.record_request();
         self.metrics.record_shed();
     }
 

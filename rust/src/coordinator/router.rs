@@ -54,23 +54,33 @@ impl Router {
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(n);
         let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(n);
-        for _ in 0..n {
+        for w in 0..n {
             let q = queue.clone();
             let f = factory.clone();
             let ready = ready_tx.clone();
-            workers.push(std::thread::spawn(move || {
-                let executor = match f() {
-                    Ok(e) => {
-                        let _ = ready.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready.send(Err(e));
-                        return;
-                    }
-                };
-                run_worker(&q, &executor);
-            }));
+            let spawned = std::thread::Builder::new().name(format!("dnnx-worker-{w}")).spawn(
+                move || {
+                    let executor = match f() {
+                        Ok(e) => {
+                            let _ = ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    run_worker(&q, &executor);
+                },
+            );
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // Unwind like a factory failure: stop what started.
+                    queue.close();
+                    return Err(e.into());
+                }
+            }
         }
         drop(ready_tx);
         for _ in 0..n {

@@ -82,19 +82,24 @@ impl MetricsExporter {
         let bound = listener.local_addr()?.port();
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = stop.clone();
-        let thread = std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if stop_flag.load(Ordering::Relaxed) {
-                    break;
+        let thread = std::thread::Builder::new()
+            .name("dnnx-scrape-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // One detached thread per connection: a stalled or
+                    // dead-slow scraper wedges only itself, never the
+                    // accept loop. A failed spawn just drops this one
+                    // connection; the scraper retries next interval.
+                    let render = render.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("dnnx-scrape-conn".into())
+                        .spawn(move || serve_one(stream, &render));
                 }
-                let Ok(stream) = conn else { continue };
-                // One detached thread per connection: a stalled or
-                // dead-slow scraper wedges only itself, never the
-                // accept loop.
-                let render = render.clone();
-                std::thread::spawn(move || serve_one(stream, &render));
-            }
-        });
+            })?;
         Ok(Self { port: bound, stop, thread: Some(thread) })
     }
 

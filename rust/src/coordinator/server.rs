@@ -61,19 +61,21 @@ impl AcceleratorServer {
         let queue = Arc::new(AdmissionQueue::new(cfg, metrics.clone()));
         let q = queue.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(1);
-        let worker = std::thread::spawn(move || {
-            let executor = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            run_worker(&q, &executor);
-        });
+        let worker = std::thread::Builder::new()
+            .name("dnnx-worker".into())
+            .spawn(move || {
+                let executor = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run_worker(&q, &executor);
+            })?;
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Self { queue, metrics, worker: Some(worker) }),
             Ok(Err(e)) => Err(e),

@@ -400,6 +400,7 @@ impl ShardedPipeline {
                     handles: stages[i + 1].iter().map(|s| s.handle()).collect(),
                     stage: i + 1,
                     refusable: refusable[i + 1],
+                    // lint: allow(L005, back-to-front build order guarantees feed i+1 exists)
                     feed: feeds[i + 1].clone().expect("next feed built"),
                     link: links[i].clone(),
                 })
@@ -408,12 +409,14 @@ impl ShardedPipeline {
             };
             let e2e = metrics.clone();
             let ctl = control.clone();
-            forwarders.push(Some(std::thread::spawn(move || {
-                forward_loop(rx, next, ctl, e2e);
-            })));
+            let forwarder = std::thread::Builder::new()
+                .name(format!("dnnx-fwd-{i}"))
+                .spawn(move || forward_loop(rx, next, ctl, e2e))?;
+            forwarders.push(Some(forwarder));
             feeds[i] = Some(tx);
         }
         forwarders.reverse(); // index i == forwarder of stage i
+        // lint: allow(L005, the loop above filled every slot)
         let feeds = feeds.into_iter().map(|f| f.expect("feed built")).collect();
         let front = stages[0].iter().map(|s| s.handle()).collect();
         Ok(Self {
@@ -634,9 +637,9 @@ impl ShardedPipeline {
             Some(t) => t.clamp(tenant),
             None => 0,
         };
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_request();
         if let Some(tm) = self.tenant_metrics(tenant) {
-            tm.requests.fetch_add(1, Ordering::Relaxed);
+            tm.record_request();
         }
         let entered = Instant::now();
         let (respond, final_rx) = mpsc::sync_channel(1);

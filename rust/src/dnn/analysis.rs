@@ -82,6 +82,7 @@ pub struct HalfSplit {
 
 impl HalfSplit {
     pub fn ratio(&self) -> f64 {
+        // lint: allow(L006, exact-zero divisor sentinel, not a tolerance compare)
         if self.v2 == 0.0 {
             f64::INFINITY
         } else {

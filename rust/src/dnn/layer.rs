@@ -209,6 +209,7 @@ impl Layer {
     /// CTC 0 by convention (they are excluded from the Fig. 1 sample).
     pub fn ctc(&self) -> f64 {
         let wb = self.weight_bytes(self.precision);
+        // lint: allow(L006, weightless layers produce an exact 0.0, not a computed float)
         if wb == 0.0 {
             0.0
         } else {

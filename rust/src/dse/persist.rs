@@ -95,6 +95,7 @@ fn pn(j: &Json, k: &str) -> anyhow::Result<usize> {
     let v = field(j, k)?
         .as_f64()
         .ok_or_else(|| anyhow::anyhow!("cache file: field {k:?} not a number"))?;
+    // lint: allow(L006, fract()==0.0 is the exact integrality test for a JSON index)
     anyhow::ensure!(v >= 0.0 && v.fract() == 0.0, "cache file: {k:?} = {v} not an index");
     Ok(v as usize)
 }

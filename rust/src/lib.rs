@@ -91,7 +91,17 @@
 //!   including multi-tenant + AIMD + eject/readmit smokes.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation as text rows/series.
+//! * [`analysis`] — the repo-native lint engine (`dnnexplorer lint`):
+//!   a dependency-free lexer + token-pattern rules L001–L007 that turn
+//!   bug classes earlier PRs fixed by hand (lock convoys, counter
+//!   double-counts, unbounded worker-loop growth, timeout-less socket
+//!   I/O, float-equality drift, unnamed threads) into machine-checked
+//!   invariants, with explicit allow-annotations and a JSON baseline.
+//!   Its dynamic sibling is [`util::ordlock`]: a rank-checked mutex
+//!   that panics on lock-order inversion in debug builds, naming both
+//!   acquisition sites.
 
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

@@ -47,6 +47,10 @@ USAGE:
                       [--aimd-p99-us U] [--heartbeat-ms MS] [--eject FROM:TO]
                       # any control-plane flag switches the bench from the
                       # worker-pool router to the sharded pipeline + control plane
+  dnnexplorer lint    [--path DIR] [--rule L00N] [--baseline FILE]
+                      [--write-baseline FILE] [--deny]
+                      # repo-native static analysis (rules L001-L007,
+                      # see docs/lints.md); --deny exits nonzero on findings
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
           googlenet inceptionv3 squeezenet mobilenet mobilenetv2
@@ -66,7 +70,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let is_bool = matches!(key, "json" | "full" | "aimd");
+                let is_bool = matches!(key, "json" | "full" | "aimd" | "deny");
                 if is_bool {
                     flags.insert(key.to_string(), "true".into());
                 } else {
@@ -119,6 +123,7 @@ fn main() {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "lint" => cmd_lint(rest),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);
@@ -765,16 +770,20 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     for i in 0..requests {
         let h = server.handle();
         let shape = input_shape.clone();
-        clients.push(std::thread::spawn(move || {
-            let mut frame = HostTensor::zeros(&shape);
-            for (j, v) in frame.data.iter_mut().enumerate() {
-                *v = ((i * 31 + j) % 255) as f32 / 255.0;
-            }
-            match h.submit_frame_for(i % classes, frame) {
-                Ok(rx) => matches!(rx.recv(), Ok(Ok(_))),
-                Err(_) => false,
-            }
-        }));
+        let client = std::thread::Builder::new()
+            .name(format!("dnnx-client-{i}"))
+            .spawn(move || {
+                let mut frame = HostTensor::zeros(&shape);
+                for (j, v) in frame.data.iter_mut().enumerate() {
+                    *v = ((i * 31 + j) % 255) as f32 / 255.0;
+                }
+                match h.submit_frame_for(i % classes, frame) {
+                    Ok(rx) => matches!(rx.recv(), Ok(Ok(_))),
+                    Err(_) => false,
+                }
+            })
+            .expect("spawn client thread");
+        clients.push(client);
     }
     let ok = clients
         .into_iter()
@@ -1152,6 +1161,76 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
     }
     if let Ok(pipe) = Arc::try_unwrap(pipe) {
         pipe.shutdown();
+    }
+    Ok(())
+}
+
+/// `dnnexplorer lint` — run the repo-native static analysis
+/// ([`dnnexplorer::analysis`]) over a source tree. Defaults to `src`
+/// (falling back to `rust/src` when invoked from the repo root), so
+/// `cargo run -- lint --deny` is the whole CI gate.
+fn cmd_lint(argv: &[String]) -> anyhow::Result<()> {
+    use dnnexplorer::analysis::{analyze_tree, baseline::Baseline, RuleId};
+
+    let args = Args::parse(argv)?;
+    let root = match args.get("path") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let src = PathBuf::from("src");
+            if src.is_dir() {
+                src
+            } else {
+                PathBuf::from("rust/src")
+            }
+        }
+    };
+    anyhow::ensure!(
+        root.exists(),
+        "lint path {} not found (run from the crate root, or pass --path)",
+        root.display()
+    );
+
+    let active: Vec<RuleId> = match args.get("rule") {
+        Some(code) => {
+            let rule = RuleId::parse(code).ok_or_else(|| {
+                anyhow::anyhow!("unknown rule {code}; valid: L001..L007 (see docs/lints.md)")
+            })?;
+            vec![rule]
+        }
+        None => RuleId::all().to_vec(),
+    };
+
+    let report = analyze_tree(&root, &active)?;
+
+    if let Some(out) = args.get("write-baseline") {
+        let doc = Baseline::render(&report.findings);
+        std::fs::write(out, doc + "\n")
+            .map_err(|e| anyhow::anyhow!("write baseline {out}: {e}"))?;
+        println!(
+            "lint: wrote baseline for {} finding(s) across {} file(s) to {out}",
+            report.findings.len(),
+            report.files_scanned
+        );
+        return Ok(());
+    }
+
+    let baseline = match args.get("baseline") {
+        Some(p) => Baseline::load(std::path::Path::new(p))?,
+        None => Baseline::empty(),
+    };
+    let (fresh, suppressed) = baseline.apply(report.findings);
+
+    for f in &fresh {
+        println!("{}:{}: {} {}", f.file, f.line, f.rule, f.message);
+    }
+    println!(
+        "lint: {} finding(s), {} baseline-suppressed, {} file(s) scanned",
+        fresh.len(),
+        suppressed,
+        report.files_scanned
+    );
+    if args.has("deny") && !fresh.is_empty() {
+        anyhow::bail!("lint --deny: {} unsuppressed finding(s)", fresh.len());
     }
     Ok(())
 }

@@ -3,8 +3,10 @@
 
 pub mod bench;
 pub mod json;
+pub mod ordlock;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;
 
+pub use ordlock::{lock_clean, OrdMutex, OrdMutexGuard};
 pub use rng::Rng;

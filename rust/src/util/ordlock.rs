@@ -1,0 +1,350 @@
+//! Lock-rank sanitizer: a [`Mutex`] wrapper that enforces a global
+//! acquisition order at test time, plus [`lock_clean`] — poison-free
+//! locking for the serving path.
+//!
+//! The static lint ([`crate::analysis`], rule L001) catches a guard
+//! held across a *named* blocking call, but it cannot prove the absence
+//! of deadlock by cyclic lock acquisition — that needs a dynamic check.
+//! [`OrdMutex`] assigns every coordinator mutex a rank (see [`rank`])
+//! and keeps a thread-local stack of currently-held ranks; acquiring a
+//! mutex whose rank is not strictly greater than the top of the stack
+//! panics with **both** acquisition sites (the held lock's and the
+//! offending one's), so a single test run pinpoints the inversion. The
+//! checks compile away under `cfg(not(debug_assertions))` — release
+//! builds pay one plain `Mutex::lock`.
+//!
+//! Poison policy: both [`OrdMutex::lock`] and [`lock_clean`] recover
+//! the guard from a poisoned mutex instead of panicking. A worker that
+//! panicked mid-request used to poison shared serving state and cascade
+//! the panic into every submitter and worker that touched the lock
+//! next; the data under these locks (queue lanes, dedup tables, AIMD
+//! samples) is self-healing counters-and-collections state, so serving
+//! degrades by at most the one lost request instead of collapsing.
+//!
+//! Waiting on a [`Condvar`] releases the lock, so it must also release
+//! the rank for the duration of the park — [`OrdMutex::wait`] /
+//! [`OrdMutex::wait_timeout`] do exactly that (pop rank, park on the
+//! inner guard, re-register on wake). This is also why the L001 lint
+//! does *not* treat `Condvar::wait` as blocking-while-holding.
+
+use std::fmt;
+use std::panic::Location;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Lock ranks for every coordinator mutex, in required acquisition
+/// order (lower first). No current code path nests two of these, so
+/// the ranks encode the *intended* order for future code: front-of-
+/// pipeline state before per-stage state before settle-path state.
+pub mod rank {
+    /// `DedupCoalescer::inflight` — taken at the pipeline front, before
+    /// any admission queue is touched.
+    pub const DEDUP_INFLIGHT: u32 = 10;
+    /// `AdmissionQueue::state` — the per-stage admission lock.
+    pub const QUEUE_STATE: u32 = 20;
+    /// `AimdWindow::samples` — settle-path latency sample buffer.
+    pub const AIMD_SAMPLES: u32 = 30;
+}
+
+/// Lock a plain [`Mutex`], recovering the guard if a previous holder
+/// panicked. Use for shared serving state whose invariants hold between
+/// statements (counters, maps): one poisoned request must not cascade.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(debug_assertions)]
+mod tracking {
+    use std::cell::RefCell;
+    use std::panic::Location;
+
+    struct Held {
+        rank: u32,
+        name: &'static str,
+        id: usize,
+        site: &'static Location<'static>,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Register an acquisition, panicking on a rank inversion. Because
+    /// every push requires a strictly greater rank than the top, the
+    /// stack is always strictly increasing and checking the top alone
+    /// suffices (removal of any element preserves the property).
+    pub(super) fn acquire(
+        rank: u32,
+        name: &'static str,
+        id: usize,
+        site: &'static Location<'static>,
+    ) {
+        HELD.with(|cell| {
+            let mut held = cell.borrow_mut();
+            if let Some(top) = held.last() {
+                if top.id == id {
+                    panic!(
+                        "ordlock: recursive lock of {name} (rank {rank}) at {site}; \
+                         first acquired at {}",
+                        top.site
+                    );
+                }
+                if top.rank >= rank {
+                    panic!(
+                        "ordlock: lock-order violation: acquiring {name} (rank {rank}) at \
+                         {site} while holding {} (rank {}) acquired at {}",
+                        top.name, top.rank, top.site
+                    );
+                }
+            }
+            held.push(Held { rank, name, id, site });
+        });
+    }
+
+    /// Unregister by mutex identity — guards may drop out of LIFO
+    /// order (e.g. `drop(outer)` before `inner` falls out of scope).
+    pub(super) fn release(id: usize) {
+        HELD.with(|cell| {
+            let mut held = cell.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|h| h.id == id) {
+                held.remove(pos);
+            }
+        });
+    }
+}
+
+/// A [`Mutex`] with a rank checked against a thread-local stack of held
+/// locks under `debug_assertions`. See the module docs.
+pub struct OrdMutex<T> {
+    inner: Mutex<T>,
+    rank: u32,
+    name: &'static str,
+}
+
+impl<T> OrdMutex<T> {
+    pub fn new(rank: u32, name: &'static str, value: T) -> Self {
+        Self { inner: Mutex::new(value), rank, name }
+    }
+
+    /// The rank this mutex must be acquired at (lower = earlier).
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Diagnostic name used in violation messages.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn id(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    #[cfg(debug_assertions)]
+    fn note_acquire(&self, site: &'static Location<'static>) {
+        tracking::acquire(self.rank, self.name, self.id(), site);
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn note_acquire(&self, _site: &'static Location<'static>) {}
+
+    /// Acquire, enforcing rank order (debug) and recovering poison.
+    #[track_caller]
+    pub fn lock(&self) -> OrdMutexGuard<'_, T> {
+        self.note_acquire(Location::caller());
+        OrdMutexGuard::new(lock_clean(&self.inner), self.id())
+    }
+
+    /// `Condvar::wait` that keeps the rank stack honest: the rank is
+    /// released for the duration of the park (the lock is not held) and
+    /// re-registered on wake. Poison on re-acquisition is recovered.
+    #[track_caller]
+    pub fn wait<'a>(&'a self, cv: &Condvar, guard: OrdMutexGuard<'a, T>) -> OrdMutexGuard<'a, T> {
+        let inner = guard.into_inner_guard();
+        let inner = cv.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        self.note_acquire(Location::caller());
+        OrdMutexGuard::new(inner, self.id())
+    }
+
+    /// [`Self::wait`] with a timeout; the boolean is `timed_out()`.
+    #[track_caller]
+    pub fn wait_timeout<'a>(
+        &'a self,
+        cv: &Condvar,
+        guard: OrdMutexGuard<'a, T>,
+        timeout: Duration,
+    ) -> (OrdMutexGuard<'a, T>, bool) {
+        let inner = guard.into_inner_guard();
+        let (inner, result) =
+            cv.wait_timeout(inner, timeout).unwrap_or_else(PoisonError::into_inner);
+        self.note_acquire(Location::caller());
+        (OrdMutexGuard::new(inner, self.id()), result.timed_out())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrdMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrdMutex")
+            .field("name", &self.name)
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard for an [`OrdMutex`]; unregisters its rank on drop.
+pub struct OrdMutexGuard<'a, T> {
+    /// `None` only transiently, while parked in `wait`/`wait_timeout`
+    /// (the inner guard has been surrendered to the condvar).
+    inner: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    id: usize,
+}
+
+impl<'a, T> OrdMutexGuard<'a, T> {
+    fn new(inner: MutexGuard<'a, T>, id: usize) -> Self {
+        #[cfg(not(debug_assertions))]
+        let _ = id;
+        Self {
+            inner: Some(inner),
+            #[cfg(debug_assertions)]
+            id,
+        }
+    }
+
+    /// Surrender the inner guard (for condvar waits), unregistering the
+    /// rank. The emptied wrapper's drop is then a no-op.
+    fn into_inner_guard(mut self) -> MutexGuard<'a, T> {
+        let inner = self.inner.take().expect("ordlock guard already surrendered");
+        #[cfg(debug_assertions)]
+        tracking::release(self.id);
+        inner
+    }
+}
+
+impl<T> std::ops::Deref for OrdMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_deref().expect("ordlock guard used after surrender")
+    }
+}
+
+impl<T> std::ops::DerefMut for OrdMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_deref_mut().expect("ordlock guard used after surrender")
+    }
+}
+
+impl<T> Drop for OrdMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            #[cfg(debug_assertions)]
+            tracking::release(self.id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn in_rank_nesting_and_out_of_lifo_release_are_allowed() {
+        let a = OrdMutex::new(1, "a", 1u32);
+        let b = OrdMutex::new(2, "b", 2u32);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!((*ga, *gb), (1, 2));
+        drop(ga); // release the lower rank first: must not confuse the stack
+        drop(gb);
+        let _ok = b.lock(); // stack is clean again
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn inversion_panics_with_both_acquisition_sites() {
+        let a = OrdMutex::new(1, "lock-a", ());
+        let b = OrdMutex::new(2, "lock-b", ());
+        let err = std::thread::Builder::new()
+            .name("ordlock-inversion".into())
+            .spawn(move || {
+                let _gb = b.lock();
+                let _ga = a.lock(); // rank 1 after rank 2: inversion
+            })
+            .expect("spawn inversion thread")
+            .join()
+            .expect_err("inversion must panic");
+        let msg = err.downcast_ref::<String>().expect("string panic payload").clone();
+        assert!(msg.contains("lock-order violation"), "{msg}");
+        assert!(msg.contains("lock-a (rank 1)"), "{msg}");
+        assert!(msg.contains("lock-b (rank 2)"), "{msg}");
+        // Both acquisition sites appear, file:line each.
+        assert_eq!(msg.matches("ordlock.rs").count(), 2, "{msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn recursive_lock_panics_instead_of_deadlocking() {
+        let m = OrdMutex::new(3, "recursive", ());
+        let err = std::thread::Builder::new()
+            .name("ordlock-recursive".into())
+            .spawn(move || {
+                let _g1 = m.lock();
+                let _g2 = m.lock();
+            })
+            .expect("spawn recursion thread")
+            .join()
+            .expect_err("recursive lock must panic");
+        let msg = err.downcast_ref::<String>().expect("string panic payload").clone();
+        assert!(msg.contains("recursive lock"), "{msg}");
+    }
+
+    #[test]
+    fn wait_timeout_releases_and_reacquires_the_rank() {
+        let m = OrdMutex::new(5, "waiter", 0u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (g, timed_out) = m.wait_timeout(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+        drop(g);
+        // If the wait cycle leaked a stack entry this relock would trip
+        // the recursive-lock check.
+        let _again = m.lock();
+    }
+
+    #[test]
+    fn poisoned_ordmutex_recovers_the_guard() {
+        let m = Arc::new(OrdMutex::new(7, "poisoned", vec![1, 2]));
+        let m2 = m.clone();
+        let joined = std::thread::Builder::new()
+            .name("ordlock-poisoner".into())
+            .spawn(move || {
+                let _g = m2.lock();
+                panic!("poison the mutex");
+            })
+            .expect("spawn poisoner")
+            .join();
+        assert!(joined.is_err());
+        assert_eq!(m.lock()[0], 1, "lock recovers after a holder panicked");
+    }
+
+    #[test]
+    fn lock_clean_recovers_a_poisoned_std_mutex() {
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = m.clone();
+        let joined = std::thread::Builder::new()
+            .name("lock-clean-poisoner".into())
+            .spawn(move || {
+                let _g = m2.lock().expect("first lock");
+                panic!("poison");
+            })
+            .expect("spawn poisoner")
+            .join();
+        assert!(joined.is_err());
+        assert!(m.is_poisoned());
+        let mut g = lock_clean(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+}

@@ -1,0 +1,115 @@
+//! End-to-end tests of the repo-native lint engine.
+//!
+//! The seeded fixture (`tests/lint_fixtures/coordinator/violations.rs`,
+//! never compiled by cargo) carries `expect-lint: L00N` markers on each
+//! violating line; the engine's findings must match the markers
+//! exactly — no misses, no extras. The real source tree must come back
+//! completely clean, which is what lets CI run `lint --deny` as a gate.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use dnnexplorer::analysis::{analyze_source, analyze_tree, baseline::Baseline, RuleId};
+
+const FIXTURE: &str = "tests/lint_fixtures/coordinator/violations.rs";
+
+fn fixture_src() -> String {
+    std::fs::read_to_string(FIXTURE).expect("fixture readable from crate root")
+}
+
+/// `(rule code, 1-based line)` pairs declared by `expect-lint:` markers.
+/// Only tokens that parse as real rule ids count, so prose *about* the
+/// marker convention (the fixture's own doc comment) is inert.
+fn expected_markers(src: &str) -> BTreeSet<(String, u32)> {
+    let mut out = BTreeSet::new();
+    for (i, line) in src.lines().enumerate() {
+        let Some(pos) = line.find("expect-lint:") else { continue };
+        for code in line[pos + "expect-lint:".len()..].split(',') {
+            let code = code.trim();
+            if RuleId::parse(code).is_some() {
+                out.insert((code.to_string(), (i + 1) as u32));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn fixture_findings_match_markers_exactly() {
+    let src = fixture_src();
+    let expected = expected_markers(&src);
+    assert!(expected.len() >= 8, "fixture should seed all seven rules: {expected:?}");
+    let actual: BTreeSet<(String, u32)> = analyze_source(FIXTURE, &src, &RuleId::all())
+        .into_iter()
+        .map(|f| (f.rule.code().to_string(), f.line))
+        .collect();
+    assert_eq!(actual, expected, "engine findings must match fixture markers");
+}
+
+#[test]
+fn fixture_covers_every_rule() {
+    let src = fixture_src();
+    let hit: BTreeSet<RuleId> = analyze_source(FIXTURE, &src, &RuleId::all())
+        .into_iter()
+        .map(|f| f.rule)
+        .collect();
+    for rule in RuleId::all() {
+        assert!(hit.contains(&rule), "fixture must trip {rule}");
+    }
+}
+
+#[test]
+fn real_tree_is_clean_under_deny() {
+    // The whole point of the PR: the shipped tree carries zero
+    // unsuppressed findings, so `lint --deny` can gate CI.
+    let report = analyze_tree(Path::new("src"), &RuleId::all()).expect("src/ scans");
+    assert!(report.files_scanned > 30, "walker found only {} files", report.files_scanned);
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {} {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(rendered.is_empty(), "real tree must lint clean:\n{}", rendered.join("\n"));
+}
+
+#[test]
+fn single_rule_filter_restricts_findings() {
+    let src = fixture_src();
+    let findings = analyze_source(FIXTURE, &src, &[RuleId::L007]);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::L007);
+}
+
+#[test]
+fn baseline_grandfathers_fixture_findings() {
+    let src = fixture_src();
+    let findings = analyze_source(FIXTURE, &src, &RuleId::all());
+    let n = findings.len();
+    assert!(n >= 8);
+
+    let doc = Baseline::render(&findings);
+    let base = Baseline::parse(&doc).expect("rendered baseline parses");
+    let (fresh, suppressed) = base.apply(findings.clone());
+    assert!(fresh.is_empty(), "full baseline must suppress everything: {fresh:?}");
+    assert_eq!(suppressed, n);
+
+    let (fresh, suppressed) = Baseline::empty().apply(findings);
+    assert_eq!(fresh.len(), n);
+    assert_eq!(suppressed, 0);
+}
+
+#[test]
+fn shipped_baseline_is_valid_and_empty() {
+    // The committed lint-baseline.json documents the format; a clean
+    // tree means it must waive nothing.
+    let base = Baseline::load(Path::new("lint-baseline.json")).expect("shipped baseline loads");
+    let probe = dnnexplorer::analysis::Finding {
+        rule: RuleId::L001,
+        file: "src/anything.rs".to_string(),
+        line: 1,
+        message: String::new(),
+    };
+    let (fresh, suppressed) = base.apply(vec![probe]);
+    assert_eq!(fresh.len(), 1, "shipped baseline must be empty");
+    assert_eq!(suppressed, 0);
+}

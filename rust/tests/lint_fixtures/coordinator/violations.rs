@@ -1,0 +1,97 @@
+//! Seeded lint-violation fixture for the repo-native lint engine.
+//!
+//! Every line tagged `expect-lint: L00N` must produce exactly that
+//! finding, and no untagged line may produce any —
+//! `tests/lint_engine.rs` diffs the engine's findings against these
+//! markers, and CI asserts `lint --deny --path tests/lint_fixtures`
+//! exits nonzero. The file lives under a `coordinator/` directory so
+//! the path-scoped rules (L003, L005) apply; cargo never compiles it
+//! (only top-level `tests/*.rs` are test targets), so the code only
+//! has to be lexable, not runnable.
+
+use std::sync::Mutex;
+
+struct Shared {
+    queue: Mutex<Vec<u64>>,
+    requests: std::sync::atomic::AtomicU64,
+}
+
+// L001: a guard held across a blocking channel receive — the shape of
+// PR 2's admission-lock convoy.
+fn convoy(shared: &Shared, rx: &std::sync::mpsc::Receiver<u64>) {
+    let guard = shared.queue.lock().unwrap(); // expect-lint: L005
+    let item = rx.recv(); // expect-lint: L001
+    drop(guard);
+    drop(item);
+}
+
+// Dropping the guard first is the fix — no finding.
+fn convoy_fixed(shared: &Shared, rx: &std::sync::mpsc::Receiver<u64>) {
+    let guard = shared.queue.lock();
+    drop(guard);
+    let _ = rx.recv();
+}
+
+// L002: raw counter mutation outside metrics.rs helpers — the shape of
+// PR 6's sibling-failover double-count.
+fn double_count(m: &Shared) {
+    m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed); // expect-lint: L002
+}
+
+// L003: unbounded growth in a worker loop — the shape of PR 6's EDF
+// slack-index leak (this fn never pops/sweeps/evicts).
+fn grow_forever(log: &mut Vec<u64>, feed: &std::sync::mpsc::Receiver<u64>) {
+    loop {
+        let Ok(v) = feed.recv() else { return };
+        log.push(v); // expect-lint: L003
+    }
+}
+
+// L004: socket obtained and raw I/O issued, no timeout anywhere — the
+// shape of PR 6's metrics-exporter hang.
+fn serve_untimed(listener: &std::net::TcpListener) {
+    if let Ok((mut stream, _)) = listener.accept() {
+        let mut buf = [0u8; 64];
+        let _ = std::io::Read::read(&mut stream, &mut buf); // expect-lint: L004
+    }
+}
+
+// L005: bare expect on the serving path.
+fn brittle(v: Option<u64>) -> u64 {
+    v.expect("serving path must not panic") // expect-lint: L005
+}
+
+// L006: raw float equality outside the quantized cache-key helpers.
+fn drifty(x: f64) -> bool {
+    x == 0.3 // expect-lint: L006
+}
+
+// L007: anonymous thread — unnamed panics are unattributable.
+fn anonymous_worker() {
+    std::thread::spawn(|| {}); // expect-lint: L007
+}
+
+// The allow-annotation escape hatch: suppressed, must NOT be reported.
+fn annotated(v: Option<u64>) -> u64 {
+    // lint: allow(L005, fixture proves the annotation suppresses)
+    v.unwrap()
+}
+
+// Test code is exempt wholesale: none of these may be reported.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v: Option<u64> = None;
+        let _ = v.unwrap();
+        std::thread::spawn(|| {});
+    }
+}
+
+// Lexer torture: raw strings, nested comments, chars vs lifetimes.
+// None of this may produce findings or derail later rules.
+fn torture() -> &'static str {
+    let _c = 'x';
+    let _n = 0; /* outer /* inner .unwrap() thread::spawn */ still comment */
+    r#"thread::spawn inside a raw string // with a "quoted" part"#
+}
