@@ -44,11 +44,13 @@ pub enum RuleId {
     L006,
     /// Unnamed spawned thread.
     L007,
+    /// Wall-clock `SystemTime::now()` on the serving/tracing path.
+    L008,
 }
 
 impl RuleId {
     /// Every rule, in reporting order.
-    pub fn all() -> [RuleId; 7] {
+    pub fn all() -> [RuleId; 8] {
         [
             RuleId::L001,
             RuleId::L002,
@@ -57,6 +59,7 @@ impl RuleId {
             RuleId::L005,
             RuleId::L006,
             RuleId::L007,
+            RuleId::L008,
         ]
     }
 
@@ -71,6 +74,7 @@ impl RuleId {
             RuleId::L005 => "L005",
             RuleId::L006 => "L006",
             RuleId::L007 => "L007",
+            RuleId::L008 => "L008",
         }
     }
 
@@ -89,6 +93,7 @@ impl RuleId {
             RuleId::L005 => "unwrap/expect on the serving path",
             RuleId::L006 => "raw floating-point equality",
             RuleId::L007 => "unnamed spawned thread",
+            RuleId::L008 => "wall-clock SystemTime::now() on the serving/tracing path",
         }
     }
 }

@@ -74,6 +74,7 @@ pub fn run(rule: RuleId, ctx: &FileContext) -> Vec<Finding> {
         RuleId::L005 => l005_unwrap_on_serving_path(ctx),
         RuleId::L006 => l006_float_equality(ctx),
         RuleId::L007 => l007_unnamed_thread(ctx),
+        RuleId::L008 => l008_wall_clock_on_serving_path(ctx),
     }
 }
 
@@ -494,6 +495,40 @@ fn l007_unnamed_thread(ctx: &FileContext) -> Vec<Finding> {
                 t.line,
                 "unnamed thread; spawn via thread::Builder::new().name(...) so panics \
                  and profiles are attributable"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// L008 — `SystemTime::now()` under `coordinator/`. The serving and
+/// tracing path must be monotonic: span timestamps, latency samples,
+/// and heartbeat horizons all difference two readings, and the wall
+/// clock can step backwards under NTP — which yields negative phase
+/// durations and spurious ejections. Use `Instant` (against a module
+/// epoch where an absolute scale is needed, as `trace.rs` does). A
+/// deliberate wall-clock read (e.g. stamping an export file name)
+/// carries `// lint: allow(L008, reason)`.
+fn l008_wall_clock_on_serving_path(ctx: &FileContext) -> Vec<Finding> {
+    if !ctx.path.contains("coordinator") {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.is_ident("SystemTime")
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("::"))
+            && matches!(code.get(i + 2), Some(u) if u.is_ident("now"))
+            && matches!(code.get(i + 3), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L008,
+                t.line,
+                "`SystemTime::now()` on the serving/tracing path; the wall clock can \
+                 step backwards — use `Instant` (against an epoch for absolute \
+                 timestamps), or justify with `// lint: allow(L008, reason)`"
                     .to_string(),
             ));
         }

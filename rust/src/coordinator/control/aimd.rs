@@ -11,12 +11,18 @@
 //! shifts (e.g. a replica is ejected).
 //!
 //! Reads are a single atomic load on the submit path; observation
-//! takes a short mutex on the settle path (amortized: the sort only
-//! happens once per epoch).
+//! takes a short mutex on the settle path over a constant-size
+//! log-bucket array (the [`crate::coordinator::metrics::BUCKETS_US`]
+//! scheme), so an epoch close is O(buckets) with zero allocation —
+//! the raw-sample `Vec` + per-epoch sort it replaced grew with the
+//! epoch length.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::metrics::{bucket_index, percentile_from_counts, BUCKET_COUNT};
+use crate::coordinator::trace::{TraceEvent, Tracer};
 use crate::util::ordlock::{rank, OrdMutex};
 
 /// Tuning for one [`AimdWindow`].
@@ -50,6 +56,14 @@ impl Default for AimdConfig {
     }
 }
 
+/// One epoch's latency samples as log-bucket counts: constant memory
+/// regardless of epoch length, reset in place at every epoch close.
+#[derive(Debug)]
+struct EpochBuckets {
+    counts: [u64; BUCKET_COUNT],
+    len: usize,
+}
+
 /// The adaptive in-flight cap. Shared (`Arc`) between the submit path
 /// (reads [`window`](Self::window)) and the settle path (feeds
 /// [`observe`](Self::observe)).
@@ -59,25 +73,34 @@ pub struct AimdWindow {
     window: AtomicU64,
     /// Rank-checked settle-path lock (latest in the coordinator lock
     /// order) — see [`crate::util::ordlock`].
-    samples: OrdMutex<Vec<u64>>,
+    samples: OrdMutex<EpochBuckets>,
     epochs: AtomicU64,
     increases: AtomicU64,
     decreases: AtomicU64,
+    /// Window-change instant events land here when tracing is wired.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl AimdWindow {
     pub fn new(cfg: AimdConfig) -> Self {
+        Self::with_tracer(cfg, None)
+    }
+
+    /// [`Self::new`], additionally publishing window changes as
+    /// [`TraceEvent::WindowChange`] instants to `tracer`.
+    pub fn with_tracer(cfg: AimdConfig, tracer: Option<Arc<Tracer>>) -> Self {
         let initial = cfg.initial.clamp(cfg.min_window.max(1), cfg.max_window.max(1));
         Self {
             window: AtomicU64::new(initial as u64),
             samples: OrdMutex::new(
                 rank::AIMD_SAMPLES,
                 "AimdWindow::samples",
-                Vec::with_capacity(cfg.epoch.max(1)),
+                EpochBuckets { counts: [0; BUCKET_COUNT], len: 0 },
             ),
             epochs: AtomicU64::new(0),
             increases: AtomicU64::new(0),
             decreases: AtomicU64::new(0),
+            tracer,
             cfg,
         }
     }
@@ -92,23 +115,25 @@ impl AimdWindow {
     }
 
     /// Feed one settled frame's end-to-end latency. At each epoch
-    /// boundary the buffered samples are sorted once, the epoch p99 is
-    /// compared to the target, and the window is adjusted.
+    /// boundary the bucket counts are closed out in O(buckets), the
+    /// epoch p99 is compared to the target, and the window is adjusted.
     pub fn observe(&self, latency: Duration) {
         let epoch = self.cfg.epoch.max(1);
         let full = {
             let mut samples = self.samples.lock();
-            samples.push(latency.as_micros() as u64);
-            if samples.len() >= epoch {
-                Some(std::mem::take(&mut *samples))
+            samples.counts[bucket_index(latency.as_micros() as u64)] += 1;
+            samples.len += 1;
+            if samples.len >= epoch {
+                let counts = samples.counts;
+                samples.counts = [0; BUCKET_COUNT];
+                samples.len = 0;
+                Some(counts)
             } else {
                 None
             }
         };
-        let Some(mut batch) = full else { return };
-        batch.sort_unstable();
-        let idx = ((batch.len() - 1) as f64 * 0.99).ceil() as usize;
-        let p99_us = batch[idx.min(batch.len() - 1)];
+        let Some(counts) = full else { return };
+        let p99_us = percentile_from_counts(&counts, 0.99);
         self.epochs.fetch_add(1, Ordering::Relaxed);
         let current = self.window();
         let next = if p99_us > self.cfg.target_p99.as_micros() as u64 {
@@ -119,6 +144,11 @@ impl AimdWindow {
             (current + self.cfg.increase.max(1)).min(self.cfg.max_window.max(1))
         };
         self.window.store(next as u64, Ordering::Relaxed);
+        if next != current {
+            if let Some(t) = &self.tracer {
+                t.instant(TraceEvent::WindowChange { from: current, to: next });
+            }
+        }
     }
 
     /// Completed adaptation epochs.

@@ -19,9 +19,11 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::queue::ServeError;
+use crate::coordinator::trace::{TraceEvent, Tracer};
 use crate::runtime::executable::HostTensor;
 use crate::util::ordlock::{rank, OrdMutex};
 
@@ -54,6 +56,8 @@ pub struct DedupCoalescer {
     inflight: OrdMutex<HashMap<u64, Vec<Waiter>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Coalesce hits land as trace instants when wired.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for DedupCoalescer {
@@ -86,6 +90,12 @@ pub fn key_of(t: &HostTensor) -> u64 {
 
 impl DedupCoalescer {
     pub fn new() -> Self {
+        Self::with_tracer(None)
+    }
+
+    /// [`Self::new`], additionally publishing coalesce hits as
+    /// [`TraceEvent::DedupCoalesce`] instants to `tracer`.
+    pub fn with_tracer(tracer: Option<Arc<Tracer>>) -> Self {
         Self {
             inflight: OrdMutex::new(
                 rank::DEDUP_INFLIGHT,
@@ -94,6 +104,7 @@ impl DedupCoalescer {
             ),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            tracer,
         }
     }
 
@@ -102,19 +113,29 @@ impl DedupCoalescer {
     /// is returned; otherwise a fresh entry is opened and the caller
     /// owns the `Primary`.
     pub fn admit(&self, key: u64, waiter: impl FnOnce() -> Waiter) -> Admission {
-        let mut inflight = self.inflight.lock();
-        match inflight.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => {
-                e.get_mut().push(waiter());
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Admission::Coalesced
+        let admission = {
+            let mut inflight = self.inflight.lock();
+            match inflight.entry(key) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().push(waiter());
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Admission::Coalesced
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(Vec::new());
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    Admission::Primary
+                }
             }
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(Vec::new());
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                Admission::Primary
+        };
+        // Emitted after the inflight guard drops: the collector push is
+        // lock-free but there is no reason to extend the critical section.
+        if admission == Admission::Coalesced {
+            if let Some(t) = &self.tracer {
+                t.instant(TraceEvent::DedupCoalesce);
             }
         }
+        admission
     }
 
     /// Close the entry for `key`, returning every parked waiter for

@@ -23,6 +23,8 @@ pub mod registry;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::trace::TraceConfig;
+
 pub use aimd::{AimdConfig, AimdWindow};
 pub use dedup::{key_of, Admission, DedupCoalescer, Waiter};
 pub use quota::{QosClass, TenantId, TenantTable};
@@ -54,4 +56,7 @@ pub struct ControlConfig {
     pub dedup: bool,
     /// In-flight window policy.
     pub window: WindowPolicy,
+    /// Frame tracing and latency decomposition; `None` (or a config
+    /// with `sample_every == 0`) leaves the tracer out entirely.
+    pub trace: Option<TraceConfig>,
 }

@@ -18,7 +18,10 @@
 //! threads observe it concurrently.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::coordinator::trace::{TraceEvent, Tracer};
 
 #[derive(Debug)]
 struct ReplicaHealth {
@@ -35,11 +38,23 @@ pub struct ReplicaRegistry {
     stages: Vec<Vec<ReplicaHealth>>,
     ejections: AtomicU64,
     readmissions: AtomicU64,
+    /// Eject/readmit transitions land as trace instants when wired.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl ReplicaRegistry {
     /// All replicas start live with a beat stamped at construction.
     pub fn new(replicas_per_stage: &[usize], timeout: Duration) -> Self {
+        Self::with_tracer(replicas_per_stage, timeout, None)
+    }
+
+    /// [`Self::new`], additionally publishing eject/readmit transitions
+    /// as [`TraceEvent`] instants to `tracer`.
+    pub fn with_tracer(
+        replicas_per_stage: &[usize],
+        timeout: Duration,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Self {
         Self {
             epoch: Instant::now(),
             timeout,
@@ -56,6 +71,7 @@ impl ReplicaRegistry {
                 .collect(),
             ejections: AtomicU64::new(0),
             readmissions: AtomicU64::new(0),
+            tracer,
         }
     }
 
@@ -108,10 +124,16 @@ impl ReplicaRegistry {
             if fresh {
                 if h.ejected.swap(false, Ordering::Relaxed) {
                     self.readmissions.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = &self.tracer {
+                        t.instant(TraceEvent::ReplicaReadmit { stage, replica: i });
+                    }
                 }
                 live.push(i);
             } else if !h.ejected.swap(true, Ordering::Relaxed) {
                 self.ejections.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = &self.tracer {
+                    t.instant(TraceEvent::ReplicaEject { stage, replica: i });
+                }
             }
         }
         if live.is_empty() {

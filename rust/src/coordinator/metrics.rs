@@ -11,10 +11,92 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Histogram bucket upper bounds in microseconds.
-const BUCKETS_US: [u64; 12] = [
+/// Histogram bucket upper bounds in microseconds, shared by every
+/// log-bucketed latency consumer in the coordinator: the e2e histogram
+/// here, the AIMD epoch percentile, and the per-phase trace histograms.
+pub const BUCKETS_US: [u64; 12] = [
     50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000,
 ];
+
+/// Counters per histogram: one per bound plus the overflow bucket.
+pub const BUCKET_COUNT: usize = BUCKETS_US.len() + 1;
+
+/// Bucket index for a microsecond sample (last index = overflow).
+pub fn bucket_index(us: u64) -> usize {
+    BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len())
+}
+
+/// Percentile over log-bucket counts, interpolated within the winning
+/// bucket (Prometheus `histogram_quantile` style): the rank `p·total`
+/// lands in the first bucket whose cumulative count reaches it, and the
+/// estimate is placed proportionally between that bucket's bounds
+/// rather than snapped to its upper edge. `p = 1.0` returns exactly the
+/// winning bucket's upper bound; samples past the last bound report
+/// that bound (the histogram cannot see further).
+pub fn percentile_from_counts(counts: &[u64; BUCKET_COUNT], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = (total as f64) * p.clamp(0.0, 1.0);
+    let mut acc = 0u64;
+    for (i, &n) in counts.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if (acc + n) as f64 >= rank {
+            let lower = if i == 0 { 0 } else { BUCKETS_US[i - 1] };
+            let Some(&upper) = BUCKETS_US.get(i) else {
+                return BUCKETS_US[BUCKETS_US.len() - 1];
+            };
+            let frac = ((rank - acc as f64) / n as f64).clamp(0.0, 1.0);
+            return lower + ((upper - lower) as f64 * frac).round() as u64;
+        }
+        acc += n;
+    }
+    BUCKETS_US[BUCKETS_US.len() - 1]
+}
+
+/// A lock-free log-bucketed latency histogram over [`BUCKETS_US`]:
+/// atomic per-bucket counters plus a running sum, safe to record into
+/// from any thread without blocking.
+#[derive(Debug, Default)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; BUCKET_COUNT],
+    sum_us: AtomicU64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the per-bucket counts.
+    pub fn counts(&self) -> [u64; BUCKET_COUNT] {
+        let mut out = [0u64; BUCKET_COUNT];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile_from_counts(&self.counts(), p)
+    }
+}
 
 /// Shared serving metrics.
 #[derive(Debug, Default)]
@@ -38,8 +120,7 @@ pub struct Metrics {
     /// lock so the high-water mark is exact).
     queue_depth: AtomicU64,
     queue_depth_max: AtomicU64,
-    latency_buckets: [AtomicU64; 13],
-    latency_sum_us: AtomicU64,
+    latency: LogHistogram,
 }
 
 impl Metrics {
@@ -113,41 +194,29 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency.record_us(d.as_micros() as u64);
     }
 
     /// Number of latency samples recorded (served + failed requests;
     /// shed requests are excluded).
     pub fn latency_count(&self) -> u64 {
-        self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+        self.latency.count()
     }
 
-    /// Approximate latency percentile from the histogram, microseconds.
+    /// Latency percentile from the histogram, microseconds,
+    /// interpolated within the winning bucket (see
+    /// [`percentile_from_counts`] — no longer snapped to the bucket's
+    /// upper edge).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total = self.latency_count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
-            }
-        }
-        u64::MAX
+        self.latency.percentile_us(p)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let total = self.latency_count();
+        let total = self.latency.count();
         if total == 0 {
             0.0
         } else {
-            self.latency_sum_us.load(Ordering::Relaxed) as f64 / total as f64
+            self.latency.sum_us() as f64 / total as f64
         }
     }
 
@@ -188,6 +257,52 @@ mod tests {
         assert!(p50 >= 100 && p50 <= 1000, "p50 {p50}");
         assert!(m.mean_latency_us() > 0.0);
         assert_eq!(m.latency_count(), 7);
+
+        // Exact-edge regression: a sample sitting exactly on a bucket
+        // bound must report that bound at p = 1.0 — the old
+        // implementation returned the winning bucket's upper edge for
+        // *every* percentile, so a lone 60us sample claimed p50 =
+        // 100us. Interpolation keeps the edge exact and removes the
+        // in-bucket bias.
+        let edge = Metrics::new();
+        edge.record_latency(Duration::from_micros(100));
+        assert_eq!(edge.latency_percentile_us(1.0), 100, "edge sample stays on its edge");
+        let biased = Metrics::new();
+        biased.record_latency(Duration::from_micros(60));
+        let p50 = biased.latency_percentile_us(0.5);
+        assert!(p50 < 100, "p50 {p50} must interpolate below the 100us bucket edge");
+        assert!(p50 > 50, "p50 {p50} must stay inside the (50, 100] bucket");
+    }
+
+    #[test]
+    fn interpolated_percentiles_from_counts() {
+        // 4 samples in the (500, 1000] bucket: p1.0 is the exact upper
+        // bound, p0.5 the bucket midpoint-ish interpolation.
+        let mut counts = [0u64; BUCKET_COUNT];
+        counts[bucket_index(900)] = 4;
+        assert_eq!(percentile_from_counts(&counts, 1.0), 1000);
+        assert_eq!(percentile_from_counts(&counts, 0.5), 750);
+        // Overflow bucket reports the last finite bound, not u64::MAX.
+        let mut over = [0u64; BUCKET_COUNT];
+        over[BUCKET_COUNT - 1] = 1;
+        assert_eq!(percentile_from_counts(&over, 0.99), 1_000_000);
+        // Empty histogram reports zero.
+        assert_eq!(percentile_from_counts(&[0u64; BUCKET_COUNT], 0.5), 0);
+    }
+
+    #[test]
+    fn log_histogram_records_and_snapshots() {
+        let h = LogHistogram::new();
+        for us in [40u64, 600, 600, 2_000_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_us(), 40 + 600 + 600 + 2_000_000);
+        let counts = h.counts();
+        assert_eq!(counts[bucket_index(40)], 1);
+        assert_eq!(counts[bucket_index(600)], 2);
+        assert_eq!(counts[BUCKET_COUNT - 1], 1, "past-the-end sample lands in overflow");
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
     }
 
     #[test]

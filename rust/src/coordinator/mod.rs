@@ -37,6 +37,9 @@
 //!   sharded pipeline's per-link occupancy series.
 //! * [`synthetic`] — fixed-service-time executors shared by the
 //!   overload harnesses and tests.
+//! * [`trace`] — sampling frame tracer ([`Tracer`]): per-phase span
+//!   records into a bounded [`trace::TraceCollector`], exported as
+//!   Chrome trace-event JSON and `dnnx_phase_latency_us` series.
 //!
 //! Batches are pulled earliest-deadline-first when requests carry
 //! deadlines ([`queue::QueueOrdering::Edf`], the default; FIFO when
@@ -53,6 +56,7 @@ pub mod scrape;
 pub mod server;
 pub mod sharded;
 pub mod synthetic;
+pub mod trace;
 
 pub use batcher::BatcherConfig;
 pub use control::{
@@ -69,3 +73,6 @@ pub use router::Router;
 pub use scrape::MetricsExporter;
 pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};
 pub use sharded::{LinkOccupancy, ShardedPipeline, StageSpec, StageTotals};
+pub use trace::{
+    FrameTrace, Outcome, SpanKind, TraceConfig, TraceEvent, TraceRecord, TraceTarget, Tracer,
+};

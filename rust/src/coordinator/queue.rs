@@ -61,6 +61,7 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::control::quota::TenantTable;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::ModelExecutor;
+use crate::coordinator::trace::{FrameTrace, SpanKind, TraceTarget};
 use crate::runtime::executable::HostTensor;
 use crate::util::ordlock::{rank, OrdMutex};
 
@@ -120,6 +121,9 @@ pub struct QueueConfig {
     /// On by default; the sharded pipeline turns it off for its stage
     /// queues because it settles per-tenant accounting end-to-end.
     pub tenant_accounting: bool,
+    /// Where this queue's worker reports `QueueWait` / `StageService`
+    /// spans for sampled frames. `None` (the default) = no tracing.
+    pub trace: Option<TraceTarget>,
 }
 
 impl Default for QueueConfig {
@@ -131,6 +135,7 @@ impl Default for QueueConfig {
             ordering: QueueOrdering::Edf,
             tenants: None,
             tenant_accounting: true,
+            trace: None,
         }
     }
 }
@@ -187,6 +192,9 @@ pub struct InferenceRequest {
     /// Index into the queue's [`TenantTable`] (clamped at admission;
     /// irrelevant — use 0 — when the queue has no table).
     pub tenant: usize,
+    /// Sampled-frame trace riding with the request; the worker reports
+    /// `QueueWait`/`StageService` spans against it. `None` = unsampled.
+    pub trace: Option<Arc<FrameTrace>>,
 }
 
 /// One tenant class's scheduling lane: its own FIFO + deadline heap
@@ -463,6 +471,7 @@ pub struct AdmissionQueue {
     ordering: QueueOrdering,
     tenants: Option<Arc<TenantTable>>,
     tenant_accounting: bool,
+    trace: Option<TraceTarget>,
     metrics: Arc<Metrics>,
 }
 
@@ -484,8 +493,14 @@ impl AdmissionQueue {
             ordering: cfg.ordering,
             tenant_accounting: cfg.tenant_accounting,
             tenants: cfg.tenants,
+            trace: cfg.trace,
             metrics,
         }
+    }
+
+    /// Where this queue's worker reports spans, if tracing is wired.
+    pub fn trace_target(&self) -> Option<&TraceTarget> {
+        self.trace.as_ref()
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -809,6 +824,7 @@ impl ServeHandle {
             enqueued: now,
             deadline: deadline.map(|d| now + d),
             tenant,
+            trace: None,
         })?;
         Ok(rx)
     }
@@ -826,6 +842,17 @@ impl ServeHandle {
         tenant: usize,
         input: HostTensor,
     ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
+        self.offer_frame_traced(tenant, input, None)
+    }
+
+    /// [`Self::offer_frame_for`] carrying a sampled frame's trace: the
+    /// queue's worker reports `QueueWait`/`StageService` spans for it.
+    pub fn offer_frame_traced(
+        &self,
+        tenant: usize,
+        input: HostTensor,
+        trace: Option<Arc<FrameTrace>>,
+    ) -> Result<Receiver<Result<HostTensor, ServeError>>, ServeError> {
         let (respond, rx) = sync_channel(1);
         let now = Instant::now();
         self.queue.offer(InferenceRequest {
@@ -834,6 +861,7 @@ impl ServeHandle {
             enqueued: now,
             deadline: None,
             tenant,
+            trace,
         })?;
         self.metrics.record_request();
         Ok(rx)
@@ -882,13 +910,17 @@ pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
     while let Some(reqs) = queue.next_batch() {
         let frames: Vec<HostTensor> = reqs.iter().map(|r| r.input.clone()).collect();
         metrics.record_batch(frames.len());
-        match executor.execute_batch(&frames) {
+        let exec_start = Instant::now();
+        let result = executor.execute_batch(&frames);
+        let exec_end = Instant::now();
+        match result {
             Ok(outs) if outs.len() == reqs.len() => {
                 for (req, out) in reqs.into_iter().zip(outs) {
                     metrics.record_success(req.enqueued.elapsed());
                     if let Some(tm) = queue.tenant_metrics(req.tenant) {
                         tm.record_success(req.enqueued.elapsed());
                     }
+                    record_worker_spans(queue, &req, exec_start, exec_end);
                     let _ = req.respond.send(Ok(out));
                 }
             }
@@ -904,11 +936,31 @@ pub fn run_worker<E: ModelExecutor>(queue: &AdmissionQueue, executor: &E) {
                     if let Some(tm) = queue.tenant_metrics(req.tenant) {
                         tm.record_failure(req.enqueued.elapsed());
                     }
+                    record_worker_spans(queue, &req, exec_start, exec_end);
                     let _ = req.respond.send(Err(ServeError::Execution(msg.clone())));
                 }
             }
         }
     }
+}
+
+/// Report a sampled request's `QueueWait` and `StageService` spans —
+/// before `respond.send`, so the receiver's `recv` gives the next
+/// instrumentation point a happens-before edge to these records.
+fn record_worker_spans(
+    queue: &AdmissionQueue,
+    req: &InferenceRequest,
+    exec_start: Instant,
+    exec_end: Instant,
+) {
+    let (Some(target), Some(trace)) = (queue.trace_target(), req.trace.as_ref()) else {
+        return;
+    };
+    let t = &target.tracer;
+    let wait = SpanKind::QueueWait { stage: target.stage, replica: target.replica };
+    let service = SpanKind::StageService { stage: target.stage, replica: target.replica };
+    t.span(trace, req.tenant, wait, t.us_at(req.enqueued), t.us_at(exec_start));
+    t.span(trace, req.tenant, service, t.us_at(exec_start), t.us_at(exec_end));
 }
 
 #[cfg(test)]
@@ -977,6 +1029,7 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 tenant,
+                trace: None,
             },
             rx,
         )

@@ -19,6 +19,12 @@
 //!   pushed or skipped;
 //! * duplicate pushes/skips and regressions below the release horizon
 //!   are rejected loudly (they would mean a dispatcher bug).
+//!
+//! The time a completed frame spends held here waiting for its
+//! predecessors is observable per frame: the forwarder stamps it as a
+//! [`crate::coordinator::trace::SpanKind::ReorderHold`] span (attributed
+//! to the forwarder's stage) on sampled frames, and it aggregates into
+//! the `phase="reorder_hold"` latency series.
 
 use std::collections::BTreeMap;
 

@@ -12,11 +12,14 @@
 //! (and `serve-bench --metrics-port P` for an artifact-free smoke).
 //!
 //! The exposition format is Prometheus-style text: bare
-//! `name{labels} value` lines (no `# TYPE`/`# HELP` metadata — untyped
-//! metrics, which scrapers and `curl` both accept). The responder
-//! answers any request on the socket with a `200` and the dump — it
-//! does not parse paths — which is exactly what a scrape target needs
-//! and nothing more.
+//! `name{labels} value` lines (the [`metrics_text`] block itself
+//! carries no `# TYPE`/`# HELP` metadata — untyped metrics, which
+//! scrapers and `curl` both accept; the sharded pipeline's render
+//! additionally appends typed `dnnx_phase_latency_us` summary series
+//! with headers when frame tracing is on — see
+//! [`crate::coordinator::trace`]). The responder answers any request
+//! on the socket with a `200` and the dump — it does not parse paths —
+//! which is exactly what a scrape target needs and nothing more.
 //!
 //! Each accepted connection is served on its own detached thread with
 //! both a read and a write timeout, so a scraper that connects and then

@@ -92,6 +92,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{QueueConfig, ServeError};
 use crate::coordinator::reorder::ReorderBuffer;
 use crate::coordinator::server::{AcceleratorServer, ModelExecutor, ServerHandle};
+use crate::coordinator::trace::{FrameTrace, Outcome, SpanKind, TraceTarget, Tracer};
 use crate::runtime::executable::HostTensor;
 
 /// Boxed executors compose into pipelines without naming their types.
@@ -235,6 +236,9 @@ struct InFlight {
     respond: SyncSender<Result<HostTensor, ServeError>>,
     tenant: usize,
     key: Option<u64>,
+    /// Sampled-frame trace; rides the whole chain so every phase span
+    /// lands under one trace id.
+    trace: Option<Arc<FrameTrace>>,
 }
 
 enum FeedMsg {
@@ -269,6 +273,7 @@ struct PipelineControl {
     registry: Option<Arc<ReplicaRegistry>>,
     dedup: Option<Arc<DedupCoalescer>>,
     aimd: Option<Arc<AimdWindow>>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// A chain of (replica groups of) per-board accelerator servers serving
@@ -348,6 +353,16 @@ impl ShardedPipeline {
             specs[0].queue.tenant_accounting = false;
         }
         let metrics = Arc::new(Metrics::new());
+        // The tracer is sized before the stage servers consume `specs`;
+        // `sample_every == 0` means "off", so no tracer is built at all
+        // and the serving path carries zero tracing overhead.
+        let tenant_count = cfg.tenants.as_ref().map(|t| t.classes().len()).unwrap_or(1);
+        let tracer = match &cfg.trace {
+            Some(tc) if tc.sample_every > 0 => {
+                Some(Arc::new(Tracer::new(tc.clone(), specs.len(), tenant_count)))
+            }
+            _ => None,
+        };
         // Sibling failover only matters where admission can refuse the
         // newcomer: a `Reject` queue. `Block` waits and `ShedOldest`
         // evicts a waiter instead, so those stages keep the clone-free
@@ -357,10 +372,14 @@ impl ShardedPipeline {
             .map(|s| s.queue.policy == crate::coordinator::queue::OverloadPolicy::Reject)
             .collect();
         let mut stages: Vec<Vec<AcceleratorServer>> = Vec::with_capacity(specs.len());
-        for spec in specs {
+        for (s, spec) in specs.into_iter().enumerate() {
             let mut group = Vec::with_capacity(spec.factories.len());
-            for factory in spec.factories {
-                group.push(AcceleratorServer::spawn_with(factory, spec.queue.clone())?);
+            for (k, factory) in spec.factories.into_iter().enumerate() {
+                let mut queue = spec.queue.clone();
+                queue.trace = tracer
+                    .as_ref()
+                    .map(|t| TraceTarget { tracer: t.clone(), stage: s, replica: k });
+                group.push(AcceleratorServer::spawn_with(factory, queue)?);
             }
             anyhow::ensure!(!group.is_empty(), "a stage needs at least one replica");
             stages.push(group);
@@ -371,22 +390,27 @@ impl ShardedPipeline {
             .collect();
 
         let replica_counts: Vec<usize> = stages.iter().map(|g| g.len()).collect();
-        let registry = cfg
-            .heartbeat_timeout
-            .map(|timeout| Arc::new(ReplicaRegistry::new(&replica_counts, timeout)));
+        let registry = cfg.heartbeat_timeout.map(|timeout| {
+            Arc::new(ReplicaRegistry::with_tracer(&replica_counts, timeout, tracer.clone()))
+        });
         let (window, aimd) = match cfg.window {
             WindowPolicy::None => (Window::Unbounded, None),
             WindowPolicy::Fixed(w) => (Window::Fixed(w), None),
             WindowPolicy::Aimd(acfg) => {
-                let a = Arc::new(AimdWindow::new(acfg));
+                let a = Arc::new(AimdWindow::with_tracer(acfg, tracer.clone()));
                 (Window::Aimd(a.clone()), Some(a))
             }
         };
         let control = Arc::new(PipelineControl {
             tenants: cfg.tenants,
             registry,
-            dedup: if cfg.dedup { Some(Arc::new(DedupCoalescer::new())) } else { None },
+            dedup: if cfg.dedup {
+                Some(Arc::new(DedupCoalescer::with_tracer(tracer.clone())))
+            } else {
+                None
+            },
             aimd,
+            tracer,
         });
 
         // Forwarders are built back-to-front: forwarder i needs the
@@ -411,7 +435,7 @@ impl ShardedPipeline {
             let ctl = control.clone();
             let forwarder = std::thread::Builder::new()
                 .name(format!("dnnx-fwd-{i}"))
-                .spawn(move || forward_loop(rx, next, ctl, e2e))?;
+                .spawn(move || forward_loop(rx, i, next, ctl, e2e))?;
             forwarders.push(Some(forwarder));
             feeds[i] = Some(tx);
         }
@@ -492,6 +516,13 @@ impl ShardedPipeline {
     /// The dedup/coalescing table, when [`ControlConfig::dedup`] is on.
     pub fn dedup(&self) -> Option<&Arc<DedupCoalescer>> {
         self.control.dedup.as_ref()
+    }
+
+    /// The frame tracer, when [`ControlConfig::trace`] was set with a
+    /// non-zero sample rate. `None` means the serving path carries no
+    /// tracing code at all.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.control.tracer.as_ref()
     }
 
     /// The in-flight cap currently in force (`None` = unbounded).
@@ -577,24 +608,42 @@ impl ShardedPipeline {
             out.push_str(&format!("dnnx_pipeline_window {w}\n"));
         }
         out.push_str(&format!("dnnx_pipeline_in_flight {}\n", self.in_flight()));
+        if let Some(t) = &self.control.tracer {
+            t.phase_text(&mut out);
+        }
         out
     }
 
     /// Record a front refusal — window shed or first-stage refusal — on
     /// the e2e and tenant books, aborting any dedup waiters already
     /// parked under this frame's key (each was counted as a request and
-    /// settles as shed, so every book still reconciles). Returns the
+    /// settles as shed, so every book still reconciles). Shed outcomes
+    /// are always-on trace records regardless of sampling. Returns the
     /// error for the caller to propagate.
-    fn shed_front(&self, tenant: usize, key: Option<u64>, err: ServeError) -> ServeError {
+    fn shed_front(
+        &self,
+        tenant: usize,
+        key: Option<u64>,
+        entered: Instant,
+        trace: Option<&FrameTrace>,
+        err: ServeError,
+    ) -> ServeError {
         self.metrics.record_shed();
         if let Some(tm) = self.tenant_metrics(tenant) {
             tm.record_shed();
+        }
+        if let Some(t) = &self.control.tracer {
+            t.settle_frame(trace, tenant, Outcome::Shed, entered.elapsed().as_micros() as u64);
         }
         if let (Some(key), Some(d)) = (key, &self.control.dedup) {
             for w in d.take(key) {
                 self.metrics.record_shed();
                 if let Some(tm) = self.tenant_metrics(w.tenant) {
                     tm.record_shed();
+                }
+                if let Some(t) = &self.control.tracer {
+                    let e2e = w.entered.elapsed().as_micros() as u64;
+                    t.settle_frame(None, w.tenant, Outcome::Shed, e2e);
                 }
                 let _ = w.respond.send(Err(err.clone()));
             }
@@ -658,22 +707,41 @@ impl ShardedPipeline {
             // Counting this request, more than `w` unsettled frames
             // means the reorder window is full: refuse at the front.
             if self.in_flight() > w as u64 {
-                return Err(self.shed_front(tenant, key, ServeError::Overloaded));
+                return Err(self.shed_front(tenant, key, entered, None, ServeError::Overloaded));
             }
         }
+        // Sampling keys off the seq this frame would take if admitted.
+        // The real seq is only assigned *after* admission (to keep the
+        // reorder space hole-free), so this hint is exact for a single
+        // submitter and approximate under concurrency — and always hits
+        // at sample rate 1.
+        let trace = match &self.control.tracer {
+            Some(t) => t.begin(self.next_seq.load(Ordering::Relaxed), t.us_at(entered)),
+            None => None,
+        };
         let live: Vec<usize> = match &self.control.registry {
             Some(reg) => reg.live_replicas(0),
             None => (0..self.front.len()).collect(),
         };
         let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
-        let offered =
-            offer_with_failover(&self.front, &live, self.front_refusable, cursor, tenant, input);
+        let offered = offer_with_failover(
+            &self.front,
+            &live,
+            self.front_refusable,
+            cursor,
+            tenant,
+            input,
+            trace.clone(),
+        );
         match offered {
             Ok((_, rx)) => {
                 // The sequence number is taken *after* admission, so
                 // refused frames leave no hole in the reorder space.
                 let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-                let job = InFlight { seq, rx, entered, respond, tenant, key };
+                if let (Some(t), Some(ft)) = (&self.control.tracer, &trace) {
+                    t.span(ft, tenant, SpanKind::Admit, t.us_at(entered), t.now_us());
+                }
+                let job = InFlight { seq, rx, entered, respond, tenant, key, trace };
                 if let Err(mpsc::SendError(FeedMsg::Job(job))) =
                     self.feeds[0].send(FeedMsg::Job(job))
                 {
@@ -684,7 +752,7 @@ impl ShardedPipeline {
                 }
                 Ok(final_rx)
             }
-            Err(e) => Err(self.shed_front(tenant, key, e)),
+            Err(e) => Err(self.shed_front(tenant, key, entered, trace.as_deref(), e)),
         }
     }
 
@@ -738,10 +806,11 @@ fn offer_with_failover(
     cursor: u64,
     tenant: usize,
     input: HostTensor,
+    trace: Option<Arc<FrameTrace>>,
 ) -> Result<(usize, Receiver<Result<HostTensor, ServeError>>), ServeError> {
     let k0 = live[(cursor % live.len() as u64) as usize];
     if live.len() <= 1 || !refusable {
-        return match handles[k0].offer_frame_for(tenant, input) {
+        return match handles[k0].offer_frame_traced(tenant, input, trace) {
             Ok(rx) => Ok((k0, rx)),
             Err(e) => {
                 handles[k0].record_refused();
@@ -749,11 +818,11 @@ fn offer_with_failover(
             }
         };
     }
-    match handles[k0].offer_frame_for(tenant, input.clone()) {
+    match handles[k0].offer_frame_traced(tenant, input.clone(), trace.clone()) {
         Ok(rx) => Ok((k0, rx)),
         Err(first) => {
             let k1 = live[((cursor + 1) % live.len() as u64) as usize];
-            match handles[k1].offer_frame_for(tenant, input) {
+            match handles[k1].offer_frame_traced(tenant, input, trace) {
                 Ok(rx) => Ok((k1, rx)),
                 Err(_) => {
                     handles[k0].record_refused();
@@ -819,9 +888,17 @@ fn settle(
     e2e: &Metrics,
 ) {
     record_outcome(ctl, e2e, job.tenant, job.entered, &result);
+    if let Some(t) = &ctl.tracer {
+        let outcome = if result.is_ok() { Outcome::Ok } else { Outcome::Error };
+        let e2e_us = job.entered.elapsed().as_micros() as u64;
+        t.settle_frame(job.trace.as_deref(), job.tenant, outcome, e2e_us);
+    }
     if let (Some(key), Some(d)) = (job.key, &ctl.dedup) {
         for w in d.take(key) {
             record_outcome(ctl, e2e, w.tenant, w.entered, &result);
+            if let Some(t) = &ctl.tracer {
+                t.record_e2e(w.tenant, w.entered.elapsed().as_micros() as u64);
+            }
             let _ = w.respond.send(result.clone());
         }
     }
@@ -834,12 +911,20 @@ fn settle(
 fn deliver(
     job: InFlight,
     result: Result<HostTensor, ServeError>,
+    stage: usize,
     next: &Option<Downstream>,
     ctl: &PipelineControl,
     e2e: &Metrics,
 ) {
+    // The hold ends the moment the forwarder releases the frame in
+    // order; it started wherever the previous span left the frame's
+    // high-water mark (normally the stage-service end).
+    if let (Some(t), Some(ft)) = (&ctl.tracer, &job.trace) {
+        t.span(ft, job.tenant, SpanKind::ReorderHold { stage }, ft.last_us(), t.now_us());
+    }
     match (result, next) {
         (Ok(tensor), Some(down)) => {
+            let transfer_start = job.trace.as_ref().map(|ft| ft.last_us());
             let live: Vec<usize> = match &ctl.registry {
                 Some(reg) => reg.live_replicas(down.stage),
                 None => (0..down.handles.len()).collect(),
@@ -851,9 +936,16 @@ fn deliver(
                 job.seq,
                 job.tenant,
                 tensor,
+                job.trace.clone(),
             ) {
                 Ok((lane, rx)) => {
                     down.link.record_forward(lane);
+                    if let (Some(t), Some(ft), Some(start)) =
+                        (&ctl.tracer, &job.trace, transfer_start)
+                    {
+                        let kind = SpanKind::LinkTransfer { cut: down.stage - 1, lane };
+                        t.span(ft, job.tenant, kind, start, t.now_us());
+                    }
                     let fwd = InFlight { rx, ..job };
                     if let Err(mpsc::SendError(FeedMsg::Job(fwd))) =
                         down.feed.send(FeedMsg::Job(fwd))
@@ -890,6 +982,7 @@ fn deliver(
 /// strictly in admission order.
 fn forward_loop(
     feed: Receiver<FeedMsg>,
+    stage: usize,
     next: Option<Downstream>,
     ctl: Arc<PipelineControl>,
     e2e: Arc<Metrics>,
@@ -942,7 +1035,7 @@ fn forward_loop(
             }
         }
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &ctl, &e2e);
+            deliver(job, result, stage, &next, &ctl, &e2e);
         }
         let Some((seq, job)) = pending.pop_first() else { continue };
         // Block on the earliest outstanding completion. Later frames
@@ -959,7 +1052,7 @@ fn forward_loop(
         // Emit everything now releasable, strictly in order (the push
         // above plus anything a skip unblocked).
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &ctl, &e2e);
+            deliver(job, result, stage, &next, &ctl, &e2e);
         }
     }
 
@@ -969,7 +1062,7 @@ fn forward_loop(
             ingest(msg, &mut pending, &mut buffer);
         }
         while let Some((_, (job, result))) = buffer.pop_next() {
-            deliver(job, result, &next, &ctl, &e2e);
+            deliver(job, result, stage, &next, &ctl, &e2e);
         }
         match pending.pop_first() {
             Some((seq, job)) => {
@@ -983,7 +1076,7 @@ fn forward_loop(
         }
     }
     while let Some((_, (job, result))) = buffer.pop_next() {
-        deliver(job, result, &next, &ctl, &e2e);
+        deliver(job, result, stage, &next, &ctl, &e2e);
     }
     // Anything still held is stuck behind a hole (a submission racing
     // shutdown): settle as Closed so the end-to-end books balance —
@@ -1429,6 +1522,7 @@ mod tests {
                 heartbeat_timeout: Some(Duration::from_secs(60)),
                 dedup: true,
                 window: WindowPolicy::Aimd(crate::coordinator::control::AimdConfig::default()),
+                ..ControlConfig::default()
             },
         )
         .unwrap();

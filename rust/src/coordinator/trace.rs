@@ -1,0 +1,690 @@
+//! End-to-end frame tracing and latency decomposition for the sharded
+//! serving pipeline.
+//!
+//! The live pipeline's single end-to-end histogram cannot say *where* a
+//! p99 excursion went: queue wait, stage service, link transfer, or
+//! reorder hold. This module threads a low-overhead sampling tracer
+//! through the whole serving path. One frame in N (by admission
+//! sequence) carries a [`FrameTrace`] and accumulates typed
+//! [`SpanKind`] records as it crosses each phase boundary; shed, error,
+//! and slow-outlier frames additionally land always-on outcome records
+//! even when unsampled, so the tail is never invisible. Control-plane
+//! actions (replica eject/readmit, AIMD window moves, dedup coalesce
+//! hits) land as [`TraceEvent`] instants.
+//!
+//! Records go to a bounded [`TraceCollector`]: fixed capacity claimed
+//! by a single `fetch_add`, drop-and-count on overflow, never blocks
+//! and never reallocates on the hot path. Two consumers read it back:
+//!
+//! * [`Tracer::chrome_trace`] renders Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`; pid = stage,
+//!   tid = replica or lane) via [`crate::util::json`].
+//! * [`Tracer::phase_text`] renders per-phase log-bucketed histograms
+//!   (the [`crate::coordinator::metrics::BUCKETS_US`] scheme) as
+//!   `dnnx_phase_latency_us` Prometheus series per stage, per cut, and
+//!   per tenant, plus `dnnx_trace_*` bookkeeping counters.
+//!
+//! All timestamps are microseconds since the tracer's epoch, taken
+//! from the monotonic [`Instant`] clock — never `SystemTime`, whose
+//! skew corrupts span durations (lint rule L008 enforces this on the
+//! serving path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::LogHistogram;
+use crate::util::json::Json;
+use crate::util::ordlock::lock_clean;
+
+/// Tuning for one [`Tracer`].
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Sample one frame in `sample_every` by admission sequence.
+    /// `1` traces every frame; `0` disables sampling entirely (callers
+    /// skip constructing the tracer).
+    pub sample_every: u64,
+    /// Fixed capacity of the record ring; overflow drops and counts.
+    pub capacity: usize,
+    /// Unsampled frames settling at or above this end-to-end latency
+    /// still land an always-on outcome record.
+    pub slow_outlier_us: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { sample_every: 64, capacity: 65_536, slow_outlier_us: 100_000 }
+    }
+}
+
+/// How a frame left the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Ok,
+    Error,
+    Shed,
+}
+
+impl Outcome {
+    fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Error => "error",
+            Outcome::Shed => "shed",
+        }
+    }
+}
+
+/// One phase of a frame's journey through the pipeline. Phases tile
+/// the end-to-end interval: each span starts where the previous one
+/// ended (tracked by [`FrameTrace::last_us`]), so at sample rate 1 the
+/// phase durations sum to the settled latency within clock-read slack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Front-door admission: dedup, window check, lane offer.
+    Admit,
+    /// Waiting in a stage's admission queue for a worker.
+    QueueWait { stage: usize, replica: usize },
+    /// Batched model execution on a replica.
+    StageService { stage: usize, replica: usize },
+    /// Hand-off across an inter-board cut to the chosen lane.
+    LinkTransfer { cut: usize, lane: usize },
+    /// Held in a forwarder's reorder buffer waiting for in-order seq.
+    ReorderHold { stage: usize },
+    /// Final bookkeeping: outcome recording and response fan-out.
+    Settle { outcome: Outcome },
+}
+
+impl SpanKind {
+    fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait { .. } => "queue_wait",
+            SpanKind::StageService { .. } => "stage_service",
+            SpanKind::LinkTransfer { .. } => "link_transfer",
+            SpanKind::ReorderHold { .. } => "reorder_hold",
+            SpanKind::Settle { .. } => "settle",
+        }
+    }
+
+    /// (pid, tid) for the Chrome trace view: pid = stage (cuts map to
+    /// their downstream stage), tid = replica or lane.
+    fn track(&self) -> (usize, usize) {
+        match *self {
+            SpanKind::Admit => (0, 0),
+            SpanKind::QueueWait { stage, replica } => (stage, replica),
+            SpanKind::StageService { stage, replica } => (stage, replica),
+            SpanKind::LinkTransfer { cut, lane } => (cut + 1, lane),
+            SpanKind::ReorderHold { stage } => (stage, 0),
+            SpanKind::Settle { .. } => (0, 0),
+        }
+    }
+}
+
+/// A control-plane action worth a point-in-time mark on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    ReplicaEject { stage: usize, replica: usize },
+    ReplicaReadmit { stage: usize, replica: usize },
+    WindowChange { from: usize, to: usize },
+    DedupCoalesce,
+}
+
+impl TraceEvent {
+    fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::ReplicaEject { .. } => "replica_eject",
+            TraceEvent::ReplicaReadmit { .. } => "replica_readmit",
+            TraceEvent::WindowChange { .. } => "window_change",
+            TraceEvent::DedupCoalesce => "dedup_coalesce",
+        }
+    }
+
+    fn track(&self) -> (usize, usize) {
+        match *self {
+            TraceEvent::ReplicaEject { stage, replica } => (stage, replica),
+            TraceEvent::ReplicaReadmit { stage, replica } => (stage, replica),
+            TraceEvent::WindowChange { .. } => (0, 0),
+            TraceEvent::DedupCoalesce => (0, 0),
+        }
+    }
+}
+
+/// One collected record: a frame-attributed span or a control instant.
+/// Trace id 0 is reserved for always-on outcome records of frames that
+/// were not sampled (shed, error, or slow-outlier settles).
+#[derive(Debug, Clone)]
+pub enum TraceRecord {
+    Span { trace: u64, tenant: usize, kind: SpanKind, start_us: u64, end_us: u64 },
+    Instant { at_us: u64, event: TraceEvent },
+}
+
+/// Per-sampled-frame state riding through the pipeline in an `Arc`.
+///
+/// `last_us` is the end of the frame's latest recorded phase, advanced
+/// monotonically (`fetch_max`) by [`Tracer::span`]; the next phase
+/// starts there, so the spans tile. Writers hand off through the
+/// response channel, which gives the happens-before edge each reader
+/// needs to see the previous phase's end.
+#[derive(Debug)]
+pub struct FrameTrace {
+    id: u64,
+    last_us: AtomicU64,
+}
+
+impl FrameTrace {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// End of the latest recorded phase, µs since the tracer epoch.
+    pub fn last_us(&self) -> u64 {
+        self.last_us.load(Ordering::Acquire)
+    }
+}
+
+/// Bounded record sink. A push claims a unique slot index with one
+/// `fetch_add`; indices past capacity (or a slot whose lock is held by
+/// a concurrent drain) drop the record and count it — the hot path
+/// never blocks and never reallocates.
+#[derive(Debug)]
+pub struct TraceCollector {
+    slots: Vec<Mutex<Option<TraceRecord>>>,
+    next: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceCollector {
+    pub fn new(capacity: usize) -> Self {
+        let slots = (0..capacity.max(1)).map(|_| Mutex::new(None)).collect();
+        Self { slots, next: AtomicU64::new(0), dropped: AtomicU64::new(0) }
+    }
+
+    /// Store `record` if a slot is free; drop-and-count otherwise.
+    pub fn push(&self, record: TraceRecord) {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) as usize;
+        if idx >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match self.slots[idx].try_lock() {
+            Ok(mut slot) => *slot = Some(record),
+            Err(_) => {
+                // A concurrent snapshot holds this slot; dropping beats
+                // blocking the serving path.
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot every stored record (allocation is on the reader).
+    pub fn records(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.stored());
+        for slot in &self.slots {
+            if let Some(rec) = lock_clean(slot).as_ref() {
+                out.push(rec.clone());
+            }
+        }
+        out
+    }
+
+    /// Records refused because the ring was full (or a slot was busy).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total push attempts, stored or dropped.
+    pub fn pushes(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Slots claimed for storage (`pushes` clamped to capacity).
+    pub fn stored(&self) -> usize {
+        (self.pushes() as usize).min(self.slots.len())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Pipeline-wide tracer: sampling policy, record sink, and the
+/// per-phase latency histograms fed from sampled spans.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    next_id: AtomicU64,
+    sampled: AtomicU64,
+    collector: TraceCollector,
+    admit: LogHistogram,
+    queue_wait: Vec<LogHistogram>,
+    stage_service: Vec<LogHistogram>,
+    reorder_hold: Vec<LogHistogram>,
+    link_transfer: Vec<LogHistogram>,
+    settle: LogHistogram,
+    /// Per-tenant end-to-end latency, fed for *every* settled frame
+    /// (two atomics), not just sampled ones.
+    tenant_e2e: Vec<LogHistogram>,
+}
+
+/// Where a stage's queue reports its spans: the shared tracer plus the
+/// (stage, replica) coordinates of this queue's worker.
+#[derive(Debug, Clone)]
+pub struct TraceTarget {
+    pub tracer: Arc<Tracer>,
+    pub stage: usize,
+    pub replica: usize,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig, stages: usize, tenants: usize) -> Self {
+        let stages = stages.max(1);
+        let cuts = stages - 1;
+        let per = |n: usize| (0..n).map(|_| LogHistogram::new()).collect::<Vec<_>>();
+        Self {
+            collector: TraceCollector::new(cfg.capacity),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1), // id 0 = unsampled outcome records
+            sampled: AtomicU64::new(0),
+            admit: LogHistogram::new(),
+            queue_wait: per(stages),
+            stage_service: per(stages),
+            reorder_hold: per(stages),
+            link_transfer: per(cuts),
+            settle: LogHistogram::new(),
+            tenant_e2e: per(tenants.max(1)),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    pub fn collector(&self) -> &TraceCollector {
+        &self.collector
+    }
+
+    /// Frames that were issued a [`FrameTrace`].
+    pub fn sampled(&self) -> u64 {
+        self.sampled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the tracer epoch, monotonic clock.
+    pub fn now_us(&self) -> u64 {
+        self.us_at(Instant::now())
+    }
+
+    /// Convert a caller-captured [`Instant`] to epoch-relative µs.
+    pub fn us_at(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Sampling predicate: 1-in-`sample_every` by admission sequence.
+    pub fn should_sample(&self, seq: u64) -> bool {
+        self.cfg.sample_every != 0 && seq % self.cfg.sample_every == 0
+    }
+
+    /// Start a trace for admission sequence `seq` if it is sampled.
+    /// `start_us` seeds [`FrameTrace::last_us`] so the first span can
+    /// begin at the frame's true entry time.
+    pub fn begin(&self, seq: u64, start_us: u64) -> Option<Arc<FrameTrace>> {
+        if !self.should_sample(seq) {
+            return None;
+        }
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(FrameTrace { id, last_us: AtomicU64::new(start_us) }))
+    }
+
+    /// Record one phase span for a sampled frame: feeds the matching
+    /// phase histogram, stores the record, and advances the frame's
+    /// `last_us` high-water mark to `end_us`.
+    pub fn span(
+        &self,
+        trace: &FrameTrace,
+        tenant: usize,
+        kind: SpanKind,
+        start_us: u64,
+        end_us: u64,
+    ) {
+        let dur = end_us.saturating_sub(start_us);
+        match kind {
+            SpanKind::Admit => self.admit.record_us(dur),
+            SpanKind::QueueWait { stage, .. } => {
+                if let Some(h) = self.queue_wait.get(stage) {
+                    h.record_us(dur);
+                }
+            }
+            SpanKind::StageService { stage, .. } => {
+                if let Some(h) = self.stage_service.get(stage) {
+                    h.record_us(dur);
+                }
+            }
+            SpanKind::LinkTransfer { cut, .. } => {
+                if let Some(h) = self.link_transfer.get(cut) {
+                    h.record_us(dur);
+                }
+            }
+            SpanKind::ReorderHold { stage } => {
+                if let Some(h) = self.reorder_hold.get(stage) {
+                    h.record_us(dur);
+                }
+            }
+            SpanKind::Settle { .. } => self.settle.record_us(dur),
+        }
+        trace.last_us.fetch_max(end_us, Ordering::AcqRel);
+        self.collector.push(TraceRecord::Span { trace: trace.id, tenant, kind, start_us, end_us });
+    }
+
+    /// Record a control-plane instant.
+    pub fn instant(&self, event: TraceEvent) {
+        self.collector.push(TraceRecord::Instant { at_us: self.now_us(), event });
+    }
+
+    /// Settle bookkeeping for every frame leaving the pipeline. Feeds
+    /// the per-tenant end-to-end histogram unconditionally; sampled
+    /// frames get their closing [`SpanKind::Settle`] span, while
+    /// unsampled shed/error/slow-outlier frames land an always-on
+    /// trace-id-0 outcome record spanning their whole lifetime.
+    pub fn settle_frame(
+        &self,
+        trace: Option<&FrameTrace>,
+        tenant: usize,
+        outcome: Outcome,
+        e2e_us: u64,
+    ) {
+        self.record_e2e(tenant, e2e_us);
+        match trace {
+            Some(ft) => {
+                let end = self.now_us();
+                self.span(ft, tenant, SpanKind::Settle { outcome }, ft.last_us(), end);
+            }
+            None => {
+                if outcome != Outcome::Ok || e2e_us >= self.cfg.slow_outlier_us {
+                    let end = self.now_us();
+                    self.collector.push(TraceRecord::Span {
+                        trace: 0,
+                        tenant,
+                        kind: SpanKind::Settle { outcome },
+                        start_us: end.saturating_sub(e2e_us),
+                        end_us: end,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Feed the per-tenant end-to-end histogram (tenant clamped into
+    /// range, mirroring the queue's tenant clamp).
+    pub fn record_e2e(&self, tenant: usize, e2e_us: u64) {
+        let idx = tenant.min(self.tenant_e2e.len() - 1);
+        self.tenant_e2e[idx].record_us(e2e_us);
+    }
+
+    /// Render every collected record as Chrome trace-event JSON
+    /// (the `traceEvents` array format Perfetto loads directly).
+    pub fn chrome_trace(&self) -> Json {
+        let mut events = Vec::new();
+        for rec in self.collector.records() {
+            events.push(match rec {
+                TraceRecord::Span { trace, tenant, kind, start_us, end_us } => {
+                    let (pid, tid) = kind.track();
+                    let mut args =
+                        vec![("trace", Json::n(trace as f64)), ("tenant", Json::n(tenant as f64))];
+                    if let SpanKind::Settle { outcome } = kind {
+                        args.push(("outcome", Json::s(outcome.name())));
+                    }
+                    Json::obj(vec![
+                        ("name", Json::s(kind.name())),
+                        ("cat", Json::s("frame")),
+                        ("ph", Json::s("X")),
+                        ("ts", Json::n(start_us as f64)),
+                        ("dur", Json::n(end_us.saturating_sub(start_us) as f64)),
+                        ("pid", Json::n(pid as f64)),
+                        ("tid", Json::n(tid as f64)),
+                        ("args", Json::obj(args)),
+                    ])
+                }
+                TraceRecord::Instant { at_us, event } => {
+                    let (pid, tid) = event.track();
+                    let args = match event {
+                        TraceEvent::WindowChange { from, to } => {
+                            vec![("from", Json::n(from as f64)), ("to", Json::n(to as f64))]
+                        }
+                        _ => Vec::new(),
+                    };
+                    Json::obj(vec![
+                        ("name", Json::s(event.name())),
+                        ("cat", Json::s("control")),
+                        ("ph", Json::s("i")),
+                        ("s", Json::s("g")),
+                        ("ts", Json::n(at_us as f64)),
+                        ("pid", Json::n(pid as f64)),
+                        ("tid", Json::n(tid as f64)),
+                        ("args", Json::obj(args)),
+                    ])
+                }
+            });
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    /// [`Self::chrome_trace`] rendered to a string.
+    pub fn chrome_trace_json(&self) -> String {
+        self.chrome_trace().render()
+    }
+
+    /// Append the `dnnx_phase_latency_us` per-phase series and the
+    /// `dnnx_trace_*` bookkeeping counters to a Prometheus text page.
+    pub fn phase_text(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "# HELP dnnx_phase_latency_us Per-phase serving latency from sampled frame traces."
+        );
+        let _ = writeln!(out, "# TYPE dnnx_phase_latency_us summary");
+        phase_series(out, "admit", "", &self.admit);
+        for (s, h) in self.queue_wait.iter().enumerate() {
+            phase_series(out, "queue_wait", &format!(",stage=\"{s}\""), h);
+        }
+        for (s, h) in self.stage_service.iter().enumerate() {
+            phase_series(out, "stage_service", &format!(",stage=\"{s}\""), h);
+        }
+        for (s, h) in self.reorder_hold.iter().enumerate() {
+            phase_series(out, "reorder_hold", &format!(",stage=\"{s}\""), h);
+        }
+        for (c, h) in self.link_transfer.iter().enumerate() {
+            phase_series(out, "link_transfer", &format!(",cut=\"{c}\""), h);
+        }
+        phase_series(out, "settle", "", &self.settle);
+        for (t, h) in self.tenant_e2e.iter().enumerate() {
+            phase_series(out, "e2e", &format!(",tenant=\"{t}\""), h);
+        }
+        let _ = writeln!(
+            out,
+            "# HELP dnnx_trace_dropped Trace records refused by the full collector ring."
+        );
+        let _ = writeln!(out, "# TYPE dnnx_trace_dropped counter");
+        let _ = writeln!(out, "dnnx_trace_dropped {}", self.collector.dropped());
+        let _ = writeln!(out, "# TYPE dnnx_trace_sampled counter");
+        let _ = writeln!(out, "dnnx_trace_sampled {}", self.sampled());
+        let _ = writeln!(out, "# TYPE dnnx_trace_records gauge");
+        let _ = writeln!(out, "dnnx_trace_records {}", self.collector.stored());
+    }
+}
+
+/// One phase's summary lines: p50/p99 quantiles plus `_sum`/`_count`.
+fn phase_series(out: &mut String, phase: &str, extra: &str, h: &LogHistogram) {
+    use std::fmt::Write as _;
+    let _ = writeln!(
+        out,
+        "dnnx_phase_latency_us{{phase=\"{phase}\"{extra},quantile=\"0.5\"}} {}",
+        h.percentile_us(0.5)
+    );
+    let _ = writeln!(
+        out,
+        "dnnx_phase_latency_us{{phase=\"{phase}\"{extra},quantile=\"0.99\"}} {}",
+        h.percentile_us(0.99)
+    );
+    let _ = writeln!(out, "dnnx_phase_latency_us_sum{{phase=\"{phase}\"{extra}}} {}", h.sum_us());
+    let _ = writeln!(out, "dnnx_phase_latency_us_count{{phase=\"{phase}\"{extra}}} {}", h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(sample_every: u64, capacity: usize) -> Tracer {
+        Tracer::new(TraceConfig { sample_every, capacity, slow_outlier_us: 100_000 }, 2, 2)
+    }
+
+    #[test]
+    fn collector_drops_and_counts_at_capacity() {
+        let c = TraceCollector::new(4);
+        for i in 0..10 {
+            c.push(TraceRecord::Instant { at_us: i, event: TraceEvent::DedupCoalesce });
+        }
+        assert_eq!(c.records().len(), 4, "ring keeps exactly its capacity");
+        assert_eq!(c.capacity(), 4, "overflow never grows the ring");
+        assert_eq!(c.dropped(), 6);
+        assert_eq!(c.pushes(), 10);
+        assert_eq!(c.stored() as u64 + c.dropped(), c.pushes(), "books reconcile");
+    }
+
+    #[test]
+    fn collector_overflow_is_safe_under_concurrency() {
+        let c = Arc::new(TraceCollector::new(16));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("trace-push".into())
+                    .spawn(move || {
+                        for i in 0..100 {
+                            c.push(TraceRecord::Instant {
+                                at_us: i,
+                                event: TraceEvent::DedupCoalesce,
+                            });
+                        }
+                    })
+                    .expect("spawn"),
+            );
+        }
+        for h in handles {
+            h.join().expect("join");
+        }
+        assert_eq!(c.pushes(), 400);
+        assert_eq!(c.records().len(), 16);
+        assert_eq!(c.dropped(), 400 - 16);
+    }
+
+    #[test]
+    fn sampling_is_one_in_n_by_seq() {
+        let t = tracer(3, 64);
+        assert!(t.begin(0, 0).is_some());
+        assert!(t.begin(1, 0).is_none());
+        assert!(t.begin(2, 0).is_none());
+        assert!(t.begin(3, 0).is_some());
+        assert_eq!(t.sampled(), 2);
+        // Rate 0 never samples even if a tracer exists.
+        let off = tracer(0, 64);
+        assert!(off.begin(0, 0).is_none());
+    }
+
+    #[test]
+    fn trace_ids_start_at_one_and_are_unique() {
+        let t = tracer(1, 64);
+        let a = t.begin(0, 0).expect("sampled");
+        let b = t.begin(1, 0).expect("sampled");
+        assert_eq!(a.id(), 1, "id 0 is reserved for unsampled outcome records");
+        assert_eq!(b.id(), 2);
+    }
+
+    #[test]
+    fn spans_tile_and_advance_last_us_monotonically() {
+        let t = tracer(1, 64);
+        let ft = t.begin(0, 100).expect("sampled");
+        assert_eq!(ft.last_us(), 100);
+        t.span(&ft, 0, SpanKind::Admit, 100, 250);
+        assert_eq!(ft.last_us(), 250);
+        // An earlier-finishing racer cannot move the high-water mark back.
+        t.span(&ft, 0, SpanKind::QueueWait { stage: 0, replica: 0 }, 250, 200);
+        assert_eq!(ft.last_us(), 250);
+        t.span(&ft, 0, SpanKind::StageService { stage: 0, replica: 0 }, 250, 900);
+        assert_eq!(ft.last_us(), 900);
+        assert_eq!(t.collector().records().len(), 3);
+    }
+
+    #[test]
+    fn settle_frame_records_unsampled_outliers_only() {
+        let t = tracer(0, 64);
+        t.settle_frame(None, 0, Outcome::Ok, 5_000);
+        assert_eq!(t.collector().records().len(), 0, "fast ok frame leaves no record");
+        t.settle_frame(None, 0, Outcome::Ok, 200_000);
+        t.settle_frame(None, 1, Outcome::Shed, 10);
+        t.settle_frame(None, 1, Outcome::Error, 10);
+        let recs = t.collector().records();
+        assert_eq!(recs.len(), 3, "outlier + shed + error are always-on");
+        for rec in recs {
+            match rec {
+                TraceRecord::Span { trace, kind: SpanKind::Settle { .. }, .. } => {
+                    assert_eq!(trace, 0, "unsampled outcome records use trace id 0");
+                }
+                other => panic!("unexpected record {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_util_json() {
+        let t = tracer(1, 64);
+        let ft = t.begin(0, 0).expect("sampled");
+        t.span(&ft, 1, SpanKind::Admit, 0, 50);
+        t.span(&ft, 1, SpanKind::StageService { stage: 1, replica: 2 }, 50, 400);
+        t.instant(TraceEvent::WindowChange { from: 16, to: 8 });
+        t.settle_frame(Some(&ft), 1, Outcome::Ok, 420);
+        let text = t.chrome_trace_json();
+        let parsed = Json::parse(&text).expect("exporter emits valid JSON");
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(events.len(), 4);
+        let svc = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("stage_service"))
+            .expect("stage_service event");
+        assert_eq!(svc.get("pid").and_then(Json::as_f64), Some(1.0), "pid = stage");
+        assert_eq!(svc.get("tid").and_then(Json::as_f64), Some(2.0), "tid = replica");
+        assert_eq!(svc.get("dur").and_then(Json::as_f64), Some(350.0));
+        let win = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("window_change"))
+            .expect("window_change instant");
+        assert_eq!(win.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(win.get("args").and_then(|a| a.get("to")).and_then(Json::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn phase_text_reports_series_and_reconciled_drop_counter() {
+        let t = tracer(1, 2);
+        let ft = t.begin(0, 0).expect("sampled");
+        t.span(&ft, 0, SpanKind::QueueWait { stage: 0, replica: 0 }, 0, 300);
+        t.span(&ft, 0, SpanKind::StageService { stage: 0, replica: 0 }, 300, 800);
+        t.settle_frame(Some(&ft), 0, Outcome::Ok, 850); // overflows capacity 2
+        let mut page = String::new();
+        t.phase_text(&mut page);
+        let q50 = "dnnx_phase_latency_us{phase=\"queue_wait\",stage=\"0\",quantile=\"0.5\"}";
+        assert!(page.contains(q50));
+        let svc = "dnnx_phase_latency_us_count{phase=\"stage_service\",stage=\"0\"} 1";
+        assert!(page.contains(svc));
+        assert!(page.contains("dnnx_phase_latency_us_count{phase=\"e2e\",tenant=\"0\"} 1"));
+        assert!(page.contains("dnnx_trace_dropped 1"));
+        assert!(page.contains("dnnx_trace_records 2"));
+        assert_eq!(
+            t.collector().stored() as u64 + t.collector().dropped(),
+            t.collector().pushes(),
+            "exported counters reconcile"
+        );
+    }
+}

@@ -45,11 +45,14 @@ USAGE:
                       [--service-us U] [--load X] [--metrics-port P]
                       [--tenants SPEC] [--stages S] [--window N] [--aimd]
                       [--aimd-p99-us U] [--heartbeat-ms MS] [--eject FROM:TO]
+                      [--trace-out FILE] [--trace-sample N]
+                      # frame tracing: Chrome trace-event JSON to FILE,
+                      # sampling 1-in-N admissions (see docs/observability.md)
                       # any control-plane flag switches the bench from the
                       # worker-pool router to the sharded pipeline + control plane
   dnnexplorer lint    [--path DIR] [--rule L00N] [--baseline FILE]
                       [--write-baseline FILE] [--deny]
-                      # repo-native static analysis (rules L001-L007,
+                      # repo-native static analysis (rules L001-L008,
                       # see docs/lints.md); --deny exits nonzero on findings
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
@@ -815,7 +818,17 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
 /// the CI smoke fails loudly on regression.
 fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
     let args = Args::parse(argv)?;
-    let control = ["tenants", "stages", "window", "aimd", "aimd-p99-us", "heartbeat-ms", "eject"];
+    let control = [
+        "tenants",
+        "stages",
+        "window",
+        "aimd",
+        "aimd-p99-us",
+        "heartbeat-ms",
+        "eject",
+        "trace-out",
+        "trace-sample",
+    ];
     if control.iter().any(|k| args.has(k)) {
         serve_bench_pipeline(&args)
     } else {
@@ -937,7 +950,7 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
     use dnnexplorer::coordinator::synthetic::FixedServiceModel;
     use dnnexplorer::coordinator::{
         AimdConfig, BatcherConfig, ControlConfig, MetricsExporter, QueueConfig, ServeError,
-        ShardedPipeline, StageSpec, TenantTable, WindowPolicy,
+        ShardedPipeline, StageSpec, TenantTable, TraceConfig, WindowPolicy,
     };
     use dnnexplorer::runtime::executable::HostTensor;
     use std::sync::atomic::Ordering;
@@ -991,6 +1004,20 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
         eject.is_none() || heartbeat_ms.is_some(),
         "--eject needs --heartbeat-ms to enable the registry"
     );
+    // Tracing: `--trace-out` implies a default 1-in-64 sample; an
+    // explicit `--trace-sample 0` turns the tracer off entirely.
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    let default_sample = if trace_out.is_some() { 64 } else { 0 };
+    let trace_sample = args.get_usize("trace-sample", default_sample)? as u64;
+    anyhow::ensure!(
+        trace_out.is_none() || trace_sample > 0,
+        "--trace-out needs a non-zero --trace-sample"
+    );
+    let trace = if trace_sample > 0 {
+        Some(TraceConfig { sample_every: trace_sample, ..TraceConfig::default() })
+    } else {
+        None
+    };
 
     let per_frame = Duration::from_micros(service_us);
     let queue = QueueConfig {
@@ -1013,6 +1040,7 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
         heartbeat_timeout: heartbeat_ms.map(Duration::from_millis),
         dedup: false,
         window,
+        trace,
     };
     let pipe = Arc::new(ShardedPipeline::spawn_with_control(specs, ctl)?);
 
@@ -1156,6 +1184,33 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if let Some(tracer) = pipe.tracer() {
+        println!(
+            "trace: sampled {} frame(s), {} record(s) stored, {} dropped",
+            tracer.sampled(),
+            tracer.collector().stored(),
+            tracer.collector().dropped()
+        );
+        if let Some(path) = &trace_out {
+            let body = tracer.chrome_trace_json();
+            // Self-check before anything ever loads this in Perfetto:
+            // the export must round-trip through the repo's own JSON
+            // parser and carry a traceEvents array.
+            let doc = Json::parse(&body)
+                .map_err(|e| anyhow::anyhow!("trace export self-check failed: {e}"))?;
+            let events = doc.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len());
+            anyhow::ensure!(
+                events.is_some(),
+                "trace export self-check failed: no traceEvents array"
+            );
+            std::fs::write(path, &body)
+                .map_err(|e| anyhow::anyhow!("write trace {path}: {e}"))?;
+            println!(
+                "trace: {} event(s) -> {path} (chrome://tracing / Perfetto)",
+                events.unwrap_or(0)
+            );
+        }
+    }
     if let Some(e) = exporter {
         e.shutdown();
     }
@@ -1193,7 +1248,7 @@ fn cmd_lint(argv: &[String]) -> anyhow::Result<()> {
     let active: Vec<RuleId> = match args.get("rule") {
         Some(code) => {
             let rule = RuleId::parse(code).ok_or_else(|| {
-                anyhow::anyhow!("unknown rule {code}; valid: L001..L007 (see docs/lints.md)")
+                anyhow::anyhow!("unknown rule {code}; valid: L001..L008 (see docs/lints.md)")
             })?;
             vec![rule]
         }

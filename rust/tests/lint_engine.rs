@@ -38,7 +38,7 @@ fn expected_markers(src: &str) -> BTreeSet<(String, u32)> {
 fn fixture_findings_match_markers_exactly() {
     let src = fixture_src();
     let expected = expected_markers(&src);
-    assert!(expected.len() >= 8, "fixture should seed all seven rules: {expected:?}");
+    assert!(expected.len() >= 9, "fixture should seed every rule: {expected:?}");
     let actual: BTreeSet<(String, u32)> = analyze_source(FIXTURE, &src, &RuleId::all())
         .into_iter()
         .map(|f| (f.rule.code().to_string(), f.line))

@@ -71,6 +71,14 @@ fn anonymous_worker() {
     std::thread::spawn(|| {}); // expect-lint: L007
 }
 
+// L008: wall-clock read on the serving path — SystemTime can step
+// backwards under NTP, so differencing two reads yields negative
+// durations; serving code must use Instant.
+fn wall_clock_stamp() -> u64 {
+    let t = std::time::SystemTime::now(); // expect-lint: L008
+    t.elapsed().map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
 // The allow-annotation escape hatch: suppressed, must NOT be reported.
 fn annotated(v: Option<u64>) -> u64 {
     // lint: allow(L005, fixture proves the annotation suppresses)

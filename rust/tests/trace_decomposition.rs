@@ -1,0 +1,287 @@
+//! End-to-end frame tracing: a live two-stage pipeline run at sample
+//! rate 1 must decompose every frame's latency into a tiled set of
+//! typed phase spans whose books reconcile three ways:
+//!
+//! * per frame — exactly one Admit/LinkTransfer/Settle span and one
+//!   QueueWait/StageService/ReorderHold span per stage, together
+//!   covering the frame's wall-clock end to end;
+//! * against the analytic model — measured `stage_service` and e2e
+//!   durations must bracket the `perfmodel::interleave` prediction for
+//!   the same chain (the tracer measures the thing the planner models);
+//! * across exporters — the Chrome trace export, the
+//!   `dnnx_phase_latency_us` Prometheus series, and the collector's
+//!   stored/dropped/pushed counters all describe the same run.
+//!
+//! A disabled tracer (`sample_every == 0` or `trace: None`) must leave
+//! no trace surface at all: the serving path carries zero tracing code.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{
+    BatcherConfig, ControlConfig, Outcome, OverloadPolicy, QueueConfig, ShardedPipeline, SpanKind,
+    StageSpec, TraceConfig, TraceRecord, Tracer,
+};
+use dnnexplorer::perfmodel::interleave::{frame_latency_s, StageRate};
+use dnnexplorer::perfmodel::link::LinkModel;
+use dnnexplorer::runtime::executable::HostTensor;
+use dnnexplorer::util::json::Json;
+
+const PER_FRAME: Duration = Duration::from_micros(300);
+const STAGES: usize = 2;
+/// Spans one frame leaves behind in a 2-stage chain: Admit + Settle +
+/// LinkTransfer + per-stage (QueueWait, StageService, ReorderHold).
+const SPANS_PER_FRAME: usize = 3 + 3 * STAGES;
+
+fn reject_queue() -> QueueConfig {
+    QueueConfig {
+        batch: BatcherConfig { batch_size: 1, max_wait: Duration::from_millis(1) },
+        capacity: 64,
+        policy: OverloadPolicy::Reject,
+        ..QueueConfig::default()
+    }
+}
+
+fn traced_pipeline(sample_every: u64) -> ShardedPipeline {
+    let specs: Vec<StageSpec> = (0..STAGES)
+        .map(|_| {
+            StageSpec::with_queue(
+                move || Ok(FixedServiceModel { per_frame: PER_FRAME }),
+                reject_queue(),
+            )
+        })
+        .collect();
+    let trace = Some(TraceConfig { sample_every, ..TraceConfig::default() });
+    ShardedPipeline::spawn_with_control(specs, ControlConfig { trace, ..ControlConfig::default() })
+        .expect("pipeline starts")
+}
+
+/// Closed-loop drive: one frame in flight at a time, so every span's
+/// duration is pure service/transfer time with no queueing contention.
+fn drive_closed_loop(pipe: &ShardedPipeline, frames: usize) {
+    for i in 0..frames {
+        let frame = HostTensor::new(vec![i as f32], vec![1]).unwrap();
+        let rx = pipe.submit_frame_for(0, frame).expect("closed loop never sheds");
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("admitted frame resolves")
+            .expect("synthetic stage cannot fail");
+    }
+}
+
+/// Runs a traced closed loop and returns the tracer (kept alive past
+/// shutdown) so tests can inspect the records it accumulated.
+fn run_traced(frames: usize) -> Arc<Tracer> {
+    let pipe = traced_pipeline(1);
+    drive_closed_loop(&pipe, frames);
+    let tracer = pipe.tracer().expect("sample rate 1 builds a tracer").clone();
+    pipe.shutdown();
+    tracer
+}
+
+/// `(kind, start_us, end_us)` spans grouped by trace id, ids 1.. only
+/// (trace 0 is the unsampled-outcome bucket and must stay empty here).
+fn spans_by_frame(tracer: &Tracer) -> BTreeMap<u64, Vec<(SpanKind, u64, u64)>> {
+    let mut frames: BTreeMap<u64, Vec<(SpanKind, u64, u64)>> = BTreeMap::new();
+    for record in tracer.collector().records() {
+        match record {
+            TraceRecord::Span { trace, kind, start_us, end_us, .. } => {
+                assert_ne!(trace, 0, "closed loop at rate 1 leaves no unsampled outcomes");
+                frames.entry(trace).or_default().push((kind, start_us, end_us));
+            }
+            TraceRecord::Instant { event, .. } => {
+                panic!("no control-plane features enabled, yet saw instant {event:?}");
+            }
+        }
+    }
+    frames
+}
+
+/// `[admit, queue_wait, stage_service, link_transfer, reorder_hold,
+/// settle]` occurrence counts for one frame's spans.
+fn kind_counts(spans: &[(SpanKind, u64, u64)]) -> [usize; 6] {
+    let mut counts = [0usize; 6];
+    for (kind, _, _) in spans {
+        let slot = match kind {
+            SpanKind::Admit => 0,
+            SpanKind::QueueWait { .. } => 1,
+            SpanKind::StageService { .. } => 2,
+            SpanKind::LinkTransfer { .. } => 3,
+            SpanKind::ReorderHold { .. } => 4,
+            SpanKind::Settle { .. } => 5,
+        };
+        counts[slot] += 1;
+    }
+    counts
+}
+
+/// The frame's wall-clock window `[admit.start, settle.end]`, also
+/// asserting the Settle span carries `Outcome::Ok`.
+fn frame_window(spans: &[(SpanKind, u64, u64)]) -> (u64, u64) {
+    let admit_start = spans
+        .iter()
+        .find(|(k, _, _)| matches!(k, SpanKind::Admit))
+        .map(|(_, s, _)| *s)
+        .expect("every frame admits");
+    let settle = spans
+        .iter()
+        .find(|(k, _, _)| matches!(k, SpanKind::Settle { .. }))
+        .expect("every frame settles");
+    match settle.0 {
+        SpanKind::Settle { outcome } => assert_eq!(outcome, Outcome::Ok),
+        _ => unreachable!(),
+    }
+    (admit_start, settle.2)
+}
+
+#[test]
+fn sampled_run_decomposes_every_frame() {
+    const FRAMES: usize = 24;
+    let tracer = run_traced(FRAMES);
+    let frames = spans_by_frame(&tracer);
+    assert_eq!(frames.len(), FRAMES, "rate 1 samples every admission");
+
+    for (trace, spans) in &frames {
+        assert_eq!(
+            kind_counts(spans),
+            [1, STAGES, STAGES, 1, STAGES, 1],
+            "frame {trace} span multiset: {spans:?}"
+        );
+        // Stage-indexed spans name each stage exactly once; the one
+        // link transfer crosses cut 0.
+        for stage in 0..STAGES {
+            let services = spans
+                .iter()
+                .filter(|(k, _, _)| *k == SpanKind::StageService { stage, replica: 0 })
+                .count();
+            assert_eq!(services, 1, "frame {trace} stage {stage} service count");
+        }
+        assert!(
+            spans
+                .iter()
+                .any(|(k, _, _)| matches!(k, SpanKind::LinkTransfer { cut: 0, .. })),
+            "frame {trace} missing the cut-0 transfer: {spans:?}"
+        );
+
+        // Tiling: every span sits inside the frame window, durations
+        // are non-negative, and together they cover the whole window
+        // (small admit/enqueue overlaps are the only double counting).
+        let (start, end) = frame_window(spans);
+        assert!(end >= start);
+        let wall = end - start;
+        let mut sum = 0u64;
+        for (kind, s, e) in spans {
+            assert!(e >= s, "frame {trace} negative-duration {kind:?} span");
+            assert!(*s >= start && *e <= end, "frame {trace} {kind:?} escapes the frame window");
+            sum += e - s;
+        }
+        assert!(sum + 100 >= wall, "frame {trace} spans leave a gap: sum {sum} vs wall {wall}");
+        assert!(
+            sum <= 2 * wall + 2_000,
+            "frame {trace} spans over-count: sum {sum} vs wall {wall}"
+        );
+    }
+}
+
+#[test]
+fn phase_latencies_bracket_the_analytic_model() {
+    const FRAMES: usize = 16;
+    let tracer = run_traced(FRAMES);
+    let frames = spans_by_frame(&tracer);
+
+    // The analytic chain for the same shape: two unreplicated stages of
+    // 300us, a zero-byte cut. The live pipeline sleeps *at least* the
+    // modeled service time per stage, so both the per-stage service
+    // spans and the end-to-end wall must sit at or above the model.
+    let latency_s = PER_FRAME.as_secs_f64();
+    let stages = [StageRate::new(1, 1.0 / latency_s, latency_s); STAGES];
+    let predicted_e2e_us = frame_latency_s(&stages, &LinkModel::new(10.0, 0.0), &[0.0]) * 1e6;
+
+    let mut wall_sum_us = 0u64;
+    for spans in frames.values() {
+        for (kind, s, e) in spans {
+            if matches!(kind, SpanKind::StageService { .. }) {
+                // 5us of slack for microsecond rounding at both ends.
+                assert!(e - s + 5 >= PER_FRAME.as_micros() as u64, "service span under model");
+            }
+        }
+        let (start, end) = frame_window(spans);
+        wall_sum_us += end - start;
+    }
+    let mean_wall_us = wall_sum_us as f64 / frames.len() as f64;
+    assert!(
+        mean_wall_us >= 0.95 * predicted_e2e_us,
+        "measured e2e {mean_wall_us:.0}us under the analytic floor {predicted_e2e_us:.0}us"
+    );
+}
+
+#[test]
+fn exporters_reconcile_with_collector_books() {
+    const FRAMES: usize = 16;
+    let pipe = traced_pipeline(1);
+    drive_closed_loop(&pipe, FRAMES);
+    let page = pipe.prometheus_text();
+    let tracer = pipe.tracer().expect("tracer on").clone();
+    pipe.shutdown();
+
+    // Collector books: nothing dropped, everything pushed is stored,
+    // and the store holds exactly the per-frame span complement.
+    let collector = tracer.collector();
+    assert_eq!(tracer.sampled(), FRAMES as u64);
+    assert_eq!(collector.dropped(), 0);
+    assert_eq!(collector.stored() as u64 + collector.dropped(), collector.pushes());
+    assert_eq!(collector.stored(), FRAMES * SPANS_PER_FRAME);
+
+    // Prometheus surface: typed summary series per phase, labeled by
+    // stage/cut/tenant, plus the tracer's own counters.
+    assert!(page.contains("# TYPE dnnx_phase_latency_us summary"), "{page}");
+    for series in [
+        "dnnx_phase_latency_us_count{phase=\"admit\"}",
+        "dnnx_phase_latency_us{phase=\"queue_wait\",stage=\"0\",quantile=\"0.99\"}",
+        "dnnx_phase_latency_us_count{phase=\"stage_service\",stage=\"0\"}",
+        "dnnx_phase_latency_us_count{phase=\"stage_service\",stage=\"1\"}",
+        "dnnx_phase_latency_us_count{phase=\"link_transfer\",cut=\"0\"}",
+        "dnnx_phase_latency_us_count{phase=\"reorder_hold\",stage=\"1\"}",
+        "dnnx_phase_latency_us_count{phase=\"settle\"}",
+        "dnnx_phase_latency_us_count{phase=\"e2e\",tenant=\"0\"}",
+        "dnnx_trace_dropped 0",
+    ] {
+        assert!(page.contains(series), "missing {series} in:\n{page}");
+    }
+    assert!(page.contains(&format!("dnnx_trace_sampled {FRAMES}")), "{page}");
+
+    // Chrome export: parses with the repo's own JSON parser and holds
+    // one complete event per stored span record.
+    let doc = Json::parse(&tracer.chrome_trace_json()).expect("chrome export parses");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(
+        events.len() >= FRAMES * SPANS_PER_FRAME,
+        "chrome export lost spans: {} events",
+        events.len()
+    );
+}
+
+#[test]
+fn disabled_tracer_leaves_no_trace_surface() {
+    // sample_every == 0 and trace: None must behave identically: no
+    // tracer object, no phase series on the metrics page.
+    for pipe in [
+        traced_pipeline(0),
+        ShardedPipeline::spawn_with_control(
+            vec![StageSpec::with_queue(
+                || Ok(FixedServiceModel { per_frame: PER_FRAME }),
+                reject_queue(),
+            )],
+            ControlConfig::default(),
+        )
+        .expect("pipeline starts"),
+    ] {
+        drive_closed_loop(&pipe, 8);
+        assert!(pipe.tracer().is_none(), "disabled tracing must not build a tracer");
+        let page = pipe.prometheus_text();
+        assert!(!page.contains("dnnx_phase_latency_us"), "phase series on a traceless run");
+        assert!(!page.contains("dnnx_trace_"), "trace counters on a traceless run");
+        pipe.shutdown();
+    }
+}
