@@ -1,6 +1,9 @@
 //! Shard-planner benchmark: cut-point DP over 2 boards, sequential vs
-//! parallel cell evaluation, chunked vs work-stealing schedules, and the
-//! shared-cache effect across board counts.
+//! parallel cell evaluation, chunked vs work-stealing schedules, the
+//! shared-cache effect across board counts, and the headline
+//! **naive-vs-branch-and-bound 8-board sweep** whose numbers land in
+//! `BENCH_shard_dse.json` (path override: `DNNEXPLORER_BENCH_OUT`) so
+//! planner speed is a diffable CI artifact, not a claim.
 //!
 //! The planner's (range × device) cells are heavily skewed — a 2-layer
 //! tail cell explores in a fraction of a 11-layer prefix cell's time —
@@ -14,10 +17,11 @@ use std::time::Instant;
 
 use dnnexplorer::dnn::{zoo, Precision, TensorShape};
 use dnnexplorer::dse::cache::EvalCache;
-use dnnexplorer::dse::multi::compare_board_counts;
+use dnnexplorer::dse::multi::{compare_board_counts, sweep_counts};
 use dnnexplorer::dse::pso::PsoParams;
-use dnnexplorer::shard::{partition, ShardConfig, ShardPlan};
+use dnnexplorer::shard::{partition, PlannerMode, ShardConfig, ShardPlan};
 use dnnexplorer::util::bench::full_mode;
+use dnnexplorer::util::json::Json;
 use dnnexplorer::util::parallel::{parallel_map_with, Schedule};
 use dnnexplorer::FpgaDevice;
 
@@ -106,4 +110,150 @@ fn main() {
         "bench shard_sweep(1..2 boards, shared cache) {:.3}s, {} points {} hits/{} misses",
         sweep.elapsed_s, sweep.cache_len, sweep.cache_hits, sweep.cache_misses
     );
+
+    // ------------------------------------------------------------------
+    // Headline: the 8-board zcu102 sweep, historical planner vs the
+    // pruned one, emitted as BENCH_shard_dse.json.
+    //
+    // Baseline reproduces the pre-pruning pipeline exactly: a fresh
+    // exhaustive `partition` per board count over one shared EvalCache
+    // (no cross-prefix cell reuse — each prefix re-enumerates and
+    // re-explores its full `wanted` set, paying at least a cached PSO
+    // replay per cell). The fast side is one `compare_board_counts`
+    // call: a single branch-and-bound planner whose memo carries cells
+    // across the 1/2/4/8 prefixes.
+    let eight: Vec<FpgaDevice> = (0..8).map(|_| FpgaDevice::zcu102()).collect();
+    let mut base_cfg = cfg(8);
+    base_cfg.planner = PlannerMode::Exhaustive;
+    let base_cache = EvalCache::new();
+    let mut baseline = Vec::new(); // (boards, seconds, plan)
+    let t_base_all = Instant::now();
+    for count in sweep_counts(eight.len()) {
+        let t = Instant::now();
+        let p = partition(&net, &eight[..count], &base_cfg, &base_cache).expect("feasible");
+        baseline.push((count, t.elapsed().as_secs_f64(), p));
+    }
+    let t_base = t_base_all.elapsed().as_secs_f64();
+
+    let mut fast_cfg = cfg(8);
+    fast_cfg.planner = PlannerMode::BranchAndBound;
+    let fast_cache = EvalCache::new();
+    let fast = compare_board_counts(&net, &eight, &fast_cfg, &fast_cache);
+
+    let mut count_rows = Vec::new();
+    for ((count, base_s, base_plan), outcome) in baseline.iter().zip(&fast.outcomes) {
+        assert_eq!(*count, outcome.boards);
+        let fast_plan = outcome.plan.as_ref().expect("feasible");
+        // The contract the proptests pin, re-checked on the bench input:
+        // same plan, bit-identical, just faster.
+        assert_eq!(
+            base_plan.throughput_fps.to_bits(),
+            fast_plan.throughput_fps.to_bits(),
+            "{count}-board plans must be bit-identical"
+        );
+        assert_eq!(base_plan.latency_s.to_bits(), fast_plan.latency_s.to_bits());
+        assert_eq!(
+            base_plan.stages.iter().map(|s| s.layer_range).collect::<Vec<_>>(),
+            fast_plan.stages.iter().map(|s| s.layer_range).collect::<Vec<_>>()
+        );
+        println!(
+            "bench shard_sweep8(boards={count})            naive={:.3}s bnb={:.3}s speedup={:.2}x cells {} -> {} (+{} reused, {} pruned)",
+            base_s,
+            outcome.elapsed_s,
+            base_s / outcome.elapsed_s.max(1e-9),
+            base_plan.stats.cells_evaluated,
+            fast_plan.stats.cells_evaluated,
+            fast_plan.stats.cells_reused,
+            fast_plan.stats.cells_pruned,
+        );
+        count_rows.push(Json::obj(vec![
+            ("boards", Json::n(*count as f64)),
+            ("naive_s", Json::n(*base_s)),
+            ("bnb_s", Json::n(outcome.elapsed_s)),
+            ("speedup", Json::n(base_s / outcome.elapsed_s.max(1e-9))),
+            ("naive_cells_evaluated", Json::n(base_plan.stats.cells_evaluated as f64)),
+            ("bnb_cells_evaluated", Json::n(fast_plan.stats.cells_evaluated as f64)),
+            ("bnb_cells_reused", Json::n(fast_plan.stats.cells_reused as f64)),
+            ("bnb_cells_pruned", Json::n(fast_plan.stats.cells_pruned as f64)),
+            ("bit_identical", Json::Bool(true)),
+            ("exact", Json::Bool(fast_plan.stats.is_exact())),
+        ]));
+    }
+    let naive_cells: u64 = baseline.iter().map(|(_, _, p)| p.stats.cells_evaluated).sum();
+    let sweep_speedup = t_base / fast.elapsed_s.max(1e-9);
+    println!(
+        "bench shard_sweep8(total 1/2/4/8)            naive={t_base:.3}s bnb={:.3}s speedup={sweep_speedup:.2}x cells {naive_cells} -> {}",
+        fast.elapsed_s, fast.stats.cells_evaluated
+    );
+
+    // EvalCache shard-contention micro-bench: 8 threads hammering a
+    // small hot key set (the converging-swarm shape). `contended` is
+    // the measured fraction of lockings that had to block.
+    let hot = EvalCache::new();
+    let keys: Vec<u64> = (0..256).collect();
+    let t = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            scope.spawn(|| {
+                let rav = dnnexplorer::dse::rav::Rav {
+                    sp: 4,
+                    batch: 1,
+                    dsp_frac: 0.5,
+                    bram_frac: 0.5,
+                    bw_frac: 0.5,
+                }
+                .quantized();
+                for _ in 0..200 {
+                    for &k in &keys {
+                        let key = dnnexplorer::dse::cache::CacheKey::new(k, &rav);
+                        let _ = hot.get_or_compute(key, || None);
+                    }
+                }
+            });
+        }
+    });
+    let t_contend = t.elapsed().as_secs_f64();
+    let hot_stats = hot.stats();
+    let accesses = hot_stats.hits + hot_stats.misses;
+    println!(
+        "bench cache_contention(8t, 256 hot keys)     {:.3}s {} accesses, {} contended ({:.3}%)",
+        t_contend,
+        accesses,
+        hot_stats.contended,
+        100.0 * hot_stats.contended as f64 / accesses.max(1) as f64
+    );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::s("shard_dse")),
+        ("network", Json::s(net.name.clone())),
+        ("devices", Json::s("zcu102x8")),
+        ("mode", Json::s(if full_mode() { "full" } else { "quick" })),
+        ("counts", Json::Arr(count_rows)),
+        (
+            "total",
+            Json::obj(vec![
+                ("naive_s", Json::n(t_base)),
+                ("bnb_s", Json::n(fast.elapsed_s)),
+                ("speedup", Json::n(sweep_speedup)),
+                ("naive_cells_evaluated", Json::n(naive_cells as f64)),
+                ("bnb_cells_evaluated", Json::n(fast.stats.cells_evaluated as f64)),
+                ("bnb_cells_reused", Json::n(fast.stats.cells_reused as f64)),
+                ("bnb_cells_pruned", Json::n(fast.stats.cells_pruned as f64)),
+                ("frontier_dropped", Json::n(fast.stats.frontier_dropped as f64)),
+            ]),
+        ),
+        (
+            "cache_contention",
+            Json::obj(vec![
+                ("threads", Json::n(8.0)),
+                ("accesses", Json::n(accesses as f64)),
+                ("contended", Json::n(hot_stats.contended as f64)),
+                ("elapsed_s", Json::n(t_contend)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("DNNEXPLORER_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_shard_dse.json".to_string());
+    std::fs::write(&out_path, artifact.render()).expect("write bench artifact");
+    println!("bench artifact written to {out_path}");
 }

@@ -66,19 +66,33 @@ impl CacheKey {
     }
 
     fn shard(&self) -> usize {
-        // Cheap spread: the fraction indices vary fastest across a swarm.
-        (self
-            .dsp_q
-            .wrapping_mul(31)
-            .wrapping_add(self.bram_q.wrapping_mul(17))
-            .wrapping_add(self.bw_q.wrapping_mul(7))
-            .wrapping_add(self.sp)
-            .wrapping_add(self.scenario as u32)) as usize
-            % SHARDS
+        // Fibonacci multiplicative mix (2^64 / φ), keeping the top
+        // `SHARD_BITS` of the product. The previous linear spread
+        // (`Σ field·small_prime mod SHARDS`) mapped swarm-adjacent
+        // lattice points — which differ by one fraction step — onto a
+        // handful of shards, so a converging swarm serialized on one
+        // or two locks. The multiply diffuses every input bit into the
+        // top bits before they are sampled.
+        let mut x = self.scenario;
+        x ^= ((self.sp as u64) << 32) | (self.batch as u64);
+        x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= ((self.dsp_q as u64) << 42) ^ ((self.bram_q as u64) << 21) ^ (self.bw_q as u64);
+        x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (x >> (64 - SHARD_BITS)) as usize
     }
 }
 
-const SHARDS: usize = 16;
+/// Shard count, sized from a profiled planner run: at 16 shards the
+/// (range × device) `parallel_map` sweep measurably blocked on the hot
+/// shards once every worker converged on the same sub-network's swarm
+/// (see the contention micro-bench in `benches/shard_dse.rs`); 64 keeps
+/// the per-shard table small enough to stay cache-resident while making
+/// same-shard collisions across concurrent swarms rare. Must stay a
+/// power of two — the shard index is the top `SHARD_BITS` of the mixed
+/// key.
+const SHARDS: usize = 64;
+const SHARD_BITS: u32 = SHARDS.trailing_zeros();
+const _: () = assert!(SHARDS.is_power_of_two());
 
 /// Per-entry usage counters, carried through disk round-trips so a
 /// long-lived cache file can be compacted by recency
@@ -133,6 +147,11 @@ pub struct EvalCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Lock acquisitions that found their shard already held (the
+    /// `try_lock` fast path failed and the caller blocked). The
+    /// measured answer to "are [`SHARDS`] shards enough?" — see
+    /// [`CacheStats::contended`].
+    contended: AtomicU64,
     /// Logical clock for per-entry recency stamps.
     clock: AtomicU64,
 }
@@ -143,6 +162,11 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Shard-lock acquisitions that had to block behind another thread
+    /// (0 in any single-threaded run). A ratio above ~1% of
+    /// `hits + misses` means the shard count, not the compute, is the
+    /// bottleneck.
+    pub contended: u64,
     pub len: usize,
 }
 
@@ -171,6 +195,7 @@ impl EvalCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            contended: AtomicU64::new(0),
             clock: AtomicU64::new(0),
         }
     }
@@ -178,6 +203,25 @@ impl EvalCache {
     /// Next logical tick for recency stamping.
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Lock shard `idx`, counting acquisitions that had to block. The
+    /// uncontended path is one `try_lock` (a single CAS — cheaper than
+    /// a blocking `lock` only in that it never parks); the contended
+    /// path bumps the counter and falls back to the queueing lock, so
+    /// the counter undercounts by at most the race window between the
+    /// failed try and the blocking acquire — fine for a profile signal.
+    fn lock_shard(&self, idx: usize) -> std::sync::MutexGuard<'_, Shard> {
+        match self.shards[idx].try_lock() {
+            Ok(guard) => guard,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                self.shards[idx].lock().expect("cache shard poisoned")
+            }
+            Err(std::sync::TryLockError::Poisoned(_)) => {
+                self.shards[idx].lock().expect("cache shard poisoned")
+            }
+        }
     }
 
     /// Look `key` up; on a miss run `compute` (outside any lock) and
@@ -191,9 +235,9 @@ impl EvalCache {
         key: CacheKey,
         compute: impl FnOnce() -> Option<Candidate>,
     ) -> Option<Arc<Candidate>> {
-        let shard = &self.shards[key.shard()];
+        let idx = key.shard();
         let now = self.tick();
-        if let Some(hit) = shard.lock().expect("cache shard poisoned").map.get_mut(&key) {
+        if let Some(hit) = self.lock_shard(idx).map.get_mut(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             hit.stats.hits += 1;
             hit.stats.last_hit = now;
@@ -201,7 +245,7 @@ impl EvalCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let value = compute().map(Arc::new);
-        let mut guard = shard.lock().expect("cache shard poisoned");
+        let mut guard = self.lock_shard(idx);
         let Shard { map, order } = &mut *guard;
         if let Some(winner) = map.get_mut(&key) {
             // A racer computed and inserted first: hand back its value
@@ -249,8 +293,7 @@ impl EvalCache {
         stats: EntryStats,
     ) -> bool {
         self.clock.fetch_max(stats.last_hit.saturating_add(1), Ordering::Relaxed);
-        let shard = &self.shards[key.shard()];
-        let mut guard = shard.lock().expect("cache shard poisoned");
+        let mut guard = self.lock_shard(key.shard());
         let Shard { map, order } = &mut *guard;
         if map.contains_key(&key) {
             return false;
@@ -280,8 +323,8 @@ impl EvalCache {
     /// compaction input of [`crate::dse::persist`]).
     pub fn snapshot_stats(&self) -> Vec<(CacheKey, Option<Arc<Candidate>>, EntryStats)> {
         let mut out = Vec::with_capacity(self.len());
-        for shard in &self.shards {
-            let guard = shard.lock().expect("cache shard poisoned");
+        for idx in 0..self.shards.len() {
+            let guard = self.lock_shard(idx);
             for key in &guard.order {
                 if let Some(slot) = guard.map.get(key) {
                     out.push((*key, slot.value.clone(), slot.stats));
@@ -305,22 +348,26 @@ impl EvalCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
+    /// Shard-lock acquisitions that blocked behind another thread (see
+    /// [`CacheStats::contended`]).
+    pub fn contended(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
+    }
+
     /// Counter snapshot plus resident size.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits(),
             misses: self.misses(),
             evictions: self.evictions(),
+            contended: self.contended(),
             len: self.len(),
         }
     }
 
     /// Number of distinct design points stored.
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("cache shard poisoned").map.len())
-            .sum()
+        (0..self.shards.len()).map(|idx| self.lock_shard(idx).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -462,15 +509,18 @@ mod tests {
 
     #[test]
     fn bounded_cache_evicts_fifo_and_recomputes() {
-        // Capacity SHARDS => 1 entry per shard. Scenarios 1 and 1+SHARDS
-        // land in the same shard (the shard index is linear in the
-        // scenario hash mod SHARDS), so the second insert evicts the
-        // first.
+        // Capacity SHARDS => 1 entry per shard. The mixed shard hash is
+        // not linear in the scenario, so probe for a second scenario
+        // that collides with `a`'s shard (a few dozen tries suffice —
+        // collisions are Geometric(1/SHARDS)).
         let cache = EvalCache::with_capacity(Some(SHARDS));
         let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
             .quantized();
         let a = CacheKey::new(1, &rav);
-        let b = CacheKey::new(1 + SHARDS as u64, &rav);
+        let colliding = (2u64..10_000)
+            .find(|&s| CacheKey::new(s, &rav).shard() == a.shard())
+            .expect("no same-shard scenario in 10k probes");
+        let b = CacheKey::new(colliding, &rav);
         assert_eq!(a.shard(), b.shard(), "test requires same-shard keys");
         let mut calls = 0;
         cache.get_or_compute(a, || {
@@ -491,6 +541,7 @@ mod tests {
         assert_eq!(calls, 3);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions, s.len), (0, 3, 2, 1));
+        assert_eq!(s.contended, 0, "single-threaded runs never block on a shard");
         // `b` survives until `a`'s reinsertion evicted it; the newest
         // entry is always resident.
         let mut recomputed_b = 0;
@@ -544,6 +595,43 @@ mod tests {
         assert_eq!(cache.len(), 200);
         assert_eq!(cache.evictions(), 0);
         assert_eq!(cache.stats().misses, 200);
+    }
+
+    #[test]
+    fn shard_hash_spreads_a_converging_swarm() {
+        // The regression the Fibonacci mix fixes: lattice-adjacent RAVs
+        // (one fraction step apart — exactly what a converging swarm
+        // evaluates) must not pile onto a handful of shards.
+        let base = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        let probes = 4 * SHARDS;
+        let mut used = std::collections::HashSet::new();
+        for step in 0..probes {
+            let mut r = base;
+            r.dsp_frac = (step as f64) * crate::dse::rav::FRAC_QUANTUM;
+            used.insert(CacheKey::new(7, &r.quantized()).shard());
+        }
+        // A walk of adjacent points should occupy a healthy fraction of
+        // the shard space; the old linear spread collapsed runs like
+        // this onto `gcd`-induced cycles.
+        assert!(
+            used.len() >= SHARDS / 4,
+            "{} of {SHARDS} shards used by {probes} adjacent lattice points",
+            used.len()
+        );
+    }
+
+    #[test]
+    fn contention_counter_exposed_and_quiet_when_single_threaded() {
+        let cache = EvalCache::new();
+        let rav = Rav { sp: 4, batch: 1, dsp_frac: 0.5, bram_frac: 0.5, bw_frac: 0.5 }
+            .quantized();
+        for scenario in 0..50 {
+            cache.get_or_compute(CacheKey::new(scenario, &rav), || None);
+        }
+        let _ = cache.snapshot_stats();
+        assert_eq!(cache.contended(), 0);
+        assert_eq!(cache.stats().contended, 0);
     }
 
     #[test]

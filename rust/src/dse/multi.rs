@@ -19,7 +19,7 @@ use std::time::Instant;
 use crate::dnn::Network;
 use crate::dse::cache::EvalCache;
 use crate::fpga::FpgaDevice;
-use crate::shard::{partition, ShardConfig, ShardPlan};
+use crate::shard::{partition, PlanStats, Planner, ShardConfig, ShardPlan};
 use crate::topo::FabricKind;
 
 /// One board-count configuration of a comparison.
@@ -30,6 +30,8 @@ pub struct BoardsOutcome {
     pub label: String,
     /// `None` when no feasible partition exists at this count.
     pub plan: Option<ShardPlan>,
+    /// Planner wall-clock for this prefix, seconds.
+    pub elapsed_s: f64,
 }
 
 /// Result of a board-count comparison.
@@ -37,9 +39,18 @@ pub struct MultiResult {
     /// Outcomes in ascending board count.
     pub outcomes: Vec<BoardsOutcome>,
     pub elapsed_s: f64,
+    /// [`EvalCache`] hits *this comparison* produced (delta against the
+    /// counter snapshot taken at entry, so a pre-warmed or disk-loaded
+    /// cache does not inflate the report).
     pub cache_hits: u64,
+    /// Cache misses this comparison produced (delta, as above).
     pub cache_misses: u64,
+    /// Entries this comparison added to the cache (delta; saturates at
+    /// 0 if concurrent eviction shrank the cache mid-run).
     pub cache_len: usize,
+    /// Planner search counters summed over every prefix (cells
+    /// evaluated/reused/pruned, beam drops).
+    pub stats: PlanStats,
 }
 
 impl MultiResult {
@@ -161,9 +172,13 @@ pub fn compare_topology_awareness(
 }
 
 /// The board counts a comparison sweeps: 1, 2, 4, ... capped at the
-/// cluster size, always including the full cluster.
+/// cluster size, always including the full cluster. Empty for an empty
+/// cluster — there is no 0-board configuration to plan.
 pub fn sweep_counts(cluster: usize) -> Vec<usize> {
     let mut counts = Vec::new();
+    if cluster == 0 {
+        return counts;
+    }
     let mut c = 1;
     while c < cluster {
         counts.push(c);
@@ -175,6 +190,13 @@ pub fn sweep_counts(cluster: usize) -> Vec<usize> {
 
 /// Partition `net` over growing prefixes of `devices` (1/2/4/.../N
 /// boards) with a shared cache, returning the comparison matrix.
+///
+/// All prefixes run through one [`Planner`], so a DSE cell evaluated
+/// for the k-board table is *reused* — not merely cache-accelerated —
+/// by every larger prefix (the k-board DP is a sub-table of the
+/// (k+1)-board DP). Cache and search counters report only this
+/// comparison's own work: deltas against entry snapshots, never the
+/// shared cache's cumulative totals.
 pub fn compare_board_counts(
     net: &Network,
     devices: &[FpgaDevice],
@@ -182,6 +204,8 @@ pub fn compare_board_counts(
     cache: &EvalCache,
 ) -> MultiResult {
     let start = Instant::now();
+    let (hits0, misses0, len0) = (cache.hits(), cache.misses(), cache.len());
+    let mut planner = Planner::new(net, devices, cfg, cache);
     let mut outcomes = Vec::new();
     for count in sweep_counts(devices.len()) {
         let prefix = &devices[..count];
@@ -190,15 +214,22 @@ pub fn compare_board_counts(
             .map(|d| d.name.clone())
             .collect::<Vec<_>>()
             .join("+");
-        let plan = partition(net, prefix, cfg, cache);
-        outcomes.push(BoardsOutcome { boards: count, label, plan });
+        let t0 = Instant::now();
+        let plan = planner.plan(count);
+        outcomes.push(BoardsOutcome {
+            boards: count,
+            label,
+            plan,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        });
     }
     MultiResult {
         outcomes,
         elapsed_s: start.elapsed().as_secs_f64(),
-        cache_hits: cache.hits(),
-        cache_misses: cache.misses(),
-        cache_len: cache.len(),
+        cache_hits: cache.hits().saturating_sub(hits0),
+        cache_misses: cache.misses().saturating_sub(misses0),
+        cache_len: cache.len().saturating_sub(len0),
+        stats: planner.total_stats().clone(),
     }
 }
 
@@ -217,11 +248,64 @@ mod tests {
 
     #[test]
     fn sweep_counts_powers_plus_full() {
+        assert_eq!(sweep_counts(0), Vec::<usize>::new());
         assert_eq!(sweep_counts(1), vec![1]);
         assert_eq!(sweep_counts(2), vec![1, 2]);
         assert_eq!(sweep_counts(4), vec![1, 2, 4]);
         assert_eq!(sweep_counts(6), vec![1, 2, 4, 6]);
         assert_eq!(sweep_counts(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn empty_cluster_yields_empty_comparison() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let cache = EvalCache::new();
+        let res = compare_board_counts(&net, &[], &quick_cfg(), &cache);
+        assert!(res.outcomes.is_empty(), "no bogus 0-board outcome row");
+        assert!(res.best().is_none());
+        assert!(res.baseline().is_none());
+        assert_eq!(res.cache_misses, 0);
+        assert_eq!(res.stats.cells_evaluated, 0);
+    }
+
+    #[test]
+    fn single_board_cluster_sweeps_one_count() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let devices = vec![FpgaDevice::zcu102()];
+        let cache = EvalCache::new();
+        let res = compare_board_counts(&net, &devices, &quick_cfg(), &cache);
+        assert_eq!(res.outcomes.len(), 1);
+        assert_eq!(res.outcomes[0].boards, 1);
+        assert!(res.outcomes[0].plan.is_some(), "1 board feasible");
+        assert!(res.outcomes[0].elapsed_s >= 0.0);
+        assert!(res.stats.cells_evaluated > 0);
+        assert_eq!(res.best().unwrap().boards, 1);
+    }
+
+    #[test]
+    fn cache_counters_report_deltas_not_totals() {
+        let net = zoo::vgg16_conv(TensorShape::new(3, 64, 64), Precision::Int16);
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let cache = EvalCache::new();
+        let cold = compare_board_counts(&net, &devices, &quick_cfg(), &cache);
+        assert!(cold.cache_misses > 0);
+        assert!(cold.cache_len > 0);
+        // Identical sweep over the now-warm cache: the deterministic
+        // search replays the same design points, so every evaluation
+        // hits and this comparison's own misses are zero. Before the
+        // snapshot-delta fix this reported the cache's cumulative
+        // totals and doubled the cold run's numbers instead.
+        let warm = compare_board_counts(&net, &devices, &quick_cfg(), &cache);
+        assert_eq!(warm.cache_misses, 0, "warm run must report its own misses, not totals");
+        assert!(warm.cache_hits > 0);
+        assert_eq!(warm.cache_len, 0, "warm run adds no cache entries");
+        let f = |r: &MultiResult| {
+            r.outcomes
+                .iter()
+                .map(|o| o.plan.as_ref().map(|p| p.throughput_fps.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(f(&cold), f(&warm), "warm replay picks identical plans");
     }
 
     #[test]
@@ -244,6 +328,8 @@ mod tests {
         assert_eq!(res.best().unwrap().boards, 2);
         assert!(res.baseline().is_some());
         assert!(res.cache_misses > 0);
+        assert!(res.stats.cells_evaluated > 0);
+        assert!(res.outcomes.iter().all(|o| o.elapsed_s >= 0.0));
     }
 
     #[test]

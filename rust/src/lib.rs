@@ -53,7 +53,11 @@
 //!   [`perfmodel::interleave`] closed form against the discrete-event
 //!   [`sim::shard`] simulator (joint fabric occupancy) and the live
 //!   [`coordinator::ShardedPipeline`] on every plan shape, on ring and
-//!   star fabrics as well as p2p.
+//!   star fabrics as well as p2p. The planner itself searches with
+//!   branch-and-bound by default (`--planner`, admissible compute-roof
+//!   bounds + incremental prefix reuse across board-count sweeps),
+//!   proptest-pinned bit-identical to the exhaustive reference — see
+//!   `rust/docs/planner.md` and the `BENCH_shard_dse.json` CI artifact.
 //! * [`baselines`] — reimplementations of the paper's comparators:
 //!   DNNBuilder (pure pipeline), HybridDNN (generic + Winograd), and a
 //!   Xilinx-DPU-like fixed IP model.

@@ -30,6 +30,8 @@ USAGE:
                       [--link-gbps G] [--link-latency-us U]
                       [--topology p2p|ring|star:<gbps>|mesh]  # board wiring
                       [--max-replicas R]           # replicate a stage
+                      [--planner exhaustive|bnb]   # DP search strategy
+                      [--frontier-cap N]           # Pareto beam width
                       [--cache-file F] [--cache-max-entries N] [--json]
   dnnexplorer analyze [--network N] [--height H] [--width W] [--bits B]
   dnnexplorer report [--csv DIR] <fig1|fig2a|fig2b|table1|fig7|fig8|fig9|fig10|fig11|table3|table4|all> [--full]
@@ -379,7 +381,7 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
     use dnnexplorer::dse::multi;
     use dnnexplorer::dse::pso::PsoParams;
     use dnnexplorer::report::tables;
-    use dnnexplorer::shard::{LinkModel, ShardConfig};
+    use dnnexplorer::shard::{LinkModel, PlannerMode, ShardConfig};
     use dnnexplorer::FpgaDevice;
 
     let args = Args::parse(argv)?;
@@ -416,6 +418,13 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
     };
     let max_replicas = args.get_usize("max-replicas", 1)?;
     anyhow::ensure!(max_replicas >= 1, "--max-replicas must be >= 1");
+    let planner: PlannerMode = match args.get("planner") {
+        Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        None => ShardConfig::default().planner,
+    };
+    let frontier_cap =
+        args.get_usize("frontier-cap", ShardConfig::default().fabric_frontier_cap)?;
+    anyhow::ensure!(frontier_cap >= 1, "--frontier-cap must be >= 1");
     let cfg = ShardConfig {
         link: LinkModel::new(link_gbps, link_latency_us * 1e-6),
         fabric,
@@ -433,6 +442,8 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
         },
         threads,
         max_replicas,
+        planner,
+        fabric_frontier_cap: frontier_cap,
         ..ShardConfig::default()
     };
 
@@ -457,6 +468,11 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
                     ("latency_s", Json::n(plan.latency_s)),
                     ("bottleneck", Json::s(plan.bottleneck())),
                     ("max_replication", Json::n(plan.max_replication() as f64)),
+                    ("elapsed_s", Json::n(o.elapsed_s)),
+                    ("cells_evaluated", Json::n(plan.stats.cells_evaluated as f64)),
+                    ("cells_pruned", Json::n(plan.stats.cells_pruned as f64)),
+                    ("frontier_dropped", Json::n(plan.stats.frontier_dropped as f64)),
+                    ("exact", Json::Bool(plan.stats.is_exact())),
                     (
                         "stages",
                         Json::Arr(
@@ -503,10 +519,15 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
             ("link_gbps", Json::n(link_gbps)),
             ("link_latency_us", Json::n(link_latency_us)),
             ("topology", Json::s(format!("{fabric}"))),
+            ("planner", Json::s(format!("{planner}"))),
             ("configs", Json::Arr(rows)),
             ("elapsed_s", Json::n(result.elapsed_s)),
             ("cache_hits", Json::n(result.cache_hits as f64)),
             ("cache_misses", Json::n(result.cache_misses as f64)),
+            ("cells_evaluated", Json::n(result.stats.cells_evaluated as f64)),
+            ("cells_reused", Json::n(result.stats.cells_reused as f64)),
+            ("cells_pruned", Json::n(result.stats.cells_pruned as f64)),
+            ("frontier_dropped", Json::n(result.stats.frontier_dropped as f64)),
         ]);
         println!("{}", j.render());
     } else {
@@ -514,6 +535,18 @@ fn cmd_shard(argv: &[String]) -> anyhow::Result<()> {
         if let Some(plan) = result.outcomes.last().and_then(|o| o.plan.as_ref()) {
             print!("{}", plan.render());
         }
+        println!(
+            "planner [{}]: {} cells evaluated, {} reused, {} pruned{}",
+            planner,
+            result.stats.cells_evaluated,
+            result.stats.cells_reused,
+            result.stats.cells_pruned,
+            if result.stats.frontier_dropped > 0 {
+                format!(" | BEAM-CAPPED: {} frontier entries dropped", result.stats.frontier_dropped)
+            } else {
+                String::new()
+            }
+        );
         println!(
             "cache: {} points, {} hits / {} misses | {:.2}s wall",
             result.cache_len, result.cache_hits, result.cache_misses, result.elapsed_s

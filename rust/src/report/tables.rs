@@ -117,7 +117,10 @@ pub fn table4_batch_exploration(effort: Effort) -> RowSet {
 /// Sharding comparison table: 1/2/4/… boards of one cluster against the
 /// single-board baseline (the `dnnexplorer shard` report). A stage
 /// replicated r-wide renders as `j..i x r` in the stage map; the
-/// Topology column shows the fabric each plan was priced against.
+/// Topology column shows the fabric each plan was priced against; the
+/// Exact column distinguishes a full Pareto search (`yes`) from one the
+/// frontier beam cap truncated (`beam-N`, N = entries dropped — the
+/// no-silent-caps rule).
 pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult) -> RowSet {
     let mut out = RowSet::new(
         "shard",
@@ -133,6 +136,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
             "Bottleneck",
             "Cuts",
             "Topology",
+            "Exact",
         ],
     );
     let base_fps = result.baseline().map(|p| p.throughput_fps);
@@ -166,6 +170,11 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
                     p.bottleneck(),
                     cuts,
                     format!("{}", p.fabric),
+                    if p.stats.is_exact() {
+                        "yes".into()
+                    } else {
+                        format!("beam-{}", p.stats.frontier_dropped)
+                    },
                 ]);
             }
             None => out.push_row(vec![
@@ -177,6 +186,7 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
                 "-".into(),
                 "-".into(),
                 "infeasible".into(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
             ]),
@@ -233,5 +243,7 @@ mod tests {
         assert_eq!(t.rows[1][2], "2", "two stages at two boards, r=1");
         assert!(t.render().contains("Bottleneck"));
         assert_eq!(t.rows[0][9], "p2p", "topology column shows the fabric");
+        assert_eq!(t.rows[0][10], "yes", "uncapped searches report exact");
+        assert_eq!(t.rows[1][10], "yes");
     }
 }

@@ -42,17 +42,55 @@
 //! cross-validates the analytic model against the discrete-event
 //! simulator ([`crate::sim::shard`]) and the live pipeline.
 
+pub mod bound;
 pub mod link;
 pub mod partition;
 
 pub use crate::perfmodel::link::LinkModel;
-pub use partition::{partition, ShardPlan, ShardStage};
+pub use partition::{partition, PlanStats, Planner, ShardPlan, ShardStage};
 
 use crate::dnn::Precision;
 use crate::dse::engine::{ExplorerConfig, Objective};
 use crate::dse::pso::PsoParams;
 use crate::fpga::FpgaDevice;
 use crate::topo::{FabricKind, Topology};
+
+/// Which search strategy the cut-point planner runs. Both modes
+/// produce bit-identical [`ShardPlan`]s whenever the Pareto beam cap
+/// ([`ShardConfig::fabric_frontier_cap`]) does not bind — pinned by
+/// proptest — so the mode is purely a wall-clock knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// Evaluate every reachable `(layer range, device, r)` DSE cell up
+    /// front (the historical planner) — the reference implementation
+    /// the fast path is pinned against, and the bench baseline.
+    Exhaustive,
+    /// Lazy cell evaluation with branch-and-bound pruning: DP
+    /// transitions (and the DSE cells behind them) whose admissible
+    /// upper bound cannot beat the incumbent plan are never evaluated
+    /// (see `rust/docs/planner.md` for the bound derivation).
+    BranchAndBound,
+}
+
+impl std::fmt::Display for PlannerMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlannerMode::Exhaustive => write!(f, "exhaustive"),
+            PlannerMode::BranchAndBound => write!(f, "bnb"),
+        }
+    }
+}
+
+impl std::str::FromStr for PlannerMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "exhaustive" | "naive" => Ok(PlannerMode::Exhaustive),
+            "bnb" | "branch-and-bound" | "pruned" => Ok(PlannerMode::BranchAndBound),
+            other => Err(format!("unknown planner mode {other:?} (exhaustive|bnb)")),
+        }
+    }
+}
 
 /// Configuration of a sharded exploration: everything an
 /// [`ExplorerConfig`] carries except the device (one per board), plus
@@ -85,6 +123,13 @@ pub struct ShardConfig {
     /// planner; replicas must run on identical boards (a contiguous
     /// same-device run of the cluster list).
     pub max_replicas: usize,
+    /// Search strategy (see [`PlannerMode`]); bit-identical plans
+    /// either way, so the default is the pruned fast path.
+    pub planner: PlannerMode,
+    /// Beam cap on the per-cell Pareto frontier used on switch fabrics.
+    /// Small clusters never hit it; when it binds, the drop count is
+    /// surfaced in [`PlanStats::frontier_dropped`] (no silent caps).
+    pub fabric_frontier_cap: usize,
 }
 
 impl Default for ShardConfig {
@@ -100,6 +145,8 @@ impl Default for ShardConfig {
             seed: 0xD44E,
             threads: 1,
             max_replicas: 1,
+            planner: PlannerMode::BranchAndBound,
+            fabric_frontier_cap: 128,
         }
     }
 }

@@ -14,17 +14,36 @@
 //! end-to-end throughput with latency as the tie-breaker; under
 //! [`Objective::Latency`] the two criteria swap.
 //!
+//! ## Search strategies
+//!
+//! The planner runs in one of two [`PlannerMode`]s over a single shared
+//! DP core (identical scan order, tie-breaks, and arithmetic, so the
+//! two modes produce bit-identical plans whenever the Pareto beam cap
+//! does not bind — pinned by proptest):
+//!
+//! * [`PlannerMode::Exhaustive`] — pre-enumerate and evaluate every
+//!   structurally reachable DSE cell, then fill the DP. This is the
+//!   historical planner, kept as the reference implementation and the
+//!   bench baseline.
+//! * [`PlannerMode::BranchAndBound`] (default) — per DP row, collect
+//!   only the cells touched by transitions whose admissible upper bound
+//!   (see [`crate::shard::bound`]) can still beat the incumbent plan,
+//!   evaluate them in one [`parallel_map`] wave, and skip everything
+//!   else. The incumbent is seeded by exactly evaluating the argmax
+//!   path of the roof DP. Pruning is *strict* (`bound < incumbent`), so
+//!   exact ties — which the scan order resolves first-seen — survive
+//!   and the winner is unchanged.
+//!
+//! [`Planner`] holds the cross-call cell memo: sweeping board-count
+//! prefixes through one `Planner` (see
+//! [`crate::dse::multi::compare_board_counts`]) re-explores nothing a
+//! smaller prefix already evaluated — the k-board DP's expensive
+//! content is a sub-table of the (k+1)-board DP's.
+//!
 //! With [`ShardConfig::max_replicas`] `= 1` the planner reduces
 //! bit-exactly to the classic contiguous cut-point DP (one stage per
 //! board): the DP scan order, tie-breaks, and arithmetic are identical
 //! (multiplying a rate by `1.0` is exact).
-//!
-//! Every (range, device) cell is explored at most once per call (cells
-//! repeat across DP rows whenever the cluster repeats a device and
-//! across replication factors), and the underlying RAV evaluations are
-//! memoized in the shared [`EvalCache`] — so comparing board counts
-//! over the same cluster (see [`crate::dse::multi`]) re-explores
-//! nothing but the PSO walk.
 //!
 //! ## Topology pricing
 //!
@@ -41,8 +60,16 @@
 //! shared ceiling (`p2p`/`ring`/`mesh`) the frontier degenerates to one
 //! entry chosen by exactly the old predicate, keeping the planner
 //! bit-identical to the uniform-link DP (pinned by proptest).
+//!
+//! Frontiers live in a flat arena ([`Arena`]): one contiguous entry
+//! vector plus a `(board, layers, r) → span` index, committed row by
+//! row — no per-cell `Vec` churn. When the beam cap
+//! ([`ShardConfig::fabric_frontier_cap`]) fires, the drop count is
+//! surfaced in [`PlanStats::frontier_dropped`] rather than silently
+//! truncating the search.
 
 use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
 
 use crate::dnn::Network;
 use crate::dse::cache::EvalCache;
@@ -50,8 +77,9 @@ use crate::dse::engine::{self, Candidate, Objective};
 use crate::fpga::FpgaDevice;
 use crate::perfmodel::interleave::{self, StageRate};
 use crate::perfmodel::link::LinkModel;
+use crate::shard::bound::{BoundCtx, ADMISSIBILITY_SLACK};
 use crate::shard::link::tensor_bytes;
-use crate::shard::ShardConfig;
+use crate::shard::{PlannerMode, ShardConfig};
 use crate::topo::{FabricKind, SlotRun, Topology};
 use crate::util::parallel::parallel_map;
 
@@ -87,6 +115,51 @@ impl ShardStage {
     }
 }
 
+/// Search accounting of one planner call — how much work the DP did and
+/// how much the bounds saved, plus whether the beam cap made the search
+/// inexact (the no-silent-caps counter).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanStats {
+    /// DSE cell explorations actually run during this call.
+    pub cells_evaluated: u64,
+    /// Cells served from the [`Planner`] memo (a previous call of the
+    /// same planner — e.g. a smaller board-count prefix — explored
+    /// them).
+    pub cells_reused: u64,
+    /// Distinct cells the exhaustive planner would have evaluated that
+    /// branch-and-bound proved could not beat the incumbent.
+    pub cells_pruned: u64,
+    /// DP transitions skipped by the admissible bound test.
+    pub transitions_pruned: u64,
+    /// Pareto-frontier entries dropped by the beam cap
+    /// ([`ShardConfig::fabric_frontier_cap`]). Non-zero means the
+    /// search was a beam, not exact — surfaced in the plan JSON and the
+    /// report table per the no-silent-caps rule.
+    pub frontier_dropped: u64,
+    /// Score of the branch-and-bound incumbent seed (0 when pruning was
+    /// off or no seed was feasible).
+    pub incumbent_fps: f64,
+}
+
+impl PlanStats {
+    /// True when no beam pruning occurred — the DP searched the full
+    /// Pareto frontier and the plan is the exact optimum of its space.
+    pub fn is_exact(&self) -> bool {
+        self.frontier_dropped == 0
+    }
+
+    /// Fold another call's counters into this one (incumbent keeps the
+    /// max — it is a gauge, not a counter).
+    pub fn absorb(&mut self, o: &PlanStats) {
+        self.cells_evaluated += o.cells_evaluated;
+        self.cells_reused += o.cells_reused;
+        self.cells_pruned += o.cells_pruned;
+        self.transitions_pruned += o.transitions_pruned;
+        self.frontier_dropped += o.frontier_dropped;
+        self.incumbent_fps = self.incumbent_fps.max(o.incumbent_fps);
+    }
+}
+
 /// A full multi-board partition: stages in pipeline order plus the
 /// system-level model outputs.
 #[derive(Debug, Clone)]
@@ -105,6 +178,8 @@ pub struct ShardPlan {
     /// Single-frame latency: stage latencies plus hop costs, seconds
     /// (replication-invariant: a frame visits one replica per stage).
     pub latency_s: f64,
+    /// Search accounting of the planner call that produced this plan.
+    pub stats: PlanStats,
 }
 
 impl ShardPlan {
@@ -200,6 +275,7 @@ impl ShardPlan {
             throughput_fps,
             gops,
             latency_s: interleave::frame_latency_s_on(&topo, &rates, &slots, &cuts),
+            stats: self.stats.clone(),
         }
     }
 
@@ -267,6 +343,17 @@ impl ShardPlan {
             self.gops,
             self.latency_s * 1e3,
             self.bottleneck()
+        ));
+        out.push_str(&format!(
+            "search: {} cells explored, {} reused, {} pruned; {}\n",
+            self.stats.cells_evaluated,
+            self.stats.cells_reused,
+            self.stats.cells_pruned,
+            if self.stats.is_exact() {
+                "exact".to_string()
+            } else {
+                format!("beam ({} frontier entries dropped)", self.stats.frontier_dropped)
+            }
         ));
         out
     }
@@ -336,11 +423,722 @@ struct Cell {
     prev_idx: usize,
 }
 
-/// Frontier bound on switch fabrics: cells keep at most this many
-/// Pareto-incomparable partial plans. Small clusters never hit it; on
-/// deep clusters it acts as a deterministic beam (worst entries by the
-/// fabric-priced score are dropped first).
-const FABRIC_FRONTIER_CAP: usize = 128;
+/// One committed frontier's location in the [`Arena`], plus its max
+/// throughput (the row-level value branch-and-bound tests against).
+#[derive(Clone, Copy)]
+struct Span {
+    start: u32,
+    len: u32,
+    max_fps: f64,
+}
+
+/// Flat-arena DP table: all frontier entries live in one contiguous
+/// vector; `(board, layers-done, replicas) → Span` indexes into it.
+/// Rows are committed exactly once, in scan order, so spans never move
+/// — replacing the historical `Vec<Vec<Vec<Vec<Cell>>>>` and its
+/// per-cell allocation churn.
+struct Arena {
+    entries: Vec<Cell>,
+    spans: Vec<Span>,
+    n: usize,
+    maxr: usize,
+}
+
+impl Arena {
+    fn new(b_count: usize, n: usize, maxr: usize) -> Self {
+        Arena {
+            entries: Vec::new(),
+            spans: vec![
+                Span { start: 0, len: 0, max_fps: f64::NEG_INFINITY };
+                b_count * (n + 1) * (maxr + 1)
+            ],
+            n,
+            maxr,
+        }
+    }
+
+    fn idx(&self, b: usize, i: usize, r: usize) -> usize {
+        (b * (self.n + 1) + i) * (self.maxr + 1) + r
+    }
+
+    fn row(&self, b: usize, i: usize, r: usize) -> &[Cell] {
+        let s = self.spans[self.idx(b, i, r)];
+        &self.entries[s.start as usize..(s.start + s.len) as usize]
+    }
+
+    fn max_fps(&self, b: usize, i: usize, r: usize) -> f64 {
+        self.spans[self.idx(b, i, r)].max_fps
+    }
+
+    /// Append `scratch` as the frontier of `(b, i, r)` (drains it,
+    /// keeping its capacity for the next row).
+    fn commit(&mut self, b: usize, i: usize, r: usize, scratch: &mut Vec<Cell>) {
+        let start = self.entries.len() as u32;
+        let mut max_fps = f64::NEG_INFINITY;
+        for c in scratch.iter() {
+            max_fps = max_fps.max(c.fps);
+        }
+        let idx = self.idx(b, i, r);
+        self.spans[idx] = Span { start, len: scratch.len() as u32, max_fps };
+        self.entries.append(scratch);
+    }
+}
+
+/// `better` under the configured objective: primary criterion strict,
+/// secondary as tie-break; scan order settles the rest deterministically
+/// (first candidate wins ties).
+fn improves(objective: Objective, cand: (f64, f64), best: Option<(f64, f64)>) -> bool {
+    let Some((bf, bl)) = best else { return true };
+    match objective {
+        Objective::Throughput => cand.0 > bf || (cand.0 == bf && cand.1 < bl),
+        Objective::Latency => cand.1 < bl || (cand.1 == bl && cand.0 > bf),
+    }
+}
+
+/// Admit a candidate into a cell's frontier. Off switch fabrics the
+/// frontier holds one entry picked by [`improves`] — bit-identical to
+/// the single-cell DP. On a switch, accumulated cut bytes decide the
+/// final fabric term, so Pareto-incomparable entries (faster-so-far
+/// vs less switch traffic vs lower latency) must coexist. Every entry
+/// dropped by the beam cap is counted into `dropped` — truncation is
+/// never silent.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    front: &mut Vec<Cell>,
+    cand: Cell,
+    fabric: bool,
+    cap: usize,
+    topo: &Topology,
+    objective: Objective,
+    dropped: &mut u64,
+) {
+    if !fabric {
+        if improves(
+            objective,
+            (cand.fps, cand.latency_s),
+            front.first().map(|c| (c.fps, c.latency_s)),
+        ) {
+            front.clear();
+            front.push(cand);
+        }
+        return;
+    }
+    for c in front.iter() {
+        if c.fps >= cand.fps && c.latency_s <= cand.latency_s && c.cut_sum <= cand.cut_sum {
+            return; // dominated (equal on all axes keeps the first seen)
+        }
+    }
+    front.retain(|c| {
+        !(cand.fps >= c.fps && cand.latency_s <= c.latency_s && cand.cut_sum <= c.cut_sum)
+    });
+    front.push(cand);
+    if front.len() > cap {
+        // Deterministic beam prune: drop the worst fabric-priced
+        // entry (ties: higher latency, then more switch traffic).
+        let worst = front
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let sa = a.fps.min(topo.fabric_fps(a.cut_sum));
+                let sb = b.fps.min(topo.fabric_fps(b.cut_sum));
+                sa.partial_cmp(&sb)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(
+                        b.latency_s
+                            .partial_cmp(&a.latency_s)
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+                    .then(
+                        b.cut_sum
+                            .partial_cmp(&a.cut_sum)
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        front.swap_remove(worst);
+        *dropped += 1;
+    }
+}
+
+/// DSE cell key: `(device slot, start layer, end layer)`.
+type CellKey = (usize, usize, usize);
+
+/// Reusable cut-point planner over one `(network, cluster, config)`
+/// instance. [`Planner::plan`] partitions a board-count *prefix* of the
+/// cluster; the expensive per-cell DSE results are memoized across
+/// calls, so a 1/2/4/../N board sweep (see
+/// [`crate::dse::multi::compare_board_counts`]) evaluates every cell at
+/// most once — the incremental-prefix reuse half of the planner's
+/// speedup, next to branch-and-bound pruning.
+pub struct Planner<'a> {
+    net: &'a Network,
+    devices: &'a [FpgaDevice],
+    cfg: &'a ShardConfig,
+    cache: &'a EvalCache,
+    /// Compute-layer count of `net`.
+    n: usize,
+    /// Distinct device catalogue (canonicalized by [`same_device`]).
+    distinct: Vec<FpgaDevice>,
+    /// Canonical slot per cluster board (full cluster; prefixes slice).
+    slot: Vec<usize>,
+    /// Same-device run length ending at each board (prefix-safe: entry
+    /// `b` only depends on boards `0..=b`).
+    run_len: Vec<usize>,
+    /// Bytes on the wire at each cut (`n + 1` entries).
+    cut_bytes: Vec<f64>,
+    /// Prefix sums of compute-layer ops (`n + 1` entries).
+    ops_pfx: Vec<f64>,
+    /// Per-slot slack-padded `peak_gops · 1e9` roof numerator.
+    peak_fps_num: Vec<f64>,
+    /// Cross-call DSE cell memo: `None` = explored and infeasible.
+    memo: HashMap<CellKey, Option<Arc<Candidate>>>,
+    /// Counters accumulated over every [`Planner::plan`] call.
+    total: PlanStats,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(
+        net: &'a Network,
+        devices: &'a [FpgaDevice],
+        cfg: &'a ShardConfig,
+        cache: &'a EvalCache,
+    ) -> Self {
+        let comp_pos = compute_positions(net);
+        let n = comp_pos.len();
+        // Canonical slot per board: boards with identical budgets share
+        // DSE cells regardless of position in the cluster.
+        let mut distinct: Vec<FpgaDevice> = Vec::new();
+        let mut slot: Vec<usize> = Vec::with_capacity(devices.len());
+        for d in devices {
+            match distinct.iter().position(|e| same_device(e, d)) {
+                Some(i) => slot.push(i),
+                None => {
+                    distinct.push(d.clone());
+                    slot.push(distinct.len() - 1);
+                }
+            }
+        }
+        // run_len[b]: length of the same-device run ending at board b —
+        // the widest replica group that may end there.
+        let mut run_len = vec![1usize; devices.len()];
+        for b in 1..devices.len() {
+            if slot[b] == slot[b - 1] {
+                run_len[b] = run_len[b - 1] + 1;
+            }
+        }
+        // Bytes on the wire at each cut `c` (the tensor entering
+        // compute layer c = output of the last full layer of the
+        // previous segment).
+        let cut_bytes: Vec<f64> = (0..=n)
+            .map(|c| {
+                if c == 0 || c == n {
+                    0.0
+                } else {
+                    let p = boundary(net, &comp_pos, c);
+                    tensor_bytes(&net.layers[p - 1].output, cfg.dw)
+                }
+            })
+            .collect();
+        // ops_pfx[i] = Σ ops of compute layers [0, i) — the same
+        // compute-only accounting `engine::evaluate` uses for `gops`,
+        // so the roof bound divides by exactly the right denominator.
+        let mut ops_pfx = Vec::with_capacity(n + 1);
+        ops_pfx.push(0.0);
+        for l in net.layers.iter().filter(|l| l.is_compute()) {
+            ops_pfx.push(ops_pfx.last().copied().unwrap_or(0.0) + l.ops() as f64);
+        }
+        let peak_fps_num: Vec<f64> = distinct
+            .iter()
+            .map(|d| ADMISSIBILITY_SLACK * d.peak_gops(cfg.ww.alpha()) * 1e9)
+            .collect();
+        Planner {
+            net,
+            devices,
+            cfg,
+            cache,
+            n,
+            distinct,
+            slot,
+            run_len,
+            cut_bytes,
+            ops_pfx,
+            peak_fps_num,
+            memo: HashMap::new(),
+            total: PlanStats::default(),
+        }
+    }
+
+    /// Counters accumulated across every `plan` call of this planner.
+    pub fn total_stats(&self) -> &PlanStats {
+        &self.total
+    }
+
+    /// Distinct DSE cells explored so far (across all calls).
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Explored design of cell `(slot-of-b, j, i)`, if feasible and
+    /// already evaluated.
+    fn cell(&self, b: usize, j: usize, i: usize) -> Option<&Arc<Candidate>> {
+        self.memo.get(&(self.slot[b], j, i)).and_then(|o| o.as_ref())
+    }
+
+    /// Admissible per-replica fps roof of cell `(s, j, i)` — must match
+    /// [`BoundCtx::cell_fps_ub`] exactly (same expression) so pass A
+    /// and pass B of the pruned DP agree on every decision.
+    fn cell_fps_ub(&self, s: usize, j: usize, i: usize) -> f64 {
+        let ops = self.ops_pfx[i] - self.ops_pfx[j];
+        if ops > 0.0 {
+            self.peak_fps_num[s] / ops
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Evaluate every not-yet-memoized cell of `need` in one
+    /// work-stealing wave. `seen` de-duplicates per-call accounting
+    /// (the same cell can be needed by several boards of one call).
+    fn eval_wave(
+        &mut self,
+        need: &BTreeSet<CellKey>,
+        seen: &mut BTreeSet<CellKey>,
+        stats: &mut PlanStats,
+    ) {
+        let mut tasks: Vec<CellKey> = Vec::new();
+        for &k in need {
+            if !seen.insert(k) {
+                continue; // accounted earlier in this call
+            }
+            if self.memo.contains_key(&k) {
+                stats.cells_reused += 1;
+            } else {
+                tasks.push(k);
+            }
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let (net, cache, cfg) = (self.net, self.cache, self.cfg);
+        let distinct = &self.distinct;
+        let results = parallel_map(&tasks, cfg.threads, |&(s, j, i)| {
+            let sub = subnetwork(net, j, i);
+            let ex = cfg.explorer_for(&distinct[s]);
+            engine::explore_shared(&sub, &ex, cache)
+        });
+        stats.cells_evaluated += tasks.len() as u64;
+        for (k, r) in tasks.into_iter().zip(results) {
+            self.memo.insert(k, r.map(|res| Arc::new(res.best)));
+        }
+    }
+
+    /// Exactly price the chained plan described by `path` (stages as
+    /// `(j, i, b_end, r)` in pipeline order) with the *same arithmetic
+    /// and operation order* as the DP — so the resulting score is a
+    /// value the DP itself can reach, making it a sound (never
+    /// over-tight) pruning incumbent. `None` when any cell of the path
+    /// is DSE-infeasible.
+    fn price_path(&self, path: &[(usize, usize, usize, usize)], topo: &Topology) -> Option<f64> {
+        let mut fps = 0.0f64;
+        let mut cut_sum = 0.0f64;
+        for (s_idx, &(j, i, b_end, r)) in path.iter().enumerate() {
+            let cand = self.cell(b_end, j, i)?;
+            let eff = r as f64 * cand.throughput_fps;
+            if s_idx == 0 {
+                fps = eff;
+            } else {
+                let (_pj, _pi, pb_end, pr) = path[s_idx - 1];
+                let prev_run = SlotRun::new(pb_end + 1 - pr, pr);
+                let cur_run = SlotRun::new(b_end + 1 - r, r);
+                let link = topo.cut_throughput_fps(self.cut_bytes[j], prev_run, cur_run);
+                fps = fps.min(link).min(eff);
+                cut_sum += self.cut_bytes[j];
+            }
+        }
+        Some(fps.min(topo.fabric_fps(cut_sum)))
+    }
+
+    /// Partition `net` across the first `b_count` boards of the
+    /// cluster. See [`partition`] for the contract; this entry point
+    /// additionally reuses the cell memo across calls.
+    pub fn plan(&mut self, b_count: usize) -> Option<ShardPlan> {
+        assert!(b_count <= self.devices.len(), "prefix larger than cluster");
+        let n = self.n;
+        let maxr = self.cfg.max_replicas.max(1).min(b_count.max(1));
+        // Minimum stages needed to cover `boards` boards at <= maxr each.
+        let min_stages = move |boards: usize| boards.div_ceil(maxr);
+        if n == 0 || b_count == 0 || min_stages(b_count) > n {
+            return None;
+        }
+        let cfg = self.cfg;
+        let topo = cfg.topology();
+        let fabric = topo.has_fabric();
+        let cap = cfg.fabric_frontier_cap.max(1);
+        let lazy = cfg.planner == PlannerMode::BranchAndBound;
+        let mut stats = PlanStats::default();
+        let mut seen: BTreeSet<CellKey> = BTreeSet::new();
+
+        // Branch-and-bound preamble: suffix roof table + incumbent seed
+        // (the roof DP's argmax path, evaluated exactly). Pruning only
+        // under the throughput objective — the bounds bound throughput.
+        let (incumbent, suffix) = if lazy && cfg.objective == Objective::Throughput {
+            let (path, suf) = {
+                let bc = BoundCtx {
+                    k: b_count,
+                    n,
+                    maxr,
+                    slot: &self.slot[..b_count],
+                    run_len: &self.run_len[..b_count],
+                    ops_pfx: &self.ops_pfx,
+                    peak_fps_num: &self.peak_fps_num,
+                    cut_bytes: &self.cut_bytes,
+                    topo: &topo,
+                };
+                (bc.forward_path(), bc.suffix())
+            };
+            let inc = path.and_then(|path| {
+                let mut need: BTreeSet<CellKey> = BTreeSet::new();
+                for &(j, i, b_end, _r) in &path {
+                    need.insert((self.slot[b_end], j, i));
+                }
+                self.eval_wave(&need, &mut seen, &mut stats);
+                self.price_path(&path, &topo)
+            });
+            if let Some(s) = inc {
+                stats.incumbent_fps = s;
+            }
+            (inc, Some(suf))
+        } else {
+            (None, None)
+        };
+        let suf_get =
+            |b: usize, i: usize, r: usize| suffix.as_ref().map_or(f64::INFINITY, |t| t.get(b, i, r));
+
+        // Exhaustive mode: the historical eager pre-enumeration — every
+        // structurally reachable cell, evaluated in one wave up front.
+        if !lazy {
+            let mut wanted: BTreeSet<CellKey> = BTreeSet::new();
+            for b in 0..b_count {
+                let rmax = maxr.min(self.run_len[b]).min(b + 1);
+                for r in 1..=rmax {
+                    let before = b + 1 - r;
+                    let after = b_count - 1 - b;
+                    if min_stages(after) >= n {
+                        continue;
+                    }
+                    let i_max = n - min_stages(after);
+                    let j_lo = min_stages(before);
+                    for j in j_lo..i_max {
+                        if before == 0 && j != 0 {
+                            break; // the first stage always starts at layer 0
+                        }
+                        if b == b_count - 1 {
+                            // The last stage always ends at layer n.
+                            if n > j {
+                                wanted.insert((self.slot[b], j, n));
+                            }
+                        } else {
+                            for i in (j + 1)..=i_max {
+                                wanted.insert((self.slot[b], j, i));
+                            }
+                        }
+                    }
+                }
+            }
+            self.eval_wave(&wanted, &mut seen, &mut stats);
+        }
+
+        // The DP proper. dp(b, i, r): frontier of plans putting compute
+        // layers [0, i) on boards 0..=b with the last stage replicated
+        // r-wide. One entry off switch fabrics; a Pareto set on them.
+        //
+        // In lazy mode each board runs two passes over the *same*
+        // skeleton: pass A collects the cells surviving the bound test
+        // into one evaluation wave; pass B replays the skeleton with
+        // exact values. Both passes see identical committed rows, so
+        // their pruning decisions agree.
+        let mut arena = Arena::new(b_count, n, maxr);
+        let mut dropped: u64 = 0;
+        let mut scratch: Vec<Cell> = Vec::new();
+        let mut pruned_cells: BTreeSet<CellKey> = BTreeSet::new();
+        for b in 0..b_count {
+            let rmax = maxr.min(self.run_len[b]).min(b + 1);
+            let after = b_count - 1 - b;
+            if min_stages(after) >= n {
+                continue;
+            }
+            let i_max = n - min_stages(after);
+
+            if lazy {
+                let mut need: BTreeSet<CellKey> = BTreeSet::new();
+                for i in 1..=i_max {
+                    if b == b_count - 1 && i != n {
+                        continue;
+                    }
+                    for r in 1..=rmax {
+                        let before = b + 1 - r;
+                        if before == 0 {
+                            let key = (self.slot[b], 0, i);
+                            match incumbent {
+                                Some(inc)
+                                    if (r as f64 * self.cell_fps_ub(self.slot[b], 0, i))
+                                        .min(suf_get(b, i, r))
+                                        < inc =>
+                                {
+                                    stats.transitions_pruned += 1;
+                                    pruned_cells.insert(key);
+                                }
+                                _ => {
+                                    need.insert(key);
+                                }
+                            }
+                            continue;
+                        }
+                        let pb = before - 1;
+                        let cur_run = SlotRun::new(before, r);
+                        for j in min_stages(before).max(1)..i {
+                            let key = (self.slot[b], j, i);
+                            let roof = r as f64 * self.cell_fps_ub(self.slot[b], j, i);
+                            for r_prev in 1..=maxr.min(self.run_len[pb]).min(pb + 1) {
+                                if arena.row(pb, j, r_prev).is_empty() {
+                                    continue;
+                                }
+                                if let Some(inc) = incumbent {
+                                    let prev_run = SlotRun::new(before - r_prev, r_prev);
+                                    let link_fps = topo.cut_throughput_fps(
+                                        self.cut_bytes[j],
+                                        prev_run,
+                                        cur_run,
+                                    );
+                                    let ub = arena
+                                        .max_fps(pb, j, r_prev)
+                                        .min(link_fps)
+                                        .min(roof)
+                                        .min(suf_get(b, i, r));
+                                    if ub < inc {
+                                        stats.transitions_pruned += 1;
+                                        pruned_cells.insert(key);
+                                        continue;
+                                    }
+                                }
+                                need.insert(key);
+                            }
+                        }
+                    }
+                }
+                self.eval_wave(&need, &mut seen, &mut stats);
+            }
+
+            // Pass B: exact transitions, identical skeleton and order.
+            for i in 1..=i_max {
+                if b == b_count - 1 && i != n {
+                    continue;
+                }
+                for r in 1..=rmax {
+                    let before = b + 1 - r;
+                    debug_assert!(scratch.is_empty());
+                    if before == 0 {
+                        // First stage: layers [0, i) on boards 0..=b,
+                        // r-wide. Same prune test as pass A.
+                        let keep = match incumbent {
+                            Some(inc) => {
+                                (r as f64 * self.cell_fps_ub(self.slot[b], 0, i))
+                                    .min(suf_get(b, i, r))
+                                    >= inc
+                            }
+                            None => true,
+                        };
+                        if keep {
+                            if let Some(c) = self.cell(b, 0, i) {
+                                scratch.push(Cell {
+                                    fps: r as f64 * c.throughput_fps,
+                                    latency_s: c.frame_latency_s,
+                                    cut_sum: 0.0,
+                                    start_j: 0,
+                                    prev_r: 0,
+                                    prev_idx: 0,
+                                });
+                            }
+                        }
+                        arena.commit(b, i, r, &mut scratch);
+                        continue;
+                    }
+                    let pb = before - 1;
+                    let cur_run = SlotRun::new(before, r);
+                    for j in min_stages(before).max(1)..i {
+                        let Some(stage) = self.cell(b, j, i) else { continue };
+                        let eff = r as f64 * stage.throughput_fps;
+                        let stage_latency = stage.frame_latency_s;
+                        let roof = r as f64 * self.cell_fps_ub(self.slot[b], j, i);
+                        for r_prev in 1..=maxr.min(self.run_len[pb]).min(pb + 1) {
+                            if arena.row(pb, j, r_prev).is_empty() {
+                                continue;
+                            }
+                            // A non-empty frontier implies r_prev fits
+                            // at board pb, so the run start cannot
+                            // underflow.
+                            let prev_run = SlotRun::new(before - r_prev, r_prev);
+                            let link_fps =
+                                topo.cut_throughput_fps(self.cut_bytes[j], prev_run, cur_run);
+                            if let Some(inc) = incumbent {
+                                // Same test as pass A (counted there).
+                                let ub = arena
+                                    .max_fps(pb, j, r_prev)
+                                    .min(link_fps)
+                                    .min(roof)
+                                    .min(suf_get(b, i, r));
+                                if ub < inc {
+                                    continue;
+                                }
+                            }
+                            let hop_s =
+                                topo.cut_transfer_s(self.cut_bytes[j], prev_run, cur_run);
+                            for (pi, prev) in arena.row(pb, j, r_prev).iter().enumerate() {
+                                let fps = prev.fps.min(link_fps).min(eff);
+                                let latency_s = prev.latency_s + hop_s + stage_latency;
+                                admit(
+                                    &mut scratch,
+                                    Cell {
+                                        fps,
+                                        latency_s,
+                                        cut_sum: prev.cut_sum + self.cut_bytes[j],
+                                        start_j: j,
+                                        prev_r: r_prev,
+                                        prev_idx: pi,
+                                    },
+                                    fabric,
+                                    cap,
+                                    &topo,
+                                    cfg.objective,
+                                    &mut dropped,
+                                );
+                            }
+                        }
+                    }
+                    // Entries strictly below the incumbent can never win
+                    // nor tie on the primary criterion — drop them so
+                    // downstream rows stop extending dead branches.
+                    if let Some(inc) = incumbent {
+                        scratch.retain(|c| c.fps >= inc);
+                    }
+                    arena.commit(b, i, r, &mut scratch);
+                }
+            }
+        }
+        stats.cells_pruned = pruned_cells.difference(&seen).count() as u64;
+        stats.frontier_dropped = dropped;
+
+        // Pick the winning final cell — the shared-fabric ceiling is
+        // priced here, over each candidate's accumulated cut traffic —
+        // then walk the chain back to the front.
+        let mut chosen: Option<(usize, usize, f64, f64)> = None; // (r, idx, fps, latency)
+        for r in 1..=maxr.min(self.run_len[b_count - 1]).min(b_count) {
+            for (idx, c) in arena.row(b_count - 1, n, r).iter().enumerate() {
+                let scored = c.fps.min(topo.fabric_fps(c.cut_sum));
+                if improves(
+                    cfg.objective,
+                    (scored, c.latency_s),
+                    chosen.map(|(_, _, f, l)| (f, l)),
+                ) {
+                    chosen = Some((r, idx, scored, c.latency_s));
+                }
+            }
+        }
+        self.total.absorb(&stats);
+        let (final_r, final_idx, final_fps, final_latency) = chosen?;
+
+        // Reconstruct (start layer, end layer, last board, replicas) per
+        // stage, back to front.
+        let mut rev: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let mut i_cur = n;
+        let mut b_cur = b_count - 1;
+        let mut r_cur = final_r;
+        let mut idx_cur = final_idx;
+        loop {
+            let cell = arena.row(b_cur, i_cur, r_cur)[idx_cur];
+            rev.push((cell.start_j, i_cur, b_cur, r_cur));
+            if cell.start_j == 0 {
+                debug_assert_eq!(b_cur + 1, r_cur, "first stage must start at board 0");
+                break;
+            }
+            let next_b = b_cur - r_cur;
+            i_cur = cell.start_j;
+            r_cur = cell.prev_r;
+            idx_cur = cell.prev_idx;
+            b_cur = next_b;
+        }
+        rev.reverse();
+
+        let mut stages = Vec::with_capacity(rev.len());
+        for (s_idx, &(j, i, b_end, r)) in rev.iter().enumerate() {
+            let candidate =
+                self.cell(b_end, j, i).expect("winning cell vanished").as_ref().clone();
+            let egress_bytes = self.cut_bytes[i];
+            let r_next = rev.get(s_idx + 1).map(|&(_, _, _, rn)| rn).unwrap_or(1);
+            let stage_fps = r as f64 * candidate.throughput_fps;
+            let this_run = SlotRun::new(b_end + 1 - r, r);
+            let next_run = SlotRun::new(b_end + 1, r_next);
+            stages.push(ShardStage {
+                stage: s_idx,
+                boards: (b_end + 1 - r..=b_end).collect(),
+                device: self.devices[b_end].clone(),
+                layer_range: (j, i),
+                candidate,
+                stage_fps,
+                egress_bytes,
+                egress_fps: topo.cut_throughput_fps(egress_bytes, this_run, next_run),
+            });
+        }
+
+        let total_ops: f64 = self
+            .net
+            .layers
+            .iter()
+            .filter(|l| l.is_compute())
+            .map(|l| l.ops() as f64)
+            .sum();
+        let plan = ShardPlan {
+            network: self.net.name.clone(),
+            link: cfg.link,
+            fabric: cfg.fabric,
+            stages,
+            throughput_fps: final_fps,
+            gops: final_fps * total_ops / 1e9,
+            latency_s: final_latency,
+            stats,
+        };
+        // The DP's incremental mins/sums must agree with the closed-form
+        // interleave model bit-for-bit (same operations, same order).
+        #[cfg(debug_assertions)]
+        {
+            let (rates, slots, cuts) = (plan.stage_rates(), plan.slot_runs(), plan.cut_bytes());
+            debug_assert_eq!(
+                plan.throughput_fps.to_bits(),
+                interleave::steady_state_fps_on(&topo, &rates, &slots, &cuts).to_bits(),
+                "DP throughput disagrees with the interleave model"
+            );
+            debug_assert_eq!(
+                plan.latency_s.to_bits(),
+                interleave::frame_latency_s_on(&topo, &rates, &slots, &cuts).to_bits(),
+                "DP latency disagrees with the interleave model"
+            );
+            // Branch-and-bound must never end below its own incumbent —
+            // the incumbent's path survives pruning by construction.
+            if let Some(inc) = incumbent {
+                if cfg.objective == Objective::Throughput {
+                    debug_assert!(
+                        plan.throughput_fps >= inc,
+                        "B&B lost its incumbent: {} < {}",
+                        plan.throughput_fps,
+                        inc
+                    );
+                }
+            }
+        }
+        Some(plan)
+    }
+}
 
 /// Partition `net` across `devices` (pipeline order), replicating
 /// stages up to [`ShardConfig::max_replicas`]-wide where the cluster
@@ -351,329 +1149,15 @@ const FABRIC_FRONTIER_CAP: usize = 128;
 /// Deterministic for a fixed [`ShardConfig::seed`] at any
 /// [`ShardConfig::threads`]: cells are explored independently (input
 /// order restored by [`parallel_map`]) and the DP scan order is fixed.
+/// One-shot wrapper over [`Planner`]; sweeps over prefixes should hold
+/// a `Planner` instead to reuse its cell memo.
 pub fn partition(
     net: &Network,
     devices: &[FpgaDevice],
     cfg: &ShardConfig,
     cache: &EvalCache,
 ) -> Option<ShardPlan> {
-    let comp_pos = compute_positions(net);
-    let n = comp_pos.len();
-    let b_count = devices.len();
-    let maxr = cfg.max_replicas.max(1).min(b_count.max(1));
-    // Minimum stages needed to cover `boards` boards at <= maxr each.
-    let min_stages = |boards: usize| boards.div_ceil(maxr);
-    if n == 0 || b_count == 0 || min_stages(b_count) > n {
-        return None;
-    }
-
-    // Canonical slot per board: boards with identical budgets share DSE
-    // cells regardless of position in the cluster.
-    let mut distinct: Vec<FpgaDevice> = Vec::new();
-    let mut slot: Vec<usize> = Vec::with_capacity(b_count);
-    for d in devices {
-        match distinct.iter().position(|e| same_device(e, d)) {
-            Some(i) => slot.push(i),
-            None => {
-                distinct.push(d.clone());
-                slot.push(distinct.len() - 1);
-            }
-        }
-    }
-    // run_len[b]: length of the same-device run ending at board b — the
-    // widest replica group that may end there.
-    let mut run_len = vec![1usize; b_count];
-    for b in 1..b_count {
-        if slot[b] == slot[b - 1] {
-            run_len[b] = run_len[b - 1] + 1;
-        }
-    }
-
-    // Bytes on the wire at each cut `c` (the tensor entering compute
-    // layer c = output of the last full layer of the previous segment).
-    let cut_bytes: Vec<f64> = (0..=n)
-        .map(|c| {
-            if c == 0 || c == n {
-                0.0
-            } else {
-                let p = boundary(net, &comp_pos, c);
-                tensor_bytes(&net.layers[p - 1].output, cfg.dw)
-            }
-        })
-        .collect();
-
-    // Every (device-slot, range) cell any DP transition can touch, in a
-    // fixed order; explored concurrently below (work-stealing absorbs
-    // the skew between a 2-layer tail cell and a 10-layer prefix cell).
-    // Replication widens the reachable set: a group ending at board b
-    // with r replicas leaves only `b+1-r` boards (>= min_stages of them
-    // stages) in front of it.
-    let mut wanted: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
-    for b in 0..b_count {
-        let rmax = maxr.min(run_len[b]).min(b + 1);
-        for r in 1..=rmax {
-            let before = b + 1 - r;
-            let after = b_count - 1 - b;
-            if min_stages(after) >= n {
-                continue;
-            }
-            let i_max = n - min_stages(after);
-            let j_lo = min_stages(before);
-            for j in j_lo..i_max {
-                if before == 0 && j != 0 {
-                    break; // the first stage always starts at layer 0
-                }
-                if b == b_count - 1 {
-                    // The last stage always ends at layer n.
-                    if n > j {
-                        wanted.insert((slot[b], j, n));
-                    }
-                } else {
-                    for i in (j + 1)..=i_max {
-                        wanted.insert((slot[b], j, i));
-                    }
-                }
-            }
-        }
-    }
-    let tasks: Vec<(usize, usize, usize)> = wanted.into_iter().collect();
-    let results = parallel_map(&tasks, cfg.threads, |&(s, j, i)| {
-        let sub = subnetwork(net, j, i);
-        let ex = cfg.explorer_for(&distinct[s]);
-        engine::explore_shared(&sub, &ex, cache)
-    });
-    let mut evals: HashMap<(usize, usize, usize), Option<engine::ExplorerResult>> =
-        HashMap::with_capacity(tasks.len());
-    for (k, r) in tasks.into_iter().zip(results) {
-        evals.insert(k, r);
-    }
-    let cell_of = |b: usize, j: usize, i: usize| -> Option<&Candidate> {
-        evals.get(&(slot[b], j, i)).and_then(|o| o.as_ref()).map(|r| &r.best)
-    };
-
-    // `better` under the configured objective: primary criterion strict,
-    // secondary as tie-break; scan order settles the rest
-    // deterministically (first candidate wins ties).
-    let improves = |cand: (f64, f64), best: Option<(f64, f64)>| -> bool {
-        let Some((bf, bl)) = best else { return true };
-        match cfg.objective {
-            Objective::Throughput => cand.0 > bf || (cand.0 == bf && cand.1 < bl),
-            Objective::Latency => cand.1 < bl || (cand.1 == bl && cand.0 > bf),
-        }
-    };
-
-    let topo = cfg.topology();
-    let fabric = topo.has_fabric();
-    // Admit a candidate into a cell's frontier. Off switch fabrics the
-    // frontier holds one entry picked by `improves` — bit-identical to
-    // the single-cell DP. On a switch, accumulated cut bytes decide the
-    // final fabric term, so Pareto-incomparable entries (faster-so-far
-    // vs less switch traffic vs lower latency) must coexist.
-    let admit = |front: &mut Vec<Cell>, cand: Cell| {
-        if !fabric {
-            if improves(
-                (cand.fps, cand.latency_s),
-                front.first().map(|c| (c.fps, c.latency_s)),
-            ) {
-                front.clear();
-                front.push(cand);
-            }
-            return;
-        }
-        for c in front.iter() {
-            if c.fps >= cand.fps && c.latency_s <= cand.latency_s && c.cut_sum <= cand.cut_sum {
-                return; // dominated (equal on all axes keeps the first seen)
-            }
-        }
-        front.retain(|c| {
-            !(cand.fps >= c.fps && cand.latency_s <= c.latency_s && cand.cut_sum <= c.cut_sum)
-        });
-        front.push(cand);
-        if front.len() > FABRIC_FRONTIER_CAP {
-            // Deterministic beam prune: drop the worst fabric-priced
-            // entry (ties: higher latency, then more switch traffic).
-            let worst = front
-                .iter()
-                .enumerate()
-                .min_by(|(_, a), (_, b)| {
-                    let sa = a.fps.min(topo.fabric_fps(a.cut_sum));
-                    let sb = b.fps.min(topo.fabric_fps(b.cut_sum));
-                    sa.partial_cmp(&sb)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(
-                            b.latency_s
-                                .partial_cmp(&a.latency_s)
-                                .unwrap_or(std::cmp::Ordering::Equal),
-                        )
-                        .then(
-                            b.cut_sum
-                                .partial_cmp(&a.cut_sum)
-                                .unwrap_or(std::cmp::Ordering::Equal),
-                        )
-                })
-                .map(|(i, _)| i)
-                .unwrap_or(0);
-            front.swap_remove(worst);
-        }
-    };
-
-    // dp[b][i][r]: frontier of plans putting compute layers [0, i) on
-    // boards 0..=b with the last stage replicated r-wide (boards
-    // b-r+1..=b). One entry off switch fabrics; a Pareto set on them.
-    let mut dp = vec![vec![vec![Vec::<Cell>::new(); maxr + 1]; n + 1]; b_count];
-    for b in 0..b_count {
-        let rmax = maxr.min(run_len[b]).min(b + 1);
-        let after = b_count - 1 - b;
-        if min_stages(after) >= n {
-            continue;
-        }
-        let i_max = n - min_stages(after);
-        for i in 1..=i_max {
-            if b == b_count - 1 && i != n {
-                continue;
-            }
-            for r in 1..=rmax {
-                let before = b + 1 - r;
-                if before == 0 {
-                    // First stage: layers [0, i) on boards 0..=b, r-wide.
-                    if let Some(c) = cell_of(b, 0, i) {
-                        dp[b][i][r].push(Cell {
-                            fps: r as f64 * c.throughput_fps,
-                            latency_s: c.frame_latency_s,
-                            cut_sum: 0.0,
-                            start_j: 0,
-                            prev_r: 0,
-                            prev_idx: 0,
-                        });
-                    }
-                    continue;
-                }
-                let pb = before - 1; // last board of the previous stage
-                let cur_run = SlotRun::new(before, r);
-                let mut best: Vec<Cell> = Vec::new();
-                for j in min_stages(before).max(1)..i {
-                    let Some(stage) = cell_of(b, j, i) else { continue };
-                    for r_prev in 1..=maxr {
-                        let frontier = &dp[pb][j][r_prev];
-                        if frontier.is_empty() {
-                            continue;
-                        }
-                        // A non-empty frontier implies r_prev fits at
-                        // board pb, so the run start cannot underflow.
-                        let prev_run = SlotRun::new(before - r_prev, r_prev);
-                        let link_fps = topo.cut_throughput_fps(cut_bytes[j], prev_run, cur_run);
-                        let hop_s = topo.cut_transfer_s(cut_bytes[j], prev_run, cur_run);
-                        let eff = r as f64 * stage.throughput_fps;
-                        for (pi, prev) in frontier.iter().enumerate() {
-                            let fps = prev.fps.min(link_fps).min(eff);
-                            let latency_s = prev.latency_s + hop_s + stage.frame_latency_s;
-                            admit(
-                                &mut best,
-                                Cell {
-                                    fps,
-                                    latency_s,
-                                    cut_sum: prev.cut_sum + cut_bytes[j],
-                                    start_j: j,
-                                    prev_r: r_prev,
-                                    prev_idx: pi,
-                                },
-                            );
-                        }
-                    }
-                }
-                dp[b][i][r] = best;
-            }
-        }
-    }
-
-    // Pick the winning final cell — the shared-fabric ceiling is priced
-    // here, over each candidate's accumulated cut traffic — then walk
-    // the chain back to the front.
-    let mut chosen: Option<(usize, usize, f64, f64)> = None; // (r, idx, fps, latency)
-    for r in 1..=maxr.min(run_len[b_count - 1]).min(b_count) {
-        for (idx, c) in dp[b_count - 1][n][r].iter().enumerate() {
-            let scored = c.fps.min(topo.fabric_fps(c.cut_sum));
-            if improves((scored, c.latency_s), chosen.map(|(_, _, f, l)| (f, l))) {
-                chosen = Some((r, idx, scored, c.latency_s));
-            }
-        }
-    }
-    let (final_r, final_idx, final_fps, final_latency) = chosen?;
-
-    // Reconstruct (start layer, end layer, last board, replicas) per
-    // stage, back to front.
-    let mut rev: Vec<(usize, usize, usize, usize)> = Vec::new();
-    let mut i_cur = n;
-    let mut b_cur = b_count - 1;
-    let mut r_cur = final_r;
-    let mut idx_cur = final_idx;
-    loop {
-        let cell = dp[b_cur][i_cur][r_cur][idx_cur];
-        rev.push((cell.start_j, i_cur, b_cur, r_cur));
-        if cell.start_j == 0 {
-            debug_assert_eq!(b_cur + 1, r_cur, "first stage must start at board 0");
-            break;
-        }
-        let next_b = b_cur - r_cur;
-        i_cur = cell.start_j;
-        r_cur = cell.prev_r;
-        idx_cur = cell.prev_idx;
-        b_cur = next_b;
-    }
-    rev.reverse();
-
-    let mut stages = Vec::with_capacity(rev.len());
-    for (s_idx, &(j, i, b_end, r)) in rev.iter().enumerate() {
-        let candidate = cell_of(b_end, j, i).expect("winning cell vanished").clone();
-        let egress_bytes = cut_bytes[i];
-        let r_next = rev.get(s_idx + 1).map(|&(_, _, _, rn)| rn).unwrap_or(1);
-        let stage_fps = r as f64 * candidate.throughput_fps;
-        let this_run = SlotRun::new(b_end + 1 - r, r);
-        let next_run = SlotRun::new(b_end + 1, r_next);
-        stages.push(ShardStage {
-            stage: s_idx,
-            boards: (b_end + 1 - r..=b_end).collect(),
-            device: devices[b_end].clone(),
-            layer_range: (j, i),
-            candidate,
-            stage_fps,
-            egress_bytes,
-            egress_fps: topo.cut_throughput_fps(egress_bytes, this_run, next_run),
-        });
-    }
-
-    let total_ops: f64 = net
-        .layers
-        .iter()
-        .filter(|l| l.is_compute())
-        .map(|l| l.ops() as f64)
-        .sum();
-    let plan = ShardPlan {
-        network: net.name.clone(),
-        link: cfg.link,
-        fabric: cfg.fabric,
-        stages,
-        throughput_fps: final_fps,
-        gops: final_fps * total_ops / 1e9,
-        latency_s: final_latency,
-    };
-    // The DP's incremental mins/sums must agree with the closed-form
-    // interleave model bit-for-bit (same operations, same order).
-    #[cfg(debug_assertions)]
-    {
-        let (rates, slots, cuts) = (plan.stage_rates(), plan.slot_runs(), plan.cut_bytes());
-        debug_assert_eq!(
-            plan.throughput_fps.to_bits(),
-            interleave::steady_state_fps_on(&topo, &rates, &slots, &cuts).to_bits(),
-            "DP throughput disagrees with the interleave model"
-        );
-        debug_assert_eq!(
-            plan.latency_s.to_bits(),
-            interleave::frame_latency_s_on(&topo, &rates, &slots, &cuts).to_bits(),
-            "DP latency disagrees with the interleave model"
-        );
-    }
-    Some(plan)
+    Planner::new(net, devices, cfg, cache).plan(devices.len())
 }
 
 #[cfg(test)]
@@ -703,6 +1187,20 @@ mod tests {
             .conv(16, 3, 1, 1)
             .conv(16, 3, 1, 1)
             .build()
+    }
+
+    fn assert_plans_bit_identical(a: &ShardPlan, b: &ShardPlan) {
+        assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(a.gops.to_bits(), b.gops.to_bits());
+        assert_eq!(a.stages.len(), b.stages.len());
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(x.layer_range, y.layer_range);
+            assert_eq!(x.boards, y.boards);
+            assert_eq!(x.candidate.rav, y.candidate.rav);
+            assert_eq!(x.stage_fps.to_bits(), y.stage_fps.to_bits());
+            assert_eq!(x.egress_fps.to_bits(), y.egress_fps.to_bits());
+        }
     }
 
     #[test]
@@ -739,6 +1237,9 @@ mod tests {
         assert!(plan.stages[0].egress_bytes > 0.0);
         assert_eq!(plan.stages[1].egress_bytes, 0.0);
         assert!(plan.render().contains("e2e"));
+        assert!(plan.render().contains("search:"));
+        assert!(plan.stats.cells_evaluated > 0);
+        assert!(plan.stats.is_exact(), "p2p never beam-prunes");
     }
 
     #[test]
@@ -912,5 +1413,111 @@ mod tests {
             assert_eq!(x.layer_range, y.layer_range);
             assert_eq!(x.boards, y.boards);
         }
+    }
+
+    #[test]
+    fn exhaustive_and_bnb_agree_bitwise() {
+        // The headline equivalence on a non-trivial instance: 4 boards,
+        // replication allowed, a hotspot network where pruning actually
+        // fires. The generalized random-instance version lives in
+        // `tests/proptests.rs`.
+        let net = bottleneck_net();
+        let devices = vec![FpgaDevice::zcu102(); 4];
+        let mut ex = quick_cfg();
+        ex.max_replicas = 4;
+        ex.planner = PlannerMode::Exhaustive;
+        let mut bb = ex.clone();
+        bb.planner = PlannerMode::BranchAndBound;
+        let a = partition(&net, &devices, &ex, &EvalCache::new()).expect("exhaustive");
+        let b = partition(&net, &devices, &bb, &EvalCache::new()).expect("bnb");
+        assert_plans_bit_identical(&a, &b);
+        // And the pruned run did strictly less cell work.
+        assert!(b.stats.cells_evaluated <= a.stats.cells_evaluated);
+        assert!(b.stats.incumbent_fps > 0.0, "incumbent seed must be feasible here");
+    }
+
+    #[test]
+    fn bnb_prunes_link_starved_ranges_deterministically() {
+        // Three layers where the middle conv fans out to 512 channels:
+        // cutting *after* it pushes 32× the bytes of cutting before it.
+        // Over a 1 MB/s link the late cut's ceiling (an exact bound, no
+        // DSE slack involved) sits far below any plan using the early
+        // cut, so branch-and-bound must prune the two ranges only the
+        // late cut can reach — cell (0..2) and cell (2..3) — while the
+        // exhaustive planner evaluates all 4 reachable cells.
+        let net = NetworkBuilder::new("fanout", TensorShape::new(3, 64, 64), Precision::Int16)
+            .conv(16, 3, 1, 1)
+            .conv(512, 3, 1, 1)
+            .conv(16, 3, 1, 1)
+            .build();
+        let devices = vec![FpgaDevice::zcu102(), FpgaDevice::zcu102()];
+        let mut ex = quick_cfg();
+        ex.link = LinkModel::new(0.001, 1e-6);
+        ex.planner = PlannerMode::Exhaustive;
+        let mut bb = ex.clone();
+        bb.planner = PlannerMode::BranchAndBound;
+        let a = partition(&net, &devices, &ex, &EvalCache::new()).expect("exhaustive");
+        let b = partition(&net, &devices, &bb, &EvalCache::new()).expect("bnb");
+        assert_plans_bit_identical(&a, &b);
+        assert_eq!(a.stats.cells_evaluated, 4, "2 first-stage + 2 last-stage cells");
+        assert_eq!(b.stats.cells_evaluated, 2, "only the early-cut chain survives the bound");
+        assert_eq!(b.stats.cells_pruned, 1, "cell (0..2) is pruned before evaluation");
+        assert!(b.stats.transitions_pruned >= 1);
+        assert!(b.stats.incumbent_fps > 0.0);
+        // Both plans use the early cut — the late cut is link-starved.
+        assert_eq!(a.stages[0].layer_range, (0, 1));
+    }
+
+    #[test]
+    fn planner_memo_reuses_cells_across_prefix_calls() {
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(); 4];
+        // Exhaustive makes the cross-prefix cell overlap a structural
+        // guarantee (the 4-board wanted set contains 2-board cells);
+        // the B&B × memo composition is covered by the proptests.
+        let mut cfg = quick_cfg();
+        cfg.planner = PlannerMode::Exhaustive;
+        let cache = EvalCache::new();
+        let mut planner = Planner::new(&net, &devices, &cfg, &cache);
+        let p2 = planner.plan(2).expect("2 boards");
+        assert_eq!(p2.stats.cells_reused, 0, "first call has nothing to reuse");
+        let p4 = planner.plan(4).expect("4 boards");
+        assert!(
+            p4.stats.cells_reused > 0,
+            "the 4-board DP must reuse the 2-board prefix's cells"
+        );
+        // And the memo-reusing plan equals a fresh single-shot plan.
+        let fresh = partition(&net, &devices, &cfg, &EvalCache::new()).expect("fresh");
+        assert_plans_bit_identical(&fresh, &p4);
+        assert_eq!(planner.total_stats().cells_evaluated, planner.memo_len() as u64);
+    }
+
+    #[test]
+    fn forced_beam_cap_is_counted_not_silent() {
+        // A star fabric with a frontier cap of 1 must beam-prune on any
+        // instance whose Pareto sets exceed one entry — and say so.
+        let net = vgg(64);
+        let devices = vec![FpgaDevice::zcu102(); 3];
+        let mut cfg = quick_cfg();
+        // Exhaustive mode keeps every Pareto entry (no incumbent
+        // filtering), so the overfull frontier is guaranteed: early
+        // cuts trade high fps against heavy switch traffic, deep cuts
+        // the reverse — incomparable pairs at any mid-board cell.
+        cfg.planner = PlannerMode::Exhaustive;
+        cfg.fabric = FabricKind::Star { bisection_gbps: 0.05 };
+        cfg.fabric_frontier_cap = 1;
+        let capped = partition(&net, &devices, &cfg, &EvalCache::new()).expect("feasible");
+        assert!(
+            capped.stats.frontier_dropped > 0,
+            "cap=1 on a contended star must drop frontier entries"
+        );
+        assert!(!capped.stats.is_exact());
+        assert!(capped.render().contains("beam ("));
+        // The default cap is generous enough to stay exact here.
+        cfg.fabric_frontier_cap = 128;
+        let exact = partition(&net, &devices, &cfg, &EvalCache::new()).expect("feasible");
+        assert!(exact.stats.is_exact());
+        // Exact search never models worse than the beam.
+        assert!(exact.throughput_fps >= capped.throughput_fps);
     }
 }

@@ -1243,6 +1243,167 @@ fn prop_partition_on_p2p_and_mesh_is_bit_identical() {
     );
 }
 
+/// The PR-4-style guarantee, generalized: branch-and-bound pruning is a
+/// pure wall-clock optimization. Across random networks, device mixes,
+/// fabrics, and replication allowances it must return plans
+/// bit-identical to the exhaustive reference while never evaluating
+/// more DSE cells.
+#[test]
+fn prop_bnb_planner_bit_identical_to_exhaustive() {
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::{partition, PlannerMode};
+    use dnnexplorer::topo::FabricKind;
+
+    fn plan_key(p: &dnnexplorer::ShardPlan) -> Vec<u64> {
+        let mut k = vec![
+            p.throughput_fps.to_bits(),
+            p.latency_s.to_bits(),
+            p.gops.to_bits(),
+            p.stages.len() as u64,
+        ];
+        for s in &p.stages {
+            k.push(s.layer_range.0 as u64);
+            k.push(s.layer_range.1 as u64);
+            k.push(s.boards.len() as u64);
+            k.push(s.boards[0] as u64);
+            k.push(s.stage_fps.to_bits());
+            k.push(s.egress_fps.to_bits());
+            k.push(s.candidate.rav.sp as u64);
+        }
+        k
+    }
+
+    check(
+        "bnb plans == exhaustive plans, bitwise, across fabrics and clusters",
+        263,
+        6,
+        |r| {
+            let net = arb_small_net(r);
+            let boards = 2 + r.gen_index(3); // 2..4
+            let mix = r.gen_index(3);
+            let fabric = r.gen_index(5);
+            let maxr = 1 + r.gen_index(3); // 1..3
+            (net, boards, mix, fabric, maxr)
+        },
+        |(net, boards, mix, fabric, maxr)| {
+            let devices: Vec<FpgaDevice> = (0..*boards)
+                .map(|b| match *mix {
+                    0 => FpgaDevice::ku115(),
+                    1 => FpgaDevice::zc706(),
+                    // Heterogeneous: a same-device run, then the rest.
+                    _ if b < boards.div_ceil(2) => FpgaDevice::ku115(),
+                    _ => FpgaDevice::zc706(),
+                })
+                .collect();
+            let mut cfg = prop_shard_cfg();
+            cfg.max_replicas = *maxr;
+            cfg.fabric = match *fabric {
+                0 => FabricKind::PointToPoint,
+                1 => FabricKind::Ring,
+                2 => FabricKind::Star { bisection_gbps: 0.05 },
+                3 => FabricKind::Star { bisection_gbps: 2.0 },
+                _ => FabricKind::FullMesh,
+            };
+            cfg.planner = PlannerMode::Exhaustive;
+            let cache = EvalCache::new();
+            let reference = partition(net, &devices, &cfg, &cache);
+            cfg.planner = PlannerMode::BranchAndBound;
+            let fast = partition(net, &devices, &cfg, &cache);
+            match (reference, fast) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    if !a.stats.is_exact() || !b.stats.is_exact() {
+                        // Beam-capped searches don't claim equivalence
+                        // (and the default cap never binds at this
+                        // scale — reaching here would itself be a bug).
+                        return Err("frontier cap bound on a tiny cluster".into());
+                    }
+                    if b.stats.cells_evaluated > a.stats.cells_evaluated {
+                        return Err(format!(
+                            "bnb evaluated {} cells, exhaustive only {}",
+                            b.stats.cells_evaluated, a.stats.cells_evaluated
+                        ));
+                    }
+                    if plan_key(&a) != plan_key(&b) {
+                        return Err(format!(
+                            "plans diverge: {} vs {} fps ({:?} vs {:?})",
+                            a.throughput_fps,
+                            b.throughput_fps,
+                            a.stages.iter().map(|s| s.layer_range).collect::<Vec<_>>(),
+                            b.stages.iter().map(|s| s.layer_range).collect::<Vec<_>>()
+                        ));
+                    }
+                    Ok(())
+                }
+                (a, b) => Err(format!(
+                    "feasibility disagrees: exhaustive {:?} vs bnb {:?}",
+                    a.is_some(),
+                    b.is_some()
+                )),
+            }
+        },
+    );
+}
+
+/// Incremental prefix reuse is invisible in the results: one `Planner`
+/// sweeping 1/2/4/.../N boards must return exactly the plan a fresh
+/// `partition` over each prefix would — the memo only skips
+/// re-evaluating cells, never changes what they evaluate to.
+#[test]
+fn prop_sweep_incremental_matches_fresh_partitions() {
+    use dnnexplorer::dse::multi::sweep_counts;
+    use dnnexplorer::dse::EvalCache;
+    use dnnexplorer::shard::{partition, Planner};
+
+    check(
+        "Planner::plan(k) == fresh partition of the k-prefix, bitwise",
+        269,
+        4,
+        |r| (arb_small_net(r), 2 + r.gen_index(3), 1 + r.gen_index(2)),
+        |(net, boards, maxr)| {
+            let devices = vec![FpgaDevice::ku115(); *boards];
+            let mut cfg = prop_shard_cfg();
+            cfg.max_replicas = *maxr;
+            let shared = EvalCache::new();
+            let mut planner = Planner::new(net, &devices, &cfg, &shared);
+            for count in sweep_counts(devices.len()) {
+                let incremental = planner.plan(count);
+                let fresh = partition(net, &devices[..count], &cfg, &EvalCache::new());
+                match (&incremental, &fresh) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        if a.throughput_fps.to_bits() != b.throughput_fps.to_bits()
+                            || a.latency_s.to_bits() != b.latency_s.to_bits()
+                            || a.gops.to_bits() != b.gops.to_bits()
+                        {
+                            return Err(format!(
+                                "{count}-board prefix diverged: {} vs {} fps",
+                                a.throughput_fps, b.throughput_fps
+                            ));
+                        }
+                        for (x, y) in a.stages.iter().zip(&b.stages) {
+                            if x.layer_range != y.layer_range
+                                || x.boards != y.boards
+                                || x.candidate.rav != y.candidate.rav
+                            {
+                                return Err(format!("{count}-board structure diverged"));
+                            }
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "{count}-board feasibility disagrees: incremental {:?} vs fresh {:?}",
+                            incremental.is_some(),
+                            fresh.is_some()
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_one_board_shard_equals_single_fpga_model() {
     use dnnexplorer::dse::EvalCache;
