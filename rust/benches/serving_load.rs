@@ -13,12 +13,17 @@ use dnnexplorer::coordinator::synthetic::SpinServiceModel;
 use dnnexplorer::coordinator::{BatcherConfig, OverloadPolicy, QueueConfig};
 use dnnexplorer::runtime::executable::{ChainExecutor, HostTensor};
 use dnnexplorer::runtime::{ArtifactStore, Engine};
+use dnnexplorer::util::pace::Pacer;
 use dnnexplorer::util::rng::Rng;
 
 fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64) {
     let mut rng = Rng::seed_from_u64(seed);
     let mut clients = Vec::new();
     let start = Instant::now();
+    // One shared epoch; Pacer is Copy, so each client thread carries
+    // its own handle and the hybrid sleep/spin pacing keeps arrivals
+    // from quantizing to the scheduler tick.
+    let pacer = Pacer::new(start);
     let mut arrival = 0.0f64;
     for i in 0..n {
         // Poisson inter-arrival: -ln(U)/rate.
@@ -27,10 +32,7 @@ fn run_load(router: &Router, shape: &[usize], rate_hz: f64, n: usize, seed: u64)
         let shape = shape.to_vec();
         let wait = Duration::from_secs_f64(arrival);
         clients.push(std::thread::spawn(move || {
-            let target = start + wait;
-            if let Some(d) = target.checked_duration_since(Instant::now()) {
-                std::thread::sleep(d);
-            }
+            pacer.pace_until(wait);
             let mut f = HostTensor::zeros(&shape);
             for (j, v) in f.data.iter_mut().enumerate() {
                 *v = ((i * 17 + j) % 255) as f32 / 255.0;

@@ -46,11 +46,13 @@ pub enum RuleId {
     L007,
     /// Wall-clock `SystemTime::now()` on the serving/tracing path.
     L008,
+    /// Unseeded randomness in trace generation / benches.
+    L009,
 }
 
 impl RuleId {
     /// Every rule, in reporting order.
-    pub fn all() -> [RuleId; 8] {
+    pub fn all() -> [RuleId; 9] {
         [
             RuleId::L001,
             RuleId::L002,
@@ -60,6 +62,7 @@ impl RuleId {
             RuleId::L006,
             RuleId::L007,
             RuleId::L008,
+            RuleId::L009,
         ]
     }
 
@@ -75,6 +78,7 @@ impl RuleId {
             RuleId::L006 => "L006",
             RuleId::L007 => "L007",
             RuleId::L008 => "L008",
+            RuleId::L009 => "L009",
         }
     }
 
@@ -94,6 +98,7 @@ impl RuleId {
             RuleId::L006 => "raw floating-point equality",
             RuleId::L007 => "unnamed spawned thread",
             RuleId::L008 => "wall-clock SystemTime::now() on the serving/tracing path",
+            RuleId::L009 => "unseeded randomness in trace generation or benches",
         }
     }
 }

@@ -64,6 +64,10 @@ const SOCKET_OBTAIN: &[&str] = &["accept", "incoming", "connect", "bind"];
 const SOCKET_IO: &[&str] =
     &["read", "read_exact", "read_to_end", "read_to_string", "write", "write_all", "flush"];
 
+/// Calls that draw from host entropy, which L009 flags in deterministic
+/// scopes.
+const ENTROPY_CALLS: &[&str] = &["thread_rng", "from_entropy", "random"];
+
 /// Run one rule over one file.
 pub fn run(rule: RuleId, ctx: &FileContext) -> Vec<Finding> {
     match rule {
@@ -75,6 +79,7 @@ pub fn run(rule: RuleId, ctx: &FileContext) -> Vec<Finding> {
         RuleId::L006 => l006_float_equality(ctx),
         RuleId::L007 => l007_unnamed_thread(ctx),
         RuleId::L008 => l008_wall_clock_on_serving_path(ctx),
+        RuleId::L009 => l009_unseeded_randomness(ctx),
     }
 }
 
@@ -529,6 +534,77 @@ fn l008_wall_clock_on_serving_path(ctx: &FileContext) -> Vec<Finding> {
                 "`SystemTime::now()` on the serving/tracing path; the wall clock can \
                  step backwards — use `Instant` (against an epoch for absolute \
                  timestamps), or justify with `// lint: allow(L008, reason)`"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// L009 — host-entropy randomness under `workload/` or `benches/`.
+/// Those scopes promise bit-determinism: traces replay byte-identical
+/// from a seed, and bench runs reproduce across machines. Anything that
+/// draws from process entropy breaks that silently — `RandomState`
+/// (the std HashMap/HashSet default hasher, reseeded per process, so
+/// iteration order changes run to run), `thread_rng`/`from_entropy`/
+/// `random`, and wall-clock reads used as ad-hoc seeds. Use
+/// `util::rng::Rng::seed_from_u64` (with a per-item counter mix for
+/// parallel streams) and `BTreeMap`/`BTreeSet` for keyed collections.
+fn l009_unseeded_randomness(ctx: &FileContext) -> Vec<Finding> {
+    if !(ctx.path.contains("workload") || ctx.path.contains("benches")) {
+        return Vec::new();
+    }
+    let code = &ctx.code;
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.is_ident("RandomState") {
+            out.push(finding(
+                ctx,
+                RuleId::L009,
+                t.line,
+                "`RandomState` is reseeded from process entropy; deterministic scopes \
+                 need a fixed-seed hasher or an ordered collection"
+                    .to_string(),
+            ));
+        } else if (t.is_ident("HashMap") || t.is_ident("HashSet"))
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("::"))
+            && matches!(code.get(i + 2),
+                Some(u) if u.is_ident("new") || u.is_ident("with_capacity"))
+            && matches!(code.get(i + 3), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L009,
+                t.line,
+                format!(
+                    "`{}` hashes with per-process `RandomState`, so iteration order is \
+                     nondeterministic; use BTreeMap/BTreeSet in trace/bench code",
+                    t.text
+                ),
+            ));
+        } else if is_call_of(code, i, ENTROPY_CALLS) {
+            out.push(finding(
+                ctx,
+                RuleId::L009,
+                t.line,
+                format!(
+                    "`{}()` draws from host entropy; seed `util::rng::Rng::seed_from_u64` \
+                     from the spec so traces replay bit-identically",
+                    t.text
+                ),
+            ));
+        } else if t.is_ident("SystemTime")
+            && matches!(code.get(i + 1), Some(u) if u.is_punct("::"))
+            && matches!(code.get(i + 2), Some(u) if u.is_ident("now"))
+            && matches!(code.get(i + 3), Some(u) if u.is_punct("("))
+        {
+            out.push(finding(
+                ctx,
+                RuleId::L009,
+                t.line,
+                "wall-clock read in deterministic trace/bench code — a timestamp seed \
+                 makes every run unreproducible; thread the seed through the spec \
+                 instead, or justify with `// lint: allow(L009, reason)`"
                     .to_string(),
             ));
         }

@@ -23,6 +23,7 @@ pub mod registry;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::slo::SloConfig;
 use crate::coordinator::trace::TraceConfig;
 
 pub use aimd::{AimdConfig, AimdWindow};
@@ -59,4 +60,7 @@ pub struct ControlConfig {
     /// Frame tracing and latency decomposition; `None` (or a config
     /// with `sample_every == 0`) leaves the tracer out entirely.
     pub trace: Option<TraceConfig>,
+    /// Per-tenant SLO evaluation (error budgets, burn-rate alerts,
+    /// flight recorder); `None` leaves the engine out entirely.
+    pub slo: Option<SloConfig>,
 }

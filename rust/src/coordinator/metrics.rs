@@ -203,6 +203,18 @@ impl Metrics {
         self.latency.count()
     }
 
+    /// Snapshot of the per-bucket latency counts (the raw material for
+    /// histogram exposition and windowed SLO accounting — see
+    /// [`crate::coordinator::slo`]).
+    pub fn latency_counts(&self) -> [u64; BUCKET_COUNT] {
+        self.latency.counts()
+    }
+
+    /// Running sum of recorded latencies, microseconds.
+    pub fn latency_sum_us(&self) -> u64 {
+        self.latency.sum_us()
+    }
+
     /// Latency percentile from the histogram, microseconds,
     /// interpolated within the winning bucket (see
     /// [`percentile_from_counts`] — no longer snapped to the bucket's

@@ -35,6 +35,9 @@
 //!   ([`MetricsExporter`]): a Prometheus-style text dump over a plain
 //!   `TcpListener` (`dnnexplorer serve --metrics-port`), including the
 //!   sharded pipeline's per-link occupancy series.
+//! * [`slo`] — per-tenant SLO evaluation ([`SloEngine`]): error
+//!   budgets, multi-window burn-rate alerts, and the flight-recorder
+//!   ring behind `BENCH_serve_slo.json`.
 //! * [`synthetic`] — fixed-service-time executors shared by the
 //!   overload harnesses and tests.
 //! * [`trace`] — sampling frame tracer ([`Tracer`]): per-phase span
@@ -55,6 +58,7 @@ pub mod router;
 pub mod scrape;
 pub mod server;
 pub mod sharded;
+pub mod slo;
 pub mod synthetic;
 pub mod trace;
 
@@ -73,6 +77,7 @@ pub use router::Router;
 pub use scrape::MetricsExporter;
 pub use server::{AcceleratorServer, ModelExecutor, ServerHandle};
 pub use sharded::{LinkOccupancy, ShardedPipeline, StageSpec, StageTotals};
+pub use slo::{FleetSample, SloConfig, SloEngine, SloReport, SloSpec, TenantSloReport};
 pub use trace::{
     FrameTrace, Outcome, SpanKind, TraceConfig, TraceEvent, TraceRecord, TraceTarget, Tracer,
 };

@@ -36,7 +36,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, BUCKETS_US, BUCKET_COUNT};
 
 /// Append one metric line: `<prefix>_<name>{<labels>} <value>`.
 fn line(out: &mut String, prefix: &str, name: &str, labels: &str, value: f64) {
@@ -44,6 +44,165 @@ fn line(out: &mut String, prefix: &str, name: &str, labels: &str, value: f64) {
         out.push_str(&format!("{prefix}_{name} {value}\n"));
     } else {
         out.push_str(&format!("{prefix}_{name}{{{labels}}} {value}\n"));
+    }
+}
+
+/// Render one log-bucket count array as a complete Prometheus
+/// *histogram* family under `name`: cumulative `_bucket` series over
+/// [`BUCKETS_US`] with the mandatory terminal `le="+Inf"` bucket, plus
+/// `_sum` and `_count`. The terminal bucket equals `_count` by
+/// construction — the invariant [`check_conformance`] enforces over
+/// the whole scrape body.
+pub fn histogram_text(
+    out: &mut String,
+    name: &str,
+    labels: &str,
+    counts: &[u64; BUCKET_COUNT],
+    sum_us: u64,
+) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cumulative = 0u64;
+    for (i, &n) in counts.iter().enumerate() {
+        cumulative += n;
+        let le = match BUCKETS_US.get(i) {
+            Some(&b) => b.to_string(),
+            None => "+Inf".to_string(),
+        };
+        out.push_str(&format!("{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cumulative}\n"));
+    }
+    if labels.is_empty() {
+        out.push_str(&format!("{name}_sum {sum_us}\n"));
+        out.push_str(&format!("{name}_count {cumulative}\n"));
+    } else {
+        out.push_str(&format!("{name}_sum{{{labels}}} {sum_us}\n"));
+        out.push_str(&format!("{name}_count{{{labels}}} {cumulative}\n"));
+    }
+}
+
+/// One parsed exposition line: metric name, sorted labels, raw value.
+struct Series {
+    name: String,
+    labels: std::collections::BTreeMap<String, String>,
+    value: String,
+}
+
+/// Parse one `name{k="v",...} value` line; `None` when malformed.
+fn parse_series(l: &str) -> Option<Series> {
+    let (head, value) = l.rsplit_once(' ')?;
+    let (name, labels) = match head.split_once('{') {
+        Some((n, rest)) => {
+            let body = rest.strip_suffix('}')?;
+            let mut map = std::collections::BTreeMap::new();
+            if !body.is_empty() {
+                for pair in body.split(',') {
+                    let (k, v) = pair.split_once('=')?;
+                    let v = v.strip_prefix('"')?.strip_suffix('"')?;
+                    map.insert(k.to_string(), v.to_string());
+                }
+            }
+            (n.to_string(), map)
+        }
+        None => (head.to_string(), std::collections::BTreeMap::new()),
+    };
+    Some(Series { name, labels, value: value.to_string() })
+}
+
+/// Canonical key for a labelset with one label name removed.
+fn labelset_key(labels: &std::collections::BTreeMap<String, String>, drop: &str) -> String {
+    labels
+        .iter()
+        .filter(|(k, _)| k.as_str() != drop)
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Prometheus text-exposition conformance check over a full scrape
+/// body. Scrapers tolerate untyped bare series, but *incomplete*
+/// histogram/summary families break `histogram_quantile` and rate math
+/// silently, so every family in our output must be whole:
+///
+/// * every metric name matches `[a-zA-Z_:][a-zA-Z0-9_:]*`;
+/// * every sample value parses as a float;
+/// * every `<f>_bucket` family carries, per labelset, a terminal
+///   `le="+Inf"` bucket equal to `<f>_count`, plus `<f>_sum`;
+/// * every family with a `quantile` label (summary) carries, per
+///   labelset, `<f>_sum` and `<f>_count`.
+///
+/// Returns every violation found, not just the first.
+pub fn check_conformance(text: &str) -> Result<(), Vec<String>> {
+    let mut errors = Vec::new();
+    let mut all: Vec<Series> = Vec::new();
+    for (i, l) in text.lines().enumerate() {
+        let l = l.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        let Some(s) = parse_series(l) else {
+            errors.push(format!("line {}: malformed series {l:?}", i + 1));
+            continue;
+        };
+        let name_ok = !s.name.is_empty()
+            && s.name.chars().enumerate().all(|(j, c)| {
+                c.is_ascii_alphabetic() || c == '_' || c == ':' || (j > 0 && c.is_ascii_digit())
+            });
+        if !name_ok {
+            errors.push(format!("line {}: invalid metric name {:?}", i + 1, s.name));
+        }
+        if s.value.parse::<f64>().is_err() {
+            errors.push(format!("line {}: unparsable value {:?} for {}", i + 1, s.value, s.name));
+        }
+        all.push(s);
+    }
+
+    // Index every series by (name, labelset-minus-nothing) for lookups.
+    let find = |name: &str, key: &str, drop: &str| -> Option<&Series> {
+        all.iter().find(|s| s.name == name && labelset_key(&s.labels, drop) == key)
+    };
+
+    // Histogram families: anything emitting `_bucket`.
+    for s in all.iter().filter(|s| s.name.ends_with("_bucket")) {
+        let base = s.name.strip_suffix("_bucket").unwrap_or(&s.name);
+        let key = labelset_key(&s.labels, "le");
+        let Some(inf) = all.iter().find(|b| {
+            b.name == s.name
+                && b.labels.get("le").map(|v| v.as_str()) == Some("+Inf")
+                && labelset_key(&b.labels, "le") == key
+        }) else {
+            errors.push(format!("histogram {base}{{{key}}}: no terminal le=\"+Inf\" bucket"));
+            continue;
+        };
+        let count = find(&format!("{base}_count"), &key, "le");
+        let sum = find(&format!("{base}_sum"), &key, "le");
+        match (count, sum) {
+            (Some(c), Some(_)) => {
+                if c.value != inf.value {
+                    errors.push(format!(
+                        "histogram {base}{{{key}}}: +Inf bucket {} != _count {}",
+                        inf.value, c.value
+                    ));
+                }
+            }
+            _ => errors.push(format!("histogram {base}{{{key}}}: missing _sum or _count")),
+        }
+    }
+
+    // Summary families: anything with a `quantile` label.
+    for s in all.iter().filter(|s| s.labels.contains_key("quantile")) {
+        let key = labelset_key(&s.labels, "quantile");
+        let have_sum = find(&format!("{}_sum", s.name), &key, "quantile").is_some();
+        let have_count = find(&format!("{}_count", s.name), &key, "quantile").is_some();
+        if !have_sum || !have_count {
+            errors.push(format!("summary {}{{{key}}}: missing _sum or _count", s.name));
+        }
+    }
+
+    errors.sort();
+    errors.dedup();
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
     }
 }
 
@@ -245,5 +404,54 @@ mod tests {
         metrics_text(&mut out, "p", "", &m);
         assert!(out.contains("p_requests_total 0\n"), "{out}");
         assert!(!out.contains("{}"), "{out}");
+    }
+
+    #[test]
+    fn histogram_text_is_cumulative_and_complete() {
+        let m = Metrics::new();
+        m.record_success(Duration::from_micros(80));
+        m.record_success(Duration::from_micros(80));
+        m.record_success(Duration::from_micros(9_000_000)); // overflow bucket
+        let mut out = String::new();
+        let counts = m.latency_counts();
+        histogram_text(&mut out, "dnnx_lat_us", "tenant=\"t0\"", &counts, m.latency_sum_us());
+        assert!(out.contains("dnnx_lat_us_bucket{tenant=\"t0\",le=\"100\"} 2"), "{out}");
+        assert!(out.contains("dnnx_lat_us_bucket{tenant=\"t0\",le=\"+Inf\"} 3"), "{out}");
+        assert!(out.contains("dnnx_lat_us_count{tenant=\"t0\"} 3"), "{out}");
+        assert!(out.contains("dnnx_lat_us_sum{tenant=\"t0\"}"), "{out}");
+        check_conformance(&out).expect("rendered histogram conforms");
+    }
+
+    #[test]
+    fn conformance_accepts_whole_families_and_bare_series() {
+        let body = "\
+# HELP x_lat summary\n\
+x_lat{phase=\"admit\",quantile=\"0.5\"} 10\n\
+x_lat{phase=\"admit\",quantile=\"0.99\"} 20\n\
+x_lat_sum{phase=\"admit\"} 30\n\
+x_lat_count{phase=\"admit\"} 2\n\
+x_requests_total 5\n\
+x_h_bucket{le=\"100\"} 1\n\
+x_h_bucket{le=\"+Inf\"} 2\n\
+x_h_sum 120\n\
+x_h_count 2\n";
+        check_conformance(body).expect("whole families pass");
+    }
+
+    #[test]
+    fn conformance_rejects_incomplete_families() {
+        // Histogram without the terminal bucket.
+        let e = check_conformance("h_bucket{le=\"100\"} 1\nh_sum 1\nh_count 1\n").unwrap_err();
+        assert!(e.iter().any(|m| m.contains("+Inf")), "{e:?}");
+        // Histogram whose +Inf disagrees with _count.
+        let e = check_conformance("h_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 2\n").unwrap_err();
+        assert!(e.iter().any(|m| m.contains("!= _count")), "{e:?}");
+        // Summary missing _count.
+        let e = check_conformance("s{quantile=\"0.5\"} 1\ns_sum 1\n").unwrap_err();
+        assert!(e.iter().any(|m| m.contains("missing _sum or _count")), "{e:?}");
+        // Bad metric name and unparsable value.
+        let e = check_conformance("9bad 1\nok nope\n").unwrap_err();
+        assert!(e.iter().any(|m| m.contains("invalid metric name")), "{e:?}");
+        assert!(e.iter().any(|m| m.contains("unparsable value")), "{e:?}");
     }
 }

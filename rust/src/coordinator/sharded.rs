@@ -92,6 +92,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{QueueConfig, ServeError};
 use crate::coordinator::reorder::ReorderBuffer;
 use crate::coordinator::server::{AcceleratorServer, ModelExecutor, ServerHandle};
+use crate::coordinator::slo::{FleetSample, SloEngine, TenantSample};
 use crate::coordinator::trace::{FrameTrace, Outcome, SpanKind, TraceTarget, Tracer};
 use crate::runtime::executable::HostTensor;
 
@@ -274,6 +275,7 @@ struct PipelineControl {
     dedup: Option<Arc<DedupCoalescer>>,
     aimd: Option<Arc<AimdWindow>>,
     tracer: Option<Arc<Tracer>>,
+    slo: Option<Arc<SloEngine>>,
 }
 
 /// A chain of (replica groups of) per-board accelerator servers serving
@@ -411,6 +413,7 @@ impl ShardedPipeline {
             },
             aimd,
             tracer,
+            slo: cfg.slo.map(|c| Arc::new(SloEngine::new(c))),
         });
 
         // Forwarders are built back-to-front: forwarder i needs the
@@ -525,6 +528,87 @@ impl ShardedPipeline {
         self.control.tracer.as_ref()
     }
 
+    /// The SLO engine, when [`ControlConfig::slo`] was set.
+    pub fn slo(&self) -> Option<&Arc<SloEngine>> {
+        self.control.slo.as_ref()
+    }
+
+    /// Fold the live books into one [`FleetSample`]: front-queue depth,
+    /// in-flight window, replica liveness, and per-tenant cumulative
+    /// counters (the whole tenant table when one is wired, the e2e
+    /// books as a single `"all"` tenant otherwise).
+    pub fn fleet_sample(&self) -> FleetSample {
+        let tenants = match &self.control.tenants {
+            Some(table) => table
+                .classes()
+                .iter()
+                .enumerate()
+                .map(|(i, class)| {
+                    let m = table.metrics(i);
+                    TenantSample {
+                        name: class.name.clone(),
+                        requests: m.requests.load(Ordering::Relaxed),
+                        ok: m.ok_frames.load(Ordering::Relaxed),
+                        errors: m.errors.load(Ordering::Relaxed),
+                        shed: m.shed.load(Ordering::Relaxed),
+                        latency_counts: m.latency_counts(),
+                        latency_sum_us: m.latency_sum_us(),
+                    }
+                })
+                .collect(),
+            None => vec![TenantSample {
+                name: "all".to_string(),
+                requests: self.metrics.requests.load(Ordering::Relaxed),
+                ok: self.metrics.ok_frames.load(Ordering::Relaxed),
+                errors: self.metrics.errors.load(Ordering::Relaxed),
+                shed: self.metrics.shed.load(Ordering::Relaxed),
+                latency_counts: self.metrics.latency_counts(),
+                latency_sum_us: self.metrics.latency_sum_us(),
+            }],
+        };
+        let (live, total, ejections, readmissions) = match &self.control.registry {
+            Some(reg) => {
+                let mut live = 0u64;
+                let mut total = 0u64;
+                for s in 0..reg.stages() {
+                    live += reg.live_replicas(s).len() as u64;
+                    total += reg.replicas(s) as u64;
+                }
+                (live, total, reg.ejections(), reg.readmissions())
+            }
+            None => {
+                let total: u64 = self.stages.iter().map(|g| g.len() as u64).sum();
+                (total, total, 0, 0)
+            }
+        };
+        FleetSample {
+            queue_depth: self.stages[0].iter().map(|s| s.metrics.queue_depth()).sum(),
+            window: self.window.current().map(|w| w as u64),
+            in_flight: self.in_flight(),
+            live_replicas: live,
+            total_replicas: total,
+            ejections,
+            readmissions,
+            tenants,
+        }
+    }
+
+    /// Evaluate one SLO tick from the live books (no-op without an
+    /// engine). Call this periodically — the replayer's `on_tick` does.
+    pub fn slo_tick(&self) {
+        if let Some(engine) = &self.control.slo {
+            engine.tick(self.fleet_sample());
+        }
+    }
+
+    /// [`Self::slo_tick`] at an explicit campaign-relative timestamp,
+    /// so flight-recorder entries line up with trace arrival offsets.
+    pub fn slo_tick_at(&self, at: std::time::Duration) {
+        if let Some(engine) = &self.control.slo {
+            engine.tick_at(at, self.fleet_sample());
+        }
+    }
+
     /// The in-flight cap currently in force (`None` = unbounded).
     pub fn current_window(&self) -> Option<usize> {
         self.window.current()
@@ -608,6 +692,9 @@ impl ShardedPipeline {
             out.push_str(&format!("dnnx_pipeline_window {w}\n"));
         }
         out.push_str(&format!("dnnx_pipeline_in_flight {}\n", self.in_flight()));
+        if let Some(engine) = &self.control.slo {
+            engine.prometheus_text(&mut out);
+        }
         if let Some(t) = &self.control.tracer {
             t.phase_text(&mut out);
         }

@@ -1,0 +1,1042 @@
+//! Per-tenant SLO evaluation: error budgets, multi-window burn-rate
+//! alerts, and a flight recorder for post-hoc campaign forensics.
+//!
+//! An [`SloSpec`] states two objectives for one tenant class:
+//!
+//! * **latency** — at least `quantile` of completed requests finish
+//!   within `target_us` (the classic "p99 < 50ms");
+//! * **availability** — at least `availability` of submitted requests
+//!   resolve successfully (not shed, not errored).
+//!
+//! Each objective defines an **error budget**: the fraction of events
+//! allowed to violate it (`1 - quantile`, `1 - availability`). The
+//! engine folds the serving books ([`crate::coordinator::Metrics`] and
+//! the shared [`LogHistogram`] bucket counts) into cumulative
+//! good/bad tallies per tenant, and evaluates the **burn rate** — bad
+//! fraction divided by budget fraction — over two rolling windows in
+//! the Google-SRE style: a *fast* window (default 1 minute) that reacts
+//! quickly, and a *slow* window (default 10 minutes) that filters
+//! transients. The alert is active only while **both** windows burn
+//! above the threshold, so a one-tick spike cannot page and a sustained
+//! slow bleed cannot hide.
+//!
+//! The latency objective is evaluated against the log-bucket histogram:
+//! a completed request is "good" iff it landed in a bucket whose upper
+//! bound is at or below `target_us`, so targets on bucket bounds
+//! (see [`BUCKETS_US`]) are exact and anything else effectively rounds
+//! the target down to the nearest bound.
+//!
+//! ## Flight recorder
+//!
+//! Every tick also appends to a fixed-capacity ring: periodic fleet
+//! snapshots (queue depth, in-flight window, live replicas, per-tenant
+//! p50/p99/p999 and burn state) interleaved with control-plane
+//! **transitions** derived from counter deltas — replica ejections and
+//! readmissions, in-flight window changes, shed bursts, and the
+//! engine's own alert fire/clear edges. [`SloEngine::flight_json`]
+//! dumps the ring as a self-describing JSON timeline; the campaign
+//! bench embeds it in `BENCH_serve_slo.json`.
+//!
+//! Ticks are driven by the caller (the replayer's `on_tick`, a test's
+//! synthetic clock via [`SloEngine::tick_at`], or any periodic thread)
+//! — the engine owns no thread and touches only its own
+//! [`OrdMutex`]-guarded books, never the serving hot path.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{percentile_from_counts, BUCKETS_US, BUCKET_COUNT};
+use crate::util::json::Json;
+use crate::util::ordlock::{rank, OrdMutex};
+
+/// One tenant's service-level objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Tenant class name (or a decimal index into the tiered table,
+    /// e.g. `"0"` matches class `t0`).
+    pub tenant: String,
+    /// Latency objective in microseconds at [`SloSpec::quantile`].
+    pub target_us: u64,
+    /// Availability objective in (0, 1): minimum fraction of requests
+    /// that must resolve successfully.
+    pub availability: f64,
+    /// Latency quantile in (0, 1): minimum fraction of completed
+    /// requests that must finish within [`SloSpec::target_us`].
+    pub quantile: f64,
+}
+
+impl SloSpec {
+    /// Parse one `TENANT:P99_US:AVAIL[:QUANTILE]` clause.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3 || parts.len() == 4,
+            "SLO spec {s:?} wants TENANT:P99_US:AVAIL[:QUANTILE]"
+        );
+        let target_us: u64 = parts[1]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("SLO target in {s:?}: {e}"))?;
+        let availability: f64 = parts[2]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("SLO availability in {s:?}: {e}"))?;
+        let quantile: f64 = match parts.get(3) {
+            Some(q) => q.parse().map_err(|e| anyhow::anyhow!("SLO quantile in {s:?}: {e}"))?,
+            None => 0.99,
+        };
+        anyhow::ensure!(target_us > 0, "SLO target must be positive in {s:?}");
+        anyhow::ensure!(
+            availability > 0.0 && availability < 1.0,
+            "SLO availability must be in (0,1) in {s:?}"
+        );
+        anyhow::ensure!(
+            quantile > 0.0 && quantile < 1.0,
+            "SLO quantile must be in (0,1) in {s:?}"
+        );
+        Ok(Self { tenant: parts[0].to_string(), target_us, availability, quantile })
+    }
+
+    /// Parse a comma-separated clause list (`0:50000:0.999,1:100000:0.99`).
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<Self>> {
+        let mut out = Vec::new();
+        for clause in s.split(',').filter(|c| !c.is_empty()) {
+            out.push(Self::parse(clause)?);
+        }
+        anyhow::ensure!(!out.is_empty(), "empty SLO spec list");
+        Ok(out)
+    }
+
+    /// Does this spec govern the tenant class named `name` at `index`?
+    fn matches(&self, name: &str, index: usize) -> bool {
+        self.tenant == name || self.tenant.parse::<usize>() == Ok(index)
+    }
+}
+
+/// Engine configuration. `Default` gives the canonical SRE pairing —
+/// 1-minute fast window, 10-minute slow window — which campaign and
+/// test drivers compress via the explicit fields.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    pub specs: Vec<SloSpec>,
+    /// Fast burn window (reacts; default 60s).
+    pub fast_window: Duration,
+    /// Slow burn window (confirms; default 600s).
+    pub slow_window: Duration,
+    /// Both windows' burn rates must reach this for the alert to fire.
+    pub burn_threshold: f64,
+    /// Flight-recorder ring capacity (snapshots + transitions).
+    pub recorder_capacity: usize,
+    /// Minimum per-tick shed delta recorded as a `shed_burst`
+    /// transition.
+    pub shed_burst_min: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            specs: Vec::new(),
+            fast_window: Duration::from_secs(60),
+            slow_window: Duration::from_secs(600),
+            burn_threshold: 8.0,
+            recorder_capacity: 4096,
+            shed_burst_min: 32,
+        }
+    }
+}
+
+impl SloConfig {
+    /// A default objective per named tenant class: p99 under `target_us`
+    /// with 99.9% availability.
+    pub fn default_specs(names: &[String], target_us: u64) -> Vec<SloSpec> {
+        names
+            .iter()
+            .map(|n| SloSpec {
+                tenant: n.clone(),
+                target_us,
+                availability: 0.999,
+                quantile: 0.99,
+            })
+            .collect()
+    }
+}
+
+/// One tenant's cumulative books as sampled at a tick (all counters are
+/// totals since pipeline start, exactly as [`crate::coordinator::
+/// Metrics`] exposes them).
+#[derive(Debug, Clone)]
+pub struct TenantSample {
+    pub name: String,
+    pub requests: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub shed: u64,
+    pub latency_counts: [u64; BUCKET_COUNT],
+    pub latency_sum_us: u64,
+}
+
+/// One fleet-wide observation, assembled by
+/// [`crate::coordinator::ShardedPipeline::slo_tick`] (or synthesized by
+/// tests).
+#[derive(Debug, Clone, Default)]
+pub struct FleetSample {
+    pub queue_depth: u64,
+    /// Current in-flight cap; `None` = unbounded.
+    pub window: Option<u64>,
+    pub in_flight: u64,
+    pub live_replicas: u64,
+    pub total_replicas: u64,
+    pub ejections: u64,
+    pub readmissions: u64,
+    pub tenants: Vec<TenantSample>,
+}
+
+impl Default for TenantSample {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            requests: 0,
+            ok: 0,
+            errors: 0,
+            shed: 0,
+            latency_counts: [0; BUCKET_COUNT],
+            latency_sum_us: 0,
+        }
+    }
+}
+
+/// Cumulative good/bad tallies for one spec at one tick.
+#[derive(Debug, Clone, Copy, Default)]
+struct Cum {
+    lat_bad: u64,
+    lat_total: u64,
+    avail_bad: u64,
+    avail_total: u64,
+}
+
+/// One ring entry of per-tick history (window math reads deltas between
+/// two of these).
+struct TickPoint {
+    at_us: u64,
+    per_spec: Vec<Cum>,
+    counts: Vec<[u64; BUCKET_COUNT]>,
+}
+
+/// Latest per-spec evaluation (what the gauges and the report read).
+#[derive(Debug, Clone, Default)]
+struct SpecState {
+    fast_burn: f64,
+    slow_burn: f64,
+    budget_remaining: f64,
+    alert_active: bool,
+    alerts_fired: u64,
+    last: Cum,
+}
+
+/// Flight-recorder entry.
+enum FlightEntry {
+    Snapshot {
+        at_us: u64,
+        queue_depth: u64,
+        window: Option<u64>,
+        in_flight: u64,
+        live_replicas: u64,
+        total_replicas: u64,
+        tenants: Vec<TenantSnap>,
+    },
+    Transition {
+        at_us: u64,
+        kind: &'static str,
+        detail: String,
+    },
+}
+
+/// Per-tenant slice of one snapshot.
+struct TenantSnap {
+    tenant: String,
+    p50: u64,
+    p99: u64,
+    p999: u64,
+    fast_burn: f64,
+    slow_burn: f64,
+    budget_remaining: f64,
+    alert: bool,
+}
+
+struct SloState {
+    history: VecDeque<TickPoint>,
+    specs: Vec<SpecState>,
+    ring: VecDeque<FlightEntry>,
+    prev_fleet: Option<FleetSample>,
+    ticks: u64,
+}
+
+/// The evaluator. One per pipeline; see the module docs for the model.
+pub struct SloEngine {
+    cfg: SloConfig,
+    epoch: Instant,
+    state: OrdMutex<SloState>,
+}
+
+/// Count of histogram events at or under `target_us` (whole buckets
+/// only — see the module docs on bound alignment).
+fn good_under(counts: &[u64; BUCKET_COUNT], target_us: u64) -> u64 {
+    counts
+        .iter()
+        .take(BUCKETS_US.len())
+        .zip(BUCKETS_US.iter())
+        .filter(|(_, &bound)| bound <= target_us)
+        .map(|(&n, _)| n)
+        .sum()
+}
+
+/// Burn rate of one objective over a window delta: bad fraction over
+/// budget fraction (0 when nothing happened in the window).
+fn burn(bad: u64, total: u64, budget: f64) -> f64 {
+    if total == 0 || budget <= 0.0 {
+        return 0.0;
+    }
+    (bad as f64 / total as f64) / budget
+}
+
+impl SloEngine {
+    pub fn new(cfg: SloConfig) -> Self {
+        let specs = cfg.specs.iter().map(|_| SpecState::default()).collect();
+        Self {
+            cfg,
+            epoch: Instant::now(),
+            state: OrdMutex::new(
+                rank::SLO_STATE,
+                "SloEngine::state",
+                SloState {
+                    history: VecDeque::new(),
+                    specs,
+                    ring: VecDeque::new(),
+                    prev_fleet: None,
+                    ticks: 0,
+                },
+            ),
+        }
+    }
+
+    /// The configured objectives, in spec order.
+    pub fn specs(&self) -> &[SloSpec] {
+        &self.cfg.specs
+    }
+
+    /// Evaluate one observation against the engine's own monotonic
+    /// clock.
+    pub fn tick(&self, sample: FleetSample) {
+        self.tick_at(self.epoch.elapsed(), sample);
+    }
+
+    /// [`Self::tick`] with an explicit campaign-relative timestamp —
+    /// the synthetic-clock hook the burn-rate tests drive, and what the
+    /// trace replayer uses so recorder timestamps line up with trace
+    /// arrival times.
+    pub fn tick_at(&self, at: Duration, sample: FleetSample) {
+        let at_us = at.as_micros() as u64;
+        let mut st = self.state.lock();
+        st.ticks += 1;
+
+        // Fold the sample into cumulative per-spec tallies.
+        let mut per_spec = Vec::with_capacity(self.cfg.specs.len());
+        let mut counts = Vec::with_capacity(self.cfg.specs.len());
+        for (si, spec) in self.cfg.specs.iter().enumerate() {
+            let found = sample
+                .tenants
+                .iter()
+                .enumerate()
+                .find(|(i, t)| spec.matches(&t.name, *i));
+            let (cum, cnt) = match found {
+                Some((_i, t)) => {
+                    let completed: u64 = t.latency_counts.iter().sum();
+                    let good = good_under(&t.latency_counts, spec.target_us);
+                    (
+                        Cum {
+                            lat_bad: completed.saturating_sub(good),
+                            lat_total: completed,
+                            avail_bad: t.errors + t.shed,
+                            avail_total: t.ok + t.errors + t.shed,
+                        },
+                        t.latency_counts,
+                    )
+                }
+                None => (st.specs[si].last, [0u64; BUCKET_COUNT]),
+            };
+            per_spec.push(cum);
+            counts.push(cnt);
+        }
+
+        // Window anchors: the earliest retained point not older than
+        // each window (when history is shorter than a window, the
+        // oldest point stands in — standard burn-rate warm-up).
+        let anchor = |st: &SloState, window: Duration| -> Option<usize> {
+            let horizon = at_us.saturating_sub(window.as_micros() as u64);
+            let mut pick = None;
+            for (i, p) in st.history.iter().enumerate() {
+                if p.at_us >= horizon {
+                    pick = Some(i);
+                    break;
+                }
+            }
+            pick.or(if st.history.is_empty() { None } else { Some(0) })
+        };
+        let fast_i = anchor(&st, self.cfg.fast_window);
+        let slow_i = anchor(&st, self.cfg.slow_window.max(self.cfg.fast_window));
+
+        let mut edges: Vec<(usize, bool)> = Vec::new();
+        for (si, spec) in self.cfg.specs.iter().enumerate() {
+            let now = per_spec[si];
+            let windowed = |idx: Option<usize>| -> Cum {
+                match idx.and_then(|i| st.history.get(i)) {
+                    Some(p) => {
+                        let then = p.per_spec.get(si).copied().unwrap_or_default();
+                        Cum {
+                            lat_bad: now.lat_bad.saturating_sub(then.lat_bad),
+                            lat_total: now.lat_total.saturating_sub(then.lat_total),
+                            avail_bad: now.avail_bad.saturating_sub(then.avail_bad),
+                            avail_total: now.avail_total.saturating_sub(then.avail_total),
+                        }
+                    }
+                    None => now,
+                }
+            };
+            let burn_of = |w: Cum| -> f64 {
+                let lat = burn(w.lat_bad, w.lat_total, 1.0 - spec.quantile);
+                let avail = burn(w.avail_bad, w.avail_total, 1.0 - spec.availability);
+                lat.max(avail)
+            };
+            let fast = burn_of(windowed(fast_i));
+            let slow = burn_of(windowed(slow_i));
+
+            // Cumulative error budget (campaign-lifetime): consumed bad
+            // events against the events the budget fraction allows.
+            let lat_allowed = (1.0 - spec.quantile) * now.lat_total as f64;
+            let avail_allowed = (1.0 - spec.availability) * now.avail_total as f64;
+            let lat_left =
+                if lat_allowed > 0.0 { 1.0 - now.lat_bad as f64 / lat_allowed } else { 1.0 };
+            let avail_left = if avail_allowed > 0.0 {
+                1.0 - now.avail_bad as f64 / avail_allowed
+            } else {
+                1.0
+            };
+
+            let was = st.specs[si].alert_active;
+            let active = fast >= self.cfg.burn_threshold && slow >= self.cfg.burn_threshold;
+            let s = &mut st.specs[si];
+            s.fast_burn = fast;
+            s.slow_burn = slow;
+            // Clamped: a blown budget reads 0.0, not an unbounded
+            // negative (the gauge and the report both promise [0, 1]).
+            s.budget_remaining = lat_left.min(avail_left).clamp(0.0, 1.0);
+            s.last = now;
+            s.alert_active = active;
+            if active && !was {
+                s.alerts_fired += 1;
+                edges.push((si, true));
+            } else if !active && was {
+                edges.push((si, false));
+            }
+        }
+
+        // ── Flight recorder ─────────────────────────────────────────
+        // Transitions first (they explain the snapshot that follows).
+        let mut record = |st: &mut SloState, e: FlightEntry| {
+            if st.ring.len() >= self.cfg.recorder_capacity.max(1) {
+                st.ring.pop_front(); // evict oldest: fixed-capacity ring
+            }
+            st.ring.push_back(e);
+        };
+        let fleet_deltas = st.prev_fleet.as_ref().map(|prev| {
+            let shed_now: u64 = sample.tenants.iter().map(|t| t.shed).sum();
+            let shed_then: u64 = prev.tenants.iter().map(|t| t.shed).sum();
+            (
+                sample.ejections.saturating_sub(prev.ejections),
+                sample.readmissions.saturating_sub(prev.readmissions),
+                shed_now.saturating_sub(shed_then),
+                prev.window,
+            )
+        });
+        if let Some((ej, re, shed_delta, prev_window)) = fleet_deltas {
+            let window_change = prev_window != sample.window;
+            if ej > 0 {
+                record(
+                    &mut st,
+                    FlightEntry::Transition {
+                        at_us,
+                        kind: "eject",
+                        detail: format!("{ej} replica(s) ejected"),
+                    },
+                );
+            }
+            if re > 0 {
+                record(
+                    &mut st,
+                    FlightEntry::Transition {
+                        at_us,
+                        kind: "readmit",
+                        detail: format!("{re} replica(s) readmitted"),
+                    },
+                );
+            }
+            if window_change {
+                record(
+                    &mut st,
+                    FlightEntry::Transition {
+                        at_us,
+                        kind: "window",
+                        detail: format!("{prev_window:?} -> {:?}", sample.window),
+                    },
+                );
+            }
+            if shed_delta >= self.cfg.shed_burst_min {
+                record(
+                    &mut st,
+                    FlightEntry::Transition {
+                        at_us,
+                        kind: "shed_burst",
+                        detail: format!("{shed_delta} shed this tick"),
+                    },
+                );
+            }
+        }
+        for (si, fired) in edges {
+            let tenant = self.cfg.specs[si].tenant.clone();
+            let (fast, slow) = (st.specs[si].fast_burn, st.specs[si].slow_burn);
+            record(
+                &mut st,
+                FlightEntry::Transition {
+                    at_us,
+                    kind: if fired { "alert_fire" } else { "alert_clear" },
+                    detail: format!("tenant {tenant}: fast {fast:.1}x slow {slow:.1}x"),
+                },
+            );
+        }
+        // Snapshot: windowed percentiles over the fast window when it
+        // has data, cumulative otherwise.
+        let snaps: Vec<TenantSnap> = self
+            .cfg
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(si, spec)| {
+                let s = &st.specs[si];
+                let cum = counts.get(si).copied().unwrap_or([0; BUCKET_COUNT]);
+                let windowed = match fast_i.and_then(|i| st.history.get(i)) {
+                    Some(p) => {
+                        let then = p.counts.get(si).copied().unwrap_or([0; BUCKET_COUNT]);
+                        let mut d = [0u64; BUCKET_COUNT];
+                        for (o, (a, b)) in d.iter_mut().zip(cum.iter().zip(then.iter())) {
+                            *o = a.saturating_sub(*b);
+                        }
+                        if d.iter().all(|&x| x == 0) {
+                            cum
+                        } else {
+                            d
+                        }
+                    }
+                    None => cum,
+                };
+                TenantSnap {
+                    tenant: spec.tenant.clone(),
+                    p50: percentile_from_counts(&windowed, 0.5),
+                    p99: percentile_from_counts(&windowed, 0.99),
+                    p999: percentile_from_counts(&windowed, 0.999),
+                    fast_burn: s.fast_burn,
+                    slow_burn: s.slow_burn,
+                    budget_remaining: s.budget_remaining,
+                    alert: s.alert_active,
+                }
+            })
+            .collect();
+        record(
+            &mut st,
+            FlightEntry::Snapshot {
+                at_us,
+                queue_depth: sample.queue_depth,
+                window: sample.window,
+                in_flight: sample.in_flight,
+                live_replicas: sample.live_replicas,
+                total_replicas: sample.total_replicas,
+                tenants: snaps,
+            },
+        );
+
+        // Retire history beyond the slow window (plus one anchor point
+        // so a full window is always spannable), bounded hard as well.
+        let horizon = at_us.saturating_sub(self.cfg.slow_window.as_micros() as u64);
+        while st.history.len() > 1 {
+            let drop_front = match (st.history.front(), st.history.get(1)) {
+                (Some(f), Some(s)) => f.at_us < horizon && s.at_us <= horizon,
+                _ => false,
+            };
+            if !drop_front {
+                break;
+            }
+            st.history.pop_front(); // aged out past the slow window
+        }
+        while st.history.len() >= 1 << 16 {
+            st.history.pop_front(); // hard cap against pathological tick rates
+        }
+        st.history.push_back(TickPoint { at_us, per_spec, counts });
+        st.prev_fleet = Some(sample);
+    }
+
+    /// Is the multi-window alert currently active for `tenant` (a spec
+    /// tenant name)?
+    pub fn alert_active(&self, tenant: &str) -> bool {
+        let st = self.state.lock();
+        self.cfg
+            .specs
+            .iter()
+            .zip(st.specs.iter())
+            .any(|(spec, s)| spec.tenant == tenant && s.alert_active)
+    }
+
+    /// Ticks evaluated so far.
+    pub fn ticks(&self) -> u64 {
+        self.state.lock().ticks
+    }
+
+    /// Append the `dnnx_slo_*` series: per-tenant budget gauge, fast and
+    /// slow burn rates, alert state, alert count, and the complete
+    /// per-tenant latency histogram family (cumulative, from the last
+    /// tick's sample).
+    pub fn prometheus_text(&self, out: &mut String) {
+        let st = self.state.lock();
+        out.push_str("# HELP dnnx_slo_budget_remaining fraction of the error budget left\n");
+        out.push_str("# TYPE dnnx_slo_budget_remaining gauge\n");
+        for (spec, s) in self.cfg.specs.iter().zip(st.specs.iter()) {
+            out.push_str(&format!(
+                "dnnx_slo_budget_remaining{{tenant=\"{}\"}} {}\n",
+                spec.tenant, s.budget_remaining
+            ));
+        }
+        out.push_str("# TYPE dnnx_slo_burn_rate gauge\n");
+        for (spec, s) in self.cfg.specs.iter().zip(st.specs.iter()) {
+            out.push_str(&format!(
+                "dnnx_slo_burn_rate{{tenant=\"{}\",window=\"fast\"}} {}\n",
+                spec.tenant, s.fast_burn
+            ));
+            out.push_str(&format!(
+                "dnnx_slo_burn_rate{{tenant=\"{}\",window=\"slow\"}} {}\n",
+                spec.tenant, s.slow_burn
+            ));
+        }
+        out.push_str("# TYPE dnnx_slo_alert_active gauge\n");
+        for (spec, s) in self.cfg.specs.iter().zip(st.specs.iter()) {
+            out.push_str(&format!(
+                "dnnx_slo_alert_active{{tenant=\"{}\"}} {}\n",
+                spec.tenant,
+                if s.alert_active { 1 } else { 0 }
+            ));
+            out.push_str(&format!(
+                "dnnx_slo_alerts_total{{tenant=\"{}\"}} {}\n",
+                spec.tenant, s.alerts_fired
+            ));
+        }
+        // The per-tenant latency distribution as a *whole* histogram
+        // family (terminal +Inf == _count; see scrape::check_conformance).
+        if let Some(last) = st.history.back() {
+            out.push_str("# TYPE dnnx_slo_latency_us histogram\n");
+            for (si, spec) in self.cfg.specs.iter().enumerate() {
+                if let Some(cnt) = last.counts.get(si) {
+                    crate::coordinator::scrape::histogram_text(
+                        out,
+                        "dnnx_slo_latency_us",
+                        &format!("tenant=\"{}\"", spec.tenant),
+                        cnt,
+                        0, // sum tracked on the Metrics block, not re-derivable per spec here
+                    );
+                }
+            }
+        }
+    }
+
+    /// The flight-recorder ring as a self-describing JSON timeline.
+    pub fn flight_json(&self) -> Json {
+        let st = self.state.lock();
+        let entries: Vec<Json> = st
+            .ring
+            .iter()
+            .map(|e| match e {
+                FlightEntry::Snapshot {
+                    at_us,
+                    queue_depth,
+                    window,
+                    in_flight,
+                    live_replicas,
+                    total_replicas,
+                    tenants,
+                } => Json::obj(vec![
+                    ("kind", Json::s("snapshot")),
+                    ("at_us", Json::n(*at_us as f64)),
+                    ("queue_depth", Json::n(*queue_depth as f64)),
+                    (
+                        "window",
+                        match window {
+                            Some(w) => Json::n(*w as f64),
+                            None => Json::s("unbounded"),
+                        },
+                    ),
+                    ("in_flight", Json::n(*in_flight as f64)),
+                    ("live_replicas", Json::n(*live_replicas as f64)),
+                    ("total_replicas", Json::n(*total_replicas as f64)),
+                    (
+                        "tenants",
+                        Json::Arr(
+                            tenants
+                                .iter()
+                                .map(|t| {
+                                    Json::obj(vec![
+                                        ("tenant", Json::s(t.tenant.clone())),
+                                        ("p50_us", Json::n(t.p50 as f64)),
+                                        ("p99_us", Json::n(t.p99 as f64)),
+                                        ("p999_us", Json::n(t.p999 as f64)),
+                                        ("fast_burn", Json::n(t.fast_burn)),
+                                        ("slow_burn", Json::n(t.slow_burn)),
+                                        ("budget_remaining", Json::n(t.budget_remaining)),
+                                        ("alert", Json::Bool(t.alert)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+                FlightEntry::Transition { at_us, kind, detail } => Json::obj(vec![
+                    ("kind", Json::s("transition")),
+                    ("at_us", Json::n(*at_us as f64)),
+                    ("transition", Json::s(kind.to_string())),
+                    ("detail", Json::s(detail.clone())),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::s("dnnx-flight-v1")),
+            ("capacity", Json::n(self.cfg.recorder_capacity as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Final per-tenant verdicts for the campaign table and artifact.
+    pub fn report(&self) -> SloReport {
+        let st = self.state.lock();
+        let tenants = self
+            .cfg
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(si, spec)| {
+                let s = &st.specs[si];
+                let counts = st
+                    .history
+                    .back()
+                    .and_then(|p| p.counts.get(si).copied())
+                    .unwrap_or([0; BUCKET_COUNT]);
+                TenantSloReport {
+                    tenant: spec.tenant.clone(),
+                    target_us: spec.target_us,
+                    quantile: spec.quantile,
+                    availability: spec.availability,
+                    completed: s.last.lat_total,
+                    accounted: s.last.avail_total,
+                    over_target: s.last.lat_bad,
+                    unavailable: s.last.avail_bad,
+                    p50: percentile_from_counts(&counts, 0.5),
+                    p99: percentile_from_counts(&counts, 0.99),
+                    p999: percentile_from_counts(&counts, 0.999),
+                    budget_remaining: s.budget_remaining,
+                    fast_burn: s.fast_burn,
+                    slow_burn: s.slow_burn,
+                    alert_active: s.alert_active,
+                    alerts_fired: s.alerts_fired,
+                }
+            })
+            .collect();
+        SloReport { tenants }
+    }
+}
+
+/// Campaign-end SLO verdicts, one row per spec.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub tenants: Vec<TenantSloReport>,
+}
+
+/// One tenant's final verdict.
+#[derive(Debug, Clone)]
+pub struct TenantSloReport {
+    pub tenant: String,
+    pub target_us: u64,
+    pub quantile: f64,
+    pub availability: f64,
+    /// Requests that completed with a latency sample.
+    pub completed: u64,
+    /// Requests that resolved at all (ok + errors + shed).
+    pub accounted: u64,
+    /// Completions over the latency target.
+    pub over_target: u64,
+    /// Errors + shed (availability violations).
+    pub unavailable: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub budget_remaining: f64,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub alert_active: bool,
+    pub alerts_fired: u64,
+}
+
+impl TenantSloReport {
+    /// Render as one JSON object (the `BENCH_serve_slo.json` row).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::s(self.tenant.clone())),
+            ("target_us", Json::n(self.target_us as f64)),
+            ("quantile", Json::n(self.quantile)),
+            ("availability", Json::n(self.availability)),
+            ("completed", Json::n(self.completed as f64)),
+            ("accounted", Json::n(self.accounted as f64)),
+            ("over_target", Json::n(self.over_target as f64)),
+            ("unavailable", Json::n(self.unavailable as f64)),
+            ("p50_us", Json::n(self.p50 as f64)),
+            ("p99_us", Json::n(self.p99 as f64)),
+            ("p999_us", Json::n(self.p999 as f64)),
+            ("budget_remaining", Json::n(self.budget_remaining)),
+            ("fast_burn", Json::n(self.fast_burn)),
+            ("slow_burn", Json::n(self.slow_burn)),
+            ("alert_active", Json::Bool(self.alert_active)),
+            ("alerts_fired", Json::n(self.alerts_fired as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::bucket_index;
+
+    fn cfg() -> SloConfig {
+        SloConfig {
+            specs: vec![SloSpec {
+                tenant: "t0".into(),
+                target_us: 50_000,
+                availability: 0.99,
+                quantile: 0.99,
+            }],
+            fast_window: Duration::from_secs(1),
+            slow_window: Duration::from_secs(5),
+            burn_threshold: 4.0,
+            recorder_capacity: 64,
+            shed_burst_min: 10,
+        }
+    }
+
+    /// Build a *cumulative* sample: `ok` completions at `lat_us` each
+    /// plus `shed` refusals, totals since start.
+    fn sample(ok: u64, lat_us: u64, shed: u64) -> FleetSample {
+        let mut counts = [0u64; BUCKET_COUNT];
+        counts[bucket_index(lat_us)] = ok;
+        FleetSample {
+            tenants: vec![TenantSample {
+                name: "t0".into(),
+                requests: ok + shed,
+                ok,
+                errors: 0,
+                shed,
+                latency_counts: counts,
+                latency_sum_us: ok * lat_us,
+            }],
+            ..Default::default()
+        }
+    }
+
+    fn at(ms: u64) -> Duration {
+        Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn spec_parsing_accepts_and_rejects() {
+        let specs = SloSpec::parse_list("0:50000:0.999,t1:100000:0.99:0.95").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].target_us, 50_000);
+        assert_eq!(specs[0].quantile, 0.99); // default
+        assert_eq!(specs[1].quantile, 0.95);
+        assert!(SloSpec::parse("t0:0:0.9").is_err()); // zero target
+        assert!(SloSpec::parse("t0:100:1.5").is_err()); // availability out of range
+        assert!(SloSpec::parse("t0").is_err()); // too few fields
+        assert!(SloSpec::parse_list("").is_err());
+    }
+
+    #[test]
+    fn steady_state_within_budget_stays_silent() {
+        let eng = SloEngine::new(cfg());
+        // 50 ticks at 200ms cadence: each adds 1000 fast completions
+        // and one shed — 0.1% unavailability against a 1% budget.
+        for i in 1..=50u64 {
+            eng.tick_at(at(i * 200), sample(i * 1000, 10_000, i));
+        }
+        assert!(!eng.alert_active("t0"));
+        let rep = eng.report();
+        assert_eq!(rep.tenants.len(), 1);
+        let t = &rep.tenants[0];
+        assert!(t.fast_burn < 1.0, "fast burn {} should be fractional", t.fast_burn);
+        assert!(t.slow_burn < 1.0, "slow burn {} should be fractional", t.slow_burn);
+        assert!(
+            t.budget_remaining > 0.5,
+            "budget {} should be mostly intact",
+            t.budget_remaining
+        );
+        assert_eq!(t.alerts_fired, 0);
+        assert_eq!(eng.ticks(), 50);
+    }
+
+    #[test]
+    fn induced_overload_fires_alert_and_recovery_clears_it() {
+        let eng = SloEngine::new(cfg());
+        let mut ok = 0u64;
+        let mut shed = 0u64;
+        // Phase 1: 2s of healthy traffic.
+        for i in 1..=10u64 {
+            ok += 1000;
+            eng.tick_at(at(i * 200), sample(ok, 10_000, shed));
+        }
+        // Phase 2: sustained overload — 30% of traffic shed, far past
+        // the 1% availability budget in both windows.
+        for i in 11..=40u64 {
+            ok += 700;
+            shed += 300;
+            eng.tick_at(at(i * 200), sample(ok, 10_000, shed));
+        }
+        assert!(eng.alert_active("t0"), "overload must trip both burn windows");
+        let mid = eng.report();
+        assert!(mid.tenants[0].alerts_fired >= 1);
+        assert!(mid.tenants[0].fast_burn >= 4.0);
+        assert!(mid.tenants[0].slow_burn >= 4.0);
+        // Phase 3: recovery — both windows drain and the alert clears.
+        for i in 41..=100u64 {
+            ok += 1000;
+            eng.tick_at(at(i * 200), sample(ok, 10_000, shed));
+        }
+        assert!(!eng.alert_active("t0"), "recovery must clear the alert");
+        let flight = eng.flight_json().render();
+        assert!(flight.contains("alert_fire"), "recorder should hold the fire edge");
+        assert!(flight.contains("alert_clear"), "recorder should hold the clear edge");
+        assert!(flight.contains("shed_burst"), "recorder should note the shed bursts");
+    }
+
+    #[test]
+    fn fast_spike_alone_does_not_page() {
+        let eng = SloEngine::new(cfg());
+        let mut ok = 0u64;
+        // Fill well past the slow window with healthy traffic.
+        for i in 1..=30u64 {
+            ok += 1000;
+            eng.tick_at(at(i * 200), sample(ok, 10_000, 0));
+        }
+        // One bad tick: 50% shed — the fast window burns hot, but the
+        // slow window still averages healthy, so no page.
+        ok += 500;
+        eng.tick_at(at(31 * 200), sample(ok, 10_000, 500));
+        let rep = eng.report();
+        assert!(
+            rep.tenants[0].fast_burn >= 4.0,
+            "fast burn {} should spike",
+            rep.tenants[0].fast_burn
+        );
+        assert!(
+            rep.tenants[0].slow_burn < 4.0,
+            "slow burn {} should stay calm",
+            rep.tenants[0].slow_burn
+        );
+        assert!(!eng.alert_active("t0"), "single-window spike must not page");
+    }
+
+    #[test]
+    fn latency_objective_burns_independently_of_availability() {
+        let eng = SloEngine::new(cfg());
+        // Everything "succeeds" but 20% of completions land over the
+        // 50ms target: the latency budget (1%) burns at 20x.
+        let mut fast = 0u64;
+        let mut slow = 0u64;
+        for i in 1..=30u64 {
+            fast += 800;
+            slow += 200;
+            let mut counts = [0u64; BUCKET_COUNT];
+            counts[bucket_index(10_000)] = fast;
+            counts[bucket_index(90_000)] = slow;
+            eng.tick_at(
+                at(i * 200),
+                FleetSample {
+                    tenants: vec![TenantSample {
+                        name: "t0".into(),
+                        requests: fast + slow,
+                        ok: fast + slow,
+                        errors: 0,
+                        shed: 0,
+                        latency_counts: counts,
+                        latency_sum_us: 0,
+                    }],
+                    ..Default::default()
+                },
+            );
+        }
+        assert!(eng.alert_active("t0"), "latency-only violations must also page");
+        let rep = eng.report();
+        assert_eq!(rep.tenants[0].over_target, 200 * 30);
+        assert_eq!(rep.tenants[0].unavailable, 0);
+    }
+
+    #[test]
+    fn flight_recorder_ring_respects_capacity() {
+        let mut c = cfg();
+        c.recorder_capacity = 8;
+        let eng = SloEngine::new(c);
+        for i in 1..=100u64 {
+            eng.tick_at(at(i * 100), sample(i * 10, 1_000, 0));
+        }
+        let flight = eng.flight_json();
+        let entries = flight.get("entries").and_then(|e| e.as_arr()).map(|a| a.len());
+        assert_eq!(entries, Some(8), "ring must cap at configured capacity");
+    }
+
+    #[test]
+    fn transitions_capture_control_plane_deltas() {
+        let eng = SloEngine::new(cfg());
+        let mut s1 = sample(1000, 10_000, 0);
+        s1.window = Some(16);
+        s1.ejections = 0;
+        eng.tick_at(at(200), s1);
+        let mut s2 = sample(2000, 10_000, 0);
+        s2.window = Some(8);
+        s2.ejections = 1;
+        eng.tick_at(at(400), s2);
+        let mut s3 = sample(3000, 10_000, 0);
+        s3.window = Some(8);
+        s3.ejections = 1;
+        s3.readmissions = 1;
+        eng.tick_at(at(600), s3);
+        let flight = eng.flight_json().render();
+        assert!(flight.contains("\"eject\""), "ejection delta missing: {flight}");
+        assert!(flight.contains("\"readmit\""), "readmission delta missing");
+        assert!(flight.contains("\"window\""), "window change missing");
+    }
+
+    #[test]
+    fn prometheus_text_is_conformant_and_complete() {
+        let eng = SloEngine::new(cfg());
+        for i in 1..=5u64 {
+            eng.tick_at(at(i * 200), sample(i * 1000, 10_000, i));
+        }
+        let mut out = String::new();
+        eng.prometheus_text(&mut out);
+        assert!(out.contains("dnnx_slo_budget_remaining{tenant=\"t0\"}"));
+        assert!(out.contains("dnnx_slo_burn_rate{tenant=\"t0\",window=\"fast\"}"));
+        assert!(out.contains("dnnx_slo_burn_rate{tenant=\"t0\",window=\"slow\"}"));
+        assert!(out.contains("dnnx_slo_alert_active{tenant=\"t0\"} 0"));
+        assert!(out.contains("dnnx_slo_latency_us_bucket{tenant=\"t0\",le=\"+Inf\"}"));
+        if let Err(errs) = crate::coordinator::scrape::check_conformance(&out) {
+            panic!("slo scrape text not conformant: {errs:?}");
+        }
+    }
+}

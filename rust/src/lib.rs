@@ -96,14 +96,23 @@
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation as text rows/series.
 //! * [`analysis`] — the repo-native lint engine (`dnnexplorer lint`):
-//!   a dependency-free lexer + token-pattern rules L001–L007 that turn
+//!   a dependency-free lexer + token-pattern rules L001–L009 that turn
 //!   bug classes earlier PRs fixed by hand (lock convoys, counter
 //!   double-counts, unbounded worker-loop growth, timeout-less socket
-//!   I/O, float-equality drift, unnamed threads) into machine-checked
-//!   invariants, with explicit allow-annotations and a JSON baseline.
+//!   I/O, float-equality drift, unnamed threads, wall-clock reads on
+//!   the serving path, unseeded randomness in trace/bench code) into
+//!   machine-checked invariants, with explicit allow-annotations and a
+//!   JSON baseline.
 //!   Its dynamic sibling is [`util::ordlock`]: a rank-checked mutex
 //!   that panics on lock-order inversion in debug builds, naming both
 //!   acquisition sites.
+//! * [`workload`] — seeded, bit-deterministic trace generation
+//!   (Poisson base rate under a diurnal sinusoid and Markov-modulated
+//!   bursts; Pareto tenant/frame mixes) plus a pacing replayer, feeding
+//!   the per-tenant SLO engine ([`coordinator::slo`]): error budgets,
+//!   multi-window burn-rate alerts, and a flight-recorder ring —
+//!   `dnnexplorer serve-bench --profile bursty --requests 1000000`
+//!   runs the full campaign and writes `BENCH_serve_slo.json`.
 
 pub mod analysis;
 pub mod baselines;
@@ -119,6 +128,7 @@ pub mod shard;
 pub mod sim;
 pub mod topo;
 pub mod util;
+pub mod workload;
 
 pub use dnn::graph::Network;
 pub use dse::engine::{ExplorerConfig, ExplorerResult};

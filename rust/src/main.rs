@@ -52,9 +52,17 @@ USAGE:
                       # sampling 1-in-N admissions (see docs/observability.md)
                       # any control-plane flag switches the bench from the
                       # worker-pool router to the sharded pipeline + control plane
+                      [--profile steady|diurnal|bursty]  # SLO campaign mode:
+                      [--trace-file F]     # replay F if present, else record it
+                      [--slo T:P99_US:AVAIL[:Q],...] [--slo-out FILE]
+                      [--slo-fast-ms MS] [--slo-slow-ms MS] [--burn-threshold X]
+                      [--time-scale X] [--expect-alert fired|silent]
+                      # trace-driven load with per-tenant error budgets,
+                      # burn-rate alerts, and a flight recorder; writes
+                      # BENCH_serve_slo.json (see docs/observability.md)
   dnnexplorer lint    [--path DIR] [--rule L00N] [--baseline FILE]
                       [--write-baseline FILE] [--deny]
-                      # repo-native static analysis (rules L001-L008,
+                      # repo-native static analysis (rules L001-L009,
                       # see docs/lints.md); --deny exits nonzero on findings
 
 Networks: vgg16_conv vgg16 vgg19 alexnet zf yolo resnet18 resnet50
@@ -851,6 +859,17 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
 /// the CI smoke fails loudly on regression.
 fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
     let args = Args::parse(argv)?;
+    let campaign = [
+        "profile",
+        "trace-file",
+        "slo",
+        "slo-out",
+        "slo-fast-ms",
+        "slo-slow-ms",
+        "burn-threshold",
+        "time-scale",
+        "expect-alert",
+    ];
     let control = [
         "tenants",
         "stages",
@@ -862,7 +881,9 @@ fn cmd_serve_bench(argv: &[String]) -> anyhow::Result<()> {
         "trace-out",
         "trace-sample",
     ];
-    if control.iter().any(|k| args.has(k)) {
+    if campaign.iter().any(|k| args.has(k)) {
+        serve_bench_campaign(&args)
+    } else if control.iter().any(|k| args.has(k)) {
         serve_bench_pipeline(&args)
     } else {
         serve_bench_router(&args)
@@ -917,13 +938,11 @@ fn serve_bench_router(args: &Args) -> anyhow::Result<()> {
 
     let h = router.handle();
     let start = Instant::now();
+    let pacer = dnnexplorer::util::pace::Pacer::new(start);
     let mut pending = Vec::with_capacity(requests);
     let mut shed = 0u64;
     for i in 0..requests {
-        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
-        if let Some(d) = target.checked_duration_since(Instant::now()) {
-            std::thread::sleep(d);
-        }
+        pacer.pace_index(i, rate_hz);
         match h.submit_frame(HostTensor::new(vec![i as f32], vec![1])?) {
             Ok(rx) => pending.push(rx),
             Err(ServeError::Overloaded) => shed += 1,
@@ -1074,6 +1093,7 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
         dedup: false,
         window,
         trace,
+        slo: None,
     };
     let pipe = Arc::new(ShardedPipeline::spawn_with_control(specs, ctl)?);
 
@@ -1103,13 +1123,11 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
     );
 
     let start = Instant::now();
+    let pacer = dnnexplorer::util::pace::Pacer::new(start);
     let mut pending = Vec::with_capacity(requests);
     let mut shed = 0u64;
     for i in 0..requests {
-        let target = start + Duration::from_secs_f64(i as f64 / rate_hz);
-        if let Some(d) = target.checked_duration_since(Instant::now()) {
-            std::thread::sleep(d);
-        }
+        pacer.pace_index(i, rate_hz);
         // The harness doubles as the fleet's heartbeat source; during
         // the forced window the victim (last replica of stage 0) goes
         // silent so the registry must eject it, then readmit when its
@@ -1253,6 +1271,278 @@ fn serve_bench_pipeline(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Trace-driven SLO campaign: generate (or replay via `--trace-file`) a
+/// seeded workload trace, drive the sharded pipeline + control plane
+/// with it at recorded timestamps, evaluate per-tenant error budgets
+/// and multi-window burn-rate alerts as it runs, and write the campaign
+/// artifact — per-tenant p50/p99/p999, budget burn, and the
+/// flight-recorder timeline — to `--slo-out` (default
+/// `BENCH_serve_slo.json`). Ends with exact reconciliation on the
+/// replay ledger, the e2e books, and every tenant book.
+fn serve_bench_campaign(args: &Args) -> anyhow::Result<()> {
+    use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+    use dnnexplorer::coordinator::{
+        AimdConfig, BatcherConfig, ControlConfig, MetricsExporter, QueueConfig, ShardedPipeline,
+        SloConfig, SloSpec, StageSpec, TenantTable, WindowPolicy,
+    };
+    use dnnexplorer::report::tables;
+    use dnnexplorer::workload::{self, Profile, ReplayOptions, TraceSpec};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let stages_n = args.get_usize("stages", 2)?.max(1);
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let batch = args.get_usize("batch", 4)?.max(1);
+    let capacity = args.get_usize("capacity", 64)?;
+    let requests = args.get_usize("requests", 100_000)?;
+    let service_us = args.get_usize("service-us", 200)?.max(1) as u64;
+    let seed = args.get_usize("seed", 20_260_807)? as u64;
+    let threads = match args.get_usize("threads", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        t => t,
+    };
+    let load: f64 = match args.get("load") {
+        Some(s) => s.parse()?,
+        None => 0.8,
+    };
+    anyhow::ensure!(load > 0.0, "--load must be positive");
+    let policy = parse_policy(args.get("policy").or(Some("reject")))?;
+    let table = Arc::new(TenantTable::parse(args.get("tenants").unwrap_or("4"))?);
+    let names: Vec<String> = table.classes().iter().map(|c| c.name.clone()).collect();
+
+    // Workload: `--trace-file` replays a recorded trace when the file
+    // exists; otherwise the profile flags generate one (and record it
+    // to that path for later replay).
+    let profile = Profile::parse(args.get("profile").unwrap_or("bursty"))?;
+    let capacity_fps = workers as f64 * 1e6 / service_us as f64;
+    let base_rate_hz = load * capacity_fps;
+    let trace_file = args.get("trace-file").map(|s| s.to_string());
+    let (spec, records) = match &trace_file {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let (spec, records) = workload::load(path)?;
+            println!(
+                "campaign: replaying {} record(s) from {path} ({} profile, seed {})",
+                records.len(),
+                spec.profile.name(),
+                spec.seed
+            );
+            (spec, records)
+        }
+        _ => {
+            let spec = TraceSpec::new(profile, requests, base_rate_hz, table.len() as u32, seed);
+            let records = workload::generate(&spec, threads);
+            if let Some(path) = &trace_file {
+                workload::save(path, &spec, &records)?;
+                println!("campaign: recorded {} record(s) to {path}", records.len());
+            }
+            (spec, records)
+        }
+    };
+    anyhow::ensure!(
+        spec.tenants as usize <= table.len(),
+        "trace wants {} tenant class(es) but the table has {}",
+        spec.tenants,
+        table.len()
+    );
+
+    // SLO objectives (default: p99 < 50ms at 99.9% availability per
+    // class) over bench-compressed burn windows — production pairing
+    // is 1m/10m, see docs/observability.md.
+    let slo_specs = match args.get("slo") {
+        Some(s) => SloSpec::parse_list(s)?,
+        None => SloConfig::default_specs(&names, 50_000),
+    };
+    let fast_ms = args.get_usize("slo-fast-ms", 1_000)? as u64;
+    let slow_ms = args.get_usize("slo-slow-ms", 10_000)? as u64;
+    anyhow::ensure!(fast_ms > 0 && slow_ms >= fast_ms, "--slo-slow-ms must be >= --slo-fast-ms");
+    let burn_threshold: f64 = match args.get("burn-threshold") {
+        Some(s) => s.parse()?,
+        None => 8.0,
+    };
+    let slo_cfg = SloConfig {
+        specs: slo_specs,
+        fast_window: Duration::from_millis(fast_ms),
+        slow_window: Duration::from_millis(slow_ms),
+        burn_threshold,
+        ..SloConfig::default()
+    };
+
+    let window = if args.has("aimd") || args.has("aimd-p99-us") {
+        let target_us = args.get_usize("aimd-p99-us", 50_000)?.max(1) as u64;
+        WindowPolicy::Aimd(AimdConfig {
+            target_p99: Duration::from_micros(target_us),
+            ..AimdConfig::default()
+        })
+    } else {
+        match args.get("window") {
+            Some(w) => WindowPolicy::Fixed(w.parse()?),
+            None => WindowPolicy::None,
+        }
+    };
+    let heartbeat_ms = match args.get("heartbeat-ms") {
+        Some(v) => Some(v.parse::<u64>()?),
+        None => None,
+    };
+
+    let per_frame = Duration::from_micros(service_us);
+    let queue = QueueConfig {
+        batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(2) },
+        capacity,
+        policy,
+        ..QueueConfig::default()
+    };
+    let stage_specs: Vec<StageSpec> = (0..stages_n)
+        .map(|_| {
+            StageSpec::replicated(
+                workers,
+                move |_| Ok(FixedServiceModel { per_frame }),
+                queue.clone(),
+            )
+        })
+        .collect();
+    let ctl = ControlConfig {
+        tenants: Some(table.clone()),
+        heartbeat_timeout: heartbeat_ms.map(Duration::from_millis),
+        dedup: false,
+        window,
+        trace: None,
+        slo: Some(slo_cfg),
+    };
+    let pipe = Arc::new(ShardedPipeline::spawn_with_control(stage_specs, ctl)?);
+    let engine = pipe
+        .slo()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("campaign pipeline missing its SLO engine"))?;
+
+    let exporter = match args.get("metrics-port") {
+        Some(p) => {
+            let port: u16 = p.parse()?;
+            let scraped = pipe.clone();
+            let e = MetricsExporter::spawn(port, Arc::new(move || scraped.prometheus_text()))?;
+            println!("metrics: http://127.0.0.1:{}/metrics", e.port());
+            Some(e)
+        }
+        None => None,
+    };
+
+    println!(
+        "campaign[{}]: {} record(s), base {base_rate_hz:.0}/s against {stages_n} stage(s) x \
+         {workers} replica(s) ({capacity_fps:.0} fps capacity), {} tenant class(es); \
+         SLO windows {fast_ms}ms/{slow_ms}ms, burn threshold {burn_threshold:.1}x",
+        spec.profile.name(),
+        records.len(),
+        table.len(),
+    );
+
+    let time_scale: f64 = match args.get("time-scale") {
+        Some(s) => s.parse()?,
+        None => 1.0,
+    };
+    let opts = ReplayOptions {
+        time_scale,
+        tick_every: 256,
+        recv_timeout: Duration::from_secs(60),
+    };
+    let report = workload::replay(&records, &pipe, &opts, |offset| {
+        // The campaign driver doubles as the heartbeat source and the
+        // SLO engine's clock, both in trace time.
+        if let Some(reg) = pipe.registry() {
+            for s in 0..reg.stages() {
+                for r in 0..reg.replicas(s) {
+                    reg.heartbeat(s, r);
+                }
+            }
+        }
+        pipe.slo_tick_at(offset);
+    });
+
+    let m = pipe.metrics.clone();
+    println!(
+        "offered {} in {:.2}s -> ok {}, failed {}, refused-at-front {}",
+        report.offered, report.elapsed_s, report.ok, report.failed, report.shed_front
+    );
+    anyhow::ensure!(
+        report.offered == report.ok + report.failed + report.shed_front,
+        "replay ledger failed to reconcile: {report:?}"
+    );
+    anyhow::ensure!(
+        m.accounted() == m.requests.load(Ordering::Relaxed),
+        "pipeline accounting failed to reconcile: {}",
+        m.summary()
+    );
+    let mut books_offered = 0u64;
+    for (t, class) in table.classes().iter().enumerate() {
+        let tm = table.metrics(t);
+        anyhow::ensure!(
+            tm.accounted() == tm.requests.load(Ordering::Relaxed),
+            "tenant {} failed to reconcile: {}",
+            class.name,
+            tm.summary()
+        );
+        books_offered += tm.requests.load(Ordering::Relaxed);
+    }
+    anyhow::ensure!(
+        books_offered == report.offered,
+        "tenant books saw {books_offered} request(s), replay offered {}",
+        report.offered
+    );
+
+    let slo_report = engine.report();
+    println!("{}", tables::slo_campaign(&slo_report).render());
+    let fired: u64 = slo_report.tenants.iter().map(|t| t.alerts_fired).sum();
+    if let Some(expect) = args.get("expect-alert") {
+        match expect {
+            "fired" => anyhow::ensure!(fired > 0, "expected a burn-rate alert; none fired"),
+            "silent" => anyhow::ensure!(fired == 0, "expected silence; {fired} alert(s) fired"),
+            other => anyhow::bail!("--expect-alert wants fired|silent, got {other:?}"),
+        }
+    }
+
+    let out_path = args.get("slo-out").unwrap_or("BENCH_serve_slo.json").to_string();
+    let artifact = Json::obj(vec![
+        ("bench", Json::s("serve_slo")),
+        ("profile", Json::s(spec.profile.name())),
+        // Decimal string, not a JSON number: a full-range u64 seed does
+        // not survive the f64 round trip above 2^53 (same rule as the
+        // trace format).
+        ("seed", Json::s(spec.seed.to_string())),
+        ("requests", Json::n(report.offered as f64)),
+        ("base_rate_hz", Json::n(spec.base_rate_hz)),
+        ("elapsed_s", Json::n(report.elapsed_s)),
+        ("ok", Json::n(report.ok as f64)),
+        ("failed", Json::n(report.failed as f64)),
+        ("refused_front", Json::n(report.shed_front as f64)),
+        ("burn_threshold", Json::n(burn_threshold)),
+        ("fast_window_ms", Json::n(fast_ms as f64)),
+        ("slow_window_ms", Json::n(slow_ms as f64)),
+        ("alerts_fired", Json::n(fired as f64)),
+        ("tenants", Json::Arr(slo_report.tenants.iter().map(|t| t.to_json()).collect())),
+        ("flight_recorder", engine.flight_json()),
+    ]);
+    let body = artifact.render();
+    // Self-check: the artifact must round-trip through the repo's own
+    // JSON parser with the per-tenant array intact before anything
+    // downstream (CI upload, notebooks) trusts it.
+    let doc = Json::parse(&body).map_err(|e| anyhow::anyhow!("artifact self-check failed: {e}"))?;
+    anyhow::ensure!(
+        doc.get("tenants")
+            .and_then(|t| t.as_arr())
+            .is_some_and(|a| a.len() == slo_report.tenants.len()),
+        "artifact self-check failed: tenants array missing or truncated"
+    );
+    std::fs::write(&out_path, &body).map_err(|e| anyhow::anyhow!("write {out_path}: {e}"))?;
+    println!("campaign: wrote {out_path} ({} bytes)", body.len());
+
+    if let Some(e) = exporter {
+        e.shutdown();
+    }
+    if let Ok(pipe) = Arc::try_unwrap(pipe) {
+        pipe.shutdown();
+    }
+    Ok(())
+}
+
 /// `dnnexplorer lint` — run the repo-native static analysis
 /// ([`dnnexplorer::analysis`]) over a source tree. Defaults to `src`
 /// (falling back to `rust/src` when invoked from the repo root), so
@@ -1281,7 +1571,7 @@ fn cmd_lint(argv: &[String]) -> anyhow::Result<()> {
     let active: Vec<RuleId> = match args.get("rule") {
         Some(code) => {
             let rule = RuleId::parse(code).ok_or_else(|| {
-                anyhow::anyhow!("unknown rule {code}; valid: L001..L008 (see docs/lints.md)")
+                anyhow::anyhow!("unknown rule {code}; valid: L001..L009 (see docs/lints.md)")
             })?;
             vec![rule]
         }

@@ -195,9 +195,88 @@ pub fn shard_comparison(net_name: &str, result: &crate::dse::multi::MultiResult)
     out
 }
 
+/// SLO campaign table: one row per tenant objective with the final
+/// percentiles, budget state, and burn-rate verdict (the
+/// `serve-bench --profile ...` report; numbers mirror
+/// `BENCH_serve_slo.json`).
+pub fn slo_campaign(report: &crate::coordinator::SloReport) -> RowSet {
+    let mut out = RowSet::new(
+        "slo",
+        "SLO campaign: per-tenant error budgets and burn rates",
+        &[
+            "Tenant",
+            "Objective",
+            "Completed",
+            "Over",
+            "Unavail",
+            "p50 (us)",
+            "p99 (us)",
+            "p999 (us)",
+            "Budget left",
+            "Fast burn",
+            "Slow burn",
+            "Alert",
+        ],
+    );
+    for t in &report.tenants {
+        out.push_row(vec![
+            t.tenant.clone(),
+            format!("p{:.0}<{}us @{:.3}", t.quantile * 100.0, t.target_us, t.availability),
+            format!("{}", t.completed),
+            format!("{}", t.over_target),
+            format!("{}", t.unavailable),
+            format!("{}", t.p50),
+            format!("{}", t.p99),
+            format!("{}", t.p999),
+            format!("{:.1}%", t.budget_remaining * 100.0),
+            format!("{:.2}x", t.fast_burn),
+            format!("{:.2}x", t.slow_burn),
+            if t.alert_active {
+                "FIRING".into()
+            } else if t.alerts_fired > 0 {
+                format!("cleared ({})", t.alerts_fired)
+            } else {
+                "ok".into()
+            },
+        ]);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slo_campaign_renders_verdicts() {
+        let report = crate::coordinator::SloReport {
+            tenants: vec![crate::coordinator::TenantSloReport {
+                tenant: "t0".into(),
+                target_us: 50_000,
+                quantile: 0.99,
+                availability: 0.999,
+                completed: 1000,
+                accounted: 1010,
+                over_target: 5,
+                unavailable: 10,
+                p50: 900,
+                p99: 42_000,
+                p999: 90_000,
+                budget_remaining: 0.5,
+                fast_burn: 0.4,
+                slow_burn: 0.2,
+                alert_active: false,
+                alerts_fired: 2,
+            }],
+        };
+        let t = slo_campaign(&report);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], "t0");
+        assert!(t.rows[0][1].contains("50000us"));
+        assert!(t.rows[0][11].contains("cleared"), "{:?}", t.rows[0]);
+        let rendered = t.render();
+        assert!(rendered.contains("Budget left"));
+    }
 
     #[test]
     fn table1_rows_and_ratios() {

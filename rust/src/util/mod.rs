@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod json;
 pub mod ordlock;
+pub mod pace;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;

@@ -44,6 +44,9 @@ pub mod rank {
     pub const QUEUE_STATE: u32 = 20;
     /// `AimdWindow::samples` — settle-path latency sample buffer.
     pub const AIMD_SAMPLES: u32 = 30;
+    /// `SloEngine::state` — the SLO evaluator's window/recorder books,
+    /// touched only on the (off-hot-path) tick and render paths.
+    pub const SLO_STATE: u32 = 40;
 }
 
 /// Lock a plain [`Mutex`], recovering the guard if a previous holder

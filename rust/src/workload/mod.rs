@@ -1,0 +1,553 @@
+//! Trace-driven load campaigns: a seeded, bit-deterministic workload
+//! generator plus a pacing replayer that drives a
+//! [`crate::coordinator::ShardedPipeline`] at recorded timestamps.
+//!
+//! ## Arrival model
+//!
+//! Arrivals follow a non-homogeneous Poisson process. The instantaneous
+//! rate is the base rate modulated by two factors:
+//!
+//! * a **diurnal** sinusoid — `1 + A·sin(2πt/P)` — the slow daily
+//!   swing every serving fleet sees;
+//! * a two-state **Markov burst** process — each arrival flips a
+//!   burst episode on with probability `burst_start_p` (off with
+//!   `burst_stop_p`), and while an episode is live the rate multiplies
+//!   by `burst_multiplier`. Episode lengths are therefore geometric,
+//!   which produces the heavy-tailed clumping that defeats
+//!   average-rate capacity planning.
+//!
+//! The three [`Profile`]s are just parameter presets: `steady` turns
+//! both factors off, `diurnal` turns on the sinusoid, `bursty` both.
+//!
+//! ## Frame mix
+//!
+//! Each record draws a tenant and a frame key from Pareto-ish power
+//! laws (`weight(i) ∝ (i+1)^-α`), so low-index tenants dominate the
+//! request mix and a small set of hot frame keys repeats often enough
+//! for content-keyed dedup to matter.
+//!
+//! ## Determinism
+//!
+//! Generation is bit-identical for a fixed [`TraceSpec`] at any thread
+//! count, and across a save→load round trip:
+//!
+//! * **Phase A** (sequential) walks one [`Rng`] stream for the arrival
+//!   gaps and the burst chain — the only state that is inherently
+//!   serial.
+//! * **Phase B** (parallel over [`crate::util::parallel::parallel_map`],
+//!   which preserves input order) derives each record's tenant, frame
+//!   key, and deadline from a *counter-based* RNG seeded by
+//!   `seed ^ mix(i)` — no cross-record state, so the split into
+//!   threads cannot matter.
+//!
+//! All randomness flows through [`crate::util::rng::Rng`]; lint rule
+//! L009 keeps unseeded entropy (hash-map iteration order, thread
+//! RNGs, wall clocks) out of this module and the benches.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::queue::ServeError;
+use crate::coordinator::ShardedPipeline;
+use crate::runtime::executable::HostTensor;
+use crate::util::json::Json;
+use crate::util::pace::Pacer;
+use crate::util::parallel::parallel_map;
+use crate::util::rng::Rng;
+
+/// One generated request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Arrival offset from campaign start, microseconds.
+    pub arrival_us: u64,
+    /// Tenant class index (dense, `0..spec.tenants`).
+    pub tenant: u32,
+    /// Content key; hot keys repeat (dedup-relevant).
+    pub frame_key: u64,
+    /// Latency deadline as an absolute campaign offset
+    /// (`arrival_us + slack`). Recorded for downstream consumers; the
+    /// replayer itself does not enforce it.
+    pub deadline_us: u64,
+}
+
+/// Workload shape preset. See the module docs for the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Homogeneous Poisson at the base rate.
+    Steady,
+    /// Sinusoidal rate swing, no bursts.
+    Diurnal,
+    /// Sinusoid plus Markov-modulated burst episodes.
+    Bursty,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "steady" => Ok(Profile::Steady),
+            "diurnal" => Ok(Profile::Diurnal),
+            "bursty" => Ok(Profile::Bursty),
+            other => anyhow::bail!("unknown profile {other:?} (want steady|diurnal|bursty)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Steady => "steady",
+            Profile::Diurnal => "diurnal",
+            Profile::Bursty => "bursty",
+        }
+    }
+}
+
+/// Full generator parameterization. [`TraceSpec::new`] fills
+/// profile-appropriate defaults; every field stays overridable so
+/// tests can pin exact shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub requests: usize,
+    pub base_rate_hz: f64,
+    pub tenants: u32,
+    pub profile: Profile,
+    pub seed: u64,
+    /// Diurnal period, seconds (compressed from 24h so short campaigns
+    /// still sweep a full cycle).
+    pub diurnal_period_s: f64,
+    /// Sinusoid amplitude in [0, 1).
+    pub diurnal_amplitude: f64,
+    /// Rate multiplier while a burst episode is live.
+    pub burst_multiplier: f64,
+    /// Per-arrival probability of entering a burst episode.
+    pub burst_start_p: f64,
+    /// Per-arrival probability of leaving one.
+    pub burst_stop_p: f64,
+    /// Tenant-mix skew: `weight(t) ∝ (t+1)^-alpha`.
+    pub tenant_alpha: f64,
+    /// Distinct frame keys.
+    pub frame_keys: u64,
+    /// Frame-popularity skew (Pareto shape).
+    pub frame_alpha: f64,
+    /// Deadline slack added to each arrival.
+    pub deadline_slack_us: u64,
+}
+
+impl TraceSpec {
+    /// A profile preset at `base_rate_hz` with every other knob at its
+    /// campaign default; override fields directly for custom shapes.
+    pub fn new(
+        profile: Profile,
+        requests: usize,
+        base_rate_hz: f64,
+        tenants: u32,
+        seed: u64,
+    ) -> Self {
+        let (amplitude, burst_multiplier, burst_start_p, burst_stop_p) = match profile {
+            Profile::Steady => (0.0, 1.0, 0.0, 1.0),
+            Profile::Diurnal => (0.6, 1.0, 0.0, 1.0),
+            Profile::Bursty => (0.3, 6.0, 0.02, 0.10),
+        };
+        Self {
+            requests,
+            base_rate_hz,
+            tenants: tenants.max(1),
+            profile,
+            seed,
+            diurnal_period_s: 60.0,
+            diurnal_amplitude: amplitude,
+            burst_multiplier,
+            burst_start_p,
+            burst_stop_p,
+            tenant_alpha: 1.2,
+            frame_keys: 4096,
+            frame_alpha: 1.1,
+            deadline_slack_us: 50_000,
+        }
+    }
+}
+
+/// SplitMix-style index mixer for the per-record Phase B streams.
+fn mix(i: u64) -> u64 {
+    let mut z = (i.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Generate the trace for `spec`, fanning the per-record phase over up
+/// to `threads` OS threads. Output is bit-identical for a fixed spec
+/// at any `threads` value (see the module docs).
+pub fn generate(spec: &TraceSpec, threads: usize) -> Vec<TraceRecord> {
+    // Phase A (sequential): arrival gaps + burst chain on one stream.
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut t_s = 0.0f64;
+    let mut burst = false;
+    let mut arrivals = Vec::with_capacity(spec.requests);
+    for _ in 0..spec.requests {
+        if spec.burst_start_p > 0.0 {
+            burst = if burst {
+                !rng.gen_bool(spec.burst_stop_p)
+            } else {
+                rng.gen_bool(spec.burst_start_p)
+            };
+        }
+        let diurnal = 1.0
+            + spec.diurnal_amplitude
+                * (2.0 * std::f64::consts::PI * t_s / spec.diurnal_period_s.max(1e-9)).sin();
+        let multiplier = if burst { spec.burst_multiplier } else { 1.0 };
+        let lambda = (spec.base_rate_hz * diurnal.max(0.05) * multiplier).max(1e-9);
+        // gen_f64 ∈ [0,1) so 1-u ∈ (0,1] and the log is finite.
+        let gap_s = -(1.0 - rng.gen_f64()).ln() / lambda;
+        t_s += gap_s;
+        arrivals.push((t_s * 1e6) as u64);
+    }
+
+    // Tenant mix: normalized cumulative power-law weights.
+    let weights: Vec<f64> =
+        (0..spec.tenants).map(|t| ((t + 1) as f64).powf(-spec.tenant_alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    let cum: Vec<f64> = weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect();
+
+    // Phase B (parallel, order-preserving): counter-seeded per record.
+    let indexed: Vec<(u64, u64)> =
+        arrivals.iter().enumerate().map(|(i, &a)| (i as u64, a)).collect();
+    parallel_map(&indexed, threads, |&(i, arrival_us)| {
+        let mut r = Rng::seed_from_u64(spec.seed ^ mix(i));
+        let u = r.gen_f64();
+        let tenant = cum.iter().position(|&c| u < c).unwrap_or(cum.len() - 1) as u32;
+        let v = r.gen_f64();
+        // Pareto draw over [1, ∞) truncated to the key universe.
+        let draw = (1.0 / (1.0 - v)).powf(1.0 / spec.frame_alpha.max(1e-9));
+        let frame_key = ((draw as u64).saturating_sub(1)).min(spec.frame_keys.saturating_sub(1));
+        TraceRecord {
+            arrival_us,
+            tenant,
+            frame_key,
+            deadline_us: arrival_us.saturating_add(spec.deadline_slack_us),
+        }
+    })
+}
+
+/// Serialize a spec + its records as `dnnx-trace-v1` JSON (records as
+/// compact `[arrival, tenant, key, deadline]` rows).
+pub fn to_json(spec: &TraceSpec, records: &[TraceRecord]) -> Json {
+    Json::obj(vec![
+        ("format", Json::s("dnnx-trace-v1")),
+        (
+            "spec",
+            Json::obj(vec![
+                ("requests", Json::n(spec.requests as f64)),
+                ("base_rate_hz", Json::n(spec.base_rate_hz)),
+                ("tenants", Json::n(spec.tenants as f64)),
+                ("profile", Json::s(spec.profile.name())),
+                // Decimal string, not a JSON number: a full-range u64
+                // seed does not survive the f64 round trip above 2^53.
+                ("seed", Json::s(spec.seed.to_string())),
+                ("diurnal_period_s", Json::n(spec.diurnal_period_s)),
+                ("diurnal_amplitude", Json::n(spec.diurnal_amplitude)),
+                ("burst_multiplier", Json::n(spec.burst_multiplier)),
+                ("burst_start_p", Json::n(spec.burst_start_p)),
+                ("burst_stop_p", Json::n(spec.burst_stop_p)),
+                ("tenant_alpha", Json::n(spec.tenant_alpha)),
+                ("frame_keys", Json::n(spec.frame_keys as f64)),
+                ("frame_alpha", Json::n(spec.frame_alpha)),
+                ("deadline_slack_us", Json::n(spec.deadline_slack_us as f64)),
+            ]),
+        ),
+        (
+            "records",
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(vec![
+                            Json::n(r.arrival_us as f64),
+                            Json::n(r.tenant as f64),
+                            Json::n(r.frame_key as f64),
+                            Json::n(r.deadline_us as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn spec_f64(j: &Json, key: &str) -> anyhow::Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("trace spec missing numeric field {key:?}"))
+}
+
+/// Parse `dnnx-trace-v1` JSON back into a spec + records.
+pub fn from_json(j: &Json) -> anyhow::Result<(TraceSpec, Vec<TraceRecord>)> {
+    let format = j.get("format").and_then(|f| f.as_str()).unwrap_or("");
+    anyhow::ensure!(format == "dnnx-trace-v1", "unsupported trace format {format:?}");
+    let s = j.get("spec").ok_or_else(|| anyhow::anyhow!("trace missing spec"))?;
+    let profile = Profile::parse(s.get("profile").and_then(|p| p.as_str()).unwrap_or("steady"))?;
+    // Seeds are written as decimal strings (see `to_json`); accept a
+    // plain number too for hand-written small-seed traces.
+    let seed = match s.get("seed") {
+        Some(Json::Str(v)) => {
+            v.parse::<u64>().map_err(|_| anyhow::anyhow!("bad trace seed {v:?}"))?
+        }
+        Some(v) => v
+            .as_f64()
+            .map(|n| n as u64)
+            .ok_or_else(|| anyhow::anyhow!("trace seed is neither string nor number"))?,
+        None => anyhow::bail!("trace spec missing seed"),
+    };
+    let spec = TraceSpec {
+        requests: spec_f64(s, "requests")? as usize,
+        base_rate_hz: spec_f64(s, "base_rate_hz")?,
+        tenants: spec_f64(s, "tenants")? as u32,
+        profile,
+        seed,
+        diurnal_period_s: spec_f64(s, "diurnal_period_s")?,
+        diurnal_amplitude: spec_f64(s, "diurnal_amplitude")?,
+        burst_multiplier: spec_f64(s, "burst_multiplier")?,
+        burst_start_p: spec_f64(s, "burst_start_p")?,
+        burst_stop_p: spec_f64(s, "burst_stop_p")?,
+        tenant_alpha: spec_f64(s, "tenant_alpha")?,
+        frame_keys: spec_f64(s, "frame_keys")? as u64,
+        frame_alpha: spec_f64(s, "frame_alpha")?,
+        deadline_slack_us: spec_f64(s, "deadline_slack_us")? as u64,
+    };
+    let rows = j
+        .get("records")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace missing records array"))?;
+    let mut records = Vec::with_capacity(rows.len());
+    for row in rows {
+        let cells = row.as_arr().ok_or_else(|| anyhow::anyhow!("trace record not an array"))?;
+        anyhow::ensure!(cells.len() == 4, "trace record wants 4 cells, got {}", cells.len());
+        let cell = |k: usize| -> anyhow::Result<u64> {
+            cells[k]
+                .as_f64()
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("trace record cell {k} not numeric"))
+        };
+        records.push(TraceRecord {
+            arrival_us: cell(0)?,
+            tenant: cell(1)? as u32,
+            frame_key: cell(2)?,
+            deadline_us: cell(3)?,
+        });
+    }
+    Ok((spec, records))
+}
+
+/// Write a trace to disk (compact JSON).
+pub fn save(path: &str, spec: &TraceSpec, records: &[TraceRecord]) -> anyhow::Result<()> {
+    std::fs::write(path, to_json(spec, records).render())
+        .map_err(|e| anyhow::anyhow!("write trace {path}: {e}"))
+}
+
+/// Read a trace back from disk.
+pub fn load(path: &str) -> anyhow::Result<(TraceSpec, Vec<TraceRecord>)> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read trace {path}: {e}"))?;
+    from_json(&Json::parse(&text)?)
+}
+
+/// Replay pacing/accounting knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Trace-time compression: offsets are divided by this, so `10.0`
+    /// replays a 100-second trace in ten seconds.
+    pub time_scale: f64,
+    /// Invoke the tick callback every this many submissions (0 = never).
+    pub tick_every: usize,
+    /// How long to wait for each outstanding completion while draining.
+    pub recv_timeout: Duration,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        Self { time_scale: 1.0, tick_every: 256, recv_timeout: Duration::from_secs(5) }
+    }
+}
+
+/// What the replayer observed. `offered == ok + failed + shed_front`
+/// exactly — every submission resolves through one of the three.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    pub offered: u64,
+    pub ok: u64,
+    pub failed: u64,
+    /// Refused at submission (window shed or front-queue refusal).
+    pub shed_front: u64,
+    pub elapsed_s: f64,
+    /// Submissions per tenant index (post-clamp tenancy is the
+    /// pipeline's business; this is the offered mix).
+    pub per_tenant_offered: Vec<u64>,
+}
+
+/// Drive `pipe` with `records` at their recorded arrival offsets (via
+/// the hybrid sleep/spin [`Pacer`] — never early, microsecond-accurate
+/// under load). `on_tick` fires every [`ReplayOptions::tick_every`]
+/// submissions with the current *trace-time* offset; campaign drivers
+/// use it to post replica heartbeats and advance the SLO engine's
+/// clock in lockstep with the trace.
+pub fn replay(
+    records: &[TraceRecord],
+    pipe: &ShardedPipeline,
+    opts: &ReplayOptions,
+    mut on_tick: impl FnMut(Duration),
+) -> ReplayReport {
+    let scale = if opts.time_scale > 0.0 { opts.time_scale } else { 1.0 };
+    let tenants = records.iter().map(|r| r.tenant as usize + 1).max().unwrap_or(1);
+    let mut report = ReplayReport { per_tenant_offered: vec![0; tenants], ..Default::default() };
+    let mut pending: Vec<Receiver<Result<HostTensor, ServeError>>> =
+        Vec::with_capacity(records.len());
+    let started = Instant::now();
+    let pacer = Pacer::new(started);
+    for (i, rec) in records.iter().enumerate() {
+        let offset = Duration::from_micros((rec.arrival_us as f64 / scale) as u64);
+        pacer.pace_until(offset);
+        report.offered += 1;
+        report.per_tenant_offered[rec.tenant as usize] += 1;
+        let input = match HostTensor::new(vec![rec.frame_key as f32], vec![1]) {
+            Ok(t) => t,
+            Err(_) => {
+                report.failed += 1;
+                continue;
+            }
+        };
+        match pipe.submit_frame_for(rec.tenant as usize, input) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => report.shed_front += 1,
+        }
+        if opts.tick_every > 0 && (i + 1) % opts.tick_every == 0 {
+            on_tick(Duration::from_micros(rec.arrival_us));
+        }
+    }
+    for rx in pending {
+        match rx.recv_timeout(opts.recv_timeout) {
+            Ok(Ok(_)) => report.ok += 1,
+            Ok(Err(_)) => report.failed += 1,
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                report.failed += 1
+            }
+        }
+    }
+    if let Some(last) = records.last() {
+        on_tick(Duration::from_micros(last.deadline_us));
+    }
+    report.elapsed_s = started.elapsed().as_secs_f64();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(profile: Profile, n: usize) -> TraceSpec {
+        TraceSpec::new(profile, n, 5_000.0, 4, 0xD11E)
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_complete() {
+        for profile in [Profile::Steady, Profile::Diurnal, Profile::Bursty] {
+            let s = spec(profile, 2_000);
+            let trace = generate(&s, 4);
+            assert_eq!(trace.len(), 2_000);
+            for w in trace.windows(2) {
+                assert!(
+                    w[0].arrival_us <= w[1].arrival_us,
+                    "{profile:?} arrivals must be sorted"
+                );
+            }
+            for r in &trace {
+                assert!(r.tenant < s.tenants);
+                assert!(r.frame_key < s.frame_keys);
+                assert_eq!(r.deadline_us, r.arrival_us + s.deadline_slack_us);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_bit_identical_across_thread_counts() {
+        let s = spec(Profile::Bursty, 5_000);
+        let one = generate(&s, 1);
+        for threads in [2, 3, 8] {
+            assert_eq!(one, generate(&s, threads), "threads={threads} must not change bits");
+        }
+    }
+
+    #[test]
+    fn tenant_mix_is_pareto_skewed() {
+        let s = spec(Profile::Steady, 20_000);
+        let trace = generate(&s, 4);
+        let mut per = vec![0u64; s.tenants as usize];
+        for r in &trace {
+            per[r.tenant as usize] += 1;
+        }
+        assert!(
+            per[0] > per[s.tenants as usize - 1] * 2,
+            "head tenant {} should dominate tail {}",
+            per[0],
+            per[s.tenants as usize - 1]
+        );
+        assert!(per.iter().all(|&c| c > 0), "every tenant appears: {per:?}");
+    }
+
+    #[test]
+    fn bursty_profile_clumps_harder_than_steady() {
+        let n = 20_000;
+        let steady = generate(&spec(Profile::Steady, n), 4);
+        let bursty = generate(&spec(Profile::Bursty, n), 4);
+        let p99_gap = |t: &[TraceRecord]| {
+            let mut gaps: Vec<u64> =
+                t.windows(2).map(|w| w[1].arrival_us - w[0].arrival_us).collect();
+            gaps.sort_unstable();
+            gaps[gaps.len() * 99 / 100]
+        };
+        let min_gap_run = |t: &[TraceRecord]| {
+            // Longest run of sub-half-mean gaps — bursts make this long.
+            let mean = t.last().map(|r| r.arrival_us).unwrap_or(0) / n as u64;
+            let mut best = 0usize;
+            let mut cur = 0usize;
+            for w in t.windows(2) {
+                if w[1].arrival_us - w[0].arrival_us < mean / 2 {
+                    cur += 1;
+                    best = best.max(cur);
+                } else {
+                    cur = 0;
+                }
+            }
+            best
+        };
+        assert!(
+            min_gap_run(&bursty) > min_gap_run(&steady),
+            "bursty clump run {} should beat steady {}",
+            min_gap_run(&bursty),
+            min_gap_run(&steady)
+        );
+        // Burst episodes also stretch the tail between episodes.
+        assert!(p99_gap(&bursty) != p99_gap(&steady), "profiles must differ");
+    }
+
+    #[test]
+    fn save_load_round_trip_is_exact() {
+        let s = spec(Profile::Bursty, 500);
+        let trace = generate(&s, 2);
+        let j = to_json(&s, &trace);
+        let (s2, trace2) = from_json(&Json::parse(&j.render()).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(trace, trace2);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"format":"dnnx-trace-v1","spec":{"requests":1},"records":[[1,2]]}"#;
+        assert!(from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,10 +1,12 @@
 //! End-to-end tests of the repo-native lint engine.
 //!
-//! The seeded fixture (`tests/lint_fixtures/coordinator/violations.rs`,
-//! never compiled by cargo) carries `expect-lint: L00N` markers on each
-//! violating line; the engine's findings must match the markers
-//! exactly — no misses, no extras. The real source tree must come back
-//! completely clean, which is what lets CI run `lint --deny` as a gate.
+//! The seeded fixtures (`tests/lint_fixtures/coordinator/violations.rs`
+//! for L001–L008 and `tests/lint_fixtures/workload/unseeded.rs` for the
+//! path-scoped L009; never compiled by cargo) carry `expect-lint: L00N`
+//! markers on each violating line; the engine's findings must match the
+//! markers exactly — no misses, no extras. The real source tree must
+//! come back completely clean, which is what lets CI run `lint --deny`
+//! as a gate.
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -12,9 +14,18 @@ use std::path::Path;
 use dnnexplorer::analysis::{analyze_source, analyze_tree, baseline::Baseline, RuleId};
 
 const FIXTURE: &str = "tests/lint_fixtures/coordinator/violations.rs";
+const WORKLOAD_FIXTURE: &str = "tests/lint_fixtures/workload/unseeded.rs";
+
+/// Both seeded fixtures: the coordinator one carries L001–L008, the
+/// workload one carries the path-scoped L009.
+const FIXTURES: &[&str] = &[FIXTURE, WORKLOAD_FIXTURE];
+
+fn read_fixture(path: &str) -> String {
+    std::fs::read_to_string(path).expect("fixture readable from crate root")
+}
 
 fn fixture_src() -> String {
-    std::fs::read_to_string(FIXTURE).expect("fixture readable from crate root")
+    read_fixture(FIXTURE)
 }
 
 /// `(rule code, 1-based line)` pairs declared by `expect-lint:` markers.
@@ -36,25 +47,27 @@ fn expected_markers(src: &str) -> BTreeSet<(String, u32)> {
 
 #[test]
 fn fixture_findings_match_markers_exactly() {
-    let src = fixture_src();
-    let expected = expected_markers(&src);
-    assert!(expected.len() >= 9, "fixture should seed every rule: {expected:?}");
-    let actual: BTreeSet<(String, u32)> = analyze_source(FIXTURE, &src, &RuleId::all())
-        .into_iter()
-        .map(|f| (f.rule.code().to_string(), f.line))
-        .collect();
-    assert_eq!(actual, expected, "engine findings must match fixture markers");
+    for path in FIXTURES {
+        let src = read_fixture(path);
+        let expected = expected_markers(&src);
+        assert!(expected.len() >= 4, "{path} should seed violations: {expected:?}");
+        let actual: BTreeSet<(String, u32)> = analyze_source(path, &src, &RuleId::all())
+            .into_iter()
+            .map(|f| (f.rule.code().to_string(), f.line))
+            .collect();
+        assert_eq!(actual, expected, "{path}: engine findings must match fixture markers");
+    }
 }
 
 #[test]
 fn fixture_covers_every_rule() {
-    let src = fixture_src();
-    let hit: BTreeSet<RuleId> = analyze_source(FIXTURE, &src, &RuleId::all())
-        .into_iter()
-        .map(|f| f.rule)
-        .collect();
+    let mut hit: BTreeSet<RuleId> = BTreeSet::new();
+    for path in FIXTURES {
+        let src = read_fixture(path);
+        hit.extend(analyze_source(path, &src, &RuleId::all()).into_iter().map(|f| f.rule));
+    }
     for rule in RuleId::all() {
-        assert!(hit.contains(&rule), "fixture must trip {rule}");
+        assert!(hit.contains(&rule), "fixtures must trip {rule}");
     }
 }
 

@@ -1,0 +1,52 @@
+//! Seeded lint-violation fixture for L009 (unseeded randomness).
+//!
+//! The file lives under a `workload/` directory so the path-scoped
+//! rule applies; cargo never compiles it (only top-level `tests/*.rs`
+//! are test targets), so the code only has to be lexable. The marker
+//! convention is the same as the coordinator fixture: every line
+//! tagged `expect-lint: L00N` must produce exactly that finding, and
+//! no untagged line may produce any — `tests/lint_engine.rs` diffs
+//! the engine's findings against the markers of both fixtures.
+
+use std::collections::hash_map::RandomState; // expect-lint: L009
+
+// L009: the std hasher is reseeded from process entropy, so keyed
+// iteration order changes run to run — a trace built over it replays
+// differently every time.
+fn nondeterministic_index() -> std::collections::HashMap<u64, u64> {
+    std::collections::HashMap::new() // expect-lint: L009
+}
+
+// L009: host entropy in a trace generator defeats seeded replay.
+fn ad_hoc_entropy() -> u64 {
+    let mut rng = rand::thread_rng(); // expect-lint: L009
+    rng.next_u64()
+}
+
+// L009: a wall-clock read used as an ad-hoc seed.
+fn timestamp_seed() -> u64 {
+    let t = std::time::SystemTime::now(); // expect-lint: L009
+    t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_nanos() as u64).unwrap_or(0)
+}
+
+// Seeded generation is the fix — no finding.
+fn seeded(seed: u64) -> u64 {
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+    rng.gen_u64()
+}
+
+// The allow-annotation escape hatch: suppressed, must NOT be reported.
+fn annotated_capacity_probe() -> std::collections::HashSet<u64> {
+    // lint: allow(L009, measuring hasher overhead is the point here)
+    std::collections::HashSet::new()
+}
+
+// Test code is exempt wholesale: neither of these may be reported.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let _ = std::collections::HashMap::new();
+        let _ = std::time::SystemTime::now();
+    }
+}

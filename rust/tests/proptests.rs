@@ -1404,6 +1404,108 @@ fn prop_sweep_incremental_matches_fresh_partitions() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Workload-generator invariants (workload subsystem).
+
+/// Random trace shape across all three profiles, with a full-range
+/// 64-bit seed (the serialization path must not squeeze it through an
+/// f64) and a modest request count so each case stays cheap.
+fn arb_trace_spec(r: &mut Rng) -> dnnexplorer::workload::TraceSpec {
+    use dnnexplorer::workload::{Profile, TraceSpec};
+    let profile = [Profile::Steady, Profile::Diurnal, Profile::Bursty][r.gen_index(3)];
+    let mut spec = TraceSpec::new(
+        profile,
+        200 + r.gen_index(1_300),
+        r.gen_range(200.0, 20_000.0),
+        1 + r.gen_index(6) as u32,
+        r.next_u64(),
+    );
+    spec.frame_keys = 16 + r.gen_index(4_096) as u64;
+    spec
+}
+
+#[test]
+fn prop_trace_generation_bit_identical_across_thread_counts() {
+    use dnnexplorer::workload::generate;
+    check(
+        "generate(spec) invariant under threads in {1,2,3,8}",
+        271,
+        12,
+        arb_trace_spec,
+        |spec| {
+            let base = generate(spec, 1);
+            for threads in [2usize, 3, 8] {
+                if generate(spec, threads) != base {
+                    return Err(format!("threads {threads} changed bits for {spec:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_arrivals_sorted_and_fields_in_range() {
+    use dnnexplorer::workload::generate;
+    check(
+        "arrivals nondecreasing; tenant/key/deadline within spec",
+        277,
+        20,
+        arb_trace_spec,
+        |spec| {
+            let trace = generate(spec, 4);
+            if trace.len() != spec.requests {
+                return Err(format!("{} records for {} requests", trace.len(), spec.requests));
+            }
+            for w in trace.windows(2) {
+                if w[0].arrival_us > w[1].arrival_us {
+                    return Err(format!(
+                        "arrivals out of order: {} then {}",
+                        w[0].arrival_us, w[1].arrival_us
+                    ));
+                }
+            }
+            for rec in &trace {
+                if rec.tenant >= spec.tenants {
+                    return Err(format!("tenant {} of {}", rec.tenant, spec.tenants));
+                }
+                if rec.frame_key >= spec.frame_keys {
+                    return Err(format!("key {} of {}", rec.frame_key, spec.frame_keys));
+                }
+                if rec.deadline_us != rec.arrival_us + spec.deadline_slack_us {
+                    return Err(format!("deadline drifted on {rec:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_serialization_round_trips_exactly() {
+    use dnnexplorer::util::json::Json;
+    use dnnexplorer::workload::{from_json, generate, to_json};
+    check(
+        "to_json -> render -> parse -> from_json is the identity",
+        281,
+        10,
+        arb_trace_spec,
+        |spec| {
+            let trace = generate(spec, 4);
+            let text = to_json(spec, &trace).render();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let (spec2, trace2) = from_json(&parsed).map_err(|e| e.to_string())?;
+            if *spec != spec2 {
+                return Err(format!("spec drifted: {spec:?} vs {spec2:?}"));
+            }
+            if trace != trace2 {
+                return Err("records drifted through the round trip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_one_board_shard_equals_single_fpga_model() {
     use dnnexplorer::dse::EvalCache;

@@ -1,0 +1,162 @@
+//! Trace-driven campaign integration: the seeded workload generator
+//! replayed through a live sharded pipeline with the per-tenant SLO
+//! engine attached. The reduced-scale twin of
+//! `serve-bench --profile bursty`:
+//!
+//! * the trace survives a save→load round trip through disk exactly;
+//! * the replay ledger, the pipeline's end-to-end books, and every
+//!   tenant's books reconcile — every offered request resolves through
+//!   exactly one of ok/failed/shed;
+//! * the SLO engine ticks in trace time and its report covers every
+//!   configured tenant objective;
+//! * the full Prometheus scrape (e2e + stages + tenants + SLO series +
+//!   tracer summaries) passes the text-format conformance check.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dnnexplorer::coordinator::scrape::check_conformance;
+use dnnexplorer::coordinator::synthetic::FixedServiceModel;
+use dnnexplorer::coordinator::{
+    BatcherConfig, ControlConfig, OverloadPolicy, QueueConfig, ShardedPipeline, SloConfig,
+    StageSpec, TenantTable, TraceConfig,
+};
+use dnnexplorer::workload::{self, Profile, ReplayOptions, TraceSpec};
+
+fn reject_queue(capacity: usize, batch: usize) -> QueueConfig {
+    QueueConfig {
+        batch: BatcherConfig { batch_size: batch, max_wait: Duration::from_millis(1) },
+        capacity,
+        policy: OverloadPolicy::Reject,
+        ..QueueConfig::default()
+    }
+}
+
+fn campaign_pipeline(table: &Arc<TenantTable>, slo: SloConfig) -> ShardedPipeline {
+    let per_frame = Duration::from_micros(200);
+    ShardedPipeline::spawn_with_control(
+        vec![
+            StageSpec::with_queue(move || Ok(FixedServiceModel { per_frame }), reject_queue(64, 4)),
+            StageSpec::with_queue(move || Ok(FixedServiceModel { per_frame }), reject_queue(64, 4)),
+        ],
+        ControlConfig {
+            tenants: Some(table.clone()),
+            trace: Some(TraceConfig { sample_every: 16, ..TraceConfig::default() }),
+            slo: Some(slo),
+            ..ControlConfig::default()
+        },
+    )
+    .expect("pipeline starts")
+}
+
+#[test]
+fn bursty_campaign_round_trips_and_reconciles_per_tenant() {
+    let spec = TraceSpec::new(Profile::Bursty, 3_000, 2_000.0, 3, 0xCAFE_0010);
+    let trace = workload::generate(&spec, 4);
+
+    // Disk round trip is exact — the campaign can be re-run from the
+    // artifact alone.
+    let path = std::env::temp_dir().join(format!("dnnx_trace_{}.json", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    workload::save(&path, &spec, &trace).expect("trace saves");
+    let (spec2, trace2) = workload::load(&path).expect("trace loads");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(spec, spec2);
+    assert_eq!(trace, trace2);
+
+    let table = Arc::new(TenantTable::tiered(3));
+    let names: Vec<String> = table.classes().iter().map(|c| c.name.clone()).collect();
+    let slo = SloConfig {
+        specs: SloConfig::default_specs(&names, 50_000),
+        fast_window: Duration::from_millis(500),
+        slow_window: Duration::from_secs(2),
+        ..SloConfig::default()
+    };
+    let pipe = campaign_pipeline(&table, slo);
+
+    let opts = ReplayOptions {
+        time_scale: 1.0,
+        tick_every: 64,
+        recv_timeout: Duration::from_secs(30),
+    };
+    let report = workload::replay(&trace2, &pipe, &opts, |at| pipe.slo_tick_at(at));
+
+    // Replay ledger: every offered request resolved exactly once.
+    assert_eq!(report.offered, trace2.len() as u64);
+    assert_eq!(
+        report.offered,
+        report.ok + report.failed + report.shed_front,
+        "replay ledger must reconcile: {report:?}"
+    );
+    assert!(report.ok > 0, "a 40%-utilization campaign must complete work: {report:?}");
+
+    // End-to-end books.
+    let m = &pipe.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), report.offered);
+    assert_eq!(m.accounted(), m.requests.load(Ordering::Relaxed), "{}", m.summary());
+
+    // Per-tenant books: each tenant's book saw exactly its offered
+    // share, and each reconciles internally.
+    let mut books_offered = 0u64;
+    for (t, offered) in report.per_tenant_offered.iter().enumerate() {
+        let tm = table.metrics(t);
+        assert_eq!(
+            tm.requests.load(Ordering::Relaxed),
+            *offered,
+            "tenant {t} book disagrees with the offered mix"
+        );
+        assert_eq!(tm.accounted(), tm.requests.load(Ordering::Relaxed), "tenant {t} books");
+        books_offered += tm.requests.load(Ordering::Relaxed);
+    }
+    assert_eq!(books_offered, report.offered);
+
+    // The SLO engine ticked in trace time and reports every objective.
+    let engine = pipe.slo().expect("engine configured").clone();
+    assert!(engine.ticks() > 0, "on_tick must advance the engine");
+    let slo_report = engine.report();
+    assert_eq!(slo_report.tenants.len(), names.len());
+    for t in &slo_report.tenants {
+        assert!(names.contains(&t.tenant));
+        assert!((0.0..=1.0).contains(&t.budget_remaining), "{t:?}");
+    }
+
+    pipe.shutdown();
+}
+
+#[test]
+fn full_scrape_is_prometheus_conformant() {
+    let table = Arc::new(TenantTable::tiered(2));
+    let names: Vec<String> = table.classes().iter().map(|c| c.name.clone()).collect();
+    let slo = SloConfig {
+        specs: SloConfig::default_specs(&names, 50_000),
+        fast_window: Duration::from_millis(200),
+        slow_window: Duration::from_millis(800),
+        ..SloConfig::default()
+    };
+    let pipe = campaign_pipeline(&table, slo);
+
+    let spec = TraceSpec::new(Profile::Steady, 400, 2_000.0, 2, 0xCAFE_0011);
+    let trace = workload::generate(&spec, 2);
+    let opts = ReplayOptions {
+        time_scale: 1.0,
+        tick_every: 32,
+        recv_timeout: Duration::from_secs(30),
+    };
+    let report = workload::replay(&trace, &pipe, &opts, |at| pipe.slo_tick_at(at));
+    assert_eq!(report.offered, report.ok + report.failed + report.shed_front);
+
+    let page = pipe.prometheus_text();
+    // The families this PR added are present...
+    assert!(page.contains("dnnx_slo_budget_remaining{tenant=\"t0\"}"), "{page}");
+    assert!(page.contains("dnnx_slo_burn_rate{tenant=\"t0\",window=\"fast\"}"));
+    assert!(page.contains("dnnx_slo_alert_active{tenant=\"t1\"}"));
+    // ...and the whole scrape body is structurally whole: every
+    // histogram family closes with le="+Inf" == _count plus _sum, every
+    // summary family carries _sum/_count.
+    if let Err(violations) = check_conformance(&page) {
+        panic!("scrape conformance violations:\n{}", violations.join("\n"));
+    }
+
+    pipe.shutdown();
+}
